@@ -1,0 +1,95 @@
+//! Context-length latency sweep (Figure 1 / Figure 4 analog, interactive).
+//!
+//! Times one attention layer forward across mechanisms and context lengths
+//! through TWO independent paths:
+//!
+//!   * the native rust kernels (reach 32k context — the interpreted Pallas
+//!     kernels cannot), printing µs/token like Figure 1, and
+//!   * the AOT Pallas attention artifacts via PJRT (proving the compiled
+//!     path), at the sizes aot.py emits.
+//!
+//! The full bench-harness version with warmup/percentiles lives in
+//! `rust/benches/fig1_latency.rs`; this example is the quick look.
+//!
+//! ```bash
+//! cargo run --release --example latency_sweep -- [max_ctx] [head_dim]
+//! ```
+
+use std::time::Instant;
+
+use polysketchformer::attn::{Attention, Mechanism};
+use polysketchformer::runtime;
+use polysketchformer::tensor::Tensor;
+use polysketchformer::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let max_ctx: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(8192);
+    let head_dim: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(32);
+
+    let mechanisms = [
+        Mechanism::Flash { block: 256 },
+        Mechanism::Poly { p: 4 },
+        Mechanism::Polysketch { r: 16, p: 4, block: 256, local: true },
+        Mechanism::Performer { m: 64, block: 256 },
+    ];
+
+    println!("== native kernels: µs/token, one attention head, h={head_dim} ==");
+    print!("{:<22}", "mechanism");
+    let mut ctxs = Vec::new();
+    let mut ctx = 512;
+    while ctx <= max_ctx {
+        print!(" {ctx:>9}");
+        ctxs.push(ctx);
+        ctx *= 2;
+    }
+    println!();
+
+    let mut rng = Pcg::seeded(0);
+    for mech in &mechanisms {
+        let attn = Attention::new(mech, head_dim, &mut rng);
+        print!("{:<22}", mech.label());
+        for &n in &ctxs {
+            // Quadratic mechanisms above 16k take minutes on one core —
+            // the paper marks these OOM; we mark them "-".
+            if !mech.is_linear() && n > 16384 {
+                print!(" {:>9}", "-");
+                continue;
+            }
+            let q = Tensor::gaussian(&mut rng, &[n, head_dim]);
+            let k = Tensor::gaussian(&mut rng, &[n, head_dim]);
+            let v = Tensor::gaussian(&mut rng, &[n, head_dim]);
+            let t0 = Instant::now();
+            let out = attn.run(&q, &k, &v);
+            let us_per_token = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
+            assert!(out.data().iter().all(|x| x.is_finite()));
+            print!(" {us_per_token:>9.2}");
+        }
+        println!();
+    }
+
+    println!("\n== AOT Pallas artifacts via PJRT (compiled path) ==");
+    let dir = runtime::artifacts_dir();
+    let mans = runtime::discover(&dir)?;
+    let mut names: Vec<&String> = mans
+        .iter()
+        .filter(|(_, m)| m.kind == "attn")
+        .map(|(n, _)| n)
+        .collect();
+    names.sort();
+    for name in names {
+        let micro = runtime::load_attn(name)?;
+        let numel = micro.numel();
+        let mut rng = Pcg::seeded(1);
+        let q: Vec<f32> = (0..numel).map(|_| rng.gaussian() * 0.5).collect();
+        let k: Vec<f32> = (0..numel).map(|_| rng.gaussian() * 0.5).collect();
+        let v: Vec<f32> = (0..numel).map(|_| rng.gaussian() * 0.5).collect();
+        let t0 = Instant::now();
+        let out = micro.run(&q, &k, &v)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(out.iter().all(|x| x.is_finite()));
+        println!("  {name:<40} {ms:>8.2} ms ({} heads x n={})", micro.heads, micro.n);
+    }
+    println!("latency_sweep OK");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Quickstart: load a PolySketchFormer model artifact, run a few train
+//! steps and an eval — the smallest end-to-end trip through all three
+//! layers (Pallas kernel -> JAX model -> HLO -> rust PJRT runtime).
+//!
+//! Run `make artifacts` first, then:
+//!
+//! ```bash
+//! cargo run --release --example quickstart [-- <artifact-name>]
+//! ```
+
+use polysketchformer::data::{self, batcher::Batcher, corpus::Flavor};
+use polysketchformer::runtime::{self, LoadOpts};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "psk4_r16_learned_local_v512_d128_l4_h4x32_c256".to_string());
+    println!("loading artifact bundle `{name}` ...");
+    let mut model = runtime::load_model(&name, LoadOpts::default())?;
+    let (batch, ctx, vocab) = (model.batch(), model.ctx(), model.vocab());
+    println!(
+        "  {} — {} params, batch={batch} ctx={ctx} vocab={vocab}",
+        model.manifest.name, model.manifest.nparams,
+    );
+
+    // Synthetic PG19-like corpus -> BPE tokens -> packed batches.
+    let ds = data::load_corpus_tokens(Flavor::Books, 400_000, vocab, 7, None)?;
+    let mut train = Batcher::new(&ds.train, batch, ctx + 1, 7);
+    let mut test = Batcher::new(&ds.test, batch, ctx + 1, 7);
+
+    println!("training 5 steps:");
+    for _ in 0..5 {
+        let tokens = train.next_batch();
+        let stats = model.train_step(&tokens.tokens)?;
+        println!("  step {:>2}  loss {:.4}", stats.step, stats.loss);
+    }
+
+    let nll = model.eval_loss(&test.next_batch().tokens)?;
+    println!("eval: nll {:.4}  perplexity {:.2}", nll, nll.exp());
+    println!("quickstart OK");
+    Ok(())
+}

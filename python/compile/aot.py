@@ -1,0 +1,425 @@
+"""AOT pipeline: lower every artifact the rust coordinator needs to HLO text.
+
+Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id
+serialized protos; the text parser reassigns ids — see /opt/xla-example).
+
+Calling convention (the rust side mirrors this in runtime/):
+
+  Every executable has a SINGLE non-tuple array root: xla_extension 0.5.1
+  crashes when transferring tuple literals (ShapeUtil::ByteSizeOf of a tuple
+  shape needs a pointer size the CPU client does not set), so model state is
+  fused into one flat f32 "state" vector of size S = 3P + 2 laid out as
+
+      state = [ theta (P) | m (P) | v (P) | step | loss ]
+
+  and the artifacts are
+
+  train    : [state (S,) f32, tokens (B, T+1) s32] -> state' (S,)
+  stats    : [state (S,) f32]                      -> (2,) f32  [step, loss]
+  evalloss : [state (S,) f32, tokens (B, T+1) s32] -> (1,) f32  mean NLL
+  fwd      : [state (S,) f32, tokens (B, T) s32]   -> logits (B, T, V)
+  grads    : [state (S,) f32, tokens (B, T+1) s32] -> (P+1,) f32 [grad|loss]
+  gradstep : [state (S,) f32, grads (P+1,) f32]    -> state' (S,)
+  attn     : [q (H,n,hd), k (H,n,hd), v (H,n,hd)]  -> out (H,n,hd)
+
+`train` fuses grads+gradstep for the single-worker hot loop; the grads /
+gradstep pair factors the step so the rust coordinator can average gradients
+across simulated data-parallel workers (and accumulate microbatches) before
+applying one optimizer update — the paper's 32-TPU synchronous protocol.
+
+The rust hot loop keeps `state` device-resident (the train output buffer is
+fed straight back in) and reads the 8-byte `stats` output per step; packing /
+unpacking of the parameter pytree happens inside the HLO.  Statics (position
+tables, random sketches, performer features) are baked into the HLO as
+constants.  `init.bin` holds the initial theta (P little-endian f32).
+
+Usage:  python -m compile.aot --out ../artifacts [--preset all|models|micro|tasks]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .common import layernorm
+from .kernels import sketch
+
+
+# ------------------------------------------------------------ lowering
+
+def to_hlo_text(lowered) -> str:
+    """HLO text with a single non-tuple root (see module docstring).
+
+    print_large_constants=True is LOAD-BEARING: the default printer elides
+    big literals as ``constant({...})`` and xla_extension 0.5.1's text
+    parser silently reads the elision as ZEROS — every baked static (RoPE
+    tables, positional tables, random sketches, performer features) came
+    back zero, which nulled all polynomial/polysketch attention while
+    leaving softmax models plausibly alive (exp(0) = uniform weights).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text(True)
+
+
+def lower_to_file(fn, args, path: str) -> None:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+
+
+# ------------------------------------------------------------ flat theta
+
+def flatten_spec(params) -> Tuple[List[Tuple[str, Tuple[int, ...], int]], int]:
+    """Leaf (path, shape, offset) list in jax tree order + total size."""
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(params)[0]
+    spec, off = [], 0
+    for path, leaf in leaves_with_path:
+        name = jax.tree_util.keystr(path).replace(" ", "")
+        spec.append((name, tuple(leaf.shape), off))
+        off += leaf.size
+    return spec, off
+
+
+def pack(params) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(params)
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+
+def make_unpack(params):
+    treedef = jax.tree_util.tree_structure(params)
+    shapes = [l.shape for l in jax.tree_util.tree_leaves(params)]
+    sizes = [int(jnp.prod(jnp.array(s))) if s else 1 for s in shapes]
+
+    def unpack(theta: jnp.ndarray):
+        out, off = [], 0
+        for shape, size in zip(shapes, sizes):
+            out.append(jax.lax.dynamic_slice(theta, (off,), (size,)).reshape(shape))
+            off += size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return unpack
+
+
+# ------------------------------------------------------------ model emit
+
+def emit_model(cfg: M.ModelConfig, tc: T.TrainConfig, batch: int,
+               out_dir: str, seed: int = 0, tag: str | None = None) -> str:
+    """Emit train/stats/evalloss/fwd HLO + init.bin + manifest for one
+    config, all with single-array roots (see module docstring)."""
+    name = tag or cfg.name()
+    params, statics = M.init(jax.random.PRNGKey(seed), cfg)
+    spec, total = flatten_spec(params)
+    unpack = make_unpack(params)
+    step_fn = T.make_train_step(cfg, tc)
+    eval_fn = T.make_eval_loss(cfg)
+    P = total
+    S = 3 * P + 2
+
+    def split_state(state):
+        theta, m, v = state[:P], state[P:2 * P], state[2 * P:3 * P]
+        step = state[3 * P].astype(jnp.int32)
+        return theta, m, v, step
+
+    def train_flat(state, tokens):
+        theta, m, v, step = split_state(state)
+        p = unpack(theta)
+        opt = {"m": unpack(m), "v": unpack(v), "step": step}
+        new_p, new_opt, loss = step_fn(p, statics, opt, tokens)
+        return jnp.concatenate([
+            pack(new_p), pack(new_opt["m"]), pack(new_opt["v"]),
+            new_opt["step"].astype(jnp.float32)[None], loss[None]])
+
+    def stats_flat(state):
+        return state[3 * P:]
+
+    def evalloss_flat(state, tokens):
+        theta = state[:P]
+        return eval_fn(unpack(theta), statics, tokens)[None]
+
+    def fwd_flat(state, tokens):
+        theta = state[:P]
+        return M.forward(unpack(theta), statics, cfg, tokens)
+
+    def grads_flat(state, tokens):
+        theta = state[:P]
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, statics, cfg, tokens))(unpack(theta))
+        return jnp.concatenate([pack(grads), loss[None]])
+
+    def gradstep_flat(state, gradvec):
+        theta, m, v, step = split_state(state)
+        p = unpack(theta)
+        opt = {"m": unpack(m), "v": unpack(v), "step": step}
+        grads = unpack(gradvec[:P])
+        new_p, new_opt = T.adam_update(tc, p, grads, opt)
+        return jnp.concatenate([
+            pack(new_p), pack(new_opt["m"]), pack(new_opt["v"]),
+            new_opt["step"].astype(jnp.float32)[None], gradvec[P:]])
+
+    state_s = jax.ShapeDtypeStruct((S,), jnp.float32)
+    grad_s = jax.ShapeDtypeStruct((P + 1,), jnp.float32)
+    tok_tr = jax.ShapeDtypeStruct((batch, cfg.ctx + 1), jnp.int32)
+    tok_fw = jax.ShapeDtypeStruct((batch, cfg.ctx), jnp.int32)
+
+    files = {
+        "train": f"{name}.train.hlo.txt",
+        "stats": f"{name}.stats.hlo.txt",
+        "evalloss": f"{name}.evalloss.hlo.txt",
+        "fwd": f"{name}.fwd.hlo.txt",
+        "grads": f"{name}.grads.hlo.txt",
+        "gradstep": f"{name}.gradstep.hlo.txt",
+        "init": f"{name}.init.bin",
+    }
+    lower_to_file(train_flat, (state_s, tok_tr),
+                  os.path.join(out_dir, files["train"]))
+    lower_to_file(stats_flat, (state_s,),
+                  os.path.join(out_dir, files["stats"]))
+    lower_to_file(evalloss_flat, (state_s, tok_tr),
+                  os.path.join(out_dir, files["evalloss"]))
+    lower_to_file(fwd_flat, (state_s, tok_fw),
+                  os.path.join(out_dir, files["fwd"]))
+    lower_to_file(grads_flat, (state_s, tok_tr),
+                  os.path.join(out_dir, files["grads"]))
+    lower_to_file(gradstep_flat, (state_s, grad_s),
+                  os.path.join(out_dir, files["gradstep"]))
+
+    import numpy as np
+    np.asarray(pack(params)).astype("<f4").tofile(os.path.join(out_dir, files["init"]))
+
+    man = [f"psf-manifest v1", f"name {name}", "kind model"]
+    for k, v in cfg.flat().items():
+        man.append(f"cfg {k} {_fmt(v)}")
+    for k, v in tc.flat().items():
+        man.append(f"tc {k} {_fmt(v)}")
+    man.append(f"batch {batch}")
+    man.append(f"nparams {total}")
+    for leafname, shape, off in spec:
+        dims = "x".join(str(d) for d in shape) if shape else "scalar"
+        man.append(f"leaf {leafname} {off} {dims}")
+    for k, v in files.items():
+        man.append(f"file {k} {v}")
+    with open(os.path.join(out_dir, f"{name}.manifest.txt"), "w") as f:
+        f.write("\n".join(man) + "\n")
+    print(f"  model {name}: P={total} ({total * 4 / 1e6:.2f} MB params)")
+    return name
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    return str(v)
+
+
+# ------------------------------------------------------------ micro emit
+
+def emit_attn_micro(mech: str, n: int, out_dir: str, heads: int = 4,
+                    hd: int = 32, rs: int = 16, p: int = 4, block: int = 64,
+                    feat: int = 64, use_pallas: bool = True,
+                    seed: int = 0) -> str:
+    """Standalone attention-op artifact for latency benches (Fig 1/4, Tab 4).
+
+    The Pallas-backed variants prove the L1 kernel -> HLO -> rust path.
+    """
+    from .kernels.linear_attn import (block_linear_attention,
+                                      block_polysketch_attention)
+    from .kernels.ref import performer_features
+    key = jax.random.PRNGKey(seed)
+    b = min(block, n)
+
+    if mech == "softmax":
+        if use_pallas:
+            from .kernels.pallas import softmax_attention_pallas
+            bq = min(64, n)
+            one = lambda q, k, v: softmax_attention_pallas(q, k, v, block_q=bq,
+                                                           block_k=bq)
+        else:
+            from .kernels.ref import softmax_attention as one
+    elif mech == "poly":
+        if use_pallas:
+            from .kernels.pallas import poly_attention_pallas
+            bq = min(64, n)
+            one = lambda q, k, v: poly_attention_pallas(q, k, v, p=p, block_q=bq,
+                                                        block_k=bq)
+        else:
+            from .kernels.ref import poly_attention
+            one = lambda q, k, v: poly_attention(q, k, v, p)
+    elif mech == "polysketch":
+        gs = sketch.sample_projections(key, hd, rs, p)
+
+        def one(q, k, v):
+            qn, kn = layernorm(q), layernorm(k)
+            l = sketch.half_sketch(qn, gs, rs, p)
+            r = sketch.half_sketch(kn, gs, rs, p)
+            if use_pallas:
+                from .kernels.pallas import polysketch_attention_pallas
+                return polysketch_attention_pallas(l, r, v, block=b, q=q, k=k,
+                                                   p=p, local_exact=True)
+            return block_polysketch_attention(l, r, v, b, q=q, k=k, p=p,
+                                              local_exact=True)
+    elif mech == "performer":
+        w = jax.random.normal(key, (hd, feat), jnp.float32)
+
+        def one(q, k, v):
+            pq, pk = performer_features(q, w), performer_features(k, w)
+            if use_pallas:
+                from .kernels.pallas import linear_attention_pallas
+                return linear_attention_pallas(pq, pk, v, block=b)
+            return block_linear_attention(pq, pk, v, b)
+    else:
+        raise ValueError(mech)
+
+    fn = jax.vmap(one)
+    s = jax.ShapeDtypeStruct((heads, n, hd), jnp.float32)
+    suffix = "pallas" if use_pallas else "scan"
+    fname = f"attn_{mech}_{suffix}_n{n}.hlo.txt"
+    lower_to_file(fn, (s, s, s), os.path.join(out_dir, fname))
+
+    man = ["psf-manifest v1", f"name attn_{mech}_{suffix}_n{n}", "kind attn",
+           f"cfg mech {mech}", f"cfg impl {suffix}", f"cfg n {n}",
+           f"cfg heads {heads}", f"cfg head_dim {hd}", f"cfg sketch_size {rs}",
+           f"cfg degree {p}", f"cfg block {b}", f"file attn {fname}"]
+    with open(os.path.join(out_dir, f"attn_{mech}_{suffix}_n{n}.manifest.txt"),
+              "w") as f:
+        f.write("\n".join(man) + "\n")
+    print(f"  attn {mech}/{suffix} n={n}")
+    return fname
+
+
+# ------------------------------------------------------------ presets
+
+TC_DEFAULT = T.TrainConfig(peak_lr=3e-4, warmup_steps=60, total_steps=600,
+                           beta1=0.95, beta2=0.98, weight_decay=0.01)
+TC_TASK = T.TrainConfig(peak_lr=1e-3, warmup_steps=100, total_steps=2000,
+                        beta1=0.9, beta2=0.98, weight_decay=0.0)
+
+# GPT-2-small-style scaled to the CPU testbed (DESIGN.md §4 substitutions):
+# layer count kept at a meaningful depth, widths shrunk.
+LM = dict(vocab=512, d_model=128, n_layers=4, n_heads=4, head_dim=32, ctx=256)
+LM_BATCH = 8
+
+# App F synthetic-task model: 2 layers, 8 heads of size 16.
+TASK = dict(d_model=128, n_layers=2, n_heads=8, head_dim=16)
+
+
+def _lm_mechs(base: Dict) -> List[M.ModelConfig]:
+    return [
+        M.ModelConfig(**base, attn="softmax"),
+        M.ModelConfig(**base, attn="poly", degree=4),
+        M.ModelConfig(**base, attn="poly", degree=8),
+        M.ModelConfig(**base, attn="polysketch", degree=4, sketch_size=16,
+                      sketch_mode="learned", local_exact=True),
+        M.ModelConfig(**base, attn="polysketch", degree=4, sketch_size=16,
+                      sketch_mode="learned", local_exact=False),
+        M.ModelConfig(**base, attn="polysketch", degree=4, sketch_size=16,
+                      sketch_mode="random", local_exact=True),
+        M.ModelConfig(**base, attn="polysketch", degree=4, sketch_size=8,
+                      sketch_mode="learned", local_exact=True),
+        M.ModelConfig(**base, attn="performer", performer_features=64),
+    ]
+
+
+def model_presets() -> List[Tuple[M.ModelConfig, T.TrainConfig, int, str | None]]:
+    """Base suite at ctx 256 plus the Fig-2 context sweep.
+
+    The Fig-2 sweep keeps the token budget per step fixed (the paper's "1M
+    tokens per batch" protocol, scaled): batch x ctx = 2048 tokens at every
+    context length, mirroring how the paper compares mechanisms.
+    """
+    out = [(cfg, TC_DEFAULT, LM_BATCH, None) for cfg in _lm_mechs(LM)]
+    # Context sweep for Fig 2 / Tables 2-3 (base suite covers ctx=256).
+    for ctx in (64, 128):
+        batch = 2048 // ctx
+        base = {**LM, "ctx": ctx, "block": min(64, ctx)}
+        sweep = [c for c in _lm_mechs(base)
+                 if c.attn in ("softmax", "performer")
+                 or (c.attn == "poly" and c.degree == 4)
+                 or (c.attn == "polysketch" and c.sketch_size == 16
+                     and not (c.sketch_mode == "learned" and not c.local_exact))]
+        out.extend((cfg, TC_DEFAULT, batch, None) for cfg in sweep)
+    return out
+
+
+def task_presets() -> List[Tuple[M.ModelConfig, T.TrainConfig, int, str]]:
+    out = []
+    for mech_kw, mech_tag in [
+        (dict(attn="softmax"), "softmax"),
+        (dict(attn="poly", degree=4), "poly4"),
+        (dict(attn="polysketch", degree=4, sketch_size=16,
+              sketch_mode="learned", local_exact=True), "psk"),
+    ]:
+        out.append((M.ModelConfig(vocab=32, ctx=256, block=64, **TASK, **mech_kw),
+                    TC_TASK, 16, f"copy_{mech_tag}"))
+    for mech_kw, mech_tag in [
+        (dict(attn="softmax"), "softmax"),
+        (dict(attn="polysketch", degree=4, sketch_size=16,
+              sketch_mode="learned", local_exact=True), "psk"),
+    ]:
+        out.append((M.ModelConfig(vocab=24, ctx=128, block=32, **TASK, **mech_kw),
+                    TC_TASK, 16, f"induction_{mech_tag}"))
+    return out
+
+
+def tiny_presets() -> List[Tuple[M.ModelConfig, T.TrainConfig, int, str]]:
+    """Second-scale artifacts for rust integration tests (tests/ compiles
+    these in seconds; the real suite takes minutes per artifact)."""
+    base = dict(vocab=64, d_model=32, n_layers=1, n_heads=2, head_dim=16,
+                ctx=32, block=16)
+    return [
+        (M.ModelConfig(**base, attn="softmax"), TC_TASK, 2, "tiny_softmax"),
+        (M.ModelConfig(**base, attn="polysketch", degree=4, sketch_size=8,
+                       sketch_mode="learned", local_exact=True), TC_TASK, 2,
+         "tiny_psk"),
+        (M.ModelConfig(**base, attn="polysketch", degree=4, sketch_size=8,
+                       sketch_mode="random", local_exact=True), TC_TASK, 2,
+         "tiny_psk_random"),
+    ]
+
+
+def micro_presets() -> List[Dict]:
+    out = []
+    for n in (128, 256, 512, 1024):
+        out.append(dict(mech="softmax", n=n, use_pallas=True))
+        out.append(dict(mech="poly", n=n, use_pallas=True))
+        out.append(dict(mech="polysketch", n=n, use_pallas=True))
+        out.append(dict(mech="performer", n=n, use_pallas=True))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="all",
+                    choices=["all", "models", "micro", "tasks", "tiny"])
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.preset in ("all", "models"):
+        print("emitting model artifacts:")
+        for cfg, tc, batch, tag in model_presets():
+            emit_model(cfg, tc, batch, args.out, tag=tag)
+    if args.preset in ("all", "tiny"):
+        print("emitting tiny test artifacts:")
+        for cfg, tc, batch, tag in tiny_presets():
+            emit_model(cfg, tc, batch, args.out, tag=tag)
+    if args.preset in ("all", "tasks"):
+        print("emitting task artifacts:")
+        for cfg, tc, batch, tag in task_presets():
+            emit_model(cfg, tc, batch, args.out, tag=tag)
+    if args.preset in ("all", "micro"):
+        print("emitting attention micro artifacts:")
+        for kw in micro_presets():
+            emit_attn_micro(out_dir=args.out, **kw)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

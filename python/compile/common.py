@@ -1,0 +1,41 @@
+"""Shared numerical helpers for the compile-time (L1/L2) Python stack.
+
+Everything in ``python/`` runs only at build time (``make artifacts``); the
+rust coordinator never imports it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Epsilon used by all layer norms in the stack (matches the rust side).
+LN_EPS = 1e-6
+
+
+def layernorm(x: jnp.ndarray, eps: float = LN_EPS) -> jnp.ndarray:
+    """Parameter-free layer normalization over the last axis.
+
+    The paper (Section 2.1) applies layer normalization to query and key
+    vectors before the polynomial attention so that ``<q, k> + alpha`` can be
+    absorbed into a rescale-and-bias of mean-zero vectors.  Learned
+    scale/bias, when needed, are applied by the caller.
+    """
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps)
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GELU (matches the rust-side implementation)."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def self_tensor(m: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise self Kronecker product: each row a -> a (x) a.
+
+    For ``m`` of shape (..., r) returns shape (..., r*r).  This is the
+    "self-tensoring" trick of Theorem 2.4 that makes the sketched attention
+    weights provably non-negative.
+    """
+    return (m[..., :, None] * m[..., None, :]).reshape(*m.shape[:-1], m.shape[-1] ** 2)

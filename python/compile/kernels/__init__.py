@@ -1,0 +1,6 @@
+"""L1 kernels: polynomial sketches, attention oracles, block-lt scan
+implementations, and the Pallas kernels (in ``kernels.pallas``)."""
+
+from . import ref, sketch, linear_attn
+
+__all__ = ["ref", "sketch", "linear_attn"]

@@ -1,0 +1,84 @@
+"""Differentiable block lower-triangular attention (Section 3.1/3.2).
+
+These are the *training-path* implementations: pure jnp, autodiff-friendly,
+and algorithmically identical to the Pallas kernels in ``kernels/pallas/``
+(the Pallas kernels are the hand-scheduled forward versions; pytest asserts
+bit-closeness between the two and against the naive oracles in ref.py).
+
+All functions operate on a single (batch, head) slice; the model vmaps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import layernorm, self_tensor
+
+
+def _blockify(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    n = x.shape[0]
+    if n % block != 0:
+        raise ValueError(f"sequence length {n} not divisible by block {block}")
+    return x.reshape(n // block, block, *x.shape[1:])
+
+
+def block_linear_attention(phi_q: jnp.ndarray, phi_k: jnp.ndarray,
+                           v: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Causal linear attention via block lt-multiplication.
+
+    Computes lt(phi_q phi_k^T) [V | 1] blockwise: per-block states
+    H_l = phi_k_l^T [V_l | 1], exclusive prefix Z_l = sum_{j<l} H_j, and the
+    diagonal contribution P_l = lt(phi_q_l phi_k_l^T) [V_l | 1].  The value
+    matrix and the denominator's all-ones column ride in one state so a
+    single prefix pass produces both numerator and normalizer.
+    """
+    n, h = v.shape
+    aq, ak, av = _blockify(phi_q, block), _blockify(phi_k, block), _blockify(v, block)
+    cv = jnp.concatenate([av, jnp.ones((*av.shape[:-1], 1), av.dtype)], axis=-1)
+    s = jnp.einsum("tbf,tcf->tbc", aq, ak)
+    s = jnp.tril(s)
+    p_diag = jnp.einsum("tbc,tch->tbh", s, cv)
+    hs = jnp.einsum("tcf,tch->tfh", ak, cv)           # H_l
+    z = jnp.cumsum(hs, axis=0) - hs                   # exclusive prefix Z_l
+    out = p_diag + jnp.einsum("tbf,tfh->tbh", aq, z)
+    out = out.reshape(n, h + 1)
+    return out[:, :h] / (1.0 + out[:, h])[:, None]
+
+
+def block_polysketch_attention(l: jnp.ndarray, r: jnp.ndarray, v: jnp.ndarray,
+                               block: int,
+                               q: jnp.ndarray | None = None,
+                               k: jnp.ndarray | None = None,
+                               p: int = 4,
+                               local_exact: bool = False) -> jnp.ndarray:
+    """Polysketch attention on half-sketches L, R (n, rs).
+
+    Off-diagonal blocks use the implicit self-tensored features
+    phi' = L^{(x)2} via the r^2-dim prefix state; the diagonal block score is
+    (L_l R_l^T)^2 which never materializes phi' (Section 3.1's observation).
+    With ``local_exact`` the diagonal block instead uses the exact
+    degree-p polynomial weights lt((Q_l K_l^T)^p) (Section 3.2).
+    """
+    n, h = v.shape
+    rs = l.shape[-1]
+    lb, rb, vb = _blockify(l, block), _blockify(r, block), _blockify(v, block)
+    cv = jnp.concatenate([vb, jnp.ones((*vb.shape[:-1], 1), vb.dtype)], axis=-1)
+
+    if local_exact:
+        if q is None or k is None:
+            raise ValueError("local_exact needs raw q, k")
+        qb, kb = _blockify(layernorm(q), block), _blockify(layernorm(k), block)
+        s = jnp.einsum("tbd,tcd->tbc", qb, kb) ** p
+    else:
+        s = jnp.einsum("tbr,tcr->tbc", lb, rb) ** 2
+    s = jnp.tril(s)
+    p_diag = jnp.einsum("tbc,tch->tbh", s, cv)
+
+    phi_k = self_tensor(rb)                            # (t, b, rs^2)
+    phi_q = self_tensor(lb)
+    hs = jnp.einsum("tcf,tch->tfh", phi_k, cv)
+    z = jnp.cumsum(hs, axis=0) - hs
+    out = p_diag + jnp.einsum("tbf,tfh->tbh", phi_q, z)
+    out = out.reshape(n, h + 1)
+    del rs
+    return out[:, :h] / (1.0 + out[:, h])[:, None]

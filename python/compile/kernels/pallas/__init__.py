@@ -1,0 +1,20 @@
+"""Pallas (interpret=True) kernels — the hand-scheduled L1 layer.
+
+On a real TPU these lower to Mosaic; on this CPU testbed they run through
+the Pallas interpreter, which preserves the block schedule (BlockSpec HBM<->
+VMEM movement, carried scratch state) and the numerics, but not wallclock.
+Correctness is asserted against ref.py; performance structure (tile shapes,
+VMEM residency, MXU-shaped contractions) is documented in DESIGN.md §5.
+"""
+
+from .polysketch_attn import polysketch_attention_pallas
+from .linear_attn import linear_attention_pallas
+from .softmax_attn import softmax_attention_pallas
+from .poly_attn import poly_attention_pallas
+
+__all__ = [
+    "polysketch_attention_pallas",
+    "linear_attention_pallas",
+    "softmax_attention_pallas",
+    "poly_attention_pallas",
+]

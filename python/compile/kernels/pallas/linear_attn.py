@@ -1,0 +1,69 @@
+"""Generic causal linear attention Pallas kernel (block lt-multiplication).
+
+Implements Section 3.1 for arbitrary feature maps: the grid walks the t =
+n/b blocks in order; a VMEM scratch buffer carries the running prefix state
+Z (f x (h+1)) — value columns and the denominator's ones-column fused so one
+pass produces numerator and normalizer.  Per grid step the kernel does:
+
+    out_l  = lt(phi_q_l phi_k_l^T) [V_l | 1]  +  phi_q_l Z      (b x (h+1))
+    Z     +=      phi_k_l^T [V_l | 1]                           (f x (h+1))
+
+which is exactly the paper's P_l + A_l Z_l decomposition.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pq_ref, pk_ref, v_ref, o_ref, z_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    pq = pq_ref[...]                       # (b, f)
+    pk = pk_ref[...]                       # (b, f)
+    v = v_ref[...]                         # (b, h)
+    b = v.shape[0]
+    cv = jnp.concatenate([v, jnp.ones((b, 1), v.dtype)], axis=-1)
+
+    s = jnp.tril(pq @ pk.T)                # diagonal block, causal inside
+    out = s @ cv + pq @ z_ref[...]         # P_l + A_l Z_l
+    z_ref[...] += pk.T @ cv                # Z_{l+1} = Z_l + H_l
+    o_ref[...] = out
+
+
+def linear_attention_pallas(phi_q: jnp.ndarray, phi_k: jnp.ndarray,
+                            v: jnp.ndarray, block: int = 64,
+                            interpret: bool = True) -> jnp.ndarray:
+    """Causal linear attention with the 1+ denominator; single head.
+
+    phi_q, phi_k: (n, f) feature-mapped queries/keys; v: (n, h).
+    """
+    n, f = phi_q.shape
+    h = v.shape[-1]
+    if n % block != 0:
+        raise ValueError(f"n={n} not divisible by block={block}")
+    t = n // block
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((block, f), lambda i: (i, 0)),
+            pl.BlockSpec((block, f), lambda i: (i, 0)),
+            pl.BlockSpec((block, h), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, h + 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h + 1), v.dtype),
+        scratch_shapes=[pltpu.VMEM((f, h + 1), jnp.float32)],
+        interpret=interpret,
+    )(phi_q, phi_k, v)
+    return out[:, :h] / (1.0 + out[:, h])[:, None]

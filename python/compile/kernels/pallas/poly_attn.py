@@ -1,0 +1,67 @@
+"""Blocked exact degree-p polynomial attention Pallas kernel.
+
+The quadratic-time baseline of Section 2.1 (Figure 2 "Polynomial").  Same
+streaming structure as the flash softmax kernel, but no max-rescaling is
+needed: after layer normalization the scores (q.k)^p are bounded and the
+normalizer is the plain running sum 1 + sum_j (q_i . k_j)^p.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...common import layernorm
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, p: int):
+    bq, h = q_ref.shape
+    n = k_ref.shape[0]
+    qi = pl.program_id(0)
+    q = q_ref[...]
+
+    s0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, h), jnp.float32)
+    q_start = qi * bq
+    num_kb = n // block_k
+
+    def body(kb, carry):
+        s, acc = carry
+        k_start = kb * block_k
+        kt = k_ref[pl.dslice(k_start, block_k), :]
+        vt = v_ref[pl.dslice(k_start, block_k), :]
+        sc = (q @ kt.T) ** p
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+        sc = jnp.where(rows >= cols, sc, 0.0)
+        return s + jnp.sum(sc, axis=-1), acc + sc @ vt
+
+    s, acc = jax.lax.fori_loop(0, jnp.minimum(qi + 1, num_kb), body, (s0, acc0))
+    o_ref[...] = (acc / (1.0 + s)[:, None]).astype(o_ref.dtype)
+
+
+def poly_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                          p: int = 4, block_q: int = 64, block_k: int = 64,
+                          apply_ln: bool = True,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Blocked causal degree-p polynomial attention; single slice."""
+    n, h = q.shape
+    if apply_ln:
+        q, k = layernorm(q), layernorm(k)
+    if n % block_q != 0 or n % block_k != 0:
+        raise ValueError(f"n={n} not divisible by blocks ({block_q},{block_k})")
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, p=p),
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, h), lambda i: (i, 0)),
+            pl.BlockSpec((n, h), lambda i: (0, 0)),
+            pl.BlockSpec((n, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

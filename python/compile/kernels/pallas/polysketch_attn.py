@@ -1,0 +1,121 @@
+"""The core PolySketchFormer Pallas kernel.
+
+Causal Polysketch attention over *half-sketches* L, R (n, rs) — the outputs
+of PolySketchWithNegativity at degree p/2.  The implicit feature map is the
+row-wise self-tensor phi' = L^{(x)2} (Theorem 1.1), realized only:
+
+  * in the prefix state  Z (rs^2 x (h+1)), carried in VMEM scratch, and
+  * per-block as phi_q_l (b x rs^2) for the A_l Z_l product,
+
+never as an n x rs^2 tensor in HBM.  The diagonal block exploits
+phi'(Q)_l phi'(K)_l^T = (L_l R_l^T)^2 (Section 3.1's observation) so block
+scores cost O(b^2 rs), or — with ``local_exact`` — uses the exact polynomial
+weights lt((Q_l K_l^T)^p) of Section 3.2.
+
+VMEM residency per step (f32 words): 2*b*rs (L,R) + b*h (V) + rs^2*(h+1) (Z)
++ b*rs^2 (phi_q) + b*b (scores).  With the paper's r=32, b=1024, h=64 this
+is ~4.6 MiB <= 16 MiB VMEM; the DESIGN.md §5 roofline uses these shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...common import layernorm
+
+
+def _self_tensor(m: jnp.ndarray) -> jnp.ndarray:
+    return (m[:, :, None] * m[:, None, :]).reshape(m.shape[0], m.shape[1] ** 2)
+
+
+def _kernel_sketch(l_ref, r_ref, v_ref, o_ref, z_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    lb = l_ref[...]                          # (b, rs)
+    rb = r_ref[...]
+    v = v_ref[...]                           # (b, h)
+    b = v.shape[0]
+    cv = jnp.concatenate([v, jnp.ones((b, 1), v.dtype)], axis=-1)
+
+    s = jnp.tril((lb @ rb.T) ** 2)           # (L R^T)^2: no phi' materialized
+    phi_q = _self_tensor(lb)                 # (b, rs^2)
+    out = s @ cv + phi_q @ z_ref[...]
+    z_ref[...] += _self_tensor(rb).T @ cv
+    o_ref[...] = out
+
+
+def _kernel_local(l_ref, r_ref, v_ref, q_ref, k_ref, o_ref, z_ref, *, p: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    lb = l_ref[...]
+    rb = r_ref[...]
+    v = v_ref[...]
+    b = v.shape[0]
+    cv = jnp.concatenate([v, jnp.ones((b, 1), v.dtype)], axis=-1)
+
+    # Section 3.2: exact degree-p polynomial weights inside the local block.
+    s = jnp.tril((q_ref[...] @ k_ref[...].T) ** p)
+    phi_q = _self_tensor(lb)
+    out = s @ cv + phi_q @ z_ref[...]
+    z_ref[...] += _self_tensor(rb).T @ cv
+    o_ref[...] = out
+
+
+def polysketch_attention_pallas(l: jnp.ndarray, r: jnp.ndarray, v: jnp.ndarray,
+                                block: int = 64,
+                                q: jnp.ndarray | None = None,
+                                k: jnp.ndarray | None = None,
+                                p: int = 4,
+                                local_exact: bool = False,
+                                interpret: bool = True) -> jnp.ndarray:
+    """Causal Polysketch attention; single (batch, head) slice.
+
+    l, r: (n, rs) half-sketches of Q and K; v: (n, h) values.
+    With ``local_exact``, q/k are the raw (n, h) queries/keys (layer norm is
+    applied here, matching ref.polysketch_attention).
+    """
+    n, rs = l.shape
+    h = v.shape[-1]
+    if n % block != 0:
+        raise ValueError(f"n={n} not divisible by block={block}")
+    t = n // block
+
+    common = dict(
+        grid=(t,),
+        out_specs=pl.BlockSpec((block, h + 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h + 1), v.dtype),
+        scratch_shapes=[pltpu.VMEM((rs * rs, h + 1), jnp.float32)],
+        interpret=interpret,
+    )
+    spec_lr = pl.BlockSpec((block, rs), lambda i: (i, 0))
+    spec_v = pl.BlockSpec((block, h), lambda i: (i, 0))
+
+    if local_exact:
+        if q is None or k is None:
+            raise ValueError("local_exact needs raw q, k")
+        qn, kn = layernorm(q), layernorm(k)
+        spec_qk = pl.BlockSpec((block, h), lambda i: (i, 0))
+        import functools
+        out = pl.pallas_call(
+            functools.partial(_kernel_local, p=p),
+            in_specs=[spec_lr, spec_lr, spec_v, spec_qk, spec_qk],
+            **common,
+        )(l, r, v, qn, kn)
+    else:
+        out = pl.pallas_call(
+            _kernel_sketch,
+            in_specs=[spec_lr, spec_lr, spec_v],
+            **common,
+        )(l, r, v)
+    return out[:, :h] / (1.0 + out[:, h])[:, None]

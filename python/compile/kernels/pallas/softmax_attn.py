@@ -1,0 +1,77 @@
+"""FlashAttention-style blocked causal softmax Pallas kernel.
+
+The paper's speed baseline (Figures 1, 4; Table 4).  Structure mirrors the
+JAX Pallas flash kernel: the grid walks query blocks; for each query block
+the kernel streams key/value blocks up to the diagonal with the online
+softmax recurrence (running row-max m and normalizer s rescaled per block),
+so the n x n score matrix is never materialized — only (bq x bk) tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    bq, h = q_ref.shape
+    n = k_ref.shape[0]
+    qi = pl.program_id(0)
+    q = q_ref[...] * scale
+
+    # Online-softmax carries: running max m, running sum s, accumulator acc.
+    m0 = jnp.full((bq,), -1e30, jnp.float32)
+    s0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, h), jnp.float32)
+
+    q_start = qi * bq
+    num_kb = n // block_k
+
+    def body(kb, carry):
+        m, s, acc = carry
+        k_start = kb * block_k
+        kt = k_ref[pl.dslice(k_start, block_k), :]
+        vt = v_ref[pl.dslice(k_start, block_k), :]
+        sc = q @ kt.T                                   # (bq, bk)
+        # causal mask: query q_start+i attends to key k_start+j iff >=
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+        sc = jnp.where(rows >= cols, sc, -1e30)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        s_new = s * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + p @ vt
+        return m_new, s_new, acc_new
+
+    # Only key blocks at or before this query block can contribute.
+    m, s, acc = jax.lax.fori_loop(0, jnp.minimum(qi + 1, num_kb), body,
+                                  (m0, s0, acc0))
+    o_ref[...] = (acc / s[:, None]).astype(o_ref.dtype)
+
+
+def softmax_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                             block_q: int = 64, block_k: int = 64,
+                             scale: float | None = None,
+                             interpret: bool = True) -> jnp.ndarray:
+    """Blocked causal softmax attention; single (batch, head) slice."""
+    n, h = q.shape
+    if scale is None:
+        scale = float(1.0 / (h ** 0.5))
+    if n % block_q != 0 or n % block_k != 0:
+        raise ValueError(f"n={n} not divisible by blocks ({block_q},{block_k})")
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, scale=scale),
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, h), lambda i: (i, 0)),
+            pl.BlockSpec((n, h), lambda i: (0, 0)),   # stream from full K
+            pl.BlockSpec((n, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every attention mechanism in the repo.
+
+These are the *correctness* definitions: deliberately naive O(n^2)
+implementations that materialize the full attention matrix.  All Pallas
+kernels and all fast scan implementations are tested against these.
+
+Shapes: single (batch, head) slice — q, k, v are (n, h).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import layernorm
+
+
+def causal_mask(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Lower-triangular (inclusive) mask of shape (n, n)."""
+    return jnp.tril(jnp.ones((n, n), dtype=dtype))
+
+
+def lt_mult(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Naive lt(A B^T) C — the operation Section 3.1 computes blockwise."""
+    s = a @ b.T
+    return (jnp.tril(s)) @ c
+
+
+def softmax_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, scale: float | None = None) -> jnp.ndarray:
+    """Vanilla softmax attention, numerically-stabilized (alpha = row max)."""
+    n, h = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(h, q.dtype))
+    s = (q @ k.T) * scale
+    if causal:
+        neg = jnp.asarray(-1e30, s.dtype)
+        s = jnp.where(causal_mask(n, jnp.bool_), s, neg)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    w = jnp.exp(s)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w @ v
+
+
+def poly_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, p: int,
+                   causal: bool = True, apply_ln: bool = True) -> jnp.ndarray:
+    """Exact degree-p polynomial attention (Section 2.1).
+
+    A_{ij} = <q'_i, k'_j>^p / (1 + sum_{j' <= i} <q'_i, k'_{j'}>^p)
+    with q', k' layer-normalized.  The ``1 +`` in the denominator avoids
+    division by zero (the paper's tweak).
+    """
+    if apply_ln:
+        q, k = layernorm(q), layernorm(k)
+    n, _ = q.shape
+    s = (q @ k.T) ** p
+    if causal:
+        s = s * causal_mask(n, s.dtype)
+    denom = 1.0 + jnp.sum(s, axis=-1, keepdims=True)
+    return (s / denom) @ v
+
+
+def linear_attention(phi_q: jnp.ndarray, phi_k: jnp.ndarray, v: jnp.ndarray,
+                     causal: bool = True) -> jnp.ndarray:
+    """Generic kernel-feature attention with the paper's 1+ denominator.
+
+    Given feature-mapped queries/keys (n, r'), computes
+    out_i = sum_{j<=i} <phi_q_i, phi_k_j> v_j / (1 + sum_{j<=i} <phi_q_i, phi_k_j>).
+    """
+    n = phi_q.shape[0]
+    s = phi_q @ phi_k.T
+    if causal:
+        s = s * causal_mask(n, s.dtype)
+    denom = 1.0 + jnp.sum(s, axis=-1, keepdims=True)
+    return (s / denom) @ v
+
+
+def polysketch_attention(l: jnp.ndarray, r: jnp.ndarray, v: jnp.ndarray,
+                         q: jnp.ndarray | None = None,
+                         k: jnp.ndarray | None = None,
+                         p: int = 4,
+                         block: int | None = None) -> jnp.ndarray:
+    """Oracle for Polysketch attention with optional local exact blocks.
+
+    l, r: degree-p/2 half-sketches of Q and K, shape (n, rs)  (outputs of
+          PolySketchWithNegativity).  The implicit features are the row-wise
+          self-tensors l^{(x)2}, r^{(x)2}, so attention weights are
+          (l_i . r_j)^2 >= 0 (Theorem 2.4).
+    q, k, p, block: if q/k are given and block is not None, pairs (i, j)
+          falling in the same length-``block`` block use the exact polynomial
+          weight <q'_i, k'_j>^p (Section 3.2) instead of the sketched one.
+    """
+    n = l.shape[0]
+    s = (l @ r.T) ** 2
+    if q is not None and block is not None:
+        qn, kn = layernorm(q), layernorm(k)
+        exact = (qn @ kn.T) ** p
+        idx = jnp.arange(n) // block
+        same = idx[:, None] == idx[None, :]
+        s = jnp.where(same, exact, s)
+    s = s * causal_mask(n, s.dtype)
+    denom = 1.0 + jnp.sum(s, axis=-1, keepdims=True)
+    return (s / denom) @ v
+
+
+def performer_features(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """FAVOR+ positive random features: exp(w^T x - ||x||^2/2) / sqrt(m)."""
+    m = w.shape[1]
+    proj = x @ w
+    sq = 0.5 * jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    return jnp.exp(proj - sq) / jnp.sqrt(jnp.asarray(m, x.dtype))
+
+
+def performer_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        w: jnp.ndarray, causal: bool = True) -> jnp.ndarray:
+    """Performer baseline: positive-random-feature linear attention."""
+    return linear_attention(performer_features(q, w), performer_features(k, w),
+                            v, causal=causal)

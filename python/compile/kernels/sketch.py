@@ -1,0 +1,106 @@
+"""Algorithm 1 of the paper: polynomial sketches.
+
+``polysketch_with_negativity``  — recursive Gaussian sketch computing
+    A^{(x)p} S for the Ahle et al. (2020) sketch S (Theorem 2.2).
+``polysketch_nonnegative``      — our reproduction of the paper's
+    non-negative feature map phi'(A) = (A^{(x)p/2} S)^{(x)2} (Theorem 1.1).
+
+The sketches are *functional*: the Gaussian projection matrices are passed
+in explicitly so the same matrices can be (a) shared between Q and K —
+required for correctness, (b) replaced by learned transformations
+(Algorithm 2, see sketch_layers.py), and (c) re-materialized bit-exactly on
+the rust side.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..common import self_tensor
+
+
+def num_projections(p: int) -> int:
+    """Number of Gaussian matrices PolySketchWithNegativity(., r, p) consumes.
+
+    count(1) = 0; count(p) = 2*count(p/2) + 2  =>  count(p) = 2(p - 1).
+    The paper's phi' of degree p calls the recursion at degree p/2, consuming
+    p - 2 matrices — matching "only (p-2) random projections" (Section 2.3).
+    """
+    if p == 1:
+        return 0
+    _require_pow2(p)
+    return 2 * num_projections(p // 2) + 2
+
+
+def projection_shapes(h: int, r: int, p: int) -> List[tuple]:
+    """Shapes of the Gaussian matrices, in consumption order.
+
+    Leaf-level projections (applied to the raw h-dim rows) are (h, r); all
+    higher recursion levels project r-dim intermediates, hence (r, r).
+    """
+    if p == 1:
+        return []
+    _require_pow2(p)
+    sub = projection_shapes(h, r, p // 2)
+    inner = h if p == 2 else r
+    return sub + sub + [(inner, r), (inner, r)]
+
+
+def sample_projections(key: jax.Array, h: int, r: int, p: int) -> List[jnp.ndarray]:
+    """Draw the standard-Gaussian projection stack for degree p."""
+    shapes = projection_shapes(h, r, p)
+    keys = jax.random.split(key, max(len(shapes), 1))
+    return [jax.random.normal(kk, s, dtype=jnp.float32) for kk, s in zip(keys, shapes)]
+
+
+def polysketch_with_negativity(a: jnp.ndarray, gs: Sequence[jnp.ndarray],
+                               r: int, p: int) -> jnp.ndarray:
+    """PolySketchWithNegativity(A, r, p): returns A^{(x)p} S, shape (n, r).
+
+    Recursive construction of Theorem 2.2: for p = 2,
+        A^{(x)2} S = sqrt(1/r) (A G1) * (A G2);
+    for larger powers of two, sketch each half then combine the r-dim
+    intermediates with fresh (r, r) Gaussians and a Hadamard product.
+    """
+    if p == 1:
+        return a
+    _require_pow2(p)
+    n_sub = num_projections(p // 2)
+    m1 = polysketch_with_negativity(a, gs[:n_sub], r, p // 2)
+    m2 = polysketch_with_negativity(a, gs[n_sub:2 * n_sub], r, p // 2)
+    g1, g2 = gs[2 * n_sub], gs[2 * n_sub + 1]
+    return math.sqrt(1.0 / r) * ((m1 @ g1) * (m2 @ g2))
+
+
+def polysketch_nonnegative(a: jnp.ndarray, gs: Sequence[jnp.ndarray],
+                           r: int, p: int) -> jnp.ndarray:
+    """PolySketchNonNegative(A, r, p): phi'(A) = (A^{(x)p/2} S)^{(x)2}.
+
+    Output shape (n, r^2); all pairwise inner products between outputs are
+    squares, hence >= 0 (the self-tensoring trick, Theorem 2.4).
+    """
+    _require_pow2(p)
+    if p < 2:
+        raise ValueError("nonnegative sketch needs even p >= 2")
+    m = polysketch_with_negativity(a, gs, r, p // 2)
+    return self_tensor(m)
+
+
+def half_sketch(a: jnp.ndarray, gs: Sequence[jnp.ndarray], r: int, p: int) -> jnp.ndarray:
+    """The degree-p/2 half sketch L with phi'(a_i) = l_i (x) l_i.
+
+    The block algorithm (Section 3.1) works directly on L and R: the
+    diagonal-block score matrix is (L R^T)^2 which never materializes the
+    r^2-dim features.
+    """
+    _require_pow2(p)
+    return polysketch_with_negativity(a, gs, r, p // 2)
+
+
+def _require_pow2(p: int) -> None:
+    if p < 1 or (p & (p - 1)) != 0:
+        raise ValueError(f"degree must be a power of two, got {p}")

@@ -1,0 +1,313 @@
+"""L2: Transformer++ language model (Appendix I recipe).
+
+Decoder-only, causal, with the attention mechanism pluggable per config:
+softmax | polynomial(p) | polysketch(random|learned, +-local, r) | performer.
+
+Recipe (Appendix I): sinusoidal absolute position embeddings added to the
+input embeddings, RoPE at every attention head, pre-LN blocks, GLU
+feed-forward with expansion factor 4 and GELU, tied input/output embedding.
+
+Everything is functional: ``init(key, cfg)`` builds two pytrees —
+``params`` (trained) and ``statics`` (constants: sinusoidal table, random
+sketch projections, performer features) — and ``forward(params, statics,
+cfg, tokens)`` returns logits.  ``jax.jit`` of these functions is lowered to
+HLO text by aot.py; the rust runtime replays them without Python.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, asdict
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import gelu, layernorm, LN_EPS
+from .kernels import sketch
+from .kernels.linear_attn import (block_linear_attention,
+                                  block_polysketch_attention)
+from .kernels.ref import (performer_features, poly_attention,
+                          softmax_attention)
+from .sketch_layers import learnable_half_sketch, learnable_sketch_init
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + attention-mechanism configuration."""
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    ffn_mult: int = 4
+    ctx: int = 256
+    attn: str = "polysketch"        # softmax | poly | polysketch | performer
+    degree: int = 4                 # p, for poly / polysketch
+    sketch_size: int = 16           # r
+    sketch_mode: str = "learned"    # learned | random
+    local_exact: bool = True        # Section 3.2 local exact attention
+    block: int = 64                 # b, block-lt block size
+    performer_features: int = 64    # m, for performer
+    use_pallas: bool = False        # route fwd attention through Pallas kernels
+
+    def name(self) -> str:
+        if self.attn == "softmax":
+            mech = "softmax"
+        elif self.attn == "poly":
+            mech = f"poly{self.degree}"
+        elif self.attn == "polysketch":
+            mech = (f"psk{self.degree}_r{self.sketch_size}_{self.sketch_mode}"
+                    + ("_local" if self.local_exact else ""))
+        elif self.attn == "performer":
+            mech = f"performer{self.performer_features}"
+        else:
+            raise ValueError(self.attn)
+        return (f"{mech}_v{self.vocab}_d{self.d_model}_l{self.n_layers}"
+                f"_h{self.n_heads}x{self.head_dim}_c{self.ctx}")
+
+    def flat(self) -> Dict[str, object]:
+        return asdict(self)
+
+
+# ------------------------------------------------------------------ init
+
+def _dense(key, din, dout, scale=None):
+    if scale is None:
+        scale = 1.0 / math.sqrt(din)
+    return jax.random.normal(key, (din, dout), jnp.float32) * scale
+
+
+def sinusoidal_table(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2.0 * i / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def rope_tables(n: int, hd: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    i = jnp.arange(hd // 2, dtype=jnp.float32)[None, :]
+    theta = pos / jnp.power(10000.0, 2.0 * i / hd)
+    return jnp.cos(theta), jnp.sin(theta)
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    """Build (params, statics)."""
+    d, hd, nh = cfg.d_model, cfg.head_dim, cfg.n_heads
+    inner = nh * hd
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+
+    params: Dict = {
+        "tok_emb": jax.random.normal(keys[0], (cfg.vocab, d), jnp.float32) * 0.02,
+        "ln_f": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+        "layers": [],
+    }
+    statics: Dict = {
+        "pos": sinusoidal_table(cfg.ctx, d),
+        "rope_cos": rope_tables(cfg.ctx, hd)[0],
+        "rope_sin": rope_tables(cfg.ctx, hd)[1],
+    }
+
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(keys[2 + li], 10)
+        layer = {
+            "ln1": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+            "wq": _dense(lk[0], d, inner),
+            "wk": _dense(lk[1], d, inner),
+            "wv": _dense(lk[2], d, inner),
+            "wo": _dense(lk[3], inner, d, scale=1.0 / math.sqrt(inner * 2 * cfg.n_layers)),
+            "ln2": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+            "ffn_gate": _dense(lk[4], d, cfg.ffn_mult * d),
+            "ffn_up": _dense(lk[5], d, cfg.ffn_mult * d),
+            "ffn_down": _dense(lk[6], cfg.ffn_mult * d, d,
+                               scale=1.0 / math.sqrt(cfg.ffn_mult * d * 2 * cfg.n_layers)),
+        }
+        if cfg.attn == "polysketch" and cfg.sketch_mode == "learned":
+            layer["sketch"] = learnable_sketch_init(lk[7], hd, cfg.sketch_size,
+                                                    cfg.degree)
+        params["layers"].append(layer)
+
+        if cfg.attn == "polysketch" and cfg.sketch_mode == "random":
+            statics[f"sketch{li}"] = sketch.sample_projections(
+                lk[8], hd, cfg.sketch_size, cfg.degree)
+        if cfg.attn == "performer":
+            # Orthogonalized Gaussian features (FAVOR+).
+            w = jax.random.normal(lk[9], (hd, cfg.performer_features), jnp.float32)
+            qmat, _ = jnp.linalg.qr(jax.random.normal(lk[9], (max(hd, cfg.performer_features),) * 2))
+            w = qmat[:hd, :cfg.performer_features] * math.sqrt(hd)
+            statics[f"performer{li}"] = w
+
+    return params, statics
+
+
+def num_params(params) -> int:
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(params)))
+
+
+# ------------------------------------------------------------------ fwd
+
+def _ln(x, g):
+    return layernorm(x) * g["scale"] + g["bias"]
+
+
+def _rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, n, H, hd); rotate-half RoPE."""
+    n = x.shape[1]
+    cos, sin = cos[:n][None, :, None, :], sin[:n][None, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(params_l: Dict, statics: Dict, cfg: ModelConfig, li: int,
+               x: jnp.ndarray) -> jnp.ndarray:
+    """Multi-head attention of one layer; x: (B, n, d) pre-normed input."""
+    B, n, d = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+
+    q = (x @ params_l["wq"]).reshape(B, n, nh, hd)
+    k = (x @ params_l["wk"]).reshape(B, n, nh, hd)
+    v = (x @ params_l["wv"]).reshape(B, n, nh, hd)
+    q = _rope(q, statics["rope_cos"], statics["rope_sin"])
+    k = _rope(k, statics["rope_cos"], statics["rope_sin"])
+
+    if cfg.attn == "softmax":
+        f = jax.vmap(jax.vmap(lambda q_, k_, v_: softmax_attention(q_, k_, v_),
+                              in_axes=1, out_axes=1))
+        out = f(q, k, v)
+    elif cfg.attn == "poly":
+        f = jax.vmap(jax.vmap(
+            lambda q_, k_, v_: poly_attention(q_, k_, v_, cfg.degree),
+            in_axes=1, out_axes=1))
+        out = f(q, k, v)
+    elif cfg.attn == "polysketch":
+        qn, kn = layernorm(q), layernorm(k)
+        if cfg.sketch_mode == "learned":
+            nets = params_l["sketch"]
+            L = learnable_half_sketch(nets, qn, cfg.sketch_size, cfg.degree)
+            R = learnable_half_sketch(nets, kn, cfg.sketch_size, cfg.degree)
+        else:
+            gs = statics[f"sketch{li}"]
+            L = sketch.half_sketch(qn, gs, cfg.sketch_size, cfg.degree)
+            R = sketch.half_sketch(kn, gs, cfg.sketch_size, cfg.degree)
+
+        block = min(cfg.block, n)
+
+        def one_head(l_, r_, v_, q_, k_):
+            if cfg.use_pallas:
+                from .kernels.pallas import polysketch_attention_pallas
+                return polysketch_attention_pallas(
+                    l_, r_, v_, block=block,
+                    q=q_ if cfg.local_exact else None,
+                    k=k_ if cfg.local_exact else None,
+                    p=cfg.degree, local_exact=cfg.local_exact)
+            return block_polysketch_attention(
+                l_, r_, v_, block,
+                q=q_ if cfg.local_exact else None,
+                k=k_ if cfg.local_exact else None,
+                p=cfg.degree, local_exact=cfg.local_exact)
+
+        f = jax.vmap(jax.vmap(one_head, in_axes=1, out_axes=1))
+        out = f(L, R, v, q, k)
+    elif cfg.attn == "performer":
+        w = statics[f"performer{li}"]
+        block = min(cfg.block, n)
+
+        def one_head(q_, k_, v_):
+            pq = performer_features(q_, w)
+            pk = performer_features(k_, w)
+            if cfg.use_pallas:
+                from .kernels.pallas import linear_attention_pallas
+                return linear_attention_pallas(pq, pk, v_, block=block)
+            return block_linear_attention(pq, pk, v_, block)
+
+        f = jax.vmap(jax.vmap(one_head, in_axes=1, out_axes=1))
+        out = f(q, k, v)
+    else:
+        raise ValueError(cfg.attn)
+
+    return out.reshape(B, n, nh * hd) @ params_l["wo"]
+
+
+def _ffn(params_l: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """GLU feed-forward (GEGLU): down(gelu(gate(x)) * up(x))."""
+    return (gelu(x @ params_l["ffn_gate"]) * (x @ params_l["ffn_up"])) @ params_l["ffn_down"]
+
+
+def forward(params: Dict, statics: Dict, cfg: ModelConfig,
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: (B, n) int32 -> logits (B, n, vocab).
+
+    Layers run under ``jax.lax.scan`` (stacked homogeneous params), so the
+    lowered HLO contains ONE layer body regardless of depth — XLA backend
+    compile time of the train graph was dominated by the unrolled layer
+    stack (minutes for the learned-sketch models; see DESIGN.md §Perf).
+    Set ``PSF_UNROLL_LAYERS=1`` to restore the unrolled form for A/B.
+    """
+    import os
+    B, n = tokens.shape
+    # Vaswani §3.4 embedding scaling: multiply embeddings by sqrt(d) before
+    # adding the unit-scale sinusoidal table, otherwise the positional
+    # signal (O(1)) drowns the 0.02-std token embeddings and training
+    # plateaus (measured: 4x worse ppl at 300 steps without it).
+    scale = math.sqrt(cfg.d_model)
+    x = params["tok_emb"][tokens] * scale + statics["pos"][:n][None]
+
+    if os.environ.get("PSF_UNROLL_LAYERS") == "1" or len(params["layers"]) == 1:
+        for li, layer in enumerate(params["layers"]):
+            x = x + _attention(layer, statics, cfg, li, _ln(x, layer["ln1"]))
+            x = x + _ffn(layer, _ln(x, layer["ln2"]))
+    else:
+        # Stack per-layer params (and per-layer statics) along a new axis 0.
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *params["layers"])
+        per_layer_statics = _stack_layer_statics(statics, cfg,
+                                                 len(params["layers"]))
+
+        def body(x, layer_and_statics):
+            layer, lstat = layer_and_statics
+            # Merge shared statics (pos/rope) with this layer's slice.
+            merged = {**statics, **lstat}
+            x = x + _attention(layer, merged, cfg, 0, _ln(x, layer["ln1"]))
+            x = x + _ffn(layer, _ln(x, layer["ln2"]))
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, (stacked, per_layer_statics))
+
+    x = _ln(x, params["ln_f"])
+    return x @ params["tok_emb"].T     # tied embedding
+
+
+def _stack_layer_statics(statics: Dict, cfg: ModelConfig, n_layers: int) -> Dict:
+    """Stack the per-layer statics (random sketches / performer features)
+    into scan-compatible arrays keyed as layer 0 expects them."""
+    out: Dict = {}
+    if cfg.attn == "polysketch" and cfg.sketch_mode == "random":
+        per = [statics[f"sketch{li}"] for li in range(n_layers)]
+        out["sketch0"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+    if cfg.attn == "performer":
+        out["performer0"] = jnp.stack(
+            [statics[f"performer{li}"] for li in range(n_layers)])
+    return out
+
+
+def loss_fn(params: Dict, statics: Dict, cfg: ModelConfig,
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross entropy; tokens: (B, n+1) int32.
+
+    Masking convention (shared with the rust task generators):
+      * id 0 is PAD — contributes no loss as a target;
+      * a NEGATIVE id is visible as an input (abs value) but masked as a
+        target.  The LM corpus uses only positive ids (loss everywhere);
+        the synthetic tasks negate everything except answer positions so
+        the loss trains exactly the task signal (Appendix F protocol).
+    """
+    raw_in, raw_tgt = tokens[:, :-1], tokens[:, 1:]
+    inputs = jnp.abs(raw_in)
+    targets = jnp.abs(raw_tgt)
+    mask = (raw_tgt > 0).astype(jnp.float32)
+    logits = forward(params, statics, cfg, inputs)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum((logz - gold) * mask) / denom

@@ -1,0 +1,90 @@
+"""Algorithm 2: learnable polynomial sketches (Appendix D).
+
+Each random projection G of Algorithm 1 is replaced by a small dense network
+f(.) of comparable size: output dim r, three hidden layers [8r, r, 8r], GELU
+after hidden layers 1 and 3, layer normalization before the input and before
+hidden layer 2 — ~8hr + 24r^2 parameters per net, (p-2) nets per attention
+layer, shared across all heads of the layer (Section 4, "all attention heads
+share the same phi' within the same attention layer").
+
+The combine step applies the paper's tanh trick:
+    sqrt(r) * tanh( sqrt(1/r) * (f1(M1) * f2(M2)) )
+keeping outputs in a bounded range so optimization stays stable.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .common import gelu, layernorm
+from .kernels.sketch import num_projections, projection_shapes
+
+
+def _dense_init(key: jax.Array, din: int, dout: int) -> Dict[str, jnp.ndarray]:
+    w = jax.random.normal(key, (din, dout), jnp.float32) / math.sqrt(din)
+    return {"w": w, "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def sketch_net_init(key: jax.Array, din: int, r: int) -> Dict[str, Dict]:
+    """Parameters of one learnable-projection net f: R^din -> R^r."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "h1": _dense_init(k1, din, 8 * r),
+        "h2": _dense_init(k2, 8 * r, r),
+        "h3": _dense_init(k3, r, 8 * r),
+        "out": _dense_init(k4, 8 * r, r),
+    }
+
+
+def sketch_net_apply(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """f(x): LN -> Dense(8r) -> GELU -> LN -> Dense(r) -> Dense(8r) -> GELU -> Dense(r)."""
+    x = layernorm(x)
+    x = gelu(x @ params["h1"]["w"] + params["h1"]["b"])
+    x = layernorm(x)
+    x = x @ params["h2"]["w"] + params["h2"]["b"]
+    x = gelu(x @ params["h3"]["w"] + params["h3"]["b"])
+    return x @ params["out"]["w"] + params["out"]["b"]
+
+
+def learnable_sketch_init(key: jax.Array, h: int, r: int, p: int) -> List[Dict]:
+    """One net per Gaussian that PolySketchWithNegativity(., r, p/2) consumes.
+
+    Net input dims follow projection_shapes: h at the leaves, r above.
+    """
+    shapes = projection_shapes(h, r, p // 2)
+    keys = jax.random.split(key, max(len(shapes), 1))
+    return [sketch_net_init(kk, din, r) for kk, (din, _) in zip(keys, shapes)]
+
+
+def learnable_half_sketch(nets: Sequence[Dict], x: jnp.ndarray,
+                          r: int, p: int) -> jnp.ndarray:
+    """LearnablePolySketchWithNegativity(x, r, p/2) — the half sketch L.
+
+    The full non-negative feature map is the row-wise self-tensor of the
+    result (applied implicitly by the block attention kernels).
+    """
+    return _learnable_pswn(nets, x, r, p // 2)
+
+
+def _learnable_pswn(nets: Sequence[Dict], x: jnp.ndarray, r: int, d: int) -> jnp.ndarray:
+    if d == 1:
+        return x
+    n_sub = num_projections(d // 2)
+    m1 = _learnable_pswn(nets[:n_sub], x, r, d // 2)
+    m2 = _learnable_pswn(nets[n_sub:2 * n_sub], x, r, d // 2)
+    f1, f2 = nets[2 * n_sub], nets[2 * n_sub + 1]
+    y = math.sqrt(1.0 / r) * (sketch_net_apply(f1, m1) * sketch_net_apply(f2, m2))
+    return math.sqrt(float(r)) * jnp.tanh(y)
+
+
+def param_count(h: int, r: int, p: int) -> int:
+    """Approximate parameter count added per attention layer (for docs)."""
+    total = 0
+    for din, _ in projection_shapes(h, r, p // 2):
+        total += din * 8 * r + 8 * r * r + r * 8 * r + 8 * r * r  # weights
+        total += 8 * r + r + 8 * r + r                            # biases
+    return total

@@ -1,0 +1,103 @@
+"""Training step: from-scratch Adam(W) + linear warmup/decay schedule.
+
+No optax in this environment — the optimizer is implemented directly so the
+whole train step (forward + backward + update + schedule) lowers to a single
+HLO program the rust coordinator executes in a loop.
+
+Paper recipe (Appendix G/I): Adam with weight decay, beta1 = 0.95,
+beta2 = 0.98, linear warmup for the first fraction of steps then linear
+decay to zero.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .model import ModelConfig, loss_fn
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    beta1: float = 0.95
+    beta2: float = 0.98
+    eps: float = 1e-9
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+    def flat(self) -> Dict[str, object]:
+        return asdict(self)
+
+
+def lr_at(tc: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup to peak_lr, then linear decay to 0 at total_steps."""
+    step = step.astype(jnp.float32)
+    warm = step / max(tc.warmup_steps, 1)
+    decay = (tc.total_steps - step) / max(tc.total_steps - tc.warmup_steps, 1)
+    return tc.peak_lr * jnp.clip(jnp.minimum(warm, decay), 0.0, 1.0)
+
+
+def init_opt_state(params) -> Dict:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros,
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+
+
+def adam_update(tc: TrainConfig, params, grads, opt_state) -> Tuple[Dict, Dict]:
+    """One AdamW step with global-norm gradient clipping."""
+    step = opt_state["step"] + 1
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, tc.grad_clip / (gn + 1e-12))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    b1, b2 = tc.beta1, tc.beta2
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               opt_state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               opt_state["v"], grads)
+    t = step.astype(jnp.float32)
+    mhat_c = 1.0 / (1.0 - b1 ** t)
+    vhat_c = 1.0 / (1.0 - b2 ** t)
+    lr = lr_at(tc, step)
+
+    def upd(p, m_, v_):
+        u = (m_ * mhat_c) / (jnp.sqrt(v_ * vhat_c) + tc.eps)
+        return p - lr * (u + tc.weight_decay * p)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Returns train_step(params, statics, opt_state, tokens) ->
+    (params', opt_state', loss).  Suitable for jax.jit / AOT lowering."""
+
+    def train_step(params, statics, opt_state, tokens):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, statics, cfg, tokens))(params)
+        new_params, new_opt = adam_update(tc, params, grads, opt_state)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def make_eval_loss(cfg: ModelConfig):
+    """Returns eval_loss(params, statics, tokens) -> mean NLL (perplexity =
+    exp of this) over the batch."""
+
+    def eval_loss(params, statics, tokens):
+        return loss_fn(params, statics, cfg, tokens)
+
+    return eval_loss

@@ -1,0 +1,298 @@
+"""Kernel correctness: scan + Pallas implementations vs the naive oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.common import layernorm, self_tensor
+from compile.kernels import ref, sketch
+from compile.kernels.linear_attn import (block_linear_attention,
+                                         block_polysketch_attention)
+from compile.kernels.pallas import (linear_attention_pallas,
+                                    poly_attention_pallas,
+                                    polysketch_attention_pallas,
+                                    softmax_attention_pallas)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------- oracles
+
+class TestOracleInvariants:
+    def test_softmax_rows_sum_to_one(self):
+        kq, kk, kv = keys(0, 3)
+        q, k, v = rand(kq, 16, 8), rand(kk, 16, 8), rand(kv, 16, 8)
+        out = ref.softmax_attention(q, k, jnp.eye(16))
+        np.testing.assert_allclose(np.sum(out, -1), 1.0, rtol=1e-5)
+
+    def test_softmax_causality(self):
+        kq, kk, kv, kp = keys(1, 4)
+        q, k, v = rand(kq, 16, 8), rand(kk, 16, 8), rand(kv, 16, 8)
+        out1 = ref.softmax_attention(q, k, v)
+        # Perturbing the future must not change earlier outputs.
+        v2 = v.at[10:].set(rand(kp, 6, 8))
+        out2 = ref.softmax_attention(q, k, v2)
+        np.testing.assert_allclose(out1[:10], out2[:10], rtol=1e-6)
+
+    def test_poly_attention_weights_nonnegative_even_p(self):
+        kq, kk = keys(2, 2)
+        q, k = rand(kq, 12, 8), rand(kk, 12, 8)
+        out = ref.poly_attention(q, k, jnp.eye(12), p=4)
+        assert np.all(np.asarray(out) >= -1e-7)
+
+    def test_poly_attention_row_sums_below_one(self):
+        # 1+ in the denominator => rows sum to sum/(1+sum) < 1.
+        kq, kk = keys(3, 2)
+        q, k = rand(kq, 12, 8), rand(kk, 12, 8)
+        out = ref.poly_attention(q, k, jnp.eye(12), p=4)
+        rows = np.sum(np.asarray(out), -1)
+        assert np.all(rows < 1.0) and np.all(rows >= 0.0)
+
+    def test_poly_attention_argmax_limit(self):
+        # As p grows, weight concentrates on the max inner product (Sec 2.1).
+        kq, kk = keys(4, 2)
+        q, k = rand(kq, 8, 16), rand(kk, 8, 16)
+        w8 = ref.poly_attention(q, k, jnp.eye(8), p=8, causal=False)
+        qn, kn = layernorm(q), layernorm(k)
+        s = np.asarray(qn @ kn.T)
+        am = np.argmax(np.abs(s), axis=-1)
+        got = np.argmax(np.asarray(w8), axis=-1)
+        assert np.mean(am == got) >= 0.8
+
+    def test_lt_mult_matches_definition(self):
+        ka, kb, kc = keys(5, 3)
+        a, b, c = rand(ka, 10, 4), rand(kb, 10, 4), rand(kc, 10, 3)
+        got = ref.lt_mult(a, b, c)
+        want = np.tril(np.asarray(a) @ np.asarray(b).T) @ np.asarray(c)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- sketches
+
+class TestSketches:
+    @pytest.mark.parametrize("p", [2, 4, 8])
+    def test_projection_count_matches_paper(self, p):
+        # phi' of degree p consumes p-2 projections (Section 2.3).
+        assert sketch.num_projections(p // 2) == p - 2
+
+    @pytest.mark.parametrize("p,r,bound", [(2, 16, 0.6), (4, 16, 0.6),
+                                           (4, 32, 0.45), (8, 16, 1.6)])
+    def test_pswn_approximates_poly_kernel(self, p, r, bound):
+        kd, kg = keys(6, 2)
+        x = rand(kd, 64, 8)
+        x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+        gs = sketch.sample_projections(kg, 8, r, p)
+        sk = sketch.polysketch_with_negativity(x, gs, r, p)
+        approx = np.asarray(sk @ sk.T)
+        exact = np.asarray(x @ x.T) ** p
+        err = np.sqrt(np.mean((approx - exact) ** 2))
+        # AMM-style bound for unit rows; variance grows with degree p
+        # (Theorem 2.2's r = Theta(p / eps^2)), hence per-case bounds.
+        assert err < bound
+
+    @pytest.mark.parametrize("p,r", [(2, 8), (4, 8), (4, 16), (8, 8)])
+    def test_nonnegative_sketch_is_nonnegative(self, p, r):
+        kq, kk, kg = keys(7, 3)
+        q, k = rand(kq, 32, 8), rand(kk, 32, 8)
+        gs = sketch.sample_projections(kg, 8, r, p)
+        pq = sketch.polysketch_nonnegative(q, gs, r, p)
+        pk = sketch.polysketch_nonnegative(k, gs, r, p)
+        w = np.asarray(pq @ pk.T)
+        assert np.all(w >= -1e-6), "Theorem 1.1 property 1 violated"
+
+    def test_self_tensor_inner_product_is_square(self):
+        ka, kb = keys(8, 2)
+        a, b = rand(ka, 5, 6), rand(kb, 5, 6)
+        sa, sb = self_tensor(a), self_tensor(b)
+        got = np.asarray(jnp.einsum("if,jf->ij", sa, sb))
+        want = np.asarray(a @ b.T) ** 2
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_half_sketch_consistent_with_nonnegative(self):
+        kd, kg = keys(9, 2)
+        x = rand(kd, 16, 8)
+        gs = sketch.sample_projections(kg, 8, 8, 4)
+        half = sketch.half_sketch(x, gs, 8, 4)
+        full = sketch.polysketch_nonnegative(x, gs, 8, 4)
+        np.testing.assert_allclose(np.asarray(self_tensor(half)),
+                                   np.asarray(full), rtol=1e-5)
+
+    def test_sketch_error_shrinks_with_r(self):
+        kd, kg = keys(10, 2)
+        x = rand(kd, 64, 8)
+        x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+        errs = []
+        for r in (4, 16, 64):
+            gs = sketch.sample_projections(kg, 8, r, 4)
+            sk = sketch.polysketch_with_negativity(x, gs, r, 4)
+            approx = np.asarray(sk @ sk.T)
+            exact = np.asarray(x @ x.T) ** 4
+            errs.append(np.sqrt(np.mean((approx - exact) ** 2)))
+        assert errs[2] < errs[0], f"error did not shrink: {errs}"
+
+    def test_degree_must_be_power_of_two(self):
+        with pytest.raises(ValueError):
+            sketch.num_projections(3)
+
+
+# ----------------------------------------------------- block scan vs oracle
+
+class TestBlockScan:
+    @pytest.mark.parametrize("n,f,h,block", [(32, 8, 4, 8), (64, 16, 8, 16),
+                                             (64, 16, 8, 64), (48, 4, 4, 16)])
+    def test_block_linear_matches_oracle(self, n, f, h, block):
+        kq, kk, kv = keys(11, 3)
+        pq = jnp.abs(rand(kq, n, f))
+        pk = jnp.abs(rand(kk, n, f))
+        v = rand(kv, n, h)
+        got = block_linear_attention(pq, pk, v, block)
+        want = ref.linear_attention(pq, pk, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    @pytest.mark.parametrize("block", [8, 16, 32])
+    def test_block_polysketch_matches_oracle(self, block):
+        kq, kk, kv, kg = keys(12, 4)
+        n, h, rs = 32, 8, 4
+        q, k, v = rand(kq, n, h), rand(kk, n, h), rand(kv, n, h)
+        gs = sketch.sample_projections(kg, h, rs, 4)
+        l = sketch.half_sketch(layernorm(q), gs, rs, 4)
+        r = sketch.half_sketch(layernorm(k), gs, rs, 4)
+        got = block_polysketch_attention(l, r, v, block)
+        want = ref.polysketch_attention(l, r, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_block_polysketch_local_exact_matches_oracle(self):
+        kq, kk, kv, kg = keys(13, 4)
+        n, h, rs, block, p = 32, 8, 4, 8, 4
+        q, k, v = rand(kq, n, h), rand(kk, n, h), rand(kv, n, h)
+        gs = sketch.sample_projections(kg, h, rs, p)
+        l = sketch.half_sketch(layernorm(q), gs, rs, p)
+        r = sketch.half_sketch(layernorm(k), gs, rs, p)
+        got = block_polysketch_attention(l, r, v, block, q=q, k=k, p=p,
+                                         local_exact=True)
+        want = ref.polysketch_attention(l, r, v, q=q, k=k, p=p, block=block)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_block_size_equals_n_is_exact_quadratic(self):
+        # One block => pure lt(S)C path, no prefix state involved.
+        kq, kk, kv = keys(14, 3)
+        n, f, h = 16, 8, 4
+        pq, pk, v = jnp.abs(rand(kq, n, f)), jnp.abs(rand(kk, n, f)), rand(kv, n, h)
+        got = block_linear_attention(pq, pk, v, n)
+        want = ref.linear_attention(pq, pk, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_indivisible_block_raises(self):
+        kq, kk, kv = keys(15, 3)
+        with pytest.raises(ValueError):
+            block_linear_attention(rand(kq, 10, 4), rand(kk, 10, 4),
+                                   rand(kv, 10, 4), 3)
+
+
+# ------------------------------------------------------- pallas vs oracle
+
+class TestPallasKernels:
+    @pytest.mark.parametrize("n,h,block", [(32, 8, 8), (64, 16, 16)])
+    def test_softmax_pallas_matches_oracle(self, n, h, block):
+        kq, kk, kv = keys(16, 3)
+        q, k, v = rand(kq, n, h), rand(kk, n, h), rand(kv, n, h)
+        got = softmax_attention_pallas(q, k, v, block_q=block, block_k=block)
+        want = ref.softmax_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    @pytest.mark.parametrize("p", [2, 4, 8])
+    def test_poly_pallas_matches_oracle(self, p):
+        kq, kk, kv = keys(17, 3)
+        n, h = 32, 8
+        q, k, v = rand(kq, n, h), rand(kk, n, h), rand(kv, n, h)
+        got = poly_attention_pallas(q, k, v, p=p, block_q=8, block_k=8)
+        want = ref.poly_attention(q, k, v, p=p)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-4, atol=3e-5)
+
+    @pytest.mark.parametrize("block", [8, 16])
+    def test_linear_pallas_matches_oracle(self, block):
+        kq, kk, kv = keys(18, 3)
+        n, f, h = 32, 8, 8
+        pq = jnp.abs(rand(kq, n, f))
+        pk = jnp.abs(rand(kk, n, f))
+        v = rand(kv, n, h)
+        got = linear_attention_pallas(pq, pk, v, block=block)
+        want = ref.linear_attention(pq, pk, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    @pytest.mark.parametrize("block", [8, 16])
+    def test_polysketch_pallas_matches_oracle(self, block):
+        kq, kk, kv, kg = keys(19, 4)
+        n, h, rs = 32, 8, 4
+        q, k, v = rand(kq, n, h), rand(kk, n, h), rand(kv, n, h)
+        gs = sketch.sample_projections(kg, h, rs, 4)
+        l = sketch.half_sketch(layernorm(q), gs, rs, 4)
+        r = sketch.half_sketch(layernorm(k), gs, rs, 4)
+        got = polysketch_attention_pallas(l, r, v, block=block)
+        want = ref.polysketch_attention(l, r, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_polysketch_pallas_local_exact(self):
+        kq, kk, kv, kg = keys(20, 4)
+        n, h, rs, block, p = 32, 8, 4, 8, 4
+        q, k, v = rand(kq, n, h), rand(kk, n, h), rand(kv, n, h)
+        gs = sketch.sample_projections(kg, h, rs, p)
+        l = sketch.half_sketch(layernorm(q), gs, rs, p)
+        r = sketch.half_sketch(layernorm(k), gs, rs, p)
+        got = polysketch_attention_pallas(l, r, v, block=block, q=q, k=k, p=p,
+                                          local_exact=True)
+        want = ref.polysketch_attention(l, r, v, q=q, k=k, p=p, block=block)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_pallas_agrees_with_scan_impl(self):
+        # Pallas forward and the differentiable scan must agree bit-closely.
+        kq, kk, kv, kg = keys(21, 4)
+        n, h, rs, block = 64, 8, 4, 16
+        q, k, v = rand(kq, n, h), rand(kk, n, h), rand(kv, n, h)
+        gs = sketch.sample_projections(kg, h, rs, 4)
+        l = sketch.half_sketch(layernorm(q), gs, rs, 4)
+        r = sketch.half_sketch(layernorm(k), gs, rs, 4)
+        a = polysketch_attention_pallas(l, r, v, block=block)
+        b = block_polysketch_attention(l, r, v, block)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+
+# -------------------------------------------------------------- performer
+
+class TestPerformer:
+    def test_features_positive(self):
+        kx, kw = keys(22, 2)
+        x = rand(kx, 16, 8)
+        w = rand(kw, 8, 32)
+        f = np.asarray(ref.performer_features(x, w))
+        assert np.all(f > 0)
+
+    def test_performer_runs_through_block_lt(self):
+        kq, kk, kv, kw = keys(23, 4)
+        n, h, m = 32, 8, 16
+        q, k, v = rand(kq, n, h), rand(kk, n, h), rand(kv, n, h)
+        w = rand(kw, h, m)
+        want = ref.performer_attention(q, k, v, w)
+        pq = ref.performer_features(q, w)
+        pk = ref.performer_features(k, w)
+        got = block_linear_attention(pq, pk, v, 8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)

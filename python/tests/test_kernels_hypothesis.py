@@ -1,0 +1,135 @@
+"""Hypothesis property sweeps over the Pallas kernels' shape/parameter
+space, asserting against the pure-jnp oracles (ref.py).
+
+The deterministic pytest suite pins a handful of shapes; these sweeps let
+hypothesis explore (n, h, block, p, r) jointly — shrinkage gives a minimal
+failing configuration if a kernel has a shape-dependent bug.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.common import layernorm
+from compile.kernels import ref, sketch
+from compile.kernels.pallas import (linear_attention_pallas,
+                                    poly_attention_pallas,
+                                    polysketch_attention_pallas,
+                                    softmax_attention_pallas)
+
+jax.config.update("jax_enable_x64", False)
+
+# interpret-mode Pallas is slow: keep examples small and few.
+COMMON = dict(max_examples=12, deadline=None)
+
+
+def rand(seed, *shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale
+
+
+def divisors_of(n):
+    return [b for b in (8, 16, 32, 64) if n % b == 0]
+
+
+@st.composite
+def attn_shapes(draw):
+    n = draw(st.sampled_from([16, 32, 48, 64, 128]))
+    h = draw(st.sampled_from([4, 8, 16, 32]))
+    block = draw(st.sampled_from(divisors_of(n)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return n, h, block, seed
+
+
+@settings(**COMMON)
+@given(attn_shapes())
+def test_softmax_pallas_matches_oracle_sweep(shape):
+    n, h, block, seed = shape
+    q, k, v = rand(seed, n, h), rand(seed + 1, n, h), rand(seed + 2, n, h)
+    got = softmax_attention_pallas(q, k, v, block_q=block, block_k=block)
+    want = ref.softmax_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+@settings(**COMMON)
+@given(attn_shapes(), st.sampled_from([2, 4, 8]))
+def test_poly_pallas_matches_oracle_sweep(shape, p):
+    n, h, block, seed = shape
+    q, k, v = rand(seed, n, h), rand(seed + 1, n, h), rand(seed + 2, n, h)
+    got = poly_attention_pallas(q, k, v, p=p, block_q=block, block_k=block)
+    want = ref.poly_attention(q, k, v, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-4)
+
+
+@settings(**COMMON)
+@given(attn_shapes())
+def test_linear_pallas_matches_oracle_sweep(shape):
+    n, f, block, seed = shape
+    h = 8
+    # Positive features (performer-style) keep the denominator well away
+    # from zero so the comparison is numerically meaningful.
+    phi_q = jnp.abs(rand(seed, n, f)) + 0.1
+    phi_k = jnp.abs(rand(seed + 1, n, f)) + 0.1
+    v = rand(seed + 2, n, h)
+    got = linear_attention_pallas(phi_q, phi_k, v, block=block)
+    want = ref.linear_attention(phi_q, phi_k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-4)
+
+
+@settings(**COMMON)
+@given(attn_shapes(), st.sampled_from([4, 8, 16]), st.booleans())
+def test_polysketch_pallas_matches_scan_sweep(shape, r, local):
+    # The Pallas block kernel must agree with the jnp scan implementation
+    # for any (shape, sketch size, local-exact) combination.
+    from compile.kernels.linear_attn import block_polysketch_attention
+    n, h, block, seed = shape
+    p = 4
+    key = jax.random.PRNGKey(seed)
+    q, k, v = rand(seed, n, h), rand(seed + 1, n, h), rand(seed + 2, n, h)
+    qn, kn = layernorm(q), layernorm(k)
+    gs = sketch.sample_projections(key, h, r, p)
+    lh = sketch.half_sketch(qn, gs, r, p)
+    rh = sketch.half_sketch(kn, gs, r, p)
+    got = polysketch_attention_pallas(lh, rh, v, block=block, q=q, k=k, p=p,
+                                      local_exact=local)
+    want = block_polysketch_attention(lh, rh, v, block, q=q, k=k, p=p,
+                                      local_exact=local)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-4)
+
+
+@settings(**COMMON)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8]),
+       st.sampled_from([4, 8, 16, 32]))
+def test_nonnegative_sketch_property_sweep(seed, p, r):
+    # Theorem 1.1 property 1: every sketched attention weight >= 0, for any
+    # seed/degree/sketch-size (up to fp cancellation noise, which scales
+    # with the weight magnitude ~ ||q||^p ||k||^p).
+    q = layernorm(rand(seed, 24, 8))
+    k = layernorm(rand(seed + 1, 24, 8))
+    key = jax.random.PRNGKey(seed + 2)
+    gs = sketch.sample_projections(key, 8, r, p)
+    phi_q = sketch.polysketch_nonnegative(q, gs, r, p)
+    phi_k = sketch.polysketch_nonnegative(k, gs, r, p)
+    w = np.asarray(phi_q @ phi_k.T)
+    floor = -1e-5 * float(np.abs(w).max() + 1.0)
+    assert w.min() >= floor, f"negative weight {w.min()} (floor {floor})"
+
+
+@settings(**COMMON)
+@given(st.integers(0, 2**31 - 1))
+def test_block_linear_attention_block_invariance_sweep(seed):
+    # Section 3.1: the blocked schedule must be block-size invariant —
+    # identical outputs (up to fp reassociation) for every block size.
+    from compile.kernels.linear_attn import block_linear_attention
+    phi_q = jnp.abs(rand(seed, 64, 8)) + 0.1
+    phi_k = jnp.abs(rand(seed + 1, 64, 8)) + 0.1
+    v = rand(seed + 2, 64, 4)
+    want = ref.linear_attention(phi_q, phi_k, v)
+    for blk in (8, 16, 32, 64):
+        got = block_linear_attention(phi_q, phi_k, v, blk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)

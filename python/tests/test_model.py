@@ -1,0 +1,176 @@
+"""L2 model tests: shapes, mechanisms, training signal, flat-theta packing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import train as T
+from compile.sketch_layers import (learnable_half_sketch,
+                                   learnable_sketch_init, param_count,
+                                   sketch_net_apply, sketch_net_init)
+
+TINY = dict(vocab=64, d_model=32, n_layers=2, n_heads=2, head_dim=16,
+            ctx=32, block=16)
+
+
+def _cfg(**kw):
+    return M.ModelConfig(**{**TINY, **kw})
+
+
+MECHS = [
+    _cfg(attn="softmax"),
+    _cfg(attn="poly", degree=4),
+    _cfg(attn="polysketch", degree=4, sketch_size=8, sketch_mode="learned",
+         local_exact=True),
+    _cfg(attn="polysketch", degree=4, sketch_size=8, sketch_mode="learned",
+         local_exact=False),
+    _cfg(attn="polysketch", degree=4, sketch_size=8, sketch_mode="random",
+         local_exact=True),
+    _cfg(attn="performer", performer_features=16),
+]
+
+
+def _tokens(cfg, batch=2, extra=0, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(key, (batch, cfg.ctx + extra), 0, cfg.vocab,
+                              dtype=jnp.int32)
+
+
+class TestForward:
+    @pytest.mark.parametrize("cfg", MECHS, ids=lambda c: c.name())
+    def test_forward_shape_and_finite(self, cfg):
+        params, statics = M.init(jax.random.PRNGKey(0), cfg)
+        toks = _tokens(cfg)
+        logits = M.forward(params, statics, cfg, toks)
+        assert logits.shape == (2, cfg.ctx, cfg.vocab)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+    @pytest.mark.parametrize("cfg", MECHS[:3], ids=lambda c: c.name())
+    def test_causality(self, cfg):
+        # Changing token t must not affect logits before t.
+        params, statics = M.init(jax.random.PRNGKey(0), cfg)
+        toks = _tokens(cfg)
+        cut = cfg.ctx // 2
+        toks2 = toks.at[:, cut:].set((toks[:, cut:] + 1) % cfg.vocab)
+        l1 = M.forward(params, statics, cfg, toks)
+        l2 = M.forward(params, statics, cfg, toks2)
+        np.testing.assert_allclose(np.asarray(l1[:, :cut]),
+                                   np.asarray(l2[:, :cut]), rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_initial_loss_near_uniform(self):
+        cfg = MECHS[2]
+        params, statics = M.init(jax.random.PRNGKey(0), cfg)
+        loss = M.loss_fn(params, statics, cfg, _tokens(cfg, extra=1))
+        assert abs(float(loss) - np.log(cfg.vocab)) < 0.5
+
+    def test_pallas_and_scan_model_agree(self):
+        cfg = _cfg(attn="polysketch", degree=4, sketch_size=8,
+                   sketch_mode="random", local_exact=True)
+        cfg_p = _cfg(attn="polysketch", degree=4, sketch_size=8,
+                     sketch_mode="random", local_exact=True, use_pallas=True)
+        params, statics = M.init(jax.random.PRNGKey(0), cfg)
+        toks = _tokens(cfg)
+        a = M.forward(params, statics, cfg, toks)
+        b = M.forward(params, statics, cfg_p, toks)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-5)
+
+
+class TestSketchLayers:
+    def test_net_output_shape(self):
+        net = sketch_net_init(jax.random.PRNGKey(0), 16, 8)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 10, 16))
+        y = sketch_net_apply(net, x)
+        assert y.shape == (4, 10, 8)
+
+    @pytest.mark.parametrize("p", [2, 4, 8])
+    def test_nets_per_degree(self, p):
+        nets = learnable_sketch_init(jax.random.PRNGKey(0), 16, 8, p)
+        assert len(nets) == max(p - 2, 0)
+
+    def test_half_sketch_bounded_by_tanh(self):
+        # Output of the learnable half sketch is within +-sqrt(r).
+        r, p = 8, 4
+        nets = learnable_sketch_init(jax.random.PRNGKey(0), 16, r, p)
+        x = 10.0 * jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+        y = np.asarray(learnable_half_sketch(nets, x, r, p))
+        assert np.all(np.abs(y) <= np.sqrt(r) + 1e-5)
+
+    def test_param_count_formula(self):
+        # ~ (p-2) * (8hr + 24r^2) weights, Appendix D.
+        h, r, p = 64, 32, 4
+        weights_only = (p - 2) * (8 * h * r + 24 * r * r)
+        got = param_count(h, r, p)
+        assert weights_only <= got <= weights_only + (p - 2) * (18 * r + 2 * r)
+
+
+class TestTrain:
+    def test_loss_decreases(self):
+        cfg = _cfg(attn="polysketch", degree=4, sketch_size=8,
+                   sketch_mode="learned", local_exact=True)
+        tc = T.TrainConfig(peak_lr=3e-3, warmup_steps=2, total_steps=60)
+        params, statics = M.init(jax.random.PRNGKey(0), cfg)
+        opt = T.init_opt_state(params)
+        step = jax.jit(T.make_train_step(cfg, tc))
+        toks = _tokens(cfg, batch=4, extra=1)   # overfit one batch
+        losses = []
+        for _ in range(30):
+            params, opt, loss = step(params, statics, opt, toks)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.5, losses
+
+    def test_lr_schedule_shape(self):
+        tc = T.TrainConfig(peak_lr=1.0, warmup_steps=10, total_steps=100)
+        lrs = [float(T.lr_at(tc, jnp.asarray(s))) for s in (0, 5, 10, 55, 100)]
+        assert lrs[0] == 0.0
+        assert abs(lrs[1] - 0.5) < 1e-6
+        assert abs(lrs[2] - 1.0) < 1e-6
+        assert 0.0 < lrs[3] < 1.0
+        assert lrs[4] == 0.0
+
+    def test_grad_clip_bounds_update(self):
+        tc = T.TrainConfig(grad_clip=1e-9)   # essentially freeze
+        params = {"w": jnp.ones((4,))}
+        grads = {"w": 1e6 * jnp.ones((4,))}
+        opt = T.init_opt_state(params)
+        new_p, _ = T.adam_update(tc, params, grads, opt)
+        assert float(jnp.max(jnp.abs(new_p["w"] - params["w"]))) < 1e-3
+
+
+class TestFlatTheta:
+    def test_pack_unpack_roundtrip(self):
+        cfg = MECHS[2]
+        params, _ = M.init(jax.random.PRNGKey(0), cfg)
+        theta = aot.pack(params)
+        unpack = aot.make_unpack(params)
+        back = unpack(theta)
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_flatten_spec_offsets_contiguous(self):
+        cfg = MECHS[0]
+        params, _ = M.init(jax.random.PRNGKey(0), cfg)
+        spec, total = aot.flatten_spec(params)
+        off = 0
+        for name, shape, o in spec:
+            assert o == off
+            size = 1
+            for d in shape:
+                size *= d
+            off += size
+        assert off == total
+
+    def test_forward_via_flat_theta_matches(self):
+        cfg = MECHS[0]
+        params, statics = M.init(jax.random.PRNGKey(0), cfg)
+        theta = aot.pack(params)
+        unpack = aot.make_unpack(params)
+        toks = _tokens(cfg)
+        a = M.forward(params, statics, cfg, toks)
+        b = M.forward(unpack(theta), statics, cfg, toks)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

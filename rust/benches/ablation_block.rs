@@ -1,0 +1,77 @@
+//! Ablation — block size b for the block lower-triangular multiplication
+//! (Section 3.1; the paper uses b = 1024 and discusses the O(nb(m+k)) /
+//! sequential-steps trade).
+//!
+//! Sweeps b at fixed context length and reports polysketch attention
+//! latency plus the number of sequential prefix steps t = n/b.  Also
+//! verifies the output is invariant in b (same math, different schedule).
+//!
+//! Expected shape: a U-curve — tiny b pays prefix-update overhead (many
+//! sequential steps), huge b pays the O(b²) in-block cost; the paper's
+//! choice sits at the flat bottom.
+
+use polysketchformer::attn::{Attention, Mechanism};
+use polysketchformer::bench::{banner, time_fn, Mode, Table};
+use polysketchformer::tensor::Tensor;
+use polysketchformer::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let mode = Mode::from_env();
+    banner("ablation_block", "Section 3.1 block-size trade (paper b=1024)", mode);
+    let n = mode.pick(2048, 8192, 32768);
+    let iters = mode.pick(1, 2, 3);
+    let h = 32;
+    let blocks = [32usize, 64, 128, 256, 512, 1024, 2048];
+
+    let mut table = Table::new(
+        &format!("block-lt ablation — polysketch r=16 p=4 local, n={n}"),
+        "b",
+        vec!["ms".into(), "us/token".into(), "prefix steps".into()],
+    );
+
+    let mut rng = Pcg::seeded(0);
+    let q = Tensor::gaussian(&mut rng, &[n, h]);
+    let k = Tensor::gaussian(&mut rng, &[n, h]);
+    let v = Tensor::gaussian(&mut rng, &[n, h]);
+
+    // b-invariance: outputs at every block size must match a reference.
+    let reference = {
+        let mech = Mechanism::Polysketch { r: 16, p: 4, block: blocks[0], local: false };
+        Attention::new(&mech, h, &mut Pcg::seeded(42)).run(&q, &k, &v)
+    };
+
+    for &b in &blocks {
+        if b > n {
+            continue;
+        }
+        let mech = Mechanism::Polysketch { r: 16, p: 4, block: b, local: false };
+        let attn = Attention::new(&mech, h, &mut Pcg::seeded(42));
+        let out = attn.run(&q, &k, &v);
+        let max_dev = out
+            .data()
+            .iter()
+            .zip(reference.data())
+            .map(|(a, r)| (a - r).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_dev < 2e-2,
+            "block size must not change the math (b={b}, dev={max_dev})"
+        );
+
+        let t = time_fn(1, iters, || {
+            std::hint::black_box(attn.run(&q, &k, &v));
+        });
+        table.row(
+            &b.to_string(),
+            vec![
+                format!("{:.1}", t.mean_ms()),
+                format!("{:.2}", t.mean_us() / n as f64),
+                (n / b).to_string(),
+            ],
+        );
+        println!("b={b} done (max dev vs reference {max_dev:.2e})");
+    }
+    print!("{}", table.render());
+    println!("csv: {}", table.save_csv("ablation_block")?.display());
+    Ok(())
+}

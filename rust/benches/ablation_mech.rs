@@ -1,0 +1,73 @@
+//! Ablation — polysketch design choices: random vs learned sketches
+//! (Section 2.3), ± local exact attention (Section 3.2), sketch size r.
+//!
+//! The paper's Tables 2-3 separate these axes; the consistent findings are
+//! (i) learned sketches beat random, (ii) local exact attention helps both,
+//! (iii) r=64 beats r=32, and (iv) learned+local matches softmax.  This
+//! bench trains the artifact family at ctx 256 under an identical budget
+//! and reports test perplexity per variant next to the softmax anchor.
+
+use polysketchformer::bench::{banner, Mode, Table};
+use polysketchformer::coordinator::{Trainer, TrainerConfig};
+use polysketchformer::data::{self, batcher::Batcher, corpus::Flavor};
+use polysketchformer::runtime::{self, LoadOpts};
+
+fn main() -> anyhow::Result<()> {
+    let mode = Mode::from_env();
+    banner("ablation_mech", "Tables 2-3 polysketch variant columns", mode);
+    let steps = mode.pick(6, 50, 600);
+    let corpus_bytes = mode.pick(400_000, 3_000_000, 8_000_000);
+
+    let variants: &[(&str, &str)] = &[
+        ("softmax (anchor)", "softmax_v512_d128_l4_h4x32_c256"),
+        ("psk learned+local r16", "psk4_r16_learned_local_v512_d128_l4_h4x32_c256"),
+        ("psk learned r16 (no local)", "psk4_r16_learned_v512_d128_l4_h4x32_c256"),
+        ("psk random+local r16", "psk4_r16_random_local_v512_d128_l4_h4x32_c256"),
+        ("psk learned+local r8", "psk4_r8_learned_local_v512_d128_l4_h4x32_c256"),
+    ];
+    let variants = if mode == Mode::Smoke { &variants[..2] } else { variants };
+
+    let mut table = Table::new(
+        &format!("polysketch ablation — books corpus ppl after {steps} steps (ctx 256)"),
+        "variant",
+        vec!["test ppl".into(), "final train loss".into()],
+    );
+
+    for (label, name) in variants {
+        let mut model = match runtime::load_model(
+            name,
+            LoadOpts { train: true, evalloss: true, fwd: false, grads: false },
+        ) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("  [skip {name}: {e}]");
+                table.row(label, vec!["-".into(), "-".into()]);
+                continue;
+            }
+        };
+        let ds = data::load_corpus_tokens(Flavor::Books, corpus_bytes, model.vocab(), 0, None)?;
+        let train = Batcher::new(&ds.train, model.batch(), model.ctx() + 1, 0);
+        let test = Batcher::new(&ds.test, model.batch(), model.ctx() + 1, 0);
+        let cfg = TrainerConfig {
+            steps,
+            eval_every: 0,
+            eval_batches: 8,
+            ckpt_every: 0,
+            echo_every: 0,
+            run_dir: None,
+            nan_guard: true,
+        };
+        let summary = Trainer::new(&mut model, train, Some(test), cfg).run()?;
+        table.row(
+            label,
+            vec![
+                format!("{:.2}", summary.final_perplexity()),
+                format!("{:.3}", summary.final_loss),
+            ],
+        );
+        println!("{label} done");
+    }
+    print!("{}", table.render());
+    println!("csv: {}", table.save_csv("ablation_mech")?.display());
+    Ok(())
+}

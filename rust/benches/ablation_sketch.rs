@@ -1,0 +1,102 @@
+//! Ablation — sketch size r (Theorem 1.1 / Section 2.2 empirically).
+//!
+//! Sweeps r over {8, 16, 32, 64, 128} and reports, for the non-negative
+//! polysketch feature map φ'(x) = ((x^{⊗p/2})ᵀS)^{⊗2}:
+//!
+//!   * relative AMM error ‖φ'(Q)φ'(K)ᵀ − (QKᵀ)^p‖_F / (‖Q^⊗p‖_F ‖K^⊗p‖_F)
+//!     — Theorem 1.1 predicts ~ sqrt(p/r) decay;
+//!   * min attention weight (must be >= 0: the non-negativity guarantee);
+//!   * attention latency vs r (the quality/speed dial, Tables 2-4).
+//!
+//! Expected shape: error halves roughly per 4x r; min weight never negative;
+//! latency grows ~r (the r² feature dim never materializes per block).
+
+use polysketchformer::attn::sketch::PolySketch;
+use polysketchformer::attn::{Attention, Mechanism};
+use polysketchformer::bench::{banner, time_fn, Mode, Table};
+use polysketchformer::tensor::{layernorm_rows, Tensor};
+use polysketchformer::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let mode = Mode::from_env();
+    banner("ablation_sketch", "sketch-size ablation (Thm 1.1, Tables 2-4 r dial)", mode);
+    let n = mode.pick(128, 512, 1024);
+    let latency_n = mode.pick(1024, 4096, 16384);
+    let trials = mode.pick(1, 3, 5);
+    let h = 32;
+    let p = 4u32;
+    let rs = [8usize, 16, 32, 64, 128];
+
+    let mut table = Table::new(
+        &format!("sketch-size ablation — degree {p}, head_dim {h}, n {n}"),
+        "r",
+        vec![
+            "rel AMM err".into(),
+            "min weight".into(),
+            format!("attn ms (n={latency_n})"),
+        ],
+    );
+
+    let mut rng = Pcg::seeded(0);
+    let q = layernorm_rows(&Tensor::gaussian(&mut rng, &[n, h]));
+    let k = layernorm_rows(&Tensor::gaussian(&mut rng, &[n, h]));
+
+    // Exact (QK^T)^p and the Frobenius normalizer ||Q^{(x)p}|| ||K^{(x)p}||
+    // (= product of row-norm^p sums, no h^p materialization needed).
+    let qk = q.matmul_t(&k);
+    let mut exact = qk.clone();
+    for x in exact.data_mut() {
+        *x = x.powi(p as i32);
+    }
+    let normalizer = frob_pow(&q, p) * frob_pow(&k, p);
+
+    for &r in &rs {
+        let mut err_sum = 0.0f64;
+        let mut min_w = f64::INFINITY;
+        for t in 0..trials {
+            let sk = PolySketch::sample(&mut Pcg::seeded(100 + t as u64), h, r, p as usize);
+            let phi_q = sk.nonnegative(&q);
+            let phi_k = sk.nonnegative(&k);
+            let approx = phi_q.matmul_t(&phi_k);
+            let mut err = 0.0f64;
+            for (a, e) in approx.data().iter().zip(exact.data()) {
+                err += ((a - e) as f64).powi(2);
+                min_w = min_w.min(*a as f64);
+            }
+            err_sum += err.sqrt() / normalizer;
+        }
+        let rel_err = err_sum / trials as f64;
+
+        let mech = Mechanism::Polysketch { r, p, block: 256, local: true };
+        let attn = Attention::new(&mech, h, &mut rng);
+        let ql = Tensor::gaussian(&mut rng, &[latency_n, h]);
+        let kl = Tensor::gaussian(&mut rng, &[latency_n, h]);
+        let vl = Tensor::gaussian(&mut rng, &[latency_n, h]);
+        let timing = time_fn(1, 2, || {
+            std::hint::black_box(attn.run(&ql, &kl, &vl));
+        });
+
+        table.row(
+            &r.to_string(),
+            vec![
+                format!("{rel_err:.4}"),
+                format!("{min_w:.2e}"),
+                format!("{:.1}", timing.mean_ms()),
+            ],
+        );
+        println!("r={r} done");
+    }
+    print!("{}", table.render());
+    println!("csv: {}", table.save_csv("ablation_sketch")?.display());
+    Ok(())
+}
+
+/// ||A^{(x)p}||_F = sqrt(sum_i ||a_i||^{2p}).
+fn frob_pow(a: &Tensor, p: u32) -> f64 {
+    let mut total = 0.0f64;
+    for i in 0..a.rows() {
+        let norm2: f64 = a.row(i).iter().map(|&x| (x as f64) * (x as f64)).sum();
+        total += norm2.powi(p as i32);
+    }
+    total.sqrt()
+}

@@ -1,0 +1,98 @@
+//! Figure 2 / Tables 2–3 — pre-training perplexity per attention mechanism
+//! across context lengths, on PG19-like and Wiki-40B-like corpora.
+//!
+//! The paper trains GPT-2-small models for 125k steps with 1M-token batches
+//! at ctx 512..32k and reports test perplexity per mechanism.  Scaled to
+//! this testbed: the artifact family (ctx 64/128/256, fixed 2048-token
+//! budget per step) trained for a budget-matched number of steps on the
+//! synthetic corpora, same tokenizer and eval protocol per column.
+//!
+//! Expected shape (paper): poly(p>=4) ≈ softmax; polysketch learned+local
+//! matches or beats softmax; random-sketch and performer trail; ppl
+//! improves with context.
+
+use polysketchformer::bench::{banner, Mode, Table};
+use polysketchformer::coordinator::{Trainer, TrainerConfig};
+use polysketchformer::data::{self, batcher::Batcher, corpus::Flavor};
+use polysketchformer::runtime::{self, LoadOpts};
+
+fn main() -> anyhow::Result<()> {
+    let mode = Mode::from_env();
+    banner("fig2_perplexity", "Figure 2, Tables 2 and 3", mode);
+    let steps = mode.pick(6, 50, 600);
+    let corpus_bytes = mode.pick(400_000, 3_000_000, 8_000_000);
+
+    // (row label, artifact prefix)
+    // (random-sketch and r ablations live in ablation_mech.)
+    let mechs: &[(&str, &str)] = &[
+        ("softmax", "softmax"),
+        ("poly (p=4)", "poly4"),
+        ("psk learned+local r16", "psk4_r16_learned_local"),
+        ("performer (64 feat)", "performer64"),
+    ];
+    let mechs = if mode == Mode::Smoke { &mechs[..2] } else { mechs };
+    let ctxs: &[usize] = match mode {
+        Mode::Smoke => &[64],
+        Mode::Quick => &[64, 128],
+        Mode::Full => &[64, 128, 256],
+    };
+
+    for flavor in [Flavor::Books, Flavor::Wiki] {
+        let mut table = Table::new(
+            &format!(
+                "Fig 2 / Table {} analog — test perplexity on {} corpus ({} steps, 2048 tok/step)",
+                if flavor == Flavor::Books { "2 (PG19)" } else { "3 (Wiki-40B)" },
+                flavor.label(),
+                steps,
+            ),
+            "mechanism",
+            ctxs.iter().map(|c| c.to_string()).collect(),
+        );
+
+        for (label, prefix) in mechs {
+            let mut cells = Vec::new();
+            for &ctx in ctxs {
+                let name = format!("{prefix}_v512_d128_l4_h4x32_c{ctx}");
+                match train_and_eval(&name, flavor, steps, corpus_bytes) {
+                    Ok(ppl) => cells.push(format!("{ppl:.2}")),
+                    Err(e) => {
+                        eprintln!("  [skip {name}: {e}]");
+                        cells.push("-".into());
+                    }
+                }
+            }
+            table.row(label, cells);
+            println!("{label} done");
+        }
+        print!("{}", table.render());
+        let path = table.save_csv(&format!("fig2_ppl_{}", flavor.label()))?;
+        println!("csv: {}\n", path.display());
+    }
+    Ok(())
+}
+
+fn train_and_eval(
+    name: &str,
+    flavor: Flavor,
+    steps: u64,
+    corpus_bytes: usize,
+) -> anyhow::Result<f64> {
+    let mut model = runtime::load_model(
+        name,
+        LoadOpts { train: true, evalloss: true, fwd: false, grads: false },
+    )?;
+    let ds = data::load_corpus_tokens(flavor, corpus_bytes, model.vocab(), 0, None)?;
+    let train = Batcher::new(&ds.train, model.batch(), model.ctx() + 1, 0);
+    let test = Batcher::new(&ds.test, model.batch(), model.ctx() + 1, 0);
+    let cfg = TrainerConfig {
+        steps,
+        eval_every: 0,
+        eval_batches: 8,
+        ckpt_every: 0,
+        echo_every: 0,
+        run_dir: None,
+        nan_guard: true,
+    };
+    let summary = Trainer::new(&mut model, train, Some(test), cfg).run()?;
+    Ok(summary.final_perplexity())
+}

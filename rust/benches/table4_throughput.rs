@@ -1,0 +1,119 @@
+//! Table 4 — training steps/sec per attention mechanism vs context length
+//! (higher is faster), at a fixed token budget per step.
+//!
+//! The paper's Table 4 shows linear transformers (Polysketch, Performer +
+//! fast lower-triangular multiplication) hold nearly constant steps/sec as
+//! context grows while quadratic mechanisms decay and OOM past 8k.
+//!
+//! Two parts, mirroring fig1_latency but reported in the paper's units:
+//!   1. AOT fused train steps/sec across the artifact ctx family;
+//!   2. native-kernel "attention steps/sec" out to 32k — one attention
+//!      layer over a fixed 32k-token budget (batch*n constant), isolating
+//!      the mechanism cost the table attributes the decay to.
+
+use polysketchformer::attn::{Attention, Mechanism};
+use polysketchformer::bench::{banner, time_fn, Mode, Table};
+use polysketchformer::data::random_tokens;
+use polysketchformer::runtime::{self, LoadOpts};
+use polysketchformer::tensor::Tensor;
+use polysketchformer::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let mode = Mode::from_env();
+    banner("table4_throughput", "Table 4 (training steps/sec)", mode);
+    aot_part(mode)?;
+    native_part(mode)?;
+    Ok(())
+}
+
+fn aot_part(mode: Mode) -> anyhow::Result<()> {
+    let iters = mode.pick(2, 4, 8);
+    let mechs = [
+        ("softmax", "softmax"),
+        ("poly4", "poly4"),
+        ("psk learned+local r16", "psk4_r16_learned_local"),
+        ("psk random+local r16", "psk4_r16_random_local"),
+        ("performer64", "performer64"),
+    ];
+    let ctxs = [64usize, 128, 256];
+    let mut table = Table::new(
+        "Table 4 analog — AOT train steps/sec (fixed 2048 tok/step)",
+        "mechanism",
+        ctxs.iter().map(|c| c.to_string()).collect(),
+    );
+    for (label, prefix) in mechs {
+        let mut cells = Vec::new();
+        for ctx in ctxs {
+            let name = format!("{prefix}_v512_d128_l4_h4x32_c{ctx}");
+            let mut model = match runtime::load_model(&name, LoadOpts::train_only()) {
+                Ok(m) => m,
+                Err(_) => {
+                    cells.push("-".into());
+                    continue;
+                }
+            };
+            let tokens = random_tokens(model.batch() * (model.ctx() + 1), model.vocab(), 0)
+                .into_iter()
+                .map(|t| t as i32)
+                .collect::<Vec<_>>();
+            let t = time_fn(1, iters, || {
+                model.train_step(&tokens).expect("train step");
+            });
+            cells.push(format!("{:.2}", 1.0 / t.mean_s));
+        }
+        table.row(label, cells);
+    }
+    print!("{}", table.render());
+    println!("csv: {}\n", table.save_csv("table4_aot_steps_per_sec")?.display());
+    Ok(())
+}
+
+fn native_part(mode: Mode) -> anyhow::Result<()> {
+    let max_ctx = mode.pick(2048, 16384, 32768);
+    let budget = max_ctx.max(8192); // tokens per "step"
+    let head_dim = 32;
+    let mechanisms = [
+        Mechanism::Flash { block: 256 },
+        Mechanism::Flash { block: 512 },
+        Mechanism::Poly { p: 4 },
+        Mechanism::Polysketch { r: 16, p: 4, block: 256, local: true },
+        Mechanism::Polysketch { r: 32, p: 4, block: 256, local: true },
+        Mechanism::Performer { m: 64, block: 256 },
+    ];
+    let mut ctxs = Vec::new();
+    let mut c = 512usize;
+    while c <= max_ctx {
+        ctxs.push(c);
+        c *= 2;
+    }
+    let mut table = Table::new(
+        &format!("Table 4 analog — native attention steps/sec ({budget}-token budget)"),
+        "mechanism",
+        ctxs.iter().map(|c| c.to_string()).collect(),
+    );
+    let mut rng = Pcg::seeded(0);
+    for mech in &mechanisms {
+        let attn = Attention::new(mech, head_dim, &mut rng);
+        let mut cells = Vec::new();
+        for &n in &ctxs {
+            if !mech.is_linear() && n > 16384 {
+                cells.push("OOM".into());
+                continue;
+            }
+            let reps = (budget / n).max(1);
+            let q = Tensor::gaussian(&mut rng, &[n, head_dim]);
+            let k = Tensor::gaussian(&mut rng, &[n, head_dim]);
+            let v = Tensor::gaussian(&mut rng, &[n, head_dim]);
+            let t = time_fn(0, 1, || {
+                for _ in 0..reps {
+                    std::hint::black_box(attn.run(&q, &k, &v));
+                }
+            });
+            cells.push(format!("{:.2}", 1.0 / t.mean_s));
+        }
+        table.row(&mech.label(), cells);
+    }
+    print!("{}", table.render());
+    println!("csv: {}", table.save_csv("table4_native_steps_per_sec")?.display());
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Table 5 / Figure 5 — Selective Copying accuracy per attention mechanism.
+//!
+//! The paper trains 2-layer models (8 heads x 16) on the selective copying
+//! task at ctx 4k/16k/32k and reports exact-match accuracy, observing a
+//! sudden accuracy jump during training (Figure 5).  Scaled here: the
+//! Appendix-F task artifacts at ctx 256, softmax vs poly(4) vs polysketch
+//! (learned + local), with the accuracy-over-steps curve printed per model.
+//!
+//! Expected shape (paper): all mechanisms learn the task to high accuracy
+//! at in-budget context lengths, with a visible sudden-learning jump.
+
+use polysketchformer::bench::{banner, Mode, Table};
+use polysketchformer::coordinator::{run_task, TaskRunnerConfig};
+use polysketchformer::runtime::{self, LoadOpts};
+use polysketchformer::tasks::selective_copy::SelectiveCopyTask;
+
+fn main() -> anyhow::Result<()> {
+    let mode = Mode::from_env();
+    banner("table5_selective_copy", "Table 5 + Figure 5 (accuracy curve)", mode);
+    let steps = mode.pick(10, 200, 2500);
+    let eval_examples = mode.pick(16, 64, 256);
+
+    let artifacts = [
+        ("softmax", "copy_softmax"),
+        ("poly (p=4)", "copy_poly4"),
+        ("psk learned+local r16", "copy_psk"),
+    ];
+
+    let mut table = Table::new(
+        &format!("Table 5 analog — selective copying exact-match % after {steps} steps (ctx 256)"),
+        "mechanism",
+        vec!["exact %".into(), "token %".into(), "steps to >50% token".into()],
+    );
+
+    for (label, name) in artifacts {
+        let mut model = match runtime::load_model(name, LoadOpts::default()) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("  [skip {name}: {e}]");
+                table.row(label, vec!["-".into(), "-".into()]);
+                continue;
+            }
+        };
+        let task = SelectiveCopyTask::standard(model.ctx());
+        let cfg = TaskRunnerConfig {
+            steps,
+            eval_every: (steps / 10).max(1),
+            eval_examples,
+            echo_every: 0,
+            seed: 0,
+            stop_at_accuracy: 0.995,
+        };
+        let summary = run_task(&mut model, &task, &cfg)?;
+
+        // Figure 5: the accuracy-vs-steps curve (sudden learning).
+        println!("\n{label} accuracy curve (Figure 5 analog):");
+        for &(step, acc) in &summary.curve {
+            println!(
+                "  step {step:>6}  exact {:>6.1}%  token {:>6.1}%",
+                acc.exact * 100.0,
+                acc.token * 100.0
+            );
+        }
+        let jump = summary
+            .curve
+            .iter()
+            .find(|&&(_, a)| a.token > 0.5)
+            .map(|&(s, _)| s.to_string())
+            .unwrap_or_else(|| "-".into());
+        table.row(
+            label,
+            vec![
+                format!("{:.1}", summary.final_accuracy.exact * 100.0),
+                format!("{:.1}", summary.final_accuracy.token * 100.0),
+                jump,
+            ],
+        );
+        println!("{label} done\n");
+    }
+    print!("{}", table.render());
+    println!("csv: {}", table.save_csv("table5_selective_copy")?.display());
+    Ok(())
+}

@@ -1,0 +1,353 @@
+//! Section 3.1/3.2: block-based lower-triangular multiplication.
+//!
+//! Computes lt(phi_q phi_k^T) [V | 1] in time linear in n: per block
+//! H_l = phi_k_l^T [V_l|1], exclusive prefix Z_l = sum_{j<l} H_j, diagonal
+//! P_l = lt(phi_q_l phi_k_l^T) [V_l|1], and row i of the result is
+//! P_l[i'] + phi_q_i Z_l.  The all-ones column riding with V produces the
+//! normalizer, so numerator and the paper's `1 +` denominator come out of
+//! one pass.
+//!
+//! This is the native (pure rust) twin of the Pallas kernel in
+//! python/compile/kernels/pallas/ — same math, used for property tests and
+//! for latency benches at context lengths (up to 32k) that the interpreted
+//! kernel cannot reach.
+
+use crate::attn::poly::powi;
+use crate::tensor::{axpy, dot, layernorm_rows, Tensor};
+
+/// Generic causal linear attention over explicit feature maps.
+///
+/// phi_q, phi_k: (n, f); v: (n, h). Returns (n, h).
+pub fn linear_attention_block(phi_q: &Tensor, phi_k: &Tensor, v: &Tensor,
+                              block: usize) -> Tensor {
+    let (n, f) = (phi_q.rows(), phi_q.cols());
+    let h = v.cols();
+    assert_eq!(phi_k.rows(), n);
+    assert_eq!(v.rows(), n);
+    assert!(n % block == 0, "n={n} % block={block} != 0");
+    let hc = h + 1;
+    let nb = n / block;
+
+    let mut out = Tensor::zeros(&[n, h]);
+    let mut z = vec![0.0f32; f * hc];           // prefix state Z
+    let mut scores = vec![0.0f32; block * block];
+    let mut pl = vec![0.0f32; block * hc];      // P_l + A_l Z_l
+
+    for l in 0..nb {
+        let base = l * block;
+        // diagonal scores lt(phi_q_l phi_k_l^T)
+        for bi in 0..block {
+            let qi = phi_q.row(base + bi);
+            let srow = &mut scores[bi * block..(bi + 1) * block];
+            for bj in 0..=bi {
+                srow[bj] = dot(qi, phi_k.row(base + bj));
+            }
+        }
+        // pl = phi_q_l Z  (prefix contribution)
+        matmul_into_rows(phi_q, base, block, &z, f, hc, &mut pl);
+        // pl += lt(scores) [V_l | 1]
+        for bi in 0..block {
+            let prow = &mut pl[bi * hc..(bi + 1) * hc];
+            let srow = &scores[bi * block..(bi + 1) * block];
+            for bj in 0..=bi {
+                let w = srow[bj];
+                axpy(&mut prow[..h], v.row(base + bj), w);
+                prow[h] += w;
+            }
+        }
+        // emit normalized rows
+        for bi in 0..block {
+            let prow = &pl[bi * hc..(bi + 1) * hc];
+            let inv = 1.0 / (1.0 + prow[h]);
+            let orow = out.row_mut(base + bi);
+            for c in 0..h {
+                orow[c] = prow[c] * inv;
+            }
+        }
+        // Z += phi_k_l^T [V_l | 1]
+        for bj in 0..block {
+            let krow = phi_k.row(base + bj);
+            let vrow = v.row(base + bj);
+            for (c, &kc) in krow.iter().enumerate() {
+                if kc == 0.0 {
+                    continue;
+                }
+                let zrow = &mut z[c * hc..(c + 1) * hc];
+                axpy(&mut zrow[..h], vrow, kc);
+                zrow[h] += kc;
+            }
+        }
+    }
+    out
+}
+
+/// pl = phi[base..base+block] @ z  where z is (f, hc) row-major.
+fn matmul_into_rows(phi: &Tensor, base: usize, block: usize, z: &[f32],
+                    f: usize, hc: usize, pl: &mut [f32]) {
+    pl.fill(0.0);
+    for bi in 0..block {
+        let prow = &mut pl[bi * hc..(bi + 1) * hc];
+        let qrow = phi.row(base + bi);
+        for c in 0..f {
+            let qv = qrow[c];
+            if qv == 0.0 {
+                continue;
+            }
+            axpy(prow, &z[c * hc..(c + 1) * hc], qv);
+        }
+    }
+}
+
+/// Local-exact configuration for [`polysketch_attention_block`].
+pub struct LocalExact<'a> {
+    /// Raw queries/keys (n, h) — layer norm applied inside.
+    pub q: &'a Tensor,
+    pub k: &'a Tensor,
+    /// Polynomial degree p.
+    pub p: u32,
+}
+
+/// Polysketch attention over half sketches L, R (n, rs).
+///
+/// Implicit features are the row self-tensors (rs^2-dim); the diagonal
+/// block uses (L_l R_l^T)^2 — Section 3.1's O(b^2 rs) trick — or, with
+/// `local`, the exact polynomial weights (Q_l K_l^T)^p of Section 3.2.
+pub fn polysketch_attention_block(lh: &Tensor, rh: &Tensor, v: &Tensor,
+                                  block: usize,
+                                  local: Option<LocalExact>) -> Tensor {
+    let (n, rs) = (lh.rows(), lh.cols());
+    let h = v.cols();
+    assert_eq!(rh.rows(), n);
+    assert!(n % block == 0, "n={n} % block={block} != 0");
+    let f = rs * rs;
+    let hc = h + 1;
+    let nb = n / block;
+
+    let (qn, kn) = match &local {
+        Some(le) => (Some(layernorm_rows(le.q)), Some(layernorm_rows(le.k))),
+        None => (None, None),
+    };
+
+    let mut out = Tensor::zeros(&[n, h]);
+    let mut z = vec![0.0f32; f * hc];
+    let mut scores = vec![0.0f32; block * block];
+    let mut pl = vec![0.0f32; block * hc];
+    let mut phi_row = vec![0.0f32; f];
+
+    for l in 0..nb {
+        let base = l * block;
+        // Diagonal block scores.
+        match &local {
+            Some(le) => {
+                let (qn, kn) = (qn.as_ref().unwrap(), kn.as_ref().unwrap());
+                for bi in 0..block {
+                    let qi = qn.row(base + bi);
+                    let srow = &mut scores[bi * block..(bi + 1) * block];
+                    for bj in 0..=bi {
+                        srow[bj] = powi(dot(qi, kn.row(base + bj)), le.p);
+                    }
+                }
+            }
+            None => {
+                for bi in 0..block {
+                    let li = lh.row(base + bi);
+                    let srow = &mut scores[bi * block..(bi + 1) * block];
+                    for bj in 0..=bi {
+                        let s = dot(li, rh.row(base + bj));
+                        srow[bj] = s * s; // (L R^T)^2: phi' never materialized
+                    }
+                }
+            }
+        }
+        // Prefix contribution: phi_q_i Z with phi_q_i = l_i (x) l_i,
+        // computed row-by-row into a scratch feature vector.
+        for bi in 0..block {
+            self_tensor_row(lh.row(base + bi), &mut phi_row);
+            let prow = &mut pl[bi * hc..(bi + 1) * hc];
+            prow.fill(0.0);
+            for (c, &qv) in phi_row.iter().enumerate() {
+                if qv == 0.0 {
+                    continue;
+                }
+                axpy(prow, &z[c * hc..(c + 1) * hc], qv);
+            }
+        }
+        // Diagonal contribution + emit.
+        for bi in 0..block {
+            let prow = &mut pl[bi * hc..(bi + 1) * hc];
+            let srow = &scores[bi * block..(bi + 1) * block];
+            for bj in 0..=bi {
+                let w = srow[bj];
+                axpy(&mut prow[..h], v.row(base + bj), w);
+                prow[h] += w;
+            }
+            let inv = 1.0 / (1.0 + prow[h]);
+            let orow = out.row_mut(base + bi);
+            for c in 0..h {
+                orow[c] = prow[c] * inv;
+            }
+        }
+        // Z += phi_k_l^T [V_l | 1].
+        for bj in 0..block {
+            self_tensor_row(rh.row(base + bj), &mut phi_row);
+            let vrow = v.row(base + bj);
+            for (c, &kc) in phi_row.iter().enumerate() {
+                if kc == 0.0 {
+                    continue;
+                }
+                let zrow = &mut z[c * hc..(c + 1) * hc];
+                axpy(&mut zrow[..h], vrow, kc);
+                zrow[h] += kc;
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+fn self_tensor_row(l: &[f32], out: &mut [f32]) {
+    let r = l.len();
+    debug_assert_eq!(out.len(), r * r);
+    for a in 0..r {
+        let la = l[a];
+        let orow = &mut out[a * r..(a + 1) * r];
+        for b in 0..r {
+            orow[b] = la * l[b];
+        }
+    }
+}
+
+/// Naive lt(A B^T) C — oracle for the block algorithm's tests/benches.
+pub fn lt_mult_naive(a: &Tensor, b: &Tensor, c: &Tensor) -> Tensor {
+    let n = a.rows();
+    let mut out = Tensor::zeros(&[n, c.cols()]);
+    for i in 0..n {
+        let ar = a.row(i);
+        let orow = out.row_mut(i);
+        for j in 0..=i {
+            axpy(orow, c.row(j), dot(ar, b.row(j)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::sketch::self_tensor_rows;
+    use crate::attn::poly::poly_attention;
+    use crate::attn::sketch::PolySketch;
+    use crate::util::rng::Pcg;
+
+    fn naive_linear(pq: &Tensor, pk: &Tensor, v: &Tensor) -> Tensor {
+        let n = pq.rows();
+        let h = v.cols();
+        let mut out = Tensor::zeros(&[n, h]);
+        for i in 0..n {
+            let mut denom = 1.0;
+            let orow = out.row_mut(i);
+            for j in 0..=i {
+                let w = dot(pq.row(i), pk.row(j));
+                denom += w;
+                axpy(orow, v.row(j), w);
+            }
+            for o in orow.iter_mut() {
+                *o /= denom;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn generic_block_matches_naive() {
+        let mut rng = Pcg::seeded(0);
+        let (n, f, h) = (48, 6, 5);
+        let pq = Tensor::gaussian(&mut rng, &[n, f]).map(f32::abs);
+        let pk = Tensor::gaussian(&mut rng, &[n, f]).map(f32::abs);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        let want = naive_linear(&pq, &pk, &v);
+        for block in [4, 8, 16, 48] {
+            let got = linear_attention_block(&pq, &pk, &v, block);
+            assert!(got.max_abs_diff(&want) < 1e-4, "block {block}");
+        }
+    }
+
+    #[test]
+    fn polysketch_block_matches_self_tensored_generic() {
+        let mut rng = Pcg::seeded(1);
+        let (n, h, rs) = (32, 8, 4);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        let sk = PolySketch::sample(&mut rng, h, rs, 4);
+        let lh = sk.half(&layernorm_rows(&q));
+        let rh = sk.half(&layernorm_rows(&k));
+        let got = polysketch_attention_block(&lh, &rh, &v, 8, None);
+        let want = linear_attention_block(&self_tensor_rows(&lh),
+                                          &self_tensor_rows(&rh), &v, 8);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn local_exact_single_block_equals_exact_poly() {
+        // With one block covering the whole sequence, local-exact polysketch
+        // degenerates to exact polynomial attention.
+        let mut rng = Pcg::seeded(2);
+        let (n, h, rs) = (16, 8, 4);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        let sk = PolySketch::sample(&mut rng, h, rs, 4);
+        let lh = sk.half(&layernorm_rows(&q));
+        let rh = sk.half(&layernorm_rows(&k));
+        let got = polysketch_attention_block(
+            &lh, &rh, &v, n, Some(LocalExact { q: &q, k: &k, p: 4 }));
+        let want = poly_attention(&q, &k, &v, 4);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn lt_mult_block_decomposition() {
+        let mut rng = Pcg::seeded(3);
+        let (n, f, h) = (24, 5, 3);
+        let a = Tensor::gaussian(&mut rng, &[n, f]);
+        let b = Tensor::gaussian(&mut rng, &[n, f]);
+        let c = Tensor::gaussian(&mut rng, &[n, h]);
+        // Check the un-normalized identity via the generic path by removing
+        // normalization: compare numerators through one-hot value probes.
+        let want = lt_mult_naive(&a, &b, &c);
+        // Reconstruct numerator from linear_attention_block by multiplying
+        // back the denominator obtained with an all-ones value column.
+        let got_norm = linear_attention_block(&a, &b, &c, 8);
+        let ones = Tensor::ones(&[n, 1]);
+        let den = lt_mult_naive(&a, &b, &ones);
+        let mut got = Tensor::zeros(&[n, h]);
+        for i in 0..n {
+            let d = 1.0 + den.at2(i, 0);
+            for j in 0..h {
+                got.set2(i, j, got_norm.at2(i, j) * d);
+            }
+        }
+        assert!(got.max_abs_diff(&want) < 2e-3);
+    }
+
+    #[test]
+    fn causality_of_block_algorithm() {
+        let mut rng = Pcg::seeded(4);
+        let (n, f, h) = (32, 4, 4);
+        let pq = Tensor::gaussian(&mut rng, &[n, f]).map(f32::abs);
+        let pk = Tensor::gaussian(&mut rng, &[n, f]).map(f32::abs);
+        let v1 = Tensor::gaussian(&mut rng, &[n, h]);
+        let mut v2 = v1.clone();
+        for j in 0..h {
+            v2.set2(n - 1, j, 7.0);
+        }
+        let a = linear_attention_block(&pq, &pk, &v1, 8);
+        let b = linear_attention_block(&pq, &pk, &v2, 8);
+        for i in 0..n - 1 {
+            for j in 0..h {
+                assert!((a.at2(i, j) - b.at2(i, j)).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Performer (FAVOR+) baseline: positive orthogonal random features.
+
+use crate::tensor::{dot, Tensor};
+use crate::util::rng::Pcg;
+use crate::attn::block_lt::linear_attention_block;
+
+/// Positive random-feature map for the exponential kernel.
+#[derive(Clone, Debug)]
+pub struct PerformerFeatures {
+    /// (h, m) projection matrix.
+    pub w: Tensor,
+}
+
+impl PerformerFeatures {
+    /// Sample `m` Gaussian features for dimension `h`; blocks of `h`
+    /// features are orthogonalized (Gram–Schmidt) then rescaled to the
+    /// expected Gaussian row norm — the "orthogonal random features" of
+    /// Choromanski et al. (2020).
+    pub fn sample(rng: &mut Pcg, h: usize, m: usize) -> Self {
+        let mut w = Tensor::zeros(&[h, m]);
+        let mut done = 0;
+        while done < m {
+            let take = (m - done).min(h);
+            // Draw h x h Gaussian, orthogonalize its first `take` columns.
+            let mut cols: Vec<Vec<f32>> = (0..take).map(|_| rng.gaussians(h)).collect();
+            for c in 0..take {
+                for prev in 0..c {
+                    let proj = dot(&cols[c], &cols[prev]);
+                    let prev_col = cols[prev].clone();
+                    for (x, p) in cols[c].iter_mut().zip(&prev_col) {
+                        *x -= proj * p;
+                    }
+                }
+                let norm = dot(&cols[c], &cols[c]).sqrt().max(1e-12);
+                // Rescale to chi(h)-distributed norm like an iid Gaussian row.
+                let target = chi_sample(rng, h);
+                for x in cols[c].iter_mut() {
+                    *x = *x / norm * target;
+                }
+            }
+            for (ci, col) in cols.iter().enumerate() {
+                for (row, &val) in col.iter().enumerate() {
+                    w.set2(row, done + ci, val);
+                }
+            }
+            done += take;
+        }
+        PerformerFeatures { w }
+    }
+
+    /// phi(x) = exp(w^T x - ||x||^2 / 2) / sqrt(m): (n, h) -> (n, m).
+    pub fn apply(&self, x: &Tensor) -> Tensor {
+        let (n, h) = (x.rows(), x.cols());
+        assert_eq!(h, self.w.rows());
+        let m = self.w.cols();
+        let proj = x.matmul(&self.w);
+        let mut out = Tensor::zeros(&[n, m]);
+        let scale = 1.0 / (m as f32).sqrt();
+        for i in 0..n {
+            let sq = 0.5 * dot(x.row(i), x.row(i));
+            let prow = proj.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..m {
+                orow[j] = (prow[j] - sq).exp() * scale;
+            }
+        }
+        out
+    }
+}
+
+fn chi_sample(rng: &mut Pcg, h: usize) -> f32 {
+    let s: f32 = (0..h).map(|_| {
+        let g = rng.gaussian();
+        g * g
+    }).sum();
+    s.sqrt()
+}
+
+/// Full Performer attention: features + block lt-multiplication.
+pub fn performer_attention(q: &Tensor, k: &Tensor, v: &Tensor,
+                           feats: &PerformerFeatures, block: usize) -> Tensor {
+    let pq = feats.apply(q);
+    let pk = feats.apply(k);
+    linear_attention_block(&pq, &pk, &v.clone(), block)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::softmax::softmax_attention;
+
+    #[test]
+    fn features_positive() {
+        let mut rng = Pcg::seeded(0);
+        let f = PerformerFeatures::sample(&mut rng, 8, 32);
+        let x = Tensor::gaussian(&mut rng, &[16, 8]);
+        for &v in f.apply(&x).data() {
+            assert!(v > 0.0);
+        }
+    }
+
+    #[test]
+    fn kernel_estimate_tracks_exponential() {
+        // <phi(x), phi(y)> estimates exp(<x,y>) for small-norm inputs.
+        let mut rng = Pcg::seeded(1);
+        let f = PerformerFeatures::sample(&mut rng, 8, 2048);
+        let x = Tensor::gaussian(&mut rng, &[6, 8]).scale(0.3);
+        let phi = f.apply(&x);
+        let approx = phi.matmul_t(&phi);
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = dot(x.row(i), x.row(j)).exp();
+                let got = approx.at2(i, j);
+                assert!((got - want).abs() / want < 0.35,
+                        "({i},{j}): got {got} want {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn approximates_unscaled_softmax_loosely() {
+        // With small inputs the Performer output should correlate with
+        // softmax attention output (scale=1 variant).
+        let mut rng = Pcg::seeded(2);
+        let (n, h) = (16, 8);
+        let q = Tensor::gaussian(&mut rng, &[n, h]).scale(0.3);
+        let k = Tensor::gaussian(&mut rng, &[n, h]).scale(0.3);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        let f = PerformerFeatures::sample(&mut rng, h, 1024);
+        let got = performer_attention(&q, &k, &v, &f, 8);
+        let want = softmax_attention(&q.clone().scale((h as f32).sqrt()), &k, &v);
+        // Correlation, not equality: performer has the 1+ denominator.
+        let mut num = 0.0f64;
+        let (mut da, mut db) = (0.0f64, 0.0f64);
+        for (a, b) in got.data().iter().zip(want.data()) {
+            num += (*a as f64) * (*b as f64);
+            da += (*a as f64).powi(2);
+            db += (*b as f64).powi(2);
+        }
+        let corr = num / (da.sqrt() * db.sqrt());
+        assert!(corr > 0.7, "corr {corr}");
+    }
+}

@@ -1,0 +1,130 @@
+//! Exact degree-p polynomial attention (Section 2.1) — quadratic baseline.
+
+use crate::tensor::{axpy, dot, layernorm_rows, Tensor};
+
+/// Raise to integer power by repeated squaring over f32.
+#[inline]
+pub fn powi(x: f32, p: u32) -> f32 {
+    let mut acc = 1.0f32;
+    let mut base = x;
+    let mut e = p;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc *= base;
+        }
+        base *= base;
+        e >>= 1;
+    }
+    acc
+}
+
+/// Causal degree-p polynomial attention with layer-normalized q/k and the
+/// paper's `1 +` denominator:
+///   out_i = sum_{j<=i} <q'_i,k'_j>^p v_j / (1 + sum_{j<=i} <q'_i,k'_j>^p).
+pub fn poly_attention(q: &Tensor, k: &Tensor, v: &Tensor, p: u32) -> Tensor {
+    assert!(p >= 2 && p % 2 == 0, "even p >= 2 required, got {p}");
+    let qn = layernorm_rows(q);
+    let kn = layernorm_rows(k);
+    poly_attention_prenormed(&qn, &kn, v, p)
+}
+
+/// Same but assumes q/k already normalized (hot path for block composition).
+pub fn poly_attention_prenormed(qn: &Tensor, kn: &Tensor, v: &Tensor, p: u32) -> Tensor {
+    let n = qn.rows();
+    let mut out = Tensor::zeros(&[n, v.cols()]);
+    for i in 0..n {
+        let qi = qn.row(i);
+        let mut denom = 1.0f32;
+        let orow = out.row_mut(i);
+        for j in 0..=i {
+            let w = powi(dot(qi, kn.row(j)), p);
+            denom += w;
+            axpy(orow, v.row(j), w);
+        }
+        let inv = 1.0 / denom;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn powi_matches_std() {
+        for p in [2u32, 4, 8] {
+            for x in [-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+                assert!((powi(x, p) - x.powi(p as i32)).abs() < 1e-5 * x.powi(p as i32).abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn weights_nonnegative_rows_below_one() {
+        let mut rng = Pcg::seeded(0);
+        let (n, h) = (16, 8);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let mut v = Tensor::zeros(&[n, 1]);
+        for i in 0..n {
+            v.set2(i, 0, 1.0);
+        }
+        let out = poly_attention(&q, &k, &v, 4);
+        for i in 0..n {
+            let w = out.at2(i, 0);
+            assert!(w >= 0.0 && w < 1.0, "row {i}: {w}");
+        }
+    }
+
+    #[test]
+    fn causality() {
+        let mut rng = Pcg::seeded(1);
+        let (n, h) = (16, 8);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let v1 = Tensor::gaussian(&mut rng, &[n, h]);
+        let mut v2 = v1.clone();
+        for j in 0..h {
+            v2.set2(n - 1, j, 99.0);
+        }
+        let a = poly_attention(&q, &k, &v1, 4);
+        let b = poly_attention(&q, &k, &v2, 4);
+        for i in 0..n - 1 {
+            for j in 0..h {
+                assert!((a.at2(i, j) - b.at2(i, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn higher_degree_concentrates() {
+        // p -> infinity approaches argmax attention (Section 2.1): the
+        // entropy of the weight distribution should not increase with p.
+        let mut rng = Pcg::seeded(2);
+        let (n, h) = (24, 8);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let mut v = Tensor::zeros(&[n, n]); // one-hot values expose weights
+        for i in 0..n {
+            v.set2(i, i, 1.0);
+        }
+        let ent = |t: &Tensor| -> f32 {
+            let row = t.row(n - 1);
+            let sum: f32 = row.iter().sum();
+            row.iter()
+                .filter(|&&w| w > 1e-12)
+                .map(|&w| {
+                    let p = w / sum;
+                    -p * p.ln()
+                })
+                .sum()
+        };
+        let e2 = ent(&poly_attention(&q, &k, &v, 2));
+        let e8 = ent(&poly_attention(&q, &k, &v, 8));
+        assert!(e8 <= e2 + 1e-4, "entropy grew: p2={e2} p8={e8}");
+    }
+}

@@ -1,0 +1,216 @@
+//! Native implementation of Algorithm 1 (polynomial sketches).
+//!
+//! Mirrors python/compile/kernels/sketch.py exactly: the same recursion,
+//! the same Gaussian-consumption order, the same sqrt(1/r) scaling —
+//! property tests in this module assert the paper's guarantees (Theorem 1.1
+//! non-negativity, AMM error decay with r).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+/// Number of Gaussian matrices PolySketchWithNegativity(., r, p) consumes:
+/// count(p) = 2 (p - 1); the non-negative map of degree p consumes p - 2.
+pub fn num_projections(p: usize) -> usize {
+    assert!(p.is_power_of_two(), "degree must be power of two, got {p}");
+    if p == 1 {
+        0
+    } else {
+        2 * num_projections(p / 2) + 2
+    }
+}
+
+/// Shapes of the Gaussian matrices in consumption order ((h,r) leaves,
+/// (r,r) above).
+pub fn projection_shapes(h: usize, r: usize, p: usize) -> Vec<(usize, usize)> {
+    assert!(p.is_power_of_two());
+    if p == 1 {
+        return vec![];
+    }
+    let sub = projection_shapes(h, r, p / 2);
+    let inner = if p == 2 { h } else { r };
+    let mut out = sub.clone();
+    out.extend(sub);
+    out.push((inner, r));
+    out.push((inner, r));
+    out
+}
+
+/// The sketch: Gaussian stack + sizes. Construct once, apply to Q and K —
+/// sharing the same instance between Q and K is required for correctness.
+#[derive(Clone, Debug)]
+pub struct PolySketch {
+    pub r: usize,
+    pub p: usize,
+    gs: Vec<Tensor>,
+}
+
+impl PolySketch {
+    /// Sample the projection stack for vectors of dim `h`, sketch size `r`,
+    /// kernel degree `p` (the recursion itself runs at degree p/2 — the
+    /// self-tensoring squares it back, Theorem 2.4).
+    pub fn sample(rng: &mut Pcg, h: usize, r: usize, p: usize) -> Self {
+        assert!(p >= 2 && p.is_power_of_two());
+        let gs = projection_shapes(h, r, p / 2)
+            .into_iter()
+            .map(|(a, b)| Tensor::gaussian(rng, &[a, b]))
+            .collect();
+        PolySketch { r, p, gs }
+    }
+
+    /// Half sketch L = PolySketchWithNegativity(A, r, p/2): (n, r).
+    /// The implicit non-negative feature map is the row-wise self-tensor.
+    pub fn half(&self, a: &Tensor) -> Tensor {
+        self.pswn(a, &self.gs, self.p / 2)
+    }
+
+    /// Full non-negative feature map phi'(A) = half(A)^{(x)2}: (n, r^2).
+    pub fn nonnegative(&self, a: &Tensor) -> Tensor {
+        self_tensor_rows(&self.half(a))
+    }
+
+    fn pswn(&self, a: &Tensor, gs: &[Tensor], d: usize) -> Tensor {
+        if d == 1 {
+            return a.clone();
+        }
+        let n_sub = num_projections(d / 2);
+        let m1 = self.pswn(a, &gs[..n_sub], d / 2);
+        let m2 = self.pswn(a, &gs[n_sub..2 * n_sub], d / 2);
+        let g1 = &gs[2 * n_sub];
+        let g2 = &gs[2 * n_sub + 1];
+        let prod = m1.matmul(g1).hadamard(&m2.matmul(g2));
+        prod.scale(1.0 / (self.r as f32).sqrt())
+    }
+}
+
+/// Row-wise self Kronecker product: (n, r) -> (n, r^2).
+pub fn self_tensor_rows(m: &Tensor) -> Tensor {
+    let (n, r) = (m.rows(), m.cols());
+    let mut out = Tensor::zeros(&[n, r * r]);
+    for i in 0..n {
+        let row = m.row(i);
+        let orow = out.row_mut(i);
+        for a in 0..r {
+            let ra = row[a];
+            for b in 0..r {
+                orow[a * r + b] = ra * row[b];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{dot, layernorm_rows};
+    use crate::attn::poly::powi;
+
+    fn unit_rows(rng: &mut Pcg, n: usize, h: usize) -> Tensor {
+        let mut t = Tensor::gaussian(rng, &[n, h]);
+        for i in 0..n {
+            let norm = dot(t.row(i), t.row(i)).sqrt();
+            for v in t.row_mut(i) {
+                *v /= norm;
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn projection_counts_match_python() {
+        assert_eq!(num_projections(1), 0);
+        assert_eq!(num_projections(2), 2);
+        assert_eq!(num_projections(4), 6);
+        assert_eq!(projection_shapes(8, 4, 2), vec![(8, 4), (8, 4)]);
+        assert_eq!(
+            projection_shapes(8, 4, 4),
+            vec![(8, 4), (8, 4), (8, 4), (8, 4), (4, 4), (4, 4)]
+        );
+    }
+
+    #[test]
+    fn nonnegativity_theorem_1_1() {
+        let mut rng = Pcg::seeded(0);
+        for p in [2usize, 4, 8] {
+            let sk = PolySketch::sample(&mut rng, 8, 8, p);
+            let q = Tensor::gaussian(&mut rng, &[24, 8]);
+            let k = Tensor::gaussian(&mut rng, &[24, 8]);
+            let pq = sk.nonnegative(&q);
+            let pk = sk.nonnegative(&k);
+            let w = pq.matmul_t(&pk);
+            for &x in w.data() {
+                assert!(x >= -1e-5, "negative sketched weight {x} at p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn approximates_polynomial_kernel() {
+        let mut rng = Pcg::seeded(1);
+        let x = unit_rows(&mut rng, 48, 8);
+        let sk = PolySketch::sample(&mut rng, 8, 32, 4);
+        let half = sk.half(&x);
+        let approx = {
+            let s = half.matmul_t(&half);
+            s.map(|v| v * v)
+        };
+        let exact = x.matmul_t(&x).map(|v| powi(v, 4));
+        // The guarantee is Frobenius/average (Definition 2.1), not
+        // entrywise — assert the RMSE, not the max deviation.
+        let rmse = {
+            let d: f32 = approx
+                .data()
+                .iter()
+                .zip(exact.data())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            (d / approx.len() as f32).sqrt()
+        };
+        assert!(rmse < 0.4, "rmse {rmse}");
+    }
+
+    #[test]
+    fn error_decays_with_sketch_size() {
+        let mut rng = Pcg::seeded(2);
+        let x = unit_rows(&mut rng, 48, 8);
+        let exact = x.matmul_t(&x).map(|v| powi(v, 4));
+        let rmse = |r: usize, rng: &mut Pcg| -> f32 {
+            let sk = PolySketch::sample(rng, 8, r, 4);
+            let half = sk.half(&x);
+            let approx = half.matmul_t(&half).map(|v| v * v);
+            let d: f32 = approx
+                .data()
+                .iter()
+                .zip(exact.data())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            (d / approx.len() as f32).sqrt()
+        };
+        let e_small = rmse(4, &mut rng);
+        let e_big = rmse(64, &mut rng);
+        assert!(e_big < e_small, "r=4 {e_small} vs r=64 {e_big}");
+    }
+
+    #[test]
+    fn half_consistent_with_nonnegative() {
+        let mut rng = Pcg::seeded(3);
+        let sk = PolySketch::sample(&mut rng, 8, 4, 4);
+        let x = Tensor::gaussian(&mut rng, &[10, 8]);
+        let half = sk.half(&x);
+        let full = sk.nonnegative(&x);
+        assert!(self_tensor_rows(&half).max_abs_diff(&full) < 1e-6);
+    }
+
+    #[test]
+    fn layernormed_inputs_keep_norms_bounded() {
+        // After LN, row norms are ~sqrt(h); sketched kernel values stay
+        // finite — the regime the model actually runs in.
+        let mut rng = Pcg::seeded(4);
+        let sk = PolySketch::sample(&mut rng, 8, 16, 4);
+        let x = layernorm_rows(&Tensor::gaussian(&mut rng, &[16, 8]).scale(100.0));
+        let half = sk.half(&x);
+        for &v in half.data() {
+            assert!(v.is_finite());
+        }
+    }
+}

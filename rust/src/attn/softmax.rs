@@ -1,0 +1,153 @@
+//! Softmax attention baselines: naive O(n^2) and FlashAttention-style
+//! blocked streaming (the paper's speed baseline in Figures 1/4, Table 4).
+
+use crate::tensor::{axpy, dot, Tensor};
+
+/// Naive causal softmax attention; materializes each score row.
+pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let (n, h) = (q.rows(), q.cols());
+    assert_eq!(k.rows(), n);
+    assert_eq!(v.rows(), n);
+    let scale = 1.0 / (h as f32).sqrt();
+    let mut out = Tensor::zeros(&[n, v.cols()]);
+    let mut scores = vec![0.0f32; n];
+    for i in 0..n {
+        let qi = q.row(i);
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..=i {
+            scores[j] = dot(qi, k.row(j)) * scale;
+            mx = mx.max(scores[j]);
+        }
+        let mut sum = 0.0;
+        for j in 0..=i {
+            scores[j] = (scores[j] - mx).exp();
+            sum += scores[j];
+        }
+        let orow = out.row_mut(i);
+        for j in 0..=i {
+            axpy(orow, v.row(j), scores[j] / sum);
+        }
+    }
+    out
+}
+
+/// Blocked causal softmax with the online max/sum recurrence — the same
+/// algorithm FlashAttention executes on an accelerator, expressed on the
+/// CPU so the quadratic cost curve of the baseline is measured with a
+/// cache-friendly, honest implementation rather than a strawman.
+pub fn flash_attention(q: &Tensor, k: &Tensor, v: &Tensor, block: usize) -> Tensor {
+    let (n, h) = (q.rows(), q.cols());
+    let hv = v.cols();
+    assert!(n % block == 0, "n={} % block={} != 0", n, block);
+    let scale = 1.0 / (h as f32).sqrt();
+    let nb = n / block;
+    let mut out = Tensor::zeros(&[n, hv]);
+
+    let mut m = vec![f32::NEG_INFINITY; block];
+    let mut s = vec![0.0f32; block];
+    let mut acc = vec![0.0f32; block * hv];
+    let mut tile = vec![0.0f32; block * block];
+
+    for qb in 0..nb {
+        m.fill(f32::NEG_INFINITY);
+        s.fill(0.0);
+        acc.fill(0.0);
+        let q0 = qb * block;
+        for kb in 0..=qb {
+            let k0 = kb * block;
+            // score tile
+            for bi in 0..block {
+                let qi = q.row(q0 + bi);
+                let trow = &mut tile[bi * block..(bi + 1) * block];
+                for bj in 0..block {
+                    let j = k0 + bj;
+                    trow[bj] = if j <= q0 + bi { dot(qi, k.row(j)) * scale } else { f32::NEG_INFINITY };
+                }
+            }
+            // online rescale + accumulate
+            for bi in 0..block {
+                let trow = &tile[bi * block..(bi + 1) * block];
+                let row_max = trow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let m_new = m[bi].max(row_max);
+                if m_new == f32::NEG_INFINITY {
+                    continue;
+                }
+                let corr = if m[bi] == f32::NEG_INFINITY { 0.0 } else { (m[bi] - m_new).exp() };
+                let arow = &mut acc[bi * hv..(bi + 1) * hv];
+                for x in arow.iter_mut() {
+                    *x *= corr;
+                }
+                let mut local_sum = 0.0;
+                for bj in 0..block {
+                    if trow[bj] == f32::NEG_INFINITY {
+                        continue;
+                    }
+                    let p = (trow[bj] - m_new).exp();
+                    local_sum += p;
+                    axpy(arow, v.row(k0 + bj), p);
+                }
+                s[bi] = s[bi] * corr + local_sum;
+                m[bi] = m_new;
+            }
+        }
+        for bi in 0..block {
+            let orow = out.row_mut(q0 + bi);
+            let arow = &acc[bi * hv..(bi + 1) * hv];
+            let inv = 1.0 / s[bi];
+            for (o, a) in orow.iter_mut().zip(arow) {
+                *o = a * inv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn flash_matches_naive() {
+        let mut rng = Pcg::seeded(0);
+        let (n, h) = (32, 8);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        let a = softmax_attention(&q, &k, &v);
+        for block in [4, 8, 16, 32] {
+            let b = flash_attention(&q, &k, &v, block);
+            assert!(a.max_abs_diff(&b) < 1e-4, "block {block}");
+        }
+    }
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        let mut rng = Pcg::seeded(1);
+        let (n, h) = (16, 4);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        // v = identity-ish: attention output row sums must be 1.
+        let mut v = Tensor::zeros(&[n, 1]);
+        for i in 0..n {
+            v.set2(i, 0, 1.0);
+        }
+        let out = softmax_attention(&q, &k, &v);
+        for i in 0..n {
+            assert!((out.at2(i, 0) - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn first_row_copies_first_value() {
+        let mut rng = Pcg::seeded(2);
+        let (n, h) = (8, 4);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        let out = softmax_attention(&q, &k, &v);
+        for j in 0..h {
+            assert!((out.at2(0, j) - v.at2(0, j)).abs() < 1e-6);
+        }
+    }
+}

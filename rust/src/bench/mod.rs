@@ -1,0 +1,224 @@
+//! Bench substrate: a criterion-style harness (no criterion crate in this
+//! environment) used by every `rust/benches/*.rs` target (harness = false).
+//!
+//! Provides warmup + timed iterations with mean/p50/p95 statistics, paper-
+//! style table printing, CSV persistence under `bench_out/`, and a bench
+//! *mode* knob so `cargo bench` stays tractable:
+//!
+//!   PSF_BENCH_MODE = smoke | quick (default) | full
+//!
+//! smoke: seconds per bench (CI / sanity); quick: minutes (defaults used in
+//! EXPERIMENTS.md unless noted); full: the closest to the paper's protocol
+//! this testbed supports.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Global bench effort level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Mode {
+    Smoke,
+    Quick,
+    Full,
+}
+
+impl Mode {
+    pub fn from_env() -> Mode {
+        match std::env::var("PSF_BENCH_MODE").as_deref() {
+            Ok("smoke") => Mode::Smoke,
+            Ok("full") => Mode::Full,
+            _ => Mode::Quick,
+        }
+    }
+
+    /// Pick a value by mode.
+    pub fn pick<T: Copy>(&self, smoke: T, quick: T, full: T) -> T {
+        match self {
+            Mode::Smoke => smoke,
+            Mode::Quick => quick,
+            Mode::Full => full,
+        }
+    }
+}
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl Timing {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    Timing {
+        iters: n,
+        mean_s: samples.iter().sum::<f64>() / n as f64,
+        p50_s: samples[n / 2],
+        p95_s: samples[((n - 1) as f64 * 0.95) as usize],
+        min_s: samples[0],
+    }
+}
+
+/// A paper-style results table: row labels x column labels of cells.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub col_header: String,
+    pub cols: Vec<String>,
+    pub rows: Vec<(String, Vec<String>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, col_header: &str, cols: Vec<String>) -> Self {
+        Table { title: title.into(), col_header: col_header.into(), cols, rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, label: &str, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.cols.len(), "row width mismatch");
+        self.rows.push((label.into(), cells));
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain([self.col_header.len()])
+            .max()
+            .unwrap_or(8)
+            + 2;
+        let col_w = self
+            .cols
+            .iter()
+            .map(String::len)
+            .chain(self.rows.iter().flat_map(|(_, cs)| cs.iter().map(String::len)))
+            .max()
+            .unwrap_or(8)
+            + 2;
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} ==", self.title);
+        let _ = write!(s, "{:<label_w$}", self.col_header);
+        for c in &self.cols {
+            let _ = write!(s, "{c:>col_w$}");
+        }
+        let _ = writeln!(s);
+        for (label, cells) in &self.rows {
+            let _ = write!(s, "{label:<label_w$}");
+            for c in cells {
+                let _ = write!(s, "{c:>col_w$}");
+            }
+            let _ = writeln!(s);
+        }
+        s
+    }
+
+    /// Persist as CSV under `bench_out/<name>.csv`.
+    pub fn save_csv(&self, name: &str) -> anyhow::Result<PathBuf> {
+        let dir = out_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut s = String::new();
+        let _ = write!(s, "{}", csv_cell(&self.col_header));
+        for c in &self.cols {
+            let _ = write!(s, ",{}", csv_cell(c));
+        }
+        let _ = writeln!(s);
+        for (label, cells) in &self.rows {
+            let _ = write!(s, "{}", csv_cell(label));
+            for c in cells {
+                let _ = write!(s, ",{}", csv_cell(c));
+            }
+            let _ = writeln!(s);
+        }
+        std::fs::write(&path, s)?;
+        Ok(path)
+    }
+}
+
+fn csv_cell(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Bench output directory: `$PSF_BENCH_OUT` or `./bench_out`.
+pub fn out_dir() -> PathBuf {
+    std::env::var_os("PSF_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new("bench_out").to_path_buf())
+}
+
+/// Standard bench banner.
+pub fn banner(name: &str, paper_ref: &str, mode: Mode) {
+    println!("\n########################################################");
+    println!("# bench: {name}");
+    println!("# regenerates: {paper_ref}");
+    println!("# mode: {mode:?} (set PSF_BENCH_MODE=smoke|quick|full)");
+    println!("########################################################");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_iters() {
+        let mut calls = 0;
+        let t = time_fn(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_s >= 0.0);
+        assert!(t.p50_s >= t.min_s);
+    }
+
+    #[test]
+    fn table_renders_and_saves() {
+        let mut t = Table::new("demo", "mech", vec!["512".into(), "1k".into()]);
+        t.row("softmax", vec!["1.0".into(), "2.0".into()]);
+        let r = t.render();
+        assert!(r.contains("softmax"));
+        assert!(r.contains("512"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        assert_eq!(csv_cell("plain"), "plain");
+        assert_eq!(csv_cell("a,b"), "\"a,b\"");
+        assert_eq!(csv_cell("q\"q"), "\"q\"\"q\"");
+    }
+
+    #[test]
+    fn mode_pick() {
+        assert_eq!(Mode::Smoke.pick(1, 2, 3), 1);
+        assert_eq!(Mode::Quick.pick(1, 2, 3), 2);
+        assert_eq!(Mode::Full.pick(1, 2, 3), 3);
+    }
+}

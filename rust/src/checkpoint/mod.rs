@@ -1,0 +1,212 @@
+//! Checkpoint substrate: versioned binary format with CRC32 integrity.
+//!
+//! Layout (little-endian):
+//!   magic "PSFCKPT1" (8 bytes)
+//!   u64 step
+//!   u32 n_sections
+//!   per section: u32 name_len, name bytes, u64 f32_count, payload
+//!   u32 crc32 of everything above
+//!
+//! Sections are free-form ("theta", "m", "v", ...) so the trainer can
+//! store the flat parameter vector plus optimizer state in one file.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PSFCKPT1";
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub sections: BTreeMap<String, Vec<f32>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CkptError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic (not a PSF checkpoint)")]
+    BadMagic,
+    #[error("truncated checkpoint at offset {0}")]
+    Truncated(usize),
+    #[error("crc mismatch: stored {stored:#010x} computed {computed:#010x}")]
+    Crc { stored: u32, computed: u32 },
+}
+
+impl Checkpoint {
+    pub fn new(step: u64) -> Self {
+        Checkpoint { step, sections: BTreeMap::new() }
+    }
+
+    pub fn with(mut self, name: &str, data: Vec<f32>) -> Self {
+        self.sections.insert(name.to_string(), data);
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.sections.get(name).map(Vec::as_slice)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), CkptError> {
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for (name, data) in &self.sections {
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
+            for v in data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let mut hasher = crc32fast::Hasher::new();
+        hasher.update(&buf);
+        let crc = hasher.finalize();
+        buf.extend_from_slice(&crc.to_le_bytes());
+
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        // Write-to-temp + rename for crash atomicity.
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(&buf)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self, CkptError> {
+        let buf = fs::read(path)?;
+        if buf.len() < MAGIC.len() + 8 + 4 + 4 {
+            return Err(CkptError::Truncated(buf.len()));
+        }
+        let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+        let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        let mut hasher = crc32fast::Hasher::new();
+        hasher.update(body);
+        let computed = hasher.finalize();
+        if stored != computed {
+            return Err(CkptError::Crc { stored, computed });
+        }
+        if &body[..8] != MAGIC {
+            return Err(CkptError::BadMagic);
+        }
+        let mut off = 8;
+        let step = read_u64(body, &mut off)?;
+        let n_sections = read_u32(body, &mut off)? as usize;
+        let mut sections = BTreeMap::new();
+        for _ in 0..n_sections {
+            let name_len = read_u32(body, &mut off)? as usize;
+            let name = String::from_utf8_lossy(
+                body.get(off..off + name_len).ok_or(CkptError::Truncated(off))?,
+            )
+            .into_owned();
+            off += name_len;
+            let count = read_u64(body, &mut off)? as usize;
+            let bytes = body
+                .get(off..off + count * 4)
+                .ok_or(CkptError::Truncated(off))?;
+            off += count * 4;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            sections.insert(name, data);
+        }
+        Ok(Checkpoint { step, sections })
+    }
+}
+
+fn read_u32(buf: &[u8], off: &mut usize) -> Result<u32, CkptError> {
+    let b = buf.get(*off..*off + 4).ok_or(CkptError::Truncated(*off))?;
+    *off += 4;
+    Ok(u32::from_le_bytes(b.try_into().unwrap()))
+}
+
+fn read_u64(buf: &[u8], off: &mut usize) -> Result<u64, CkptError> {
+    let b = buf.get(*off..*off + 8).ok_or(CkptError::Truncated(*off))?;
+    *off += 8;
+    Ok(u64::from_le_bytes(b.try_into().unwrap()))
+}
+
+/// Load a raw little-endian f32 file (the aot.py `.init.bin` format).
+pub fn load_f32_file(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = fs::read(path)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "f32 file size not multiple of 4");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join("psf_ckpt_test").join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = Checkpoint::new(42)
+            .with("theta", vec![1.0, -2.5, 3.25])
+            .with("m", vec![0.0; 7]);
+        let p = tmpfile("a.ckpt");
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let c = Checkpoint::new(1).with("theta", vec![1.0; 16]);
+        let p = tmpfile("b.ckpt");
+        c.save(&p).unwrap();
+        let mut bytes = fs::read(&p).unwrap();
+        bytes[24] ^= 0xff;
+        fs::write(&p, &bytes).unwrap();
+        assert!(matches!(Checkpoint::load(&p), Err(CkptError::Crc { .. })));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let c = Checkpoint::new(1).with("theta", vec![1.0; 16]);
+        let p = tmpfile("c.ckpt");
+        c.save(&p).unwrap();
+        let bytes = fs::read(&p).unwrap();
+        fs::write(&p, &bytes[..10]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn not_a_checkpoint() {
+        let p = tmpfile("d.ckpt");
+        fs::create_dir_all(p.parent().unwrap()).unwrap();
+        // valid CRC over garbage body shorter than magic check
+        let mut buf = b"NOTMAGIC".to_vec();
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        let mut h = crc32fast::Hasher::new();
+        h.update(&buf);
+        let crc = h.finalize();
+        buf.extend_from_slice(&crc.to_le_bytes());
+        fs::write(&p, &buf).unwrap();
+        assert!(matches!(Checkpoint::load(&p), Err(CkptError::BadMagic)));
+    }
+
+    #[test]
+    fn empty_sections_ok() {
+        let p = tmpfile("e.ckpt");
+        Checkpoint::new(7).save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.step, 7);
+        assert!(back.sections.is_empty());
+    }
+}

@@ -1,0 +1,284 @@
+//! CLI substrate: declarative flag parsing (no clap in this environment).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative argument parser for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    positional: Vec<(String, String)>,
+}
+
+/// Parse result.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag: --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{flag}: {value} ({msg})")]
+    BadValue { flag: String, value: String, msg: String },
+    #[error("help requested")]
+    Help,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args { program: program.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// Flag taking a value, with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            default: Some(default.into()),
+        });
+        self
+    }
+
+    /// Required flag taking a value.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    /// Boolean switch (default false).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positional.push((name.into(), help.into()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nusage: {} [flags] {}", self.program,
+                         self.positional.iter().map(|(n, _)| format!("<{n}>"))
+                             .collect::<Vec<_>>().join(" "));
+        if !self.flags.is_empty() {
+            let _ = writeln!(s, "\nflags:");
+            for f in &self.flags {
+                let v = if f.takes_value {
+                    match &f.default {
+                        Some(d) => format!(" <value> (default: {d})"),
+                        None => " <value> (required)".to_string(),
+                    }
+                } else {
+                    String::new()
+                };
+                let _ = writeln!(s, "  --{}{}\n      {}", f.name, v, f.help);
+            }
+        }
+        for (n, h) in &self.positional {
+            let _ = writeln!(s, "  <{n}>: {h}");
+        }
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, CliError> {
+        let mut out = Parsed::default();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                out.values.insert(f.name.clone(), d.clone());
+            }
+            if !f.takes_value {
+                out.bools.insert(f.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError::Help);
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::UnknownFlag(name.clone()))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or(CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    out.values.insert(name, value);
+                } else {
+                    out.bools.insert(name, true);
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if f.takes_value && f.default.is_none() && !out.values.contains_key(&f.name) {
+                return Err(CliError::MissingValue(f.name.clone()));
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Parsed {
+    pub fn str(&self, name: &str) -> &str {
+        self.values.get(name).map(String::as_str).unwrap_or("")
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.typed(name)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.typed(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.typed(name)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list of usizes ("64,128,256").
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse::<usize>().map_err(|e| CliError::BadValue {
+                    flag: name.into(),
+                    value: s.into(),
+                    msg: e.to_string(),
+                })
+            })
+            .collect()
+    }
+
+    fn typed<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(name);
+        raw.parse::<T>().map_err(|e| CliError::BadValue {
+            flag: name.into(),
+            value: raw.into(),
+            msg: e.to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new("t", "test")
+            .opt("steps", "100", "steps")
+            .req("name", "run name")
+            .switch("verbose", "chatty")
+            .positional("input", "file")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = spec().parse(&argv(&["--name", "x"])).unwrap();
+        assert_eq!(p.usize("steps").unwrap(), 100);
+        assert_eq!(p.str("name"), "x");
+        assert!(!p.flag("verbose"));
+
+        let p = spec().parse(&argv(&["--steps=7", "--name", "y", "--verbose", "in.txt"])).unwrap();
+        assert_eq!(p.usize("steps").unwrap(), 7);
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional(), &["in.txt".to_string()]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(matches!(spec().parse(&argv(&[])), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(matches!(
+            spec().parse(&argv(&["--name", "x", "--nope"])),
+            Err(CliError::UnknownFlag(_))
+        ));
+    }
+
+    #[test]
+    fn help_short_circuits() {
+        assert!(matches!(spec().parse(&argv(&["-h"])), Err(CliError::Help)));
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let p = Args::new("t", "t").opt("ctxs", "64,128", "ctx list")
+            .parse(&argv(&[])).unwrap();
+        assert_eq!(p.usize_list("ctxs").unwrap(), vec![64, 128]);
+    }
+
+    #[test]
+    fn usage_mentions_flags() {
+        let u = spec().usage();
+        assert!(u.contains("--steps"));
+        assert!(u.contains("required"));
+    }
+}

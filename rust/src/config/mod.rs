@@ -1,0 +1,343 @@
+//! Config substrate: a TOML-subset parser + typed accessors.
+//!
+//! No serde/toml crates in this environment, so the launcher's run configs
+//! are parsed by this module.  Supported grammar (a practical TOML subset):
+//!
+//! ```toml
+//! # comment
+//! key = "string"            # strings (double-quoted, \" \\ \n escapes)
+//! steps = 500               # integers
+//! lr = 3e-4                 # floats
+//! local = true              # booleans
+//! ctxs = [64, 128, 256]     # homogeneous arrays of the above
+//! [section]                 # tables (one level)
+//! key = 1
+//! [section.sub]             # nested tables via dotted headers
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parsed config: flat map of dotted keys ("section.sub.key") -> Value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut values = BTreeMap::new();
+        let mut prefix = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                let inner = line
+                    .strip_prefix('[')
+                    .and_then(|s| s.strip_suffix(']'))
+                    .ok_or_else(|| err(ln, "malformed table header"))?
+                    .trim();
+                if inner.is_empty() {
+                    return Err(err(ln, "empty table name"));
+                }
+                prefix = format!("{inner}.");
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err(ln, "expected key = value"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(ln, "empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(ln, &m))?;
+            values.insert(format!("{prefix}{key}"), val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn ints(&self, key: &str) -> Option<Vec<i64>> {
+        self.get(key)?.as_array()?.iter().map(Value::as_int).collect()
+    }
+
+    pub fn set(&mut self, key: &str, val: Value) {
+        self.values.insert(key.to_string(), val);
+    }
+
+    /// Keys (sorted, dotted).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+
+    /// Overlay `other` onto self (other wins). Used for CLI overrides.
+    pub fn merge(&mut self, other: &Config) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+}
+
+fn err(ln: usize, msg: &str) -> ParseError {
+    ParseError { line: ln + 1, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => escaped = false,
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    if s.starts_with('"') {
+        return parse_string(s);
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+fn parse_string(s: &str) -> Result<Value, String> {
+    let inner = s
+        .strip_prefix('"')
+        .and_then(|x| x.strip_suffix('"'))
+        .ok_or("unterminated string")?;
+    let mut out = String::new();
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => return Err(format!("bad escape: \\{other:?}")),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(Value::Str(out))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        let c = Config::parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(c.int_or("a", 0), 1);
+        assert_eq!(c.float_or("b", 0.0), 2.5);
+        assert_eq!(c.str_or("c", ""), "hi");
+        assert!(c.bool_or("d", false));
+    }
+
+    #[test]
+    fn parse_sections_and_arrays() {
+        let text = "top = 1\n[run]\nsteps = 100\nctxs = [64, 128, 256]\n[run.adam]\nlr = 3e-4\n";
+        let c = Config::parse(text).unwrap();
+        assert_eq!(c.int_or("top", 0), 1);
+        assert_eq!(c.int_or("run.steps", 0), 100);
+        assert_eq!(c.ints("run.ctxs").unwrap(), vec![64, 128, 256]);
+        assert!((c.float_or("run.adam.lr", 0.0) - 3e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let c = Config::parse("a = \"x # y\" # trailing\n# whole line\nb = 2\n").unwrap();
+        assert_eq!(c.str_or("a", ""), "x # y");
+        assert_eq!(c.int_or("b", 0), 2);
+    }
+
+    #[test]
+    fn escapes() {
+        let c = Config::parse(r#"a = "l1\nl2\t\"q\"""#).unwrap();
+        assert_eq!(c.str_or("a", ""), "l1\nl2\t\"q\"");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Config::parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = Config::parse("x = 1\ny = 2").unwrap();
+        let b = Config::parse("y = 3\nz = 4").unwrap();
+        a.merge(&b);
+        assert_eq!(a.int_or("x", 0), 1);
+        assert_eq!(a.int_or("y", 0), 3);
+        assert_eq!(a.int_or("z", 0), 4);
+    }
+
+    #[test]
+    fn int_fallback_to_float() {
+        let c = Config::parse("n = 3").unwrap();
+        assert_eq!(c.float_or("n", 0.0), 3.0);
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let c = Config::parse("m = [[1, 2], [3]]").unwrap();
+        let outer = c.get("m").unwrap().as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_array().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,27 @@
+//! L3 coordinator: the training orchestration layer.
+//!
+//! The paper's *system* contribution is the linear-time attention stack
+//! (L1/L2); the coordinator is the rust layer that drives it end to end:
+//!
+//! * [`trainer`] — single-worker loop over the fused AOT train step with
+//!   eval cadence, checkpointing, NaN guard, and loss-curve logging;
+//! * [`dataparallel`] — simulated synchronous data-parallel training
+//!   (exact allreduce math over on-device gradient buffers) + microbatch
+//!   gradient accumulation for the paper's 1M-token batch protocol;
+//! * [`evaluator`] — test perplexity and multiple-choice likelihood
+//!   scoring (Table 1's downstream-QA analog);
+//! * [`task_runner`] — Appendix F synthetic tasks (Selective Copying,
+//!   Induction Heads) with exact-match accuracy curves.
+//!
+//! Python never runs here: every compute graph was AOT-lowered by
+//! `make artifacts` and is executed via `crate::runtime`.
+
+pub mod dataparallel;
+pub mod evaluator;
+pub mod task_runner;
+pub mod trainer;
+
+pub use dataparallel::DataParallel;
+pub use evaluator::{gen_cloze_questions, perplexity, score_mcq, McqQuestion};
+pub use task_runner::{eval_accuracy, run_task, Accuracy, TaskRunnerConfig, TaskSource, TaskSummary};
+pub use trainer::{RunSummary, Trainer, TrainerConfig};

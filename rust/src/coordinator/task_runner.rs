@@ -1,0 +1,175 @@
+//! Synthetic-task training + accuracy evaluation (Appendix F protocol).
+//!
+//! Drives a model artifact on Selective Copying or Induction Heads batches
+//! and measures exact-match accuracy (every answer position greedily
+//! correct) on held-out examples — Table 5 / Figure 5 / Appendix F.2.
+
+use anyhow::Result;
+
+use crate::metrics::{Record, RunLogger};
+use crate::runtime::ModelRuntime;
+use crate::tasks::{answers_correct, Example};
+use crate::util::rng::Pcg;
+
+/// A generator of task batches (selective copy, induction heads, ...).
+pub trait TaskSource {
+    /// Flat (batch, ctx+1) i32 batch + per-example metadata.
+    fn batch(&self, batch: usize, rng: &mut Pcg) -> (Vec<i32>, Vec<Example>);
+    fn vocab(&self) -> usize;
+    fn ctx(&self) -> usize;
+}
+
+impl TaskSource for crate::tasks::selective_copy::SelectiveCopyTask {
+    fn batch(&self, batch: usize, rng: &mut Pcg) -> (Vec<i32>, Vec<Example>) {
+        self.batch(batch, rng)
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab()
+    }
+
+    fn ctx(&self) -> usize {
+        self.ctx
+    }
+}
+
+impl TaskSource for crate::tasks::induction::InductionTask {
+    fn batch(&self, batch: usize, rng: &mut Pcg) -> (Vec<i32>, Vec<Example>) {
+        self.batch(batch, rng)
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab()
+    }
+
+    fn ctx(&self) -> usize {
+        self.ctx
+    }
+}
+
+/// Accuracy pair: the paper's Table-5 exact-match metric plus the
+/// smoother per-answer-token accuracy (useful at reduced training budgets
+/// where exact match over 16 positions is all-or-nothing).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Accuracy {
+    /// Fraction of examples with EVERY answer position greedily correct.
+    pub exact: f64,
+    /// Fraction of answer positions greedily correct.
+    pub token: f64,
+}
+
+/// Result of one task run.
+#[derive(Clone, Debug, Default)]
+pub struct TaskSummary {
+    pub steps_run: u64,
+    pub final_loss: f32,
+    /// (step, accuracy) at every eval point — the Figure-5 learning curve.
+    pub curve: Vec<(u64, Accuracy)>,
+    pub final_accuracy: Accuracy,
+}
+
+/// Task runner configuration.
+#[derive(Clone, Debug)]
+pub struct TaskRunnerConfig {
+    pub steps: u64,
+    pub eval_every: u64,
+    /// Held-out examples scored per evaluation.
+    pub eval_examples: usize,
+    pub echo_every: u64,
+    pub seed: u64,
+    /// Stop early once accuracy reaches this level (0 disables).
+    pub stop_at_accuracy: f64,
+}
+
+impl Default for TaskRunnerConfig {
+    fn default() -> Self {
+        TaskRunnerConfig {
+            steps: 400,
+            eval_every: 50,
+            eval_examples: 64,
+            echo_every: 25,
+            seed: 0,
+            stop_at_accuracy: 0.0,
+        }
+    }
+}
+
+/// Train `model` on `task` batches and measure exact-match accuracy.
+pub fn run_task(
+    model: &mut ModelRuntime,
+    task: &dyn TaskSource,
+    cfg: &TaskRunnerConfig,
+) -> Result<TaskSummary> {
+    assert!(model.vocab() >= task.vocab(), "model vocab too small for task");
+    assert_eq!(model.ctx(), task.ctx(), "model/task ctx mismatch");
+    let mut train_rng = Pcg::new(cfg.seed, 0x7a5c);
+    let mut logger = RunLogger::new(None, cfg.echo_every)?;
+    let mut summary = TaskSummary::default();
+
+    for _ in 0..cfg.steps {
+        let (tokens, _) = task.batch(model.batch(), &mut train_rng);
+        let stats = model.train_step(&tokens)?;
+        summary.steps_run += 1;
+        summary.final_loss = stats.loss;
+        logger.log_step(stats.step, stats.loss as f64, Record::new())?;
+        if cfg.eval_every > 0 && stats.step % cfg.eval_every == 0 {
+            let acc = eval_accuracy(model, task, cfg.eval_examples, cfg.seed ^ 0xe7a1)?;
+            summary.curve.push((stats.step, acc));
+            if cfg.echo_every > 0 {
+                eprintln!(
+                    "step {:>6}  exact {:.2}%  token {:.2}%",
+                    stats.step,
+                    acc.exact * 100.0,
+                    acc.token * 100.0
+                );
+            }
+            if cfg.stop_at_accuracy > 0.0 && acc.exact >= cfg.stop_at_accuracy {
+                break;
+            }
+        }
+    }
+    summary.final_accuracy =
+        eval_accuracy(model, task, cfg.eval_examples, cfg.seed ^ 0xf17a1)?;
+    Ok(summary)
+}
+
+/// Accuracy over `n` fresh held-out examples: exact match (the paper's
+/// Table-5 metric) and per-answer-token accuracy.
+pub fn eval_accuracy(
+    model: &ModelRuntime,
+    task: &dyn TaskSource,
+    n: usize,
+    seed: u64,
+) -> Result<Accuracy> {
+    let batch = model.batch();
+    let ctx = model.ctx();
+    let vocab = model.vocab();
+    let mut rng = Pcg::new(seed, 0xacc);
+    let (mut exact, mut tok_hit, mut tok_total) = (0usize, 0usize, 0usize);
+    let mut seen = 0usize;
+    while seen < n {
+        let (tokens, examples) = task.batch(batch, &mut rng);
+        // fwd consumes (batch, ctx): strip the final target token and the
+        // loss-mask signs from each row.
+        let mut inputs = Vec::with_capacity(batch * ctx);
+        for b in 0..batch {
+            let row = &tokens[b * (ctx + 1)..(b + 1) * (ctx + 1)];
+            inputs.extend(row[..ctx].iter().map(|&t| t.abs()));
+        }
+        let logits = model.forward(&inputs)?; // (batch, ctx, vocab) flat
+        for (b, ex) in examples.iter().enumerate().take(n - seen) {
+            let lrow = &logits[b * ctx * vocab..(b + 1) * ctx * vocab];
+            let hit = answers_correct(ex, lrow, vocab);
+            tok_hit += hit;
+            tok_total += ex.answer_positions.len();
+            if hit == ex.answer_positions.len() {
+                exact += 1;
+            }
+        }
+        seen += examples.len().min(n - seen);
+    }
+    Ok(Accuracy {
+        exact: exact as f64 / n as f64,
+        token: tok_hit as f64 / tok_total.max(1) as f64,
+    })
+}

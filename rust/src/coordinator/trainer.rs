@@ -1,0 +1,184 @@
+//! Single-worker training loop over the fused AOT train step.
+//!
+//! The hot path moves exactly one token batch to the device per step and
+//! reads the 8-byte stats output back; the fused state vector never leaves
+//! the device except at checkpoint / eval boundaries.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::checkpoint::Checkpoint;
+use crate::data::batcher::Batcher;
+use crate::metrics::{Record, RunLogger};
+use crate::runtime::ModelRuntime;
+
+/// Trainer configuration (run shape; the optimizer schedule is baked into
+/// the train artifact by aot.py).
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    pub steps: u64,
+    /// Evaluate test perplexity every `eval_every` steps (0 = never).
+    pub eval_every: u64,
+    /// Batches averaged per evaluation.
+    pub eval_batches: usize,
+    /// Checkpoint every `ckpt_every` steps into `run_dir` (0 = never).
+    pub ckpt_every: u64,
+    /// Console echo cadence for the logger (0 = silent).
+    pub echo_every: u64,
+    /// Where run logs / checkpoints go (None = no persistence).
+    pub run_dir: Option<PathBuf>,
+    /// Abort the run if loss goes non-finite.
+    pub nan_guard: bool,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            steps: 100,
+            eval_every: 0,
+            eval_batches: 4,
+            ckpt_every: 0,
+            echo_every: 10,
+            run_dir: None,
+            nan_guard: true,
+        }
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunSummary {
+    pub steps_run: u64,
+    pub final_loss: f32,
+    pub final_loss_ema: f64,
+    /// (step, test NLL) at every eval point.
+    pub evals: Vec<(u64, f32)>,
+    pub wall_secs: f64,
+    pub tokens_seen: u64,
+    pub aborted_nonfinite: bool,
+}
+
+impl RunSummary {
+    pub fn final_perplexity(&self) -> f64 {
+        self.evals
+            .last()
+            .map(|&(_, nll)| (nll as f64).exp())
+            .unwrap_or(f64::NAN)
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens_seen as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn steps_per_sec(&self) -> f64 {
+        self.steps_run as f64 / self.wall_secs.max(1e-9)
+    }
+}
+
+/// Single-worker trainer: model runtime + train/test batch sources.
+pub struct Trainer<'a> {
+    pub model: &'a mut ModelRuntime,
+    pub train: Batcher,
+    pub test: Option<Batcher>,
+    pub cfg: TrainerConfig,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(
+        model: &'a mut ModelRuntime,
+        train: Batcher,
+        test: Option<Batcher>,
+        cfg: TrainerConfig,
+    ) -> Self {
+        Trainer { model, train, test, cfg }
+    }
+
+    /// Run the configured number of steps; returns the loss curve summary.
+    pub fn run(&mut self) -> Result<RunSummary> {
+        let log_path = self.cfg.run_dir.as_ref().map(|d| d.join("train.jsonl"));
+        if let Some(dir) = &self.cfg.run_dir {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut logger = RunLogger::new(log_path.as_deref(), self.cfg.echo_every)?;
+        let mut summary = RunSummary::default();
+        let tokens_per_step = (self.model.batch() * (self.model.ctx() + 1)) as u64;
+        let t0 = Instant::now();
+
+        for _ in 0..self.cfg.steps {
+            let batch = self.train.next_batch();
+            let stats = self.model.train_step(&batch.tokens)?;
+            summary.steps_run += 1;
+            summary.tokens_seen += tokens_per_step;
+            summary.final_loss = stats.loss;
+            logger.log_step(stats.step, stats.loss as f64, Record::new())?;
+
+            if self.cfg.nan_guard && !stats.loss.is_finite() {
+                eprintln!("nan guard tripped at step {}", stats.step);
+                summary.aborted_nonfinite = true;
+                break;
+            }
+            if self.cfg.eval_every > 0 && stats.step % self.cfg.eval_every == 0 {
+                if let Some(nll) = self.eval()? {
+                    summary.evals.push((stats.step, nll));
+                }
+            }
+            if self.cfg.ckpt_every > 0 && stats.step % self.cfg.ckpt_every == 0 {
+                self.save_checkpoint(stats.step)?;
+            }
+        }
+
+        // Always close with a final eval if a test stream exists.
+        if self
+            .test
+            .as_ref()
+            .map(|_| summary.evals.last().map(|&(s, _)| s) != Some(summary.steps_run))
+            .unwrap_or(false)
+        {
+            if let Some(nll) = self.eval()? {
+                summary.evals.push((summary.steps_run, nll));
+            }
+        }
+
+        summary.wall_secs = t0.elapsed().as_secs_f64();
+        summary.final_loss_ema = logger.final_ema().unwrap_or(f64::NAN);
+        logger.finish()?;
+        Ok(summary)
+    }
+
+    /// Mean test NLL over `eval_batches` batches.
+    pub fn eval(&mut self) -> Result<Option<f32>> {
+        let test = match &mut self.test {
+            Some(t) => t,
+            None => return Ok(None),
+        };
+        let mut total = 0.0f32;
+        for _ in 0..self.cfg.eval_batches.max(1) {
+            total += self.model.eval_loss(&test.next_batch().tokens)?;
+        }
+        Ok(Some(total / self.cfg.eval_batches.max(1) as f32))
+    }
+
+    fn save_checkpoint(&self, step: u64) -> Result<()> {
+        let dir = match &self.cfg.run_dir {
+            Some(d) => d,
+            None => return Ok(()),
+        };
+        let state = self.model.state_to_host()?;
+        Checkpoint::new(step)
+            .with("state", state)
+            .save(&dir.join(format!("ckpt_{step:06}.bin")))?;
+        Ok(())
+    }
+
+    /// Restore model state from a checkpoint file.
+    pub fn restore(&mut self, path: &std::path::Path) -> Result<u64> {
+        let ckpt = Checkpoint::load(path)?;
+        let state = ckpt
+            .get("state")
+            .ok_or_else(|| anyhow::anyhow!("checkpoint has no `state` section"))?;
+        self.model.set_state(state)?;
+        Ok(ckpt.step)
+    }
+}

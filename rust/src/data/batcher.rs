@@ -1,0 +1,176 @@
+//! Sequence packing + deterministic batch iteration.
+//!
+//! Turns a token stream into fixed-length (batch, ctx+1) training batches:
+//! the stream is cut into ctx+1-length segments (next-token targets need
+//! one token of overhang), segments are shuffled deterministically per
+//! epoch, and train/test splits are disjoint by construction.
+
+use crate::util::rng::Pcg;
+
+/// Token batches of shape (batch, seq) flattened row-major into i32 —
+/// exactly the layout the PJRT tokens parameter expects.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq..(i + 1) * self.seq]
+    }
+}
+
+/// Deterministic segment-shuffling batcher.
+pub struct Batcher {
+    segments: Vec<Vec<u32>>,
+    batch: usize,
+    seq: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: u64,
+    seed: u64,
+}
+
+impl Batcher {
+    /// `seq` = ctx + 1 for training batches. Drops the final partial segment.
+    pub fn new(stream: &[u32], batch: usize, seq: usize, seed: u64) -> Self {
+        assert!(batch > 0 && seq > 1);
+        let segments: Vec<Vec<u32>> = stream
+            .chunks_exact(seq)
+            .map(|c| c.to_vec())
+            .collect();
+        assert!(
+            segments.len() >= batch,
+            "stream too short: {} segments < batch {}",
+            segments.len(),
+            batch
+        );
+        let mut b = Batcher {
+            segments,
+            batch,
+            seq,
+            order: Vec::new(),
+            cursor: 0,
+            epoch: 0,
+            seed,
+        };
+        b.reshuffle();
+        b
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.segments.len() / self.batch
+    }
+
+    fn reshuffle(&mut self) {
+        self.order = (0..self.segments.len()).collect();
+        let mut rng = Pcg::new(self.seed ^ self.epoch, 0xba7c4);
+        rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Next (batch, seq) batch; wraps epochs automatically.
+    pub fn next_batch(&mut self) -> Batch {
+        if self.cursor + self.batch > self.order.len() {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        for bi in 0..self.batch {
+            let seg = &self.segments[self.order[self.cursor + bi]];
+            tokens.extend(seg.iter().map(|&t| t as i32));
+        }
+        self.cursor += self.batch;
+        Batch { tokens, batch: self.batch, seq: self.seq }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+/// Split a token stream into train/test by fraction (test gets the tail).
+pub fn split_stream(stream: &[u32], test_frac: f64) -> (&[u32], &[u32]) {
+    let cut = ((stream.len() as f64) * (1.0 - test_frac)) as usize;
+    stream.split_at(cut)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(n: usize) -> Vec<u32> {
+        (0..n as u32).map(|i| 1 + i % 100).collect()
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut b = Batcher::new(&stream(1000), 4, 33, 0);
+        let batch = b.next_batch();
+        assert_eq!(batch.tokens.len(), 4 * 33);
+        assert_eq!(batch.row(3).len(), 33);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = stream(1000);
+        let mut a = Batcher::new(&s, 4, 33, 7);
+        let mut b = Batcher::new(&s, 4, 33, 7);
+        for _ in 0..5 {
+            assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+        }
+    }
+
+    #[test]
+    fn epoch_covers_all_segments_once() {
+        let s = stream(33 * 8);
+        let mut b = Batcher::new(&s, 2, 33, 1);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..b.batches_per_epoch() {
+            let batch = b.next_batch();
+            for r in 0..batch.batch {
+                seen.insert(batch.row(r).to_vec());
+            }
+        }
+        assert_eq!(seen.len(), 8, "each segment exactly once per epoch");
+        assert_eq!(b.epoch(), 0);
+        b.next_batch();
+        assert_eq!(b.epoch(), 1);
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        // The first batch of epoch 1 should differ from the first batch of
+        // epoch 0 (different shuffle seed per epoch).
+        let s = stream(33 * 16);
+        let mut b = Batcher::new(&s, 2, 33, 1);
+        let epoch0_first = b.next_batch().tokens;
+        for _ in 0..b.batches_per_epoch() - 1 {
+            b.next_batch();
+        }
+        let epoch1_first = b.next_batch().tokens;
+        assert_eq!(b.epoch(), 1);
+        assert_ne!(epoch0_first, epoch1_first);
+    }
+
+    #[test]
+    fn split_disjoint() {
+        let s = stream(100);
+        let (train, test) = split_stream(&s, 0.2);
+        assert_eq!(train.len(), 80);
+        assert_eq!(test.len(), 20);
+        assert_eq!(train.len() + test.len(), 100);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_short_stream_panics() {
+        Batcher::new(&stream(10), 4, 33, 0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Byte-level BPE tokenizer — trainer + encoder/decoder, from scratch.
+//!
+//! Substitutes the paper's 32k SentencePiece vocabulary (DESIGN.md §4):
+//! same representation class (subword units over raw bytes), vocabulary
+//! scaled to the testbed models.  Id space: 0 = PAD (never produced by
+//! encode), 1..=256 = raw bytes, 257.. = merges.
+
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+const BYTE_BASE: u32 = 1;
+
+/// A trained BPE model: ordered merge list + vocab size.
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// Merge rules in priority order: (left, right) -> new id.
+    merges: Vec<(u32, u32)>,
+    /// (left, right) -> rank for O(1) lookup during encode.
+    ranks: HashMap<(u32, u32), usize>,
+    vocab: usize,
+}
+
+impl Bpe {
+    /// Train on `text`, producing a vocabulary of exactly `vocab` ids
+    /// (PAD + 256 bytes + merges). `vocab` must be > 257.
+    pub fn train(text: &[u8], vocab: usize) -> Self {
+        assert!(vocab > 257, "vocab must exceed PAD + byte ids");
+        let n_merges = vocab - 257;
+        let mut ids: Vec<u32> = text.iter().map(|&b| BYTE_BASE + b as u32).collect();
+        let mut merges = Vec::with_capacity(n_merges);
+        let mut next_id = 257u32;
+
+        for _ in 0..n_merges {
+            let mut counts: HashMap<(u32, u32), u32> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // Deterministic argmax: highest count, then smallest pair.
+            let best = counts
+                .iter()
+                .filter(|(_, &c)| c >= 2)
+                .max_by_key(|(&pair, &c)| (c, std::cmp::Reverse(pair)));
+            let (&pair, _) = match best {
+                Some(kv) => kv,
+                None => break, // corpus exhausted: no repeating pairs left
+            };
+            merges.push(pair);
+            ids = merge_once(&ids, pair, next_id);
+            next_id += 1;
+        }
+
+        let ranks = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i))
+            .collect();
+        Bpe { merges, ranks, vocab }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn num_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Encode bytes to token ids (never emits PAD).
+    pub fn encode(&self, text: &[u8]) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.iter().map(|&b| BYTE_BASE + b as u32).collect();
+        // Repeatedly apply the lowest-rank merge present. O(n * merges_hit)
+        // with early exit; fine at our corpus sizes.
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (rank, position)
+            for (i, w) in ids.windows(2).enumerate() {
+                if let Some(&rank) = self.ranks.get(&(w[0], w[1])) {
+                    if best.map_or(true, |(br, _)| rank < br) {
+                        best = Some((rank, i));
+                    }
+                }
+            }
+            let Some((rank, _)) = best else { break };
+            let pair = self.merges[rank];
+            ids = merge_once(&ids, pair, 257 + rank as u32);
+        }
+        ids
+    }
+
+    /// Decode ids back to bytes (PAD decodes to nothing).
+    pub fn decode(&self, ids: &[u32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(ids.len() * 2);
+        for &id in ids {
+            self.push_bytes(id, &mut out);
+        }
+        out
+    }
+
+    fn push_bytes(&self, id: u32, out: &mut Vec<u8>) {
+        if id == PAD {
+            return;
+        }
+        if id < 257 {
+            out.push((id - BYTE_BASE) as u8);
+            return;
+        }
+        let (l, r) = self.merges[(id - 257) as usize];
+        self.push_bytes(l, out);
+        self.push_bytes(r, out);
+    }
+
+    /// Serialize merges to a text format ("left right" per line).
+    pub fn to_text(&self) -> String {
+        let mut s = format!("psf-bpe v1 vocab {}\n", self.vocab);
+        for (l, r) in &self.merges {
+            s.push_str(&format!("{l} {r}\n"));
+        }
+        s
+    }
+
+    pub fn from_text(text: &str) -> anyhow::Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty bpe file"))?;
+        let vocab: usize = header
+            .strip_prefix("psf-bpe v1 vocab ")
+            .ok_or_else(|| anyhow::anyhow!("bad bpe header: {header}"))?
+            .parse()?;
+        let mut merges = Vec::new();
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let l: u32 = it.next().ok_or_else(|| anyhow::anyhow!("bad merge line"))?.parse()?;
+            let r: u32 = it.next().ok_or_else(|| anyhow::anyhow!("bad merge line"))?.parse()?;
+            merges.push((l, r));
+        }
+        let ranks = merges.iter().enumerate().map(|(i, &p)| (p, i)).collect();
+        Ok(Bpe { merges, ranks, vocab })
+    }
+}
+
+fn merge_once(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && ids[i] == pair.0 && ids[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact() {
+        let text = b"the quick brown fox jumps over the lazy dog. the quick brown fox.";
+        let bpe = Bpe::train(text, 300);
+        let ids = bpe.encode(text);
+        assert_eq!(bpe.decode(&ids), text);
+        assert!(ids.len() < text.len(), "no compression achieved");
+    }
+
+    #[test]
+    fn never_emits_pad_or_overflow() {
+        let text: Vec<u8> = (0..2000u32).map(|i| (i % 251) as u8).collect();
+        let bpe = Bpe::train(&text, 400);
+        for &id in &bpe.encode(&text) {
+            assert_ne!(id, PAD);
+            assert!((id as usize) < bpe.vocab_size());
+        }
+    }
+
+    #[test]
+    fn merges_capped_by_vocab() {
+        let text = b"aaaaabbbbbaaaaabbbbb";
+        let bpe = Bpe::train(text, 300);
+        assert!(bpe.num_merges() <= 300 - 257);
+    }
+
+    #[test]
+    fn deterministic() {
+        let text = b"abcabcabcabc the same text twice abcabcabcabc the same text twice";
+        let a = Bpe::train(text, 280);
+        let b = Bpe::train(text, 280);
+        assert_eq!(a.encode(text), b.encode(text));
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let text = b"hello world hello world hello";
+        let bpe = Bpe::train(text, 270);
+        let back = Bpe::from_text(&bpe.to_text()).unwrap();
+        assert_eq!(back.encode(text), bpe.encode(text));
+        assert_eq!(back.vocab_size(), bpe.vocab_size());
+    }
+
+    #[test]
+    fn empty_input() {
+        let bpe = Bpe::train(b"some training text for the tokenizer", 260);
+        assert!(bpe.encode(b"").is_empty());
+        assert!(bpe.decode(&[]).is_empty());
+    }
+
+    #[test]
+    fn unseen_bytes_still_encode() {
+        let bpe = Bpe::train(b"only ascii here", 260);
+        let exotic = [0u8, 255, 128, 7];
+        let ids = bpe.encode(&exotic);
+        assert_eq!(bpe.decode(&ids), exotic);
+    }
+}

@@ -1,0 +1,99 @@
+//! Data pipeline substrate: synthetic corpora, BPE tokenizer, batching.
+//!
+//! End-to-end: `load_corpus_tokens` generates (or reads) text, trains /
+//! loads a BPE tokenizer with the model's vocabulary, encodes, and returns
+//! disjoint train/test token streams ready for the [`batcher::Batcher`].
+
+pub mod batcher;
+pub mod bpe;
+pub mod corpus;
+pub mod prefetch;
+
+use std::path::Path;
+
+use crate::util::rng::Pcg;
+
+/// Tokenized dataset: train/test streams + the tokenizer that made them.
+pub struct Dataset {
+    pub train: Vec<u32>,
+    pub test: Vec<u32>,
+    pub bpe: bpe::Bpe,
+    pub flavor: corpus::Flavor,
+}
+
+/// Generate a synthetic corpus of `bytes` bytes, train a BPE with `vocab`
+/// ids on a prefix, and tokenize. Deterministic in `seed`. The tokenizer is
+/// cached on disk next to `cache_dir` (training BPE is the slow part).
+pub fn load_corpus_tokens(flavor: corpus::Flavor, bytes: usize, vocab: usize,
+                          seed: u64, cache_dir: Option<&Path>) -> anyhow::Result<Dataset> {
+    let gen = corpus::CorpusGen::new(flavor, seed);
+    let text = gen.generate(bytes, seed ^ 0x9e37);
+
+    let bpe = match cache_dir {
+        Some(dir) => {
+            let cache = dir.join(format!("bpe_{}_{}_{}.txt", flavor.label(), vocab, seed));
+            if cache.exists() {
+                bpe::Bpe::from_text(&std::fs::read_to_string(&cache)?)?
+            } else {
+                let trained = train_bpe(&text, vocab);
+                std::fs::create_dir_all(dir)?;
+                std::fs::write(&cache, trained.to_text())?;
+                trained
+            }
+        }
+        None => train_bpe(&text, vocab),
+    };
+
+    let tokens = bpe.encode(text.as_bytes());
+    let (train, test) = batcher::split_stream(&tokens, 0.1);
+    Ok(Dataset {
+        train: train.to_vec(),
+        test: test.to_vec(),
+        bpe,
+        flavor,
+    })
+}
+
+fn train_bpe(text: &str, vocab: usize) -> bpe::Bpe {
+    // Train on a bounded prefix: merge statistics converge quickly and
+    // training is quadratic-ish in corpus size.
+    let cap = text.len().min(200_000);
+    bpe::Bpe::train(&text.as_bytes()[..cap], vocab)
+}
+
+/// Convenience for tests/benches: random token stream (ids in 1..vocab).
+pub fn random_tokens(n: usize, vocab: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Pcg::seeded(seed);
+    (0..n).map(|_| 1 + rng.below((vocab - 1) as u64) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_pipeline() {
+        let ds = load_corpus_tokens(corpus::Flavor::Wiki, 60_000, 300, 0, None).unwrap();
+        assert!(ds.train.len() > 1000);
+        assert!(ds.test.len() > 100);
+        // All ids valid and non-pad.
+        for &t in ds.train.iter().chain(&ds.test) {
+            assert!(t != 0 && (t as usize) < 300);
+        }
+    }
+
+    #[test]
+    fn deterministic_dataset() {
+        let a = load_corpus_tokens(corpus::Flavor::Books, 30_000, 280, 5, None).unwrap();
+        let b = load_corpus_tokens(corpus::Flavor::Books, 30_000, 280, 5, None).unwrap();
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+    }
+
+    #[test]
+    fn random_tokens_in_range() {
+        for &t in &random_tokens(1000, 64, 0) {
+            assert!((1..64).contains(&t));
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! PolySketchFormer — Fast Transformers via Sketching Polynomial Kernels
+//! (Kacham, Mirrokni & Zhong, ICML 2024): full-system reproduction.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!   * L1: Pallas kernels + JAX model (`python/`, build-time only),
+//!   * L2: AOT-lowered HLO artifacts (`artifacts/*.hlo.txt`),
+//!   * L3: this crate — PJRT runtime, training coordinator, data pipeline,
+//!     synthetic tasks, native attention kernels, and the bench harness
+//!     that regenerates every table/figure of the paper's evaluation.
+
+pub mod attn;
+pub mod bench;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod metrics;
+pub mod prop;
+pub mod runtime;
+pub mod tasks;
+pub mod tensor;
+pub mod util;
+
+pub use util::rng::Pcg;

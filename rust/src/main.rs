@@ -1,0 +1,446 @@
+//! psf — PolySketchFormer launcher.
+//!
+//! Subcommands:
+//!   list                       discover artifact bundles
+//!   train                      train a model artifact on a synthetic corpus
+//!   dp-train                   simulated data-parallel training
+//!   task                       train + evaluate a synthetic task artifact
+//!   eval                       perplexity + downstream MCQ of a trained run
+//!   attn                       run one attention micro-artifact (sanity)
+//!
+//! Everything executes AOT-compiled HLO through the PJRT CPU client;
+//! Python is never invoked (`make artifacts` must have run once).
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+use polysketchformer::cli::{Args, CliError};
+use polysketchformer::coordinator::{
+    self, DataParallel, TaskRunnerConfig, Trainer, TrainerConfig,
+};
+use polysketchformer::data::{self, batcher::Batcher, corpus::Flavor};
+use polysketchformer::metrics::RunLogger;
+use polysketchformer::runtime::{self, LoadOpts};
+use polysketchformer::tasks::{induction::InductionTask, selective_copy::SelectiveCopyTask};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        eprintln!("{}", top_usage());
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd {
+        "list" => cmd_list(),
+        "run" => cmd_run(rest),
+        "train" => cmd_train(rest),
+        "dp-train" => cmd_dp_train(rest),
+        "task" => cmd_task(rest),
+        "eval" => cmd_eval(rest),
+        "attn" => cmd_attn(rest),
+        "--help" | "-h" | "help" => {
+            eprintln!("{}", top_usage());
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try --help)"),
+    }
+}
+
+fn top_usage() -> String {
+    "psf — PolySketchFormer coordinator (ICML 2024 reproduction)\n\n\
+     subcommands:\n\
+       list        discover artifact bundles in ./artifacts\n\
+       run         execute a TOML run config (see configs/)\n\
+       train       train a model artifact on a synthetic corpus\n\
+       dp-train    simulated data-parallel training (grad allreduce)\n\
+       task        train + evaluate a synthetic task (copy | induction)\n\
+       eval        perplexity + downstream MCQ accuracy\n\
+       attn        run one attention micro-artifact\n\n\
+     run `psf <subcommand> --help` for flags."
+        .to_string()
+}
+
+fn parse(spec: Args, argv: &[String]) -> Result<polysketchformer::cli::Parsed> {
+    match spec.parse(argv) {
+        Ok(p) => Ok(p),
+        Err(CliError::Help) => {
+            eprintln!("{}", spec.usage());
+            std::process::exit(0);
+        }
+        Err(e) => Err(anyhow!("{e}")),
+    }
+}
+
+// ------------------------------------------------------------------ list
+
+fn cmd_list() -> Result<()> {
+    let dir = runtime::artifacts_dir();
+    let mans = runtime::discover(&dir)?;
+    if mans.is_empty() {
+        bail!("no manifests in {} — run `make artifacts`", dir.display());
+    }
+    println!("{:<55} {:>8} {:>10} {:>6} {:>6}", "name", "kind", "params", "ctx", "batch");
+    for (name, m) in &mans {
+        println!(
+            "{:<55} {:>8} {:>10} {:>6} {:>6}",
+            name,
+            m.kind,
+            m.nparams,
+            m.cfg_str("ctx").or(m.cfg_str("n")).unwrap_or("-"),
+            m.batch,
+        );
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- run
+
+/// Execute a declarative TOML run config (the launcher path a deployment
+/// would drive; configs/ has annotated samples).  Keys map 1:1 onto the
+/// train / dp-train / task subcommand flags.
+fn cmd_run(argv: &[String]) -> Result<()> {
+    let spec = Args::new("psf run", "execute a TOML run config")
+        .req("config", "path to run config (see configs/)");
+    let p = parse(spec, argv)?;
+    let cfg = polysketchformer::config::Config::load(std::path::Path::new(p.str("config")))?;
+
+    let mode = cfg.str_or("mode", "train").to_string();
+    let model = cfg
+        .get("model")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("config missing `model`"))?
+        .to_string();
+    let steps = cfg.int_or("steps", 200).to_string();
+    let seed = cfg.int_or("seed", 0).to_string();
+
+    let mut argv: Vec<String> =
+        vec!["--model".into(), model, "--steps".into(), steps, "--seed".into(), seed];
+    match mode.as_str() {
+        "train" => {
+            argv.extend([
+                "--corpus".into(),
+                cfg.str_or("data.corpus", "books").into(),
+                "--corpus-bytes".into(),
+                cfg.int_or("data.bytes", 2_000_000).to_string(),
+                "--eval-every".into(),
+                cfg.int_or("eval.every", 50).to_string(),
+                "--eval-batches".into(),
+                cfg.int_or("eval.batches", 4).to_string(),
+                "--ckpt-every".into(),
+                cfg.int_or("log.ckpt_every", 0).to_string(),
+                "--run-dir".into(),
+                cfg.str_or("log.run_dir", "").into(),
+            ]);
+            cmd_train(&argv)?;
+            // Optional closing MCQ eval.
+            if cfg.int_or("eval.questions", 0) > 0 {
+                let eval_argv: Vec<String> = vec![
+                    "--model".into(),
+                    cfg.get("model").unwrap().as_str().unwrap().into(),
+                    "--corpus".into(),
+                    cfg.str_or("data.corpus", "books").into(),
+                    "--corpus-bytes".into(),
+                    cfg.int_or("data.bytes", 2_000_000).to_string(),
+                    "--questions".into(),
+                    cfg.int_or("eval.questions", 100).to_string(),
+                    "--choices".into(),
+                    cfg.int_or("eval.choices", 4).to_string(),
+                    "--span".into(),
+                    cfg.int_or("eval.span", 16).to_string(),
+                    "--shots".into(),
+                    cfg.int_or("eval.shots", 0).to_string(),
+                ];
+                cmd_eval(&eval_argv)?;
+            }
+            Ok(())
+        }
+        "dp-train" => {
+            argv.extend([
+                "--workers".into(),
+                cfg.int_or("dp.workers", 4).to_string(),
+                "--accum".into(),
+                cfg.int_or("dp.accum", 1).to_string(),
+                "--corpus".into(),
+                cfg.str_or("data.corpus", "books").into(),
+                "--corpus-bytes".into(),
+                cfg.int_or("data.bytes", 4_000_000).to_string(),
+            ]);
+            cmd_dp_train(&argv)
+        }
+        "task" => {
+            argv.extend([
+                "--task".into(),
+                cfg.str_or("task", "").into(),
+                "--eval-every".into(),
+                cfg.int_or("eval.every", 50).to_string(),
+                "--eval-examples".into(),
+                cfg.int_or("eval.examples", 64).to_string(),
+                "--stop-at".into(),
+                cfg.float_or("eval.stop_at_percent", 0.0).to_string(),
+            ]);
+            cmd_task(&argv)
+        }
+        other => bail!("config mode `{other}` (want train | dp-train | task)"),
+    }
+}
+
+// ----------------------------------------------------------------- train
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let spec = Args::new("psf train", "train a model artifact on a synthetic corpus")
+        .req("model", "artifact name (see `psf list`)")
+        .opt("steps", "200", "training steps")
+        .opt("corpus", "books", "books | wiki | web")
+        .opt("corpus-bytes", "2000000", "synthetic corpus size in bytes")
+        .opt("eval-every", "50", "eval cadence (0 = never)")
+        .opt("eval-batches", "4", "batches per eval")
+        .opt("ckpt-every", "0", "checkpoint cadence (0 = never)")
+        .opt("run-dir", "", "log/checkpoint directory (empty = none)")
+        .opt("seed", "0", "data seed");
+    let p = parse(spec, argv)?;
+
+    let mut model = runtime::load_model(p.str("model"), LoadOpts::default())?;
+    let flavor = Flavor::parse(p.str("corpus"))
+        .ok_or_else(|| anyhow!("bad corpus {}", p.str("corpus")))?;
+    let seed = p.u64("seed")?;
+    let ds = data::load_corpus_tokens(
+        flavor,
+        p.usize("corpus-bytes")?,
+        model.vocab(),
+        seed,
+        None,
+    )?;
+    let train = Batcher::new(&ds.train, model.batch(), model.ctx() + 1, seed);
+    let test = Batcher::new(&ds.test, model.batch(), model.ctx() + 1, seed);
+
+    let cfg = TrainerConfig {
+        steps: p.u64("steps")?,
+        eval_every: p.u64("eval-every")?,
+        eval_batches: p.usize("eval-batches")?,
+        ckpt_every: p.u64("ckpt-every")?,
+        echo_every: 10,
+        run_dir: non_empty(p.str("run-dir")).map(PathBuf::from),
+        nan_guard: true,
+    };
+    let summary = Trainer::new(&mut model, train, Some(test), cfg).run()?;
+    println!(
+        "done: {} steps, final loss {:.4} (ema {:.4}), test ppl {:.2}, {:.2} steps/s, {:.0} tok/s",
+        summary.steps_run,
+        summary.final_loss,
+        summary.final_loss_ema,
+        summary.final_perplexity(),
+        summary.steps_per_sec(),
+        summary.tokens_per_sec(),
+    );
+    Ok(())
+}
+
+// -------------------------------------------------------------- dp-train
+
+fn cmd_dp_train(argv: &[String]) -> Result<()> {
+    let spec = Args::new(
+        "psf dp-train",
+        "simulated synchronous data-parallel training (exact allreduce math)",
+    )
+    .req("model", "artifact name")
+    .opt("workers", "4", "simulated data-parallel workers")
+    .opt("accum", "1", "microbatches accumulated per worker per step")
+    .opt("steps", "50", "global steps")
+    .opt("corpus", "books", "books | wiki | web")
+    .opt("corpus-bytes", "4000000", "synthetic corpus size in bytes")
+    .opt("seed", "0", "data seed");
+    let p = parse(spec, argv)?;
+
+    let mut model =
+        runtime::load_model(p.str("model"), LoadOpts::none().with_grads().with_evalloss())?;
+    let flavor = Flavor::parse(p.str("corpus"))
+        .ok_or_else(|| anyhow!("bad corpus {}", p.str("corpus")))?;
+    let seed = p.u64("seed")?;
+    let ds = data::load_corpus_tokens(
+        flavor,
+        p.usize("corpus-bytes")?,
+        model.vocab(),
+        seed,
+        None,
+    )?;
+    let mut test = Batcher::new(&ds.test, model.batch(), model.ctx() + 1, seed);
+
+    let workers = p.usize("workers")?;
+    let mut dp = DataParallel::from_stream(
+        &mut model,
+        &ds.train,
+        workers,
+        p.usize("accum")?,
+        seed,
+    );
+    println!(
+        "dp-train: {} workers x {} accum = {} tokens/step",
+        dp.world_size(),
+        dp.accum,
+        dp.tokens_per_step(),
+    );
+    let mut logger = RunLogger::new(None, 5)?;
+    let (last, _) = dp.run(p.u64("steps")?, &mut logger)?;
+    let ppl = coordinator::perplexity(&model, &mut test, 4)?;
+    println!("done: step {} loss {:.4}, test ppl {:.2}", last.step, last.loss, ppl);
+    Ok(())
+}
+
+// ------------------------------------------------------------------ task
+
+fn cmd_task(argv: &[String]) -> Result<()> {
+    let spec = Args::new("psf task", "train + evaluate a synthetic task artifact")
+        .req("model", "task artifact name (copy_* | induction_*)")
+        .opt("task", "", "copy | induction (inferred from model name if empty)")
+        .opt("steps", "400", "training steps")
+        .opt("eval-every", "50", "accuracy eval cadence")
+        .opt("eval-examples", "64", "held-out examples per eval")
+        .opt("stop-at", "0", "early-stop accuracy in percent (0 = off)")
+        .opt("seed", "0", "seed");
+    let p = parse(spec, argv)?;
+
+    let name = p.str("model");
+    let mut model = runtime::load_model(name, LoadOpts::default())?;
+    let kind = match non_empty(p.str("task")) {
+        Some(t) => t.to_string(),
+        None if name.starts_with("copy") => "copy".into(),
+        None if name.starts_with("induction") => "induction".into(),
+        None => bail!("cannot infer task from `{name}`; pass --task"),
+    };
+    let cfg = TaskRunnerConfig {
+        steps: p.u64("steps")?,
+        eval_every: p.u64("eval-every")?,
+        eval_examples: p.usize("eval-examples")?,
+        echo_every: 25,
+        seed: p.u64("seed")?,
+        stop_at_accuracy: p.f64("stop-at")? / 100.0,
+    };
+    let summary = match kind.as_str() {
+        "copy" => {
+            let task = SelectiveCopyTask::standard(model.ctx());
+            coordinator::run_task(&mut model, &task, &cfg)?
+        }
+        "induction" => {
+            let task = InductionTask::standard(model.ctx());
+            coordinator::run_task(&mut model, &task, &cfg)?
+        }
+        other => bail!("unknown task {other}"),
+    };
+    println!(
+        "done: {} steps, final loss {:.4}, exact {:.2}% / token {:.2}%",
+        summary.steps_run,
+        summary.final_loss,
+        summary.final_accuracy.exact * 100.0,
+        summary.final_accuracy.token * 100.0,
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------------ eval
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let spec = Args::new("psf eval", "perplexity + downstream MCQ accuracy")
+        .req("model", "artifact name")
+        .opt("corpus", "web", "books | wiki | web (held-out stream)")
+        .opt("corpus-bytes", "2000000", "synthetic corpus size")
+        .opt("ppl-batches", "8", "batches for perplexity")
+        .opt("questions", "100", "MCQ questions")
+        .opt("choices", "4", "choices per question")
+        .opt("span", "16", "continuation span tokens")
+        .opt("shots", "0", "few-shot examples per question")
+        .opt("checkpoint", "", "restore state from checkpoint file")
+        .opt("seed", "0", "seed");
+    let p = parse(spec, argv)?;
+
+    let mut model = runtime::load_model(
+        p.str("model"),
+        LoadOpts { train: false, evalloss: true, fwd: true, grads: false },
+    )?;
+    if let Some(ck) = non_empty(p.str("checkpoint")) {
+        let ckpt = polysketchformer::checkpoint::Checkpoint::load(std::path::Path::new(ck))?;
+        let state = ckpt
+            .get("state")
+            .ok_or_else(|| anyhow!("checkpoint has no state section"))?;
+        model.set_state(state)?;
+        println!("restored checkpoint at step {}", ckpt.step);
+    }
+    let flavor = Flavor::parse(p.str("corpus"))
+        .ok_or_else(|| anyhow!("bad corpus {}", p.str("corpus")))?;
+    let seed = p.u64("seed")?;
+    let ds = data::load_corpus_tokens(
+        flavor,
+        p.usize("corpus-bytes")?,
+        model.vocab(),
+        seed,
+        None,
+    )?;
+    let mut test = Batcher::new(&ds.test, model.batch(), model.ctx() + 1, seed);
+    let ppl = coordinator::perplexity(&model, &mut test, p.usize("ppl-batches")?)?;
+    println!("perplexity: {ppl:.3}");
+
+    let shots = p.usize("shots")?;
+    let qs = coordinator::gen_cloze_questions(
+        &ds.test,
+        model.ctx(),
+        p.usize("questions")?,
+        p.usize("choices")?,
+        p.usize("span")?,
+        shots,
+        seed,
+    );
+    let acc = coordinator::score_mcq(&model, &qs)?;
+    println!("mcq accuracy ({shots}-shot, {} questions): {:.1}%", qs.len(), acc * 100.0);
+    Ok(())
+}
+
+// ------------------------------------------------------------------ attn
+
+fn cmd_attn(argv: &[String]) -> Result<()> {
+    let spec = Args::new("psf attn", "run one attention micro-artifact")
+        .req("name", "attn artifact name (see `psf list`)")
+        .opt("iters", "3", "executions to time")
+        .opt("seed", "0", "input seed");
+    let p = parse(spec, argv)?;
+
+    let micro = runtime::load_attn(p.str("name"))?;
+    let n = micro.numel();
+    let mut rng = polysketchformer::Pcg::seeded(p.u64("seed")?);
+    let q: Vec<f32> = (0..n).map(|_| rng.gaussian() * 0.5).collect();
+    let k: Vec<f32> = (0..n).map(|_| rng.gaussian() * 0.5).collect();
+    let v: Vec<f32> = (0..n).map(|_| rng.gaussian() * 0.5).collect();
+
+    let iters = p.usize("iters")?;
+    let mut out = Vec::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        out = micro.run(&q, &k, &v)?;
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let finite = out.iter().all(|x| x.is_finite());
+    println!(
+        "{}: {} elements, {:.3} ms/exec, finite={}",
+        micro.manifest.name,
+        out.len(),
+        per * 1e3,
+        finite,
+    );
+    if !finite {
+        bail!("non-finite outputs");
+    }
+    Ok(())
+}
+
+fn non_empty(s: &str) -> Option<&str> {
+    (!s.is_empty()).then_some(s)
+}

@@ -1,0 +1,271 @@
+//! Metrics substrate: JSONL/CSV emission + an in-memory run recorder.
+//!
+//! No serde in this environment; JSON values are emitted by a tiny
+//! hand-rolled encoder that covers the shapes we log (flat objects of
+//! string/number/bool).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::stats::Ema;
+
+/// A flat JSON-encodable record.
+#[derive(Clone, Debug, Default)]
+pub struct Record {
+    fields: BTreeMap<String, Field>,
+}
+
+#[derive(Clone, Debug)]
+pub enum Field {
+    Str(String),
+    F64(f64),
+    I64(i64),
+    Bool(bool),
+}
+
+impl Record {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn str(mut self, k: &str, v: impl Into<String>) -> Self {
+        self.fields.insert(k.into(), Field::Str(v.into()));
+        self
+    }
+
+    pub fn f64(mut self, k: &str, v: f64) -> Self {
+        self.fields.insert(k.into(), Field::F64(v));
+        self
+    }
+
+    pub fn i64(mut self, k: &str, v: i64) -> Self {
+        self.fields.insert(k.into(), Field::I64(v));
+        self
+    }
+
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.fields.insert(k.into(), Field::Bool(v));
+        self
+    }
+
+    pub fn get_f64(&self, k: &str) -> Option<f64> {
+        match self.fields.get(k)? {
+            Field::F64(v) => Some(*v),
+            Field::I64(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{");
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{}:", json_escape(k));
+            match v {
+                Field::Str(x) => s.push_str(&json_escape(x)),
+                Field::F64(x) => {
+                    if x.is_finite() {
+                        let _ = write!(s, "{x}");
+                    } else {
+                        s.push_str("null");
+                    }
+                }
+                Field::I64(x) => {
+                    let _ = write!(s, "{x}");
+                }
+                Field::Bool(x) => {
+                    let _ = write!(s, "{x}");
+                }
+            }
+        }
+        s.push('}');
+        s
+    }
+}
+
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Append-only JSONL writer.
+pub struct JsonlWriter {
+    w: BufWriter<File>,
+    pub path: PathBuf,
+}
+
+impl JsonlWriter {
+    pub fn create(path: &Path) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let f = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JsonlWriter { w: BufWriter::new(f), path: path.to_path_buf() })
+    }
+
+    pub fn write(&mut self, rec: &Record) -> anyhow::Result<()> {
+        writeln!(self.w, "{}", rec.to_json())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Training-run recorder: smoothed loss curve + periodic console lines +
+/// JSONL persistence.
+pub struct RunLogger {
+    writer: Option<JsonlWriter>,
+    ema: Ema,
+    pub history: Vec<(u64, f64)>,
+    echo_every: u64,
+}
+
+impl RunLogger {
+    pub fn new(path: Option<&Path>, echo_every: u64) -> anyhow::Result<Self> {
+        let writer = match path {
+            Some(p) => Some(JsonlWriter::create(p)?),
+            None => None,
+        };
+        Ok(RunLogger { writer, ema: Ema::new(0.05), history: Vec::new(), echo_every })
+    }
+
+    pub fn log_step(&mut self, step: u64, loss: f64, extra: Record) -> anyhow::Result<()> {
+        let smooth = self.ema.push(loss);
+        self.history.push((step, loss));
+        if let Some(w) = &mut self.writer {
+            let rec = extra.i64("step", step as i64).f64("loss", loss).f64("loss_ema", smooth);
+            w.write(&rec)?;
+        }
+        if self.echo_every > 0 && step % self.echo_every == 0 {
+            eprintln!("step {step:>6}  loss {loss:.4}  ema {smooth:.4}");
+        }
+        Ok(())
+    }
+
+    pub fn finish(&mut self) -> anyhow::Result<()> {
+        if let Some(w) = &mut self.writer {
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    pub fn final_ema(&self) -> Option<f64> {
+        self.ema.get()
+    }
+}
+
+/// Minimal CSV writer for bench tables.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> anyhow::Result<()> {
+        let quoted: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        writeln!(self.w, "{}", quoted.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_json_shape() {
+        let r = Record::new().str("name", "x").f64("v", 1.5).i64("n", 3).bool("ok", true);
+        assert_eq!(r.to_json(), r#"{"n":3,"name":"x","ok":true,"v":1.5}"#);
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("a\"b\\c\nd"), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn nonfinite_becomes_null() {
+        let r = Record::new().f64("v", f64::NAN);
+        assert_eq!(r.to_json(), r#"{"v":null}"#);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join("psf_metrics_test");
+        let path = dir.join("out.jsonl");
+        let _ = fs::remove_file(&path);
+        let mut w = JsonlWriter::create(&path).unwrap();
+        w.write(&Record::new().i64("a", 1)).unwrap();
+        w.write(&Record::new().i64("a", 2)).unwrap();
+        w.flush().unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().next().unwrap().contains("\"a\":1"));
+    }
+
+    #[test]
+    fn run_logger_history() {
+        let mut l = RunLogger::new(None, 0).unwrap();
+        for s in 0..10 {
+            l.log_step(s, 5.0 - s as f64 * 0.1, Record::new()).unwrap();
+        }
+        assert_eq!(l.history.len(), 10);
+        assert!(l.final_ema().unwrap() < 5.0);
+    }
+
+    #[test]
+    fn csv_quotes_commas() {
+        let dir = std::env::temp_dir().join("psf_metrics_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["x,y".into(), "z".into()]).unwrap();
+        w.flush().unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"x,y\",z"));
+    }
+}

@@ -1,0 +1,147 @@
+//! Property-testing mini-framework (no proptest in this environment).
+//!
+//! Generative testing with deterministic seeds and first-failure shrinking
+//! over a size parameter: generators receive (rng, size); on failure the
+//! runner retries with smaller sizes to report a minimal-ish case.
+//!
+//! ```ignore
+//! prop::check("sorted idempotent", 100, |rng, size| {
+//!     let mut xs = prop::gen_vec_f32(rng, size, -1e3..1e3);
+//!     xs.sort_by(f32::total_cmp); let once = xs.clone();
+//!     xs.sort_by(f32::total_cmp);
+//!     prop::ensure(xs == once, "second sort changed order")
+//! });
+//! ```
+
+use crate::util::rng::Pcg;
+use std::ops::Range;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate float equality with mixed abs/rel tolerance.
+pub fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Run `cases` random evaluations of `prop`, shrinking the size on failure.
+/// Panics (failing the enclosing #[test]) with seed + size of the minimal
+/// reproduction found.
+pub fn check(name: &str, cases: u32, prop: impl Fn(&mut Pcg, usize) -> PropResult) {
+    check_seeded(name, 0, cases, prop)
+}
+
+pub fn check_seeded(name: &str, seed: u64, cases: u32,
+                    prop: impl Fn(&mut Pcg, usize) -> PropResult) {
+    let mut root = Pcg::new(seed ^ hash_name(name), 0x5eed);
+    for case in 0..cases {
+        // Sizes sweep small -> large so early failures are already small.
+        let size = 1 + (case as usize * 97 % 64);
+        let case_seed = root.next_u64();
+        let mut rng = Pcg::new(case_seed, case as u64);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: retry smaller sizes with the same stream seed.
+            let mut minimal = (size, msg.clone());
+            for s in (1..size).rev() {
+                let mut rng = Pcg::new(case_seed, case as u64);
+                if let Err(m) = prop(&mut rng, s) {
+                    minimal = (s, m);
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 size {size}; minimal size {}): {}",
+                minimal.0, minimal.1
+            );
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ------------------------------------------------------------ generators
+
+pub fn gen_f32(rng: &mut Pcg, range: Range<f32>) -> f32 {
+    range.start + rng.f32() * (range.end - range.start)
+}
+
+pub fn gen_vec_f32(rng: &mut Pcg, len: usize, range: Range<f32>) -> Vec<f32> {
+    (0..len).map(|_| gen_f32(rng, range.clone())).collect()
+}
+
+pub fn gen_usize(rng: &mut Pcg, range: Range<usize>) -> usize {
+    range.start + rng.usize_below(range.end - range.start)
+}
+
+/// Random power of two in [lo, hi] (inclusive, both powers of two).
+pub fn gen_pow2(rng: &mut Pcg, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+    let lo_exp = lo.trailing_zeros();
+    let hi_exp = hi.trailing_zeros();
+    1 << (lo_exp + rng.next_u32() % (hi_exp - lo_exp + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 50, |rng, size| {
+            let a = gen_vec_f32(rng, size, -10.0..10.0);
+            let b = gen_vec_f32(rng, size, -10.0..10.0);
+            let ab: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+            let ba: Vec<f32> = b.iter().zip(&a).map(|(x, y)| x + y).collect();
+            ensure(ab == ba, "a+b != b+a")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_context() {
+        check("always fails", 10, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_reports_small_size() {
+        let result = std::panic::catch_unwind(|| {
+            check("fails at >=4", 50, |_, size| ensure(size < 4, "too big"));
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal size 4"), "{msg}");
+    }
+
+    #[test]
+    fn gen_pow2_in_range() {
+        let mut rng = Pcg::seeded(0);
+        for _ in 0..100 {
+            let v = gen_pow2(&mut rng, 2, 64);
+            assert!(v.is_power_of_two() && (2..=64).contains(&v));
+        }
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-5));
+        assert!(!close(1.0, 1.1, 1e-5));
+    }
+}

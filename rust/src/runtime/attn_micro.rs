@@ -1,0 +1,56 @@
+//! Standalone attention-op artifacts (kind "attn") for latency benches.
+//!
+//! Each bundle holds one executable mapping (H, n, hd) q/k/v tensors to the
+//! attention output — the L1 Pallas kernel lowered through HLO, runnable
+//! from rust without Python (Figures 1 and 4, Table 4).
+
+use anyhow::{bail, Result};
+
+use super::exec::{self, Executable};
+use super::manifest::Manifest;
+
+pub struct AttnMicro {
+    pub manifest: Manifest,
+    exe: Executable,
+    pub heads: usize,
+    pub n: usize,
+    pub head_dim: usize,
+}
+
+impl AttnMicro {
+    pub fn load(manifest: Manifest) -> Result<AttnMicro> {
+        if manifest.kind != "attn" {
+            bail!("{}: kind {} is not an attn bundle", manifest.name, manifest.kind);
+        }
+        let exe = Executable::load(&manifest.file("attn")?)?;
+        let heads = manifest.cfg_usize("heads")?;
+        let n = manifest.cfg_usize("n")?;
+        let head_dim = manifest.cfg_usize("head_dim")?;
+        Ok(AttnMicro { manifest, exe, heads, n, head_dim })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.heads * self.n * self.head_dim
+    }
+
+    /// Run attention on flat (H*n*hd) q/k/v; returns the flat output.
+    pub fn run(&self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let dims = [self.heads, self.n, self.head_dim];
+        let qb = exec::to_device_f32(q, &dims)?;
+        let kb = exec::to_device_f32(k, &dims)?;
+        let vb = exec::to_device_f32(v, &dims)?;
+        let out = self.exe.run(&[&qb, &kb, &vb])?;
+        exec::to_host_f32(&out)
+    }
+
+    /// Run with pre-uploaded device buffers (hot-loop benchmarking: upload
+    /// once, execute many times).
+    pub fn run_buffers(
+        &self,
+        q: &xla::PjRtBuffer,
+        k: &xla::PjRtBuffer,
+        v: &xla::PjRtBuffer,
+    ) -> Result<xla::PjRtBuffer> {
+        self.exe.run(&[q, k, v])
+    }
+}

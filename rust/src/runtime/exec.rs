@@ -1,0 +1,147 @@
+//! PJRT execution: client singleton + compiled-artifact wrapper.
+//!
+//! Every artifact has a single non-tuple array root (see aot.py docstring),
+//! so outputs transfer cleanly and can be fed straight back in as inputs —
+//! the fused train-state vector stays device-resident across steps.
+
+use std::cell::RefCell;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+thread_local! {
+    // PjRtClient is Rc-based (not Send/Sync): all PJRT objects are confined
+    // to the thread that created them, so the client is thread-local.  Keep
+    // every runtime object (executables, buffers) on one thread; worker
+    // threads in `exec::pool` do host-side work only.
+    static CLIENT: RefCell<Option<PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// The thread's PJRT CPU client (created on first use; cheap Rc clone).
+pub fn client() -> Result<PjRtClient> {
+    CLIENT.with(|c| {
+        let mut slot = c.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(
+                PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?,
+            );
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+/// A compiled single-root HLO artifact.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Load HLO text from `path` and compile it on the CPU client.
+    pub fn load(path: &Path) -> Result<Executable> {
+        let name = path
+            .file_name()
+            .and_then(|f| f.to_str())
+            .unwrap_or("<artifact>")
+            .to_string();
+        let proto = HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let client = client()?;
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Executable { exe, name })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with device-resident buffers; returns the single output buffer.
+    pub fn run(&self, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+        let out = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        out.into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("executing {}: empty result", self.name))
+    }
+
+    /// Execute with host literals; returns the single output buffer.
+    pub fn run_literals(&self, args: &[Literal]) -> Result<PjRtBuffer> {
+        let out = self
+            .exe
+            .execute::<Literal>(args)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        out.into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("executing {}: empty result", self.name))
+    }
+}
+
+// ---------------------------------------------------------------- host I/O
+
+/// Upload an f32 slice as a device buffer of the given dims.
+pub fn to_device_f32(data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+    client()?
+        .buffer_from_host_buffer(data, dims, None)
+        .map_err(|e| anyhow!("host->device f32 {dims:?}: {e}"))
+}
+
+/// Upload an i32 slice as a device buffer of the given dims.
+pub fn to_device_i32(data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+    client()?
+        .buffer_from_host_buffer(data, dims, None)
+        .map_err(|e| anyhow!("host->device i32 {dims:?}: {e}"))
+}
+
+/// Download a device buffer as a flat f32 vec.
+pub fn to_host_f32(buf: &PjRtBuffer) -> Result<Vec<f32>> {
+    let lit = buf
+        .to_literal_sync()
+        .map_err(|e| anyhow!("device->host transfer: {e}"))?;
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e}"))
+}
+
+/// Read a little-endian f32 binary file (e.g. `<name>.init.bin`).
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        anyhow::bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("psf_exec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("vals.bin");
+        let vals = [1.5f32, -2.25, 0.0, 1e-7];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(read_f32_file(&path).unwrap(), vals);
+    }
+
+    #[test]
+    fn read_f32_file_rejects_ragged() {
+        let dir = std::env::temp_dir().join("psf_exec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ragged.bin");
+        std::fs::write(&path, [0u8; 7]).unwrap();
+        assert!(read_f32_file(&path).is_err());
+    }
+}

@@ -1,0 +1,277 @@
+//! Artifact manifest parser (`*.manifest.txt`, format "psf-manifest v1").
+//!
+//! The AOT pipeline (python/compile/aot.py) writes one manifest per emitted
+//! artifact bundle.  Line-oriented key/value format:
+//!
+//! ```text
+//! psf-manifest v1
+//! name psk4_r16_learned_local_v512_d128_l4_h4x32_c256
+//! kind model                     # model | attn
+//! cfg vocab 512                  # ModelConfig fields
+//! tc peak_lr 0.0003              # TrainConfig fields (model kind only)
+//! batch 8
+//! nparams 1180672
+//! leaf ['layers'][0]['attn_q'] 0 128x128
+//! file train psk4....train.hlo.txt
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One parameter leaf: pytree path, flat offset into theta, shape.
+#[derive(Clone, Debug)]
+pub struct Leaf {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl Leaf {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Parsed manifest for one artifact bundle.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub name: String,
+    pub kind: String,
+    pub cfg: BTreeMap<String, String>,
+    pub tc: BTreeMap<String, String>,
+    pub batch: usize,
+    pub nparams: usize,
+    pub leaves: Vec<Leaf>,
+    pub files: BTreeMap<String, String>,
+    /// Directory the manifest was loaded from (artifact files live here).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let mut man = Self::parse(&text)?;
+        man.dir = path
+            .parent()
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| PathBuf::from("."));
+        Ok(man)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some("psf-manifest v1") => {}
+            other => bail!("bad manifest header: {other:?}"),
+        }
+        let mut man = Manifest::default();
+        for (lno, line) in lines.enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, rest) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow!("manifest line {}: no value: {line}", lno + 2))?;
+            match key {
+                "name" => man.name = rest.to_string(),
+                "kind" => man.kind = rest.to_string(),
+                "batch" => man.batch = rest.parse().context("batch")?,
+                "nparams" => man.nparams = rest.parse().context("nparams")?,
+                "cfg" | "tc" => {
+                    let (k, v) = rest
+                        .split_once(' ')
+                        .ok_or_else(|| anyhow!("manifest line {}: bad {key}", lno + 2))?;
+                    let map = if key == "cfg" { &mut man.cfg } else { &mut man.tc };
+                    map.insert(k.to_string(), v.to_string());
+                }
+                "leaf" => {
+                    // leaf <name> <offset> <dims>; name has no spaces.
+                    let mut it = rest.rsplitn(3, ' ');
+                    let dims = it.next().ok_or_else(|| anyhow!("leaf dims"))?;
+                    let off = it.next().ok_or_else(|| anyhow!("leaf offset"))?;
+                    let name = it.next().ok_or_else(|| anyhow!("leaf name"))?;
+                    let shape = if dims == "scalar" {
+                        vec![]
+                    } else {
+                        dims.split('x')
+                            .map(|d| d.parse::<usize>().context("leaf dim"))
+                            .collect::<Result<Vec<_>>>()?
+                    };
+                    man.leaves.push(Leaf {
+                        name: name.to_string(),
+                        offset: off.parse().context("leaf offset")?,
+                        shape,
+                    });
+                }
+                "file" => {
+                    let (k, v) = rest
+                        .split_once(' ')
+                        .ok_or_else(|| anyhow!("manifest line {}: bad file", lno + 2))?;
+                    man.files.insert(k.to_string(), v.to_string());
+                }
+                other => bail!("manifest line {}: unknown key {other}", lno + 2),
+            }
+        }
+        if man.name.is_empty() {
+            bail!("manifest missing name");
+        }
+        Ok(man)
+    }
+
+    /// Absolute path of a role's artifact file ("train", "fwd", ...).
+    pub fn file(&self, role: &str) -> Result<PathBuf> {
+        let f = self
+            .files
+            .get(role)
+            .ok_or_else(|| anyhow!("manifest {}: no file role {role}", self.name))?;
+        Ok(self.dir.join(f))
+    }
+
+    pub fn has_file(&self, role: &str) -> bool {
+        self.files.contains_key(role)
+    }
+
+    // Typed cfg accessors -------------------------------------------------
+
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.cfg
+            .get(key)
+            .ok_or_else(|| anyhow!("manifest {}: no cfg {key}", self.name))?
+            .parse()
+            .with_context(|| format!("cfg {key}"))
+    }
+
+    pub fn cfg_f64(&self, key: &str) -> Result<f64> {
+        self.cfg
+            .get(key)
+            .ok_or_else(|| anyhow!("manifest {}: no cfg {key}", self.name))?
+            .parse()
+            .with_context(|| format!("cfg {key}"))
+    }
+
+    pub fn cfg_str(&self, key: &str) -> Option<&str> {
+        self.cfg.get(key).map(|s| s.as_str())
+    }
+
+    pub fn tc_f64(&self, key: &str) -> Result<f64> {
+        self.tc
+            .get(key)
+            .ok_or_else(|| anyhow!("manifest {}: no tc {key}", self.name))?
+            .parse()
+            .with_context(|| format!("tc {key}"))
+    }
+
+    pub fn tc_usize(&self, key: &str) -> Result<usize> {
+        self.tc
+            .get(key)
+            .ok_or_else(|| anyhow!("manifest {}: no tc {key}", self.name))?
+            .parse()
+            .with_context(|| format!("tc {key}"))
+    }
+
+    /// Context length (model kind).
+    pub fn ctx(&self) -> Result<usize> {
+        self.cfg_usize("ctx")
+    }
+
+    /// Vocabulary size (model kind).
+    pub fn vocab(&self) -> Result<usize> {
+        self.cfg_usize("vocab")
+    }
+
+    /// Fused state-vector size: 3P + 2 (theta | m | v | step | loss).
+    pub fn state_size(&self) -> usize {
+        3 * self.nparams + 2
+    }
+}
+
+/// Discover every manifest in a directory, keyed by artifact name.
+pub fn discover(dir: &Path) -> Result<BTreeMap<String, Manifest>> {
+    let mut out = BTreeMap::new();
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading artifact dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        let fname = match path.file_name().and_then(|f| f.to_str()) {
+            Some(f) => f,
+            None => continue,
+        };
+        if fname.ends_with(".manifest.txt") {
+            let man = Manifest::load(&path)?;
+            out.insert(man.name.clone(), man);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "psf-manifest v1\n\
+        name psk_test\n\
+        kind model\n\
+        cfg vocab 512\n\
+        cfg ctx 256\n\
+        cfg attn polysketch\n\
+        tc peak_lr 0.0003\n\
+        tc total_steps 600\n\
+        batch 8\n\
+        nparams 1000\n\
+        leaf ['tok_emb'] 0 512x128\n\
+        leaf ['ln_f']['scale'] 65536 128\n\
+        leaf ['scalar_leaf'] 65664 scalar\n\
+        file train psk_test.train.hlo.txt\n\
+        file init psk_test.init.bin\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "psk_test");
+        assert_eq!(m.kind, "model");
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.nparams, 1000);
+        assert_eq!(m.state_size(), 3002);
+        assert_eq!(m.cfg_usize("vocab").unwrap(), 512);
+        assert_eq!(m.ctx().unwrap(), 256);
+        assert_eq!(m.tc_f64("peak_lr").unwrap(), 0.0003);
+        assert_eq!(m.tc_usize("total_steps").unwrap(), 600);
+        assert_eq!(m.leaves.len(), 3);
+        assert_eq!(m.leaves[0].shape, vec![512, 128]);
+        assert_eq!(m.leaves[0].numel(), 512 * 128);
+        assert_eq!(m.leaves[2].shape, Vec::<usize>::new());
+        assert_eq!(m.leaves[2].numel(), 1);
+        assert!(m.has_file("train"));
+        assert!(!m.has_file("fwd"));
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(Manifest::parse("nope\nname x\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(Manifest::parse("psf-manifest v1\nname x\nbogus 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_name() {
+        assert!(Manifest::parse("psf-manifest v1\nkind model\n").is_err());
+    }
+
+    #[test]
+    fn file_role_resolution() {
+        let mut m = Manifest::parse(SAMPLE).unwrap();
+        m.dir = PathBuf::from("/tmp/arts");
+        assert_eq!(
+            m.file("train").unwrap(),
+            PathBuf::from("/tmp/arts/psk_test.train.hlo.txt")
+        );
+        assert!(m.file("nonexistent").is_err());
+    }
+}

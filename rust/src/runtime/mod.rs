@@ -1,0 +1,47 @@
+//! Runtime layer: PJRT client + AOT-artifact loading and execution.
+//!
+//! The compile path (`make artifacts`) is the only place Python runs; this
+//! module gives the rust coordinator everything it needs at run time:
+//!
+//! * [`manifest`] — parse the `*.manifest.txt` descriptors aot.py emits,
+//! * [`exec`] — the PJRT CPU client singleton, HLO-text loading/compiling,
+//!   and host<->device transfer helpers,
+//! * [`model`] — [`ModelRuntime`]: a loaded model bundle with the fused
+//!   train state held device-resident across steps,
+//! * [`attn_micro`] — standalone attention-op artifacts for latency benches.
+//!
+//! Single-array-root convention: every artifact returns exactly one array
+//! (xla_extension 0.5.1 cannot transfer tuple literals), so outputs feed
+//! straight back in as inputs — see aot.py's module docstring.
+
+pub mod attn_micro;
+pub mod exec;
+pub mod manifest;
+pub mod model;
+pub mod ops;
+
+pub use attn_micro::AttnMicro;
+pub use exec::{client, Executable};
+pub use manifest::{discover, Leaf, Manifest};
+pub use model::{LoadOpts, ModelRuntime, StepStats};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$PSF_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("PSF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Load a model bundle by artifact name from the default directory.
+pub fn load_model(name: &str, opts: LoadOpts) -> anyhow::Result<ModelRuntime> {
+    let path = artifacts_dir().join(format!("{name}.manifest.txt"));
+    ModelRuntime::load_path(&path, opts)
+}
+
+/// Load an attention micro-bundle by artifact name.
+pub fn load_attn(name: &str) -> anyhow::Result<AttnMicro> {
+    let path = artifacts_dir().join(format!("{name}.manifest.txt"));
+    AttnMicro::load(Manifest::load(&path)?)
+}

@@ -1,0 +1,252 @@
+//! ModelRuntime: a loaded model-artifact bundle with device-resident state.
+//!
+//! Wraps the four executables emitted per model config (train / stats /
+//! evalloss / fwd) plus `init.bin`.  The fused state vector
+//! `[theta | m | v | step | loss]` lives on the device; each train step
+//! feeds the previous output buffer straight back in, and per-step metrics
+//! come from the 8-byte `stats` output — the hot loop never moves
+//! parameters over the host bridge.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+use xla::PjRtBuffer;
+
+use super::exec::{self, Executable};
+use super::manifest::Manifest;
+
+/// Per-step training statistics extracted from the state vector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepStats {
+    /// Optimizer step count after the update.
+    pub step: u64,
+    /// Mean masked NLL of the step's batch.
+    pub loss: f32,
+}
+
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    train: Option<Executable>,
+    stats: Option<Executable>,
+    evalloss: Option<Executable>,
+    fwd: Option<Executable>,
+    grads: Option<Executable>,
+    gradstep: Option<Executable>,
+    /// Device-resident fused state vector, size `manifest.state_size()`.
+    state: PjRtBuffer,
+}
+
+/// Which executables to compile (compiling everything is the default but a
+/// latency bench that only needs `fwd` can skip the rest).
+#[derive(Clone, Copy, Debug)]
+pub struct LoadOpts {
+    pub train: bool,
+    pub evalloss: bool,
+    pub fwd: bool,
+    /// grads + gradstep pair (data-parallel / microbatch accumulation).
+    pub grads: bool,
+}
+
+impl Default for LoadOpts {
+    fn default() -> Self {
+        LoadOpts { train: true, evalloss: true, fwd: true, grads: false }
+    }
+}
+
+impl LoadOpts {
+    pub fn none() -> Self {
+        LoadOpts { train: false, evalloss: false, fwd: false, grads: false }
+    }
+
+    pub fn train_only() -> Self {
+        LoadOpts { train: true, ..Self::none() }
+    }
+
+    pub fn eval_only() -> Self {
+        LoadOpts { evalloss: true, ..Self::none() }
+    }
+
+    pub fn fwd_only() -> Self {
+        LoadOpts { fwd: true, ..Self::none() }
+    }
+
+    pub fn grads_only() -> Self {
+        LoadOpts { grads: true, ..Self::none() }
+    }
+
+    pub fn with_grads(mut self) -> Self {
+        self.grads = true;
+        self
+    }
+
+    pub fn with_fwd(mut self) -> Self {
+        self.fwd = true;
+        self
+    }
+
+    pub fn with_evalloss(mut self) -> Self {
+        self.evalloss = true;
+        self
+    }
+}
+
+impl ModelRuntime {
+    /// Load a model bundle from its manifest, compiling the selected
+    /// executables and initializing device state from `init.bin`.
+    pub fn load(manifest: Manifest, opts: LoadOpts) -> Result<ModelRuntime> {
+        if manifest.kind != "model" {
+            bail!("{}: kind {} is not a model bundle", manifest.name, manifest.kind);
+        }
+        let compile = |role: &str| -> Result<Executable> {
+            Executable::load(&manifest.file(role)?)
+        };
+        let train = if opts.train { Some(compile("train")?) } else { None };
+        // stats is tiny; compile it whenever stepping (loss readback).
+        let stats = if opts.train || opts.grads { Some(compile("stats")?) } else { None };
+        let evalloss = if opts.evalloss { Some(compile("evalloss")?) } else { None };
+        let fwd = if opts.fwd { Some(compile("fwd")?) } else { None };
+        let grads = if opts.grads { Some(compile("grads")?) } else { None };
+        let gradstep = if opts.grads { Some(compile("gradstep")?) } else { None };
+
+        let theta = exec::read_f32_file(&manifest.file("init")?)?;
+        if theta.len() != manifest.nparams {
+            bail!(
+                "{}: init.bin has {} params, manifest says {}",
+                manifest.name,
+                theta.len(),
+                manifest.nparams
+            );
+        }
+        let state = Self::state_from_theta(&manifest, &theta)?;
+        Ok(ModelRuntime { manifest, train, stats, evalloss, fwd, grads, gradstep, state })
+    }
+
+    /// Convenience: load by manifest path.
+    pub fn load_path(path: &Path, opts: LoadOpts) -> Result<ModelRuntime> {
+        Self::load(Manifest::load(path)?, opts)
+    }
+
+    fn state_from_theta(man: &Manifest, theta: &[f32]) -> Result<PjRtBuffer> {
+        let mut state = vec![0.0f32; man.state_size()];
+        state[..man.nparams].copy_from_slice(theta);
+        exec::to_device_f32(&state, &[man.state_size()])
+    }
+
+    // ------------------------------------------------------------- steps
+
+    /// One optimizer step on a (batch, ctx+1) token batch; returns the
+    /// post-step (step count, loss).
+    pub fn train_step(&mut self, tokens: &[i32]) -> Result<StepStats> {
+        let exe = self.train.as_ref().ok_or_else(|| anyhow!("train not compiled"))?;
+        let toks = self.upload_tokens(tokens, self.manifest.ctx()? + 1)?;
+        self.state = exe.run(&[&self.state, &toks])?;
+        self.read_stats()
+    }
+
+    /// Read (step, loss) from the device state — an 8-byte transfer.
+    pub fn read_stats(&self) -> Result<StepStats> {
+        let exe = self.stats.as_ref().ok_or_else(|| anyhow!("stats not compiled"))?;
+        let out = exe.run(&[&self.state])?;
+        let v = exec::to_host_f32(&out)?;
+        if v.len() != 2 {
+            bail!("stats output has {} elements, want 2", v.len());
+        }
+        Ok(StepStats { step: v[0] as u64, loss: v[1] })
+    }
+
+    /// Mean masked NLL over a (batch, ctx+1) token batch (no update).
+    pub fn eval_loss(&self, tokens: &[i32]) -> Result<f32> {
+        let exe = self.evalloss.as_ref().ok_or_else(|| anyhow!("evalloss not compiled"))?;
+        let toks = self.upload_tokens(tokens, self.manifest.ctx()? + 1)?;
+        let out = exe.run(&[&self.state, &toks])?;
+        Ok(exec::to_host_f32(&out)?[0])
+    }
+
+    /// Logits for a (batch, ctx) token batch, flattened (B * ctx * vocab).
+    pub fn forward(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let exe = self.fwd.as_ref().ok_or_else(|| anyhow!("fwd not compiled"))?;
+        let toks = self.upload_tokens(tokens, self.manifest.ctx()?)?;
+        let out = exe.run(&[&self.state, &toks])?;
+        exec::to_host_f32(&out)
+    }
+
+    /// Gradient+loss vector (P+1,) for one token batch, left on device.
+    /// The coordinator accumulates these across shards / microbatches and
+    /// applies them with [`Self::apply_gradvec`].
+    pub fn grad_loss(&self, tokens: &[i32]) -> Result<PjRtBuffer> {
+        let exe = self.grads.as_ref().ok_or_else(|| anyhow!("grads not compiled"))?;
+        let toks = self.upload_tokens(tokens, self.manifest.ctx()? + 1)?;
+        exe.run(&[&self.state, &toks])
+    }
+
+    /// One optimizer update from a (P+1,) grad vector (device buffer).
+    pub fn apply_gradvec(&mut self, gradvec: &PjRtBuffer) -> Result<StepStats> {
+        let exe = self.gradstep.as_ref().ok_or_else(|| anyhow!("gradstep not compiled"))?;
+        self.state = exe.run(&[&self.state, gradvec])?;
+        self.read_stats()
+    }
+
+    /// Gradient vector length: P + 1 (grads | loss).
+    pub fn grad_dim(&self) -> usize {
+        self.manifest.nparams + 1
+    }
+
+    fn upload_tokens(&self, tokens: &[i32], seq: usize) -> Result<PjRtBuffer> {
+        let batch = self.manifest.batch;
+        if tokens.len() != batch * seq {
+            bail!(
+                "token batch has {} elements, artifact wants {}x{}",
+                tokens.len(),
+                batch,
+                seq
+            );
+        }
+        exec::to_device_i32(tokens, &[batch, seq])
+    }
+
+    // ------------------------------------------------------------- state
+
+    /// Download the full state vector (checkpointing).
+    pub fn state_to_host(&self) -> Result<Vec<f32>> {
+        exec::to_host_f32(&self.state)
+    }
+
+    /// Download just theta (the trained parameters).
+    pub fn theta_to_host(&self) -> Result<Vec<f32>> {
+        let mut full = self.state_to_host()?;
+        full.truncate(self.manifest.nparams);
+        Ok(full)
+    }
+
+    /// Replace device state wholesale (checkpoint restore).
+    pub fn set_state(&mut self, state: &[f32]) -> Result<()> {
+        if state.len() != self.manifest.state_size() {
+            bail!(
+                "state has {} elements, manifest wants {}",
+                state.len(),
+                self.manifest.state_size()
+            );
+        }
+        self.state = exec::to_device_f32(state, &[state.len()])?;
+        Ok(())
+    }
+
+    /// Reset to freshly-initialized parameters with zeroed optimizer state.
+    pub fn reset(&mut self) -> Result<()> {
+        let theta = exec::read_f32_file(&self.manifest.file("init")?)?;
+        self.state = Self::state_from_theta(&self.manifest, &theta)?;
+        Ok(())
+    }
+
+    pub fn batch(&self) -> usize {
+        self.manifest.batch
+    }
+
+    pub fn ctx(&self) -> usize {
+        self.manifest.ctx().unwrap_or(0)
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.manifest.vocab().unwrap_or(0)
+    }
+}

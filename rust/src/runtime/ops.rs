@@ -1,0 +1,109 @@
+//! Small device-side elementwise computations built in rust via XlaBuilder.
+//!
+//! The data-parallel coordinator accumulates gradient vectors on-device
+//! (`add`) and rescales the sum by 1/workers (`scale`) before the optimizer
+//! update, so simulated allreduce never round-trips P floats to the host.
+//! Compiled executables are cached per (op, length) on this thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+use xla::{PjRtBuffer, Shape, XlaBuilder};
+
+use super::exec::client;
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+enum OpKind {
+    Add,
+    Scale,
+}
+
+thread_local! {
+    static CACHE: RefCell<HashMap<(OpKind, usize), std::rc::Rc<xla::PjRtLoadedExecutable>>> =
+        RefCell::new(HashMap::new());
+}
+
+fn cached(kind: OpKind, n: usize) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+    CACHE.with(|c| {
+        if let Some(exe) = c.borrow().get(&(kind, n)) {
+            return Ok(exe.clone());
+        }
+        let builder = XlaBuilder::new(&format!("{kind:?}_{n}"));
+        let shape = Shape::array::<f32>(vec![n as i64]);
+        let x = builder
+            .parameter_s(0, &shape, "x")
+            .map_err(|e| anyhow!("builder param x: {e}"))?;
+        let root = match kind {
+            OpKind::Add => {
+                let y = builder
+                    .parameter_s(1, &shape, "y")
+                    .map_err(|e| anyhow!("builder param y: {e}"))?;
+                x.add_(&y).map_err(|e| anyhow!("builder add: {e}"))?
+            }
+            OpKind::Scale => {
+                let c = builder
+                    .parameter_s(1, &Shape::array::<f32>(vec![]), "c")
+                    .map_err(|e| anyhow!("builder param c: {e}"))?;
+                let cb = c
+                    .broadcast(&[n as i64])
+                    .map_err(|e| anyhow!("builder broadcast: {e}"))?;
+                x.mul_(&cb).map_err(|e| anyhow!("builder mul: {e}"))?
+            }
+        };
+        let comp = root.build().map_err(|e| anyhow!("builder build: {e}"))?;
+        let exe = client()?
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {kind:?}[{n}]: {e}"))?;
+        let exe = std::rc::Rc::new(exe);
+        c.borrow_mut().insert((kind, n), exe.clone());
+        Ok(exe)
+    })
+}
+
+fn run1(exe: &std::rc::Rc<xla::PjRtLoadedExecutable>, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+    exe.execute_b(args)
+        .map_err(|e| anyhow!("elementwise exec: {e}"))?
+        .into_iter()
+        .next()
+        .and_then(|r| r.into_iter().next())
+        .ok_or_else(|| anyhow!("elementwise exec: empty result"))
+}
+
+/// Device-side `x + y` for two f32[n] buffers.
+pub fn add(x: &PjRtBuffer, y: &PjRtBuffer, n: usize) -> Result<PjRtBuffer> {
+    run1(&cached(OpKind::Add, n)?, &[x, y])
+}
+
+/// Device-side `x * c` for an f32[n] buffer and host scalar.
+pub fn scale(x: &PjRtBuffer, c: f32, n: usize) -> Result<PjRtBuffer> {
+    let cbuf = super::exec::to_device_f32(&[c], &[])?;
+    run1(&cached(OpKind::Scale, n)?, &[x, &cbuf])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::exec::{to_device_f32, to_host_f32};
+
+    #[test]
+    fn add_and_scale_roundtrip() {
+        let x = to_device_f32(&[1.0, 2.0, 3.0], &[3]).unwrap();
+        let y = to_device_f32(&[10.0, 20.0, 30.0], &[3]).unwrap();
+        let s = add(&x, &y, 3).unwrap();
+        assert_eq!(to_host_f32(&s).unwrap(), vec![11.0, 22.0, 33.0]);
+        let h = scale(&s, 0.5, 3).unwrap();
+        assert_eq!(to_host_f32(&h).unwrap(), vec![5.5, 11.0, 16.5]);
+    }
+
+    #[test]
+    fn cache_reuses_executables() {
+        // Two calls with the same n must not recompile (observable only as
+        // not-crashing + correctness; the cache is internal).
+        for _ in 0..3 {
+            let x = to_device_f32(&[2.0; 8], &[8]).unwrap();
+            let out = scale(&x, 2.0, 8).unwrap();
+            assert_eq!(to_host_f32(&out).unwrap(), vec![4.0; 8]);
+        }
+    }
+}

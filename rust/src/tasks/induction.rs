@@ -1,0 +1,138 @@
+//! Induction Heads (Olsson et al. 2022; paper Appendix F.2).
+//!
+//! A sequence of random tokens contains one SPECIAL token at an arbitrary
+//! position; the second-to-last token is SPECIAL again and the model must
+//! output the token that followed the first SPECIAL occurrence.  Measures
+//! in-context pattern completion ("[A][B] ... [A] -> [B]").
+//!
+//! Vocabulary layout: 0 = PAD, 1 = SPECIAL, 2.. = regular tokens.
+//!
+//! Only the final position carries training signal; in the flattened batch
+//! every other target is negated so the AOT loss masks it (the model still
+//! *sees* the full sequence as inputs — see `loss_fn` in model.py).
+
+use super::Example;
+use crate::util::rng::Pcg;
+
+pub const SPECIAL: u32 = 1;
+pub const TOKEN_BASE: u32 = 2;
+
+#[derive(Clone, Copy, Debug)]
+pub struct InductionTask {
+    pub ctx: usize,
+    /// Number of regular (non-special) tokens; paper uses 16.
+    pub n_tokens: usize,
+}
+
+impl InductionTask {
+    pub fn new(ctx: usize, n_tokens: usize) -> Self {
+        assert!(ctx >= 8, "ctx too small for induction task");
+        assert!(n_tokens >= 2);
+        InductionTask { ctx, n_tokens }
+    }
+
+    /// Paper setup: vocabulary of 16 random tokens.
+    pub fn standard(ctx: usize) -> Self {
+        Self::new(ctx, 16)
+    }
+
+    pub fn vocab(&self) -> usize {
+        TOKEN_BASE as usize + self.n_tokens
+    }
+
+    /// Generate one example: tokens length ctx+1.
+    ///
+    /// Layout (input coordinates 0..ctx):
+    ///   random tokens everywhere, tokens[q] = SPECIAL for a random
+    ///   q < ctx-3, tokens[ctx-1] = SPECIAL, tokens[ctx] = tokens[q+1].
+    /// The single answer position (target coordinates) is ctx-1.
+    pub fn sample(&self, rng: &mut Pcg) -> Example {
+        let total = self.ctx + 1;
+        let mut tokens: Vec<u32> = (0..total)
+            .map(|_| TOKEN_BASE + rng.below(self.n_tokens as u64) as u32)
+            .collect();
+        // "a random position except the last 3 tokens" (Appendix F.2)
+        let q = rng.below((total - 3) as u64) as usize;
+        tokens[q] = SPECIAL;
+        tokens[total - 2] = SPECIAL;
+        tokens[total - 1] = tokens[q + 1];
+        Example { tokens, answer_positions: vec![self.ctx - 1] }
+    }
+
+    /// A deterministic batch as a flat (batch, ctx+1) i32 vec with
+    /// non-answer targets negated (masked-loss convention).
+    pub fn batch(&self, batch: usize, rng: &mut Pcg) -> (Vec<i32>, Vec<Example>) {
+        let mut flat = Vec::with_capacity(batch * (self.ctx + 1));
+        let mut examples = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let ex = self.sample(rng);
+            let answers: std::collections::HashSet<usize> =
+                ex.answer_positions.iter().copied().collect();
+            for (i, &t) in ex.tokens.iter().enumerate() {
+                // Token at sequence index i is target index i-1; mask all
+                // targets except answers. Index 0 is input-only: keep sign.
+                let masked = i > 0 && !answers.contains(&(i - 1));
+                flat.push(if masked { -(t as i32) } else { t as i32 });
+            }
+            examples.push(ex);
+        }
+        (flat, examples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example_shape_and_answer() {
+        let task = InductionTask::standard(128);
+        let mut rng = Pcg::seeded(0);
+        for _ in 0..32 {
+            let ex = task.sample(&mut rng);
+            assert_eq!(ex.tokens.len(), 129);
+            assert_eq!(ex.answer_positions, vec![127]);
+            // find the first SPECIAL; the last token must equal its successor
+            let q = ex.tokens.iter().position(|&t| t == SPECIAL).unwrap();
+            assert!(q < 126, "special must avoid the last 3 positions");
+            assert_eq!(ex.tokens[128], ex.tokens[q + 1]);
+            assert_eq!(ex.tokens[127], SPECIAL);
+        }
+    }
+
+    #[test]
+    fn answer_is_a_regular_token() {
+        let task = InductionTask::standard(64);
+        let mut rng = Pcg::seeded(1);
+        for _ in 0..32 {
+            let ex = task.sample(&mut rng);
+            let ans = *ex.tokens.last().unwrap();
+            assert!(ans >= TOKEN_BASE && (ans as usize) < task.vocab());
+        }
+    }
+
+    #[test]
+    fn batch_masks_everything_but_answer() {
+        let task = InductionTask::standard(32);
+        let (flat, examples) = task.batch(4, &mut Pcg::seeded(2));
+        assert_eq!(flat.len(), 4 * 33);
+        for (b, ex) in examples.iter().enumerate() {
+            let row = &flat[b * 33..(b + 1) * 33];
+            // index 0 is input-only and positive
+            assert!(row[0] > 0);
+            for i in 1..33 {
+                let is_answer = ex.answer_positions.contains(&(i - 1));
+                assert_eq!(row[i] > 0, is_answer, "row[{i}] sign");
+                assert_eq!(row[i].unsigned_abs(), ex.tokens[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_is_deterministic() {
+        let task = InductionTask::standard(32);
+        let (a, _) = task.batch(3, &mut Pcg::seeded(7));
+        let (b, _) = task.batch(3, &mut Pcg::seeded(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,75 @@
+//! Synthetic tasks from Appendix F: Selective Copying and Induction Heads.
+//!
+//! Both are emitted in the (B, ctx+1) next-token format the train artifact
+//! consumes, with PAD (0) masking every position except the answers — so
+//! the masked loss trains exactly the task signal, and accuracy evaluation
+//! reads only answer positions.
+
+pub mod induction;
+pub mod selective_copy;
+
+/// One task example: a full sequence (ctx + 1 tokens; inputs are [..ctx],
+/// targets are [1..]) and the positions (in target coordinates) that count
+/// for accuracy.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub tokens: Vec<u32>,
+    /// Indices into the target sequence (0-based) holding answers.
+    pub answer_positions: Vec<usize>,
+}
+
+impl Example {
+    /// Targets slice (length ctx).
+    pub fn targets(&self) -> &[u32] {
+        &self.tokens[1..]
+    }
+
+    /// Inputs slice (length ctx).
+    pub fn inputs(&self) -> &[u32] {
+        &self.tokens[..self.tokens.len() - 1]
+    }
+}
+
+/// Number of answer positions where the greedy prediction matches.
+/// `logits`: (ctx, vocab) row-major for this example's inputs.
+pub fn answers_correct(ex: &Example, logits: &[f32], vocab: usize) -> usize {
+    let targets = ex.targets();
+    let mut correct = 0;
+    for &pos in &ex.answer_positions {
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        if best as u32 == targets[pos] {
+            correct += 1;
+        }
+    }
+    correct
+}
+
+/// Exact match: every answer position greedily correct (the paper's
+/// Table 5 metric).
+pub fn example_correct(ex: &Example, logits: &[f32], vocab: usize) -> bool {
+    answers_correct(ex, logits, vocab) == ex.answer_positions.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example_correct_checks_only_answers() {
+        let ex = Example { tokens: vec![5, 6, 7, 8], answer_positions: vec![2] };
+        // targets = [6,7,8]; answer position 2 -> target 8.
+        let vocab = 10;
+        let mut logits = vec![0.0f32; 3 * vocab];
+        logits[2 * vocab + 8] = 5.0; // argmax at answer = 8 ✓
+        logits[0 * vocab + 1] = 9.0; // wrong elsewhere, ignored
+        assert!(example_correct(&ex, &logits, vocab));
+        logits[2 * vocab + 3] = 9.0; // now argmax at answer = 3 ✗
+        assert!(!example_correct(&ex, &logits, vocab));
+    }
+}

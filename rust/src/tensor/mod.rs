@@ -1,0 +1,320 @@
+//! Minimal row-major f32 tensor substrate.
+//!
+//! Backs the native attention implementations, data preparation, and
+//! checkpoint math.  Deliberately small: dense f32, up to a handful of
+//! dims, the ops the repo actually needs — not a general ndarray clone.
+
+use crate::util::rng::Pcg;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} vs data len {}", shape, data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn gaussian(rng: &mut Pcg, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.gaussians(n) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D accessors -------------------------------------------------
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// C = A @ B for 2-D tensors. Simple ikj loop with row-major access —
+    /// the hot-path variants live in attn/ where tile sizes are known.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, ka) = (self.rows(), self.cols());
+        let (kb, n) = (other.rows(), other.cols());
+        assert_eq!(ka, kb, "matmul {}x{} @ {}x{}", m, ka, kb, n);
+        let mut out = Tensor::zeros(&[m, n]);
+        matmul_into(self.data(), other.data(), out.data_mut(), m, ka, n);
+        out
+    }
+
+    /// C = A @ B^T.
+    pub fn matmul_t(&self, other: &Tensor) -> Tensor {
+        let (m, ka) = (self.rows(), self.cols());
+        let (n, kb) = (other.rows(), other.cols());
+        assert_eq!(ka, kb);
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let a = self.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                orow[j] = dot(a, other.row(j));
+            }
+        }
+        out
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.set2(j, i, self.at2(i, j));
+            }
+        }
+        out
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn hadamard(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn scale(self, s: f32) -> Tensor {
+        self.map(|v| v * s)
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Max |a - b| between same-shaped tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Parameter-free layer normalization over the last axis of a 2-D tensor
+/// (matches python/compile/common.py::layernorm, eps = 1e-6).
+pub fn layernorm_rows(x: &Tensor) -> Tensor {
+    let (m, n) = (x.rows(), x.cols());
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let row = x.row(i);
+        let mean: f32 = row.iter().sum::<f32>() / n as f32;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..n {
+            orow[j] = (row[j] - mean) * inv;
+        }
+    }
+    out
+}
+
+/// Numerically-stable softmax over each row.
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    let (m, n) = (x.rows(), x.cols());
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let row = x.row(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let orow = out.row_mut(i);
+        let mut sum = 0.0;
+        for j in 0..n {
+            let e = (row[j] - mx).exp();
+            orow[j] = e;
+            sum += e;
+        }
+        for v in orow.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    // 4-wide unroll: lets LLVM vectorize without unsafe.
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    for i in chunks * 4..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc + s0 + s1 + s2 + s3
+}
+
+/// out += a_row (x) scale — axpy helper used by the attention inner loops.
+#[inline]
+pub fn axpy(out: &mut [f32], a: &[f32], scale: f32) {
+    debug_assert_eq!(out.len(), a.len());
+    for i in 0..out.len() {
+        out[i] += a[i] * scale;
+    }
+}
+
+/// Plain row-major matmul into preallocated storage: C(m,n) = A(m,k) B(k,n).
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    c.fill(0.0);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            axpy(crow, brow, av);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_t_agrees_with_explicit_transpose() {
+        let mut rng = Pcg::seeded(0);
+        let a = Tensor::gaussian(&mut rng, &[5, 7]);
+        let b = Tensor::gaussian(&mut rng, &[6, 7]);
+        let got = a.matmul_t(&b);
+        let want = a.matmul(&b.transpose2());
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn layernorm_rows_zero_mean_unit_var() {
+        let mut rng = Pcg::seeded(1);
+        let x = Tensor::gaussian(&mut rng, &[4, 64]).scale(3.0);
+        let y = layernorm_rows(&x);
+        for i in 0..4 {
+            let row = y.row(i);
+            let mean: f32 = row.iter().sum::<f32>() / 64.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_one() {
+        let x = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1000.0]);
+        let y = softmax_rows(&x);
+        for i in 0..2 {
+            let s: f32 = y.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!(y.at2(1, 2) > 0.999);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..13).map(|i| (i * 2) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot(&a, &b), naive);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,242 @@
+//! Integration tests over the PJRT runtime + coordinator, exercising real
+//! AOT artifacts end to end (requires `make artifacts`; uses the
+//! second-scale `tiny_*` bundles so the whole file runs in ~a minute).
+//!
+//! All tests share one thread (PJRT objects are thread-confined), so this
+//! file forces a single test thread via serial helpers per test — each test
+//! creates its own runtime objects; the thread-local client is shared.
+
+use polysketchformer::coordinator::{self, DataParallel, Trainer, TrainerConfig};
+use polysketchformer::data::{batcher::Batcher, random_tokens};
+use polysketchformer::metrics::RunLogger;
+use polysketchformer::runtime::{self, LoadOpts, ModelRuntime};
+
+fn load(name: &str, opts: LoadOpts) -> ModelRuntime {
+    runtime::load_model(name, opts).unwrap_or_else(|e| {
+        panic!("cannot load artifact `{name}` — run `make artifacts` first: {e:#}")
+    })
+}
+
+fn token_batch(model: &ModelRuntime, seed: u64) -> Vec<i32> {
+    random_tokens(model.batch() * (model.ctx() + 1), model.vocab(), seed)
+        .into_iter()
+        .map(|t| t as i32)
+        .collect()
+}
+
+#[test]
+fn train_step_decreases_loss_and_counts_steps() {
+    let mut model = load("tiny_softmax", LoadOpts::train_only());
+    let batch = token_batch(&model, 0);
+    let first = model.train_step(&batch).unwrap();
+    assert_eq!(first.step, 1);
+    assert!(first.loss.is_finite());
+    // ln(vocab=64) ~ 4.16 at init.
+    assert!((3.0..5.5).contains(&first.loss), "init loss {}", first.loss);
+    let mut last = first;
+    for _ in 0..60 {
+        last = model.train_step(&batch).unwrap();
+    }
+    assert_eq!(last.step, 61);
+    // Repeating one batch must memorize it (lr is still in its 100-step
+    // warmup ramp here, so require a solid but not dramatic drop).
+    assert!(
+        last.loss < first.loss - 0.3,
+        "loss should drop on a repeated batch: {} -> {}",
+        first.loss,
+        last.loss
+    );
+}
+
+#[test]
+fn eval_loss_matches_scale_and_is_deterministic() {
+    let model = load("tiny_softmax", LoadOpts::eval_only());
+    let batch = token_batch(&model, 1);
+    let a = model.eval_loss(&batch).unwrap();
+    let b = model.eval_loss(&batch).unwrap();
+    assert_eq!(a, b, "eval must be deterministic");
+    assert!((3.0..5.5).contains(&a), "init NLL ~ ln(64): {a}");
+}
+
+#[test]
+fn forward_shape_and_finiteness() {
+    let model = load("tiny_softmax", LoadOpts::fwd_only());
+    let tokens: Vec<i32> = random_tokens(model.batch() * model.ctx(), model.vocab(), 2)
+        .into_iter()
+        .map(|t| t as i32)
+        .collect();
+    let logits = model.forward(&tokens).unwrap();
+    assert_eq!(logits.len(), model.batch() * model.ctx() * model.vocab());
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn state_roundtrip_preserves_training() {
+    let mut model = load("tiny_softmax", LoadOpts::train_only());
+    let batch = token_batch(&model, 3);
+    model.train_step(&batch).unwrap();
+    let saved = model.state_to_host().unwrap();
+    assert_eq!(saved.len(), model.manifest.state_size());
+
+    // Keep training, then restore: stats must rewind.
+    model.train_step(&batch).unwrap();
+    let s2 = model.read_stats().unwrap();
+    assert_eq!(s2.step, 2);
+    model.set_state(&saved).unwrap();
+    let s1 = model.read_stats().unwrap();
+    assert_eq!(s1.step, 1);
+
+    // Restored state must continue identically (bitwise determinism).
+    let a = model.train_step(&batch).unwrap();
+    model.set_state(&saved).unwrap();
+    let b = model.train_step(&batch).unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.step, b.step);
+}
+
+#[test]
+fn reset_restores_init() {
+    let mut model = load("tiny_softmax", LoadOpts::train_only());
+    let batch = token_batch(&model, 4);
+    let loss0 = model.train_step(&batch).unwrap().loss;
+    for _ in 0..5 {
+        model.train_step(&batch).unwrap();
+    }
+    model.reset().unwrap();
+    let stats = model.read_stats().unwrap();
+    assert_eq!(stats.step, 0);
+    let loss_again = model.train_step(&batch).unwrap().loss;
+    assert_eq!(loss0, loss_again, "reset must reproduce the first step");
+}
+
+#[test]
+fn gradstep_equals_fused_train_step() {
+    // The factored grads -> gradstep path must produce the same update as
+    // the fused train executable (same math, different artifact split).
+    let mut fused = load("tiny_softmax", LoadOpts::train_only());
+    let mut split = load("tiny_softmax", LoadOpts::grads_only());
+    let batch = token_batch(&fused, 5);
+
+    let a = fused.train_step(&batch).unwrap();
+    let g = split.grad_loss(&batch).unwrap();
+    let b = split.apply_gradvec(&g).unwrap();
+    assert_eq!(a.step, b.step);
+    assert!(
+        (a.loss - b.loss).abs() < 1e-6,
+        "fused {} vs split {}",
+        a.loss,
+        b.loss
+    );
+
+    let sa = fused.state_to_host().unwrap();
+    let sb = split.state_to_host().unwrap();
+    let max_dev = sa
+        .iter()
+        .zip(&sb)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dev < 1e-5, "state dev {max_dev}");
+}
+
+#[test]
+fn dataparallel_single_worker_matches_train_step() {
+    // One worker, accum 1, same batch => the dp step must equal the fused
+    // step (allreduce over a single gradient is the identity).
+    let mut dp_model = load("tiny_softmax", LoadOpts::grads_only());
+    let mut ref_model = load("tiny_softmax", LoadOpts::train_only());
+
+    let stream = random_tokens(8 * 33 * 4, dp_model.vocab(), 6);
+    let batcher = Batcher::new(&stream, dp_model.batch(), dp_model.ctx() + 1, 9);
+    let mut ref_batcher = Batcher::new(&stream, ref_model.batch(), ref_model.ctx() + 1, 9);
+
+    let mut dp = DataParallel::new(&mut dp_model, vec![batcher], 1);
+    let dp_stats = dp.step().unwrap();
+    let ref_stats = ref_model.train_step(&ref_batcher.next_batch().tokens).unwrap();
+    assert!(
+        (dp_stats.loss - ref_stats.loss).abs() < 1e-6,
+        "dp {} vs fused {}",
+        dp_stats.loss,
+        ref_stats.loss
+    );
+}
+
+#[test]
+fn dataparallel_multi_worker_runs_and_learns() {
+    let mut model = load("tiny_psk", LoadOpts::grads_only());
+    let stream = random_tokens(33 * 2 * 16, model.vocab(), 7);
+    let mut dp = DataParallel::from_stream(&mut model, &stream, 2, 2, 0);
+    assert_eq!(dp.world_size(), 2);
+    let mut logger = RunLogger::new(None, 0).unwrap();
+    let (last, curve) = dp.run(4, &mut logger).unwrap();
+    assert_eq!(last.step, 4);
+    assert_eq!(curve.len(), 4);
+    assert!(curve.iter().all(|(_, l)| l.is_finite()));
+}
+
+#[test]
+fn trainer_end_to_end_with_checkpointing() {
+    let dir = std::env::temp_dir().join("psf_trainer_it");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut model = load("tiny_psk", LoadOpts::default());
+    let stream = random_tokens(33 * 2 * 32, model.vocab(), 8);
+    let train = Batcher::new(&stream[..33 * 2 * 24], model.batch(), model.ctx() + 1, 0);
+    let test = Batcher::new(&stream[33 * 2 * 24..], model.batch(), model.ctx() + 1, 0);
+    let cfg = TrainerConfig {
+        steps: 6,
+        eval_every: 3,
+        eval_batches: 2,
+        ckpt_every: 4,
+        echo_every: 0,
+        run_dir: Some(dir.clone()),
+        nan_guard: true,
+    };
+    let summary = Trainer::new(&mut model, train, Some(test), cfg).run().unwrap();
+    assert_eq!(summary.steps_run, 6);
+    assert!(!summary.evals.is_empty());
+    assert!(summary.final_perplexity().is_finite());
+    assert!(dir.join("train.jsonl").exists());
+    assert!(dir.join("ckpt_000004.bin").exists());
+
+    // Restore the checkpoint into a fresh trainer and verify the step.
+    let mut model2 = load("tiny_psk", LoadOpts::train_only());
+    let train2 = Batcher::new(&stream, model2.batch(), model2.ctx() + 1, 0);
+    let mut t2 = Trainer::new(&mut model2, train2, None, TrainerConfig::default());
+    let step = t2.restore(&dir.join("ckpt_000004.bin")).unwrap();
+    assert_eq!(step, 4);
+    assert_eq!(t2.model.read_stats().unwrap().step, 4);
+}
+
+#[test]
+fn mcq_scoring_runs_above_chance_floor() {
+    // An untrained model scores ~chance; the scorer itself must be sound
+    // (probabilities normalized, batching correct). We only assert bounds.
+    let model = load("tiny_softmax", LoadOpts::fwd_only());
+    let stream = random_tokens(4000, model.vocab(), 10);
+    let qs = coordinator::gen_cloze_questions(&stream, model.ctx(), 24, 4, 8, 0, 1);
+    let acc = coordinator::score_mcq(&model, &qs).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn perplexity_of_untrained_model_near_uniform() {
+    let model = load("tiny_softmax", LoadOpts::eval_only());
+    let stream = random_tokens(33 * 2 * 8, model.vocab(), 11);
+    let mut test = Batcher::new(&stream, model.batch(), model.ctx() + 1, 0);
+    let ppl = coordinator::perplexity(&model, &mut test, 2).unwrap();
+    // Uniform over 64-vocab => ppl ~ 64 (random tokens can't be learned).
+    assert!((30.0..130.0).contains(&ppl), "ppl {ppl}");
+}
+
+#[test]
+fn rejects_wrong_token_shape() {
+    let mut model = load("tiny_softmax", LoadOpts::train_only());
+    let too_short = vec![1i32; 7];
+    assert!(model.train_step(&too_short).is_err());
+}
+
+#[test]
+fn rejects_wrong_state_size() {
+    let mut model = load("tiny_softmax", LoadOpts::train_only());
+    assert!(model.set_state(&[0.0; 3]).is_err());
+}

@@ -1,0 +1,294 @@
+//! Property tests over the coordinator substrates' invariants (batching,
+//! sharding, checkpoint integrity, tokenizer round-trips) and the native
+//! attention kernels' algebraic properties — generative, deterministic,
+//! shrinking to a minimal-ish failing size (crate::prop, no proptest in
+//! this environment).  No PJRT involvement: everything here is host math.
+
+use polysketchformer::attn::sketch::PolySketch;
+use polysketchformer::attn::{Attention, Mechanism};
+use polysketchformer::checkpoint::Checkpoint;
+use polysketchformer::coordinator::dataparallel::shard_stream;
+use polysketchformer::coordinator::gen_cloze_questions;
+use polysketchformer::data::batcher::{split_stream, Batcher};
+use polysketchformer::data::bpe::Bpe;
+use polysketchformer::prop::{check, close, ensure};
+use polysketchformer::tensor::{layernorm_rows, Tensor};
+use polysketchformer::util::rng::Pcg;
+
+// ------------------------------------------------------------- batching
+
+#[test]
+fn prop_batcher_epoch_is_a_permutation_of_segments() {
+    check("batcher epoch permutation", 40, |rng, size| {
+        let batch = 1 + rng.usize_below(4);
+        let seq = 2 + rng.usize_below(16);
+        let segments = batch * (1 + size % 8);
+        let stream: Vec<u32> = (0..segments * seq as usize)
+            .map(|i| (i % 251) as u32 + 1)
+            .collect();
+        let mut b = Batcher::new(&stream, batch, seq, rng.next_u64());
+        let mut seen: Vec<Vec<i32>> = Vec::new();
+        for _ in 0..b.batches_per_epoch() {
+            let batch_out = b.next_batch();
+            for r in 0..batch_out.batch {
+                seen.push(batch_out.row(r).to_vec());
+            }
+        }
+        let mut want: Vec<Vec<i32>> = stream
+            .chunks_exact(seq)
+            .map(|c| c.iter().map(|&t| t as i32).collect())
+            .collect();
+        seen.sort();
+        want.sort();
+        ensure(seen == want, "epoch must emit every segment exactly once")
+    });
+}
+
+#[test]
+fn prop_split_stream_partitions() {
+    check("split partitions", 60, |rng, size| {
+        let n = 10 + size * 7;
+        let stream: Vec<u32> = (0..n as u32).collect();
+        let frac = rng.f64() * 0.9;
+        let (a, b) = split_stream(&stream, frac);
+        ensure(a.len() + b.len() == n, "lengths must sum")?;
+        ensure(
+            a.iter().chain(b.iter()).copied().eq(0..n as u32),
+            "order preserved, disjoint",
+        )
+    });
+}
+
+#[test]
+fn prop_shards_disjoint_equal() {
+    check("shards disjoint", 60, |rng, size| {
+        let n = 16 + size * 13;
+        let workers = 1 + rng.usize_below(7);
+        let stream: Vec<u32> = (0..n as u32).collect();
+        let shards = shard_stream(&stream, workers);
+        ensure(shards.len() == workers, "one shard per worker")?;
+        let per = n / workers;
+        for (w, s) in shards.iter().enumerate() {
+            ensure(s.len() == per, "equal shard sizes")?;
+            ensure(
+                s.first() == Some(&((w * per) as u32)),
+                "shards contiguous and disjoint",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ tokenizer
+
+#[test]
+fn prop_bpe_roundtrip() {
+    check("bpe encode/decode roundtrip", 25, |rng, size| {
+        // Train on synthetic-ish text, then round-trip arbitrary bytes
+        // drawn from the same alphabet.
+        let alphabet = b"abcdefgh ij.\n";
+        let text: Vec<u8> = (0..400 + size * 40)
+            .map(|_| alphabet[rng.usize_below(alphabet.len())])
+            .collect();
+        let vocab = 260 + rng.usize_below(100);
+        let bpe = Bpe::train(&text, vocab);
+        ensure(bpe.vocab_size() <= vocab, "vocab bound respected")?;
+        let sample: Vec<u8> = (0..size * 5)
+            .map(|_| alphabet[rng.usize_below(alphabet.len())])
+            .collect();
+        let ids = bpe.encode(&sample);
+        for &id in &ids {
+            ensure((id as usize) < bpe.vocab_size(), "ids in range")?;
+            ensure(id != 0, "id 0 is reserved for PAD")?;
+        }
+        ensure(bpe.decode(&ids) == sample, "decode(encode(x)) == x")
+    });
+}
+
+// ----------------------------------------------------------- checkpoint
+
+#[test]
+fn prop_checkpoint_roundtrip_and_corruption_detection() {
+    let dir = std::env::temp_dir().join("psf_prop_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    check("checkpoint roundtrip", 25, |rng, size| {
+        let mut ck = Checkpoint::new(rng.next_u64());
+        let sections = 1 + rng.usize_below(4);
+        for s in 0..sections {
+            let data: Vec<f32> = (0..size * 3 + 1).map(|_| rng.gaussian()).collect();
+            ck = ck.with(&format!("sec{s}"), data);
+        }
+        let path = dir.join(format!("ck_{}.bin", rng.next_u64()));
+        ck.save(&path).map_err(|e| e.to_string())?;
+        let back = Checkpoint::load(&path).map_err(|e| e.to_string())?;
+        ensure(back == ck, "roundtrip equality")?;
+
+        // Flip one payload byte -> CRC must catch it.
+        let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+        let idx = 20 + rng.usize_below(bytes.len().saturating_sub(25));
+        bytes[idx] ^= 0x40;
+        let tmp = dir.join("corrupt.bin");
+        std::fs::write(&tmp, &bytes).map_err(|e| e.to_string())?;
+        let corrupted = Checkpoint::load(&tmp);
+        let _ = std::fs::remove_file(&path);
+        ensure(corrupted.is_err(), "corruption must be detected")
+    });
+}
+
+// ------------------------------------------------------------ evaluator
+
+#[test]
+fn prop_cloze_questions_well_formed() {
+    check("cloze question invariants", 30, |rng, size| {
+        let vocab = 50 + rng.usize_below(200);
+        let stream: Vec<u32> = (0..3000 + size * 50)
+            .map(|_| 1 + rng.below(vocab as u64 - 1) as u32)
+            .collect();
+        let ctx = 32 + 8 * rng.usize_below(8);
+        let span = 4 + rng.usize_below(8);
+        let choices = 2 + rng.usize_below(3);
+        let shots = rng.usize_below(3);
+        if ctx / (shots + 1) <= span + 1 {
+            return Ok(()); // generator precondition
+        }
+        let qs = gen_cloze_questions(&stream, ctx, 5, choices, span, shots,
+                                     rng.next_u64());
+        for q in &qs {
+            ensure(q.choices.len() == choices, "choice count")?;
+            ensure(q.answer < choices, "answer index")?;
+            ensure(q.span_start == ctx - span, "span at tail")?;
+            for c in &q.choices {
+                ensure(c.len() == ctx, "row length")?;
+                ensure(
+                    c[..q.span_start] == q.choices[0][..q.span_start],
+                    "shared prefix",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------- attention math
+
+#[test]
+fn prop_polysketch_block_size_invariance() {
+    check("block-lt b-invariance", 12, |rng, size| {
+        let n = [32usize, 64, 128][size % 3];
+        let h = 8;
+        let q = Tensor::gaussian(rng, &[n, h]);
+        let k = Tensor::gaussian(rng, &[n, h]);
+        let v = Tensor::gaussian(rng, &[n, h]);
+        let mk = |block| {
+            let mech = Mechanism::Polysketch { r: 8, p: 4, block, local: false };
+            Attention::new(&mech, h, &mut Pcg::seeded(7)).run(&q, &k, &v)
+        };
+        let a = mk(n);
+        for &b in &[16usize, 32] {
+            if b >= n {
+                continue;
+            }
+            let o = mk(b);
+            for (x, y) in o.data().iter().zip(a.data()) {
+                ensure(close(*x, *y, 1e-3), format!("b={b}: {x} vs {y}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_attention_causality() {
+    // Changing v (and k) at positions > i must never change output row i.
+    check("causality", 10, |rng, size| {
+        let n = 32 + (size % 3) * 16; // multiples of the block sizes used
+        let h = 8;
+        let cut = n / 2;
+        let q = Tensor::gaussian(rng, &[n, h]);
+        let k = Tensor::gaussian(rng, &[n, h]);
+        let v = Tensor::gaussian(rng, &[n, h]);
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for i in cut..n {
+            for j in 0..h {
+                k2.set2(i, j, rng.gaussian());
+                v2.set2(i, j, rng.gaussian());
+            }
+        }
+        for mech in [
+            Mechanism::Flash { block: 16 },
+            Mechanism::Poly { p: 4 },
+            Mechanism::Polysketch { r: 8, p: 4, block: 8, local: true },
+            Mechanism::Performer { m: 16, block: 8 },
+        ] {
+            let attn = Attention::new(&mech, h, &mut Pcg::seeded(3));
+            let a = attn.run(&q, &k, &v);
+            let b = attn.run(&q, &k2, &v2);
+            for i in 0..cut {
+                for (x, y) in a.row(i).iter().zip(b.row(i)) {
+                    ensure(
+                        close(*x, *y, 1e-4),
+                        format!("{}: row {i} changed by future edit", mech.label()),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nonnegative_sketch_weights() {
+    check("Thm 1.1 nonnegativity", 20, |rng, size| {
+        let n = 8 + size % 24;
+        let h = 8;
+        let r = [4usize, 8, 16][size % 3];
+        let q = layernorm_rows(&Tensor::gaussian(rng, &[n, h]));
+        let k = layernorm_rows(&Tensor::gaussian(rng, &[n, h]));
+        let sk = PolySketch::sample(rng, h, r, 4);
+        let w = sk.nonnegative(&q).matmul_t(&sk.nonnegative(&k));
+        let max_abs = w.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let floor = -1e-5 * (max_abs + 1.0);
+        for &x in w.data() {
+            ensure(x >= floor, format!("weight {x} < fp floor {floor}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_poly_attention_rows_form_subprobability() {
+    // With the `1 +` denominator, each output row is a subconvex
+    // combination of value rows: |out_i| <= max_j |v_j| elementwise.
+    check("poly rows subconvex", 20, |rng, size| {
+        let n = 8 + size % 24;
+        let h = 8;
+        let q = Tensor::gaussian(rng, &[n, h]);
+        let k = Tensor::gaussian(rng, &[n, h]);
+        let v = Tensor::gaussian(rng, &[n, h]);
+        let out = polysketchformer::attn::poly::poly_attention(&q, &k, &v, 4);
+        let vmax = v.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        for &x in out.data() {
+            ensure(x.abs() <= vmax + 1e-4, format!("out {x} exceeds vmax {vmax}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flash_matches_naive_softmax() {
+    check("flash == naive softmax", 15, |rng, size| {
+        let n = [16usize, 32, 64][size % 3];
+        let h = 4 + (size % 3) * 4;
+        let block = [8usize, 16][size % 2]; // n is a multiple of both
+        let q = Tensor::gaussian(rng, &[n, h]);
+        let k = Tensor::gaussian(rng, &[n, h]);
+        let v = Tensor::gaussian(rng, &[n, h]);
+        let a = polysketchformer::attn::softmax::softmax_attention(&q, &k, &v);
+        let b = polysketchformer::attn::softmax::flash_attention(&q, &k, &v, block);
+        for (x, y) in a.data().iter().zip(b.data()) {
+            ensure(close(*x, *y, 1e-4), format!("{x} vs {y}"))?;
+        }
+        Ok(())
+    });
+}
