@@ -1,0 +1,130 @@
+//! Decode throughput — per-token generation cost vs context length.
+//!
+//! The serving-side corollary of the paper's linearity result: the
+//! recurrent view of polysketch/performer attention makes each generated
+//! token an O(1) state update, while the softmax family rescans an O(n)
+//! KV cache.  This bench prefills a native LM at each context length,
+//! then times token-by-token decoding through `infer::DecodeState`:
+//!
+//!   expected shape — µs/token flat (within noise) across the 512 -> 8k
+//!   sweep for psk*/performer*, growing roughly linearly for
+//!   softmax/flash/poly; decode-state memory constant vs linear likewise.
+//!
+//! Results print as a paper-style table, persist as CSV, and additionally
+//! as a JSON artifact (`bench_out/decode_throughput.json`) so future PRs
+//! can track the serving-path trajectory alongside the training benches.
+
+use std::fmt::Write as _;
+
+use polysketchformer::attn::Mechanism;
+use polysketchformer::bench::{banner, out_dir, Mode, Table};
+use polysketchformer::infer::{GenRequest, LmConfig, NativeLm, SamplePolicy};
+use polysketchformer::infer::session::DecodeSession;
+use polysketchformer::metrics::Record;
+
+fn main() -> anyhow::Result<()> {
+    let mode = Mode::from_env();
+    banner("decode_throughput", "serving-path corollary of Figure 1 (µs/token decode)", mode);
+
+    // Mechanism labels go through Mechanism::parse — the single spelling
+    // shared with the `generate` subcommand.
+    let mech_labels = [
+        "softmax",
+        "flash_b256",
+        "poly4",
+        "psk4_r16_b64",
+        "psk4_r16_b64_local",
+        "performer64_b64",
+    ];
+    let max_ctx = mode.pick(1024, 8192, 8192);
+    let decode_steps = mode.pick(4, 16, 32);
+    // Quadratic-prefill guard: naive softmax/poly prefill at 8k is minutes
+    // of wall time in quick mode; cap like fig1 does and mark the cell.
+    let prefill_cap = mode.pick(usize::MAX, 4096, usize::MAX);
+
+    let mut ctxs = Vec::new();
+    let mut c = 512usize;
+    while c <= max_ctx {
+        ctxs.push(c);
+        c *= 2;
+    }
+
+    let cfg = LmConfig { d_model: 64, layers: 2, heads: 2, ..LmConfig::default() };
+    let mut table = Table::new(
+        "decode µs/token vs context (native LM, d=64 L=2 H=2)",
+        "mechanism",
+        ctxs.iter().map(|c| c.to_string()).collect(),
+    );
+    let mut mem_table = Table::new(
+        "decode-state memory (f32 KWords) vs context",
+        "mechanism",
+        ctxs.iter().map(|c| c.to_string()).collect(),
+    );
+    let mut records: Vec<Record> = Vec::new();
+
+    for label in mech_labels {
+        let mech = Mechanism::parse(label).expect("bench mechanism labels must parse");
+        let model = NativeLm::new(cfg.clone(), mech.clone());
+        let mut cells = Vec::new();
+        let mut mem_cells = Vec::new();
+        for &ctx in &ctxs {
+            if !mech.is_linear() && ctx > prefill_cap {
+                cells.push("-".into());
+                mem_cells.push("-".into());
+                continue;
+            }
+            // Deterministic prompt of `ctx` tokens, then timed decoding.
+            let prompt: Vec<u32> =
+                (0..ctx).map(|i| (i as u32).wrapping_mul(2654435761) % 257).collect();
+            let req = GenRequest {
+                prompt,
+                max_new_tokens: decode_steps,
+                policy: SamplePolicy::Greedy,
+                seed: 0,
+            };
+            let mut session = DecodeSession::new(&model, 0, req);
+            session.run_to_completion(&model);
+            let us_per_token = session.decode_secs * 1e6 / decode_steps as f64;
+            let state_floats = session.state_memory_floats();
+            cells.push(format!("{us_per_token:.1}"));
+            mem_cells.push(format!("{:.1}", state_floats as f64 / 1e3));
+            records.push(
+                Record::new()
+                    .str("mech", mech.label())
+                    .bool("linear", mech.is_linear())
+                    .i64("ctx", ctx as i64)
+                    .i64("decode_steps", decode_steps as i64)
+                    .f64("prefill_ms", session.prefill_secs * 1e3)
+                    .f64("us_per_token", us_per_token)
+                    .f64("decode_tokens_per_sec", 1e6 / us_per_token.max(1e-9))
+                    .i64("state_memory_floats", state_floats as i64),
+            );
+        }
+        table.row(label, cells);
+        mem_table.row(label, mem_cells);
+    }
+
+    print!("{}", table.render());
+    println!("csv: {}\n", table.save_csv("decode_throughput_us_per_token")?.display());
+    print!("{}", mem_table.render());
+    println!("csv: {}", mem_table.save_csv("decode_throughput_state_memory")?.display());
+
+    // JSON artifact: one object with every (mech, ctx) record, assembled
+    // from the same hand-rolled encoder metrics uses (no serde here).
+    let mut json = String::from("{\n  \"bench\": \"decode_throughput\",\n");
+    let _ = writeln!(json, "  \"mode\": \"{mode:?}\",");
+    let _ = writeln!(json, "  \"model\": {{\"d_model\": {}, \"layers\": {}, \"heads\": {}}},",
+                     cfg.d_model, cfg.layers, cfg.heads);
+    json.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        let _ = write!(json, "    {}", r.to_json());
+        json.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    let dir = out_dir();
+    std::fs::create_dir_all(&dir)?;
+    let json_path = dir.join("decode_throughput.json");
+    std::fs::write(&json_path, json)?;
+    println!("json: {}", json_path.display());
+    Ok(())
+}

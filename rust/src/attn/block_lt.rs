@@ -204,8 +204,10 @@ pub fn polysketch_attention_block(lh: &Tensor, rh: &Tensor, v: &Tensor,
     out
 }
 
+/// Row self Kronecker product into scratch: the implicit phi' feature of a
+/// half-sketch row. Shared with the per-token decode path (`infer::state`).
 #[inline]
-fn self_tensor_row(l: &[f32], out: &mut [f32]) {
+pub(crate) fn self_tensor_row(l: &[f32], out: &mut [f32]) {
     let r = l.len();
     debug_assert_eq!(out.len(), r * r);
     for a in 0..r {

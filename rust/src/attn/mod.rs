@@ -44,6 +44,69 @@ impl Mechanism {
         }
     }
 
+    /// Parse a mechanism label — the exact inverse of [`Mechanism::label`]:
+    /// `softmax`, `flash_b<block>`, `poly<p>`, `psk<p>_r<r>_b<block>[_local]`,
+    /// `performer<m>_b<block>`.  Shared by the CLI `generate` subcommand and
+    /// the benches so mechanism strings are spelled one way everywhere.
+    pub fn parse(s: &str) -> Result<Mechanism, String> {
+        let err = || format!("bad mechanism `{s}` (want softmax | flash_b<B> | poly<P> | psk<P>_r<R>_b<B>[_local] | performer<M>_b<B>)");
+        if s == "softmax" {
+            return Ok(Mechanism::Softmax);
+        }
+        if let Some(rest) = s.strip_prefix("flash_b") {
+            let block: usize = rest.parse().map_err(|_| err())?;
+            if block == 0 {
+                return Err(format!("bad mechanism `{s}`: block must be >= 1"));
+            }
+            return Ok(Mechanism::Flash { block });
+        }
+        if let Some(rest) = s.strip_prefix("poly") {
+            let p: u32 = rest.parse().map_err(|_| err())?;
+            if p < 2 || p % 2 != 0 {
+                return Err(format!("bad mechanism `{s}`: poly degree must be even and >= 2"));
+            }
+            return Ok(Mechanism::Poly { p });
+        }
+        if let Some(rest) = s.strip_prefix("psk") {
+            let (body, local) = match rest.strip_suffix("_local") {
+                Some(b) => (b, true),
+                None => (rest, false),
+            };
+            let mut it = body.split('_');
+            let p = it.next().and_then(|t| t.parse().ok()).ok_or_else(err)?;
+            let r = it
+                .next()
+                .and_then(|t| t.strip_prefix('r'))
+                .and_then(|t| t.parse().ok())
+                .ok_or_else(err)?;
+            let block = it
+                .next()
+                .and_then(|t| t.strip_prefix('b'))
+                .and_then(|t| t.parse().ok())
+                .ok_or_else(err)?;
+            if it.next().is_some() {
+                return Err(err());
+            }
+            if p < 2 || !u32::is_power_of_two(p) {
+                return Err(format!("bad mechanism `{s}`: psk degree must be a power of two >= 2"));
+            }
+            if r == 0 || block == 0 {
+                return Err(format!("bad mechanism `{s}`: sketch size and block must be >= 1"));
+            }
+            return Ok(Mechanism::Polysketch { r, p, block, local });
+        }
+        if let Some(rest) = s.strip_prefix("performer") {
+            let (m, block) = rest.split_once("_b").ok_or_else(err)?;
+            let m: usize = m.parse().map_err(|_| err())?;
+            let block: usize = block.parse().map_err(|_| err())?;
+            if m == 0 || block == 0 {
+                return Err(format!("bad mechanism `{s}`: feature count and block must be >= 1"));
+            }
+            return Ok(Mechanism::Performer { m, block });
+        }
+        Err(err())
+    }
+
     /// Linear-time in context length?
     pub fn is_linear(&self) -> bool {
         matches!(self, Mechanism::Polysketch { .. } | Mechanism::Performer { .. })
@@ -111,6 +174,48 @@ impl Attention {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parse_inverts_label() {
+        let ms = [
+            Mechanism::Softmax,
+            Mechanism::Flash { block: 256 },
+            Mechanism::Poly { p: 4 },
+            Mechanism::Polysketch { r: 16, p: 4, block: 64, local: true },
+            Mechanism::Polysketch { r: 32, p: 2, block: 128, local: false },
+            Mechanism::Performer { m: 64, block: 256 },
+        ];
+        for m in ms {
+            assert_eq!(Mechanism::parse(&m.label()).unwrap(), m, "{}", m.label());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "", "soft", "flash", "flash_b", "flash_bxx", "poly", "polyx", "psk4",
+            "psk4_r16", "psk4_r16_b", "psk4_b64_r16", "psk4_r16_b64_extra",
+            "performer64", "performer_b64", "psk4_r16_b64_localx",
+        ] {
+            assert!(Mechanism::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_degenerate_parameters() {
+        // Values that would only panic deep inside the kernels must be
+        // rejected at the parse boundary (the CLI feeds this directly).
+        for bad in [
+            "flash_b0", "poly0", "poly1", "poly3", "psk3_r4_b8", "psk0_r4_b8",
+            "psk4_r0_b8", "psk4_r4_b0", "performer0_b8", "performer16_b0",
+        ] {
+            assert!(Mechanism::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+        // poly6 is legal for exact polynomial attention (even, not pow2)...
+        assert!(Mechanism::parse("poly6").is_ok());
+        // ...but sketches need a power of two.
+        assert!(Mechanism::parse("psk6_r4_b8").is_err());
+    }
 
     #[test]
     fn labels_distinct() {

@@ -68,6 +68,16 @@ impl PerformerFeatures {
     }
 }
 
+impl PerformerFeatures {
+    /// Feature map of a single row: (h,) -> (m,).  The per-token hot path
+    /// of the decoding subsystem; row-wise identical to
+    /// [`PerformerFeatures::apply`] on a one-row tensor.
+    pub fn apply_row(&self, row: &[f32]) -> Vec<f32> {
+        let t = Tensor::from_vec(&[1, row.len()], row.to_vec());
+        self.apply(&t).into_vec()
+    }
+}
+
 fn chi_sample(rng: &mut Pcg, h: usize) -> f32 {
     let s: f32 = (0..h).map(|_| {
         let g = rng.gaussian();
@@ -96,6 +106,17 @@ mod tests {
         let x = Tensor::gaussian(&mut rng, &[16, 8]);
         for &v in f.apply(&x).data() {
             assert!(v > 0.0);
+        }
+    }
+
+    #[test]
+    fn apply_row_bitwise_matches_apply() {
+        let mut rng = Pcg::seeded(4);
+        let f = PerformerFeatures::sample(&mut rng, 8, 16);
+        let x = Tensor::gaussian(&mut rng, &[5, 8]);
+        let full = f.apply(&x);
+        for i in 0..5 {
+            assert_eq!(f.apply_row(x.row(i)).as_slice(), full.row(i));
         }
     }
 

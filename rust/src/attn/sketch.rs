@@ -68,6 +68,14 @@ impl PolySketch {
         self_tensor_rows(&self.half(a))
     }
 
+    /// Half sketch of a single (already-normalized) row: (h,) -> (r,).
+    /// The per-token hot path of the decoding subsystem (`infer::state`);
+    /// row-wise identical to [`PolySketch::half`] on a one-row tensor.
+    pub fn half_row(&self, row: &[f32]) -> Vec<f32> {
+        let t = Tensor::from_vec(&[1, row.len()], row.to_vec());
+        self.half(&t).into_vec()
+    }
+
     fn pswn(&self, a: &Tensor, gs: &[Tensor], d: usize) -> Tensor {
         if d == 1 {
             return a.clone();
@@ -199,6 +207,17 @@ mod tests {
         let half = sk.half(&x);
         let full = sk.nonnegative(&x);
         assert!(self_tensor_rows(&half).max_abs_diff(&full) < 1e-6);
+    }
+
+    #[test]
+    fn half_row_bitwise_matches_half() {
+        let mut rng = Pcg::seeded(5);
+        let sk = PolySketch::sample(&mut rng, 8, 8, 4);
+        let x = Tensor::gaussian(&mut rng, &[6, 8]);
+        let full = sk.half(&x);
+        for i in 0..6 {
+            assert_eq!(sk.half_row(x.row(i)).as_slice(), full.row(i));
+        }
     }
 
     #[test]

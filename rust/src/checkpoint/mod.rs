@@ -23,16 +23,33 @@ pub struct Checkpoint {
     pub sections: BTreeMap<String, Vec<f32>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CkptError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad magic (not a PSF checkpoint)")]
+    Io(std::io::Error),
     BadMagic,
-    #[error("truncated checkpoint at offset {0}")]
     Truncated(usize),
-    #[error("crc mismatch: stored {stored:#010x} computed {computed:#010x}")]
     Crc { stored: u32, computed: u32 },
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "io: {e}"),
+            CkptError::BadMagic => write!(f, "bad magic (not a PSF checkpoint)"),
+            CkptError::Truncated(off) => write!(f, "truncated checkpoint at offset {off}"),
+            CkptError::Crc { stored, computed } => {
+                write!(f, "crc mismatch: stored {stored:#010x} computed {computed:#010x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+impl From<std::io::Error> for CkptError {
+    fn from(e: std::io::Error) -> CkptError {
+        CkptError::Io(e)
+    }
 }
 
 impl Checkpoint {

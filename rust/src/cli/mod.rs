@@ -31,17 +31,28 @@ pub struct Parsed {
     positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag: --{0}")]
     UnknownFlag(String),
-    #[error("flag --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{flag}: {value} ({msg})")]
     BadValue { flag: String, value: String, msg: String },
-    #[error("help requested")]
     Help,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag(name) => write!(f, "unknown flag: --{name}"),
+            CliError::MissingValue(name) => write!(f, "flag --{name} requires a value"),
+            CliError::BadValue { flag, value, msg } => {
+                write!(f, "invalid value for --{flag}: {value} ({msg})")
+            }
+            CliError::Help => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     pub fn new(program: &str, about: &str) -> Self {

@@ -1,0 +1,37 @@
+//! Inference subsystem: linear-time autoregressive decoding and serving.
+//!
+//! The paper's training-side result — polysketch attention is linear in
+//! context length — implies a stronger serving-side property: linear
+//! attention has a recurrent view (`S_t = S_{t-1} + phi(k_t) v_t^T`), so
+//! each generated token costs O(1) state update and constant memory,
+//! where softmax attention must rescan an O(n) KV cache.  This module is
+//! that serving path, end to end:
+//!
+//! * [`state`] — per-mechanism [`DecodeState`](state::DecodeState):
+//!   recurrent sketch/feature states for the linear mechanisms, KV-cache
+//!   fallback for the softmax family, each consistent with the
+//!   full-context prefill path;
+//! * [`model`] — [`NativeLm`](model::NativeLm): the native transformer LM
+//!   (paper recipe) with a prefill path over the block kernels and a
+//!   per-token step path over decode states;
+//! * [`sampler`] — greedy / temperature / top-k / nucleus policies on a
+//!   deterministic [`Pcg`](crate::util::rng::Pcg) stream;
+//! * [`session`] — one request's lifecycle: prefill, step, retire;
+//! * [`scheduler`] — continuous batching of concurrent sessions against a
+//!   token budget, emitting latency/throughput metrics.
+//!
+//! `benches/decode_throughput.rs` sweeps context per mechanism and shows
+//! the payoff: flat µs/token for Polysketch/Performer, linear growth for
+//! the softmax family.
+
+pub mod model;
+pub mod sampler;
+pub mod scheduler;
+pub mod session;
+pub mod state;
+
+pub use model::{LayerState, LmConfig, NativeLm};
+pub use sampler::SamplePolicy;
+pub use scheduler::{Scheduler, SchedulerConfig, ServeSummary, SessionReport};
+pub use session::{decode_text, encode_prompt, DecodeSession, GenRequest};
+pub use state::DecodeState;

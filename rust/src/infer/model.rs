@@ -1,0 +1,330 @@
+//! Native decoder-only transformer LM over the native attention kernels.
+//!
+//! The PJRT model path (`runtime::ModelRuntime`) executes fixed-shape AOT
+//! artifacts and cannot step one token at a time; this model is its
+//! native-rust twin for the serving path, mirroring the paper recipe the
+//! JAX model uses (python/compile/model.py): sinusoidal absolute position
+//! embeddings on the token embedding, pre-LN blocks, RoPE on q/k, GEGLU
+//! feed-forward, final LN + readout.  Weights are deterministic in the
+//! config seed (this repo has no host-side checkpoint import — the
+//! serving subsystem's correctness story is prefill/decode parity, which
+//! is weight-independent).
+//!
+//! Two execution paths over the *same* weights:
+//! * [`NativeLm::prefill`] — full-context forward via `Attention::run`
+//!   (the block kernels), capturing per-layer/head k,v into the decode
+//!   states;
+//! * [`NativeLm::step`] — one token through [`DecodeState`]s: O(1) per
+//!   token for Polysketch/Performer, O(n) for the softmax family.
+
+use crate::attn::{Attention, Mechanism};
+use crate::infer::state::{ln_row, DecodeState};
+use crate::tensor::{layernorm_rows, Tensor};
+use crate::util::rng::Pcg;
+
+/// Native LM hyperparameters.
+#[derive(Clone, Debug)]
+pub struct LmConfig {
+    /// Vocabulary size; the `generate` path uses byte-level tokens
+    /// (id 0 = BOS, ids 1..=256 = bytes), so 257 is the natural floor.
+    pub vocab: usize,
+    pub d_model: usize,
+    pub layers: usize,
+    pub heads: usize,
+    /// GEGLU hidden width = `ff_mult * d_model`.
+    pub ff_mult: usize,
+    /// Weight seed (deterministic init).
+    pub seed: u64,
+}
+
+impl Default for LmConfig {
+    fn default() -> Self {
+        LmConfig { vocab: 257, d_model: 64, layers: 2, heads: 4, ff_mult: 2, seed: 0 }
+    }
+}
+
+struct Layer {
+    wq: Tensor,
+    wk: Tensor,
+    wv: Tensor,
+    wo: Tensor,
+    ffn_gate: Tensor,
+    ffn_up: Tensor,
+    ffn_down: Tensor,
+    /// One instantiated mechanism (sketches/features) per head.
+    heads: Vec<Attention>,
+}
+
+/// Decode state of one layer: one [`DecodeState`] per head.
+pub struct LayerState {
+    pub heads: Vec<DecodeState>,
+}
+
+/// Native autoregressive LM (one per served mechanism).
+pub struct NativeLm {
+    pub cfg: LmConfig,
+    pub mech: Mechanism,
+    embed: Tensor,
+    readout: Tensor,
+    layers: Vec<Layer>,
+}
+
+impl NativeLm {
+    pub fn new(cfg: LmConfig, mech: Mechanism) -> NativeLm {
+        assert!(cfg.d_model % cfg.heads == 0, "d_model must divide into heads");
+        let hd = cfg.d_model / cfg.heads;
+        assert!(hd % 2 == 0, "head_dim must be even (RoPE pairs)");
+        let mut rng = Pcg::seeded(cfg.seed ^ 0x1fe7);
+        let d = cfg.d_model;
+        let f = cfg.ff_mult * d;
+        let sd = 1.0 / (d as f32).sqrt();
+        let sf = 1.0 / (f as f32).sqrt();
+        let embed = Tensor::gaussian(&mut rng, &[cfg.vocab, d]).scale(0.02);
+        let readout = Tensor::gaussian(&mut rng, &[d, cfg.vocab]).scale(0.02);
+        let layers = (0..cfg.layers)
+            .map(|_| Layer {
+                wq: Tensor::gaussian(&mut rng, &[d, d]).scale(sd),
+                wk: Tensor::gaussian(&mut rng, &[d, d]).scale(sd),
+                wv: Tensor::gaussian(&mut rng, &[d, d]).scale(sd),
+                wo: Tensor::gaussian(&mut rng, &[d, d]).scale(sd),
+                ffn_gate: Tensor::gaussian(&mut rng, &[d, f]).scale(sd),
+                ffn_up: Tensor::gaussian(&mut rng, &[d, f]).scale(sd),
+                ffn_down: Tensor::gaussian(&mut rng, &[f, d]).scale(sf),
+                heads: (0..cfg.heads).map(|_| Attention::new(&mech, hd, &mut rng)).collect(),
+            })
+            .collect();
+        NativeLm { cfg, mech, embed, readout, layers }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.cfg.d_model / self.cfg.heads
+    }
+
+    /// Fresh per-layer decode states sharing this model's projections.
+    pub fn new_states(&self) -> Vec<LayerState> {
+        self.layers
+            .iter()
+            .map(|l| LayerState { heads: l.heads.iter().map(DecodeState::new).collect() })
+            .collect()
+    }
+
+    /// Total decode-state footprint in f32 words (all layers and heads).
+    pub fn state_memory_floats(states: &[LayerState]) -> usize {
+        states
+            .iter()
+            .flat_map(|l| l.heads.iter())
+            .map(DecodeState::memory_floats)
+            .sum()
+    }
+
+    /// Full-context forward: (n,) tokens -> (n, vocab) logits.
+    pub fn forward(&self, tokens: &[u32]) -> Tensor {
+        self.forward_capture(tokens, None)
+    }
+
+    /// Prefill: full-context forward that additionally folds every
+    /// position's per-layer/head (k, v) into `states`, leaving them ready
+    /// for token-by-token [`NativeLm::step`]s at positions `n..`.
+    pub fn prefill(&self, tokens: &[u32], states: &mut [LayerState]) -> Tensor {
+        self.forward_capture(tokens, Some(states))
+    }
+
+    fn forward_capture(&self, tokens: &[u32], mut states: Option<&mut [LayerState]>) -> Tensor {
+        let n = tokens.len();
+        assert!(n > 0, "empty token sequence");
+        let d = self.cfg.d_model;
+        let hd = self.head_dim();
+        let mut x = Tensor::zeros(&[n, d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            let row = x.row_mut(i);
+            row.copy_from_slice(self.embed.row(t as usize));
+            add_sinusoidal(row, i);
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            let xn = layernorm_rows(&x);
+            let q = xn.matmul(&layer.wq);
+            let k = xn.matmul(&layer.wk);
+            let v = xn.matmul(&layer.wv);
+            let mut concat = Tensor::zeros(&[n, d]);
+            for (hi, attn) in layer.heads.iter().enumerate() {
+                let mut qh = slice_head(&q, hi, hd);
+                let mut kh = slice_head(&k, hi, hd);
+                let vh = slice_head(&v, hi, hd);
+                for i in 0..n {
+                    rope_row(qh.row_mut(i), i);
+                    rope_row(kh.row_mut(i), i);
+                }
+                if let Some(states) = states.as_deref_mut() {
+                    let st = &mut states[li].heads[hi];
+                    for i in 0..n {
+                        st.absorb(kh.row(i), vh.row(i));
+                    }
+                }
+                let oh = self.run_padded(attn, &qh, &kh, &vh);
+                for i in 0..n {
+                    concat.row_mut(i)[hi * hd..(hi + 1) * hd].copy_from_slice(oh.row(i));
+                }
+            }
+            x = x.add(&concat.matmul(&layer.wo));
+            let xn2 = layernorm_rows(&x);
+            let g = xn2.matmul(&layer.ffn_gate).map(gelu);
+            let u = xn2.matmul(&layer.ffn_up);
+            x = x.add(&g.hadamard(&u).matmul(&layer.ffn_down));
+        }
+        layernorm_rows(&x).matmul(&self.readout)
+    }
+
+    /// One decode step: fold `token` (at absolute position `pos`) into the
+    /// states and return the next-token logits (vocab,).
+    pub fn step(&self, token: u32, pos: usize, states: &mut [LayerState]) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let hd = self.head_dim();
+        let mut x = self.embed.row(token as usize).to_vec();
+        add_sinusoidal(&mut x, pos);
+        for (li, layer) in self.layers.iter().enumerate() {
+            let xn = Tensor::from_vec(&[1, d], ln_row(&x));
+            let q = xn.matmul(&layer.wq);
+            let k = xn.matmul(&layer.wk);
+            let v = xn.matmul(&layer.wv);
+            let mut concat = vec![0.0f32; d];
+            for hi in 0..self.cfg.heads {
+                let mut qh = q.row(0)[hi * hd..(hi + 1) * hd].to_vec();
+                let mut kh = k.row(0)[hi * hd..(hi + 1) * hd].to_vec();
+                let vh = &v.row(0)[hi * hd..(hi + 1) * hd];
+                rope_row(&mut qh, pos);
+                rope_row(&mut kh, pos);
+                let oh = states[li].heads[hi].step(&qh, &kh, vh);
+                concat[hi * hd..(hi + 1) * hd].copy_from_slice(&oh);
+            }
+            let attn_out = Tensor::from_vec(&[1, d], concat).matmul(&layer.wo);
+            for (xi, a) in x.iter_mut().zip(attn_out.data()) {
+                *xi += a;
+            }
+            let xn2 = Tensor::from_vec(&[1, d], ln_row(&x));
+            let g = xn2.matmul(&layer.ffn_gate).map(gelu);
+            let u = xn2.matmul(&layer.ffn_up);
+            let ffn = g.hadamard(&u).matmul(&layer.ffn_down);
+            for (xi, a) in x.iter_mut().zip(ffn.data()) {
+                *xi += a;
+            }
+        }
+        Tensor::from_vec(&[1, d], ln_row(&x)).matmul(&self.readout).into_vec()
+    }
+
+    /// Run one head's attention, zero-padding the sequence up to the
+    /// mechanism's block multiple (causality makes trailing padding inert
+    /// for real rows) so decode-state block partitions line up exactly
+    /// with the prefill partition at any prompt length.
+    fn run_padded(&self, attn: &Attention, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        let n = q.rows();
+        let block = match &self.mech {
+            Mechanism::Softmax | Mechanism::Poly { .. } => 1,
+            Mechanism::Flash { block }
+            | Mechanism::Polysketch { block, .. }
+            | Mechanism::Performer { block, .. } => *block,
+        };
+        let np = n.div_ceil(block) * block;
+        if np == n {
+            return attn.run(q, k, v);
+        }
+        let pad = |t: &Tensor| {
+            let mut out = Tensor::zeros(&[np, t.cols()]);
+            out.data_mut()[..t.len()].copy_from_slice(t.data());
+            out
+        };
+        let full = attn.run(&pad(q), &pad(k), &pad(v));
+        Tensor::from_vec(&[n, v.cols()], full.data()[..n * v.cols()].to_vec())
+    }
+}
+
+/// Column slice of one head: (n, d) -> (n, hd).
+fn slice_head(t: &Tensor, head: usize, hd: usize) -> Tensor {
+    let n = t.rows();
+    let mut out = Tensor::zeros(&[n, hd]);
+    for i in 0..n {
+        out.row_mut(i).copy_from_slice(&t.row(i)[head * hd..(head + 1) * hd]);
+    }
+    out
+}
+
+/// Add the sinusoidal absolute position embedding for `pos` in place —
+/// the half-split layout of python/compile/model.py::sinusoidal_table.
+fn add_sinusoidal(row: &mut [f32], pos: usize) {
+    let d = row.len();
+    let half = d / 2;
+    for j in 0..half {
+        let angle = pos as f64 / 10000f64.powf(2.0 * j as f64 / d as f64);
+        row[j] += angle.sin() as f32;
+        row[half + j] += angle.cos() as f32;
+    }
+}
+
+/// Rotary position embedding of one head row (half-split pairing, matching
+/// python/compile/model.py::_rope).
+fn rope_row(x: &mut [f32], pos: usize) {
+    let hd = x.len();
+    let half = hd / 2;
+    for i in 0..half {
+        let theta = pos as f64 / 10000f64.powf(2.0 * i as f64 / hd as f64);
+        let (c, s) = (theta.cos() as f32, theta.sin() as f32);
+        let (x1, x2) = (x[i], x[half + i]);
+        x[i] = x1 * c - x2 * s;
+        x[half + i] = x1 * s + x2 * c;
+    }
+}
+
+/// Tanh-approximation GELU (python/compile/common.py's activation).
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((2.0 / std::f32::consts::PI).sqrt() * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(mech: Mechanism) -> NativeLm {
+        let cfg = LmConfig { vocab: 64, d_model: 32, layers: 2, heads: 2, ff_mult: 2, seed: 7 };
+        NativeLm::new(cfg, mech)
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let lm = tiny(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true });
+        let tokens: Vec<u32> = (0..13).map(|i| (i * 5) % 64).collect();
+        let logits = lm.forward(&tokens);
+        assert_eq!(logits.shape(), &[13, 64]);
+        assert!(logits.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn forward_is_deterministic_in_seed() {
+        let mech = Mechanism::Performer { m: 8, block: 8 };
+        let a = tiny(mech.clone());
+        let b = tiny(mech);
+        let tokens: Vec<u32> = (0..9).collect();
+        assert_eq!(a.forward(&tokens), b.forward(&tokens));
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        let lm = tiny(Mechanism::Softmax);
+        let t1: Vec<u32> = (0..12).collect();
+        let mut t2 = t1.clone();
+        t2[11] = 63;
+        let a = lm.forward(&t1);
+        let b = lm.forward(&t2);
+        for i in 0..11 {
+            assert_eq!(a.row(i), b.row(i), "row {i} depends on a future token");
+        }
+        assert_ne!(a.row(11), b.row(11));
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut x: Vec<f32> = (0..8).map(|i| i as f32 - 3.5).collect();
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        rope_row(&mut x, 17);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-3);
+    }
+}

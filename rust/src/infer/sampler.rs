@@ -1,0 +1,171 @@
+//! Token sampling policies over next-token logits.
+//!
+//! All policies draw from a caller-owned [`Pcg`] stream, so a (seed,
+//! prompt, policy) triple replays the exact same token sequence no matter
+//! how the scheduler interleaves sessions — the determinism contract the
+//! serving path is tested against.
+
+use crate::util::rng::Pcg;
+
+/// How to turn logits into a token.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SamplePolicy {
+    /// Argmax (ties broken toward the lowest id). Ignores the RNG.
+    Greedy,
+    /// Softmax at the given temperature.
+    Temperature(f32),
+    /// Keep the `k` highest logits, then temperature-softmax among them.
+    TopK { k: usize, temperature: f32 },
+    /// Nucleus sampling: smallest probability mass >= `p`.
+    TopP { p: f32, temperature: f32 },
+}
+
+impl SamplePolicy {
+    /// Build from the CLI surface: a policy name plus the shared knobs.
+    pub fn from_flags(name: &str, temperature: f32, k: usize, p: f32) -> Result<SamplePolicy, String> {
+        match name {
+            "greedy" => Ok(SamplePolicy::Greedy),
+            "temperature" => Ok(SamplePolicy::Temperature(temperature)),
+            "top-k" => Ok(SamplePolicy::TopK { k, temperature }),
+            "top-p" => Ok(SamplePolicy::TopP { p, temperature }),
+            other => Err(format!("unknown sampling policy `{other}` (want greedy | temperature | top-k | top-p)")),
+        }
+    }
+
+    /// Sample a token id from `logits`.
+    pub fn sample(&self, logits: &[f32], rng: &mut Pcg) -> usize {
+        assert!(!logits.is_empty());
+        match self {
+            SamplePolicy::Greedy => argmax(logits),
+            SamplePolicy::Temperature(t) => rng.categorical(&softmax_t(logits, *t)),
+            SamplePolicy::TopK { k, temperature } => {
+                let k = (*k).clamp(1, logits.len());
+                // k-th highest logit is the inclusion threshold.
+                let mut sorted: Vec<f32> = logits.to_vec();
+                sorted.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+                let thresh = sorted[k - 1];
+                let mut probs = softmax_t(logits, *temperature);
+                // Mask below-threshold entries; keep at most k at ties by
+                // zeroing extras from the high ids down.
+                let mut kept = logits.iter().filter(|&&l| l >= thresh).count();
+                for (i, &l) in logits.iter().enumerate().rev() {
+                    if l < thresh {
+                        probs[i] = 0.0;
+                    } else if l == thresh && kept > k {
+                        probs[i] = 0.0;
+                        kept -= 1;
+                    }
+                }
+                rng.categorical(&probs)
+            }
+            SamplePolicy::TopP { p, temperature } => {
+                let probs = softmax_t(logits, *temperature);
+                let mut order: Vec<usize> = (0..probs.len()).collect();
+                order.sort_by(|&a, &b| {
+                    probs[b].partial_cmp(&probs[a]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                let target = p.clamp(0.0, 1.0);
+                let mut mass = 0.0f32;
+                let mut nucleus = vec![0.0f32; probs.len()];
+                for &i in &order {
+                    nucleus[i] = probs[i];
+                    mass += probs[i];
+                    if mass >= target {
+                        break;
+                    }
+                }
+                rng.categorical(&nucleus)
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Temperature softmax (stable); t <= 0 degrades to a one-hot argmax.
+fn softmax_t(logits: &[f32], t: f32) -> Vec<f32> {
+    if t <= 0.0 {
+        let mut out = vec![0.0; logits.len()];
+        out[argmax(logits)] = 1.0;
+        return out;
+    }
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| ((l - mx) / t).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let logits = [0.1f32, 2.0, -1.0, 1.9];
+        let mut rng = Pcg::seeded(0);
+        for _ in 0..10 {
+            assert_eq!(SamplePolicy::Greedy.sample(&logits, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_is_seed_deterministic() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let pol = SamplePolicy::Temperature(0.8);
+        let run = |seed| {
+            let mut rng = Pcg::seeded(seed);
+            (0..32).map(|_| pol.sample(&logits, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = [5.0f32, 4.0, 3.0, -10.0, -10.0, -10.0];
+        let pol = SamplePolicy::TopK { k: 3, temperature: 1.0 };
+        let mut rng = Pcg::seeded(1);
+        for _ in 0..200 {
+            assert!(pol.sample(&logits, &mut rng) < 3);
+        }
+    }
+
+    #[test]
+    fn top_p_restricts_to_nucleus() {
+        // One dominant token: a tight nucleus must always pick it.
+        let logits = [10.0f32, 0.0, 0.0, 0.0];
+        let pol = SamplePolicy::TopP { p: 0.5, temperature: 1.0 };
+        let mut rng = Pcg::seeded(2);
+        for _ in 0..100 {
+            assert_eq!(pol.sample(&logits, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn zero_temperature_degrades_to_greedy() {
+        let logits = [0.0f32, 3.0, 1.0];
+        let mut rng = Pcg::seeded(3);
+        assert_eq!(SamplePolicy::Temperature(0.0).sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn frequencies_follow_weights() {
+        let logits = [0.0f32, 2.0f32.ln() + 0.0]; // p1 = 2 * p0
+        let pol = SamplePolicy::Temperature(1.0);
+        let mut rng = Pcg::seeded(4);
+        let mut counts = [0usize; 2];
+        for _ in 0..6000 {
+            counts[pol.sample(&logits, &mut rng)] += 1;
+        }
+        let ratio = counts[1] as f64 / counts[0] as f64;
+        assert!((1.6..2.5).contains(&ratio), "ratio {ratio}");
+    }
+}

@@ -1,0 +1,298 @@
+//! Continuous-batching scheduler for concurrent decode sessions.
+//!
+//! Serving shape: requests queue up, at most `max_concurrent` sessions are
+//! resident (each holds decode state — constant-size for the linear
+//! mechanisms, O(context) for the softmax family), and each scheduling
+//! tick hands out up to `tick_tokens` single-token steps round-robin
+//! across resident sessions.  Finished sessions retire immediately and
+//! free their slot for the queue — the continuous-batching discipline, on
+//! one host thread (the native kernels are single-threaded; scaling out is
+//! a coordinator concern, not a session concern).
+//!
+//! Per-session latency and aggregate throughput flow through `metrics`:
+//! one JSONL record per retired session plus a closing aggregate record.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::infer::model::NativeLm;
+use crate::infer::session::{DecodeSession, GenRequest};
+use crate::metrics::{JsonlWriter, Record};
+use crate::util::stats::percentile;
+
+/// Scheduler knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Maximum resident (admitted, unfinished) sessions.
+    pub max_concurrent: usize,
+    /// Decode-token budget handed out per scheduling tick.
+    pub tick_tokens: usize,
+    /// Optional JSONL sink for per-session + aggregate records.
+    pub log_path: Option<PathBuf>,
+    /// Echo per-session completion lines to stderr.
+    pub echo: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_concurrent: 4, tick_tokens: 16, log_path: None, echo: false }
+    }
+}
+
+/// What one retired session looked like.
+pub struct SessionReport {
+    pub id: usize,
+    pub prompt_len: usize,
+    pub new_tokens: usize,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    /// Queue-to-retire wall time (includes time spent waiting on peers).
+    pub wall_secs: f64,
+    pub state_memory_floats: usize,
+    pub tokens: Vec<u32>,
+}
+
+impl SessionReport {
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        if self.decode_secs > 0.0 {
+            self.new_tokens as f64 / self.decode_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Aggregate result of draining the queue.
+pub struct ServeSummary {
+    pub reports: Vec<SessionReport>,
+    pub wall_secs: f64,
+    pub total_new_tokens: usize,
+    /// Aggregate decode throughput: generated tokens / total wall time.
+    pub tokens_per_sec: f64,
+    pub p50_step_ms: f64,
+    pub p95_step_ms: f64,
+}
+
+/// Continuous-batching scheduler over one shared immutable model.
+pub struct Scheduler<'m> {
+    model: &'m NativeLm,
+    cfg: SchedulerConfig,
+    queue: VecDeque<(usize, GenRequest, Instant)>,
+    next_id: usize,
+}
+
+impl<'m> Scheduler<'m> {
+    pub fn new(model: &'m NativeLm, cfg: SchedulerConfig) -> Scheduler<'m> {
+        Scheduler { model, cfg, queue: VecDeque::new(), next_id: 0 }
+    }
+
+    /// Enqueue a request; returns its session id.
+    pub fn submit(&mut self, req: GenRequest) -> usize {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((id, req, Instant::now()));
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain the queue to completion under the admission/budget discipline.
+    pub fn run(&mut self) -> anyhow::Result<ServeSummary> {
+        let mut log = match &self.cfg.log_path {
+            Some(p) => Some(JsonlWriter::create(p)?),
+            None => None,
+        };
+        let t0 = Instant::now();
+        let mut active: Vec<(DecodeSession, Instant)> = Vec::new();
+        let mut reports: Vec<SessionReport> = Vec::new();
+        let mut step_secs: Vec<f64> = Vec::new();
+        // Round-robin cursor, persistent across ticks so a small token
+        // budget rotates over sessions instead of favoring active[0].
+        let mut cursor = 0usize;
+
+        while !self.queue.is_empty() || !active.is_empty() {
+            // Admission: fill free slots from the queue (prefill happens
+            // here — the expensive full-context pass).
+            while active.len() < self.cfg.max_concurrent.max(1) {
+                let Some((id, req, queued)) = self.queue.pop_front() else { break };
+                active.push((DecodeSession::new(self.model, id, req), queued));
+            }
+            // One tick: round-robin single-token steps under the budget.
+            let mut budget = self.cfg.tick_tokens.max(1);
+            while budget > 0 && !active.is_empty() {
+                let len = active.len();
+                let Some(idx) = (0..len)
+                    .map(|off| (cursor + off) % len)
+                    .find(|&i| !active[i].0.finished)
+                else {
+                    break;
+                };
+                active[idx].0.step(self.model);
+                cursor = (idx + 1) % len;
+                budget -= 1;
+            }
+            // Retirement: emit records, free slots.
+            let mut i = 0;
+            while i < active.len() {
+                if !active[i].0.finished {
+                    i += 1;
+                    continue;
+                }
+                let (s, queued) = active.swap_remove(i);
+                step_secs.extend_from_slice(&s.step_secs);
+                let report = SessionReport {
+                    id: s.id,
+                    prompt_len: s.prompt_len,
+                    new_tokens: s.new_tokens(),
+                    prefill_secs: s.prefill_secs,
+                    decode_secs: s.decode_secs,
+                    wall_secs: queued.elapsed().as_secs_f64(),
+                    state_memory_floats: s.state_memory_floats(),
+                    tokens: s.tokens,
+                };
+                if let Some(w) = &mut log {
+                    w.write(&session_record(self.model, &report))?;
+                }
+                if self.cfg.echo {
+                    eprintln!(
+                        "session {:>3} done: {} prompt + {} new tokens, prefill {:.1}ms, \
+                         {:.2}ms/token decode",
+                        report.id,
+                        report.prompt_len,
+                        report.new_tokens,
+                        report.prefill_secs * 1e3,
+                        report.decode_secs * 1e3 / report.new_tokens.max(1) as f64,
+                    );
+                }
+                reports.push(report);
+            }
+        }
+
+        reports.sort_by_key(|r| r.id);
+        let wall_secs = t0.elapsed().as_secs_f64();
+        let total_new_tokens: usize = reports.iter().map(|r| r.new_tokens).sum();
+        step_secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (p50, p95) = if step_secs.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile(&step_secs, 50.0) * 1e3, percentile(&step_secs, 95.0) * 1e3)
+        };
+        let summary = ServeSummary {
+            wall_secs,
+            total_new_tokens,
+            tokens_per_sec: if wall_secs > 0.0 { total_new_tokens as f64 / wall_secs } else { 0.0 },
+            p50_step_ms: p50,
+            p95_step_ms: p95,
+            reports,
+        };
+        if let Some(w) = &mut log {
+            w.write(
+                &Record::new()
+                    .str("kind", "serve_summary")
+                    .str("mech", self.model.mech.label())
+                    .i64("sessions", summary.reports.len() as i64)
+                    .i64("new_tokens", summary.total_new_tokens as i64)
+                    .f64("wall_secs", summary.wall_secs)
+                    .f64("tokens_per_sec", summary.tokens_per_sec)
+                    .f64("p50_step_ms", summary.p50_step_ms)
+                    .f64("p95_step_ms", summary.p95_step_ms),
+            )?;
+            w.flush()?;
+        }
+        Ok(summary)
+    }
+}
+
+fn session_record(model: &NativeLm, r: &SessionReport) -> Record {
+    Record::new()
+        .str("kind", "session")
+        .str("mech", model.mech.label())
+        .i64("id", r.id as i64)
+        .i64("prompt_len", r.prompt_len as i64)
+        .i64("new_tokens", r.new_tokens as i64)
+        .f64("prefill_ms", r.prefill_secs * 1e3)
+        .f64("decode_ms", r.decode_secs * 1e3)
+        .f64("decode_tokens_per_sec", r.decode_tokens_per_sec())
+        .f64("wall_ms", r.wall_secs * 1e3)
+        .i64("state_memory_floats", r.state_memory_floats as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::Mechanism;
+    use crate::infer::model::LmConfig;
+    use crate::infer::sampler::SamplePolicy;
+
+    fn model(mech: Mechanism) -> NativeLm {
+        let cfg = LmConfig { vocab: 64, d_model: 32, layers: 2, heads: 2, ff_mult: 2, seed: 9 };
+        NativeLm::new(cfg, mech)
+    }
+
+    fn req(seed: u64, max_new: usize) -> GenRequest {
+        GenRequest {
+            prompt: vec![0, 7, 3, 9],
+            max_new_tokens: max_new,
+            policy: SamplePolicy::Temperature(0.8),
+            seed,
+        }
+    }
+
+    #[test]
+    fn drains_all_sessions_under_tight_budget() {
+        let m = model(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: false });
+        let cfg = SchedulerConfig { max_concurrent: 2, tick_tokens: 3, ..Default::default() };
+        let mut sched = Scheduler::new(&m, cfg);
+        for i in 0..5 {
+            sched.submit(req(i, 4 + i as usize));
+        }
+        let summary = sched.run().unwrap();
+        assert_eq!(summary.reports.len(), 5);
+        assert_eq!(summary.total_new_tokens, 4 + 5 + 6 + 7 + 8);
+        for (i, r) in summary.reports.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert_eq!(r.new_tokens, 4 + i);
+        }
+    }
+
+    #[test]
+    fn output_independent_of_batching_discipline() {
+        // The determinism contract: scheduling order must not leak into
+        // any session's token stream.
+        let m = model(Mechanism::Performer { m: 8, block: 8 });
+        let run = |max_concurrent, tick_tokens| {
+            let cfg = SchedulerConfig { max_concurrent, tick_tokens, ..Default::default() };
+            let mut sched = Scheduler::new(&m, cfg);
+            for i in 0..4 {
+                sched.submit(req(100 + i, 10));
+            }
+            let mut out: Vec<Vec<u32>> =
+                sched.run().unwrap().reports.into_iter().map(|r| r.tokens).collect();
+            out.sort();
+            out
+        };
+        assert_eq!(run(1, 1), run(4, 32));
+        assert_eq!(run(2, 5), run(3, 7));
+    }
+
+    #[test]
+    fn writes_jsonl_records() {
+        let dir = std::env::temp_dir().join("psf_sched_test");
+        let path = dir.join("serve.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let m = model(Mechanism::Softmax);
+        let cfg = SchedulerConfig { log_path: Some(path.clone()), ..Default::default() };
+        let mut sched = Scheduler::new(&m, cfg);
+        sched.submit(req(0, 3));
+        sched.submit(req(1, 3));
+        let summary = sched.run().unwrap();
+        assert_eq!(summary.reports.len(), 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3); // 2 sessions + 1 aggregate
+        assert!(text.contains("\"kind\":\"session\""));
+        assert!(text.contains("\"kind\":\"serve_summary\""));
+    }
+}

@@ -1,0 +1,183 @@
+//! Decode sessions: prompt prefill, then token-by-token stepping.
+//!
+//! A session owns its per-layer [`LayerState`]s, its sampling policy, and
+//! its private RNG stream — sessions over the same (immutable) model are
+//! fully independent, which is what lets the scheduler interleave them in
+//! any order without changing any session's output.
+
+use std::time::Instant;
+
+use crate::infer::model::{LayerState, NativeLm};
+use crate::infer::sampler::SamplePolicy;
+use crate::util::rng::Pcg;
+
+/// Byte-level prompt encoding: BOS (0) + each byte as id 1..=256.
+pub fn encode_prompt(text: &str) -> Vec<u32> {
+    std::iter::once(0u32).chain(text.bytes().map(|b| b as u32 + 1)).collect()
+}
+
+/// Inverse of [`encode_prompt`] over generated ids (lossy UTF-8).
+pub fn decode_text(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| (1..=256).contains(&t))
+        .map(|&t| (t - 1) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// A generation request submitted to the scheduler.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub policy: SamplePolicy,
+    /// Sampling seed — with the same seed, prompt, and policy the output
+    /// token sequence is identical regardless of scheduling.
+    pub seed: u64,
+}
+
+/// One in-flight decode session.
+pub struct DecodeSession {
+    pub id: usize,
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    states: Vec<LayerState>,
+    last_logits: Vec<f32>,
+    policy: SamplePolicy,
+    rng: Pcg,
+    max_new: usize,
+    pub finished: bool,
+    /// Wall time of the prompt prefill.
+    pub prefill_secs: f64,
+    /// Accumulated wall time of decode steps.
+    pub decode_secs: f64,
+    /// Per-token decode latencies (seconds), one per generated token.
+    pub step_secs: Vec<f64>,
+}
+
+impl DecodeSession {
+    /// Prefill the prompt through the full-context path and stand ready to
+    /// decode. Panics on an empty prompt (encode_prompt always emits BOS).
+    pub fn new(model: &NativeLm, id: usize, req: GenRequest) -> DecodeSession {
+        assert!(!req.prompt.is_empty(), "prompt must contain at least BOS");
+        let mut states = model.new_states();
+        let t0 = Instant::now();
+        let logits = model.prefill(&req.prompt, &mut states);
+        let prefill_secs = t0.elapsed().as_secs_f64();
+        let last = logits.row(req.prompt.len() - 1).to_vec();
+        DecodeSession {
+            id,
+            prompt_len: req.prompt.len(),
+            tokens: req.prompt,
+            states,
+            last_logits: last,
+            policy: req.policy,
+            rng: Pcg::seeded(req.seed),
+            max_new: req.max_new_tokens,
+            finished: req.max_new_tokens == 0,
+            prefill_secs,
+            decode_secs: 0.0,
+            step_secs: Vec::new(),
+        }
+    }
+
+    /// Tokens generated so far.
+    pub fn new_tokens(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    /// Sample one token and advance the decode states to produce the next
+    /// logits. Returns the token, or `None` if the session is already
+    /// finished.  The model advances even on the final token, so every
+    /// generated token costs exactly one sample + one model step (honest
+    /// per-token timing) and the states stay consistent with `tokens` —
+    /// a retired session could be resumed with a larger budget.
+    pub fn step(&mut self, model: &NativeLm) -> Option<u32> {
+        if self.finished {
+            return None;
+        }
+        let t0 = Instant::now();
+        let tok = self.policy.sample(&self.last_logits, &mut self.rng) as u32;
+        self.tokens.push(tok);
+        let pos = self.tokens.len() - 1;
+        self.last_logits = model.step(tok, pos, &mut self.states);
+        if self.new_tokens() >= self.max_new {
+            self.finished = true;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        self.decode_secs += dt;
+        self.step_secs.push(dt);
+        Some(tok)
+    }
+
+    /// Run the whole request to completion (no scheduler involved).
+    pub fn run_to_completion(&mut self, model: &NativeLm) {
+        while self.step(model).is_some() {}
+    }
+
+    /// Generated suffix (excluding the prompt).
+    pub fn generated(&self) -> &[u32] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    /// Decode-state footprint right now, in f32 words.
+    pub fn state_memory_floats(&self) -> usize {
+        NativeLm::state_memory_floats(&self.states)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::Mechanism;
+    use crate::infer::model::LmConfig;
+
+    fn model() -> NativeLm {
+        let cfg = LmConfig { vocab: 64, d_model: 32, layers: 2, heads: 2, ff_mult: 2, seed: 3 };
+        NativeLm::new(cfg, Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true })
+    }
+
+    #[test]
+    fn prompt_roundtrip() {
+        let toks = encode_prompt("hi!");
+        assert_eq!(toks, vec![0, b'h' as u32 + 1, b'i' as u32 + 1, b'!' as u32 + 1]);
+        assert_eq!(decode_text(&toks[1..]), "hi!");
+    }
+
+    #[test]
+    fn session_generates_exactly_max_new() {
+        let m = model();
+        let req = GenRequest {
+            prompt: vec![0, 5, 9],
+            max_new_tokens: 7,
+            policy: SamplePolicy::Greedy,
+            seed: 0,
+        };
+        let mut s = DecodeSession::new(&m, 0, req);
+        s.run_to_completion(&m);
+        assert!(s.finished);
+        assert_eq!(s.new_tokens(), 7);
+        assert_eq!(s.step_secs.len(), 7);
+        assert!(s.generated().iter().all(|&t| (t as usize) < 64));
+    }
+
+    #[test]
+    fn same_seed_same_output() {
+        let m = model();
+        let req = |seed| GenRequest {
+            prompt: vec![0, 1, 2, 3, 4],
+            max_new_tokens: 12,
+            policy: SamplePolicy::Temperature(0.9),
+            seed,
+        };
+        let mut a = DecodeSession::new(&m, 0, req(42));
+        let mut b = DecodeSession::new(&m, 1, req(42));
+        let mut c = DecodeSession::new(&m, 2, req(43));
+        a.run_to_completion(&m);
+        b.run_to_completion(&m);
+        c.run_to_completion(&m);
+        assert_eq!(a.generated(), b.generated());
+        assert_ne!(a.generated(), c.generated());
+    }
+}

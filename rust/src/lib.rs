@@ -5,8 +5,9 @@
 //!   * L1: Pallas kernels + JAX model (`python/`, build-time only),
 //!   * L2: AOT-lowered HLO artifacts (`artifacts/*.hlo.txt`),
 //!   * L3: this crate — PJRT runtime, training coordinator, data pipeline,
-//!     synthetic tasks, native attention kernels, and the bench harness
-//!     that regenerates every table/figure of the paper's evaluation.
+//!     synthetic tasks, native attention kernels, the linear-time decoding
+//!     and serving subsystem (`infer`), and the bench harness that
+//!     regenerates every table/figure of the paper's evaluation.
 
 pub mod attn;
 pub mod bench;
@@ -16,6 +17,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exec;
+pub mod infer;
 pub mod metrics;
 pub mod prop;
 pub mod runtime;

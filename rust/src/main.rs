@@ -7,14 +7,18 @@
 //!   task                       train + evaluate a synthetic task artifact
 //!   eval                       perplexity + downstream MCQ of a trained run
 //!   attn                       run one attention micro-artifact (sanity)
+//!   generate                   autoregressive decoding (native model path)
 //!
-//! Everything executes AOT-compiled HLO through the PJRT CPU client;
-//! Python is never invoked (`make artifacts` must have run once).
+//! Artifact-backed subcommands execute AOT-compiled HLO through the PJRT
+//! CPU client; Python is never invoked (`make artifacts` must have run
+//! once).  `generate` runs entirely on the native kernels — no artifacts.
 
 use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
+use polysketchformer::attn::Mechanism;
 use polysketchformer::cli::{Args, CliError};
+use polysketchformer::infer::{self, LmConfig, NativeLm, SamplePolicy, Scheduler, SchedulerConfig};
 use polysketchformer::coordinator::{
     self, DataParallel, TaskRunnerConfig, Trainer, TrainerConfig,
 };
@@ -49,6 +53,7 @@ fn run(argv: &[String]) -> Result<()> {
         "task" => cmd_task(rest),
         "eval" => cmd_eval(rest),
         "attn" => cmd_attn(rest),
+        "generate" => cmd_generate(rest),
         "--help" | "-h" | "help" => {
             eprintln!("{}", top_usage());
             Ok(())
@@ -66,7 +71,8 @@ fn top_usage() -> String {
        dp-train    simulated data-parallel training (grad allreduce)\n\
        task        train + evaluate a synthetic task (copy | induction)\n\
        eval        perplexity + downstream MCQ accuracy\n\
-       attn        run one attention micro-artifact\n\n\
+       attn        run one attention micro-artifact\n\
+       generate    autoregressive decoding on the native model path\n\n\
      run `psf <subcommand> --help` for flags."
         .to_string()
 }
@@ -438,6 +444,110 @@ fn cmd_attn(argv: &[String]) -> Result<()> {
     if !finite {
         bail!("non-finite outputs");
     }
+    Ok(())
+}
+
+// -------------------------------------------------------------- generate
+
+/// Autoregressive decoding over the native model path: byte-level prompts
+/// through the continuous-batching scheduler.  O(1)/token for the linear
+/// mechanisms, KV-cache fallback for the softmax family — deterministic in
+/// `--seed` regardless of batching.
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let spec = Args::new("psf generate", "autoregressive decoding on the native model path")
+        .opt("mech", "psk4_r16_b32_local",
+             "mechanism label (softmax | flash_b<B> | poly<P> | psk<P>_r<R>_b<B>[_local] | performer<M>_b<B>)")
+        .opt("prompt", "The polynomial kernel ", "prompt text (byte-level tokens)")
+        .opt("max-tokens", "64", "tokens to generate per session")
+        .opt("sessions", "1", "concurrent sessions (same prompt, forked sampling seeds)")
+        .opt("policy", "greedy", "greedy | temperature | top-k | top-p")
+        .opt("temperature", "1.0", "softmax temperature (non-greedy policies)")
+        .opt("top-k", "40", "k for --policy top-k")
+        .opt("top-p", "0.9", "p for --policy top-p")
+        .opt("d-model", "64", "model width")
+        .opt("layers", "2", "transformer layers")
+        .opt("heads", "4", "attention heads")
+        .opt("concurrent", "4", "scheduler admission cap")
+        .opt("tick", "16", "decode-token budget per scheduling tick")
+        .opt("log", "", "JSONL metrics path (empty = none)")
+        .opt("seed", "0", "weight + sampling seed");
+    let p = parse(spec, argv)?;
+
+    let mech = Mechanism::parse(p.str("mech")).map_err(|e| anyhow!("{e}"))?;
+    let policy = SamplePolicy::from_flags(
+        p.str("policy"),
+        p.f64("temperature")? as f32,
+        p.usize("top-k")?,
+        p.f64("top-p")? as f32,
+    )
+    .map_err(|e| anyhow!("{e}"))?;
+    let seed = p.u64("seed")?;
+    let cfg = LmConfig {
+        d_model: p.usize("d-model")?,
+        layers: p.usize("layers")?,
+        heads: p.usize("heads")?,
+        seed,
+        ..LmConfig::default()
+    };
+    if cfg.heads == 0
+        || cfg.layers == 0
+        || cfg.d_model % cfg.heads != 0
+        || (cfg.d_model / cfg.heads) % 2 != 0
+    {
+        bail!(
+            "--d-model {} must split into --heads {} (>= 1) with an even head_dim, --layers >= 1",
+            cfg.d_model,
+            cfg.heads
+        );
+    }
+    let model = NativeLm::new(cfg, mech.clone());
+    let sessions = p.usize("sessions")?.max(1);
+    println!(
+        "generate: mech {} ({}), d_model {} x {} layers, {} session(s)",
+        mech.label(),
+        if mech.is_linear() { "O(1)/token recurrent state" } else { "O(n)/token KV cache" },
+        model.cfg.d_model,
+        model.cfg.layers,
+        sessions,
+    );
+
+    let prompt = infer::encode_prompt(p.str("prompt"));
+    let sched_cfg = SchedulerConfig {
+        max_concurrent: p.usize("concurrent")?,
+        tick_tokens: p.usize("tick")?,
+        log_path: non_empty(p.str("log")).map(PathBuf::from),
+        echo: true,
+    };
+    let mut sched = Scheduler::new(&model, sched_cfg);
+    for i in 0..sessions {
+        sched.submit(infer::GenRequest {
+            prompt: prompt.clone(),
+            max_new_tokens: p.usize("max-tokens")?,
+            policy: policy.clone(),
+            seed: seed ^ (i as u64).wrapping_mul(0x9e3779b97f4a7c15),
+        });
+    }
+    let summary = sched.run()?;
+    for r in &summary.reports {
+        println!(
+            "--- session {} ({} new tokens, prefill {:.1}ms, {:.2}ms/token) ---",
+            r.id,
+            r.new_tokens,
+            r.prefill_secs * 1e3,
+            r.decode_secs * 1e3 / r.new_tokens.max(1) as f64,
+        );
+        println!("{}{}", p.str("prompt"), infer::decode_text(&r.tokens[r.prompt_len..]));
+    }
+    println!(
+        "served {} session(s): {} tokens in {:.2}s = {:.1} tok/s aggregate \
+         (step p50 {:.2}ms, p95 {:.2}ms)",
+        summary.reports.len(),
+        summary.total_new_tokens,
+        summary.wall_secs,
+        summary.tokens_per_sec,
+        summary.p50_step_ms,
+        summary.p95_step_ms,
+    );
     Ok(())
 }
 

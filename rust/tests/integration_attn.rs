@@ -1,3 +1,9 @@
+//! NOTE: every test here is `#[ignore]`d for tier-1 runs: they exercise
+//! AOT artifacts through PJRT, which needs `make artifacts` (Python/JAX
+//! toolchain) and the real xla_extension bindings in place of the offline
+//! stub under rust/vendor/xla.  Run with `cargo test -- --ignored` once
+//! both are available.
+
 //! Cross-layer attention correctness: the AOT Pallas softmax kernel run
 //! through PJRT must match the native rust implementation on the same
 //! inputs — closing the loop L1 (Pallas) -> HLO -> rust against L3 native.
@@ -12,6 +18,7 @@ use polysketchformer::tensor::Tensor;
 use polysketchformer::util::rng::Pcg;
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla_extension backend"]
 fn pallas_softmax_artifact_matches_native_rust() {
     let micro = runtime::load_attn("attn_softmax_pallas_n128").unwrap_or_else(|e| {
         panic!("run `make artifacts` first: {e:#}")
@@ -44,6 +51,7 @@ fn pallas_softmax_artifact_matches_native_rust() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla_extension backend"]
 fn pallas_poly_artifact_matches_native_rust() {
     let micro = runtime::load_attn("attn_poly_pallas_n128").unwrap();
     let (heads, n, hd) = (micro.heads, micro.n, micro.head_dim);
@@ -78,6 +86,7 @@ fn pallas_poly_artifact_matches_native_rust() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla_extension backend"]
 fn polysketch_artifact_is_nonnegative_normalized() {
     // Even without bitwise comparison (random sketches live in the HLO),
     // the polysketch artifact's output must be a convex-ish combination of
@@ -100,6 +109,7 @@ fn polysketch_artifact_is_nonnegative_normalized() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla_extension backend"]
 fn distinct_mechanism_artifacts_produce_distinct_outputs() {
     // Regression test for the constant-elision bug: as_hlo_text() by
     // default prints large literals as `constant({...})`, which the
@@ -127,6 +137,7 @@ fn distinct_mechanism_artifacts_produce_distinct_outputs() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla_extension backend"]
 fn rope_tables_survive_the_hlo_text_roundtrip() {
     // Second regression angle: the model's attention must actually depend
     // on token *positions* (RoPE + sinusoidal tables are baked statics).

@@ -1,3 +1,9 @@
+//! NOTE: every test here is `#[ignore]`d for tier-1 runs: they exercise
+//! AOT artifacts through PJRT, which needs `make artifacts` (Python/JAX
+//! toolchain) and the real xla_extension bindings in place of the offline
+//! stub under rust/vendor/xla.  Run with `cargo test -- --ignored` once
+//! both are available.
+
 //! Integration tests for the synthetic-task path: task generators ->
 //! AOT train/fwd artifacts -> accuracy evaluation (Appendix F protocol).
 
@@ -7,6 +13,7 @@ use polysketchformer::tasks::induction::InductionTask;
 use polysketchformer::tasks::selective_copy::SelectiveCopyTask;
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla_extension backend"]
 fn untrained_model_scores_near_zero_on_selective_copy() {
     let model = runtime::load_model("tiny_softmax", LoadOpts::fwd_only())
         .expect("run `make artifacts` first");
@@ -19,6 +26,7 @@ fn untrained_model_scores_near_zero_on_selective_copy() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla_extension backend"]
 fn task_runner_trains_induction_on_tiny_model() {
     let mut model = runtime::load_model("tiny_softmax", LoadOpts::default()).unwrap();
     let task = InductionTask::standard(model.ctx());
@@ -43,6 +51,7 @@ fn task_runner_trains_induction_on_tiny_model() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla_extension backend"]
 fn induction_loss_starts_near_uniform_over_answers() {
     // With every non-answer target masked, the first-step loss is the NLL
     // of one answer token: ~ln(vocab_task) not ln(vocab_model) after any
@@ -64,6 +73,7 @@ fn induction_loss_starts_near_uniform_over_answers() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla_extension backend"]
 fn selective_copy_trains_loss_down() {
     let mut model = runtime::load_model("tiny_psk", LoadOpts::train_only()).unwrap();
     let task = SelectiveCopyTask::new(model.ctx(), 4, 4);
