@@ -1,0 +1,204 @@
+//! Serve load — closed-loop load generation against the serving gateway.
+//!
+//! Sweeps concurrency (clients = decode workers) × prompt-reuse ratio for
+//! one linear mechanism and one softmax-family mechanism, driving the
+//! in-process gateway lifecycle (admission -> prompt cache -> worker pool
+//! -> token stream) with no HTTP in the measured path.  Two payoffs to
+//! look for:
+//!
+//!   * cache-hit TTFT ≪ cold TTFT (the prefix cache erases prefill — the
+//!     constant-size-state serving advantage);
+//!   * p99 TTFT stays flat as concurrency grows for the linear mechanism
+//!     while aggregate tokens/sec scales with workers.
+//!
+//! Results print as a table, persist as CSV, and land in
+//! `bench_out/serve_load.json` for the cross-PR perf trajectory.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use polysketchformer::attn::Mechanism;
+use polysketchformer::bench::{banner, out_dir, Mode, Table};
+use polysketchformer::infer::{GenRequest, LmConfig, NativeLm, SamplePolicy};
+use polysketchformer::metrics::Record;
+use polysketchformer::serve::{collect_stream, Gateway, GatewayConfig, RequestStats};
+use polysketchformer::util::rng::Pcg;
+use polysketchformer::util::stats::percentile;
+
+fn prompt(tag: u64, len: usize) -> Vec<u32> {
+    std::iter::once(0u32)
+        .chain((0..len as u64).map(|i| 1 + ((tag.wrapping_mul(2654435761) + i * 97) % 256) as u32))
+        .collect()
+}
+
+fn pctl(mut xs: Vec<f64>, q: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(percentile(&xs, q))
+}
+
+fn fmt_ms(v: Option<f64>) -> String {
+    match v {
+        Some(ms) => format!("{:.2}", ms * 1e3),
+        None => "-".into(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mode = Mode::from_env();
+    banner("serve_load", "serving gateway under closed-loop load (TTFT, throughput)", mode);
+
+    let mech_labels = ["psk4_r16_b32_local", "softmax"];
+    let concurrencies: Vec<usize> = match mode {
+        Mode::Smoke => vec![1, 2],
+        Mode::Quick => vec![1, 2, 4],
+        Mode::Full => vec![1, 2, 4, 8],
+    };
+    let reuse_ratios = [0.0f64, 0.75];
+    let prompt_len = mode.pick(48, 128, 256);
+    let max_new = mode.pick(8, 16, 24);
+    let reqs_per_client = mode.pick(4, 8, 16);
+    // Small shared-prompt pool: high reuse means most requests replay one
+    // of these and should hit the prefix cache after first touch.
+    let shared_pool = 2u64;
+
+    let mut table = Table::new(
+        &format!(
+            "serve load (prompt {prompt_len} tok, {max_new} new/req, {reqs_per_client} req/client)"
+        ),
+        "mech · clients · reuse",
+        vec![
+            "cold TTFT p50 ms".into(),
+            "hit TTFT p50 ms".into(),
+            "TTFT p99 ms".into(),
+            "tok/s".into(),
+            "hit rate".into(),
+        ],
+    );
+    let mut records: Vec<Record> = Vec::new();
+
+    for label in mech_labels {
+        let mech = Mechanism::parse(label).expect("bench mechanism labels must parse");
+        for &clients in &concurrencies {
+            for &reuse in &reuse_ratios {
+                let lm_cfg = LmConfig { d_model: 64, layers: 2, heads: 2, ..LmConfig::default() };
+                let gateway = Arc::new(Gateway::new(
+                    NativeLm::new(lm_cfg, mech.clone()),
+                    GatewayConfig {
+                        workers: clients,
+                        queue_cap: 4 * clients.max(1) + 8,
+                        max_resident: 2 * clients.max(1),
+                        cache_bytes: 256 << 20,
+                        ..GatewayConfig::default()
+                    },
+                )?);
+
+                let t0 = std::time::Instant::now();
+                let handles: Vec<_> = (0..clients)
+                    .map(|ci| {
+                        let gw = Arc::clone(&gateway);
+                        std::thread::spawn(move || {
+                            let mut rng = Pcg::new(0x10ad ^ ci as u64, ci as u64);
+                            let mut stats: Vec<RequestStats> = Vec::new();
+                            for j in 0..reqs_per_client {
+                                let p = if rng.f64() < reuse {
+                                    prompt(rng.below(shared_pool), prompt_len)
+                                } else {
+                                    prompt(1000 + (ci * 10_000 + j) as u64, prompt_len)
+                                };
+                                let req = GenRequest {
+                                    prompt: p,
+                                    max_new_tokens: max_new,
+                                    policy: SamplePolicy::Greedy,
+                                    seed: (ci * 1000 + j) as u64,
+                                };
+                                // Closed loop: next request only after this
+                                // one fully streamed back.
+                                if let Ok(rx) = gw.submit(req) {
+                                    if let (_, Some(s)) = collect_stream(rx) {
+                                        stats.push(s);
+                                    }
+                                }
+                            }
+                            stats
+                        })
+                    })
+                    .collect();
+                let all: Vec<RequestStats> =
+                    handles.into_iter().flat_map(|h| h.join().expect("client panicked")).collect();
+                let wall = t0.elapsed().as_secs_f64();
+                gateway.finish()?;
+
+                let total_tokens: usize = all.iter().map(|s| s.new_tokens).sum();
+                let hits = all.iter().filter(|s| s.cache_hit).count();
+                let cold_ttft: Vec<f64> =
+                    all.iter().filter(|s| !s.cache_hit).map(|s| s.ttft_secs).collect();
+                let hit_ttft: Vec<f64> =
+                    all.iter().filter(|s| s.cache_hit).map(|s| s.ttft_secs).collect();
+                let every_ttft: Vec<f64> = all.iter().map(|s| s.ttft_secs).collect();
+                let tok_s = if wall > 0.0 { total_tokens as f64 / wall } else { 0.0 };
+                let hit_rate = hits as f64 / all.len().max(1) as f64;
+
+                let cold_p50 = pctl(cold_ttft.clone(), 50.0);
+                let hit_p50 = pctl(hit_ttft.clone(), 50.0);
+                let p99 = pctl(every_ttft, 99.0);
+                table.row(
+                    &format!("{label} · c{clients} · r{reuse:.2}"),
+                    vec![
+                        fmt_ms(cold_p50),
+                        fmt_ms(hit_p50),
+                        fmt_ms(p99),
+                        format!("{tok_s:.1}"),
+                        format!("{:.0}%", hit_rate * 100.0),
+                    ],
+                );
+                records.push(
+                    Record::new()
+                        .str("mech", label)
+                        .bool("linear", mech.is_linear())
+                        .i64("clients", clients as i64)
+                        .f64("reuse", reuse)
+                        .i64("prompt_len", prompt_len as i64)
+                        .i64("max_new", max_new as i64)
+                        .i64("requests", all.len() as i64)
+                        .i64("cache_hits", hits as i64)
+                        .f64("hit_rate", hit_rate)
+                        .f64("ttft_cold_p50_ms", cold_p50.map(|v| v * 1e3).unwrap_or(-1.0))
+                        .f64("ttft_cold_p99_ms", pctl(cold_ttft, 99.0).map(|v| v * 1e3).unwrap_or(-1.0))
+                        .f64("ttft_hit_p50_ms", hit_p50.map(|v| v * 1e3).unwrap_or(-1.0))
+                        .f64("ttft_hit_p99_ms", pctl(hit_ttft, 99.0).map(|v| v * 1e3).unwrap_or(-1.0))
+                        .f64("ttft_p99_ms", p99.map(|v| v * 1e3).unwrap_or(-1.0))
+                        .f64("tokens_per_sec", tok_s)
+                        .f64("wall_secs", wall),
+                );
+            }
+        }
+    }
+
+    print!("{}", table.render());
+    println!("csv: {}", table.save_csv("serve_load")?.display());
+
+    // JSON artifact, assembled with the same hand-rolled encoder the
+    // metrics substrate uses (no serde in this environment).
+    let mut json = String::from("{\n  \"bench\": \"serve_load\",\n");
+    let _ = writeln!(json, "  \"mode\": \"{mode:?}\",");
+    let _ = writeln!(
+        json,
+        "  \"load\": {{\"prompt_len\": {prompt_len}, \"max_new\": {max_new}, \
+         \"reqs_per_client\": {reqs_per_client}}},"
+    );
+    json.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        let _ = write!(json, "    {}", r.to_json());
+        json.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    let dir = out_dir();
+    std::fs::create_dir_all(&dir)?;
+    let json_path = dir.join("serve_load.json");
+    std::fs::write(&json_path, json)?;
+    println!("json: {}", json_path.display());
+    Ok(())
+}

@@ -12,6 +12,8 @@ pub mod poly;
 pub mod sketch;
 pub mod softmax;
 
+use std::sync::Arc;
+
 use crate::tensor::{layernorm_rows, Tensor};
 use crate::util::rng::Pcg;
 
@@ -116,12 +118,17 @@ impl Mechanism {
 /// A mechanism instantiated with its random state (sketches/features), so
 /// repeated calls reuse the same projections — required for KV-style reuse
 /// and for honest benchmarking (sampling is not part of the hot path).
+///
+/// The projections live behind `Arc`: decode states (and every cached
+/// prompt-prefix snapshot cloned from them) share one copy per
+/// (layer, head) instead of duplicating immutable model-derived tensors
+/// on every clone.
 pub enum Attention {
     Softmax,
     Flash { block: usize },
     Poly { p: u32 },
-    Polysketch { sk: sketch::PolySketch, block: usize, local: bool },
-    Performer { feats: performer::PerformerFeatures, block: usize },
+    Polysketch { sk: Arc<sketch::PolySketch>, block: usize, local: bool },
+    Performer { feats: Arc<performer::PerformerFeatures>, block: usize },
 }
 
 impl Attention {
@@ -131,12 +138,12 @@ impl Attention {
             Mechanism::Flash { block } => Attention::Flash { block: *block },
             Mechanism::Poly { p } => Attention::Poly { p: *p },
             Mechanism::Polysketch { r, p, block, local } => Attention::Polysketch {
-                sk: sketch::PolySketch::sample(rng, head_dim, *r, *p as usize),
+                sk: Arc::new(sketch::PolySketch::sample(rng, head_dim, *r, *p as usize)),
                 block: *block,
                 local: *local,
             },
             Mechanism::Performer { m, block } => Attention::Performer {
-                feats: performer::PerformerFeatures::sample(rng, head_dim, *m),
+                feats: Arc::new(performer::PerformerFeatures::sample(rng, head_dim, *m)),
                 block: *block,
             },
         }

@@ -33,5 +33,5 @@ pub mod state;
 pub use model::{LayerState, LmConfig, NativeLm};
 pub use sampler::SamplePolicy;
 pub use scheduler::{Scheduler, SchedulerConfig, ServeSummary, SessionReport};
-pub use session::{decode_text, encode_prompt, DecodeSession, GenRequest};
+pub use session::{decode_text, encode_prompt, DecodeSession, GenRequest, SessionSnapshot};
 pub use state::DecodeState;

@@ -56,6 +56,7 @@ struct Layer {
 }
 
 /// Decode state of one layer: one [`DecodeState`] per head.
+#[derive(Clone)]
 pub struct LayerState {
     pub heads: Vec<DecodeState>,
 }

@@ -51,6 +51,8 @@ pub struct SessionReport {
     pub wall_secs: f64,
     pub state_memory_floats: usize,
     pub tokens: Vec<u32>,
+    /// Per-token decode latencies (seconds), one per generated token.
+    pub step_secs: Vec<f64>,
 }
 
 impl SessionReport {
@@ -80,11 +82,16 @@ pub struct Scheduler<'m> {
     cfg: SchedulerConfig,
     queue: VecDeque<(usize, GenRequest, Instant)>,
     next_id: usize,
+    /// Resident (admitted, unfinished) sessions with their enqueue times.
+    active: Vec<(DecodeSession, Instant)>,
+    /// Round-robin cursor, persistent across ticks so a small token budget
+    /// rotates over sessions instead of favoring active[0].
+    cursor: usize,
 }
 
 impl<'m> Scheduler<'m> {
     pub fn new(model: &'m NativeLm, cfg: SchedulerConfig) -> Scheduler<'m> {
-        Scheduler { model, cfg, queue: VecDeque::new(), next_id: 0 }
+        Scheduler { model, cfg, queue: VecDeque::new(), next_id: 0, active: Vec::new(), cursor: 0 }
     }
 
     /// Enqueue a request; returns its session id.
@@ -99,60 +106,81 @@ impl<'m> Scheduler<'m> {
         self.queue.len()
     }
 
-    /// Drain the queue to completion under the admission/budget discipline.
+    /// Resident (admitted, unfinished) session count.
+    pub fn resident(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Nothing queued and nothing resident?
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// One scheduling tick: admit from the queue into free slots (the
+    /// expensive full-context prefill happens here), hand out up to
+    /// `tick_tokens` single-token steps round-robin across resident
+    /// sessions, then retire finished sessions.  Returns the sessions
+    /// retired during this tick — callers ([`Scheduler::run`], the serve
+    /// workers' tests, and anything that needs incremental scheduling)
+    /// decide what to do with them.
+    pub fn tick(&mut self) -> Vec<SessionReport> {
+        // Admission: fill free slots from the queue.
+        while self.active.len() < self.cfg.max_concurrent.max(1) {
+            let Some((id, req, queued)) = self.queue.pop_front() else { break };
+            self.active.push((DecodeSession::new(self.model, id, req), queued));
+        }
+        // Round-robin single-token steps under the budget.
+        let mut budget = self.cfg.tick_tokens.max(1);
+        while budget > 0 && !self.active.is_empty() {
+            let len = self.active.len();
+            let Some(idx) = (0..len)
+                .map(|off| (self.cursor + off) % len)
+                .find(|&i| !self.active[i].0.finished)
+            else {
+                break;
+            };
+            self.active[idx].0.step(self.model);
+            self.cursor = (idx + 1) % len;
+            budget -= 1;
+        }
+        // Retirement: free slots, hand reports to the caller.
+        let mut retired = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if !self.active[i].0.finished {
+                i += 1;
+                continue;
+            }
+            let (s, queued) = self.active.swap_remove(i);
+            retired.push(SessionReport {
+                id: s.id,
+                prompt_len: s.prompt_len,
+                new_tokens: s.new_tokens(),
+                prefill_secs: s.prefill_secs,
+                decode_secs: s.decode_secs,
+                wall_secs: queued.elapsed().as_secs_f64(),
+                state_memory_floats: s.state_memory_floats(),
+                tokens: s.tokens,
+                step_secs: s.step_secs,
+            });
+        }
+        retired
+    }
+
+    /// Drain the queue to completion under the admission/budget discipline:
+    /// a thin loop over [`Scheduler::tick`] plus JSONL/echo reporting.
     pub fn run(&mut self) -> anyhow::Result<ServeSummary> {
         let mut log = match &self.cfg.log_path {
             Some(p) => Some(JsonlWriter::create(p)?),
             None => None,
         };
         let t0 = Instant::now();
-        let mut active: Vec<(DecodeSession, Instant)> = Vec::new();
         let mut reports: Vec<SessionReport> = Vec::new();
         let mut step_secs: Vec<f64> = Vec::new();
-        // Round-robin cursor, persistent across ticks so a small token
-        // budget rotates over sessions instead of favoring active[0].
-        let mut cursor = 0usize;
 
-        while !self.queue.is_empty() || !active.is_empty() {
-            // Admission: fill free slots from the queue (prefill happens
-            // here — the expensive full-context pass).
-            while active.len() < self.cfg.max_concurrent.max(1) {
-                let Some((id, req, queued)) = self.queue.pop_front() else { break };
-                active.push((DecodeSession::new(self.model, id, req), queued));
-            }
-            // One tick: round-robin single-token steps under the budget.
-            let mut budget = self.cfg.tick_tokens.max(1);
-            while budget > 0 && !active.is_empty() {
-                let len = active.len();
-                let Some(idx) = (0..len)
-                    .map(|off| (cursor + off) % len)
-                    .find(|&i| !active[i].0.finished)
-                else {
-                    break;
-                };
-                active[idx].0.step(self.model);
-                cursor = (idx + 1) % len;
-                budget -= 1;
-            }
-            // Retirement: emit records, free slots.
-            let mut i = 0;
-            while i < active.len() {
-                if !active[i].0.finished {
-                    i += 1;
-                    continue;
-                }
-                let (s, queued) = active.swap_remove(i);
-                step_secs.extend_from_slice(&s.step_secs);
-                let report = SessionReport {
-                    id: s.id,
-                    prompt_len: s.prompt_len,
-                    new_tokens: s.new_tokens(),
-                    prefill_secs: s.prefill_secs,
-                    decode_secs: s.decode_secs,
-                    wall_secs: queued.elapsed().as_secs_f64(),
-                    state_memory_floats: s.state_memory_floats(),
-                    tokens: s.tokens,
-                };
+        while !self.idle() {
+            for report in self.tick() {
+                step_secs.extend_from_slice(&report.step_secs);
                 if let Some(w) = &mut log {
                     w.write(&session_record(self.model, &report))?;
                 }
@@ -276,6 +304,39 @@ mod tests {
         };
         assert_eq!(run(1, 1), run(4, 32));
         assert_eq!(run(2, 5), run(3, 7));
+    }
+
+    #[test]
+    fn manual_ticks_match_run() {
+        // tick() is the public increment run() loops over: driving it by
+        // hand must produce the same completions and respect the admission
+        // cap at every point.
+        let mech = Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true };
+        let cfg = SchedulerConfig { max_concurrent: 2, tick_tokens: 5, ..Default::default() };
+        let collect = |mut sched: Scheduler| -> Vec<Vec<u32>> {
+            let mut out: Vec<Vec<u32>> = Vec::new();
+            let mut ticks = 0;
+            while !sched.idle() {
+                out.extend(sched.tick().into_iter().map(|r| r.tokens));
+                assert!(sched.resident() <= 2);
+                ticks += 1;
+                assert!(ticks < 1000, "tick loop did not terminate");
+            }
+            out.sort();
+            out
+        };
+        let m = model(mech);
+        let mut a = Scheduler::new(&m, cfg.clone());
+        let mut b = Scheduler::new(&m, cfg);
+        for i in 0..4 {
+            a.submit(req(i, 6));
+            b.submit(req(i, 6));
+        }
+        let manual = collect(a);
+        let mut ran: Vec<Vec<u32>> =
+            b.run().unwrap().reports.into_iter().map(|r| r.tokens).collect();
+        ran.sort();
+        assert_eq!(manual, ran);
     }
 
     #[test]

@@ -37,6 +37,30 @@ pub struct GenRequest {
     pub seed: u64,
 }
 
+/// Frozen copy of a [`DecodeSession`]: decode states, sampler RNG stream,
+/// and token history.  Restoring resumes generation byte-identically to an
+/// uninterrupted run — the primitive the serving gateway's prompt-prefix
+/// cache (`serve::cache`) and any future migration/checkpointing are built
+/// on.  Timing fields are observations, not state, and are not captured.
+#[derive(Clone)]
+pub struct SessionSnapshot {
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    pub states: Vec<LayerState>,
+    pub last_logits: Vec<f32>,
+    pub policy: SamplePolicy,
+    pub rng: Pcg,
+    pub max_new: usize,
+    pub finished: bool,
+}
+
+impl SessionSnapshot {
+    /// Tokens generated beyond the prompt at capture time.
+    pub fn new_tokens(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+}
+
 /// One in-flight decode session.
 pub struct DecodeSession {
     pub id: usize,
@@ -77,6 +101,75 @@ impl DecodeSession {
             max_new: req.max_new_tokens,
             finished: req.max_new_tokens == 0,
             prefill_secs,
+            decode_secs: 0.0,
+            step_secs: Vec::new(),
+        }
+    }
+
+    /// Build a session from a cached prompt-prefix state, skipping the
+    /// prefill entirely: `states`/`last_logits` must be a snapshot taken
+    /// right after prefilling exactly `req.prompt` (no decode steps), as
+    /// the serving cache stores them.  Sampling seed/policy/budget come
+    /// from `req`, so one cached prefix serves any request shape over the
+    /// same prompt.
+    pub fn from_prefix(
+        id: usize,
+        req: GenRequest,
+        states: Vec<LayerState>,
+        last_logits: Vec<f32>,
+    ) -> DecodeSession {
+        assert!(!req.prompt.is_empty(), "prompt must contain at least BOS");
+        if let Some(head) = states.first().and_then(|l| l.heads.first()) {
+            assert_eq!(
+                head.tokens_seen(),
+                req.prompt.len(),
+                "prefix snapshot does not match the prompt length"
+            );
+        }
+        DecodeSession {
+            id,
+            prompt_len: req.prompt.len(),
+            tokens: req.prompt,
+            states,
+            last_logits,
+            policy: req.policy,
+            rng: Pcg::seeded(req.seed),
+            max_new: req.max_new_tokens,
+            finished: req.max_new_tokens == 0,
+            prefill_secs: 0.0,
+            decode_secs: 0.0,
+            step_secs: Vec::new(),
+        }
+    }
+
+    /// Freeze this session's full state (deep copy).
+    pub fn snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot {
+            tokens: self.tokens.clone(),
+            prompt_len: self.prompt_len,
+            states: self.states.clone(),
+            last_logits: self.last_logits.clone(),
+            policy: self.policy.clone(),
+            rng: self.rng.clone(),
+            max_new: self.max_new,
+            finished: self.finished,
+        }
+    }
+
+    /// Resume from a snapshot; continuation is byte-identical to the
+    /// session the snapshot was taken from (timing counters restart).
+    pub fn restore(id: usize, snap: SessionSnapshot) -> DecodeSession {
+        DecodeSession {
+            id,
+            tokens: snap.tokens,
+            prompt_len: snap.prompt_len,
+            states: snap.states,
+            last_logits: snap.last_logits,
+            policy: snap.policy,
+            rng: snap.rng,
+            max_new: snap.max_new,
+            finished: snap.finished,
+            prefill_secs: 0.0,
             decode_secs: 0.0,
             step_secs: Vec::new(),
         }
@@ -160,6 +253,98 @@ mod tests {
         assert_eq!(s.new_tokens(), 7);
         assert_eq!(s.step_secs.len(), 7);
         assert!(s.generated().iter().all(|&t| (t as usize) < 64));
+    }
+
+    #[test]
+    fn restored_session_continues_byte_identically() {
+        // The cache/migration primitive: snapshot mid-decode, keep stepping
+        // the original, then restore the snapshot — the restored session
+        // must emit the exact same remaining tokens (and land on the exact
+        // same logits) as the uninterrupted run.
+        use crate::attn::Mechanism;
+        let mechs = [
+            Mechanism::Softmax,
+            Mechanism::Flash { block: 8 },
+            Mechanism::Poly { p: 4 },
+            Mechanism::Polysketch { r: 4, p: 4, block: 8, local: false },
+            Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
+            Mechanism::Performer { m: 16, block: 8 },
+        ];
+        for mech in mechs {
+            let cfg =
+                LmConfig { vocab: 64, d_model: 32, layers: 2, heads: 2, ff_mult: 2, seed: 3 };
+            let m = NativeLm::new(cfg, mech.clone());
+            let req = GenRequest {
+                prompt: vec![0, 5, 9, 21, 2],
+                max_new_tokens: 12,
+                policy: SamplePolicy::Temperature(0.8),
+                seed: 99,
+            };
+            let mut uninterrupted = DecodeSession::new(&m, 0, req);
+            for _ in 0..5 {
+                uninterrupted.step(&m);
+            }
+            let snap = uninterrupted.snapshot();
+            assert_eq!(snap.new_tokens(), 5);
+            uninterrupted.run_to_completion(&m);
+
+            let mut restored = DecodeSession::restore(1, snap);
+            restored.run_to_completion(&m);
+            assert_eq!(
+                restored.tokens,
+                uninterrupted.tokens,
+                "{}: restored tokens diverged",
+                mech.label()
+            );
+            // Byte-identical down to the final logits, not just the argmaxes.
+            assert_eq!(
+                restored.snapshot().last_logits,
+                uninterrupted.snapshot().last_logits,
+                "{}: restored logits diverged",
+                mech.label()
+            );
+        }
+    }
+
+    #[test]
+    fn from_prefix_matches_fresh_prefill() {
+        // A prompt-prefix snapshot (states + last logits of a session that
+        // has not decoded yet) must serve any request over the same prompt
+        // exactly as a cold prefill would.
+        let m = model();
+        let prompt = vec![0u32, 7, 13, 2, 40, 11];
+        let policies =
+            [SamplePolicy::Greedy, SamplePolicy::TopP { p: 0.9, temperature: 0.8 }];
+        let cold = DecodeSession::new(
+            &m,
+            0,
+            GenRequest {
+                prompt: prompt.clone(),
+                max_new_tokens: 0,
+                policy: SamplePolicy::Greedy,
+                seed: 0,
+            },
+        );
+        let prefix = cold.snapshot();
+        for (i, policy) in policies.into_iter().enumerate() {
+            let req = |seed| GenRequest {
+                prompt: prompt.clone(),
+                max_new_tokens: 9,
+                policy: policy.clone(),
+                seed,
+            };
+            let mut fresh = DecodeSession::new(&m, 0, req(5 + i as u64));
+            fresh.run_to_completion(&m);
+            let mut cached = DecodeSession::from_prefix(
+                1,
+                req(5 + i as u64),
+                prefix.states.clone(),
+                prefix.last_logits.clone(),
+            );
+            assert_eq!(cached.prefill_secs, 0.0);
+            cached.run_to_completion(&m);
+            assert_eq!(fresh.tokens, cached.tokens);
+        }
     }
 
     #[test]

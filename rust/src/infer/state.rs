@@ -22,6 +22,8 @@
 //! prefill/decode parity tests in `tests/integration_infer.rs` are the
 //! correctness anchor for the whole serving subsystem.
 
+use std::sync::Arc;
+
 use crate::attn::block_lt::self_tensor_row;
 use crate::attn::performer::PerformerFeatures;
 use crate::attn::poly::powi;
@@ -30,6 +32,12 @@ use crate::attn::Attention;
 use crate::tensor::{axpy, dot};
 
 /// Attention state of one (layer, head) during autoregressive decoding.
+///
+/// `Clone` is load-bearing: the serving gateway's prompt-prefix cache
+/// (`serve::cache`) stores cloned states, so a clone must be a deep,
+/// independent copy — O(r²h) for the recurrent variants, O(n·h) for the
+/// KV-cache family.
+#[derive(Clone)]
 pub enum DecodeState {
     /// Exact softmax over a growing KV cache (also the Flash fallback).
     Softmax(KvCache),
@@ -50,7 +58,7 @@ impl DecodeState {
             Attention::Softmax | Attention::Flash { .. } => DecodeState::Softmax(KvCache::new()),
             Attention::Poly { p } => DecodeState::Poly { p: *p, cache: KvCache::new() },
             Attention::Polysketch { sk, block, local } => DecodeState::Sketch(SketchState {
-                sk: sk.clone(),
+                sk: Arc::clone(sk),
                 block: (*block).max(1),
                 local: *local,
                 h: 0,
@@ -62,7 +70,7 @@ impl DecodeState {
                 tokens: 0,
             }),
             Attention::Performer { feats, .. } => DecodeState::Feature(FeatureState {
-                feats: feats.clone(),
+                feats: Arc::clone(feats),
                 h: 0,
                 s: Vec::new(),
                 tokens: 0,
@@ -135,6 +143,7 @@ impl DecodeState {
 // ------------------------------------------------------------- KV cache
 
 /// Growing key/value cache (flat row-major storage).
+#[derive(Clone)]
 pub struct KvCache {
     k: Vec<f32>,
     v: Vec<f32>,
@@ -219,8 +228,13 @@ impl KvCache {
 /// uses the squared half-sketch scores — or, with `local`, the exact
 /// degree-p polynomial scores of Section 3.2.  Work per token is
 /// O(r^2 h + b r): independent of context length.
+#[derive(Clone)]
 pub struct SketchState {
-    sk: PolySketch,
+    /// Shared with the instantiating [`Attention`] (and every clone of
+    /// this state): the projections are immutable model data, not
+    /// per-session state, so cloning a state — or caching a thousand
+    /// prompt prefixes — never duplicates them.
+    sk: Arc<PolySketch>,
     block: usize,
     local: bool,
     /// Value dim (+1 normalizer column); set on first token.
@@ -333,8 +347,10 @@ impl SketchState {
 // --------------------------------------------------- performer recurrence
 
 /// Performer decode state: `S += phi(k_t)^T [v_t | 1]`, O(m h) per token.
+#[derive(Clone)]
 pub struct FeatureState {
-    feats: PerformerFeatures,
+    /// Shared, immutable (see [`SketchState::sk`]).
+    feats: Arc<PerformerFeatures>,
     h: usize,
     /// S: m x (h+1), row-major by feature index.
     s: Vec<f32>,
@@ -510,6 +526,36 @@ mod tests {
             } else {
                 assert!(m256 > m64, "{}", mech.label());
             }
+        }
+    }
+
+    #[test]
+    fn cloned_state_is_deep_and_continues_identically() {
+        // The cache primitive: a cloned state must be an independent deep
+        // copy — identical continuation under identical inputs, and no
+        // aliasing (stepping one must not perturb the other).
+        let mut rng = Pcg::seeded(7);
+        let h = 8;
+        for mech in mechs() {
+            let attn = Attention::new(&mech, h, &mut Pcg::seeded(5));
+            let mut orig = DecodeState::new(&attn);
+            for _ in 0..13 {
+                let (q, k, v) = (rng.gaussians(h), rng.gaussians(h), rng.gaussians(h));
+                orig.step(&q, &k, &v);
+            }
+            let mut copy = orig.clone();
+            assert_eq!(copy.tokens_seen(), orig.tokens_seen());
+            // Divergent input on the copy leaves the original untouched...
+            let (dq, dk, dv) = (rng.gaussians(h), rng.gaussians(h), rng.gaussians(h));
+            copy.step(&dq, &dk, &dv);
+            // ...so a fresh clone of the original still replays the copy's
+            // step bit-for-bit.
+            let mut copy2 = orig.clone();
+            let a = copy2.step(&dq, &dk, &dv);
+            let mut copy3 = orig.clone();
+            let b = copy3.step(&dq, &dk, &dv);
+            assert_eq!(a, b, "{}", mech.label());
+            assert_eq!(orig.tokens_seen(), 13, "{}", mech.label());
         }
     }
 

@@ -6,8 +6,9 @@
 //!   * L2: AOT-lowered HLO artifacts (`artifacts/*.hlo.txt`),
 //!   * L3: this crate — PJRT runtime, training coordinator, data pipeline,
 //!     synthetic tasks, native attention kernels, the linear-time decoding
-//!     and serving subsystem (`infer`), and the bench harness that
-//!     regenerates every table/figure of the paper's evaluation.
+//!     subsystem (`infer`), the concurrent serving gateway with its
+//!     constant-size prompt-state cache (`serve`), and the bench harness
+//!     that regenerates every table/figure of the paper's evaluation.
 
 pub mod attn;
 pub mod bench;
@@ -21,6 +22,7 @@ pub mod infer;
 pub mod metrics;
 pub mod prop;
 pub mod runtime;
+pub mod serve;
 pub mod tasks;
 pub mod tensor;
 pub mod util;

@@ -8,10 +8,12 @@
 //!   eval                       perplexity + downstream MCQ of a trained run
 //!   attn                       run one attention micro-artifact (sanity)
 //!   generate                   autoregressive decoding (native model path)
+//!   serve                      HTTP serving gateway (concurrent, cached)
 //!
 //! Artifact-backed subcommands execute AOT-compiled HLO through the PJRT
 //! CPU client; Python is never invoked (`make artifacts` must have run
-//! once).  `generate` runs entirely on the native kernels — no artifacts.
+//! once).  `generate` and `serve` run entirely on the native kernels — no
+//! artifacts.
 
 use std::path::PathBuf;
 
@@ -25,6 +27,7 @@ use polysketchformer::coordinator::{
 use polysketchformer::data::{self, batcher::Batcher, corpus::Flavor};
 use polysketchformer::metrics::RunLogger;
 use polysketchformer::runtime::{self, LoadOpts};
+use polysketchformer::serve::{Gateway, GatewayConfig};
 use polysketchformer::tasks::{induction::InductionTask, selective_copy::SelectiveCopyTask};
 
 fn main() {
@@ -54,6 +57,7 @@ fn run(argv: &[String]) -> Result<()> {
         "eval" => cmd_eval(rest),
         "attn" => cmd_attn(rest),
         "generate" => cmd_generate(rest),
+        "serve" => cmd_serve(rest),
         "--help" | "-h" | "help" => {
             eprintln!("{}", top_usage());
             Ok(())
@@ -72,7 +76,8 @@ fn top_usage() -> String {
        task        train + evaluate a synthetic task (copy | induction)\n\
        eval        perplexity + downstream MCQ accuracy\n\
        attn        run one attention micro-artifact\n\
-       generate    autoregressive decoding on the native model path\n\n\
+       generate    autoregressive decoding on the native model path\n\
+       serve       HTTP serving gateway (concurrent workers + prompt cache)\n\n\
      run `psf <subcommand> --help` for flags."
         .to_string()
 }
@@ -482,24 +487,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     )
     .map_err(|e| anyhow!("{e}"))?;
     let seed = p.u64("seed")?;
-    let cfg = LmConfig {
-        d_model: p.usize("d-model")?,
-        layers: p.usize("layers")?,
-        heads: p.usize("heads")?,
-        seed,
-        ..LmConfig::default()
-    };
-    if cfg.heads == 0
-        || cfg.layers == 0
-        || cfg.d_model % cfg.heads != 0
-        || (cfg.d_model / cfg.heads) % 2 != 0
-    {
-        bail!(
-            "--d-model {} must split into --heads {} (>= 1) with an even head_dim, --layers >= 1",
-            cfg.d_model,
-            cfg.heads
-        );
-    }
+    let cfg = native_lm_config(&p)?;
     let model = NativeLm::new(cfg, mech.clone());
     let sessions = p.usize("sessions")?.max(1);
     println!(
@@ -549,6 +537,75 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         summary.p95_step_ms,
     );
     Ok(())
+}
+
+// --------------------------------------------------------------- serve
+
+/// HTTP serving gateway on the native model path: concurrent decode
+/// workers (continuous batching across threads) + a prompt-prefix state
+/// cache that skips prefill for repeated prompts — constant-size entries
+/// for the linear mechanisms, O(n) KV entries for the softmax family.
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let spec = Args::new("psf serve", "HTTP serving gateway on the native model path")
+        .opt("addr", "127.0.0.1:8080", "listen address (port 0 = ephemeral)")
+        .opt("mech", "psk4_r16_b32_local",
+             "mechanism label (softmax | flash_b<B> | poly<P> | psk<P>_r<R>_b<B>[_local] | performer<M>_b<B>)")
+        .opt("workers", "2", "decode worker threads")
+        .opt("queue-cap", "64", "admission queue depth (429 beyond it)")
+        .opt("resident", "8", "max concurrent sessions across workers")
+        .opt("slice", "4", "tokens per worker grab (fairness dial)")
+        .opt("cache-mb", "64", "prompt-prefix cache budget in MiB")
+        .opt("default-max-tokens", "64", "max_tokens when the request omits it")
+        .opt("max-tokens-cap", "512", "hard per-request max_tokens ceiling")
+        .opt("d-model", "64", "model width")
+        .opt("layers", "2", "transformer layers")
+        .opt("heads", "4", "attention heads")
+        .opt("log", "", "JSONL metrics path (empty = none)")
+        .opt("max-requests", "0", "stop after N completed requests (0 = run forever)")
+        .opt("seed", "0", "weight seed");
+    let p = parse(spec, argv)?;
+
+    let mech = Mechanism::parse(p.str("mech")).map_err(|e| anyhow!("{e}"))?;
+    let model = NativeLm::new(native_lm_config(&p)?, mech);
+    let gw_cfg = GatewayConfig {
+        addr: p.str("addr").to_string(),
+        workers: p.usize("workers")?,
+        queue_cap: p.usize("queue-cap")?,
+        max_resident: p.usize("resident")?,
+        slice_tokens: p.usize("slice")?,
+        cache_bytes: p.usize("cache-mb")? << 20,
+        default_max_tokens: p.usize("default-max-tokens")?,
+        max_tokens_cap: p.usize("max-tokens-cap")?,
+        log_path: non_empty(p.str("log")).map(PathBuf::from),
+        max_requests: p.u64("max-requests")?,
+    };
+    let gateway = std::sync::Arc::new(Gateway::new(model, gw_cfg)?);
+    gateway.run_http()
+}
+
+/// Shared `--d-model/--layers/--heads/--seed` surface of the native-model
+/// subcommands (`generate`, `serve`), with the head-dim validation the
+/// kernels require (even head_dim for RoPE pairs).
+fn native_lm_config(p: &polysketchformer::cli::Parsed) -> Result<LmConfig> {
+    let cfg = LmConfig {
+        d_model: p.usize("d-model")?,
+        layers: p.usize("layers")?,
+        heads: p.usize("heads")?,
+        seed: p.u64("seed")?,
+        ..LmConfig::default()
+    };
+    if cfg.heads == 0
+        || cfg.layers == 0
+        || cfg.d_model % cfg.heads != 0
+        || (cfg.d_model / cfg.heads) % 2 != 0
+    {
+        bail!(
+            "--d-model {} must split into --heads {} (>= 1) with an even head_dim, --layers >= 1",
+            cfg.d_model,
+            cfg.heads
+        );
+    }
+    Ok(cfg)
 }
 
 fn non_empty(s: &str) -> Option<&str> {

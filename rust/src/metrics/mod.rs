@@ -9,8 +9,10 @@ use std::fmt::Write as _;
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
-use crate::util::stats::Ema;
+use crate::util::stats::{percentile, Ema};
 
 /// A flat JSON-encodable record.
 #[derive(Clone, Debug, Default)]
@@ -177,6 +179,88 @@ impl RunLogger {
     }
 }
 
+/// Shared counters of the serving gateway (`serve::Gateway`): admission,
+/// prompt-cache effectiveness, and time-to-first-token tail latency.
+///
+/// All fields are thread-safe — HTTP handler threads and decode workers
+/// update them concurrently; [`ServeCounters::record`] freezes a snapshot
+/// into the same JSONL [`Record`] shape every other subsystem logs.
+#[derive(Default)]
+pub struct ServeCounters {
+    /// Requests accepted into the admission queue.
+    pub admitted: AtomicU64,
+    /// Requests bounced by admission control (HTTP 429).
+    pub rejected: AtomicU64,
+    /// Requests fully served (final token delivered).
+    pub completed: AtomicU64,
+    /// Prompt-prefix cache hits (prefill skipped).
+    pub cache_hits: AtomicU64,
+    /// Prompt-prefix cache misses (full prefill paid).
+    pub cache_misses: AtomicU64,
+    /// Current prompt-cache footprint in bytes (gauge).
+    pub cache_bytes: AtomicU64,
+    /// Total generated tokens across completed requests.
+    pub tokens_generated: AtomicU64,
+    /// Sliding window of time-to-first-token samples (seconds) — bounded
+    /// so a run-forever server cannot grow it without limit.
+    ttft_secs: Mutex<TtftWindow>,
+}
+
+/// Ring of the last [`TTFT_WINDOW`] TTFT samples.
+#[derive(Default)]
+struct TtftWindow {
+    samples: Vec<f64>,
+    seen: u64,
+}
+
+/// Percentiles are computed over the most recent this-many requests; the
+/// window keeps the per-scrape sort O(1)-ish and memory bounded forever.
+const TTFT_WINDOW: usize = 4096;
+
+impl ServeCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request's time-to-first-token.
+    pub fn record_ttft(&self, secs: f64) {
+        let mut w = self.ttft_secs.lock().expect("ttft lock poisoned");
+        if w.samples.len() < TTFT_WINDOW {
+            w.samples.push(secs);
+        } else {
+            let slot = (w.seen % TTFT_WINDOW as u64) as usize;
+            w.samples[slot] = secs;
+        }
+        w.seen += 1;
+    }
+
+    /// (p50, p99) TTFT in milliseconds over the sample window.
+    pub fn ttft_percentiles_ms(&self) -> (f64, f64) {
+        let mut xs = self.ttft_secs.lock().expect("ttft lock poisoned").samples.clone();
+        if xs.is_empty() {
+            return (0.0, 0.0);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (percentile(&xs, 50.0) * 1e3, percentile(&xs, 99.0) * 1e3)
+    }
+
+    /// Snapshot as a JSONL record (`kind = "serve_metrics"`).
+    pub fn record(&self) -> Record {
+        let (p50, p99) = self.ttft_percentiles_ms();
+        Record::new()
+            .str("kind", "serve_metrics")
+            .i64("admitted", self.admitted.load(Ordering::Relaxed) as i64)
+            .i64("rejected", self.rejected.load(Ordering::Relaxed) as i64)
+            .i64("completed", self.completed.load(Ordering::Relaxed) as i64)
+            .i64("cache_hits", self.cache_hits.load(Ordering::Relaxed) as i64)
+            .i64("cache_misses", self.cache_misses.load(Ordering::Relaxed) as i64)
+            .i64("cache_bytes", self.cache_bytes.load(Ordering::Relaxed) as i64)
+            .i64("tokens_generated", self.tokens_generated.load(Ordering::Relaxed) as i64)
+            .f64("ttft_p50_ms", p50)
+            .f64("ttft_p99_ms", p99)
+    }
+}
+
 /// Minimal CSV writer for bench tables.
 pub struct CsvWriter {
     w: BufWriter<File>,
@@ -256,6 +340,57 @@ mod tests {
         }
         assert_eq!(l.history.len(), 10);
         assert!(l.final_ema().unwrap() < 5.0);
+    }
+
+    #[test]
+    fn serve_counters_record_shape() {
+        let c = ServeCounters::new();
+        c.admitted.store(10, Ordering::Relaxed);
+        c.rejected.store(2, Ordering::Relaxed);
+        c.cache_hits.store(6, Ordering::Relaxed);
+        c.cache_misses.store(4, Ordering::Relaxed);
+        c.cache_bytes.store(4096, Ordering::Relaxed);
+        for i in 0..100 {
+            c.record_ttft(0.001 * (i + 1) as f64);
+        }
+        let (p50, p99) = c.ttft_percentiles_ms();
+        assert!((p50 - 50.5).abs() < 1.0, "p50 {p50}");
+        assert!(p99 > 98.0 && p99 <= 100.0, "p99 {p99}");
+        let json = c.record().to_json();
+        for needle in [
+            "\"kind\":\"serve_metrics\"",
+            "\"admitted\":10",
+            "\"rejected\":2",
+            "\"cache_hits\":6",
+            "\"cache_bytes\":4096",
+            "\"ttft_p50_ms\":",
+            "\"ttft_p99_ms\":",
+        ] {
+            assert!(json.contains(needle), "{json} missing {needle}");
+        }
+    }
+
+    #[test]
+    fn serve_counters_empty_ttft_is_zero() {
+        let c = ServeCounters::new();
+        assert_eq!(c.ttft_percentiles_ms(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn serve_counters_ttft_window_is_bounded_and_slides() {
+        let c = ServeCounters::new();
+        // Fill well past the window with a high plateau, then overwrite the
+        // whole window with a low one: old samples must age out entirely.
+        for _ in 0..(TTFT_WINDOW + 100) {
+            c.record_ttft(10.0);
+        }
+        for _ in 0..TTFT_WINDOW {
+            c.record_ttft(0.001);
+        }
+        assert_eq!(c.ttft_secs.lock().unwrap().samples.len(), TTFT_WINDOW);
+        let (p50, p99) = c.ttft_percentiles_ms();
+        assert!((p50 - 1.0).abs() < 1e-9, "p50 {p50}");
+        assert!((p99 - 1.0).abs() < 1e-9, "p99 {p99}");
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Prompt-prefix state cache: the serving payoff of constant-size decode
+//! states.
+//!
+//! A linear-attention decode state after prefilling a prompt is O(r²h) per
+//! (layer, head) *regardless of prompt length* — so an entire system
+//! prompt collapses into a snapshot a few KB big, and a repeated prompt
+//! skips its prefill completely.  The softmax family can be cached too,
+//! but its snapshots are O(n·h) KV tensors: the byte budget admits far
+//! fewer of them, which is exactly the paper's complexity gap made
+//! operational (`memory_floats` in `infer::state` is the per-variant
+//! accounting).
+//!
+//! Keying is (mechanism label, exact prompt token sequence): the mechanism
+//! label pins the state *shape* (same `HashMap` can serve several models),
+//! and storing the full token sequence — not just its hash — makes
+//! collisions impossible rather than improbable.  Eviction is LRU by a
+//! byte budget; hit/miss/insert/eviction counters feed `GET /metrics` and
+//! the `serve_metrics` JSONL record.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::infer::model::{LayerState, NativeLm};
+use crate::infer::session::{DecodeSession, SessionSnapshot};
+
+/// Cache key: which model family the state belongs to + the exact prompt.
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+pub struct CacheKey {
+    pub mech: String,
+    pub prompt: Vec<u32>,
+}
+
+/// The cached value: per-layer decode states and the next-token logits of
+/// a session that prefilled the prompt and has not decoded yet.
+#[derive(Clone)]
+pub struct PrefixSnapshot {
+    pub states: Vec<LayerState>,
+    pub last_logits: Vec<f32>,
+}
+
+impl PrefixSnapshot {
+    /// Capture the prompt-prefix state of a freshly prefilled session.
+    /// Panics if the session has already decoded — a mid-generation state
+    /// must never be served as a prompt prefix.
+    pub fn of(session: &DecodeSession) -> PrefixSnapshot {
+        let snap: SessionSnapshot = session.snapshot();
+        assert_eq!(snap.new_tokens(), 0, "prefix snapshot of a session that already decoded");
+        PrefixSnapshot { states: snap.states, last_logits: snap.last_logits }
+    }
+
+    /// Approximate heap footprint in bytes (f32 payloads dominate).  The
+    /// sketch/feature projections are *not* counted: they live behind
+    /// `Arc` and are shared with the model, not duplicated per entry.
+    pub fn bytes(&self) -> usize {
+        (NativeLm::state_memory_floats(&self.states) + self.last_logits.len()) * 4
+    }
+}
+
+struct Entry {
+    /// `Arc` so a hit is O(1) under the cache lock — the deep copy a
+    /// session needs happens on the caller's thread, outside the mutex.
+    snap: Arc<PrefixSnapshot>,
+    bytes: usize,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<CacheKey, Entry>,
+    bytes: usize,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+/// Point-in-time cache statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Thread-safe LRU prompt-prefix cache with a byte budget.
+pub struct PromptCache {
+    inner: Mutex<Inner>,
+    budget_bytes: usize,
+}
+
+impl PromptCache {
+    pub fn new(budget_bytes: usize) -> PromptCache {
+        PromptCache { inner: Mutex::new(Inner::default()), budget_bytes }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Look up a prompt prefix; a hit refreshes the LRU position and
+    /// returns a shared handle (an `Arc` bump, not a copy — callers clone
+    /// the states they need outside the lock).  Every call counts as a
+    /// hit or a miss.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<PrefixSnapshot>> {
+        let mut inner = self.lock();
+        inner.clock += 1;
+        let clock = inner.clock;
+        match inner.map.get_mut(key) {
+            Some(entry) => {
+                entry.last_used = clock;
+                let snap = Arc::clone(&entry.snap);
+                inner.hits += 1;
+                Some(snap)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a prompt prefix, evicting least-recently-used entries until
+    /// the byte budget holds.  A snapshot larger than the whole budget is
+    /// dropped rather than wiping the cache for one uncacheable prompt.
+    /// Inserting an existing key refreshes the entry.
+    pub fn insert(&self, key: CacheKey, snap: PrefixSnapshot) {
+        let bytes = snap.bytes() + key.prompt.len() * 4;
+        if bytes > self.budget_bytes {
+            return;
+        }
+        let mut inner = self.lock();
+        inner.clock += 1;
+        let clock = inner.clock;
+        if let Some(old) = inner.map.remove(&key) {
+            inner.bytes -= old.bytes;
+        }
+        while inner.bytes + bytes > self.budget_bytes {
+            let Some(lru_key) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            let evicted = inner.map.remove(&lru_key).expect("lru key vanished");
+            inner.bytes -= evicted.bytes;
+            inner.evictions += 1;
+        }
+        inner.map.insert(key, Entry { snap: Arc::new(snap), bytes, last_used: clock });
+        inner.bytes += bytes;
+        inner.insertions += 1;
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.lock();
+        CacheStats {
+            entries: inner.map.len(),
+            bytes: inner.bytes,
+            hits: inner.hits,
+            misses: inner.misses,
+            insertions: inner.insertions,
+            evictions: inner.evictions,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("prompt cache lock poisoned")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::Mechanism;
+    use crate::infer::model::LmConfig;
+    use crate::infer::sampler::SamplePolicy;
+    use crate::infer::session::GenRequest;
+    use crate::infer::NativeLm;
+
+    fn model(mech: Mechanism) -> NativeLm {
+        let cfg = LmConfig { vocab: 64, d_model: 32, layers: 2, heads: 2, ff_mult: 2, seed: 5 };
+        NativeLm::new(cfg, mech)
+    }
+
+    fn prefix(model: &NativeLm, prompt: &[u32]) -> PrefixSnapshot {
+        let req = GenRequest {
+            prompt: prompt.to_vec(),
+            max_new_tokens: 0,
+            policy: SamplePolicy::Greedy,
+            seed: 0,
+        };
+        PrefixSnapshot::of(&DecodeSession::new(model, 0, req))
+    }
+
+    fn key(model: &NativeLm, prompt: &[u32]) -> CacheKey {
+        CacheKey { mech: model.mech.label(), prompt: prompt.to_vec() }
+    }
+
+    #[test]
+    fn hit_returns_equal_snapshot_and_counts() {
+        let m = model(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true });
+        let cache = PromptCache::new(10 << 20);
+        let prompt = vec![0u32, 3, 7, 9];
+        assert!(cache.get(&key(&m, &prompt)).is_none());
+        let snap = prefix(&m, &prompt);
+        cache.insert(key(&m, &prompt), snap.clone());
+        let got = cache.get(&key(&m, &prompt)).expect("hit");
+        assert_eq!(got.last_logits, snap.last_logits);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!(s.bytes > 0);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_prompts_and_mechanisms_do_not_collide() {
+        let a = model(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true });
+        let b = model(Mechanism::Softmax);
+        let cache = PromptCache::new(10 << 20);
+        cache.insert(key(&a, &[0, 1]), prefix(&a, &[0, 1]));
+        assert!(cache.get(&key(&a, &[0, 1, 2])).is_none());
+        assert!(cache.get(&key(&b, &[0, 1])).is_none());
+        assert!(cache.get(&key(&a, &[0, 1])).is_some());
+    }
+
+    #[test]
+    fn linear_snapshot_is_constant_size_while_kv_grows() {
+        // The constant-size-cache argument, measured: doubling the prompt
+        // leaves the polysketch snapshot's footprint unchanged (modulo the
+        // in-progress block buffer at block-aligned lengths) but doubles
+        // the softmax KV snapshot.
+        let lin = model(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: false });
+        let kv = model(Mechanism::Softmax);
+        let short: Vec<u32> = (0..64u32).map(|i| i % 60).collect();
+        let long: Vec<u32> = (0..256u32).map(|i| i % 60).collect();
+        assert_eq!(prefix(&lin, &short).bytes(), prefix(&lin, &long).bytes());
+        assert!(prefix(&kv, &long).bytes() > 2 * prefix(&kv, &short).bytes());
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        let m = model(Mechanism::Softmax);
+        let prompts: Vec<Vec<u32>> =
+            (0..4).map(|s| (0..32u32).map(|i| (i + s) % 60).collect()).collect();
+        let one = prefix(&m, &prompts[0]).bytes() + prompts[0].len() * 4;
+        // Budget for two entries (all four prompts have identical shape).
+        let cache = PromptCache::new(2 * one + one / 2);
+        for p in &prompts[..3] {
+            cache.insert(key(&m, p), prefix(&m, p));
+        }
+        let s = cache.stats();
+        assert_eq!(s.entries, 2, "{s:?}");
+        assert_eq!(s.evictions, 1);
+        assert!(s.bytes <= cache.budget_bytes());
+        // prompts[0] was LRU, so it is the one gone.
+        assert!(cache.get(&key(&m, &prompts[0])).is_none());
+        assert!(cache.get(&key(&m, &prompts[1])).is_some());
+        assert!(cache.get(&key(&m, &prompts[2])).is_some());
+        // Touch prompts[1]; inserting prompts[3] must now evict prompts[2].
+        assert!(cache.get(&key(&m, &prompts[1])).is_some());
+        cache.insert(key(&m, &prompts[3]), prefix(&m, &prompts[3]));
+        assert!(cache.get(&key(&m, &prompts[1])).is_some());
+        assert!(cache.get(&key(&m, &prompts[2])).is_none());
+        assert!(cache.get(&key(&m, &prompts[3])).is_some());
+    }
+
+    #[test]
+    fn oversized_snapshot_is_not_inserted() {
+        let m = model(Mechanism::Softmax);
+        let prompt: Vec<u32> = (0..64u32).collect();
+        let cache = PromptCache::new(16); // tiny budget
+        cache.insert(key(&m, &prompt), prefix(&m, &prompt));
+        assert_eq!(cache.stats().entries, 0);
+        assert_eq!(cache.stats().insertions, 0);
+    }
+}

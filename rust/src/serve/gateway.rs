@@ -1,0 +1,460 @@
+//! The serving gateway: request lifecycle from socket to token stream.
+//!
+//! Composition of the sibling modules — [`http`](crate::serve::http)
+//! parses the wire, [`cache`](crate::serve::cache) skips repeated
+//! prefills, [`worker`](crate::serve::worker) decodes — plus the two
+//! things only the front door can do: admission control (bounded queue,
+//! HTTP 429 on overflow, 503 while draining) and per-request accounting
+//! (TTFT, decode tokens/sec, cache hit) reported both in-band (the final
+//! chunk of every stream) and out-of-band (`GET /metrics`, `serve_request`
+//! / `serve_metrics` JSONL records).
+//!
+//! API surface:
+//!   `POST /v1/generate`  {"prompt", "max_tokens", "policy", "temperature",
+//!                         "top_k", "top_p", "seed"} -> chunked stream of
+//!                         `{"token","text"}` lines, then a `{"done":true}`
+//!                         line with the accounting
+//!   `GET /healthz`       liveness + model identity
+//!   `GET /metrics`       serve counters + cache stats (JSON object)
+//!
+//! [`Gateway::submit`] is the same lifecycle minus HTTP — benches and
+//! tests drive it in-process, so load results measure serving, not socket
+//! parsing.
+
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::infer::model::NativeLm;
+use crate::infer::sampler::SamplePolicy;
+use crate::infer::session::{decode_text, encode_prompt, GenRequest};
+use crate::metrics::{json_escape, JsonlWriter, Record, ServeCounters};
+use crate::serve::cache::PromptCache;
+use crate::serve::http::{
+    json_get, parse_json_object, Handler, HttpRequest, HttpServer, Json, Responder,
+};
+use crate::serve::worker::{RequestStats, ServeJob, TokenEvent, WorkerConfig, WorkerPool};
+
+/// Gateway knobs (the `psf serve` flags map 1:1 onto these).
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Listen address; port 0 binds an ephemeral port.
+    pub addr: String,
+    /// Decode worker threads.
+    pub workers: usize,
+    /// Admission-queue depth cap — beyond it, requests get 429.
+    pub queue_cap: usize,
+    /// Max sessions resident across workers (continuous-batching width).
+    pub max_resident: usize,
+    /// Tokens per worker grab (fairness/throughput dial).
+    pub slice_tokens: usize,
+    /// Prompt-prefix cache byte budget.
+    pub cache_bytes: usize,
+    /// `max_tokens` when the request omits it.
+    pub default_max_tokens: usize,
+    /// Hard per-request `max_tokens` ceiling.
+    pub max_tokens_cap: usize,
+    /// JSONL sink for per-request + closing metrics records.
+    pub log_path: Option<std::path::PathBuf>,
+    /// Stop after this many completed generate requests (0 = run forever)
+    /// — deterministic shutdown for the CI smoke job and the example.
+    pub max_requests: u64,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            queue_cap: 64,
+            max_resident: 8,
+            slice_tokens: 4,
+            cache_bytes: 64 << 20,
+            default_max_tokens: 64,
+            max_tokens_cap: 512,
+            log_path: None,
+            max_requests: 0,
+        }
+    }
+}
+
+/// Why a request was not admitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// Admission queue at capacity -> HTTP 429.
+    QueueFull,
+    /// Gateway is draining -> HTTP 503.
+    Draining,
+}
+
+/// The serving gateway.  Construct once per model, then either drive it
+/// in-process ([`Gateway::submit`]) or serve HTTP ([`Gateway::run_http`]).
+pub struct Gateway {
+    model: Arc<NativeLm>,
+    cfg: GatewayConfig,
+    pool: WorkerPool,
+    cache: Arc<PromptCache>,
+    pub counters: Arc<ServeCounters>,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+    log: Mutex<Option<JsonlWriter>>,
+    /// Actual bound address once [`Gateway::run_http`] is listening —
+    /// lets embedders (example, tests) use port 0 and discover the port.
+    bound: Mutex<Option<std::net::SocketAddr>>,
+}
+
+impl Gateway {
+    pub fn new(model: NativeLm, cfg: GatewayConfig) -> anyhow::Result<Gateway> {
+        let model = Arc::new(model);
+        let cache = Arc::new(PromptCache::new(cfg.cache_bytes));
+        let counters = Arc::new(ServeCounters::new());
+        let pool = WorkerPool::new(
+            Arc::clone(&model),
+            Arc::clone(&cache),
+            Arc::clone(&counters),
+            WorkerConfig {
+                workers: cfg.workers,
+                slice_tokens: cfg.slice_tokens,
+                max_resident: cfg.max_resident,
+            },
+        );
+        let log = match &cfg.log_path {
+            Some(p) => Some(JsonlWriter::create(p)?),
+            None => None,
+        };
+        Ok(Gateway {
+            model,
+            cfg,
+            pool,
+            cache,
+            counters,
+            next_id: AtomicU64::new(0),
+            stop: Arc::new(AtomicBool::new(false)),
+            log: Mutex::new(log),
+            bound: Mutex::new(None),
+        })
+    }
+
+    /// The listening address, once `run_http` has bound it.
+    pub fn http_addr(&self) -> Option<std::net::SocketAddr> {
+        *self.bound.lock().expect("bound lock poisoned")
+    }
+
+    pub fn mech_label(&self) -> String {
+        self.model.mech.label()
+    }
+
+    /// Admit a request (or reject it) and return the event stream.  The
+    /// full lifecycle minus HTTP: queue -> (cache | prefill) -> interleaved
+    /// decode -> Done(stats).
+    pub fn submit(&self, req: GenRequest) -> Result<Receiver<TokenEvent>, Rejected> {
+        if self.stop.load(Ordering::SeqCst) {
+            self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(Rejected::Draining);
+        }
+        let (tx, rx) = channel();
+        let job = ServeJob {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            req,
+            events: tx,
+            queued: Instant::now(),
+        };
+        match self.pool.try_submit(job, self.cfg.queue_cap) {
+            Ok(()) => {
+                self.counters.admitted.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(_job) => {
+                self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(Rejected::QueueFull)
+            }
+        }
+    }
+
+    /// Serve HTTP until `max_requests` completions (or forever), then
+    /// drain the workers and write the closing metrics record.  Prints the
+    /// bound address on startup — the CI smoke job and the quick-start
+    /// scrape it.
+    pub fn run_http(self: Arc<Gateway>) -> anyhow::Result<()> {
+        let server = HttpServer::bind(&self.cfg.addr)?;
+        let addr = server.local_addr()?;
+        *self.bound.lock().expect("bound lock poisoned") = Some(addr);
+        println!("psf serve: listening on http://{addr} (mech {})", self.mech_label());
+        println!(
+            "psf serve: {} workers, queue cap {}, cache budget {} MiB",
+            self.cfg.workers.max(1),
+            self.cfg.queue_cap,
+            self.cfg.cache_bytes >> 20,
+        );
+        let stop = Arc::clone(&self.stop);
+        let handler: Arc<dyn Handler> = Arc::clone(&self) as Arc<dyn Handler>;
+        server.serve(handler, stop)?;
+        self.finish()
+    }
+
+    /// Drain workers and flush the closing `serve_metrics` record.  Also
+    /// the programmatic shutdown for in-process use.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        self.pool.drain();
+        let record = self.metrics_record();
+        if let Some(w) = self.log.lock().expect("log lock poisoned").as_mut() {
+            w.write(&record)?;
+            w.flush()?;
+        }
+        eprintln!("psf serve: drained — {}", record.to_json());
+        Ok(())
+    }
+
+    /// Current serve counters (cache gauges refreshed) as a JSONL record.
+    pub fn metrics_record(&self) -> Record {
+        let stats = self.cache.stats();
+        self.counters.cache_bytes.store(stats.bytes as u64, Ordering::Relaxed);
+        self.counters
+            .record()
+            .str("mech", self.model.mech.label())
+            .i64("cache_entries", stats.entries as i64)
+            .i64("cache_evictions", stats.evictions as i64)
+            .i64("queue_depth", self.pool.queued() as i64)
+            .i64("resident", self.pool.resident() as i64)
+    }
+
+    /// Build a GenRequest from a parsed `/v1/generate` body.
+    fn parse_generate(&self, body: &str) -> Result<GenRequest, String> {
+        let obj = parse_json_object(body)?;
+        let prompt_text = json_get(&obj, "prompt")
+            .and_then(Json::as_str)
+            .ok_or("missing required string field `prompt`")?;
+        let num = |key: &str, default: f64| -> Result<f64, String> {
+            match json_get(&obj, key) {
+                None | Some(Json::Null) => Ok(default),
+                Some(v) => v.as_f64().ok_or(format!("field `{key}` must be a number")),
+            }
+        };
+        let max_tokens = num("max_tokens", self.cfg.default_max_tokens as f64)? as usize;
+        if max_tokens == 0 {
+            return Err("`max_tokens` must be >= 1".into());
+        }
+        let policy_name = match json_get(&obj, "policy") {
+            None | Some(Json::Null) => "greedy",
+            Some(v) => v.as_str().ok_or("field `policy` must be a string")?,
+        };
+        let policy = SamplePolicy::from_flags(
+            policy_name,
+            num("temperature", 1.0)? as f32,
+            num("top_k", 40.0)? as usize,
+            num("top_p", 0.9)? as f32,
+        )?;
+        Ok(GenRequest {
+            prompt: encode_prompt(prompt_text),
+            max_new_tokens: max_tokens.min(self.cfg.max_tokens_cap),
+            policy,
+            seed: num("seed", 0.0)? as u64,
+        })
+    }
+
+    /// Stream one admitted request out as chunked JSON lines.
+    fn stream_response(
+        &self,
+        rx: Receiver<TokenEvent>,
+        resp: &mut Responder<'_>,
+    ) -> io::Result<()> {
+        resp.start_chunked(200, "application/json")?;
+        for event in rx.iter() {
+            match event {
+                TokenEvent::Token { token, text } => {
+                    resp.chunk(&format!(
+                        "{{\"token\":{},\"text\":{}}}\n",
+                        token,
+                        json_escape(&text)
+                    ))?;
+                }
+                TokenEvent::Done(stats) => {
+                    self.on_done(&stats);
+                    resp.chunk(&format!(
+                        "{{\"done\":true,\"new_tokens\":{},\"cache_hit\":{},\"ttft_ms\":{:.3},\
+                         \"prefill_ms\":{:.3},\"decode_tokens_per_sec\":{:.1},\"text\":{}}}\n",
+                        stats.new_tokens,
+                        stats.cache_hit,
+                        stats.ttft_secs * 1e3,
+                        stats.prefill_secs * 1e3,
+                        stats.decode_tokens_per_sec(),
+                        json_escape(&decode_text(&stats.generated)),
+                    ))?;
+                }
+            }
+        }
+        resp.finish()
+    }
+
+    /// Completion bookkeeping of the HTTP path: the per-request JSONL
+    /// record and the `max_requests` stop condition.  The in-process
+    /// [`Gateway::submit`] path does NOT run this — embedders that want
+    /// the same records/stop behavior call it themselves with the
+    /// `Done` stats (it is idempotent per request only in the sense that
+    /// each call writes one record, so call it once).
+    pub fn on_done(&self, stats: &RequestStats) {
+        if let Some(w) = self.log.lock().expect("log lock poisoned").as_mut() {
+            let _ = w.write(&request_record(&self.model, stats));
+            let _ = w.flush();
+        }
+        if self.cfg.max_requests > 0
+            && self.counters.completed.load(Ordering::Relaxed) >= self.cfg.max_requests
+        {
+            self.stop.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+impl Handler for Gateway {
+    fn handle(&self, req: HttpRequest, resp: &mut Responder<'_>) -> io::Result<()> {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => resp.simple(
+                200,
+                "application/json",
+                &format!(
+                    "{{\"ok\":true,\"mech\":{},\"linear\":{}}}",
+                    json_escape(&self.model.mech.label()),
+                    self.model.mech.is_linear(),
+                ),
+            ),
+            ("GET", "/metrics") => {
+                resp.simple(200, "application/json", &self.metrics_record().to_json())
+            }
+            ("POST", "/v1/generate") => {
+                let gen_req = match self.parse_generate(&req.body_str()) {
+                    Ok(r) => r,
+                    Err(msg) => {
+                        return resp.simple(
+                            400,
+                            "application/json",
+                            &format!("{{\"error\":{}}}", json_escape(&msg)),
+                        );
+                    }
+                };
+                match self.submit(gen_req) {
+                    Ok(rx) => self.stream_response(rx, resp),
+                    Err(Rejected::QueueFull) => resp.simple(
+                        429,
+                        "application/json",
+                        "{\"error\":\"admission queue full, retry later\"}",
+                    ),
+                    Err(Rejected::Draining) => resp.simple(
+                        503,
+                        "application/json",
+                        "{\"error\":\"gateway is draining\"}",
+                    ),
+                }
+            }
+            (_, "/healthz" | "/metrics" | "/v1/generate") => {
+                resp.simple(405, "application/json", "{\"error\":\"method not allowed\"}")
+            }
+            _ => resp.simple(404, "application/json", "{\"error\":\"no such route\"}"),
+        }
+    }
+}
+
+/// Per-request JSONL record (`kind = "serve_request"`), the serving
+/// counterpart of the scheduler's `session` records.
+fn request_record(model: &NativeLm, s: &RequestStats) -> Record {
+    Record::new()
+        .str("kind", "serve_request")
+        .str("mech", model.mech.label())
+        .i64("id", s.id as i64)
+        .i64("prompt_len", s.prompt_len as i64)
+        .i64("new_tokens", s.new_tokens as i64)
+        .bool("cache_hit", s.cache_hit)
+        .f64("ttft_ms", s.ttft_secs * 1e3)
+        .f64("prefill_ms", s.prefill_secs * 1e3)
+        .f64("decode_ms", s.decode_secs * 1e3)
+        .f64("decode_tokens_per_sec", s.decode_tokens_per_sec())
+        .f64("wall_ms", s.wall_secs * 1e3)
+}
+
+/// Drain a submit receiver to completion, returning (tokens, stats) —
+/// the in-process client loop benches and tests share.
+pub fn collect_stream(rx: Receiver<TokenEvent>) -> (Vec<u32>, Option<RequestStats>) {
+    let mut tokens = Vec::new();
+    let mut done = None;
+    for ev in rx.iter() {
+        match ev {
+            TokenEvent::Token { token, .. } => tokens.push(token),
+            TokenEvent::Done(stats) => done = Some(stats),
+        }
+    }
+    (tokens, done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::Mechanism;
+    use crate::infer::model::LmConfig;
+
+    fn gateway(cfg: GatewayConfig) -> Gateway {
+        let lm = LmConfig { vocab: 64, d_model: 32, layers: 2, heads: 2, ff_mult: 2, seed: 4 };
+        let model = NativeLm::new(lm, Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true });
+        Gateway::new(model, cfg).unwrap()
+    }
+
+    fn req(seed: u64) -> GenRequest {
+        GenRequest {
+            prompt: vec![0, 8, 2, 33],
+            max_new_tokens: 6,
+            policy: SamplePolicy::Temperature(0.9),
+            seed,
+        }
+    }
+
+    #[test]
+    fn submit_roundtrip_and_counters() {
+        let g = gateway(GatewayConfig::default());
+        let (tokens, stats) = collect_stream(g.submit(req(3)).unwrap());
+        let stats = stats.expect("done event");
+        assert_eq!(tokens.len(), 6);
+        assert_eq!(stats.generated, tokens);
+        assert!(!stats.cache_hit);
+        let (tokens2, stats2) = collect_stream(g.submit(req(3)).unwrap());
+        assert_eq!(tokens2, tokens);
+        assert!(stats2.unwrap().cache_hit);
+        g.finish().unwrap();
+        assert_eq!(g.counters.admitted.load(Ordering::Relaxed), 2);
+        assert_eq!(g.counters.completed.load(Ordering::Relaxed), 2);
+        let json = g.metrics_record().to_json();
+        assert!(json.contains("\"kind\":\"serve_metrics\""), "{json}");
+        assert!(json.contains("\"cache_hits\":1"), "{json}");
+    }
+
+    #[test]
+    fn draining_gateway_rejects() {
+        let g = gateway(GatewayConfig::default());
+        g.finish().unwrap();
+        assert!(matches!(g.submit(req(0)), Err(Rejected::Draining)));
+        assert_eq!(g.counters.rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parse_generate_defaults_and_validation() {
+        let g = gateway(GatewayConfig { default_max_tokens: 7, ..GatewayConfig::default() });
+        let r = g.parse_generate(r#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(r.max_new_tokens, 7);
+        assert_eq!(r.seed, 0);
+        assert_eq!(r.policy, SamplePolicy::Greedy);
+        assert_eq!(r.prompt, encode_prompt("hi"));
+        let r = g
+            .parse_generate(
+                r#"{"prompt": "x", "policy": "top-p", "top_p": 0.5, "temperature": 0.7,
+                   "max_tokens": 9999, "seed": 11}"#,
+            )
+            .unwrap();
+        assert_eq!(r.policy, SamplePolicy::TopP { p: 0.5, temperature: 0.7 });
+        assert_eq!(r.max_new_tokens, 512, "capped by max_tokens_cap");
+        assert_eq!(r.seed, 11);
+        assert!(g.parse_generate(r#"{"max_tokens": 4}"#).is_err(), "prompt required");
+        assert!(g.parse_generate(r#"{"prompt": "x", "max_tokens": 0}"#).is_err());
+        assert!(g.parse_generate(r#"{"prompt": "x", "policy": "banana"}"#).is_err());
+        assert!(g.parse_generate("not json").is_err());
+    }
+}

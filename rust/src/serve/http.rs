@@ -1,0 +1,579 @@
+//! Hand-rolled HTTP/1.1 substrate over `std::net` (no hyper/tokio in this
+//! environment): request parsing, plain and chunked responses, a tiny flat
+//! JSON body parser, and an accept loop that hands each connection to a
+//! [`Handler`] on its own thread.
+//!
+//! Scope is deliberately narrow — exactly what the serving gateway needs:
+//! one request per connection (`Connection: close`), `Content-Length`
+//! bodies only, flat JSON objects (string/number/bool/null values).  The
+//! interesting serving problems (admission, caching, batching) live in the
+//! sibling modules; this file stays boring on purpose.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Parsed request line + headers + body.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Header names lowercased; values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Hard limits — a serving front-end must bound untrusted input.
+const MAX_HEADER_LINE: usize = 8 * 1024;
+const MAX_HEADERS: usize = 64;
+const MAX_BODY: usize = 1024 * 1024;
+
+/// Read one HTTP/1.1 request.  `Ok(None)` means the peer closed the
+/// connection before sending a request line (a clean no-op).
+pub fn read_request(stream: &mut TcpStream) -> io::Result<Option<HttpRequest>> {
+    let mut reader = BufReader::new(stream);
+    let request_line = match read_crlf_line(&mut reader)? {
+        Some(l) if !l.is_empty() => l,
+        _ => return Ok(None),
+    };
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next()) {
+        (Some(m), Some(p)) => (m.to_string(), p.to_string()),
+        _ => return Err(bad_input("malformed request line")),
+    };
+    let mut headers = Vec::new();
+    loop {
+        let line = read_crlf_line(&mut reader)?
+            .ok_or_else(|| bad_input("connection closed inside headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(bad_input("too many headers"));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(bad_input("malformed header line"));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse::<usize>())
+        .transpose()
+        .map_err(|_| bad_input("bad content-length"))?
+        .unwrap_or(0);
+    if content_length > MAX_BODY {
+        return Err(bad_input("body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Some(HttpRequest { method, path, headers, body }))
+}
+
+/// Read a line terminated by `\n`, stripping a trailing `\r`.  `None` on
+/// clean EOF before any byte.
+fn read_crlf_line(reader: &mut impl BufRead) -> io::Result<Option<String>> {
+    let mut buf = Vec::new();
+    let n = reader.take(MAX_HEADER_LINE as u64 + 1).read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if n > MAX_HEADER_LINE {
+        return Err(bad_input("header line too long"));
+    }
+    while buf.last() == Some(&b'\n') || buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| bad_input("non-utf8 header"))
+}
+
+fn bad_input(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Response writer for one connection: either one `simple` response or a
+/// `start_chunked` / `chunk`* / `finish` streaming sequence.
+pub struct Responder<'a> {
+    stream: &'a mut TcpStream,
+    chunked: bool,
+}
+
+impl<'a> Responder<'a> {
+    pub fn new(stream: &'a mut TcpStream) -> Responder<'a> {
+        Responder { stream, chunked: false }
+    }
+
+    /// One-shot response with a `Content-Length` body.
+    pub fn simple(&mut self, status: u16, content_type: &str, body: &str) -> io::Result<()> {
+        write!(
+            self.stream,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            status,
+            status_text(status),
+            content_type,
+            body.len(),
+            body,
+        )?;
+        self.stream.flush()
+    }
+
+    /// Begin a chunked (streaming) response — the per-token path.
+    pub fn start_chunked(&mut self, status: u16, content_type: &str) -> io::Result<()> {
+        self.chunked = true;
+        write!(
+            self.stream,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+            status,
+            status_text(status),
+            content_type,
+        )?;
+        self.stream.flush()
+    }
+
+    /// Emit one chunk and flush it — each generated token streams out as
+    /// soon as the worker produces it.
+    pub fn chunk(&mut self, data: &str) -> io::Result<()> {
+        debug_assert!(self.chunked, "chunk() before start_chunked()");
+        if data.is_empty() {
+            return Ok(()); // an empty chunk would terminate the stream
+        }
+        write!(self.stream, "{:x}\r\n{}\r\n", data.len(), data)?;
+        self.stream.flush()
+    }
+
+    /// Terminate the chunked stream.
+    pub fn finish(&mut self) -> io::Result<()> {
+        debug_assert!(self.chunked, "finish() before start_chunked()");
+        self.stream.write_all(b"0\r\n\r\n")?;
+        self.stream.flush()
+    }
+}
+
+/// Connection handler: the gateway implements this to route requests.
+pub trait Handler: Send + Sync + 'static {
+    fn handle(&self, req: HttpRequest, resp: &mut Responder<'_>) -> io::Result<()>;
+}
+
+/// Minimal threaded HTTP server: accept loop + one thread per connection.
+pub struct HttpServer {
+    listener: TcpListener,
+}
+
+impl HttpServer {
+    pub fn bind(addr: &str) -> io::Result<HttpServer> {
+        Ok(HttpServer { listener: TcpListener::bind(addr)? })
+    }
+
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept until `stop` flips, handing each connection to `handler` on
+    /// its own thread; joins all connection threads before returning so the
+    /// caller can drain workers with no responses still in flight.
+    pub fn serve(self, handler: Arc<dyn Handler>, stop: Arc<AtomicBool>) -> io::Result<()> {
+        self.listener.set_nonblocking(true)?;
+        let mut threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let handler = Arc::clone(&handler);
+                    threads.push(std::thread::spawn(move || {
+                        handle_connection(stream, handler);
+                    }));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+            threads.retain(|t| !t.is_finished());
+        }
+        for t in threads {
+            let _ = t.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, handler: Arc<dyn Handler>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    // A client that stops reading its response must not pin this thread
+    // forever: once the send buffer fills, a write blocks at most this
+    // long, the handler sees the error, and dropping the event receiver
+    // cancels the decode — without this, one stalled reader would also
+    // wedge shutdown (serve() joins every connection thread).
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    // Blocking I/O per connection (the listener's nonblocking flag is
+    // inherited on some platforms; undo it explicitly).
+    let _ = stream.set_nonblocking(false);
+    match read_request(&mut stream) {
+        Ok(Some(req)) => {
+            let mut resp = Responder::new(&mut stream);
+            // A handler I/O error means the peer went away mid-stream; the
+            // worker notices via its closed channel, nothing to do here.
+            let _ = handler.handle(req, &mut resp);
+        }
+        Ok(None) => {}
+        Err(_) => {
+            let mut resp = Responder::new(&mut stream);
+            let _ = resp.simple(400, "application/json", "{\"error\":\"bad request\"}");
+        }
+    }
+}
+
+// ------------------------------------------------------------- flat JSON
+
+/// A flat JSON scalar (the only value shapes the serve API uses).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+impl Json {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a flat JSON object (`{"k": "v", "n": 1, "b": true}`) — nested
+/// objects/arrays are rejected, which keeps the parser ~100 lines and the
+/// API surface honest about what it accepts.
+pub fn parse_json_object(s: &str) -> Result<Vec<(String, Json)>, String> {
+    let mut p = JsonParser { bytes: s.as_bytes(), pos: 0 };
+    p.skip_ws();
+    p.expect(b'{')?;
+    let mut out = Vec::new();
+    p.skip_ws();
+    if p.peek() == Some(b'}') {
+        p.pos += 1;
+    } else {
+        loop {
+            p.skip_ws();
+            let key = p.string()?;
+            p.skip_ws();
+            p.expect(b':')?;
+            p.skip_ws();
+            let value = p.value()?;
+            out.push((key, value));
+            p.skip_ws();
+            match p.next() {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                _ => return Err("expected `,` or `}`".into()),
+            }
+        }
+    }
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err("trailing bytes after object".into());
+    }
+    Ok(out)
+}
+
+/// Fetch a key from a parsed flat object.
+pub fn json_get<'a>(obj: &'a [(String, Json)], key: &str) -> Option<&'a Json> {
+    obj.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+}
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn next(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, want: u8) -> Result<(), String> {
+        match self.next() {
+            Some(b) if b == want => Ok(()),
+            other => Err(format!("expected `{}`, got {:?}", want as char, other.map(char::from))),
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'{') | Some(b'[') => Err("nested objects/arrays not supported".into()),
+            Some(_) => self.number(),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(format!("bad literal (expected {word})"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|e| e.to_string())?;
+        text.parse::<f64>().map(Json::Num).map_err(|_| format!("bad number `{text}`"))
+    }
+
+    /// Four hex digits of a `\u` escape (cursor already past the `u`).
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|e| e.to_string())?;
+        let code = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape".to_string())?;
+        self.pos += 4;
+        Ok(code)
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.next() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.next() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hi = self.hex4()?;
+                        if (0xD800..0xDC00).contains(&hi) {
+                            // High surrogate: JSON escapes non-BMP scalars
+                            // as a \uD8xx\uDCxx pair (e.g. emoji from any
+                            // ensure_ascii encoder) — recombine it.
+                            if self.bytes.get(self.pos) == Some(&b'\\')
+                                && self.bytes.get(self.pos + 1) == Some(&b'u')
+                            {
+                                self.pos += 2;
+                                let lo = self.hex4()?;
+                                if (0xDC00..0xE000).contains(&lo) {
+                                    let c = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                    out.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                } else {
+                                    // Unpaired high + some other escape:
+                                    // replacement for the orphan, keep the
+                                    // second scalar.
+                                    out.push('\u{fffd}');
+                                    out.push(char::from_u32(lo).unwrap_or('\u{fffd}'));
+                                }
+                            } else {
+                                out.push('\u{fffd}');
+                            }
+                        } else {
+                            // from_u32 is None exactly for unpaired low
+                            // surrogates here.
+                            out.push(char::from_u32(hi).unwrap_or('\u{fffd}'));
+                        }
+                    }
+                    other => return Err(format!("bad escape {:?}", other.map(char::from))),
+                },
+                // Multi-byte UTF-8: the request body was validated as &str,
+                // so continuation bytes are structurally sound — copy the
+                // whole scalar through.
+                Some(b) if b < 0x80 => out.push(b as char),
+                Some(b) => {
+                    let len = utf8_len(b);
+                    let start = self.pos - 1;
+                    if start + len > self.bytes.len() {
+                        return Err("truncated utf-8 scalar".into());
+                    }
+                    let s = std::str::from_utf8(&self.bytes[start..start + len])
+                        .map_err(|e| e.to_string())?;
+                    out.push_str(s);
+                    self.pos = start + len;
+                }
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn parse_flat_object() {
+        let obj = parse_json_object(
+            r#"{"prompt": "hi \"there\"", "max_tokens": 32, "greedy": true, "x": null, "t": 0.8}"#,
+        )
+        .unwrap();
+        assert_eq!(json_get(&obj, "prompt").unwrap().as_str().unwrap(), "hi \"there\"");
+        assert_eq!(json_get(&obj, "max_tokens").unwrap().as_f64().unwrap(), 32.0);
+        assert_eq!(json_get(&obj, "greedy"), Some(&Json::Bool(true)));
+        assert_eq!(json_get(&obj, "x"), Some(&Json::Null));
+        assert_eq!(json_get(&obj, "t").unwrap().as_f64().unwrap(), 0.8);
+        assert!(json_get(&obj, "missing").is_none());
+    }
+
+    #[test]
+    fn parse_unicode_and_escapes() {
+        let obj = parse_json_object(r#"{"s": "café ← ok\n"}"#).unwrap();
+        assert_eq!(json_get(&obj, "s").unwrap().as_str().unwrap(), "café ← ok\n");
+        // \u escapes: BMP scalar, and a surrogate pair for a non-BMP one
+        // (how ensure_ascii encoders ship emoji).
+        let obj = parse_json_object(r#"{"s": "\u00e9 \ud83d\ude00"}"#).unwrap();
+        assert_eq!(json_get(&obj, "s").unwrap().as_str().unwrap(), "é 😀");
+        // Orphan surrogates degrade to U+FFFD instead of corrupting state.
+        let obj = parse_json_object(r#"{"s": "\ud83dx"}"#).unwrap();
+        assert_eq!(json_get(&obj, "s").unwrap().as_str().unwrap(), "\u{fffd}x");
+    }
+
+    #[test]
+    fn parse_rejects_nested_and_garbage() {
+        assert!(parse_json_object(r#"{"a": {"b": 1}}"#).is_err());
+        assert!(parse_json_object(r#"{"a": [1]}"#).is_err());
+        assert!(parse_json_object(r#"{"a": 1} trailing"#).is_err());
+        assert!(parse_json_object("not json").is_err());
+        assert!(parse_json_object(r#"{"a""#).is_err());
+    }
+
+    #[test]
+    fn parse_empty_object() {
+        assert!(parse_json_object("{}").unwrap().is_empty());
+        assert!(parse_json_object(" { } ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn request_roundtrip_over_loopback() {
+        // Raw socket pair: write a request, parse it, answer it, read the
+        // answer — the full wire path with no gateway involved.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let body = r#"{"prompt":"x"}"#;
+            write!(
+                s,
+                "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+                body.len(),
+                body
+            )
+            .unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let req = read_request(&mut stream).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.body_str(), r#"{"prompt":"x"}"#);
+        let mut resp = Responder::new(&mut stream);
+        resp.start_chunked(200, "application/json").unwrap();
+        resp.chunk("{\"token\":1}\n").unwrap();
+        resp.chunk("{\"done\":true}\n").unwrap();
+        resp.finish().unwrap();
+        drop(stream);
+        let got = client.join().unwrap();
+        assert!(got.starts_with("HTTP/1.1 200 OK\r\n"), "{got}");
+        assert!(got.contains("Transfer-Encoding: chunked"), "{got}");
+        assert!(got.contains("{\"token\":1}"), "{got}");
+        assert!(got.contains("{\"done\":true}"), "{got}");
+        assert!(got.ends_with("0\r\n\r\n"), "{got}");
+    }
+
+    #[test]
+    fn read_request_handles_eof_and_garbage() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Clean EOF before any bytes -> Ok(None).
+        let c = std::thread::spawn(move || drop(TcpStream::connect(addr).unwrap()));
+        let (mut stream, _) = listener.accept().unwrap();
+        c.join().unwrap();
+        assert!(read_request(&mut stream).unwrap().is_none());
+        // Garbage request line -> error.
+        let addr = listener.local_addr().unwrap();
+        let c = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"garbage\r\n\r\n").unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        c.join().unwrap();
+        assert!(read_request(&mut stream).is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! Serving gateway: concurrent front-end over the linear-time decode path.
+//!
+//! `infer/` made one request cheap (O(1)/token recurrent states); this
+//! module makes *traffic* cheap.  Zero new dependencies — std sockets,
+//! std threads — in four parts:
+//!
+//! * [`http`] — hand-rolled HTTP/1.1: request parsing, chunked per-token
+//!   streaming, a flat JSON body parser, a threaded accept loop;
+//! * [`cache`] — the prompt-prefix state cache.  The paper's recurrent
+//!   view makes a prefilled prompt a *constant-size* snapshot (O(r²h) per
+//!   layer/head) for the linear mechanisms, so repeated system prompts
+//!   skip prefill entirely; the softmax family can be cached too but pays
+//!   O(n·h) per entry — the complexity gap (Keles et al.) as a cache
+//!   budget line-item;
+//! * [`worker`] — decode workers over one shared `Arc<NativeLm>`,
+//!   interleaving single-token step slices across sessions (continuous
+//!   batching, multi-threaded) with graceful drain;
+//! * [`gateway`] — the request lifecycle: admission control (bounded
+//!   queue, 429 on overflow), cache, workers, per-request TTFT /
+//!   tokens-per-sec accounting, `POST /v1/generate` + `GET /healthz` +
+//!   `GET /metrics`.
+//!
+//! Determinism contract, inherited from `infer` and preserved across
+//! threads: a (seed, prompt, policy) triple yields the same token stream
+//! whether it was served cold, from the cache, by one worker or by eight
+//! — `tests/integration_serve.rs` pins this for every mechanism.
+//! `benches/serve_load.rs` measures the payoff (cache-hit TTFT, flat p99).
+
+pub mod cache;
+pub mod gateway;
+pub mod http;
+pub mod worker;
+
+pub use cache::{CacheKey, CacheStats, PrefixSnapshot, PromptCache};
+pub use gateway::{collect_stream, Gateway, GatewayConfig, Rejected};
+pub use http::{HttpRequest, HttpServer, Responder};
+pub use worker::{RequestStats, ServeJob, TokenEvent, WorkerConfig, WorkerPool};

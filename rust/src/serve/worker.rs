@@ -1,0 +1,478 @@
+//! Decode worker pool: continuous batching across threads.
+//!
+//! One immutable `Arc<NativeLm>` is shared by every worker (the model is
+//! pure data — no interior mutability — so `Sync` comes for free); each
+//! request owns its private `DecodeSession`, which is what makes
+//! cross-thread interleaving safe *and* deterministic: a session's token
+//! stream depends only on (seed, prompt, policy), never on which worker
+//! stepped it or when (the same contract `infer::scheduler` enforces on
+//! one thread).
+//!
+//! Scheduling discipline: a shared admission queue plus a shared runnable
+//! queue.  A worker prefers admitting (prefill or prompt-cache restore)
+//! while the resident count is under `max_resident`, otherwise it pops a
+//! runnable session, steps it `slice_tokens` tokens, and requeues it — so
+//! sessions migrate freely between workers and short requests are not
+//! stuck behind long ones (continuous batching, multi-threaded).
+//! Shutdown is a graceful drain: no new admissions are accepted, but
+//! everything already admitted or queued runs to completion before the
+//! workers exit.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::infer::model::NativeLm;
+use crate::infer::session::{decode_text, DecodeSession, GenRequest};
+use crate::metrics::ServeCounters;
+use crate::serve::cache::{CacheKey, PrefixSnapshot, PromptCache};
+
+/// Worker-pool knobs.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Decode worker threads.
+    pub workers: usize,
+    /// Tokens a worker generates per session grab before requeueing it —
+    /// the fairness/throughput dial (1 = strict round-robin).
+    pub slice_tokens: usize,
+    /// Maximum sessions resident (admitted, unfinished) across the pool.
+    pub max_resident: usize,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig { workers: 2, slice_tokens: 4, max_resident: 8 }
+    }
+}
+
+/// What streams back to the request's submitter.
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    /// One generated token, with its decoded text (byte-level vocab).
+    Token { token: u32, text: String },
+    /// Terminal event: the request's accounting.
+    Done(RequestStats),
+}
+
+/// Per-request accounting, reported on completion.
+#[derive(Clone, Debug)]
+pub struct RequestStats {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub new_tokens: usize,
+    /// Prompt prefix restored from the cache (prefill skipped)?
+    pub cache_hit: bool,
+    /// Queue-entry to first-token wall time.
+    pub ttft_secs: f64,
+    /// Prefill wall time (0 on a cache hit).
+    pub prefill_secs: f64,
+    /// Accumulated decode wall time.
+    pub decode_secs: f64,
+    /// Queue-entry to completion wall time.
+    pub wall_secs: f64,
+    /// The generated suffix (prompt excluded).
+    pub generated: Vec<u32>,
+}
+
+impl RequestStats {
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        if self.decode_secs > 0.0 {
+            self.new_tokens as f64 / self.decode_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One admitted-but-not-yet-prefilled request.
+pub struct ServeJob {
+    pub id: u64,
+    pub req: GenRequest,
+    pub events: Sender<TokenEvent>,
+    pub queued: Instant,
+}
+
+/// A session resident in the pool, between step slices.
+struct Running {
+    session: DecodeSession,
+    events: Sender<TokenEvent>,
+    queued: Instant,
+    ttft_secs: Option<f64>,
+    cache_hit: bool,
+    /// Peer hung up (send failed) — finish silently, skip accounting.
+    cancelled: bool,
+}
+
+#[derive(Default)]
+struct Queues {
+    admit: VecDeque<ServeJob>,
+    run: VecDeque<Running>,
+    /// Sessions admitted and not yet retired (includes sessions currently
+    /// held by a worker, which are in neither queue).
+    resident: usize,
+    draining: bool,
+}
+
+struct Shared {
+    model: Arc<NativeLm>,
+    cache: Arc<PromptCache>,
+    counters: Arc<ServeCounters>,
+    cfg: WorkerConfig,
+    queues: Mutex<Queues>,
+    cvar: Condvar,
+}
+
+/// The pool: spawn on construction, `try_submit` to feed it, `drain` to
+/// finish outstanding work and join the threads.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    pub fn new(
+        model: Arc<NativeLm>,
+        cache: Arc<PromptCache>,
+        counters: Arc<ServeCounters>,
+        cfg: WorkerConfig,
+    ) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            model,
+            cache,
+            counters,
+            cfg: WorkerConfig {
+                workers: cfg.workers.max(1),
+                slice_tokens: cfg.slice_tokens.max(1),
+                max_resident: cfg.max_resident.max(1),
+            },
+            queues: Mutex::new(Queues::default()),
+            cvar: Condvar::new(),
+        });
+        let handles = (0..shared.cfg.workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        WorkerPool { shared, handles: Mutex::new(handles) }
+    }
+
+    /// Admission control: enqueue unless the admission queue is at
+    /// `queue_cap` or the pool is draining — both hand the job back so the
+    /// caller can answer 429/503.  The depth check and the enqueue are one
+    /// critical section, so the cap holds under concurrent submitters.
+    pub fn try_submit(&self, job: ServeJob, queue_cap: usize) -> Result<(), ServeJob> {
+        let mut q = self.lock();
+        if q.draining || q.admit.len() >= queue_cap.max(1) {
+            return Err(job);
+        }
+        q.admit.push_back(job);
+        drop(q);
+        self.shared.cvar.notify_one();
+        Ok(())
+    }
+
+    /// Admission-queue depth right now.
+    pub fn queued(&self) -> usize {
+        self.lock().admit.len()
+    }
+
+    /// Sessions admitted and not yet retired.
+    pub fn resident(&self) -> usize {
+        self.lock().resident
+    }
+
+    /// Graceful drain: stop admitting, run everything already accepted to
+    /// completion, join the workers.  Idempotent-ish: callable once.
+    pub fn drain(&self) {
+        {
+            let mut q = self.lock();
+            q.draining = true;
+        }
+        self.shared.cvar.notify_all();
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.handles.lock().expect("handles lock poisoned"));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Queues> {
+        self.shared.queues.lock().expect("worker queues lock poisoned")
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        enum Work {
+            Admit(ServeJob),
+            Step(Running),
+            Exit,
+        }
+        let work = {
+            let mut q = shared.queues.lock().expect("worker queues lock poisoned");
+            loop {
+                // Prefer admission while under the residency cap: keeps the
+                // batch full, which is what continuous batching is for.
+                if q.resident < shared.cfg.max_resident {
+                    if let Some(job) = q.admit.pop_front() {
+                        q.resident += 1;
+                        break Work::Admit(job);
+                    }
+                }
+                if let Some(r) = q.run.pop_front() {
+                    break Work::Step(r);
+                }
+                if q.draining && q.admit.is_empty() && q.resident == 0 {
+                    break Work::Exit;
+                }
+                q = shared.cvar.wait(q).expect("worker queues lock poisoned");
+            }
+        };
+        match work {
+            Work::Exit => {
+                // Wake peers so they observe the exit condition too.
+                shared.cvar.notify_all();
+                return;
+            }
+            Work::Admit(job) => {
+                let running = admit(shared, job);
+                let mut q = shared.queues.lock().expect("worker queues lock poisoned");
+                q.run.push_back(running);
+                drop(q);
+                shared.cvar.notify_one();
+            }
+            Work::Step(mut r) => {
+                step_slice(shared, &mut r);
+                if r.session.finished || r.cancelled {
+                    retire(shared, r);
+                    let mut q = shared.queues.lock().expect("worker queues lock poisoned");
+                    q.resident -= 1;
+                    drop(q);
+                    // May unblock admissions or the drain condition.
+                    shared.cvar.notify_all();
+                } else {
+                    let mut q = shared.queues.lock().expect("worker queues lock poisoned");
+                    q.run.push_back(r);
+                    drop(q);
+                    shared.cvar.notify_one();
+                }
+            }
+        }
+    }
+}
+
+/// Turn an admitted job into a resident session: prompt-cache restore when
+/// possible (skipping prefill entirely), full prefill + cache fill
+/// otherwise.
+fn admit(shared: &Shared, job: ServeJob) -> Running {
+    let key = CacheKey { mech: shared.model.mech.label(), prompt: job.req.prompt.clone() };
+    let (session, cache_hit) = match shared.cache.get(&key) {
+        Some(prefix) => {
+            shared.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+            // The deep copy happens here, on this worker's thread — the
+            // cache lock was only held for an Arc bump.
+            let s = DecodeSession::from_prefix(
+                job.id as usize,
+                job.req,
+                prefix.states.clone(),
+                prefix.last_logits.clone(),
+            );
+            (s, true)
+        }
+        None => {
+            shared.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
+            let s = DecodeSession::new(&shared.model, job.id as usize, job.req);
+            shared.cache.insert(key, PrefixSnapshot::of(&s));
+            (s, false)
+        }
+    };
+    shared
+        .counters
+        .cache_bytes
+        .store(shared.cache.stats().bytes as u64, Ordering::Relaxed);
+    Running {
+        session,
+        events: job.events,
+        queued: job.queued,
+        ttft_secs: None,
+        cache_hit,
+        cancelled: false,
+    }
+}
+
+/// Step one session up to `slice_tokens` tokens, streaming each out.
+fn step_slice(shared: &Shared, r: &mut Running) {
+    for _ in 0..shared.cfg.slice_tokens {
+        let Some(tok) = r.session.step(&shared.model) else { break };
+        if r.ttft_secs.is_none() {
+            let ttft = r.queued.elapsed().as_secs_f64();
+            r.ttft_secs = Some(ttft);
+            shared.counters.record_ttft(ttft);
+        }
+        let event = TokenEvent::Token { token: tok, text: decode_text(&[tok]) };
+        if r.events.send(event).is_err() {
+            // Peer disconnected: stop decoding, retire without accounting.
+            r.cancelled = true;
+            return;
+        }
+        if r.session.finished {
+            return;
+        }
+    }
+}
+
+/// Final accounting + the terminal event.
+fn retire(shared: &Shared, r: Running) {
+    if r.cancelled {
+        return;
+    }
+    let stats = RequestStats {
+        id: r.session.id as u64,
+        prompt_len: r.session.prompt_len,
+        new_tokens: r.session.new_tokens(),
+        cache_hit: r.cache_hit,
+        ttft_secs: r.ttft_secs.unwrap_or_else(|| r.queued.elapsed().as_secs_f64()),
+        prefill_secs: r.session.prefill_secs,
+        decode_secs: r.session.decode_secs,
+        wall_secs: r.queued.elapsed().as_secs_f64(),
+        generated: r.session.generated().to_vec(),
+    };
+    shared.counters.completed.fetch_add(1, Ordering::Relaxed);
+    shared
+        .counters
+        .tokens_generated
+        .fetch_add(stats.new_tokens as u64, Ordering::Relaxed);
+    let _ = r.events.send(TokenEvent::Done(stats));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::Mechanism;
+    use crate::infer::model::LmConfig;
+    use crate::infer::sampler::SamplePolicy;
+    use std::sync::mpsc::channel;
+
+    fn pool(mech: Mechanism, cfg: WorkerConfig) -> (WorkerPool, Arc<ServeCounters>) {
+        let lm_cfg = LmConfig { vocab: 64, d_model: 32, layers: 2, heads: 2, ff_mult: 2, seed: 2 };
+        let model = Arc::new(NativeLm::new(lm_cfg, mech));
+        let cache = Arc::new(PromptCache::new(16 << 20));
+        let counters = Arc::new(ServeCounters::new());
+        (WorkerPool::new(model, cache, Arc::clone(&counters), cfg), counters)
+    }
+
+    fn req(seed: u64, max_new: usize) -> GenRequest {
+        GenRequest {
+            prompt: vec![0, 9, 4, 17],
+            max_new_tokens: max_new,
+            policy: SamplePolicy::Temperature(0.8),
+            seed,
+        }
+    }
+
+    #[test]
+    fn pool_serves_and_drains() {
+        let (pool, counters) =
+            pool(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true }, WorkerConfig {
+                workers: 3,
+                slice_tokens: 2,
+                max_resident: 4,
+            });
+        let submit = |i: u64| {
+            let (tx, rx) = channel();
+            pool.try_submit(
+                ServeJob { id: i, req: req(i, 5), events: tx, queued: Instant::now() },
+                64,
+            )
+            .ok()
+            .expect("admission under cap");
+            rx
+        };
+        let collect = |rx: std::sync::mpsc::Receiver<TokenEvent>| {
+            let mut tokens = Vec::new();
+            let mut done = None;
+            for ev in rx.iter() {
+                match ev {
+                    TokenEvent::Token { token, .. } => tokens.push(token),
+                    TokenEvent::Done(stats) => done = Some(stats),
+                }
+            }
+            (tokens, done.expect("terminal event"))
+        };
+        // Warm the prompt cache with one request first — submitting all six
+        // cold would let several workers miss concurrently (a real, benign
+        // thundering-herd property, but it would make the counters racy).
+        let (tokens0, stats0) = collect(submit(0));
+        assert_eq!(stats0.new_tokens, 5);
+        assert_eq!(stats0.generated, tokens0);
+        assert!(!stats0.cache_hit);
+        let rxs: Vec<_> = (1..6u64).map(submit).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let (tokens, stats) = collect(rx);
+            assert_eq!(stats.id, i as u64 + 1);
+            assert_eq!(stats.new_tokens, 5);
+            assert_eq!(stats.generated, tokens);
+            assert!(stats.cache_hit, "warm cache must hit");
+            assert!(stats.ttft_secs >= 0.0 && stats.wall_secs >= stats.ttft_secs);
+        }
+        pool.drain();
+        assert_eq!(counters.completed.load(Ordering::Relaxed), 6);
+        assert_eq!(counters.tokens_generated.load(Ordering::Relaxed), 30);
+        // Same prompt 6 times through one mechanism: 1 miss, 5 hits.
+        assert_eq!(counters.cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.cache_hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn try_submit_rejects_over_cap_and_after_drain() {
+        let (pool, _) = pool(Mechanism::Softmax, WorkerConfig {
+            workers: 1,
+            slice_tokens: 1,
+            max_resident: 1,
+        });
+        pool.drain();
+        let (tx, _rx) = channel();
+        let job = ServeJob { id: 0, req: req(0, 1), events: tx, queued: Instant::now() };
+        assert!(pool.try_submit(job, 64).is_err(), "draining pool must reject");
+    }
+
+    #[test]
+    fn disconnected_client_cancels_without_stalling() {
+        let (pool, counters) = pool(Mechanism::Softmax, WorkerConfig {
+            workers: 1,
+            slice_tokens: 1,
+            max_resident: 2,
+        });
+        let (tx, rx) = channel();
+        drop(rx); // peer gone before the first token
+        pool.try_submit(
+            ServeJob { id: 0, req: req(0, 50), events: tx, queued: Instant::now() },
+            64,
+        )
+        .ok()
+        .expect("admission");
+        // A live request behind it must still complete.
+        let (tx2, rx2) = channel();
+        pool.try_submit(
+            ServeJob { id: 1, req: req(1, 3), events: tx2, queued: Instant::now() },
+            64,
+        )
+        .ok()
+        .expect("admission");
+        let done = rx2
+            .iter()
+            .find_map(|ev| match ev {
+                TokenEvent::Done(s) => Some(s),
+                _ => None,
+            })
+            .expect("live request completes");
+        assert_eq!(done.new_tokens, 3);
+        pool.drain();
+        // The cancelled request is not counted as completed.
+        assert_eq!(counters.completed.load(Ordering::Relaxed), 1);
+    }
+}

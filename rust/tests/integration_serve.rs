@@ -1,0 +1,300 @@
+//! Integration tests for the serving gateway (`rust/src/serve/`) — no
+//! artifacts, pure native path, real threads, and (for the last test) a
+//! real TCP socket.
+//!
+//! The two serving-level contracts pinned here, for every mechanism:
+//!
+//! * cache parity — a request served from the prompt-prefix cache returns
+//!   a byte-identical token stream to the cold-path request at matched
+//!   (seed, policy): restoring a constant-size state is indistinguishable
+//!   from re-running the prefill;
+//! * scheduling independence — concurrent multi-worker serving returns
+//!   the same completions as sequential single-slot scheduling: requests
+//!   own their sessions, so thread interleaving can never leak between
+//!   token streams.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use polysketchformer::attn::Mechanism;
+use polysketchformer::infer::{
+    GenRequest, LmConfig, NativeLm, SamplePolicy, Scheduler, SchedulerConfig,
+};
+use polysketchformer::serve::{collect_stream, Gateway, GatewayConfig, Rejected};
+
+fn mechanisms() -> Vec<Mechanism> {
+    vec![
+        Mechanism::Softmax,
+        Mechanism::Flash { block: 8 },
+        Mechanism::Poly { p: 4 },
+        Mechanism::Polysketch { r: 4, p: 4, block: 8, local: false },
+        Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
+        Mechanism::Performer { m: 16, block: 8 },
+    ]
+}
+
+fn lm(mech: Mechanism) -> NativeLm {
+    let cfg = LmConfig { vocab: 64, d_model: 32, layers: 2, heads: 2, ff_mult: 2, seed: 21 };
+    NativeLm::new(cfg, mech)
+}
+
+#[test]
+fn cache_hit_stream_is_byte_identical_for_every_mechanism() {
+    for mech in mechanisms() {
+        let g = Gateway::new(
+            lm(mech.clone()),
+            GatewayConfig { workers: 2, ..GatewayConfig::default() },
+        )
+        .unwrap();
+        let req = |seed| GenRequest {
+            prompt: vec![0, 5, 9, 3, 27, 14, 60, 2, 8, 19, 44],
+            max_new_tokens: 8,
+            policy: SamplePolicy::TopP { p: 0.9, temperature: 0.8 },
+            seed,
+        };
+        let (cold, cold_stats) = collect_stream(g.submit(req(7)).unwrap());
+        let cold_stats = cold_stats.expect("cold done event");
+        assert!(!cold_stats.cache_hit, "{}: first request cannot hit", mech.label());
+        assert_eq!(cold_stats.generated, cold);
+
+        let (warm, warm_stats) = collect_stream(g.submit(req(7)).unwrap());
+        let warm_stats = warm_stats.expect("warm done event");
+        assert!(warm_stats.cache_hit, "{}: repeat prompt must hit", mech.label());
+        assert_eq!(warm_stats.prefill_secs, 0.0, "{}: hit must skip prefill", mech.label());
+        assert_eq!(cold, warm, "{}: cache-hit stream diverged from cold path", mech.label());
+
+        // Same cached prefix, different sampling seed: still a hit, and
+        // the stream is the seed's own, not a replay of the cold one.
+        let (other, other_stats) = collect_stream(g.submit(req(8)).unwrap());
+        assert!(other_stats.expect("done").cache_hit);
+        assert_ne!(other, cold, "{}: seed must drive the stream", mech.label());
+        g.finish().unwrap();
+    }
+}
+
+#[test]
+fn concurrent_multiworker_serving_matches_sequential_scheduling() {
+    // Identical weights (same LmConfig seed), identical requests: the
+    // single-threaded tick-by-tick scheduler is the oracle for the
+    // multi-threaded worker pool.
+    for mech in [
+        Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
+        Mechanism::Softmax,
+    ] {
+        let reqs: Vec<GenRequest> = (0..6u64)
+            .map(|i| GenRequest {
+                // Distinct prompts (and two repeats to also exercise the
+                // cache mid-traffic).
+                prompt: match i {
+                    4 => vec![0, 11, 7],
+                    5 => vec![0, 11, 7],
+                    _ => vec![0, 11, 7 + i as u32 * 5, 30 - i as u32],
+                },
+                max_new_tokens: 7 + (i as usize % 3),
+                policy: SamplePolicy::Temperature(0.85),
+                seed: 500 + i,
+            })
+            .collect();
+
+        let oracle_model = lm(mech.clone());
+        let mut sched = Scheduler::new(
+            &oracle_model,
+            SchedulerConfig { max_concurrent: 1, tick_tokens: 1, ..Default::default() },
+        );
+        for r in &reqs {
+            sched.submit(r.clone());
+        }
+        let summary = sched.run().unwrap();
+        let oracle: Vec<Vec<u32>> = summary
+            .reports
+            .iter()
+            .map(|r| r.tokens[r.prompt_len..].to_vec())
+            .collect();
+
+        let g = Gateway::new(
+            lm(mech.clone()),
+            GatewayConfig { workers: 3, slice_tokens: 2, ..GatewayConfig::default() },
+        )
+        .unwrap();
+        // Submit everything up front so sessions genuinely interleave
+        // across the three workers, then drain the streams.
+        let rxs: Vec<_> = reqs.iter().map(|r| g.submit(r.clone()).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let (tokens, stats) = collect_stream(rx);
+            let stats = stats.expect("done event");
+            assert_eq!(stats.id as usize, i);
+            assert_eq!(
+                tokens,
+                oracle[i],
+                "{}: request {i} diverged between 3-worker serving and sequential scheduling",
+                mech.label()
+            );
+        }
+        g.finish().unwrap();
+    }
+}
+
+#[test]
+fn admission_overflow_rejects_with_queue_full() {
+    let g = Gateway::new(
+        lm(Mechanism::Softmax),
+        GatewayConfig { workers: 1, queue_cap: 1, max_resident: 1, ..GatewayConfig::default() },
+    )
+    .unwrap();
+    // Long prompts make admission slow enough that a burst must overflow
+    // the depth-1 queue; every admitted request still completes.
+    let req = |seed| GenRequest {
+        prompt: (0..200u32).map(|i| i % 60).collect(),
+        max_new_tokens: 4,
+        policy: SamplePolicy::Greedy,
+        seed,
+    };
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..8u64 {
+        match g.submit(req(i)) {
+            Ok(rx) => accepted.push(rx),
+            Err(Rejected::QueueFull) => rejected += 1,
+            Err(Rejected::Draining) => panic!("gateway is not draining"),
+        }
+    }
+    assert!(rejected > 0, "burst of 8 into a depth-1 queue must reject");
+    assert!(!accepted.is_empty());
+    for rx in accepted {
+        let (tokens, stats) = collect_stream(rx);
+        assert_eq!(tokens.len(), 4);
+        assert!(stats.is_some());
+    }
+    g.finish().unwrap();
+    let rej = g.counters.rejected.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(rej as usize, rejected);
+}
+
+// ------------------------------------------------------------ HTTP layer
+
+/// Minimal HTTP client: one request, read to EOF (server closes per
+/// connection), return the raw response (headers + chunked body).
+fn http_request(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    )
+    .unwrap();
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).expect("read response");
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Extract the `"token":N` stream from a (possibly chunked) response body.
+/// Each token line is emitted as one complete chunk, so the pattern is
+/// never split across chunk framing.
+fn token_stream(resp: &str) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut rest = resp;
+    while let Some(pos) = rest.find("\"token\":") {
+        rest = &rest[pos + "\"token\":".len()..];
+        let digits: String = rest.chars().take_while(char::is_ascii_digit).collect();
+        if let Ok(v) = digits.parse() {
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[test]
+fn http_end_to_end_cached_equals_uncached() {
+    let g = Arc::new(
+        Gateway::new(
+            lm(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true }),
+            GatewayConfig {
+                addr: "127.0.0.1:0".into(),
+                workers: 2,
+                max_requests: 2,
+                ..GatewayConfig::default()
+            },
+        )
+        .unwrap(),
+    );
+    let server = {
+        let g = Arc::clone(&g);
+        std::thread::spawn(move || g.run_http())
+    };
+    let t0 = Instant::now();
+    let addr = loop {
+        if let Some(a) = g.http_addr() {
+            break a;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "server did not bind");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+
+    let health = http_request(addr, "GET", "/healthz", "");
+    assert!(health.starts_with("HTTP/1.1 200"), "{health}");
+    assert!(health.contains("\"ok\":true"), "{health}");
+
+    let body = r#"{"prompt":"the polynomial kernel","max_tokens":12,"policy":"greedy","seed":3}"#;
+    let cold = http_request(addr, "POST", "/v1/generate", body);
+    assert!(cold.starts_with("HTTP/1.1 200"), "{cold}");
+    assert!(cold.contains("Transfer-Encoding: chunked"), "{cold}");
+    assert!(cold.contains("\"cache_hit\":false"), "{cold}");
+    let warm = http_request(addr, "POST", "/v1/generate", body);
+    assert!(warm.contains("\"cache_hit\":true"), "{warm}");
+
+    let cold_tokens = token_stream(&cold);
+    let warm_tokens = token_stream(&warm);
+    assert_eq!(cold_tokens.len(), 12);
+    assert_eq!(cold_tokens, warm_tokens, "cached and uncached streams must be identical");
+
+    // max_requests = 2 -> the server drains and the thread joins cleanly.
+    server.join().expect("server thread panicked").expect("run_http failed");
+}
+
+#[test]
+fn http_error_paths() {
+    let g = Arc::new(
+        Gateway::new(
+            lm(Mechanism::Performer { m: 16, block: 8 }),
+            GatewayConfig {
+                addr: "127.0.0.1:0".into(),
+                workers: 1,
+                max_requests: 1,
+                ..GatewayConfig::default()
+            },
+        )
+        .unwrap(),
+    );
+    let server = {
+        let g = Arc::clone(&g);
+        std::thread::spawn(move || g.run_http())
+    };
+    let t0 = Instant::now();
+    let addr = loop {
+        if let Some(a) = g.http_addr() {
+            break a;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "server did not bind");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+
+    assert!(http_request(addr, "GET", "/nope", "").starts_with("HTTP/1.1 404"));
+    assert!(http_request(addr, "DELETE", "/v1/generate", "").starts_with("HTTP/1.1 405"));
+    assert!(http_request(addr, "POST", "/v1/generate", "{}").starts_with("HTTP/1.1 400"));
+    assert!(http_request(addr, "POST", "/v1/generate", "not json").starts_with("HTTP/1.1 400"));
+    let metrics = http_request(addr, "GET", "/metrics", "");
+    assert!(metrics.contains("\"kind\":\"serve_metrics\""), "{metrics}");
+
+    // One successful generate trips max_requests and shuts the server down.
+    let ok = http_request(
+        addr,
+        "POST",
+        "/v1/generate",
+        r#"{"prompt":"x","max_tokens":3}"#,
+    );
+    assert!(ok.contains("\"done\":true"), "{ok}");
+    server.join().expect("server thread panicked").expect("run_http failed");
+}

@@ -11,6 +11,7 @@ use polysketchformer::coordinator::dataparallel::shard_stream;
 use polysketchformer::coordinator::gen_cloze_questions;
 use polysketchformer::data::batcher::{split_stream, Batcher};
 use polysketchformer::data::bpe::Bpe;
+use polysketchformer::infer::SamplePolicy;
 use polysketchformer::prop::{check, close, ensure};
 use polysketchformer::tensor::{layernorm_rows, Tensor};
 use polysketchformer::util::rng::Pcg;
@@ -288,6 +289,91 @@ fn prop_flash_matches_naive_softmax() {
         let b = polysketchformer::attn::softmax::flash_attention(&q, &k, &v, block);
         for (x, y) in a.data().iter().zip(b.data()) {
             ensure(close(*x, *y, 1e-4), format!("{x} vs {y}"))?;
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- sampling
+
+#[test]
+fn prop_top_p_never_samples_outside_nucleus() {
+    // Recompute the nucleus with an independent oracle (same tie-breaking
+    // rule: probability-descending, stop at the first crossing of p) and
+    // check every draw lands inside it.
+    check("top-p stays in nucleus", 40, |rng, size| {
+        let n = 2 + size % 30;
+        let logits: Vec<f32> = (0..n).map(|_| rng.gaussian() * 3.0).collect();
+        let p = 0.05 + rng.f32() * 0.9;
+        let t = 0.2 + rng.f32() * 1.5;
+        // Oracle softmax at temperature t.
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|&l| ((l - mx) / t).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        let probs: Vec<f32> = exps.iter().map(|e| e / sum).collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let mut nucleus = vec![false; n];
+        let mut mass = 0.0f32;
+        for &i in &order {
+            nucleus[i] = true;
+            mass += probs[i];
+            if mass >= p {
+                break;
+            }
+        }
+        let policy = SamplePolicy::TopP { p, temperature: t };
+        let mut draw_rng = Pcg::seeded(rng.next_u64());
+        for _ in 0..64 {
+            let s = policy.sample(&logits, &mut draw_rng);
+            ensure(nucleus[s], format!("sampled {s} outside nucleus (p={p}, t={t})"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_top_k_never_samples_outside_k_best() {
+    check("top-k stays in k best", 40, |rng, size| {
+        let n = 2 + size % 30;
+        let logits: Vec<f32> = (0..n).map(|_| rng.gaussian() * 3.0).collect();
+        let k = 1 + rng.usize_below(n);
+        let mut sorted = logits.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let thresh = sorted[k - 1];
+        let policy = SamplePolicy::TopK { k, temperature: 0.7 };
+        let mut draw_rng = Pcg::seeded(rng.next_u64());
+        for _ in 0..64 {
+            let s = policy.sample(&logits, &mut draw_rng);
+            ensure(
+                logits[s] >= thresh,
+                format!("sampled logit {} below k-th best {thresh} (k={k})", logits[s]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sampling_is_seed_deterministic_across_policies() {
+    // The serving determinism contract at the sampler level: a (seed,
+    // logits, policy) triple replays the identical draw sequence.
+    check("sampler seed determinism", 30, |rng, size| {
+        let n = 2 + size % 40;
+        let logits: Vec<f32> = (0..n).map(|_| rng.gaussian() * 2.0).collect();
+        let seed = rng.next_u64();
+        let policies = [
+            SamplePolicy::Greedy,
+            SamplePolicy::Temperature(0.8),
+            SamplePolicy::TopK { k: 1 + n / 2, temperature: 0.9 },
+            SamplePolicy::TopP { p: 0.85, temperature: 1.1 },
+        ];
+        for policy in policies {
+            let draw = |seed: u64| {
+                let mut r = Pcg::seeded(seed);
+                (0..16).map(|_| policy.sample(&logits, &mut r)).collect::<Vec<_>>()
+            };
+            ensure(draw(seed) == draw(seed), format!("{policy:?} not replayable"))?;
         }
         Ok(())
     });
