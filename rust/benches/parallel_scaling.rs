@@ -1,0 +1,212 @@
+//! Parallel scaling — wall time of the serving hot paths vs thread count.
+//!
+//! The backend (`exec::pool`) guarantees bitwise identical results at any
+//! thread count, so this bench measures the only thing threads are
+//! allowed to change: wall time.  Three cases per thread count:
+//!
+//!   * `prefill`        — one full-context forward (32k tokens in full
+//!                        mode) through the padded, head-parallel,
+//!                        tile-parallel prefill path;
+//!   * `batched_decode` — the continuous-batching scheduler draining
+//!                        concurrent sessions (per-session parallel
+//!                        stepping);
+//!   * `serve_load`     — the multi-worker serving pool completing a
+//!                        closed batch of requests end to end.
+//!
+//! Results print as a table and persist to
+//! `bench_out/parallel_scaling.json` with per-case speedups vs 1 thread.
+//! In every mode the bench self-checks that max threads is not slower
+//! than 1 thread on the prefill case (with generous noise slack) and
+//! fails loudly otherwise — the CI smoke gate.
+
+use std::fmt::Write as _;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use polysketchformer::attn::Mechanism;
+use polysketchformer::bench::{banner, out_dir, Mode, Table};
+use polysketchformer::exec::pool;
+use polysketchformer::infer::{
+    GenRequest, LmConfig, NativeLm, SamplePolicy, Scheduler, SchedulerConfig,
+};
+use polysketchformer::metrics::{Record, ServeCounters};
+use polysketchformer::serve::{PromptCache, ServeJob, TokenEvent, WorkerConfig, WorkerPool};
+
+fn main() -> anyhow::Result<()> {
+    let mode = Mode::from_env();
+    banner("parallel_scaling", "threads x {prefill, batched decode, serve load}", mode);
+
+    let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut threads: Vec<usize> = [1usize, 2, 4, 8, max_threads]
+        .into_iter()
+        .filter(|&t| t <= max_threads)
+        .collect();
+    threads.sort_unstable();
+    threads.dedup();
+
+    // The acceptance-criterion configuration: 32k-context polysketch.
+    let prefill_ctx = mode.pick(2048, 8192, 32_768);
+    let decode_sessions = mode.pick(4, 8, 8);
+    let decode_tokens = mode.pick(8, 24, 48);
+    let serve_requests = mode.pick(4, 12, 24);
+    let serve_tokens = mode.pick(6, 12, 24);
+
+    let mech = Mechanism::parse("psk4_r16_b64_local").expect("bench mechanism");
+    let cfg = LmConfig { d_model: 64, layers: 2, heads: 4, ..LmConfig::default() };
+    let model = Arc::new(NativeLm::new(cfg.clone(), mech.clone()));
+    let prefill_prompt: Vec<u32> =
+        (0..prefill_ctx).map(|i| (i as u32).wrapping_mul(2654435761) % 257).collect();
+
+    let cases = ["prefill", "batched_decode", "serve_load"];
+    let mut table = Table::new(
+        &format!("wall seconds vs threads ({}, d=64 L=2 H=4)", mech.label()),
+        "case",
+        threads.iter().map(|t| format!("t={t}")).collect(),
+    );
+    let mut records: Vec<Record> = Vec::new();
+    // secs[case][thread_idx]
+    let mut secs: Vec<Vec<f64>> = vec![Vec::new(); cases.len()];
+
+    for &t in &threads {
+        pool::set_threads(t);
+
+        // -- prefill ----------------------------------------------------
+        // Min over a few repetitions: the CI gate compares thread counts
+        // on this number, and a single sample on a shared runner flakes.
+        let reps = mode.pick(3, 2, 1);
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let logits = model.forward(&prefill_prompt);
+            best = best.min(t0.elapsed().as_secs_f64());
+            assert!(logits.data().iter().all(|x| x.is_finite()));
+        }
+        secs[0].push(best);
+
+        // -- batched decode --------------------------------------------
+        let sched_cfg = SchedulerConfig { max_concurrent: 4, tick_tokens: 16, ..Default::default() };
+        let mut sched = Scheduler::new(&model, sched_cfg);
+        for i in 0..decode_sessions {
+            sched.submit(GenRequest {
+                prompt: prefill_prompt[..256.min(prefill_prompt.len())].to_vec(),
+                max_new_tokens: decode_tokens,
+                policy: SamplePolicy::Greedy,
+                seed: i as u64,
+            });
+        }
+        let t0 = Instant::now();
+        let summary = sched.run()?;
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(summary.reports.len(), decode_sessions);
+        secs[1].push(dt);
+
+        // -- serve load -------------------------------------------------
+        let cache = Arc::new(PromptCache::new(64 << 20));
+        let counters = Arc::new(ServeCounters::new());
+        let wp = WorkerPool::new(
+            Arc::clone(&model),
+            cache,
+            Arc::clone(&counters),
+            WorkerConfig { workers: 2, slice_tokens: 4, max_resident: 8 },
+        );
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..serve_requests)
+            .map(|i| {
+                let (tx, rx) = channel();
+                wp.try_submit(
+                    ServeJob {
+                        id: i as u64,
+                        req: GenRequest {
+                            // Vary prompts so serve load measures prefill
+                            // throughput, not pure cache hits.
+                            prompt: prefill_prompt
+                                [(i * 16) % 512..(i * 16) % 512 + 128]
+                                .to_vec(),
+                            max_new_tokens: serve_tokens,
+                            policy: SamplePolicy::Greedy,
+                            seed: i as u64,
+                        },
+                        events: tx,
+                        queued: Instant::now(),
+                    },
+                    1024,
+                )
+                .ok()
+                .expect("admission under cap");
+                rx
+            })
+            .collect();
+        for rx in rxs {
+            let done = rx.iter().any(|ev| matches!(ev, TokenEvent::Done(_)));
+            assert!(done, "request must complete");
+        }
+        wp.drain();
+        let dt = t0.elapsed().as_secs_f64();
+        secs[2].push(dt);
+
+        for (ci, case) in cases.iter().enumerate() {
+            records.push(
+                Record::new()
+                    .str("case", case)
+                    .str("mech", mech.label())
+                    .i64("threads", t as i64)
+                    .i64("prefill_ctx", prefill_ctx as i64)
+                    .f64("secs", secs[ci][secs[ci].len() - 1]),
+            );
+        }
+    }
+    pool::set_threads(pool::default_threads());
+
+    for (ci, case) in cases.iter().enumerate() {
+        table.row(
+            case,
+            secs[ci]
+                .iter()
+                .map(|&s| format!("{s:.3}s ({:.2}x)", secs[ci][0] / s.max(1e-12)))
+                .collect(),
+        );
+    }
+    print!("{}", table.render());
+    println!("csv: {}", table.save_csv("parallel_scaling")?.display());
+
+    // JSON artifact (hand-rolled like the other benches; no serde here).
+    let mut json = String::from("{\n  \"bench\": \"parallel_scaling\",\n");
+    let _ = writeln!(json, "  \"mode\": \"{mode:?}\",");
+    let _ = writeln!(json, "  \"mech\": \"{}\",", mech.label());
+    let _ = writeln!(
+        json,
+        "  \"model\": {{\"d_model\": {}, \"layers\": {}, \"heads\": {}}},",
+        cfg.d_model, cfg.layers, cfg.heads
+    );
+    let _ = writeln!(json, "  \"max_threads\": {max_threads},");
+    json.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        let _ = write!(json, "    {}", r.to_json());
+        json.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    let dir = out_dir();
+    std::fs::create_dir_all(&dir)?;
+    let json_path = dir.join("parallel_scaling.json");
+    std::fs::write(&json_path, json)?;
+    println!("json: {}", json_path.display());
+
+    // Self-check (the CI gate): threads=max must not be slower than
+    // threads=1 on prefill.  0.8 slack absorbs timer noise; on a 1-core
+    // runner the sweep is a single point and the check is vacuous.
+    let t1 = secs[0][0];
+    let tmax = *secs[0].last().unwrap();
+    let speedup = t1 / tmax.max(1e-12);
+    if threads.len() > 1 && speedup < 0.8 {
+        anyhow::bail!(
+            "PARALLEL_SCALING_CHECK fail: prefill at {} threads is {speedup:.2}x vs 1 thread",
+            threads.last().unwrap()
+        );
+    }
+    println!(
+        "PARALLEL_SCALING_CHECK pass: prefill speedup {speedup:.2}x at {} threads (ctx {prefill_ctx})",
+        threads.last().unwrap()
+    );
+    Ok(())
+}

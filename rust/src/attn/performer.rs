@@ -1,8 +1,13 @@
 //! Performer (FAVOR+) baseline: positive orthogonal random features.
 
+use crate::exec::pool;
 use crate::tensor::{dot, Tensor};
 use crate::util::rng::Pcg;
 use crate::attn::block_lt::linear_attention_block;
+
+/// Output elements (n · m) below which the feature map runs inline —
+/// cheap per element, so the gate sits lower than the matmul family's.
+const PAR_MIN_WORK: usize = 16 * 1024;
 
 /// Positive random-feature map for the exponential kernel.
 #[derive(Clone, Debug)]
@@ -49,20 +54,30 @@ impl PerformerFeatures {
     }
 
     /// phi(x) = exp(w^T x - ||x||^2 / 2) / sqrt(m): (n, h) -> (n, m).
+    /// Row-parallel (rows are independent; bitwise thread-count invariant).
     pub fn apply(&self, x: &Tensor) -> Tensor {
         let (n, h) = (x.rows(), x.cols());
         assert_eq!(h, self.w.rows());
         let m = self.w.cols();
         let proj = x.matmul(&self.w);
         let mut out = Tensor::zeros(&[n, m]);
+        if out.is_empty() {
+            return out;
+        }
         let scale = 1.0 / (m as f32).sqrt();
-        for i in 0..n {
-            let sq = 0.5 * dot(x.row(i), x.row(i));
-            let prow = proj.row(i);
-            let orow = out.row_mut(i);
-            for j in 0..m {
-                orow[j] = (prow[j] - sq).exp() * scale;
+        let kernel = |row0: usize, chunk: &mut [f32]| {
+            for (r, orow) in chunk.chunks_mut(m).enumerate() {
+                let i = row0 + r;
+                let sq = 0.5 * dot(x.row(i), x.row(i));
+                for (o, &p) in orow.iter_mut().zip(proj.row(i)) {
+                    *o = (p - sq).exp() * scale;
+                }
             }
+        };
+        if n * m < PAR_MIN_WORK {
+            kernel(0, out.data_mut());
+        } else {
+            pool::par_row_chunks(out.data_mut(), m, 8, kernel);
         }
         out
     }

@@ -1,6 +1,11 @@
 //! Exact degree-p polynomial attention (Section 2.1) — quadratic baseline.
 
+use crate::exec::pool;
 use crate::tensor::{axpy, dot, layernorm_rows, Tensor};
+
+/// Quadratic work (n² · h MACs) below which the kernel runs inline —
+/// the same tuning knob family as `attn::softmax::PAR_MIN_WORK`.
+const PAR_MIN_WORK: usize = 32 * 1024;
 
 /// Raise to integer power by repeated squaring over f32.
 #[inline]
@@ -29,22 +34,35 @@ pub fn poly_attention(q: &Tensor, k: &Tensor, v: &Tensor, p: u32) -> Tensor {
 }
 
 /// Same but assumes q/k already normalized (hot path for block composition).
+/// Query-row parallel on the deterministic backend: rows are independent,
+/// so bytes never depend on the thread count.
 pub fn poly_attention_prenormed(qn: &Tensor, kn: &Tensor, v: &Tensor, p: u32) -> Tensor {
     let n = qn.rows();
-    let mut out = Tensor::zeros(&[n, v.cols()]);
-    for i in 0..n {
-        let qi = qn.row(i);
-        let mut denom = 1.0f32;
-        let orow = out.row_mut(i);
-        for j in 0..=i {
-            let w = powi(dot(qi, kn.row(j)), p);
-            denom += w;
-            axpy(orow, v.row(j), w);
+    let hv = v.cols();
+    let mut out = Tensor::zeros(&[n, hv]);
+    if out.is_empty() {
+        return out;
+    }
+    let kernel = |row0: usize, chunk: &mut [f32]| {
+        for (r, orow) in chunk.chunks_mut(hv).enumerate() {
+            let i = row0 + r;
+            let qi = qn.row(i);
+            let mut denom = 1.0f32;
+            for j in 0..=i {
+                let w = powi(dot(qi, kn.row(j)), p);
+                denom += w;
+                axpy(orow, v.row(j), w);
+            }
+            let inv = 1.0 / denom;
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
         }
-        let inv = 1.0 / denom;
-        for o in orow.iter_mut() {
-            *o *= inv;
-        }
+    };
+    if n * n * qn.cols() < PAR_MIN_WORK {
+        kernel(0, out.data_mut());
+    } else {
+        pool::par_row_chunks(out.data_mut(), hv, 4, kernel);
     }
     out
 }

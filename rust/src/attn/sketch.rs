@@ -5,8 +5,13 @@
 //! property tests in this module assert the paper's guarantees (Theorem 1.1
 //! non-negativity, AMM error decay with r).
 
-use crate::tensor::Tensor;
+use crate::exec::pool;
+use crate::tensor::{axpy, Tensor};
 use crate::util::rng::Pcg;
+
+/// Output elements (n · r²) below which `self_tensor_rows` runs inline —
+/// cheap per element, so the gate sits lower than the matmul family's.
+const PAR_MIN_WORK: usize = 16 * 1024;
 
 /// Number of Gaussian matrices PolySketchWithNegativity(., r, p) consumes:
 /// count(p) = 2 (p - 1); the non-negative map of degree p consumes p - 2.
@@ -69,11 +74,70 @@ impl PolySketch {
     }
 
     /// Half sketch of a single (already-normalized) row: (h,) -> (r,).
-    /// The per-token hot path of the decoding subsystem (`infer::state`);
-    /// row-wise identical to [`PolySketch::half`] on a one-row tensor.
+    /// Bitwise row-wise identical to [`PolySketch::half`] on a one-row
+    /// tensor.  Convenience wrapper over [`PolySketch::half_row_scratch`]
+    /// with throwaway scratch — the decode hot path holds a
+    /// [`HalfRowScratch`] instead and skips the per-call allocations.
     pub fn half_row(&self, row: &[f32]) -> Vec<f32> {
-        let t = Tensor::from_vec(&[1, row.len()], row.to_vec());
-        self.half(&t).into_vec()
+        self.half_row_scratch(row, &mut HalfRowScratch::default())
+    }
+
+    /// [`PolySketch::half_row`] with caller-owned scratch: the recursion's
+    /// intermediates live in `scratch` and are reused across calls, so the
+    /// per-token × layer × head decode path allocates only the returned
+    /// sketch row.  Same Gaussian-consumption order, same operation order
+    /// (including the matmul zero-skip) as the tensor path — the parity
+    /// test pins bitwise equality with [`PolySketch::half`].
+    pub fn half_row_scratch(&self, row: &[f32], scratch: &mut HalfRowScratch) -> Vec<f32> {
+        let d = self.p / 2;
+        if d == 1 {
+            return row.to_vec();
+        }
+        // 3 buffers (two child results + one projection temp) per level.
+        let levels = d.trailing_zeros() as usize;
+        if scratch.bufs.len() < 3 * levels {
+            scratch.bufs.resize_with(3 * levels, Vec::new);
+        }
+        let mut out = vec![0.0f32; self.r];
+        self.pswn_row(row, &self.gs, d, &mut scratch.bufs, &mut out);
+        out
+    }
+
+    /// Row twin of [`PolySketch::pswn`]: out = PolySketchWithNegativity of
+    /// one row at degree `d`, using `scratch` (>= 3·log2(d) buffers) for
+    /// intermediates.
+    fn pswn_row(&self, a: &[f32], gs: &[Tensor], d: usize, scratch: &mut [Vec<f32>], out: &mut [f32]) {
+        debug_assert!(d >= 2 && d.is_power_of_two());
+        let n_sub = num_projections(d / 2);
+        let g1 = &gs[2 * n_sub];
+        let g2 = &gs[2 * n_sub + 1];
+        let (head, tail) = scratch.split_at_mut(3);
+        let (c1, rest) = head.split_first_mut().expect("scratch level");
+        let (c2, rest) = rest.split_first_mut().expect("scratch level");
+        let tmp = &mut rest[0];
+        let (m1, m2): (&[f32], &[f32]) = if d == 2 {
+            // Children are the degree-1 base case: the row itself.
+            (a, a)
+        } else {
+            c1.clear();
+            c1.resize(self.r, 0.0);
+            self.pswn_row(a, &gs[..n_sub], d / 2, tail, c1);
+            c2.clear();
+            c2.resize(self.r, 0.0);
+            self.pswn_row(a, &gs[n_sub..2 * n_sub], d / 2, tail, c2);
+            (c1.as_slice(), c2.as_slice())
+        };
+        // out = (m1 @ g1) ⊙ (m2 @ g2) · r^{-1/2}, in exactly the tensor
+        // path's operation order: matmul rows accumulate in column order
+        // with the zero-skip, hadamard multiplies, scale multiplies last.
+        tmp.clear();
+        tmp.resize(self.r, 0.0);
+        matvec(m1, g1, out);
+        matvec(m2, g2, tmp);
+        let s = 1.0 / (self.r as f32).sqrt();
+        for (o, &t) in out.iter_mut().zip(tmp.iter()) {
+            *o = (*o * t) * s;
+        }
     }
 
     fn pswn(&self, a: &Tensor, gs: &[Tensor], d: usize) -> Tensor {
@@ -90,19 +154,49 @@ impl PolySketch {
     }
 }
 
-/// Row-wise self Kronecker product: (n, r) -> (n, r^2).
+/// Reusable intermediates for [`PolySketch::half_row_scratch`].  Contents
+/// are overwritten before every read, so cloning (decode states are
+/// `Clone` for the prompt cache) just carries capacity, never data.
+#[derive(Clone, Debug, Default)]
+pub struct HalfRowScratch {
+    bufs: Vec<Vec<f32>>,
+}
+
+/// out = a @ g for one row — the m=1 case of `tensor::matmul_into`, with
+/// the identical accumulation order and zero-skip (bitwise parity).
+fn matvec(a: &[f32], g: &Tensor, out: &mut [f32]) {
+    out.fill(0.0);
+    for (c, &av) in a.iter().enumerate() {
+        if av == 0.0 {
+            continue;
+        }
+        axpy(out, g.row(c), av);
+    }
+}
+
+/// Row-wise self Kronecker product: (n, r) -> (n, r^2).  Row-parallel;
+/// rows are independent so bytes never depend on the thread count.
 pub fn self_tensor_rows(m: &Tensor) -> Tensor {
     let (n, r) = (m.rows(), m.cols());
     let mut out = Tensor::zeros(&[n, r * r]);
-    for i in 0..n {
-        let row = m.row(i);
-        let orow = out.row_mut(i);
-        for a in 0..r {
-            let ra = row[a];
-            for b in 0..r {
-                orow[a * r + b] = ra * row[b];
+    if out.is_empty() {
+        return out;
+    }
+    let kernel = |row0: usize, chunk: &mut [f32]| {
+        for (i, orow) in chunk.chunks_mut(r * r).enumerate() {
+            let row = m.row(row0 + i);
+            for a in 0..r {
+                let ra = row[a];
+                for b in 0..r {
+                    orow[a * r + b] = ra * row[b];
+                }
             }
         }
+    };
+    if n * r * r < PAR_MIN_WORK {
+        kernel(0, out.data_mut());
+    } else {
+        pool::par_row_chunks(out.data_mut(), r * r, 8, kernel);
     }
     out
 }
@@ -217,6 +311,25 @@ mod tests {
         let full = sk.half(&x);
         for i in 0..6 {
             assert_eq!(sk.half_row(x.row(i)).as_slice(), full.row(i));
+        }
+    }
+
+    #[test]
+    fn half_row_scratch_reuse_bitwise_matches_half() {
+        // The decode hot path reuses one scratch across every token: the
+        // reused-buffer results must stay bitwise equal to the tensor
+        // path, at every degree the recursion exercises (p = 2 is the
+        // d == 1 base case, p = 8 recurses two levels).
+        let mut rng = Pcg::seeded(6);
+        for p in [2usize, 4, 8] {
+            let sk = PolySketch::sample(&mut rng, 8, 8, p);
+            let x = Tensor::gaussian(&mut rng, &[7, 8]);
+            let full = sk.half(&x);
+            let mut scratch = HalfRowScratch::default();
+            for i in 0..7 {
+                let got = sk.half_row_scratch(x.row(i), &mut scratch);
+                assert_eq!(got.as_slice(), full.row(i), "p={p} row {i}");
+            }
         }
     }
 

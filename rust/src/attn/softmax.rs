@@ -1,32 +1,53 @@
 //! Softmax attention baselines: naive O(n^2) and FlashAttention-style
 //! blocked streaming (the paper's speed baseline in Figures 1/4, Table 4).
+//!
+//! Both kernels are query-row (resp. query-block) parallel on the
+//! deterministic backend (`exec::pool`): each output row depends only on
+//! its own scores/accumulators, so the partition changes wall time, never
+//! bytes.
 
+use crate::exec::pool;
 use crate::tensor::{axpy, dot, Tensor};
 
+/// Quadratic work (n² · h MACs) below which the kernels run inline.
+const PAR_MIN_WORK: usize = 32 * 1024;
+
 /// Naive causal softmax attention; materializes each score row.
+/// Row-parallel: rows are independent (private score buffer per chunk).
 pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
     let (n, h) = (q.rows(), q.cols());
     assert_eq!(k.rows(), n);
     assert_eq!(v.rows(), n);
+    let hv = v.cols();
     let scale = 1.0 / (h as f32).sqrt();
-    let mut out = Tensor::zeros(&[n, v.cols()]);
-    let mut scores = vec![0.0f32; n];
-    for i in 0..n {
-        let qi = q.row(i);
-        let mut mx = f32::NEG_INFINITY;
-        for j in 0..=i {
-            scores[j] = dot(qi, k.row(j)) * scale;
-            mx = mx.max(scores[j]);
+    let mut out = Tensor::zeros(&[n, hv]);
+    if out.is_empty() {
+        return out;
+    }
+    let kernel = |row0: usize, chunk: &mut [f32]| {
+        let mut scores = vec![0.0f32; n];
+        for (r, orow) in chunk.chunks_mut(hv).enumerate() {
+            let i = row0 + r;
+            let qi = q.row(i);
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..=i {
+                scores[j] = dot(qi, k.row(j)) * scale;
+                mx = mx.max(scores[j]);
+            }
+            let mut sum = 0.0;
+            for s in scores[..=i].iter_mut() {
+                *s = (*s - mx).exp();
+                sum += *s;
+            }
+            for j in 0..=i {
+                axpy(orow, v.row(j), scores[j] / sum);
+            }
         }
-        let mut sum = 0.0;
-        for j in 0..=i {
-            scores[j] = (scores[j] - mx).exp();
-            sum += scores[j];
-        }
-        let orow = out.row_mut(i);
-        for j in 0..=i {
-            axpy(orow, v.row(j), scores[j] / sum);
-        }
+    };
+    if n * n * h < PAR_MIN_WORK {
+        kernel(0, out.data_mut());
+    } else {
+        pool::par_row_chunks(out.data_mut(), hv, 4, kernel);
     }
     out
 }
@@ -39,67 +60,113 @@ pub fn flash_attention(q: &Tensor, k: &Tensor, v: &Tensor, block: usize) -> Tens
     let (n, h) = (q.rows(), q.cols());
     let hv = v.cols();
     assert!(n % block == 0, "n={} % block={} != 0", n, block);
-    let scale = 1.0 / (h as f32).sqrt();
-    let nb = n / block;
     let mut out = Tensor::zeros(&[n, hv]);
-
-    let mut m = vec![f32::NEG_INFINITY; block];
-    let mut s = vec![0.0f32; block];
-    let mut acc = vec![0.0f32; block * hv];
-    let mut tile = vec![0.0f32; block * block];
-
-    for qb in 0..nb {
-        m.fill(f32::NEG_INFINITY);
-        s.fill(0.0);
-        acc.fill(0.0);
-        let q0 = qb * block;
-        for kb in 0..=qb {
-            let k0 = kb * block;
-            // score tile
-            for bi in 0..block {
-                let qi = q.row(q0 + bi);
-                let trow = &mut tile[bi * block..(bi + 1) * block];
-                for bj in 0..block {
-                    let j = k0 + bj;
-                    trow[bj] = if j <= q0 + bi { dot(qi, k.row(j)) * scale } else { f32::NEG_INFINITY };
-                }
-            }
-            // online rescale + accumulate
-            for bi in 0..block {
-                let trow = &tile[bi * block..(bi + 1) * block];
-                let row_max = trow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let m_new = m[bi].max(row_max);
-                if m_new == f32::NEG_INFINITY {
-                    continue;
-                }
-                let corr = if m[bi] == f32::NEG_INFINITY { 0.0 } else { (m[bi] - m_new).exp() };
-                let arow = &mut acc[bi * hv..(bi + 1) * hv];
-                for x in arow.iter_mut() {
-                    *x *= corr;
-                }
-                let mut local_sum = 0.0;
-                for bj in 0..block {
-                    if trow[bj] == f32::NEG_INFINITY {
-                        continue;
-                    }
-                    let p = (trow[bj] - m_new).exp();
-                    local_sum += p;
-                    axpy(arow, v.row(k0 + bj), p);
-                }
-                s[bi] = s[bi] * corr + local_sum;
-                m[bi] = m_new;
-            }
+    if out.is_empty() {
+        return out;
+    }
+    // Query blocks are independent (online max/sum state is per q-block),
+    // so chunks of q-blocks parallelize with identical per-block math.
+    // Scratch is allocated once per chunk, not per block, to keep the
+    // hot path's allocation count flat.
+    let kernel = |qb0: usize, chunk: &mut [f32]| {
+        let mut scratch = FlashScratch::new(block, hv);
+        for (r, orows) in chunk.chunks_mut(block * hv).enumerate() {
+            flash_query_block(q, k, v, block, qb0 + r, orows, &mut scratch);
         }
-        for bi in 0..block {
-            let orow = out.row_mut(q0 + bi);
-            let arow = &acc[bi * hv..(bi + 1) * hv];
-            let inv = 1.0 / s[bi];
-            for (o, a) in orow.iter_mut().zip(arow) {
-                *o = a * inv;
-            }
-        }
+    };
+    if n * n * h < PAR_MIN_WORK {
+        kernel(0, out.data_mut());
+    } else {
+        pool::par_row_chunks(out.data_mut(), block * hv, 1, kernel);
     }
     out
+}
+
+/// Per-chunk scratch of the flash recurrence (reset per query block).
+struct FlashScratch {
+    m: Vec<f32>,
+    s: Vec<f32>,
+    acc: Vec<f32>,
+    tile: Vec<f32>,
+}
+
+impl FlashScratch {
+    fn new(block: usize, hv: usize) -> FlashScratch {
+        FlashScratch {
+            m: vec![f32::NEG_INFINITY; block],
+            s: vec![0.0f32; block],
+            acc: vec![0.0f32; block * hv],
+            tile: vec![0.0f32; block * block],
+        }
+    }
+}
+
+/// One query block of the online-softmax recurrence; writes the block's
+/// `block x hv` output rows.
+fn flash_query_block(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    block: usize,
+    qb: usize,
+    orows: &mut [f32],
+    scratch: &mut FlashScratch,
+) {
+    let h = q.cols();
+    let hv = v.cols();
+    let scale = 1.0 / (h as f32).sqrt();
+
+    let FlashScratch { m, s, acc, tile } = scratch;
+    m.fill(f32::NEG_INFINITY);
+    s.fill(0.0);
+    acc.fill(0.0);
+
+    let q0 = qb * block;
+    for kb in 0..=qb {
+        let k0 = kb * block;
+        // score tile
+        for bi in 0..block {
+            let qi = q.row(q0 + bi);
+            let trow = &mut tile[bi * block..(bi + 1) * block];
+            for bj in 0..block {
+                let j = k0 + bj;
+                trow[bj] = if j <= q0 + bi { dot(qi, k.row(j)) * scale } else { f32::NEG_INFINITY };
+            }
+        }
+        // online rescale + accumulate
+        for bi in 0..block {
+            let trow = &tile[bi * block..(bi + 1) * block];
+            let row_max = trow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let m_new = m[bi].max(row_max);
+            if m_new == f32::NEG_INFINITY {
+                continue;
+            }
+            let corr = if m[bi] == f32::NEG_INFINITY { 0.0 } else { (m[bi] - m_new).exp() };
+            let arow = &mut acc[bi * hv..(bi + 1) * hv];
+            for x in arow.iter_mut() {
+                *x *= corr;
+            }
+            let mut local_sum = 0.0;
+            for bj in 0..block {
+                if trow[bj] == f32::NEG_INFINITY {
+                    continue;
+                }
+                let p = (trow[bj] - m_new).exp();
+                local_sum += p;
+                axpy(arow, v.row(k0 + bj), p);
+            }
+            s[bi] = s[bi] * corr + local_sum;
+            m[bi] = m_new;
+        }
+    }
+    for bi in 0..block {
+        let orow = &mut orows[bi * hv..(bi + 1) * hv];
+        let arow = &acc[bi * hv..(bi + 1) * hv];
+        let inv = 1.0 / s[bi];
+        for (o, a) in orow.iter_mut().zip(arow) {
+            *o = a * inv;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +186,22 @@ mod tests {
             let b = flash_attention(&q, &k, &v, block);
             assert!(a.max_abs_diff(&b) < 1e-4, "block {block}");
         }
+    }
+
+    #[test]
+    fn parallel_kernels_bitwise_match_serial() {
+        // n²h clears PAR_MIN_WORK, so the pooled paths actually engage.
+        let mut rng = Pcg::seeded(5);
+        let (n, h) = (128, 8);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        let pooled = (softmax_attention(&q, &k, &v), flash_attention(&q, &k, &v, 16));
+        let inline = crate::exec::pool::serial(|| {
+            (softmax_attention(&q, &k, &v), flash_attention(&q, &k, &v, 16))
+        });
+        assert_eq!(pooled.0, inline.0);
+        assert_eq!(pooled.1, inline.1);
     }
 
     #[test]

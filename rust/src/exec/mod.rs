@@ -1,8 +1,17 @@
-//! Execution substrate: a std-only thread pool (no tokio/rayon here).
+//! Execution substrate: std-only thread pools (no tokio/rayon here).
 //!
-//! Used by the batch prefetcher (data/prefetch.rs) to overlap host batch
-//! assembly with blocking PJRT execution.  Fixed worker count, FIFO queue,
-//! scoped-join helper for fork/join patterns.
+//! Two layers with different contracts:
+//!
+//! * [`pool`] — the deterministic data-parallel compute backend behind
+//!   the tensor/attention/prefill hot paths (fixed partitioning, bitwise
+//!   identical results at any thread count, sized by `PSF_THREADS` /
+//!   `--threads`);
+//! * [`ThreadPool`] below — a plain FIFO job pool used by the batch
+//!   prefetcher (data/prefetch.rs) to overlap host batch assembly with
+//!   blocking PJRT execution, where ordering is a latency concern, not a
+//!   numerics one.
+
+pub mod pool;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};

@@ -1,0 +1,483 @@
+//! Deterministic data-parallel compute backend (std-only, no rayon).
+//!
+//! One long-lived global worker pool backs every hot path in the crate —
+//! the tiled matmuls in `tensor`, row-parallel softmax/flash kernels in
+//! `attn`, head-parallel prefill in `infer::model`, and per-session
+//! stepping in `infer::scheduler`.  Sizing: `--threads` CLI flag (via
+//! [`set_threads`]) > `PSF_THREADS` env var > `available_parallelism`.
+//!
+//! # Determinism contract
+//!
+//! Results are **bitwise identical** for every thread count, including 1.
+//! Two rules make that true and every primitive here enforces them:
+//!
+//! 1. **Fixed partitioning** — work is split into chunks whose boundaries
+//!    depend only on the problem shape ([`chunk_len`]), never on the
+//!    thread count or on which worker claims what.
+//! 2. **Disjoint writes, sequential reductions** — each chunk owns a
+//!    disjoint output region and runs the exact same sequential inner
+//!    loop the single-threaded code runs.  No cross-chunk floating-point
+//!    reduction ever happens in claim order.
+//!
+//! Under those rules, scheduling is free: chunks are *claimed* by an
+//! atomic counter (first come, first served), which affects wall time
+//! only, never bytes.  `tests/determinism.rs` pins the contract for
+//! forward logits, decode sessions, and served requests.
+//!
+//! # Execution model
+//!
+//! A parallel call packages its chunks as one [`Batch`], pushes it to the
+//! pool's FIFO injector, then *participates*: the calling thread claims
+//! and runs chunks of its own batch until none remain, and only then
+//! blocks for stragglers.  Because every waiter first drains its own
+//! batch, nested parallel sections cannot deadlock — a worker that opens
+//! an inner batch finishes that inner batch itself even if every other
+//! worker is busy.  With `threads = 1` (or inside [`serial`]) nothing is
+//! ever enqueued and the call runs inline — the sequential path *is* the
+//! 1-thread path.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Upper bound on chunks per parallel call.  Oversplitting relative to
+/// the largest sane thread count keeps claim-order load balancing
+/// effective while the partition itself stays thread-count independent.
+const MAX_CHUNKS: usize = 64;
+
+// ------------------------------------------------------------------ batch
+
+/// Type-erased `&dyn Fn(usize) + Sync` whose pointee is only guaranteed
+/// alive while `done < chunks` (the submitting call blocks until then).
+#[derive(Clone, Copy)]
+struct RunPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is Sync, and `Batch` never dereferences it after
+// all `chunks` executions completed (see `Batch::work`).
+unsafe impl Send for RunPtr {}
+unsafe impl Sync for RunPtr {}
+
+/// One parallel call: `chunks` tasks claimed by atomic counter.
+struct Batch {
+    run: RunPtr,
+    chunks: usize,
+    /// Next unclaimed chunk index; claims at or beyond `chunks` are no-ops,
+    /// so an exhausted batch lingering in the injector is inert.
+    next: AtomicUsize,
+    /// Completed chunk count; the submitter returns only once this reaches
+    /// `chunks`, which is what keeps the borrowed closure alive long enough.
+    done: AtomicUsize,
+    /// First panic payload out of any chunk, rethrown by the submitter.
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+    lock: Mutex<()>,
+    cvar: Condvar,
+}
+
+impl Batch {
+    /// Claim and run chunks until none remain.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.chunks {
+                return;
+            }
+            // SAFETY: i < chunks, so done < chunks and the submitter is
+            // still blocked in `wait` — the closure is alive.
+            let f = unsafe { &*self.run.0 };
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut slot = self.panic.lock().expect("pool batch panic slot");
+                slot.get_or_insert(payload);
+            }
+            if self.done.fetch_add(1, Ordering::Release) + 1 == self.chunks {
+                let _g = self.lock.lock().expect("pool batch lock");
+                self.cvar.notify_all();
+            }
+        }
+    }
+
+    /// Block until every chunk has completed.
+    fn wait(&self) {
+        let mut g = self.lock.lock().expect("pool batch lock");
+        while self.done.load(Ordering::Acquire) < self.chunks {
+            g = self.cvar.wait(g).expect("pool batch wait");
+        }
+    }
+}
+
+// ------------------------------------------------------------------- pool
+
+struct Shared {
+    injector: Mutex<VecDeque<Arc<Batch>>>,
+    cvar: Condvar,
+    shutdown: AtomicBool,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    /// Total compute threads this pool represents, including the caller;
+    /// `threads - 1` worker threads are spawned.
+    threads: usize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Pool {
+    fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            injector: Mutex::new(VecDeque::new()),
+            cvar: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (1..threads)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Pool { shared, threads, handles: Mutex::new(handles) }
+    }
+
+    /// Stop accepting work and join the workers.  In-flight batches still
+    /// complete: their submitters participate, so a batch never depends on
+    /// pool workers for progress.
+    fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cvar.notify_all();
+        let handles = std::mem::take(&mut *self.handles.lock().expect("pool handles"));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let batch = {
+            let mut q = shared.injector.lock().expect("pool injector");
+            loop {
+                // Exhausted batches at the front are done being claimed
+                // (their submitters drain them); drop our reference.
+                while q.front().is_some_and(|b| b.next.load(Ordering::Relaxed) >= b.chunks) {
+                    q.pop_front();
+                }
+                if let Some(b) = q.front() {
+                    break Arc::clone(b);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.cvar.wait(q).expect("pool injector wait");
+            }
+        };
+        batch.work();
+    }
+}
+
+// ------------------------------------------------- global pool + sizing
+
+static POOL: Mutex<Option<Arc<Pool>>> = Mutex::new(None);
+
+fn current() -> Arc<Pool> {
+    let mut g = POOL.lock().expect("global pool");
+    Arc::clone(g.get_or_insert_with(|| Arc::new(Pool::new(default_threads()))))
+}
+
+/// The thread count the pool adopts with no explicit override:
+/// `PSF_THREADS` (>= 1) if set, else `available_parallelism`.
+pub fn default_threads() -> usize {
+    match std::env::var("PSF_THREADS").ok().and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Current total compute thread count (caller included).
+pub fn threads() -> usize {
+    current().threads
+}
+
+/// Replace the global pool with one of `n` threads (clamped to >= 1).
+/// By the determinism contract this can never change results — only wall
+/// time.  Safe to call at any point from a *non-worker* thread (the CLI
+/// at startup, benches between sweeps, tests); in-flight parallel calls
+/// on the old pool complete because their submitters self-drain.  Must
+/// not be called from inside a parallel section.
+pub fn set_threads(n: usize) {
+    let fresh = Arc::new(Pool::new(n.max(1)));
+    let old = POOL.lock().expect("global pool").replace(fresh);
+    if let Some(old) = old {
+        old.shutdown();
+    }
+}
+
+thread_local! {
+    static SERIAL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Run `f` with every pool primitive forced inline on this thread — the
+/// `threads = 1` execution, regardless of the global pool size.  The
+/// determinism tests compare this arm against the pooled arm byte for
+/// byte.
+pub fn serial<R>(f: impl FnOnce() -> R) -> R {
+    struct Restore(bool);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            SERIAL.with(|s| s.set(self.0));
+        }
+    }
+    let _restore = SERIAL.with(|s| {
+        let prev = s.get();
+        s.set(true);
+        Restore(prev)
+    });
+    f()
+}
+
+// ------------------------------------------------------------ primitives
+
+/// Run `f(i)` for every `i < n`, distributed over the pool; blocks until
+/// all complete.  `f` must confine each `i` to its own disjoint output
+/// (the determinism contract).  Panics in any task are rethrown here.
+pub fn par_iter(n: usize, f: impl Fn(usize) + Sync) {
+    if n == 0 {
+        return;
+    }
+    let inline = n == 1 || SERIAL.with(|s| s.get());
+    let pool = if inline { None } else { Some(current()) };
+    let pool = match pool {
+        Some(p) if p.threads > 1 => p,
+        _ => {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+    };
+    // SAFETY: the lifetime is erased only until `wait` returns below, and
+    // `wait` returns only after all `chunks` executions completed; claims
+    // past `chunks` never dereference (Batch::work).
+    let run = RunPtr(unsafe { erase(&f) });
+    let batch = Arc::new(Batch {
+        run,
+        chunks: n,
+        next: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        panic: Mutex::new(None),
+        lock: Mutex::new(()),
+        cvar: Condvar::new(),
+    });
+    {
+        let mut q = pool.shared.injector.lock().expect("pool injector");
+        q.push_back(Arc::clone(&batch));
+    }
+    pool.shared.cvar.notify_all();
+    batch.work(); // participate: drain our own batch first…
+    batch.wait(); // …then block for chunks claimed by workers
+    let payload = batch.panic.lock().expect("pool batch panic slot").take();
+    if let Some(payload) = payload {
+        resume_unwind(payload);
+    }
+}
+
+/// Erase the borrow lifetime of a task closure.  Both types are fat
+/// pointers of identical layout; callers must not let the result outlive
+/// the borrow (enforced by `par_iter` blocking until all chunks ran).
+unsafe fn erase<'a>(
+    f: &'a (dyn Fn(usize) + Sync + 'a),
+) -> *const (dyn Fn(usize) + Sync + 'static) {
+    std::mem::transmute(f)
+}
+
+/// Chunk length for `n` items: depends only on `(n, min_chunk)` — never
+/// on thread count — so the partition is reproducible everywhere.
+fn chunk_len(n: usize, min_chunk: usize) -> usize {
+    n.div_ceil(MAX_CHUNKS).max(min_chunk.max(1))
+}
+
+/// Run `f(lo, hi)` over a fixed partition of `0..n` into ranges of at
+/// least `min_chunk` items.  Each range must write only its own state.
+pub fn par_ranges(n: usize, min_chunk: usize, f: impl Fn(usize, usize) + Sync) {
+    if n == 0 {
+        return;
+    }
+    let cl = chunk_len(n, min_chunk);
+    let chunks = n.div_ceil(cl);
+    if chunks <= 1 {
+        f(0, n);
+        return;
+    }
+    par_iter(chunks, |i| {
+        let lo = i * cl;
+        f(lo, (lo + cl).min(n));
+    });
+}
+
+/// Raw pointer that may cross threads; every use must touch a region
+/// disjoint from every concurrent use (the callers below guarantee it by
+/// indexing with non-overlapping ranges).
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Split `data` (a row-major `rows x width` buffer) into fixed row chunks
+/// and run `f(first_row, chunk)` on each in parallel.  The workhorse for
+/// matmul/attention outputs: each chunk is a disjoint `&mut` region.
+pub fn par_row_chunks<T: Send>(
+    data: &mut [T],
+    width: usize,
+    min_rows: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(width > 0 && data.len() % width == 0, "par_row_chunks: ragged buffer");
+    let rows = data.len() / width;
+    let base = SendPtr(data.as_mut_ptr());
+    par_ranges(rows, min_rows, |lo, hi| {
+        // SAFETY: par_ranges hands out non-overlapping [lo, hi) ranges, so
+        // each chunk slice is disjoint; T: Send moves the access across
+        // threads; the underlying borrow outlives the blocking call.
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(lo * width), (hi - lo) * width) };
+        f(lo, chunk);
+    });
+}
+
+/// Parallel map over `&mut` items, results collected in index order.
+/// Used where each unit owns real mutable state (per-head decode states,
+/// per-session stepping) rather than a flat output buffer.
+pub fn par_map_mut<T: Send, R: Send>(
+    items: &mut [T],
+    min_chunk: usize,
+    f: impl Fn(usize, &mut T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    {
+        let ip = SendPtr(items.as_mut_ptr());
+        let op = SendPtr(out.as_mut_ptr());
+        par_ranges(n, min_chunk, |lo, hi| {
+            for i in lo..hi {
+                // SAFETY: index i belongs to exactly one range, so both the
+                // item and its result slot are accessed by one task only.
+                let item = unsafe { &mut *ip.0.add(i) };
+                let r = f(i, item);
+                unsafe { *op.0.add(i) = Some(r) };
+            }
+        });
+    }
+    out.into_iter().map(|r| r.expect("parallel map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_iter_covers_every_index_once() {
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        par_iter(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn partition_is_thread_count_independent() {
+        // chunk_len depends only on (n, min_chunk).
+        assert_eq!(chunk_len(10, 1), 1);
+        assert_eq!(chunk_len(6400, 1), 100);
+        assert_eq!(chunk_len(6400, 256), 256);
+        assert_eq!(chunk_len(1, 8), 8);
+    }
+
+    #[test]
+    fn par_ranges_tiles_exactly() {
+        let n = 1003;
+        let seen: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        par_ranges(n, 4, |lo, hi| {
+            assert!(lo < hi && hi <= n);
+            for s in &seen[lo..hi] {
+                s.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(seen.iter().all(|s| s.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_row_chunks_writes_disjoint_rows() {
+        let mut data = vec![0u32; 129 * 7];
+        par_row_chunks(&mut data, 7, 2, |row0, chunk| {
+            for (r, row) in chunk.chunks_mut(7).enumerate() {
+                row.fill((row0 + r) as u32);
+            }
+        });
+        for (r, row) in data.chunks(7).enumerate() {
+            assert!(row.iter().all(|&v| v == r as u32), "row {r}");
+        }
+    }
+
+    #[test]
+    fn par_map_mut_orders_results_and_mutates() {
+        let mut items: Vec<usize> = (0..100).collect();
+        let out = par_map_mut(&mut items, 1, |i, it| {
+            *it += 1;
+            i * 2
+        });
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(items, (1..101).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_matches_parallel_bytes() {
+        let work = || {
+            let mut out = vec![0.0f32; 64 * 9];
+            par_row_chunks(&mut out, 9, 1, |row0, chunk| {
+                for (r, row) in chunk.chunks_mut(9).enumerate() {
+                    let mut acc = 0.0f32;
+                    for (j, v) in row.iter_mut().enumerate() {
+                        acc += ((row0 + r) * 31 + j) as f32 * 0.001;
+                        *v = acc.sin();
+                    }
+                }
+            });
+            out
+        };
+        let pooled = work();
+        let inline = serial(work);
+        assert_eq!(pooled, inline);
+    }
+
+    #[test]
+    fn nested_parallel_sections_complete() {
+        let total = AtomicUsize::new(0);
+        par_iter(8, |_| {
+            par_iter(8, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_submitter() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            par_iter(16, |i| {
+                if i == 7 {
+                    panic!("boom {i}");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // The pool must still be usable afterwards.
+        let n = AtomicUsize::new(0);
+        par_iter(4, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 4);
+    }
+}

@@ -18,6 +18,7 @@
 //!   token for Polysketch/Performer, O(n) for the softmax family.
 
 use crate::attn::{Attention, Mechanism};
+use crate::exec::pool;
 use crate::infer::state::{ln_row, DecodeState};
 use crate::tensor::{layernorm_rows, Tensor};
 use crate::util::rng::Pcg;
@@ -135,6 +136,14 @@ impl NativeLm {
         assert!(n > 0, "empty token sequence");
         let d = self.cfg.d_model;
         let hd = self.head_dim();
+        // Zero-pad the sequence up to the mechanism's block multiple once
+        // per layer (causality makes trailing padding inert for real rows;
+        // zero rows project to zero rows, so padding before the q/k/v
+        // matmuls is bitwise the same as padding each head after them) so
+        // decode-state block partitions line up exactly with the prefill
+        // partition at any prompt length.
+        let block = self.block_multiple();
+        let np = n.div_ceil(block) * block;
         let mut x = Tensor::zeros(&[n, d]);
         for (i, &t) in tokens.iter().enumerate() {
             let row = x.row_mut(i);
@@ -143,25 +152,36 @@ impl NativeLm {
         }
         for (li, layer) in self.layers.iter().enumerate() {
             let xn = layernorm_rows(&x);
-            let q = xn.matmul(&layer.wq);
-            let k = xn.matmul(&layer.wk);
-            let v = xn.matmul(&layer.wv);
-            let mut concat = Tensor::zeros(&[n, d]);
-            for (hi, attn) in layer.heads.iter().enumerate() {
+            let xnp = if np == n { xn } else { pad_rows(&xn, np) };
+            let q = xnp.matmul(&layer.wq);
+            let k = xnp.matmul(&layer.wk);
+            let v = xnp.matmul(&layer.wv);
+            // Heads are embarrassingly parallel: each one slices its own
+            // q/k/v columns, owns its own decode state, and produces its
+            // own (np, hd) output — no shared mutable state, so the bytes
+            // cannot depend on scheduling.
+            let mut head_states: Vec<Option<&mut DecodeState>> = match states.as_deref_mut() {
+                Some(s) => s[li].heads.iter_mut().map(Some).collect(),
+                None => (0..self.cfg.heads).map(|_| None).collect(),
+            };
+            let outs: Vec<Tensor> = pool::par_map_mut(&mut head_states, 1, |hi, st| {
                 let mut qh = slice_head(&q, hi, hd);
                 let mut kh = slice_head(&k, hi, hd);
                 let vh = slice_head(&v, hi, hd);
                 for i in 0..n {
+                    // Padding rows are zero and rotate to zero: skip them.
                     rope_row(qh.row_mut(i), i);
                     rope_row(kh.row_mut(i), i);
                 }
-                if let Some(states) = states.as_deref_mut() {
-                    let st = &mut states[li].heads[hi];
+                if let Some(st) = st {
                     for i in 0..n {
                         st.absorb(kh.row(i), vh.row(i));
                     }
                 }
-                let oh = self.run_padded(attn, &qh, &kh, &vh);
+                layer.heads[hi].run(&qh, &kh, &vh)
+            });
+            let mut concat = Tensor::zeros(&[n, d]);
+            for (hi, oh) in outs.iter().enumerate() {
                 for i in 0..n {
                     concat.row_mut(i)[hi * hd..(hi + 1) * hd].copy_from_slice(oh.row(i));
                 }
@@ -212,30 +232,23 @@ impl NativeLm {
         Tensor::from_vec(&[1, d], ln_row(&x)).matmul(&self.readout).into_vec()
     }
 
-    /// Run one head's attention, zero-padding the sequence up to the
-    /// mechanism's block multiple (causality makes trailing padding inert
-    /// for real rows) so decode-state block partitions line up exactly
-    /// with the prefill partition at any prompt length.
-    fn run_padded(&self, attn: &Attention, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
-        let n = q.rows();
-        let block = match &self.mech {
+    /// Sequence-length multiple the mechanism's block kernels require
+    /// (1 for the streaming softmax/poly paths).
+    fn block_multiple(&self) -> usize {
+        match &self.mech {
             Mechanism::Softmax | Mechanism::Poly { .. } => 1,
             Mechanism::Flash { block }
             | Mechanism::Polysketch { block, .. }
-            | Mechanism::Performer { block, .. } => *block,
-        };
-        let np = n.div_ceil(block) * block;
-        if np == n {
-            return attn.run(q, k, v);
+            | Mechanism::Performer { block, .. } => (*block).max(1),
         }
-        let pad = |t: &Tensor| {
-            let mut out = Tensor::zeros(&[np, t.cols()]);
-            out.data_mut()[..t.len()].copy_from_slice(t.data());
-            out
-        };
-        let full = attn.run(&pad(q), &pad(k), &pad(v));
-        Tensor::from_vec(&[n, v.cols()], full.data()[..n * v.cols()].to_vec())
     }
+}
+
+/// Zero-pad a 2-D tensor's rows up to `np`.
+fn pad_rows(t: &Tensor, np: usize) -> Tensor {
+    let mut out = Tensor::zeros(&[np, t.cols()]);
+    out.data_mut()[..t.len()].copy_from_slice(t.data());
+    out
 }
 
 /// Column slice of one head: (n, d) -> (n, hd).

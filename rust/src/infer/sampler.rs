@@ -39,10 +39,12 @@ impl SamplePolicy {
             SamplePolicy::Greedy => argmax(logits),
             SamplePolicy::Temperature(t) => rng.categorical(&softmax_t(logits, *t)),
             SamplePolicy::TopK { k, temperature } => {
+                // Clamp so k = 0 and k > vocab are well-defined instead of
+                // indexing out of bounds below.
                 let k = (*k).clamp(1, logits.len());
                 // k-th highest logit is the inclusion threshold.
                 let mut sorted: Vec<f32> = logits.to_vec();
-                sorted.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+                sorted.sort_by(|a, b| b.total_cmp(a));
                 let thresh = sorted[k - 1];
                 let mut probs = softmax_t(logits, *temperature);
                 // Mask below-threshold entries; keep at most k at ties by
@@ -60,10 +62,12 @@ impl SamplePolicy {
             }
             SamplePolicy::TopP { p, temperature } => {
                 let probs = softmax_t(logits, *temperature);
+                // total_cmp (not partial_cmp-with-fallback): a total order
+                // keeps the sort — and therefore the nucleus — one fixed
+                // permutation for any input, ties resolved by index (the
+                // sort is stable).
                 let mut order: Vec<usize> = (0..probs.len()).collect();
-                order.sort_by(|&a, &b| {
-                    probs[b].partial_cmp(&probs[a]).unwrap_or(std::cmp::Ordering::Equal)
-                });
+                order.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]));
                 let target = p.clamp(0.0, 1.0);
                 let mut mass = 0.0f32;
                 let mut nucleus = vec![0.0f32; probs.len()];
@@ -136,6 +140,41 @@ mod tests {
         for _ in 0..200 {
             assert!(pol.sample(&logits, &mut rng) < 3);
         }
+    }
+
+    #[test]
+    fn top_k_with_k_beyond_vocab_does_not_panic_and_keeps_full_support() {
+        // Regression: k > logits.len() used to index sorted[k - 1] out of
+        // bounds; clamped it must behave exactly like k = vocab.
+        let logits = [0.0f32, 0.1, 0.2, 0.3];
+        let pol = SamplePolicy::TopK { k: 1000, temperature: 1.0 };
+        let mut rng = Pcg::seeded(8);
+        let mut seen = [false; 4];
+        for _ in 0..400 {
+            seen[pol.sample(&logits, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "support must cover the whole vocab: {seen:?}");
+        // k = 0 clamps to 1: degenerates to the single best logit.
+        let pol0 = SamplePolicy::TopK { k: 0, temperature: 1.0 };
+        for _ in 0..50 {
+            assert_eq!(pol0.sample(&logits, &mut rng), 3);
+        }
+    }
+
+    #[test]
+    fn top_k_breaks_ties_deterministically_by_lowest_index() {
+        // Regression: tied logits at the threshold must admit exactly k
+        // tokens, keeping the lowest ids — never more than k.
+        let logits = [1.0f32, 1.0, 1.0, 1.0, -5.0];
+        let pol = SamplePolicy::TopK { k: 2, temperature: 1.0 };
+        let mut rng = Pcg::seeded(9);
+        let mut seen = [false; 5];
+        for _ in 0..500 {
+            let t = pol.sample(&logits, &mut rng);
+            assert!(t < 2, "tied logits admitted token {t} beyond k=2");
+            seen[t] = true;
+        }
+        assert!(seen[0] && seen[1], "both lowest-index ties must stay in support");
     }
 
     #[test]

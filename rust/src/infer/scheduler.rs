@@ -5,9 +5,17 @@
 //! mechanisms, O(context) for the softmax family), and each scheduling
 //! tick hands out up to `tick_tokens` single-token steps round-robin
 //! across resident sessions.  Finished sessions retire immediately and
-//! free their slot for the queue — the continuous-batching discipline, on
-//! one host thread (the native kernels are single-threaded; scaling out is
-//! a coordinator concern, not a session concern).
+//! free their slot for the queue — the continuous-batching discipline.
+//!
+//! Parallelism without nondeterminism: a tick first computes the
+//! round-robin token allocation *arithmetically* (sessions finish exactly
+//! when `new_tokens == max_new`, so the walk needs no stepping), then
+//! steps the sessions on the shared compute pool (`exec::pool`) — each
+//! session is private state plus a private RNG, so cross-session
+//! scheduling can never leak into a token stream, and the allocation
+//! itself is identical at every thread count.  Prefill inside admission
+//! additionally fans out per head / per matmul tile through the same
+//! backend.
 //!
 //! Per-session latency and aggregate throughput flow through `metrics`:
 //! one JSONL record per retired session plus a closing aggregate record.
@@ -16,6 +24,7 @@ use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::exec::pool;
 use crate::infer::model::NativeLm;
 use crate::infer::session::{DecodeSession, GenRequest};
 use crate::metrics::{JsonlWriter, Record};
@@ -129,19 +138,35 @@ impl<'m> Scheduler<'m> {
             let Some((id, req, queued)) = self.queue.pop_front() else { break };
             self.active.push((DecodeSession::new(self.model, id, req), queued));
         }
-        // Round-robin single-token steps under the budget.
-        let mut budget = self.cfg.tick_tokens.max(1);
-        while budget > 0 && !self.active.is_empty() {
-            let len = self.active.len();
-            let Some(idx) = (0..len)
-                .map(|off| (self.cursor + off) % len)
-                .find(|&i| !self.active[i].0.finished)
-            else {
-                break;
-            };
-            self.active[idx].0.step(self.model);
-            self.cursor = (idx + 1) % len;
-            budget -= 1;
+        // Round-robin allocation under the budget, computed without
+        // stepping: a session leaves the rotation exactly when its
+        // allocation reaches its remaining budget, which replicates the
+        // sequential step-and-check loop token for token.
+        let len = self.active.len();
+        let mut alloc = vec![0usize; len];
+        if len > 0 {
+            let rem: Vec<usize> = self.active.iter().map(|(s, _)| s.remaining_budget()).collect();
+            let mut budget = self.cfg.tick_tokens.max(1);
+            while budget > 0 {
+                let Some(idx) = (0..len)
+                    .map(|off| (self.cursor + off) % len)
+                    .find(|&i| alloc[i] < rem[i])
+                else {
+                    break;
+                };
+                alloc[idx] += 1;
+                self.cursor = (idx + 1) % len;
+                budget -= 1;
+            }
+            // Execute the allocation: sessions are independent (private
+            // states, private RNG), so stepping them on pool threads
+            // yields the same streams as any sequential interleaving.
+            let model = self.model;
+            pool::par_map_mut(&mut self.active, 1, |i, (session, _)| {
+                for _ in 0..alloc[i] {
+                    session.step(model);
+                }
+            });
         }
         // Retirement: free slots, hand reports to the caller.
         let mut retired = Vec::new();

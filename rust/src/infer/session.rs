@@ -180,6 +180,18 @@ impl DecodeSession {
         self.tokens.len() - self.prompt_len
     }
 
+    /// Steps this session can still take before finishing — `step`
+    /// returns `None` exactly when this is 0.  Lets the scheduler compute
+    /// its token allocation arithmetically (and therefore identically at
+    /// every thread count) before stepping sessions in parallel.
+    pub fn remaining_budget(&self) -> usize {
+        if self.finished {
+            0
+        } else {
+            self.max_new - self.new_tokens()
+        }
+    }
+
     /// Sample one token and advance the decode states to produce the next
     /// logits. Returns the token, or `None` if the session is already
     /// finished.  The model advances even on the final token, so every

@@ -27,7 +27,7 @@ use std::sync::Arc;
 use crate::attn::block_lt::self_tensor_row;
 use crate::attn::performer::PerformerFeatures;
 use crate::attn::poly::powi;
-use crate::attn::sketch::PolySketch;
+use crate::attn::sketch::{HalfRowScratch, PolySketch};
 use crate::attn::Attention;
 use crate::tensor::{axpy, dot};
 
@@ -67,6 +67,7 @@ impl DecodeState {
                 buf_kn: Vec::new(),
                 buf_v: Vec::new(),
                 phi: Vec::new(),
+                sketch_scratch: HalfRowScratch::default(),
                 tokens: 0,
             }),
             Attention::Performer { feats, .. } => DecodeState::Feature(FeatureState {
@@ -250,6 +251,10 @@ pub struct SketchState {
     /// Scratch for one phi' feature row (r*r) — reused every token so the
     /// per-token hot path does not hit the allocator for it.
     phi: Vec<f32>,
+    /// Scratch for the half-sketch row recursion, same rationale: the
+    /// token × layer × head hot path must not rebuild 1-row tensors or
+    /// per-level temporaries on every call.
+    sketch_scratch: HalfRowScratch,
     tokens: usize,
 }
 
@@ -268,7 +273,7 @@ impl SketchState {
     fn buffer_key(&mut self, k: &[f32], v: &[f32]) {
         self.ensure_init(v);
         let kn = ln_row(k);
-        self.buf_rh.push(self.sk.half_row(&kn));
+        self.buf_rh.push(self.sk.half_row_scratch(&kn, &mut self.sketch_scratch));
         if self.local {
             self.buf_kn.push(kn);
         }
@@ -311,7 +316,7 @@ impl SketchState {
     fn step(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
         self.buffer_key(k, v);
         let qn = ln_row(q);
-        let lq = self.sk.half_row(&qn);
+        let lq = self.sk.half_row_scratch(&qn, &mut self.sketch_scratch);
         let hc = self.h + 1;
         // Prefix contribution phi'(l_q) . Z — same feature-order
         // accumulation as the block kernel's matmul_into_rows.
@@ -444,6 +449,77 @@ mod tests {
             Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
             Mechanism::Performer { m: 16, block: 8 },
         ]
+    }
+
+    /// Per-row causal oracle with NO padding anywhere: softmax math for
+    /// the softmax family, exact poly weights for poly, hybrid
+    /// local/sketched weights (respecting the block partition) for
+    /// polysketch, feature dots for performer.
+    fn naive_oracle(attn: &Attention, q: &Tensor, k: &Tensor, v: &Tensor, block: usize) -> Tensor {
+        use crate::attn::poly::poly_attention;
+        use crate::attn::softmax::softmax_attention;
+        let linear = |wf: &dyn Fn(usize, usize) -> f32| -> Tensor {
+            let (n, hv) = (q.rows(), v.cols());
+            let mut out = Tensor::zeros(&[n, hv]);
+            for i in 0..n {
+                let mut denom = 1.0f32;
+                let mut acc = vec![0.0f32; hv];
+                for j in 0..=i {
+                    let w = wf(i, j);
+                    denom += w;
+                    axpy(&mut acc, v.row(j), w);
+                }
+                for (o, a) in out.row_mut(i).iter_mut().zip(&acc) {
+                    *o = a / denom;
+                }
+            }
+            out
+        };
+        match attn {
+            Attention::Softmax | Attention::Flash { .. } => softmax_attention(q, k, v),
+            Attention::Poly { p } => poly_attention(q, k, v, *p),
+            Attention::Polysketch { sk, local, .. } => {
+                let qn = layernorm_rows(q);
+                let kn = layernorm_rows(k);
+                let lq = sk.half(&qn);
+                let lk = sk.half(&kn);
+                linear(&|i, j| {
+                    if *local && i / block == j / block {
+                        powi(dot(qn.row(i), kn.row(j)), sk.p as u32)
+                    } else {
+                        let s = dot(lq.row(i), lk.row(j));
+                        s * s
+                    }
+                })
+            }
+            Attention::Performer { feats, .. } => {
+                let pq = feats.apply(q);
+                let pk = feats.apply(k);
+                linear(&|i, j| dot(pq.row(i), pk.row(j)))
+            }
+        }
+    }
+
+    #[test]
+    fn padded_prefill_matches_unpadded_oracle_at_odd_length() {
+        // n = 13 against block 8: the prefill path zero-pads to 16, and
+        // trailing padding must be inert — every real row must match an
+        // oracle computed with no padding at all, for every mechanism.
+        let mut rng = Pcg::seeded(11);
+        let (n, h, block) = (13usize, 8, 8usize);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        for mech in mechs() {
+            let attn = Attention::new(&mech, h, &mut Pcg::seeded(17));
+            let got = run_ref(&attn, &q, &k, &v, block);
+            let want = naive_oracle(&attn, &q, &k, &v, block);
+            for i in 0..n {
+                for (g, w) in got.row(i).iter().zip(want.row(i)) {
+                    assert!(close(*g, *w, 2e-3), "{} row {i}: {g} vs {w}", mech.label());
+                }
+            }
+        }
     }
 
     #[test]

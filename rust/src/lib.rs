@@ -7,8 +7,11 @@
 //!   * L3: this crate — PJRT runtime, training coordinator, data pipeline,
 //!     synthetic tasks, native attention kernels, the linear-time decoding
 //!     subsystem (`infer`), the concurrent serving gateway with its
-//!     constant-size prompt-state cache (`serve`), and the bench harness
-//!     that regenerates every table/figure of the paper's evaluation.
+//!     constant-size prompt-state cache (`serve`), the deterministic
+//!     multi-threaded compute backend every native hot path runs on
+//!     (`exec::pool` — bitwise identical results at any thread count),
+//!     and the bench harness that regenerates every table/figure of the
+//!     paper's evaluation.
 
 pub mod attn;
 pub mod bench;

@@ -474,9 +474,11 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .opt("heads", "4", "attention heads")
         .opt("concurrent", "4", "scheduler admission cap")
         .opt("tick", "16", "decode-token budget per scheduling tick")
+        .opt("threads", "0", "compute threads (0 = PSF_THREADS env, else all cores)")
         .opt("log", "", "JSONL metrics path (empty = none)")
         .opt("seed", "0", "weight + sampling seed");
     let p = parse(spec, argv)?;
+    apply_threads(&p)?;
 
     let mech = Mechanism::parse(p.str("mech")).map_err(|e| anyhow!("{e}"))?;
     let policy = SamplePolicy::from_flags(
@@ -560,10 +562,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("d-model", "64", "model width")
         .opt("layers", "2", "transformer layers")
         .opt("heads", "4", "attention heads")
+        .opt("threads", "0", "compute threads (0 = PSF_THREADS env, else all cores)")
         .opt("log", "", "JSONL metrics path (empty = none)")
         .opt("max-requests", "0", "stop after N completed requests (0 = run forever)")
         .opt("seed", "0", "weight seed");
     let p = parse(spec, argv)?;
+    apply_threads(&p)?;
 
     let mech = Mechanism::parse(p.str("mech")).map_err(|e| anyhow!("{e}"))?;
     let model = NativeLm::new(native_lm_config(&p)?, mech);
@@ -606,6 +610,19 @@ fn native_lm_config(p: &polysketchformer::cli::Parsed) -> Result<LmConfig> {
         );
     }
     Ok(cfg)
+}
+
+/// Apply `--threads` to the deterministic compute backend before any
+/// parallel work runs.  0 keeps the default sizing (PSF_THREADS env var,
+/// else available cores).  By the backend's determinism contract the
+/// thread count can never change outputs — only wall time.
+fn apply_threads(p: &polysketchformer::cli::Parsed) -> Result<()> {
+    let t = p.usize("threads")?;
+    if t > 0 {
+        polysketchformer::exec::pool::set_threads(t);
+    }
+    eprintln!("compute threads: {}", polysketchformer::exec::pool::threads());
+    Ok(())
 }
 
 fn non_empty(s: &str) -> Option<&str> {

@@ -17,6 +17,16 @@
 //! Shutdown is a graceful drain: no new admissions are accepted, but
 //! everything already admitted or queued runs to completion before the
 //! workers exit.
+//!
+//! Two parallelism layers compose here: these decode workers provide
+//! *session-level* parallelism (each worker drives a different session's
+//! slice), while the deterministic compute backend (`exec::pool`, sized
+//! by `--threads`/`PSF_THREADS`) provides *intra-op* parallelism under
+//! each prefill a worker performs during admission.  Decode steps are
+//! 1-row ops that stay below the backend's dispatch thresholds, so slice
+//! stepping never contends for the pool — and since the backend is
+//! bitwise thread-count invariant, the byte-identity contracts below are
+//! unaffected by either layer.
 
 use std::collections::VecDeque;
 use std::sync::atomic::Ordering;

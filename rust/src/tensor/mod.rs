@@ -3,8 +3,24 @@
 //! Backs the native attention implementations, data preparation, and
 //! checkpoint math.  Deliberately small: dense f32, up to a handful of
 //! dims, the ops the repo actually needs — not a general ndarray clone.
+//!
+//! The matmuls and row-wise normalizations here are the crate's compute
+//! floor, so they run on the deterministic parallel backend
+//! (`exec::pool`): outputs are partitioned into fixed row chunks and each
+//! row is produced by exactly the sequential inner loop — results are
+//! bitwise identical at every thread count, and small shapes (decode
+//! steps are 1-row) never leave the calling thread.
 
+use crate::exec::pool;
 use crate::util::rng::Pcg;
+
+/// Shapes below this many multiply-accumulates run inline: the dispatch
+/// cost would exceed the work, and the decode hot path (m = 1) must never
+/// touch the pool.  Purely a latency gate — both paths are bitwise equal.
+const PAR_MIN_FLOPS: usize = 32 * 1024;
+
+/// Minimum output rows per parallel chunk for the matmul family.
+const PAR_MIN_ROWS: usize = 4;
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -106,18 +122,28 @@ impl Tensor {
         out
     }
 
-    /// C = A @ B^T.
+    /// C = A @ B^T.  Row-parallel over C; each row runs the sequential
+    /// dot loop, so results are thread-count independent bit for bit.
     pub fn matmul_t(&self, other: &Tensor) -> Tensor {
         let (m, ka) = (self.rows(), self.cols());
         let (n, kb) = (other.rows(), other.cols());
         assert_eq!(ka, kb);
         let mut out = Tensor::zeros(&[m, n]);
-        for i in 0..m {
-            let a = self.row(i);
-            let orow = out.row_mut(i);
-            for j in 0..n {
-                orow[j] = dot(a, other.row(j));
+        if out.is_empty() {
+            return out;
+        }
+        let kernel = |row0: usize, chunk: &mut [f32]| {
+            for (r, orow) in chunk.chunks_mut(n).enumerate() {
+                let a = self.row(row0 + r);
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = dot(a, other.row(j));
+                }
             }
+        };
+        if m.saturating_mul(ka).saturating_mul(n) < PAR_MIN_FLOPS {
+            kernel(0, out.data_mut());
+        } else {
+            pool::par_row_chunks(out.data_mut(), n, PAR_MIN_ROWS, kernel);
         }
         out
     }
@@ -176,15 +202,24 @@ impl Tensor {
 pub fn layernorm_rows(x: &Tensor) -> Tensor {
     let (m, n) = (x.rows(), x.cols());
     let mut out = Tensor::zeros(&[m, n]);
-    for i in 0..m {
-        let row = x.row(i);
-        let mean: f32 = row.iter().sum::<f32>() / n as f32;
-        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
-        let inv = 1.0 / (var + 1e-6).sqrt();
-        let orow = out.row_mut(i);
-        for j in 0..n {
-            orow[j] = (row[j] - mean) * inv;
+    if out.is_empty() {
+        return out;
+    }
+    let kernel = |row0: usize, chunk: &mut [f32]| {
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            let row = x.row(row0 + r);
+            let mean: f32 = row.iter().sum::<f32>() / n as f32;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+            let inv = 1.0 / (var + 1e-6).sqrt();
+            for (o, &v) in orow.iter_mut().zip(row) {
+                *o = (v - mean) * inv;
+            }
         }
+    };
+    if m * n < PAR_MIN_FLOPS {
+        kernel(0, out.data_mut());
+    } else {
+        pool::par_row_chunks(out.data_mut(), n, 16, kernel);
     }
     out
 }
@@ -193,19 +228,28 @@ pub fn layernorm_rows(x: &Tensor) -> Tensor {
 pub fn softmax_rows(x: &Tensor) -> Tensor {
     let (m, n) = (x.rows(), x.cols());
     let mut out = Tensor::zeros(&[m, n]);
-    for i in 0..m {
-        let row = x.row(i);
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let orow = out.row_mut(i);
-        let mut sum = 0.0;
-        for j in 0..n {
-            let e = (row[j] - mx).exp();
-            orow[j] = e;
-            sum += e;
+    if out.is_empty() {
+        return out;
+    }
+    let kernel = |row0: usize, chunk: &mut [f32]| {
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            let row = x.row(row0 + r);
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for (o, &v) in orow.iter_mut().zip(row) {
+                let e = (v - mx).exp();
+                *o = e;
+                sum += e;
+            }
+            for v in orow.iter_mut() {
+                *v /= sum;
+            }
         }
-        for v in orow.iter_mut() {
-            *v /= sum;
-        }
+    };
+    if m * n < PAR_MIN_FLOPS {
+        kernel(0, out.data_mut());
+    } else {
+        pool::par_row_chunks(out.data_mut(), n, 16, kernel);
     }
     out
 }
@@ -240,18 +284,29 @@ pub fn axpy(out: &mut [f32], a: &[f32], scale: f32) {
 }
 
 /// Plain row-major matmul into preallocated storage: C(m,n) = A(m,k) B(k,n).
+/// Row-parallel above [`PAR_MIN_FLOPS`]; every C row is produced by the
+/// same ikj loop (zero-skip included) regardless of thread count.
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    c.fill(0.0);
-    for i in 0..m {
-        for kk in 0..k {
-            let av = a[i * k + kk];
-            if av == 0.0 {
-                continue;
+    if c.is_empty() {
+        return;
+    }
+    let kernel = |row0: usize, chunk: &mut [f32]| {
+        chunk.fill(0.0);
+        for (r, crow) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + r;
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                axpy(crow, &b[kk * n..(kk + 1) * n], av);
             }
-            let brow = &b[kk * n..(kk + 1) * n];
-            let crow = &mut c[i * n..(i + 1) * n];
-            axpy(crow, brow, av);
         }
+    };
+    if m.saturating_mul(k).saturating_mul(n) < PAR_MIN_FLOPS {
+        kernel(0, c);
+    } else {
+        pool::par_row_chunks(c, n, PAR_MIN_ROWS, kernel);
     }
 }
 
@@ -316,5 +371,28 @@ mod tests {
         let a = Tensor::zeros(&[2, 3]);
         let b = Tensor::zeros(&[2, 3]);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn parallel_matmul_bitwise_matches_serial() {
+        // Shapes chosen to clear PAR_MIN_FLOPS so the pooled path runs.
+        let mut rng = Pcg::seeded(9);
+        let a = Tensor::gaussian(&mut rng, &[96, 48]);
+        let b = Tensor::gaussian(&mut rng, &[48, 80]);
+        let bt = b.transpose2();
+        let pooled = (a.matmul(&b), a.matmul_t(&bt));
+        let inline = crate::exec::pool::serial(|| (a.matmul(&b), a.matmul_t(&bt)));
+        assert_eq!(pooled.0, inline.0);
+        assert_eq!(pooled.1, inline.1);
+    }
+
+    #[test]
+    fn parallel_rowwise_ops_bitwise_match_serial() {
+        let mut rng = Pcg::seeded(10);
+        let x = Tensor::gaussian(&mut rng, &[512, 96]).scale(2.0);
+        let pooled = (layernorm_rows(&x), softmax_rows(&x));
+        let inline = crate::exec::pool::serial(|| (layernorm_rows(&x), softmax_rows(&x)));
+        assert_eq!(pooled.0, inline.0);
+        assert_eq!(pooled.1, inline.1);
     }
 }

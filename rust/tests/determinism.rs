@@ -1,0 +1,134 @@
+//! Determinism matrix for the parallel compute backend (`exec::pool`).
+//!
+//! The backend's contract is that results are **bitwise identical** at
+//! every thread count.  Each test computes the same quantity twice — once
+//! on the live pool (sized by `PSF_THREADS`, which CI additionally pins
+//! to 2 in a dedicated job) and once under `pool::serial`, the forced
+//! 1-thread inline execution — and asserts byte equality, for all six
+//! mechanisms, at the three levels the serving stack exposes:
+//!
+//! * forward logits (prefill path: padded layers, parallel heads, tiled
+//!   matmuls);
+//! * full decode sessions (prefill + sampler + recurrent/KV stepping);
+//! * a served request through the gateway (worker threads + prompt cache
+//!   on top of the backend) against the single-threaded oracle.
+//!
+//! A final test flips the global pool size itself (1 → 2 → 8) and checks
+//! the logits never move.
+
+use polysketchformer::attn::Mechanism;
+use polysketchformer::exec::pool;
+use polysketchformer::infer::{
+    DecodeSession, GenRequest, LmConfig, NativeLm, SamplePolicy,
+};
+use polysketchformer::serve::{collect_stream, Gateway, GatewayConfig};
+
+fn mechanisms() -> Vec<Mechanism> {
+    vec![
+        Mechanism::Softmax,
+        Mechanism::Flash { block: 8 },
+        Mechanism::Poly { p: 4 },
+        Mechanism::Polysketch { r: 4, p: 4, block: 8, local: false },
+        Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
+        Mechanism::Performer { m: 16, block: 8 },
+    ]
+}
+
+fn lm(mech: Mechanism) -> NativeLm {
+    // Large enough (64 x 77 prompt rows, 4 heads) that the matmul tiles,
+    // row kernels, and head fan-out all actually engage the pool.
+    let cfg = LmConfig { vocab: 64, d_model: 64, layers: 2, heads: 4, ff_mult: 2, seed: 33 };
+    NativeLm::new(cfg, mech)
+}
+
+fn prompt(n: usize) -> Vec<u32> {
+    std::iter::once(0u32).chain((1..n as u32).map(|i| i.wrapping_mul(23) % 64)).collect()
+}
+
+#[test]
+fn forward_logits_bitwise_identical_serial_vs_parallel() {
+    // 77 is odd on purpose: it exercises the padded tail partition too.
+    let tokens = prompt(77);
+    for mech in mechanisms() {
+        let model = lm(mech.clone());
+        let pooled = model.forward(&tokens);
+        let inline = pool::serial(|| model.forward(&tokens));
+        assert_eq!(pooled, inline, "{}: logits depend on thread count", mech.label());
+    }
+}
+
+#[test]
+fn decode_sessions_bitwise_identical_serial_vs_parallel() {
+    let req = |seed| GenRequest {
+        prompt: prompt(21),
+        max_new_tokens: 12,
+        policy: SamplePolicy::TopP { p: 0.9, temperature: 0.8 },
+        seed,
+    };
+    for mech in mechanisms() {
+        let model = lm(mech.clone());
+        let mut pooled = DecodeSession::new(&model, 0, req(7));
+        pooled.run_to_completion(&model);
+        let inline = pool::serial(|| {
+            let mut s = DecodeSession::new(&model, 1, req(7));
+            s.run_to_completion(&model);
+            s
+        });
+        assert_eq!(pooled.tokens, inline.tokens, "{}: token stream diverged", mech.label());
+        assert_eq!(
+            pooled.snapshot().last_logits,
+            inline.snapshot().last_logits,
+            "{}: final logits diverged",
+            mech.label()
+        );
+    }
+}
+
+#[test]
+fn served_request_matches_single_threaded_oracle() {
+    // End to end: gateway (2 decode workers + prompt cache) over the live
+    // pool vs a lone session stepped entirely inline.  Byte equality here
+    // subsumes thread count, worker interleaving, and cache restore.
+    let req = || GenRequest {
+        prompt: prompt(33),
+        max_new_tokens: 10,
+        policy: SamplePolicy::Temperature(0.7),
+        seed: 41,
+    };
+    for mech in mechanisms() {
+        let g = Gateway::new(
+            lm(mech.clone()),
+            GatewayConfig { workers: 2, ..GatewayConfig::default() },
+        )
+        .unwrap();
+        let (served, stats) = collect_stream(g.submit(req()).unwrap());
+        assert_eq!(stats.expect("done event").generated, served);
+        g.finish().unwrap();
+
+        let model = lm(mech.clone());
+        let oracle = pool::serial(|| {
+            let mut s = DecodeSession::new(&model, 0, req());
+            s.run_to_completion(&model);
+            s.generated().to_vec()
+        });
+        assert_eq!(served, oracle, "{}: served stream != 1-thread oracle", mech.label());
+    }
+}
+
+#[test]
+fn logits_invariant_across_pool_resizes() {
+    // Resize the global pool through the PSF_THREADS matrix {1, 2, 8} and
+    // back; the bytes must never move.  (Safe mid-suite: by contract a
+    // resize only changes wall time, and in-flight calls on the old pool
+    // self-complete.)
+    let tokens = prompt(49);
+    let model = lm(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true });
+    let baseline = model.forward(&tokens);
+    for t in [1usize, 2, 8] {
+        pool::set_threads(t);
+        assert_eq!(pool::threads(), t);
+        let got = model.forward(&tokens);
+        assert_eq!(got, baseline, "threads={t}: logits moved");
+    }
+    pool::set_threads(pool::default_threads());
+}
