@@ -17,7 +17,7 @@
 
 use std::time::Instant;
 
-use polysketchformer::attn::{Attention, Mechanism};
+use polysketchformer::attn::Mechanism;
 use polysketchformer::runtime;
 use polysketchformer::tensor::Tensor;
 use polysketchformer::util::rng::Pcg;
@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut rng = Pcg::seeded(0);
     for mech in &mechanisms {
-        let attn = Attention::new(mech, head_dim, &mut rng);
+        let attn = mech.build_kernel(head_dim, &mut rng);
         print!("{:<22}", mech.label());
         for &n in &ctxs {
             // Quadratic mechanisms above 16k take minutes on one core —
@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
             let k = Tensor::gaussian(&mut rng, &[n, head_dim]);
             let v = Tensor::gaussian(&mut rng, &[n, head_dim]);
             let t0 = Instant::now();
-            let out = attn.run(&q, &k, &v);
+            let out = attn.forward(&q, &k, &v);
             let us_per_token = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
             assert!(out.data().iter().all(|x| x.is_finite()));
             print!(" {us_per_token:>9.2}");

@@ -10,7 +10,7 @@
 //! sequential steps), huge b pays the O(b²) in-block cost; the paper's
 //! choice sits at the flat bottom.
 
-use polysketchformer::attn::{Attention, Mechanism};
+use polysketchformer::attn::Mechanism;
 use polysketchformer::bench::{banner, time_fn, Mode, Table};
 use polysketchformer::tensor::Tensor;
 use polysketchformer::util::rng::Pcg;
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     // b-invariance: outputs at every block size must match a reference.
     let reference = {
         let mech = Mechanism::Polysketch { r: 16, p: 4, block: blocks[0], local: false };
-        Attention::new(&mech, h, &mut Pcg::seeded(42)).run(&q, &k, &v)
+        mech.build_kernel(h, &mut Pcg::seeded(42)).forward(&q, &k, &v)
     };
 
     for &b in &blocks {
@@ -45,8 +45,8 @@ fn main() -> anyhow::Result<()> {
             continue;
         }
         let mech = Mechanism::Polysketch { r: 16, p: 4, block: b, local: false };
-        let attn = Attention::new(&mech, h, &mut Pcg::seeded(42));
-        let out = attn.run(&q, &k, &v);
+        let attn = mech.build_kernel(h, &mut Pcg::seeded(42));
+        let out = attn.forward(&q, &k, &v);
         let max_dev = out
             .data()
             .iter()
@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         );
 
         let t = time_fn(1, iters, || {
-            std::hint::black_box(attn.run(&q, &k, &v));
+            std::hint::black_box(attn.forward(&q, &k, &v));
         });
         table.row(
             &b.to_string(),

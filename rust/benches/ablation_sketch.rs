@@ -12,7 +12,7 @@
 //! latency grows ~r (the r² feature dim never materializes per block).
 
 use polysketchformer::attn::sketch::PolySketch;
-use polysketchformer::attn::{Attention, Mechanism};
+use polysketchformer::attn::Mechanism;
 use polysketchformer::bench::{banner, time_fn, Mode, Table};
 use polysketchformer::tensor::{layernorm_rows, Tensor};
 use polysketchformer::util::rng::Pcg;
@@ -68,12 +68,12 @@ fn main() -> anyhow::Result<()> {
         let rel_err = err_sum / trials as f64;
 
         let mech = Mechanism::Polysketch { r, p, block: 256, local: true };
-        let attn = Attention::new(&mech, h, &mut rng);
+        let attn = mech.build_kernel(h, &mut rng);
         let ql = Tensor::gaussian(&mut rng, &[latency_n, h]);
         let kl = Tensor::gaussian(&mut rng, &[latency_n, h]);
         let vl = Tensor::gaussian(&mut rng, &[latency_n, h]);
         let timing = time_fn(1, 2, || {
-            std::hint::black_box(attn.run(&ql, &kl, &vl));
+            std::hint::black_box(attn.forward(&ql, &kl, &vl));
         });
 
         table.row(

@@ -4,7 +4,7 @@
 //! recurrent view of polysketch/performer attention makes each generated
 //! token an O(1) state update, while the softmax family rescans an O(n)
 //! KV cache.  This bench prefills a native LM at each context length,
-//! then times token-by-token decoding through `infer::DecodeState`:
+//! then times token-by-token decoding through the per-head `KernelState`s:
 //!
 //!   expected shape — µs/token flat (within noise) across the 512 -> 8k
 //!   sweep for psk*/performer*, growing roughly linearly for

@@ -17,7 +17,7 @@
 //! ctx doubling and OOMs/slows past 8k; kernel-based mechanisms stay flat;
 //! crossover vs FlashAttention lands between 1k and 8k.
 
-use polysketchformer::attn::{Attention, Mechanism};
+use polysketchformer::attn::Mechanism;
 use polysketchformer::bench::{banner, time_fn, Mode, Table};
 use polysketchformer::data::random_tokens;
 use polysketchformer::runtime::{self, LoadOpts};
@@ -63,7 +63,7 @@ fn native_sweep(mode: Mode) -> anyhow::Result<()> {
 
     let mut rng = Pcg::seeded(0);
     for mech in &mechanisms {
-        let attn = Attention::new(mech, head_dim, &mut rng);
+        let attn = mech.build_kernel(head_dim, &mut rng);
         let mut cells = Vec::new();
         for &n in &ctxs {
             // Paper: vanilla softmax OOMs beyond 8k; naive softmax here is
@@ -81,7 +81,7 @@ fn native_sweep(mode: Mode) -> anyhow::Result<()> {
             let k = Tensor::gaussian(&mut rng, &[n, head_dim]);
             let v = Tensor::gaussian(&mut rng, &[n, head_dim]);
             let t = time_fn(1, iters, || {
-                std::hint::black_box(attn.run(&q, &k, &v));
+                std::hint::black_box(attn.forward(&q, &k, &v));
             });
             cells.push(format!("{:.2}", t.mean_us() / n as f64));
         }

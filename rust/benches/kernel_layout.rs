@@ -1,0 +1,155 @@
+//! Kernel layout — per-head-copy vs strided-view prefill.
+//!
+//! The historical prefill path sliced each head's q/k/v columns into
+//! fresh contiguous tensors (three (n, hd) copies per head) and
+//! zero-padded every layer to the mechanism's block multiple; the kernel
+//! core consumes strided [`TensorView`]s of the fused projections and
+//! handles the ragged tail natively.  This bench reconstructs the old
+//! layout faithfully (slice + pad + per-head forward + concat) and races
+//! it against `kernel::prefill_heads` over n ∈ {1k, 8k, 32k} (full
+//! mode), asserting along the way that both layouts produce *bitwise*
+//! identical real rows — the padding-inertness argument, measured.
+//!
+//! Persists `bench_out/kernel_layout.json` and fails loudly
+//! (KERNEL_LAYOUT_CHECK) if the view path is slower than the copy path
+//! beyond timer noise on any swept n.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use polysketchformer::attn::kernel::{prefill_heads, CausalKernel};
+use polysketchformer::attn::Mechanism;
+use polysketchformer::bench::{banner, out_dir, Mode};
+use polysketchformer::metrics::Record;
+use polysketchformer::tensor::Tensor;
+use polysketchformer::util::rng::Pcg;
+
+fn slice_head(t: &Tensor, head: usize, hd: usize) -> Tensor {
+    let n = t.rows();
+    let mut out = Tensor::zeros(&[n, hd]);
+    for i in 0..n {
+        out.row_mut(i).copy_from_slice(&t.row(i)[head * hd..(head + 1) * hd]);
+    }
+    out
+}
+
+fn pad_rows(t: &Tensor, np: usize) -> Tensor {
+    let mut out = Tensor::zeros(&[np, t.cols()]);
+    out.data_mut()[..t.len()].copy_from_slice(t.data());
+    out
+}
+
+/// The pre-refactor layout: zero-pad to the block multiple, copy each
+/// head's columns into owned tensors, run, concat the real rows.
+fn copy_layout(
+    kernels: &[Arc<dyn CausalKernel>],
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    hd: usize,
+    block: usize,
+) -> Tensor {
+    let n = q.rows();
+    let np = n.div_ceil(block) * block;
+    let heads = kernels.len();
+    let mut concat = Tensor::zeros(&[n, heads * hd]);
+    for (hi, kernel) in kernels.iter().enumerate() {
+        let qh = pad_rows(&slice_head(q, hi, hd), np);
+        let kh = pad_rows(&slice_head(k, hi, hd), np);
+        let vh = pad_rows(&slice_head(v, hi, hd), np);
+        let oh = kernel.forward(&qh, &kh, &vh);
+        for i in 0..n {
+            concat.row_mut(i)[hi * hd..(hi + 1) * hd].copy_from_slice(&oh.row(i)[..hd]);
+        }
+    }
+    concat
+}
+
+fn main() -> anyhow::Result<()> {
+    let mode = Mode::from_env();
+    banner("kernel_layout", "per-head-copy vs strided-view prefill", mode);
+
+    let (heads, hd, block) = (4usize, 32usize, 256usize);
+    let mech = Mechanism::Polysketch { r: 16, p: 4, block, local: true };
+    let ns: &[usize] = match mode {
+        Mode::Smoke => &[1024],
+        Mode::Quick => &[1024, 8192],
+        Mode::Full => &[1024, 8192, 32768],
+    };
+    let reps = mode.pick(2, 2, 1);
+
+    let mut krng = Pcg::seeded(7);
+    let kernels: Vec<Arc<dyn CausalKernel>> =
+        (0..heads).map(|_| mech.build_kernel(hd, &mut krng)).collect();
+
+    let mut records: Vec<Record> = Vec::new();
+    let mut failures = Vec::new();
+    println!("{:>8}  {:>12}  {:>12}  {:>8}", "n", "copy (s)", "view (s)", "view/copy");
+    for &n in ns {
+        // n+3: always exercise the ragged tail the old layout padded.
+        let n = n + 3;
+        let mut rng = Pcg::seeded(n as u64);
+        let q = Tensor::gaussian(&mut rng, &[n, heads * hd]);
+        let k = Tensor::gaussian(&mut rng, &[n, heads * hd]);
+        let v = Tensor::gaussian(&mut rng, &[n, heads * hd]);
+
+        // Correctness first: both layouts must agree bit for bit.
+        let want = copy_layout(&kernels, &q, &k, &v, hd, block);
+        let mut got = Tensor::zeros(&[n, heads * hd]);
+        prefill_heads(&kernels, &q, &k, &v, None, &mut got);
+        assert_eq!(got, want, "n={n}: strided-view prefill diverged from per-head copies");
+
+        let mut copy_s = f64::INFINITY;
+        let mut view_s = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(copy_layout(&kernels, &q, &k, &v, hd, block));
+            copy_s = copy_s.min(t0.elapsed().as_secs_f64());
+            let t0 = Instant::now();
+            let mut out = Tensor::zeros(&[n, heads * hd]);
+            prefill_heads(&kernels, &q, &k, &v, None, &mut out);
+            std::hint::black_box(out);
+            view_s = view_s.min(t0.elapsed().as_secs_f64());
+        }
+        let ratio = view_s / copy_s.max(1e-12);
+        println!("{n:>8}  {copy_s:>12.4}  {view_s:>12.4}  {ratio:>8.3}");
+        for (layout, secs) in [("copy", copy_s), ("view", view_s)] {
+            records.push(
+                Record::new()
+                    .str("layout", layout)
+                    .str("mech", mech.label())
+                    .i64("n", n as i64)
+                    .i64("heads", heads as i64)
+                    .i64("head_dim", hd as i64)
+                    .f64("secs", secs),
+            );
+        }
+        // Self-check per point: the view path must not be slower (15%
+        // slack absorbs shared-runner timer noise).
+        if view_s > copy_s * 1.15 {
+            failures.push(format!("n={n}: view {view_s:.4}s vs copy {copy_s:.4}s"));
+        }
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"kernel_layout\",\n");
+    let _ = writeln!(json, "  \"mode\": \"{mode:?}\",");
+    let _ = writeln!(json, "  \"mech\": \"{}\",", mech.label());
+    json.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        let _ = write!(json, "    {}", r.to_json());
+        json.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    let dir = out_dir();
+    std::fs::create_dir_all(&dir)?;
+    let json_path = dir.join("kernel_layout.json");
+    std::fs::write(&json_path, json)?;
+    println!("json: {}", json_path.display());
+
+    if !failures.is_empty() {
+        anyhow::bail!("KERNEL_LAYOUT_CHECK fail: {}", failures.join("; "));
+    }
+    println!("KERNEL_LAYOUT_CHECK pass: strided views never slower than per-head copies");
+    Ok(())
+}

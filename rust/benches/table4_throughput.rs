@@ -11,7 +11,7 @@
 //!      layer over a fixed 32k-token budget (batch*n constant), isolating
 //!      the mechanism cost the table attributes the decay to.
 
-use polysketchformer::attn::{Attention, Mechanism};
+use polysketchformer::attn::Mechanism;
 use polysketchformer::bench::{banner, time_fn, Mode, Table};
 use polysketchformer::data::random_tokens;
 use polysketchformer::runtime::{self, LoadOpts};
@@ -93,7 +93,7 @@ fn native_part(mode: Mode) -> anyhow::Result<()> {
     );
     let mut rng = Pcg::seeded(0);
     for mech in &mechanisms {
-        let attn = Attention::new(mech, head_dim, &mut rng);
+        let attn = mech.build_kernel(head_dim, &mut rng);
         let mut cells = Vec::new();
         for &n in &ctxs {
             if !mech.is_linear() && n > 16384 {
@@ -106,7 +106,7 @@ fn native_part(mode: Mode) -> anyhow::Result<()> {
             let v = Tensor::gaussian(&mut rng, &[n, head_dim]);
             let t = time_fn(0, 1, || {
                 for _ in 0..reps {
-                    std::hint::black_box(attn.run(&q, &k, &v));
+                    std::hint::black_box(attn.forward(&q, &k, &v));
                 }
             });
             cells.push(format!("{:.2}", 1.0 / t.mean_s));

@@ -1,101 +1,41 @@
-//! Section 3.1/3.2: block-based lower-triangular multiplication.
+//! Section 3.1/3.2: block-based lower-triangular multiplication —
+//! compatibility wrappers over the unified linear engine.
 //!
-//! Computes lt(phi_q phi_k^T) [V | 1] in time linear in n: per block
-//! H_l = phi_k_l^T [V_l|1], exclusive prefix Z_l = sum_{j<l} H_j, diagonal
-//! P_l = lt(phi_q_l phi_k_l^T) [V_l|1], and row i of the result is
-//! P_l[i'] + phi_q_i Z_l.  The all-ones column riding with V produces the
-//! normalizer, so numerator and the paper's `1 +` denominator come out of
-//! one pass.
+//! The algorithm (per block H_l = phi_k_l^T [V_l|1], exclusive prefix
+//! Z_l = sum_{j<l} H_j, diagonal P_l = lt(scores) [V_l|1], row i =
+//! normalize(P_l[i'] + phi_q_i Z_l)) lives **once**, in
+//! [`kernel::linear::LinearEngine`](crate::attn::kernel::LinearEngine);
+//! these free functions adapt the historical explicit-feature and
+//! half-sketch interfaces onto it via the pre-mapped feature adapters.
+//! Sequence lengths need not be block multiples: the tail block is
+//! processed ragged, bit-identically to the zero-padded computation on
+//! real rows — callers never pad.
 //!
 //! This is the native (pure rust) twin of the Pallas kernel in
 //! python/compile/kernels/pallas/ — same math, used for property tests and
 //! for latency benches at context lengths (up to 32k) that the interpreted
 //! kernel cannot reach.
 
-use crate::attn::poly::powi;
+use std::sync::Arc;
+
+use crate::attn::kernel::feature::{DirectFeatures, IdentityPowerMap, SelfTensorFeatures};
+use crate::attn::kernel::{FeatureMap, LinearEngine};
 use crate::tensor::{axpy, dot, layernorm_rows, Tensor};
 
 /// Generic causal linear attention over explicit feature maps.
 ///
-/// phi_q, phi_k: (n, f); v: (n, h). Returns (n, h).
+/// phi_q, phi_k: (n, f); v: (n, h). Returns (n, h).  `n % block` may be
+/// nonzero: the final block is simply shorter.
 pub fn linear_attention_block(phi_q: &Tensor, phi_k: &Tensor, v: &Tensor,
                               block: usize) -> Tensor {
     let (n, f) = (phi_q.rows(), phi_q.cols());
     let h = v.cols();
     assert_eq!(phi_k.rows(), n);
     assert_eq!(v.rows(), n);
-    assert!(n % block == 0, "n={n} % block={block} != 0");
-    let hc = h + 1;
-    let nb = n / block;
-
+    let engine = LinearEngine::new(Arc::new(DirectFeatures::new(f)), None, block);
     let mut out = Tensor::zeros(&[n, h]);
-    let mut z = vec![0.0f32; f * hc];           // prefix state Z
-    let mut scores = vec![0.0f32; block * block];
-    let mut pl = vec![0.0f32; block * hc];      // P_l + A_l Z_l
-
-    for l in 0..nb {
-        let base = l * block;
-        // diagonal scores lt(phi_q_l phi_k_l^T)
-        for bi in 0..block {
-            let qi = phi_q.row(base + bi);
-            let srow = &mut scores[bi * block..(bi + 1) * block];
-            for bj in 0..=bi {
-                srow[bj] = dot(qi, phi_k.row(base + bj));
-            }
-        }
-        // pl = phi_q_l Z  (prefix contribution)
-        matmul_into_rows(phi_q, base, block, &z, f, hc, &mut pl);
-        // pl += lt(scores) [V_l | 1]
-        for bi in 0..block {
-            let prow = &mut pl[bi * hc..(bi + 1) * hc];
-            let srow = &scores[bi * block..(bi + 1) * block];
-            for bj in 0..=bi {
-                let w = srow[bj];
-                axpy(&mut prow[..h], v.row(base + bj), w);
-                prow[h] += w;
-            }
-        }
-        // emit normalized rows
-        for bi in 0..block {
-            let prow = &pl[bi * hc..(bi + 1) * hc];
-            let inv = 1.0 / (1.0 + prow[h]);
-            let orow = out.row_mut(base + bi);
-            for c in 0..h {
-                orow[c] = prow[c] * inv;
-            }
-        }
-        // Z += phi_k_l^T [V_l | 1]
-        for bj in 0..block {
-            let krow = phi_k.row(base + bj);
-            let vrow = v.row(base + bj);
-            for (c, &kc) in krow.iter().enumerate() {
-                if kc == 0.0 {
-                    continue;
-                }
-                let zrow = &mut z[c * hc..(c + 1) * hc];
-                axpy(&mut zrow[..h], vrow, kc);
-                zrow[h] += kc;
-            }
-        }
-    }
+    engine.forward_mapped(phi_q, phi_k, None, None, &v.view(), None, &mut out.view_mut());
     out
-}
-
-/// pl = phi[base..base+block] @ z  where z is (f, hc) row-major.
-fn matmul_into_rows(phi: &Tensor, base: usize, block: usize, z: &[f32],
-                    f: usize, hc: usize, pl: &mut [f32]) {
-    pl.fill(0.0);
-    for bi in 0..block {
-        let prow = &mut pl[bi * hc..(bi + 1) * hc];
-        let qrow = phi.row(base + bi);
-        for c in 0..f {
-            let qv = qrow[c];
-            if qv == 0.0 {
-                continue;
-            }
-            axpy(prow, &z[c * hc..(c + 1) * hc], qv);
-        }
-    }
 }
 
 /// Local-exact configuration for [`polysketch_attention_block`].
@@ -118,94 +58,28 @@ pub fn polysketch_attention_block(lh: &Tensor, rh: &Tensor, v: &Tensor,
     let (n, rs) = (lh.rows(), lh.cols());
     let h = v.cols();
     assert_eq!(rh.rows(), n);
-    assert!(n % block == 0, "n={n} % block={block} != 0");
-    let f = rs * rs;
-    let hc = h + 1;
-    let nb = n / block;
-
-    let (qn, kn) = match &local {
-        Some(le) => (Some(layernorm_rows(le.q)), Some(layernorm_rows(le.k))),
-        None => (None, None),
-    };
-
+    let map = Arc::new(SelfTensorFeatures::new(rs));
     let mut out = Tensor::zeros(&[n, h]);
-    let mut z = vec![0.0f32; f * hc];
-    let mut scores = vec![0.0f32; block * block];
-    let mut pl = vec![0.0f32; block * hc];
-    let mut phi_row = vec![0.0f32; f];
-
-    for l in 0..nb {
-        let base = l * block;
-        // Diagonal block scores.
-        match &local {
-            Some(le) => {
-                let (qn, kn) = (qn.as_ref().unwrap(), kn.as_ref().unwrap());
-                for bi in 0..block {
-                    let qi = qn.row(base + bi);
-                    let srow = &mut scores[bi * block..(bi + 1) * block];
-                    for bj in 0..=bi {
-                        srow[bj] = powi(dot(qi, kn.row(base + bj)), le.p);
-                    }
-                }
-            }
-            None => {
-                for bi in 0..block {
-                    let li = lh.row(base + bi);
-                    let srow = &mut scores[bi * block..(bi + 1) * block];
-                    for bj in 0..=bi {
-                        let s = dot(li, rh.row(base + bj));
-                        srow[bj] = s * s; // (L R^T)^2: phi' never materialized
-                    }
-                }
-            }
+    match local {
+        Some(le) => {
+            let local_map: Arc<dyn FeatureMap> = Arc::new(IdentityPowerMap::new(le.p));
+            let lq = layernorm_rows(le.q);
+            let lk = layernorm_rows(le.k);
+            let engine = LinearEngine::new(map, Some(local_map), block);
+            engine.forward_mapped(lh, rh, Some(&lq), Some(&lk), &v.view(), None,
+                                  &mut out.view_mut());
         }
-        // Prefix contribution: phi_q_i Z with phi_q_i = l_i (x) l_i,
-        // computed row-by-row into a scratch feature vector.
-        for bi in 0..block {
-            self_tensor_row(lh.row(base + bi), &mut phi_row);
-            let prow = &mut pl[bi * hc..(bi + 1) * hc];
-            prow.fill(0.0);
-            for (c, &qv) in phi_row.iter().enumerate() {
-                if qv == 0.0 {
-                    continue;
-                }
-                axpy(prow, &z[c * hc..(c + 1) * hc], qv);
-            }
-        }
-        // Diagonal contribution + emit.
-        for bi in 0..block {
-            let prow = &mut pl[bi * hc..(bi + 1) * hc];
-            let srow = &scores[bi * block..(bi + 1) * block];
-            for bj in 0..=bi {
-                let w = srow[bj];
-                axpy(&mut prow[..h], v.row(base + bj), w);
-                prow[h] += w;
-            }
-            let inv = 1.0 / (1.0 + prow[h]);
-            let orow = out.row_mut(base + bi);
-            for c in 0..h {
-                orow[c] = prow[c] * inv;
-            }
-        }
-        // Z += phi_k_l^T [V_l | 1].
-        for bj in 0..block {
-            self_tensor_row(rh.row(base + bj), &mut phi_row);
-            let vrow = v.row(base + bj);
-            for (c, &kc) in phi_row.iter().enumerate() {
-                if kc == 0.0 {
-                    continue;
-                }
-                let zrow = &mut z[c * hc..(c + 1) * hc];
-                axpy(&mut zrow[..h], vrow, kc);
-                zrow[h] += kc;
-            }
+        None => {
+            let engine = LinearEngine::new(map, None, block);
+            engine.forward_mapped(lh, rh, None, None, &v.view(), None, &mut out.view_mut());
         }
     }
     out
 }
 
 /// Row self Kronecker product into scratch: the implicit phi' feature of a
-/// half-sketch row. Shared with the per-token decode path (`infer::state`).
+/// half-sketch row. Shared with the per-token decode path (the linear
+/// engine's state expansion).
 #[inline]
 pub(crate) fn self_tensor_row(l: &[f32], out: &mut [f32]) {
     let r = l.len();
@@ -271,6 +145,34 @@ mod tests {
         for block in [4, 8, 16, 48] {
             let got = linear_attention_block(&pq, &pk, &v, block);
             assert!(got.max_abs_diff(&want) < 1e-4, "block {block}");
+        }
+    }
+
+    #[test]
+    fn ragged_tail_matches_naive_and_padded() {
+        // n = 29 against blocks that do not divide it: the native ragged
+        // tail must agree with the naive oracle AND be bit-identical (on
+        // real rows) to the historical zero-pad-then-truncate recipe.
+        let mut rng = Pcg::seeded(5);
+        let (n, f, h) = (29, 6, 5);
+        let pq = Tensor::gaussian(&mut rng, &[n, f]).map(f32::abs);
+        let pk = Tensor::gaussian(&mut rng, &[n, f]).map(f32::abs);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        let want = naive_linear(&pq, &pk, &v);
+        for block in [4usize, 8, 16, 64] {
+            let got = linear_attention_block(&pq, &pk, &v, block);
+            assert!(got.max_abs_diff(&want) < 1e-4, "block {block}");
+
+            let np = n.div_ceil(block) * block;
+            let pad = |t: &Tensor| {
+                let mut out = Tensor::zeros(&[np, t.cols()]);
+                out.data_mut()[..t.len()].copy_from_slice(t.data());
+                out
+            };
+            let padded = linear_attention_block(&pad(&pq), &pad(&pk), &pad(&v), block);
+            for i in 0..n {
+                assert_eq!(got.row(i), padded.row(i), "block {block} row {i}");
+            }
         }
     }
 

@@ -1,0 +1,343 @@
+//! [`FeatureMap`] — the kernel-trick interface every linear (and exact
+//! polynomial) attention factors through.
+//!
+//! A feature map turns raw q/k rows into *mapped* rows such that the
+//! attention weight between positions i ≥ j is `score(map(q_i), map(k_j))`
+//! = ⟨φ(q_i), φ(k_j)⟩ for an implicit non-negative feature φ, and
+//! `expand` materializes φ itself (the prefix-state feature the linear
+//! engine folds into `Z += φ(k)ᵀ [v | 1]`).  Keeping the mapped form
+//! separate from φ is Section 3.1's trick: polysketch buffers r-dim half
+//! sketches and scores diagonal blocks with `(L Rᵀ)²` — the r²-dim φ is
+//! only ever expanded row-by-row into the prefix state.
+
+use std::sync::Arc;
+
+use crate::attn::block_lt::self_tensor_row;
+use crate::attn::performer::PerformerFeatures;
+use crate::attn::poly::powi;
+use crate::attn::sketch::{HalfRowScratch, PolySketch};
+use crate::tensor::{dot, layernorm_rows, ln_row, Tensor, TensorView};
+
+/// Reusable per-state scratch for [`FeatureMap::map_row`] — the decode
+/// hot path (token × layer × head) must not rebuild recursion
+/// intermediates on every call.  Contents are overwritten before every
+/// read, so cloning (decode states are `Clone` for the prompt cache)
+/// just carries capacity, never data.
+#[derive(Clone, Debug, Default)]
+pub struct MapScratch {
+    /// Half-sketch recursion buffers (polysketch maps).
+    pub sketch: HalfRowScratch,
+}
+
+/// Maps raw attention rows to kernel features.  Object safe: engines
+/// hold `Arc<dyn FeatureMap>` and the serving stack never learns which
+/// map is behind a head.
+pub trait FeatureMap: Send + Sync {
+    /// Width f of the expanded prefix feature φ (the linear engine's Z is
+    /// f × (h+1)).  Panics for maps with no tractable expansion
+    /// ([`IdentityPowerMap`]) — those serve only as diagonal/quadratic
+    /// score maps.
+    fn feat_dim(&self) -> usize;
+
+    /// Map a whole (n, h) matrix of raw rows to (n, map_dim).
+    fn map(&self, x: &TensorView<'_>) -> Tensor;
+
+    /// Map one raw row — bitwise identical to the corresponding row of
+    /// [`FeatureMap::map`].
+    fn map_row(&self, row: &[f32], scratch: &mut MapScratch) -> Vec<f32>;
+
+    /// Is this map "row layernorm, then a pure function of the
+    /// normalized row"?  When a global and a local map both
+    /// prenormalize, the linear engine computes the layernorm **once**
+    /// per raw row and feeds [`FeatureMap::map_normed_row`] to both —
+    /// keeping the per-token decode cost flat (one LN per row, as the
+    /// pre-trait-core code had).
+    fn prenormalizes(&self) -> bool {
+        false
+    }
+
+    /// Map an already-layernormed row; bitwise identical to
+    /// `map_row(raw)` when `normed == ln_row(raw)`.  Called only when
+    /// [`FeatureMap::prenormalizes`] returns true.
+    fn map_normed_row(&self, _normed: &[f32], _scratch: &mut MapScratch) -> Vec<f32> {
+        unreachable!("map_normed_row on a map that does not prenormalize")
+    }
+
+    /// Kernel value ⟨φ(a), φ(b)⟩ from two *mapped* rows, without
+    /// expanding φ.
+    fn score(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// Expand a mapped row into φ (length [`FeatureMap::feat_dim`]).
+    /// Panics for score-only maps ([`IdentityPowerMap`]).
+    fn expand(&self, mapped: &[f32], out: &mut [f32]);
+}
+
+// ---------------------------------------------------------- polysketch
+
+/// Algorithm 1: layernorm, then the degree-p/2 half sketch L; the
+/// implicit non-negative feature is the row self-tensor φ = l ⊗ l
+/// (Theorem 2.4), so scores square the half-sketch dot.
+pub struct PolySketchMap {
+    sk: Arc<PolySketch>,
+}
+
+impl PolySketchMap {
+    pub fn new(sk: Arc<PolySketch>) -> PolySketchMap {
+        PolySketchMap { sk }
+    }
+}
+
+impl FeatureMap for PolySketchMap {
+    fn feat_dim(&self) -> usize {
+        self.sk.r * self.sk.r
+    }
+
+    fn map(&self, x: &TensorView<'_>) -> Tensor {
+        self.sk.half(&layernorm_rows(x))
+    }
+
+    fn map_row(&self, row: &[f32], scratch: &mut MapScratch) -> Vec<f32> {
+        self.sk.half_row_scratch(&ln_row(row), &mut scratch.sketch)
+    }
+
+    fn prenormalizes(&self) -> bool {
+        true
+    }
+
+    fn map_normed_row(&self, normed: &[f32], scratch: &mut MapScratch) -> Vec<f32> {
+        self.sk.half_row_scratch(normed, &mut scratch.sketch)
+    }
+
+    fn score(&self, a: &[f32], b: &[f32]) -> f32 {
+        let s = dot(a, b);
+        s * s // (L R^T)^2: phi' never materialized
+    }
+
+    fn expand(&self, mapped: &[f32], out: &mut [f32]) {
+        self_tensor_row(mapped, out);
+    }
+}
+
+// ----------------------------------------------------------- performer
+
+/// FAVOR+ positive random features: φ is the mapped row itself.
+pub struct PerformerMap {
+    feats: Arc<PerformerFeatures>,
+}
+
+impl PerformerMap {
+    pub fn new(feats: Arc<PerformerFeatures>) -> PerformerMap {
+        PerformerMap { feats }
+    }
+}
+
+impl FeatureMap for PerformerMap {
+    fn feat_dim(&self) -> usize {
+        self.feats.w.cols()
+    }
+
+    fn map(&self, x: &TensorView<'_>) -> Tensor {
+        self.feats.apply(x)
+    }
+
+    fn map_row(&self, row: &[f32], _scratch: &mut MapScratch) -> Vec<f32> {
+        self.feats.apply_row(row)
+    }
+
+    fn score(&self, a: &[f32], b: &[f32]) -> f32 {
+        dot(a, b)
+    }
+
+    fn expand(&self, mapped: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(mapped);
+    }
+}
+
+// ----------------------------------------------- identity-power (exact)
+
+/// The exact degree-p polynomial kernel: mapped rows are layernormed raw
+/// rows, scores are ⟨q', k'⟩^p.  φ would be the degree-p tensor power
+/// (h^p dims) — intractable as a prefix feature, so this map is
+/// score-only: it drives the quadratic engine's exact-poly path and the
+/// linear engine's Section 3.2 local-exact diagonal blocks.
+pub struct IdentityPowerMap {
+    p: u32,
+}
+
+impl IdentityPowerMap {
+    pub fn new(p: u32) -> IdentityPowerMap {
+        IdentityPowerMap { p }
+    }
+}
+
+impl FeatureMap for IdentityPowerMap {
+    fn feat_dim(&self) -> usize {
+        panic!("identity-power features have no tractable prefix expansion (score-only map)");
+    }
+
+    fn map(&self, x: &TensorView<'_>) -> Tensor {
+        layernorm_rows(x)
+    }
+
+    fn map_row(&self, row: &[f32], _scratch: &mut MapScratch) -> Vec<f32> {
+        ln_row(row)
+    }
+
+    fn prenormalizes(&self) -> bool {
+        true
+    }
+
+    fn map_normed_row(&self, normed: &[f32], _scratch: &mut MapScratch) -> Vec<f32> {
+        normed.to_vec()
+    }
+
+    fn score(&self, a: &[f32], b: &[f32]) -> f32 {
+        powi(dot(a, b), self.p)
+    }
+
+    fn expand(&self, _mapped: &[f32], _out: &mut [f32]) {
+        panic!("identity-power features have no tractable prefix expansion (score-only map)");
+    }
+}
+
+// ------------------------------------------------- pre-mapped adapters
+
+/// Adapter for callers that already hold explicit feature rows (the
+/// classic `lt(φ_q φ_kᵀ) [V|1]` interface): map is the identity, φ is
+/// the row itself.
+pub struct DirectFeatures {
+    f: usize,
+}
+
+impl DirectFeatures {
+    pub fn new(f: usize) -> DirectFeatures {
+        DirectFeatures { f }
+    }
+}
+
+impl FeatureMap for DirectFeatures {
+    fn feat_dim(&self) -> usize {
+        self.f
+    }
+
+    fn map(&self, x: &TensorView<'_>) -> Tensor {
+        x.to_tensor()
+    }
+
+    fn map_row(&self, row: &[f32], _scratch: &mut MapScratch) -> Vec<f32> {
+        row.to_vec()
+    }
+
+    fn score(&self, a: &[f32], b: &[f32]) -> f32 {
+        dot(a, b)
+    }
+
+    fn expand(&self, mapped: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(mapped);
+    }
+}
+
+/// Adapter for callers that already hold *half-sketch* rows: map is the
+/// identity on r-dim rows, φ is the self-tensor (r² dims), scores square
+/// the dot — `polysketch_attention_block`'s historical contract.
+pub struct SelfTensorFeatures {
+    r: usize,
+}
+
+impl SelfTensorFeatures {
+    pub fn new(r: usize) -> SelfTensorFeatures {
+        SelfTensorFeatures { r }
+    }
+}
+
+impl FeatureMap for SelfTensorFeatures {
+    fn feat_dim(&self) -> usize {
+        self.r * self.r
+    }
+
+    fn map(&self, x: &TensorView<'_>) -> Tensor {
+        x.to_tensor()
+    }
+
+    fn map_row(&self, row: &[f32], _scratch: &mut MapScratch) -> Vec<f32> {
+        row.to_vec()
+    }
+
+    fn score(&self, a: &[f32], b: &[f32]) -> f32 {
+        let s = dot(a, b);
+        s * s
+    }
+
+    fn expand(&self, mapped: &[f32], out: &mut [f32]) {
+        self_tensor_row(mapped, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn map_row_bitwise_matches_map() {
+        let mut rng = Pcg::seeded(3);
+        let x = Tensor::gaussian(&mut rng, &[6, 8]);
+        let maps: Vec<Box<dyn FeatureMap>> = vec![
+            Box::new(PolySketchMap::new(Arc::new(PolySketch::sample(&mut rng, 8, 4, 4)))),
+            Box::new(PerformerMap::new(Arc::new(PerformerFeatures::sample(&mut rng, 8, 16)))),
+            Box::new(IdentityPowerMap::new(4)),
+            Box::new(DirectFeatures::new(8)),
+        ];
+        for (mi, map) in maps.iter().enumerate() {
+            let full = map.map(&x.view());
+            let mut scratch = MapScratch::default();
+            for i in 0..x.rows() {
+                assert_eq!(
+                    map.map_row(x.row(i), &mut scratch).as_slice(),
+                    full.row(i),
+                    "map {mi} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn map_normed_row_bitwise_matches_map_row() {
+        // The shared-layernorm fast path of the decode loop must be a
+        // pure refactor of map_row: same bytes when fed ln_row(raw).
+        let mut rng = Pcg::seeded(9);
+        let maps: Vec<Box<dyn FeatureMap>> = vec![
+            Box::new(PolySketchMap::new(Arc::new(PolySketch::sample(&mut rng, 8, 4, 4)))),
+            Box::new(IdentityPowerMap::new(4)),
+        ];
+        for (mi, map) in maps.iter().enumerate() {
+            assert!(map.prenormalizes(), "map {mi}");
+            let mut scratch = MapScratch::default();
+            for t in 0..5 {
+                let raw: Vec<f32> = rng.gaussians(8);
+                let a = map.map_row(&raw, &mut scratch);
+                let b = map.map_normed_row(&ln_row(&raw), &mut scratch);
+                assert_eq!(a, b, "map {mi} trial {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn score_matches_expanded_dot() {
+        // For expandable maps, score(a, b) must equal <phi(a), phi(b)>.
+        let mut rng = Pcg::seeded(4);
+        let maps: Vec<Box<dyn FeatureMap>> = vec![
+            Box::new(SelfTensorFeatures::new(5)),
+            Box::new(DirectFeatures::new(5)),
+        ];
+        for map in &maps {
+            let a: Vec<f32> = rng.gaussians(5);
+            let b: Vec<f32> = rng.gaussians(5);
+            let f = map.feat_dim();
+            let (mut pa, mut pb) = (vec![0.0; f], vec![0.0; f]);
+            map.expand(&a, &mut pa);
+            map.expand(&b, &mut pb);
+            assert!((map.score(&a, &b) - dot(&pa, &pb)).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,304 @@
+//! The linear engine: Section 3.1/3.2's block lower-triangular algorithm
+//! as the *single* implementation behind every feature-map attention.
+//!
+//! Computes `lt(φ_q φ_kᵀ) [V | 1]` in time linear in n: per block
+//! `H_l = φ_k_lᵀ [V_l|1]`, exclusive prefix `Z_l = Σ_{j<l} H_j`, diagonal
+//! `P_l = lt(score(q, k)) [V_l|1]`, and row i of the result is
+//! `P_l[i'] + φ(q_i) Z_l`.  The all-ones column riding with V produces
+//! the normalizer, so numerator and the paper's `1 +` denominator come
+//! out of one pass.  The tail block is processed *ragged* — callers
+//! never zero-pad.
+//!
+//! One loop serves three historical kernels:
+//! * explicit features (`DirectFeatures`) — the classic
+//!   `linear_attention_block` interface, used by Performer;
+//! * half sketches (`PolySketchMap` / `SelfTensorFeatures`) — diagonal
+//!   scores are `(L Rᵀ)²` (Sec. 3.1's O(b² r) trick), prefix features
+//!   the r²-dim self-tensor, expanded row by row;
+//! * local-exact (Sec. 3.2) — a second, score-only map supplies exact
+//!   `⟨q', k'⟩^p` weights inside diagonal blocks.
+//!
+//! The same decomposition *is* the decode recurrence: [`LinearState`]
+//! holds Z plus the in-progress block's mapped rows, so `step` is the
+//! b = 1-row specialization of the prefill loop and prefill leaves the
+//! state bit-for-bit where stepping every token would have.
+
+use std::sync::Arc;
+
+use crate::attn::kernel::feature::FeatureMap;
+use crate::attn::kernel::state::{KernelState, LinearState};
+use crate::attn::kernel::CausalKernel;
+use crate::tensor::{axpy, ln_row, Tensor, TensorView, TensorViewMut};
+
+/// Linear causal attention over an arbitrary [`FeatureMap`], with an
+/// optional score-only local map for exact diagonal blocks.
+pub struct LinearEngine {
+    map: Arc<dyn FeatureMap>,
+    local: Option<Arc<dyn FeatureMap>>,
+    block: usize,
+}
+
+impl LinearEngine {
+    pub fn new(
+        map: Arc<dyn FeatureMap>,
+        local: Option<Arc<dyn FeatureMap>>,
+        block: usize,
+    ) -> LinearEngine {
+        LinearEngine { map, local, block: block.max(1) }
+    }
+
+    /// The unified blocked pass over *already-mapped* rows.  `mq`/`mk`
+    /// are (n, c) mapped matrices; `lq`/`lk` (when a local map is
+    /// configured) are the locally-mapped matrices scoring diagonal
+    /// blocks.  Writes (n, h) into `out`; when `state` is given (must be
+    /// fresh) it is left holding Z of every *full* block plus the ragged
+    /// tail buffered — exactly what absorbing all n rows produces.
+    pub(crate) fn forward_mapped(
+        &self,
+        mq: &Tensor,
+        mk: &Tensor,
+        lq: Option<&Tensor>,
+        lk: Option<&Tensor>,
+        v: &TensorView<'_>,
+        state: Option<&mut LinearState>,
+        out: &mut TensorViewMut<'_>,
+    ) {
+        let n = mq.rows();
+        let h = v.cols();
+        assert_eq!(mk.rows(), n);
+        assert_eq!(v.rows(), n);
+        assert_eq!((out.rows(), out.cols()), (n, h));
+        if n == 0 {
+            return;
+        }
+        let f = self.map.feat_dim();
+        let hc = h + 1;
+        // The partition period is the *configured* block, never clamped:
+        // it is the decode-state contract (a prompt shorter than one
+        // block stays entirely buffered, exactly like pure stepping).
+        let b = self.block;
+        let bm = b.min(n); // widest block that actually occurs
+        let nb = n.div_ceil(b);
+        let local = self.local.as_ref().map(|m| {
+            (m, lq.expect("local map needs mapped q"), lk.expect("local map needs mapped k"))
+        });
+
+        let mut z = vec![0.0f32; f * hc];
+        let mut scores = vec![0.0f32; bm * bm];
+        let mut pl = vec![0.0f32; bm * hc];
+        let mut phi = vec![0.0f32; f];
+
+        for l in 0..nb {
+            let base = l * b;
+            let bl = b.min(n - base); // ragged tail: shorter final block
+            // Diagonal block scores lt(score(q_i, k_j)).
+            for bi in 0..bl {
+                let srow = &mut scores[bi * bm..bi * bm + bl];
+                match &local {
+                    Some((lm, lq, lk)) => {
+                        let qi = lq.row(base + bi);
+                        for bj in 0..=bi {
+                            srow[bj] = lm.score(qi, lk.row(base + bj));
+                        }
+                    }
+                    None => {
+                        let qi = mq.row(base + bi);
+                        for bj in 0..=bi {
+                            srow[bj] = self.map.score(qi, mk.row(base + bj));
+                        }
+                    }
+                }
+            }
+            // Prefix contribution: pl[bi] = phi(q_i) . Z, the phi feature
+            // expanded row-by-row into scratch.
+            for bi in 0..bl {
+                self.map.expand(mq.row(base + bi), &mut phi);
+                let prow = &mut pl[bi * hc..(bi + 1) * hc];
+                prow.fill(0.0);
+                for (c, &qv) in phi.iter().enumerate() {
+                    if qv == 0.0 {
+                        continue;
+                    }
+                    axpy(prow, &z[c * hc..(c + 1) * hc], qv);
+                }
+            }
+            // Diagonal contribution + emit normalized rows.
+            for bi in 0..bl {
+                let prow = &mut pl[bi * hc..(bi + 1) * hc];
+                let srow = &scores[bi * bm..bi * bm + bl];
+                for bj in 0..=bi {
+                    let w = srow[bj];
+                    axpy(&mut prow[..h], v.row(base + bj), w);
+                    prow[h] += w;
+                }
+                let inv = 1.0 / (1.0 + prow[h]);
+                let orow = out.row_mut(base + bi);
+                for c in 0..h {
+                    orow[c] = prow[c] * inv;
+                }
+            }
+            // Z += phi(k_j)^T [V_l | 1] — full blocks only: a ragged tail
+            // is never read by a later block, and the decode state keeps
+            // tail rows buffered, not folded.
+            if bl == b {
+                for bj in 0..bl {
+                    self.map.expand(mk.row(base + bj), &mut phi);
+                    let vrow = v.row(base + bj);
+                    for (c, &kc) in phi.iter().enumerate() {
+                        if kc == 0.0 {
+                            continue;
+                        }
+                        let zrow = &mut z[c * hc..(c + 1) * hc];
+                        axpy(&mut zrow[..h], vrow, kc);
+                        zrow[h] += kc;
+                    }
+                }
+            }
+        }
+
+        if let Some(st) = state {
+            assert_eq!(st.tokens, 0, "prefill requires a fresh state");
+            st.ensure_init(h, f);
+            st.z.copy_from_slice(&z);
+            let full_end = (n / b) * b;
+            for i in full_end..n {
+                st.buf_mapped.push(mk.row(i).to_vec());
+                if let Some((_, _, lk)) = &local {
+                    st.buf_local.push(lk.row(i).to_vec());
+                }
+                st.buf_v.push(v.row(i).to_vec());
+            }
+            st.tokens = n;
+        }
+    }
+
+    fn flush(&self, st: &mut LinearState) {
+        let h = st.h;
+        let hc = h + 1;
+        let LinearState { z, buf_mapped, buf_local, buf_v, phi, .. } = st;
+        for (mrow, vrow) in buf_mapped.iter().zip(buf_v.iter()) {
+            self.map.expand(mrow, phi);
+            for (c, &kc) in phi.iter().enumerate() {
+                if kc == 0.0 {
+                    continue;
+                }
+                let zrow = &mut z[c * hc..(c + 1) * hc];
+                axpy(&mut zrow[..h], vrow, kc);
+                zrow[h] += kc;
+            }
+        }
+        buf_mapped.clear();
+        buf_local.clear();
+        buf_v.clear();
+    }
+
+    fn maybe_flush(&self, st: &mut LinearState) {
+        if st.buf_mapped.len() == self.block {
+            self.flush(st);
+        }
+    }
+
+    /// Map one raw row under both the global and (if any) local map,
+    /// sharing a single row layernorm when both maps prenormalize — one
+    /// LN per decode row, as the pre-trait-core code had.
+    fn map_row_pair(&self, row: &[f32], st: &mut LinearState) -> (Vec<f32>, Option<Vec<f32>>) {
+        match &self.local {
+            Some(loc) if self.map.prenormalizes() && loc.prenormalizes() => {
+                let normed = ln_row(row);
+                let m = self.map.map_normed_row(&normed, &mut st.scratch);
+                let l = loc.map_normed_row(&normed, &mut st.scratch);
+                (m, Some(l))
+            }
+            Some(loc) => {
+                let m = self.map.map_row(row, &mut st.scratch);
+                let l = loc.map_row(row, &mut st.scratch);
+                (m, Some(l))
+            }
+            None => (self.map.map_row(row, &mut st.scratch), None),
+        }
+    }
+
+    /// Append a key to the in-progress block (no flush: the current
+    /// position's output must still see this block as the diagonal).
+    fn buffer_key(&self, k: &[f32], v: &[f32], st: &mut LinearState) {
+        st.ensure_init(v.len(), self.map.feat_dim());
+        let (mk, lk) = self.map_row_pair(k, st);
+        st.buf_mapped.push(mk);
+        if let Some(lk) = lk {
+            st.buf_local.push(lk);
+        }
+        st.buf_v.push(v.to_vec());
+        st.tokens += 1;
+    }
+
+    fn linear_state<'a>(&self, state: &'a mut KernelState) -> &'a mut LinearState {
+        match state {
+            KernelState::Linear(st) => st,
+            KernelState::Kv(_) => panic!("linear engine handed a KV state"),
+        }
+    }
+}
+
+impl CausalKernel for LinearEngine {
+    fn new_state(&self) -> KernelState {
+        KernelState::Linear(LinearState::new())
+    }
+
+    fn prefill_into(
+        &self,
+        q: &TensorView<'_>,
+        k: &TensorView<'_>,
+        v: &TensorView<'_>,
+        state: Option<&mut KernelState>,
+        out: &mut TensorViewMut<'_>,
+    ) {
+        let mq = self.map.map(q);
+        let mk = self.map.map(k);
+        let (lq, lk) = match &self.local {
+            Some(loc) => (Some(loc.map(q)), Some(loc.map(k))),
+            None => (None, None),
+        };
+        let st = state.map(|s| self.linear_state(s));
+        self.forward_mapped(&mq, &mk, lq.as_ref(), lk.as_ref(), v, st, out);
+    }
+
+    fn step(&self, q: &[f32], k: &[f32], v: &[f32], state: &mut KernelState) -> Vec<f32> {
+        let st = self.linear_state(state);
+        self.buffer_key(k, v, st);
+        let (mq, lq) = self.map_row_pair(q, st);
+        let hc = st.h + 1;
+        // Prefix contribution phi(q) . Z — same feature-order
+        // accumulation as the blocked prefill's prefix pass.
+        self.map.expand(&mq, &mut st.phi);
+        let mut acc = vec![0.0f32; hc];
+        for (c, &qv) in st.phi.iter().enumerate() {
+            if qv == 0.0 {
+                continue;
+            }
+            axpy(&mut acc, &st.z[c * hc..(c + 1) * hc], qv);
+        }
+        // Diagonal block: engine scores (or exact local scores) over the
+        // buffered in-progress rows.
+        for j in 0..st.buf_mapped.len() {
+            let w = match (&self.local, &lq) {
+                (Some(loc), Some(lq)) => loc.score(lq, &st.buf_local[j]),
+                _ => self.map.score(&mq, &st.buf_mapped[j]),
+            };
+            axpy(&mut acc[..st.h], &st.buf_v[j], w);
+            acc[st.h] += w;
+        }
+        let inv = 1.0 / (1.0 + acc[st.h]);
+        acc.truncate(st.h);
+        for o in acc.iter_mut() {
+            *o *= inv;
+        }
+        self.maybe_flush(st);
+        acc
+    }
+
+    fn absorb(&self, k: &[f32], v: &[f32], state: &mut KernelState) {
+        let st = self.linear_state(state);
+        self.buffer_key(k, v, st);
+        self.maybe_flush(st);
+    }
+}

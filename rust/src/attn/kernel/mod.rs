@@ -1,0 +1,385 @@
+//! The kernel core: every attention mechanism behind two traits.
+//!
+//! PolySketchFormer's central observation (Sec. 3.1/3.2) is that one
+//! block-based lower-triangular algorithm serves *every* feature-map
+//! attention; this module is that observation as architecture.  Two
+//! traits:
+//!
+//! * [`FeatureMap`] — maps raw q/k rows to kernel features.  Impls:
+//!   [`feature::PolySketchMap`] (LN → half sketch, Algorithm 1),
+//!   [`feature::PerformerMap`] (FAVOR+), [`feature::IdentityPowerMap`]
+//!   (LN + degree-p dot — the exact polynomial kernel, also the
+//!   local-exact diagonal of Sec. 3.2), plus the pre-mapped adapters
+//!   [`feature::DirectFeatures`] / [`feature::SelfTensorFeatures`].
+//! * [`CausalKernel`] — object-safe prefill/step/state interface with
+//!   exactly **two** concrete engines: [`quadratic::QuadraticEngine`]
+//!   (softmax / flash / exact poly over a KV cache) and
+//!   [`linear::LinearEngine`] (every feature map through the one ragged
+//!   block-lower-triangular path with a recurrent prefix state).
+//!
+//! [`Mechanism`] — the user-facing configuration enum — lives here too,
+//! and `build_kernel` is its **only** dispatch point: outside this
+//! module no code matches on mechanism variants (CI greps for it).
+//! Adding a mechanism (e.g. the paper's learned or mixed sketches) means
+//! implementing a `FeatureMap` and extending `build_kernel` — the
+//! decode states, serving cache, scheduler, and benches come for free.
+
+pub mod feature;
+pub mod linear;
+pub mod quadratic;
+pub mod state;
+
+use std::sync::Arc;
+
+use crate::attn::performer::PerformerFeatures;
+use crate::attn::sketch::PolySketch;
+use crate::exec::pool;
+use crate::tensor::{Tensor, TensorView, TensorViewMut};
+use crate::util::rng::Pcg;
+
+pub use feature::{FeatureMap, MapScratch};
+pub use linear::LinearEngine;
+pub use quadratic::QuadraticEngine;
+pub use state::{KernelState, KvState, LinearState};
+
+/// Which attention mechanism to run (native path).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Mechanism {
+    /// Naive causal softmax (quadratic, row-streaming).
+    Softmax,
+    /// FlashAttention-style blocked softmax (quadratic, tiled).
+    Flash { block: usize },
+    /// Exact degree-p polynomial attention (quadratic).
+    Poly { p: u32 },
+    /// Polysketch attention (linear): sketch size r, block b, degree p,
+    /// optional local-exact diagonal blocks.
+    Polysketch { r: usize, p: u32, block: usize, local: bool },
+    /// Performer/FAVOR+ (linear) with m features.
+    Performer { m: usize, block: usize },
+}
+
+impl Mechanism {
+    pub fn label(&self) -> String {
+        match self {
+            Mechanism::Softmax => "softmax".into(),
+            Mechanism::Flash { block } => format!("flash_b{block}"),
+            Mechanism::Poly { p } => format!("poly{p}"),
+            Mechanism::Polysketch { r, p, block, local } => {
+                format!("psk{p}_r{r}_b{block}{}", if *local { "_local" } else { "" })
+            }
+            Mechanism::Performer { m, block } => format!("performer{m}_b{block}"),
+        }
+    }
+
+    /// Parse a mechanism label — the exact inverse of [`Mechanism::label`]:
+    /// `softmax`, `flash_b<block>`, `poly<p>`, `psk<p>_r<r>_b<block>[_local]`,
+    /// `performer<m>_b<block>`.  Shared by the CLI `generate`/`serve`
+    /// subcommands and the benches so mechanism strings are spelled one
+    /// way everywhere.
+    pub fn parse(s: &str) -> Result<Mechanism, String> {
+        let err = || format!("bad mechanism `{s}` (want softmax | flash_b<B> | poly<P> | psk<P>_r<R>_b<B>[_local] | performer<M>_b<B>)");
+        if s == "softmax" {
+            return Ok(Mechanism::Softmax);
+        }
+        if let Some(rest) = s.strip_prefix("flash_b") {
+            let block: usize = rest.parse().map_err(|_| err())?;
+            if block == 0 {
+                return Err(format!("bad mechanism `{s}`: block must be >= 1"));
+            }
+            return Ok(Mechanism::Flash { block });
+        }
+        if let Some(rest) = s.strip_prefix("poly") {
+            let p: u32 = rest.parse().map_err(|_| err())?;
+            if p < 2 || p % 2 != 0 {
+                return Err(format!("bad mechanism `{s}`: poly degree must be even and >= 2"));
+            }
+            return Ok(Mechanism::Poly { p });
+        }
+        if let Some(rest) = s.strip_prefix("psk") {
+            let (body, local) = match rest.strip_suffix("_local") {
+                Some(b) => (b, true),
+                None => (rest, false),
+            };
+            let mut it = body.split('_');
+            let p = it.next().and_then(|t| t.parse().ok()).ok_or_else(err)?;
+            let r = it
+                .next()
+                .and_then(|t| t.strip_prefix('r'))
+                .and_then(|t| t.parse().ok())
+                .ok_or_else(err)?;
+            let block = it
+                .next()
+                .and_then(|t| t.strip_prefix('b'))
+                .and_then(|t| t.parse().ok())
+                .ok_or_else(err)?;
+            if it.next().is_some() {
+                return Err(err());
+            }
+            if p < 2 || !u32::is_power_of_two(p) {
+                return Err(format!("bad mechanism `{s}`: psk degree must be a power of two >= 2"));
+            }
+            if r == 0 || block == 0 {
+                return Err(format!("bad mechanism `{s}`: sketch size and block must be >= 1"));
+            }
+            return Ok(Mechanism::Polysketch { r, p, block, local });
+        }
+        if let Some(rest) = s.strip_prefix("performer") {
+            let (m, block) = rest.split_once("_b").ok_or_else(err)?;
+            let m: usize = m.parse().map_err(|_| err())?;
+            let block: usize = block.parse().map_err(|_| err())?;
+            if m == 0 || block == 0 {
+                return Err(format!("bad mechanism `{s}`: feature count and block must be >= 1"));
+            }
+            return Ok(Mechanism::Performer { m, block });
+        }
+        Err(err())
+    }
+
+    /// Linear-time in context length?
+    pub fn is_linear(&self) -> bool {
+        matches!(self, Mechanism::Polysketch { .. } | Mechanism::Performer { .. })
+    }
+
+    /// Instantiate the kernel engine for one head: samples the mechanism's
+    /// random state (sketches/features) from `rng` and wires it into the
+    /// matching engine.  **The single dispatch point** — every prefill,
+    /// decode step, cache snapshot, and bench flows through the object
+    /// this returns.
+    ///
+    /// The RNG consumption order per variant is part of the golden-fixture
+    /// contract: Polysketch draws `PolySketch::sample(rng, head_dim, r, p)`,
+    /// Performer draws `PerformerFeatures::sample(rng, head_dim, m)`, the
+    /// quadratic mechanisms draw nothing.
+    pub fn build_kernel(&self, head_dim: usize, rng: &mut Pcg) -> Arc<dyn CausalKernel> {
+        match self {
+            Mechanism::Softmax => Arc::new(QuadraticEngine::softmax()),
+            Mechanism::Flash { block } => Arc::new(QuadraticEngine::flash(*block)),
+            Mechanism::Poly { p } => Arc::new(QuadraticEngine::poly(*p)),
+            Mechanism::Polysketch { r, p, block, local } => {
+                let sk = Arc::new(PolySketch::sample(rng, head_dim, *r, *p as usize));
+                let map = Arc::new(feature::PolySketchMap::new(sk));
+                let local_map: Option<Arc<dyn FeatureMap>> = if *local {
+                    Some(Arc::new(feature::IdentityPowerMap::new(*p)))
+                } else {
+                    None
+                };
+                Arc::new(LinearEngine::new(map, local_map, *block))
+            }
+            Mechanism::Performer { m, block } => {
+                let feats = Arc::new(PerformerFeatures::sample(rng, head_dim, *m));
+                Arc::new(LinearEngine::new(
+                    Arc::new(feature::PerformerMap::new(feats)),
+                    None,
+                    *block,
+                ))
+            }
+        }
+    }
+}
+
+/// One causal-attention complexity class, instantiated for one head.
+///
+/// Object safe on purpose: models hold `Vec<Arc<dyn CausalKernel>>` and
+/// never know which engine (or feature map) is behind a head.  All three
+/// entry points operate on the *same* state type, so prefill → step →
+/// snapshot/restore compose freely:
+///
+/// * [`prefill_into`](CausalKernel::prefill_into) — full-context forward
+///   over strided views of the fused q/k/v projections, writing this
+///   head's output stripe in place and (optionally) leaving `state`
+///   exactly as if every position had been absorbed token by token;
+/// * [`step`](CausalKernel::step) — one decode token;
+/// * [`absorb`](CausalKernel::absorb) — fold a (k, v) pair without
+///   producing output (incremental prefill).
+pub trait CausalKernel: Send + Sync {
+    /// Fresh, empty decode state for this engine.
+    fn new_state(&self) -> KernelState;
+
+    /// Full-context causal attention for one head; `q`/`k`/`v` are
+    /// (n, hd) views (typically column stripes of fused projections) and
+    /// `out` is this head's (n, hd) output stripe.  When `state` is
+    /// given it must be fresh; on return it holds the full-prefix decode
+    /// state (identical to having `absorb`ed all n positions in order).
+    fn prefill_into(
+        &self,
+        q: &TensorView<'_>,
+        k: &TensorView<'_>,
+        v: &TensorView<'_>,
+        state: Option<&mut KernelState>,
+        out: &mut TensorViewMut<'_>,
+    );
+
+    /// One decode step: fold `(k, v)` into the state and return this
+    /// position's attention output for query `q`.
+    fn step(&self, q: &[f32], k: &[f32], v: &[f32], state: &mut KernelState) -> Vec<f32>;
+
+    /// Fold a key/value pair into the state without producing an output.
+    fn absorb(&self, k: &[f32], v: &[f32], state: &mut KernelState);
+
+    /// Allocating convenience over [`prefill_into`](CausalKernel::prefill_into).
+    fn prefill(
+        &self,
+        q: &TensorView<'_>,
+        k: &TensorView<'_>,
+        v: &TensorView<'_>,
+        state: Option<&mut KernelState>,
+    ) -> Tensor {
+        let mut out = Tensor::zeros(&[q.rows(), v.cols()]);
+        self.prefill_into(q, k, v, state, &mut out.view_mut());
+        out
+    }
+
+    /// Stateless full-context forward — the bench/test entry point.
+    fn forward(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        self.prefill(&q.view(), &k.view(), &v.view(), None)
+    }
+}
+
+/// Prefill every head of one layer in parallel over *fused* (n, H·hd)
+/// projections: head `h` reads the column stripes `h·hd..(h+1)·hd` of
+/// `q`/`k`/`v` through strided views and writes the same stripe of `out`
+/// in place.  This is the single pool fan-out for the prefill path —
+/// heads are independent units, and each engine parallelizes its own row
+/// blocks beneath (the pool supports nesting), so callers never touch
+/// the pool themselves.
+pub fn prefill_heads(
+    kernels: &[Arc<dyn CausalKernel>],
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    states: Option<&mut [KernelState]>,
+    out: &mut Tensor,
+) {
+    let heads = kernels.len();
+    assert!(heads > 0, "prefill_heads: no heads");
+    let qv = q.head_views(heads);
+    let kv = k.head_views(heads);
+    let vv = v.head_views(heads);
+    let ov = out.head_views_mut(heads);
+    let mut units: Vec<(TensorViewMut<'_>, Option<&mut KernelState>)> = match states {
+        Some(s) => {
+            assert_eq!(s.len(), heads, "prefill_heads: state/head count mismatch");
+            ov.into_iter().zip(s.iter_mut().map(Some)).collect()
+        }
+        None => ov.into_iter().map(|o| (o, None)).collect(),
+    };
+    pool::par_map_mut(&mut units, 1, |hi, (o, st)| {
+        kernels[hi].prefill_into(&qv[hi], &kv[hi], &vv[hi], st.as_deref_mut(), o);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn parse_inverts_label() {
+        let ms = [
+            Mechanism::Softmax,
+            Mechanism::Flash { block: 256 },
+            Mechanism::Poly { p: 4 },
+            Mechanism::Polysketch { r: 16, p: 4, block: 64, local: true },
+            Mechanism::Polysketch { r: 32, p: 2, block: 128, local: false },
+            Mechanism::Performer { m: 64, block: 256 },
+        ];
+        for m in ms {
+            assert_eq!(Mechanism::parse(&m.label()).unwrap(), m, "{}", m.label());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "", "soft", "flash", "flash_b", "flash_bxx", "poly", "polyx", "psk4",
+            "psk4_r16", "psk4_r16_b", "psk4_b64_r16", "psk4_r16_b64_extra",
+            "performer64", "performer_b64", "psk4_r16_b64_localx",
+        ] {
+            assert!(Mechanism::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_degenerate_parameters() {
+        // Values that would only panic deep inside the kernels must be
+        // rejected at the parse boundary (the CLI feeds this directly).
+        for bad in [
+            "flash_b0", "poly0", "poly1", "poly3", "psk3_r4_b8", "psk0_r4_b8",
+            "psk4_r0_b8", "psk4_r4_b0", "performer0_b8", "performer16_b0",
+        ] {
+            assert!(Mechanism::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+        // poly6 is legal for exact polynomial attention (even, not pow2)...
+        assert!(Mechanism::parse("poly6").is_ok());
+        // ...but sketches need a power of two.
+        assert!(Mechanism::parse("psk6_r4_b8").is_err());
+    }
+
+    #[test]
+    fn labels_distinct() {
+        let ms = [
+            Mechanism::Softmax,
+            Mechanism::Flash { block: 64 },
+            Mechanism::Poly { p: 4 },
+            Mechanism::Polysketch { r: 16, p: 4, block: 64, local: true },
+            Mechanism::Performer { m: 64, block: 64 },
+        ];
+        let labels: Vec<_> = ms.iter().map(|m| m.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), labels.len());
+    }
+
+    #[test]
+    fn all_mechanisms_run_and_are_finite() {
+        let mut rng = Pcg::seeded(0);
+        let (n, h) = (32, 8);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        for mech in [
+            Mechanism::Softmax,
+            Mechanism::Flash { block: 8 },
+            Mechanism::Poly { p: 4 },
+            Mechanism::Polysketch { r: 8, p: 4, block: 8, local: true },
+            Mechanism::Polysketch { r: 8, p: 4, block: 8, local: false },
+            Mechanism::Performer { m: 16, block: 8 },
+        ] {
+            let kernel = mech.build_kernel(h, &mut rng);
+            let out = kernel.forward(&q, &k, &v);
+            assert_eq!(out.shape(), &[n, h]);
+            assert!(out.data().iter().all(|x| x.is_finite()), "{}", mech.label());
+        }
+    }
+
+    #[test]
+    fn prefill_heads_matches_per_head_copies() {
+        // The strided-view fan-out must produce exactly what slicing each
+        // head into its own contiguous tensors produces.
+        let mut rng = Pcg::seeded(9);
+        let (n, heads, hd) = (24usize, 3usize, 8usize);
+        let d = heads * hd;
+        let q = Tensor::gaussian(&mut rng, &[n, d]);
+        let k = Tensor::gaussian(&mut rng, &[n, d]);
+        let v = Tensor::gaussian(&mut rng, &[n, d]);
+        for mech in [
+            Mechanism::Softmax,
+            Mechanism::Flash { block: 8 },
+            Mechanism::Poly { p: 2 },
+            Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
+            Mechanism::Performer { m: 8, block: 8 },
+        ] {
+            let mut krng = Pcg::seeded(5);
+            let kernels: Vec<_> = (0..heads).map(|_| mech.build_kernel(hd, &mut krng)).collect();
+            let mut fused = Tensor::zeros(&[n, d]);
+            prefill_heads(&kernels, &q, &k, &v, None, &mut fused);
+            for (hi, kernel) in kernels.iter().enumerate() {
+                let slice = |t: &Tensor| t.head_views(heads)[hi].to_tensor();
+                let want = kernel.forward(&slice(&q), &slice(&k), &slice(&v));
+                let got = fused.head_views(heads)[hi].to_tensor();
+                assert_eq!(got, want, "{} head {hi}", mech.label());
+            }
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! The quadratic engine: exact causal attention over a KV cache —
+//! softmax (naive or flash-blocked prefill; identical math, different
+//! schedule) and exact degree-p polynomial attention.
+//!
+//! Prefill delegates to the row/block-streaming kernels in
+//! `attn::{softmax, poly}` (which parallelize their own query rows on
+//! the deterministic pool) and captures the cache; `step` reproduces the
+//! same row arithmetic over the cache, so prefill-then-step equals pure
+//! stepping exactly.
+
+use crate::attn::kernel::state::{KernelState, KvState};
+use crate::attn::kernel::CausalKernel;
+use crate::attn::poly;
+use crate::attn::softmax;
+use crate::tensor::{layernorm_rows, ln_row, TensorView, TensorViewMut};
+
+enum QuadKind {
+    Softmax,
+    Flash { block: usize },
+    Poly { p: u32 },
+}
+
+/// Exact attention over a growing KV cache (the softmax family and the
+/// exact polynomial baseline).
+pub struct QuadraticEngine {
+    kind: QuadKind,
+}
+
+impl QuadraticEngine {
+    pub fn softmax() -> QuadraticEngine {
+        QuadraticEngine { kind: QuadKind::Softmax }
+    }
+
+    pub fn flash(block: usize) -> QuadraticEngine {
+        QuadraticEngine { kind: QuadKind::Flash { block: block.max(1) } }
+    }
+
+    pub fn poly(p: u32) -> QuadraticEngine {
+        QuadraticEngine { kind: QuadKind::Poly { p } }
+    }
+
+    fn kv_state<'a>(&self, state: &'a mut KernelState) -> &'a mut KvState {
+        match state {
+            KernelState::Kv(st) => st,
+            KernelState::Linear(_) => panic!("quadratic engine handed a linear state"),
+        }
+    }
+}
+
+impl CausalKernel for QuadraticEngine {
+    fn new_state(&self) -> KernelState {
+        KernelState::Kv(KvState::new())
+    }
+
+    fn prefill_into(
+        &self,
+        q: &TensorView<'_>,
+        k: &TensorView<'_>,
+        v: &TensorView<'_>,
+        state: Option<&mut KernelState>,
+        out: &mut TensorViewMut<'_>,
+    ) {
+        let n = q.rows();
+        // Keys are cached in score form: layernormed for exact poly, raw
+        // for the softmax family.
+        let mut normed_k: Option<crate::tensor::Tensor> = None;
+        match &self.kind {
+            QuadKind::Softmax => out.copy_from(&softmax::softmax_attention(q, k, v)),
+            QuadKind::Flash { block } => {
+                out.copy_from(&softmax::flash_attention(q, k, v, (*block).min(n.max(1))));
+            }
+            QuadKind::Poly { p } => {
+                let qn = layernorm_rows(q);
+                let kn = layernorm_rows(k);
+                out.copy_from(&poly::poly_attention_prenormed(&qn, &kn, v, *p));
+                normed_k = Some(kn);
+            }
+        }
+        if let Some(st) = state {
+            let st = self.kv_state(st);
+            assert_eq!(st.len, 0, "prefill requires a fresh state");
+            for i in 0..n {
+                match &normed_k {
+                    Some(kn) => st.push(kn.row(i), v.row(i)),
+                    None => st.push(k.row(i), v.row(i)),
+                }
+            }
+        }
+    }
+
+    fn step(&self, q: &[f32], k: &[f32], v: &[f32], state: &mut KernelState) -> Vec<f32> {
+        let st = self.kv_state(state);
+        match &self.kind {
+            // Blocked streaming is a prefill-side layout; the decode math
+            // of softmax and flash is identical.
+            QuadKind::Softmax | QuadKind::Flash { .. } => {
+                st.push(k, v);
+                st.softmax_row(q)
+            }
+            QuadKind::Poly { p } => {
+                st.push(&ln_row(k), v);
+                st.poly_row(&ln_row(q), *p)
+            }
+        }
+    }
+
+    fn absorb(&self, k: &[f32], v: &[f32], state: &mut KernelState) {
+        let st = self.kv_state(state);
+        match &self.kind {
+            QuadKind::Softmax | QuadKind::Flash { .. } => st.push(k, v),
+            QuadKind::Poly { .. } => st.push(&ln_row(k), v),
+        }
+    }
+}

@@ -1,0 +1,436 @@
+//! Decode state of one (layer, head): the recurrent view of causal
+//! attention, one variant per *engine* (not per mechanism — that is the
+//! whole point of the kernel core).
+//!
+//! * [`KvState`] — growing key/value cache for the quadratic engine
+//!   (softmax family rescans it per token: O(n));
+//! * [`LinearState`] — recurrent prefix moments `Z ∈ R^{f×(h+1)}` plus
+//!   the in-progress diagonal block's mapped rows, reproducing the
+//!   block-lower-triangular prefill partition exactly: O(1) per token,
+//!   constant memory.
+//!
+//! `Clone` is load-bearing: the serving gateway's prompt-prefix cache
+//! (`serve::cache`) stores cloned states, so a clone must be a deep,
+//! independent copy — O(f·h) for the recurrent variant, O(n·h) for the
+//! KV cache.
+
+use crate::attn::kernel::feature::MapScratch;
+use crate::tensor::{axpy, dot};
+
+/// Attention state of one (layer, head) during autoregressive decoding.
+/// Engines construct and interpret it; everyone else treats it as an
+/// opaque, cloneable blob with size/occupancy accessors.
+#[derive(Clone)]
+pub enum KernelState {
+    /// Quadratic engine: exact attention over a growing KV cache.
+    Kv(KvState),
+    /// Linear engine: recurrent prefix + in-progress block buffer.
+    Linear(LinearState),
+}
+
+impl KernelState {
+    /// Number of tokens folded in so far.
+    pub fn tokens_seen(&self) -> usize {
+        match self {
+            KernelState::Kv(st) => st.len,
+            KernelState::Linear(st) => st.tokens,
+        }
+    }
+
+    /// O(1)-per-token state (true for the linear engine)?
+    pub fn is_recurrent(&self) -> bool {
+        matches!(self, KernelState::Linear(_))
+    }
+
+    /// Current state footprint in f32 words — constant in context length
+    /// for recurrent states, linear for KV caches.
+    pub fn memory_floats(&self) -> usize {
+        match self {
+            KernelState::Kv(st) => st.k.len() + st.v.len(),
+            KernelState::Linear(st) => {
+                st.z.len()
+                    + st.buf_mapped.iter().map(Vec::len).sum::<usize>()
+                    + st.buf_local.iter().map(Vec::len).sum::<usize>()
+                    + st.buf_v.iter().map(Vec::len).sum::<usize>()
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- KV cache
+
+/// Growing key/value cache (flat row-major storage).  Keys are stored in
+/// whatever form the engine scores them in (raw for softmax, layernormed
+/// for exact poly).
+#[derive(Clone, Default)]
+pub struct KvState {
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) kd: usize,
+    pub(crate) vd: usize,
+    pub(crate) len: usize,
+}
+
+impl KvState {
+    pub(crate) fn new() -> KvState {
+        KvState::default()
+    }
+
+    pub(crate) fn push(&mut self, k: &[f32], v: &[f32]) {
+        if self.len == 0 {
+            self.kd = k.len();
+            self.vd = v.len();
+        }
+        debug_assert_eq!(k.len(), self.kd);
+        debug_assert_eq!(v.len(), self.vd);
+        self.k.extend_from_slice(k);
+        self.v.extend_from_slice(v);
+        self.len += 1;
+    }
+
+    pub(crate) fn krow(&self, j: usize) -> &[f32] {
+        &self.k[j * self.kd..(j + 1) * self.kd]
+    }
+
+    pub(crate) fn vrow(&self, j: usize) -> &[f32] {
+        &self.v[j * self.vd..(j + 1) * self.vd]
+    }
+
+    /// Stable softmax attention of one query over the cache — the same
+    /// operation order as `softmax::softmax_attention`'s row loop.
+    pub(crate) fn softmax_row(&self, q: &[f32]) -> Vec<f32> {
+        let scale = 1.0 / (q.len() as f32).sqrt();
+        let mut scores = vec![0.0f32; self.len];
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..self.len {
+            scores[j] = dot(q, self.krow(j)) * scale;
+            mx = mx.max(scores[j]);
+        }
+        let mut sum = 0.0;
+        for s in scores.iter_mut() {
+            *s = (*s - mx).exp();
+            sum += *s;
+        }
+        let mut out = vec![0.0f32; self.vd];
+        for j in 0..self.len {
+            axpy(&mut out, self.vrow(j), scores[j] / sum);
+        }
+        out
+    }
+
+    /// Degree-p polynomial attention of one (LN'd) query over the cache
+    /// of LN'd keys, with the paper's `1 +` denominator — mirrors
+    /// `poly::poly_attention_prenormed`'s row loop.
+    pub(crate) fn poly_row(&self, qn: &[f32], p: u32) -> Vec<f32> {
+        use crate::attn::poly::powi;
+        let mut out = vec![0.0f32; self.vd];
+        let mut denom = 1.0f32;
+        for j in 0..self.len {
+            let w = powi(dot(qn, self.krow(j)), p);
+            denom += w;
+            axpy(&mut out, self.vrow(j), w);
+        }
+        let inv = 1.0 / denom;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------ linear (blocked)
+
+/// Linear-engine decode state: prefix moments + current diagonal block.
+///
+/// Mirrors the blocked prefill decomposition exactly: keys in completed
+/// blocks live only as `Z += φ(k_j)ᵀ [v_j | 1]` (constant memory); keys
+/// of the in-progress block are buffered in *mapped* form so the
+/// diagonal uses the engine's score function — or, with a local map, the
+/// exact Section 3.2 scores over the locally-mapped buffer.  Work per
+/// token is O(f·h + b·c): independent of context length.
+#[derive(Clone, Default)]
+pub struct LinearState {
+    /// Value dim (+1 normalizer column); set on first token.
+    pub(crate) h: usize,
+    /// Prefix state Z: f x (h+1), row-major by feature index.
+    pub(crate) z: Vec<f32>,
+    /// In-progress block: mapped key rows.
+    pub(crate) buf_mapped: Vec<Vec<f32>>,
+    /// In-progress block: locally-mapped key rows (only with a local map).
+    pub(crate) buf_local: Vec<Vec<f32>>,
+    /// In-progress block: value rows (h,).
+    pub(crate) buf_v: Vec<Vec<f32>>,
+    /// Scratch for one φ feature row (f,) — reused every token so the
+    /// per-token hot path does not hit the allocator for it.
+    pub(crate) phi: Vec<f32>,
+    /// Feature-map scratch (e.g. the half-sketch row recursion), same
+    /// rationale: the token × layer × head hot path must not rebuild
+    /// per-level temporaries on every call.
+    pub(crate) scratch: MapScratch,
+    pub(crate) tokens: usize,
+}
+
+impl LinearState {
+    pub(crate) fn new() -> LinearState {
+        LinearState::default()
+    }
+
+    /// Allocate Z/φ on first contact with a value row of width `h`.
+    pub(crate) fn ensure_init(&mut self, h: usize, feat_dim: usize) {
+        if self.h == 0 {
+            self.h = h;
+            self.z = vec![0.0; feat_dim * (h + 1)];
+            self.phi = vec![0.0; feat_dim];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::kernel::Mechanism;
+    use crate::attn::poly::powi;
+    use crate::attn::sketch::PolySketch;
+    use crate::attn::performer::PerformerFeatures;
+    use crate::tensor::{axpy, layernorm_rows, Tensor};
+    use crate::util::rng::Pcg;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn mechs() -> Vec<Mechanism> {
+        vec![
+            Mechanism::Softmax,
+            Mechanism::Flash { block: 8 },
+            Mechanism::Poly { p: 4 },
+            Mechanism::Polysketch { r: 4, p: 4, block: 8, local: false },
+            Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
+            Mechanism::Performer { m: 16, block: 8 },
+        ]
+    }
+
+    /// Per-row causal oracle with NO blocking or padding anywhere:
+    /// softmax math for the softmax family, exact poly weights for poly,
+    /// hybrid local/sketched weights (respecting the block partition) for
+    /// polysketch, feature dots (respecting the block partition's
+    /// diagonal) for performer.  Reconstructs the mechanism's random
+    /// state from the same seeded RNG `build_kernel` consumed.
+    fn naive_oracle(mech: &Mechanism, seed: u64, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        use crate::attn::poly::poly_attention;
+        use crate::attn::softmax::softmax_attention;
+        use crate::tensor::dot;
+        let h = q.cols();
+        let mut rng = Pcg::seeded(seed);
+        let linear = |wf: &dyn Fn(usize, usize) -> f32| -> Tensor {
+            let (n, hv) = (q.rows(), v.cols());
+            let mut out = Tensor::zeros(&[n, hv]);
+            for i in 0..n {
+                let mut denom = 1.0f32;
+                let mut acc = vec![0.0f32; hv];
+                for j in 0..=i {
+                    let w = wf(i, j);
+                    denom += w;
+                    axpy(&mut acc, v.row(j), w);
+                }
+                for (o, a) in out.row_mut(i).iter_mut().zip(&acc) {
+                    *o = a / denom;
+                }
+            }
+            out
+        };
+        match mech {
+            Mechanism::Softmax | Mechanism::Flash { .. } => softmax_attention(q, k, v),
+            Mechanism::Poly { p } => poly_attention(q, k, v, *p),
+            Mechanism::Polysketch { r, p, block, local } => {
+                let sk = PolySketch::sample(&mut rng, h, *r, *p as usize);
+                let qn = layernorm_rows(q);
+                let kn = layernorm_rows(k);
+                let lq = sk.half(&qn);
+                let lk = sk.half(&kn);
+                linear(&|i, j| {
+                    if *local && i / block == j / block {
+                        powi(dot(qn.row(i), kn.row(j)), *p)
+                    } else {
+                        let s = dot(lq.row(i), lk.row(j));
+                        s * s
+                    }
+                })
+            }
+            Mechanism::Performer { m, block } => {
+                let feats = PerformerFeatures::sample(&mut rng, h, *m);
+                let pq = feats.apply(q);
+                let pk = feats.apply(k);
+                // The blocked kernel scores the in-progress diagonal block
+                // directly and the prefix through Z — mathematically the
+                // same plain feature dot everywhere.
+                let _ = block;
+                linear(&|i, j| dot(pq.row(i), pk.row(j)))
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_prefill_matches_unpadded_oracle() {
+        // n = 13 against block 8: the kernels process the ragged tail
+        // natively — every row must match an oracle computed with no
+        // blocking at all, for every mechanism.
+        let mut rng = Pcg::seeded(11);
+        let (n, h) = (13usize, 8);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        for mech in mechs() {
+            let kernel = mech.build_kernel(h, &mut Pcg::seeded(17));
+            let got = kernel.forward(&q, &k, &v);
+            let want = naive_oracle(&mech, 17, &q, &k, &v);
+            for i in 0..n {
+                for (g, w) in got.row(i).iter().zip(want.row(i)) {
+                    assert!(close(*g, *w, 2e-3), "{} row {i}: {g} vs {w}", mech.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_matches_full_context_attention() {
+        // The parity anchor at the attention level: token-by-token decode
+        // must reproduce the full-context kernel row by row, including at
+        // lengths that straddle block boundaries.
+        let mut rng = Pcg::seeded(0);
+        let h = 8;
+        for n in [5usize, 8, 13, 24] {
+            let q = Tensor::gaussian(&mut rng, &[n, h]);
+            let k = Tensor::gaussian(&mut rng, &[n, h]);
+            let v = Tensor::gaussian(&mut rng, &[n, h]);
+            for mech in mechs() {
+                let kernel = mech.build_kernel(h, &mut Pcg::seeded(11));
+                let want = kernel.forward(&q, &k, &v);
+                let mut st = kernel.new_state();
+                for i in 0..n {
+                    let got = kernel.step(q.row(i), k.row(i), v.row(i), &mut st);
+                    for (g, w) in got.iter().zip(want.row(i)) {
+                        assert!(
+                            close(*g, *w, 2e-3),
+                            "{} n={n} row {i}: {g} vs {w}",
+                            mech.label()
+                        );
+                    }
+                }
+                assert_eq!(st.tokens_seen(), n);
+            }
+        }
+    }
+
+    #[test]
+    fn absorb_then_step_matches_pure_stepping() {
+        // Absorbing a prefix must leave the state exactly where stepping
+        // token-by-token would have — byte-for-byte.
+        let mut rng = Pcg::seeded(1);
+        let (n, h, split) = (19usize, 8, 11usize);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        for mech in mechs() {
+            let kernel = mech.build_kernel(h, &mut Pcg::seeded(3));
+            let mut stepped = kernel.new_state();
+            let mut absorbed = kernel.new_state();
+            for i in 0..split {
+                kernel.step(q.row(i), k.row(i), v.row(i), &mut stepped);
+                kernel.absorb(k.row(i), v.row(i), &mut absorbed);
+            }
+            for i in split..n {
+                let a = kernel.step(q.row(i), k.row(i), v.row(i), &mut stepped);
+                let b = kernel.step(q.row(i), k.row(i), v.row(i), &mut absorbed);
+                assert_eq!(a, b, "{} row {i}", mech.label());
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_state_bitwise_matches_absorb_loop() {
+        // The engines capture the decode state *inside* the blocked
+        // prefill pass (no per-row absorb sweep); the captured state must
+        // continue byte-identically to one built by absorbing row by row.
+        let mut rng = Pcg::seeded(8);
+        let h = 8;
+        for n in [5usize, 8, 13, 16, 24] {
+            let q = Tensor::gaussian(&mut rng, &[n, h]);
+            let k = Tensor::gaussian(&mut rng, &[n, h]);
+            let v = Tensor::gaussian(&mut rng, &[n, h]);
+            for mech in mechs() {
+                let kernel = mech.build_kernel(h, &mut Pcg::seeded(29));
+                let mut captured = kernel.new_state();
+                kernel.prefill(&q.view(), &k.view(), &v.view(), Some(&mut captured));
+                let mut absorbed = kernel.new_state();
+                for i in 0..n {
+                    kernel.absorb(k.row(i), v.row(i), &mut absorbed);
+                }
+                assert_eq!(captured.tokens_seen(), absorbed.tokens_seen());
+                assert_eq!(captured.memory_floats(), absorbed.memory_floats());
+                let (nq, nk, nv) = (rng.gaussians(h), rng.gaussians(h), rng.gaussians(h));
+                let a = kernel.step(&nq, &nk, &nv, &mut captured);
+                let b = kernel.step(&nq, &nk, &nv, &mut absorbed);
+                assert_eq!(a, b, "{} n={n}", mech.label());
+            }
+        }
+    }
+
+    #[test]
+    fn recurrent_states_have_constant_memory() {
+        let mut rng = Pcg::seeded(2);
+        let h = 8;
+        for mech in mechs() {
+            let kernel = mech.build_kernel(h, &mut rng);
+            let mut st = kernel.new_state();
+            let probe = |st: &mut KernelState, rng: &mut Pcg, n: usize| {
+                for _ in 0..n {
+                    let q: Vec<f32> = rng.gaussians(h);
+                    let k: Vec<f32> = rng.gaussians(h);
+                    let v: Vec<f32> = rng.gaussians(h);
+                    kernel.step(&q, &k, &v, st);
+                }
+                st.memory_floats()
+            };
+            let m64 = probe(&mut st, &mut rng, 64);
+            let m256 = probe(&mut st, &mut rng, 192);
+            if st.is_recurrent() {
+                // Buffer occupancy wobbles within a block; totals must not
+                // grow with tokens. 64 and 256 are both block multiples.
+                assert_eq!(m64, m256, "{}", mech.label());
+            } else {
+                assert!(m256 > m64, "{}", mech.label());
+            }
+        }
+    }
+
+    #[test]
+    fn cloned_state_is_deep_and_continues_identically() {
+        // The cache primitive: a cloned state must be an independent deep
+        // copy — identical continuation under identical inputs, and no
+        // aliasing (stepping one must not perturb the other).
+        let mut rng = Pcg::seeded(7);
+        let h = 8;
+        for mech in mechs() {
+            let kernel = mech.build_kernel(h, &mut Pcg::seeded(5));
+            let mut orig = kernel.new_state();
+            for _ in 0..13 {
+                let (q, k, v) = (rng.gaussians(h), rng.gaussians(h), rng.gaussians(h));
+                kernel.step(&q, &k, &v, &mut orig);
+            }
+            let mut copy = orig.clone();
+            assert_eq!(copy.tokens_seen(), orig.tokens_seen());
+            // Divergent input on the copy leaves the original untouched...
+            let (dq, dk, dv) = (rng.gaussians(h), rng.gaussians(h), rng.gaussians(h));
+            kernel.step(&dq, &dk, &dv, &mut copy);
+            // ...so a fresh clone of the original still replays the copy's
+            // step bit-for-bit.
+            let mut copy2 = orig.clone();
+            let a = kernel.step(&dq, &dk, &dv, &mut copy2);
+            let mut copy3 = orig.clone();
+            let b = kernel.step(&dq, &dk, &dv, &mut copy3);
+            assert_eq!(a, b, "{}", mech.label());
+            assert_eq!(orig.tokens_seen(), 13, "{}", mech.label());
+        }
+    }
+}

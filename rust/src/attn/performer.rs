@@ -1,7 +1,7 @@
 //! Performer (FAVOR+) baseline: positive orthogonal random features.
 
 use crate::exec::pool;
-use crate::tensor::{dot, Tensor};
+use crate::tensor::{dot, matmul_rowmat, RowMat, Tensor};
 use crate::util::rng::Pcg;
 use crate::attn::block_lt::linear_attention_block;
 
@@ -54,12 +54,14 @@ impl PerformerFeatures {
     }
 
     /// phi(x) = exp(w^T x - ||x||^2 / 2) / sqrt(m): (n, h) -> (n, m).
-    /// Row-parallel (rows are independent; bitwise thread-count invariant).
-    pub fn apply(&self, x: &Tensor) -> Tensor {
+    /// Row-parallel (rows are independent; bitwise thread-count
+    /// invariant), generic over [`RowMat`] so strided per-head views of
+    /// fused projections map without a copy.
+    pub fn apply(&self, x: &impl RowMat) -> Tensor {
         let (n, h) = (x.rows(), x.cols());
         assert_eq!(h, self.w.rows());
         let m = self.w.cols();
-        let proj = x.matmul(&self.w);
+        let proj = matmul_rowmat(x, &self.w);
         let mut out = Tensor::zeros(&[n, m]);
         if out.is_empty() {
             return out;
@@ -101,12 +103,13 @@ fn chi_sample(rng: &mut Pcg, h: usize) -> f32 {
     s.sqrt()
 }
 
-/// Full Performer attention: features + block lt-multiplication.
+/// Full Performer attention: features + block lt-multiplication (the
+/// unified linear engine underneath; ragged n handled natively).
 pub fn performer_attention(q: &Tensor, k: &Tensor, v: &Tensor,
                            feats: &PerformerFeatures, block: usize) -> Tensor {
     let pq = feats.apply(q);
     let pk = feats.apply(k);
-    linear_attention_block(&pq, &pk, &v.clone(), block)
+    linear_attention_block(&pq, &pk, v, block)
 }
 
 #[cfg(test)]

@@ -1,7 +1,7 @@
 //! Exact degree-p polynomial attention (Section 2.1) — quadratic baseline.
 
 use crate::exec::pool;
-use crate::tensor::{axpy, dot, layernorm_rows, Tensor};
+use crate::tensor::{axpy, dot, layernorm_rows, RowMat, Tensor};
 
 /// Quadratic work (n² · h MACs) below which the kernel runs inline —
 /// the same tuning knob family as `attn::softmax::PAR_MIN_WORK`.
@@ -26,7 +26,7 @@ pub fn powi(x: f32, p: u32) -> f32 {
 /// Causal degree-p polynomial attention with layer-normalized q/k and the
 /// paper's `1 +` denominator:
 ///   out_i = sum_{j<=i} <q'_i,k'_j>^p v_j / (1 + sum_{j<=i} <q'_i,k'_j>^p).
-pub fn poly_attention(q: &Tensor, k: &Tensor, v: &Tensor, p: u32) -> Tensor {
+pub fn poly_attention(q: &impl RowMat, k: &impl RowMat, v: &impl RowMat, p: u32) -> Tensor {
     assert!(p >= 2 && p % 2 == 0, "even p >= 2 required, got {p}");
     let qn = layernorm_rows(q);
     let kn = layernorm_rows(k);
@@ -36,7 +36,7 @@ pub fn poly_attention(q: &Tensor, k: &Tensor, v: &Tensor, p: u32) -> Tensor {
 /// Same but assumes q/k already normalized (hot path for block composition).
 /// Query-row parallel on the deterministic backend: rows are independent,
 /// so bytes never depend on the thread count.
-pub fn poly_attention_prenormed(qn: &Tensor, kn: &Tensor, v: &Tensor, p: u32) -> Tensor {
+pub fn poly_attention_prenormed(qn: &Tensor, kn: &Tensor, v: &impl RowMat, p: u32) -> Tensor {
     let n = qn.rows();
     let hv = v.cols();
     let mut out = Tensor::zeros(&[n, hv]);

@@ -4,17 +4,20 @@
 //! Both kernels are query-row (resp. query-block) parallel on the
 //! deterministic backend (`exec::pool`): each output row depends only on
 //! its own scores/accumulators, so the partition changes wall time, never
-//! bytes.
+//! bytes.  Both are generic over [`RowMat`], so they run unchanged on
+//! owned tensors and on strided per-head views of fused projections, and
+//! both handle sequence lengths that are not block multiples natively
+//! (the final query/key blocks are simply shorter) — callers never pad.
 
 use crate::exec::pool;
-use crate::tensor::{axpy, dot, Tensor};
+use crate::tensor::{axpy, dot, RowMat, Tensor};
 
 /// Quadratic work (n² · h MACs) below which the kernels run inline.
 const PAR_MIN_WORK: usize = 32 * 1024;
 
 /// Naive causal softmax attention; materializes each score row.
 /// Row-parallel: rows are independent (private score buffer per chunk).
-pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+pub fn softmax_attention(q: &impl RowMat, k: &impl RowMat, v: &impl RowMat) -> Tensor {
     let (n, h) = (q.rows(), q.cols());
     assert_eq!(k.rows(), n);
     assert_eq!(v.rows(), n);
@@ -55,29 +58,44 @@ pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
 /// Blocked causal softmax with the online max/sum recurrence — the same
 /// algorithm FlashAttention executes on an accelerator, expressed on the
 /// CPU so the quadratic cost curve of the baseline is measured with a
-/// cache-friendly, honest implementation rather than a strawman.
-pub fn flash_attention(q: &Tensor, k: &Tensor, v: &Tensor, block: usize) -> Tensor {
+/// cache-friendly, honest implementation rather than a strawman.  The
+/// final query/key blocks may be ragged; results are identical to the
+/// zero-padded computation on real rows.
+pub fn flash_attention(
+    q: &impl RowMat,
+    k: &impl RowMat,
+    v: &impl RowMat,
+    block: usize,
+) -> Tensor {
     let (n, h) = (q.rows(), q.cols());
     let hv = v.cols();
-    assert!(n % block == 0, "n={} % block={} != 0", n, block);
+    assert_eq!(k.rows(), n);
+    assert_eq!(v.rows(), n);
+    let block = block.max(1).min(n.max(1));
     let mut out = Tensor::zeros(&[n, hv]);
     if out.is_empty() {
         return out;
     }
     // Query blocks are independent (online max/sum state is per q-block),
-    // so chunks of q-blocks parallelize with identical per-block math.
-    // Scratch is allocated once per chunk, not per block, to keep the
-    // hot path's allocation count flat.
+    // so chunks of whole q-blocks parallelize with identical per-block
+    // math; `par_row_groups` keeps chunk boundaries block-aligned even
+    // when the tail block is ragged.  Scratch is allocated once per
+    // chunk, not per block, to keep the hot path's allocation count flat.
     let kernel = |qb0: usize, chunk: &mut [f32]| {
         let mut scratch = FlashScratch::new(block, hv);
-        for (r, orows) in chunk.chunks_mut(block * hv).enumerate() {
-            flash_query_block(q, k, v, block, qb0 + r, orows, &mut scratch);
+        let mut off = 0;
+        let mut qb = qb0;
+        while off < chunk.len() {
+            let qlen = block.min(n - qb * block);
+            flash_query_block(q, k, v, block, qb, qlen, &mut chunk[off..off + qlen * hv], &mut scratch);
+            off += qlen * hv;
+            qb += 1;
         }
     };
     if n * n * h < PAR_MIN_WORK {
         kernel(0, out.data_mut());
     } else {
-        pool::par_row_chunks(out.data_mut(), block * hv, 1, kernel);
+        pool::par_row_groups(out.data_mut(), hv, block, 1, kernel);
     }
     out
 }
@@ -101,17 +119,20 @@ impl FlashScratch {
     }
 }
 
-/// One query block of the online-softmax recurrence; writes the block's
-/// `block x hv` output rows.
+/// One query block (of `qlen <= block` real rows) of the online-softmax
+/// recurrence; writes the block's `qlen x hv` output rows.
+#[allow(clippy::too_many_arguments)]
 fn flash_query_block(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
+    q: &impl RowMat,
+    k: &impl RowMat,
+    v: &impl RowMat,
     block: usize,
     qb: usize,
+    qlen: usize,
     orows: &mut [f32],
     scratch: &mut FlashScratch,
 ) {
+    let n = k.rows();
     let h = q.cols();
     let hv = v.cols();
     let scale = 1.0 / (h as f32).sqrt();
@@ -124,18 +145,19 @@ fn flash_query_block(
     let q0 = qb * block;
     for kb in 0..=qb {
         let k0 = kb * block;
+        let klen = block.min(n - k0);
         // score tile
-        for bi in 0..block {
+        for bi in 0..qlen {
             let qi = q.row(q0 + bi);
-            let trow = &mut tile[bi * block..(bi + 1) * block];
-            for bj in 0..block {
+            let trow = &mut tile[bi * block..bi * block + klen];
+            for (bj, t) in trow.iter_mut().enumerate() {
                 let j = k0 + bj;
-                trow[bj] = if j <= q0 + bi { dot(qi, k.row(j)) * scale } else { f32::NEG_INFINITY };
+                *t = if j <= q0 + bi { dot(qi, k.row(j)) * scale } else { f32::NEG_INFINITY };
             }
         }
         // online rescale + accumulate
-        for bi in 0..block {
-            let trow = &tile[bi * block..(bi + 1) * block];
+        for bi in 0..qlen {
+            let trow = &tile[bi * block..bi * block + klen];
             let row_max = trow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let m_new = m[bi].max(row_max);
             if m_new == f32::NEG_INFINITY {
@@ -147,11 +169,11 @@ fn flash_query_block(
                 *x *= corr;
             }
             let mut local_sum = 0.0;
-            for bj in 0..block {
-                if trow[bj] == f32::NEG_INFINITY {
+            for (bj, &t) in trow.iter().enumerate() {
+                if t == f32::NEG_INFINITY {
                     continue;
                 }
-                let p = (trow[bj] - m_new).exp();
+                let p = (t - m_new).exp();
                 local_sum += p;
                 axpy(arow, v.row(k0 + bj), p);
             }
@@ -159,7 +181,7 @@ fn flash_query_block(
             m[bi] = m_new;
         }
     }
-    for bi in 0..block {
+    for bi in 0..qlen {
         let orow = &mut orows[bi * hv..(bi + 1) * hv];
         let arow = &acc[bi * hv..(bi + 1) * hv];
         let inv = 1.0 / s[bi];
@@ -185,6 +207,40 @@ mod tests {
         for block in [4, 8, 16, 32] {
             let b = flash_attention(&q, &k, &v, block);
             assert!(a.max_abs_diff(&b) < 1e-4, "block {block}");
+        }
+    }
+
+    #[test]
+    fn ragged_flash_matches_naive() {
+        // n not a multiple of block: the ragged tail blocks must change
+        // nothing — every row agrees with the row-streaming oracle.
+        let mut rng = Pcg::seeded(7);
+        let (n, h) = (29, 8);
+        let q = Tensor::gaussian(&mut rng, &[n, h]);
+        let k = Tensor::gaussian(&mut rng, &[n, h]);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        let a = softmax_attention(&q, &k, &v);
+        for block in [4, 8, 16, 64] {
+            let b = flash_attention(&q, &k, &v, block);
+            assert!(a.max_abs_diff(&b) < 1e-4, "block {block}");
+        }
+    }
+
+    #[test]
+    fn strided_views_match_owned_tensors() {
+        // Head views of a fused projection must produce the exact bytes
+        // the copied per-head tensors produce.
+        let mut rng = Pcg::seeded(9);
+        let (n, heads, hd) = (24, 2, 8);
+        let q = Tensor::gaussian(&mut rng, &[n, heads * hd]);
+        let k = Tensor::gaussian(&mut rng, &[n, heads * hd]);
+        let v = Tensor::gaussian(&mut rng, &[n, heads * hd]);
+        for hi in 0..heads {
+            let (qv, kv, vv) =
+                (q.head_views(heads)[hi], k.head_views(heads)[hi], v.head_views(heads)[hi]);
+            let (qc, kc, vc) = (qv.to_tensor(), kv.to_tensor(), vv.to_tensor());
+            assert_eq!(softmax_attention(&qv, &kv, &vv), softmax_attention(&qc, &kc, &vc));
+            assert_eq!(flash_attention(&qv, &kv, &vv, 8), flash_attention(&qc, &kc, &vc, 8));
         }
     }
 

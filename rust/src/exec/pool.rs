@@ -346,6 +346,38 @@ pub fn par_row_chunks<T: Send>(
     });
 }
 
+/// Like [`par_row_chunks`], but the partition respects caller-defined row
+/// *groups* of `rows_per_group` rows (the last group may be ragged): each
+/// task receives `f(first_group, chunk)` where `chunk` covers whole
+/// groups.  Used by kernels whose unit of work spans several rows (e.g. a
+/// flash query block) so chunk boundaries never split a unit.
+pub fn par_row_groups<T: Send>(
+    data: &mut [T],
+    width: usize,
+    rows_per_group: usize,
+    min_groups: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(width > 0 && data.len() % width == 0, "par_row_groups: ragged buffer");
+    assert!(rows_per_group > 0, "par_row_groups: empty group");
+    let rows = data.len() / width;
+    let groups = rows.div_ceil(rows_per_group);
+    if groups == 0 {
+        return;
+    }
+    let base = SendPtr(data.as_mut_ptr());
+    par_ranges(groups, min_groups, |lo, hi| {
+        let row_lo = lo * rows_per_group;
+        let row_hi = (hi * rows_per_group).min(rows);
+        // SAFETY: group ranges are disjoint (par_ranges contract), so the
+        // row ranges derived from them are disjoint too.
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(row_lo * width), (row_hi - row_lo) * width)
+        };
+        f(lo, chunk);
+    });
+}
+
 /// Parallel map over `&mut` items, results collected in index order.
 /// Used where each unit owns real mutable state (per-head decode states,
 /// per-session stepping) rather than a flat output buffer.
@@ -417,6 +449,25 @@ mod tests {
             }
         });
         for (r, row) in data.chunks(7).enumerate() {
+            assert!(row.iter().all(|&v| v == r as u32), "row {r}");
+        }
+    }
+
+    #[test]
+    fn par_row_groups_never_splits_a_group() {
+        // 29 rows in groups of 8: tasks must see group-aligned chunks and
+        // the final ragged group (5 rows) must arrive whole.
+        let mut data = vec![0u32; 29 * 3];
+        par_row_groups(&mut data, 3, 8, 1, |g0, chunk| {
+            let rows = chunk.len() / 3;
+            assert_eq!(g0 * 8 % 8, 0);
+            // Chunk covers whole groups except possibly the ragged tail.
+            assert!(rows % 8 == 0 || g0 * 8 + rows == 29, "g0={g0} rows={rows}");
+            for (r, row) in chunk.chunks_mut(3).enumerate() {
+                row.fill((g0 * 8 + r) as u32);
+            }
+        });
+        for (r, row) in data.chunks(3).enumerate() {
             assert!(row.iter().all(|&v| v == r as u32), "row {r}");
         }
     }

@@ -7,13 +7,13 @@
 //! where softmax attention must rescan an O(n) KV cache.  This module is
 //! that serving path, end to end:
 //!
-//! * [`state`] — per-mechanism [`DecodeState`](state::DecodeState):
-//!   recurrent sketch/feature states for the linear mechanisms, KV-cache
-//!   fallback for the softmax family, each consistent with the
-//!   full-context prefill path;
 //! * [`model`] — [`NativeLm`](model::NativeLm): the native transformer LM
-//!   (paper recipe) with a prefill path over the block kernels and a
-//!   per-token step path over decode states;
+//!   (paper recipe) whose attention lives entirely behind the kernel
+//!   core (`attn::kernel`): per-head `Arc<dyn CausalKernel>` objects
+//!   with one [`KernelState`](crate::attn::KernelState) each — a
+//!   recurrent state for the linear engine, a KV cache for the
+//!   quadratic engine — consistent by construction between the
+//!   full-context prefill path and per-token stepping;
 //! * [`sampler`] — greedy / temperature / top-k / nucleus policies on a
 //!   deterministic [`Pcg`](crate::util::rng::Pcg) stream;
 //! * [`session`] — one request's lifecycle: prefill, step, retire;
@@ -28,10 +28,9 @@ pub mod model;
 pub mod sampler;
 pub mod scheduler;
 pub mod session;
-pub mod state;
 
+pub use crate::attn::KernelState;
 pub use model::{LayerState, LmConfig, NativeLm};
 pub use sampler::SamplePolicy;
 pub use scheduler::{Scheduler, SchedulerConfig, ServeSummary, SessionReport};
 pub use session::{decode_text, encode_prompt, DecodeSession, GenRequest, SessionSnapshot};
-pub use state::DecodeState;

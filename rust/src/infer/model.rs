@@ -1,4 +1,4 @@
-//! Native decoder-only transformer LM over the native attention kernels.
+//! Native decoder-only transformer LM over the kernel core.
 //!
 //! The PJRT model path (`runtime::ModelRuntime`) executes fixed-shape AOT
 //! artifacts and cannot step one token at a time; this model is its
@@ -10,17 +10,25 @@
 //! serving subsystem's correctness story is prefill/decode parity, which
 //! is weight-independent).
 //!
-//! Two execution paths over the *same* weights:
-//! * [`NativeLm::prefill`] — full-context forward via `Attention::run`
-//!   (the block kernels), capturing per-layer/head k,v into the decode
-//!   states;
-//! * [`NativeLm::step`] — one token through [`DecodeState`]s: O(1) per
-//!   token for Polysketch/Performer, O(n) for the softmax family.
+//! Attention is entirely behind [`CausalKernel`]: each (layer, head)
+//! holds one `Arc<dyn CausalKernel>` built by `Mechanism::build_kernel`
+//! (the single dispatch point), and this file never learns which engine
+//! is behind a head.  Two execution paths over the *same* weights:
+//!
+//! * [`NativeLm::prefill`] — full-context forward; each head consumes
+//!   strided views of the fused q/k/v projections and writes its output
+//!   stripe in place (`kernel::prefill_heads` — no per-head copies, no
+//!   zero-padding, no concat), leaving the decode states exactly as if
+//!   every position had been stepped;
+//! * [`NativeLm::step`] — one token through the per-head
+//!   [`KernelState`]s: O(1) per token for the linear engine, O(n) for
+//!   the KV engine.
 
-use crate::attn::{Attention, Mechanism};
-use crate::exec::pool;
-use crate::infer::state::{ln_row, DecodeState};
-use crate::tensor::{layernorm_rows, Tensor};
+use std::sync::Arc;
+
+use crate::attn::kernel::{self, CausalKernel, KernelState};
+use crate::attn::Mechanism;
+use crate::tensor::{layernorm_rows, ln_row, Tensor};
 use crate::util::rng::Pcg;
 
 /// Native LM hyperparameters.
@@ -52,14 +60,14 @@ struct Layer {
     ffn_gate: Tensor,
     ffn_up: Tensor,
     ffn_down: Tensor,
-    /// One instantiated mechanism (sketches/features) per head.
-    heads: Vec<Attention>,
+    /// One instantiated kernel (engine + sketches/features) per head.
+    heads: Vec<Arc<dyn CausalKernel>>,
 }
 
-/// Decode state of one layer: one [`DecodeState`] per head.
+/// Decode state of one layer: one [`KernelState`] per head.
 #[derive(Clone)]
 pub struct LayerState {
-    pub heads: Vec<DecodeState>,
+    pub heads: Vec<KernelState>,
 }
 
 /// Native autoregressive LM (one per served mechanism).
@@ -92,7 +100,7 @@ impl NativeLm {
                 ffn_gate: Tensor::gaussian(&mut rng, &[d, f]).scale(sd),
                 ffn_up: Tensor::gaussian(&mut rng, &[d, f]).scale(sd),
                 ffn_down: Tensor::gaussian(&mut rng, &[f, d]).scale(sf),
-                heads: (0..cfg.heads).map(|_| Attention::new(&mech, hd, &mut rng)).collect(),
+                heads: (0..cfg.heads).map(|_| mech.build_kernel(hd, &mut rng)).collect(),
             })
             .collect();
         NativeLm { cfg, mech, embed, readout, layers }
@@ -102,11 +110,11 @@ impl NativeLm {
         self.cfg.d_model / self.cfg.heads
     }
 
-    /// Fresh per-layer decode states sharing this model's projections.
+    /// Fresh per-layer decode states matching this model's kernels.
     pub fn new_states(&self) -> Vec<LayerState> {
         self.layers
             .iter()
-            .map(|l| LayerState { heads: l.heads.iter().map(DecodeState::new).collect() })
+            .map(|l| LayerState { heads: l.heads.iter().map(|k| k.new_state()).collect() })
             .collect()
     }
 
@@ -115,7 +123,7 @@ impl NativeLm {
         states
             .iter()
             .flat_map(|l| l.heads.iter())
-            .map(DecodeState::memory_floats)
+            .map(KernelState::memory_floats)
             .sum()
     }
 
@@ -124,9 +132,9 @@ impl NativeLm {
         self.forward_capture(tokens, None)
     }
 
-    /// Prefill: full-context forward that additionally folds every
-    /// position's per-layer/head (k, v) into `states`, leaving them ready
-    /// for token-by-token [`NativeLm::step`]s at positions `n..`.
+    /// Prefill: full-context forward that additionally leaves `states`
+    /// holding every position's per-layer/head decode state, ready for
+    /// token-by-token [`NativeLm::step`]s at positions `n..`.
     pub fn prefill(&self, tokens: &[u32], states: &mut [LayerState]) -> Tensor {
         self.forward_capture(tokens, Some(states))
     }
@@ -136,14 +144,6 @@ impl NativeLm {
         assert!(n > 0, "empty token sequence");
         let d = self.cfg.d_model;
         let hd = self.head_dim();
-        // Zero-pad the sequence up to the mechanism's block multiple once
-        // per layer (causality makes trailing padding inert for real rows;
-        // zero rows project to zero rows, so padding before the q/k/v
-        // matmuls is bitwise the same as padding each head after them) so
-        // decode-state block partitions line up exactly with the prefill
-        // partition at any prompt length.
-        let block = self.block_multiple();
-        let np = n.div_ceil(block) * block;
         let mut x = Tensor::zeros(&[n, d]);
         for (i, &t) in tokens.iter().enumerate() {
             let row = x.row_mut(i);
@@ -152,41 +152,27 @@ impl NativeLm {
         }
         for (li, layer) in self.layers.iter().enumerate() {
             let xn = layernorm_rows(&x);
-            let xnp = if np == n { xn } else { pad_rows(&xn, np) };
-            let q = xnp.matmul(&layer.wq);
-            let k = xnp.matmul(&layer.wk);
-            let v = xnp.matmul(&layer.wv);
-            // Heads are embarrassingly parallel: each one slices its own
-            // q/k/v columns, owns its own decode state, and produces its
-            // own (np, hd) output — no shared mutable state, so the bytes
-            // cannot depend on scheduling.
-            let mut head_states: Vec<Option<&mut DecodeState>> = match states.as_deref_mut() {
-                Some(s) => s[li].heads.iter_mut().map(Some).collect(),
-                None => (0..self.cfg.heads).map(|_| None).collect(),
-            };
-            let outs: Vec<Tensor> = pool::par_map_mut(&mut head_states, 1, |hi, st| {
-                let mut qh = slice_head(&q, hi, hd);
-                let mut kh = slice_head(&k, hi, hd);
-                let vh = slice_head(&v, hi, hd);
-                for i in 0..n {
-                    // Padding rows are zero and rotate to zero: skip them.
-                    rope_row(qh.row_mut(i), i);
-                    rope_row(kh.row_mut(i), i);
-                }
-                if let Some(st) = st {
-                    for i in 0..n {
-                        st.absorb(kh.row(i), vh.row(i));
-                    }
-                }
-                layer.heads[hi].run(&qh, &kh, &vh)
-            });
-            let mut concat = Tensor::zeros(&[n, d]);
-            for (hi, oh) in outs.iter().enumerate() {
-                for i in 0..n {
-                    concat.row_mut(i)[hi * hd..(hi + 1) * hd].copy_from_slice(oh.row(i));
-                }
-            }
-            x = x.add(&concat.matmul(&layer.wo));
+            let mut q = xn.matmul(&layer.wq);
+            let mut k = xn.matmul(&layer.wk);
+            let v = xn.matmul(&layer.wv);
+            // RoPE on the fused projections, per head segment (rows are
+            // independent — deterministic row-parallel).
+            rope_heads(&mut q, hd);
+            rope_heads(&mut k, hd);
+            // Heads are embarrassingly parallel: each one reads its own
+            // strided column stripe of q/k/v, owns its own decode state,
+            // and writes its own output stripe — no shared mutable state,
+            // no copies, so the bytes cannot depend on scheduling.
+            let mut attn_out = Tensor::zeros(&[n, d]);
+            kernel::prefill_heads(
+                &layer.heads,
+                &q,
+                &k,
+                &v,
+                states.as_deref_mut().map(|s| s[li].heads.as_mut_slice()),
+                &mut attn_out,
+            );
+            x = x.add(&attn_out.matmul(&layer.wo));
             let xn2 = layernorm_rows(&x);
             let g = xn2.matmul(&layer.ffn_gate).map(gelu);
             let u = xn2.matmul(&layer.ffn_up);
@@ -214,7 +200,7 @@ impl NativeLm {
                 let vh = &v.row(0)[hi * hd..(hi + 1) * hd];
                 rope_row(&mut qh, pos);
                 rope_row(&mut kh, pos);
-                let oh = states[li].heads[hi].step(&qh, &kh, vh);
+                let oh = layer.heads[hi].step(&qh, &kh, vh, &mut states[li].heads[hi]);
                 concat[hi * hd..(hi + 1) * hd].copy_from_slice(&oh);
             }
             let attn_out = Tensor::from_vec(&[1, d], concat).matmul(&layer.wo);
@@ -231,34 +217,22 @@ impl NativeLm {
         }
         Tensor::from_vec(&[1, d], ln_row(&x)).matmul(&self.readout).into_vec()
     }
+}
 
-    /// Sequence-length multiple the mechanism's block kernels require
-    /// (1 for the streaming softmax/poly paths).
-    fn block_multiple(&self) -> usize {
-        match &self.mech {
-            Mechanism::Softmax | Mechanism::Poly { .. } => 1,
-            Mechanism::Flash { block }
-            | Mechanism::Polysketch { block, .. }
-            | Mechanism::Performer { block, .. } => (*block).max(1),
+/// Apply RoPE to every head segment of every row of a fused (n, H·hd)
+/// projection, in place.  Row-parallel on the deterministic backend.
+fn rope_heads(t: &mut Tensor, hd: usize) {
+    use crate::exec::pool;
+    let d = t.cols();
+    debug_assert_eq!(d % hd, 0);
+    pool::par_row_chunks(t.data_mut(), d, 16, |row0, chunk| {
+        for (r, row) in chunk.chunks_mut(d).enumerate() {
+            let pos = row0 + r;
+            for seg in row.chunks_mut(hd) {
+                rope_row(seg, pos);
+            }
         }
-    }
-}
-
-/// Zero-pad a 2-D tensor's rows up to `np`.
-fn pad_rows(t: &Tensor, np: usize) -> Tensor {
-    let mut out = Tensor::zeros(&[np, t.cols()]);
-    out.data_mut()[..t.len()].copy_from_slice(t.data());
-    out
-}
-
-/// Column slice of one head: (n, d) -> (n, hd).
-fn slice_head(t: &Tensor, head: usize, hd: usize) -> Tensor {
-    let n = t.rows();
-    let mut out = Tensor::zeros(&[n, hd]);
-    for i in 0..n {
-        out.row_mut(i).copy_from_slice(&t.row(i)[head * hd..(head + 1) * hd]);
-    }
-    out
+    });
 }
 
 /// Add the sinusoidal absolute position embedding for `pos` in place —
@@ -331,6 +305,36 @@ mod tests {
             assert_eq!(a.row(i), b.row(i), "row {i} depends on a future token");
         }
         assert_ne!(a.row(11), b.row(11));
+    }
+
+    #[test]
+    fn odd_length_forward_matches_all_mechanisms() {
+        // n = 13 against block 8: the ragged tail path must leave forward
+        // logits finite and causal for every mechanism (the kernel-level
+        // oracle comparison lives in attn::kernel::state tests).
+        let mechs = [
+            Mechanism::Softmax,
+            Mechanism::Flash { block: 8 },
+            Mechanism::Poly { p: 4 },
+            Mechanism::Polysketch { r: 4, p: 4, block: 8, local: false },
+            Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
+            Mechanism::Performer { m: 16, block: 8 },
+        ];
+        let tokens: Vec<u32> = (0..13).map(|i| (i * 7) % 64).collect();
+        for mech in mechs {
+            let lm = tiny(mech.clone());
+            let a = lm.forward(&tokens);
+            assert!(a.data().iter().all(|x| x.is_finite()), "{}", mech.label());
+            // Prefix invariance: truncating the input reproduces the
+            // logits of every kept position (no tail-block leakage).
+            let b = lm.forward(&tokens[..9]);
+            for i in 0..9 {
+                for (x, y) in a.row(i).iter().zip(b.row(i)) {
+                    let tol = 1e-3 * (1.0 + x.abs().max(y.abs()));
+                    assert!((x - y).abs() <= tol, "{} row {i}: {x} vs {y}", mech.label());
+                }
+            }
+        }
     }
 
     #[test]

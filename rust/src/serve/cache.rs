@@ -7,7 +7,7 @@
 //! skips its prefill completely.  The softmax family can be cached too,
 //! but its snapshots are O(n·h) KV tensors: the byte budget admits far
 //! fewer of them, which is exactly the paper's complexity gap made
-//! operational (`memory_floats` in `infer::state` is the per-variant
+//! operational (`KernelState::memory_floats` in `attn::kernel` is the per-engine
 //! accounting).
 //!
 //! Keying is (mechanism label, exact prompt token sequence): the mechanism

@@ -22,11 +22,145 @@ const PAR_MIN_FLOPS: usize = 32 * 1024;
 /// Minimum output rows per parallel chunk for the matmul family.
 const PAR_MIN_ROWS: usize = 4;
 
+/// Read access to a row-major 2-D f32 matrix — implemented by [`Tensor`]
+/// (stride == cols) and [`TensorView`] (arbitrary row stride).  The
+/// attention kernels are generic over this trait so per-head column
+/// stripes of a fused (n, n_heads·head_dim) projection can be consumed
+/// in place instead of being copied into per-head tensors.
+pub trait RowMat: Sync {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    fn row(&self, i: usize) -> &[f32];
+}
+
+/// Borrowed strided view of a row-major matrix: `rows` rows of `cols`
+/// elements, consecutive rows `stride` elements apart.  `Copy`, cheap to
+/// construct, and `Sync` — safe to hand to the deterministic pool.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorView<'a> {
+    data: &'a [f32],
+    rows: usize,
+    cols: usize,
+    stride: usize,
+}
+
+impl<'a> TensorView<'a> {
+    /// View over `data` starting at its first element.  Requires the last
+    /// row to fit: `(rows-1)*stride + cols <= data.len()`.
+    pub fn new(data: &'a [f32], rows: usize, cols: usize, stride: usize) -> TensorView<'a> {
+        assert!(cols <= stride || rows <= 1, "view cols {cols} exceed stride {stride}");
+        assert!(
+            rows == 0 || (rows - 1) * stride + cols <= data.len(),
+            "view {rows}x{cols} (stride {stride}) exceeds buffer of {}",
+            data.len()
+        );
+        TensorView { data, rows, cols, stride }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.stride..i * self.stride + self.cols]
+    }
+
+    /// Materialize the view into an owned contiguous tensor.
+    pub fn to_tensor(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+impl RowMat for TensorView<'_> {
+    fn rows(&self) -> usize {
+        TensorView::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        TensorView::cols(self)
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        TensorView::row(self, i)
+    }
+}
+
+/// Mutable strided view.  Built from a `&mut Tensor`, possibly several at
+/// once over *disjoint column stripes* (`head_views_mut`), which is what
+/// lets every head of a fused attention output be written in place, in
+/// parallel, with no concat copy.
+pub struct TensorViewMut<'a> {
+    ptr: *mut f32,
+    rows: usize,
+    cols: usize,
+    stride: usize,
+    _marker: std::marker::PhantomData<&'a mut f32>,
+}
+
+// SAFETY: a TensorViewMut grants exclusive access to its own (disjoint)
+// element set — see the constructors — so moving it to another thread is
+// no different from moving a `&mut [f32]`.
+unsafe impl Send for TensorViewMut<'_> {}
+
+impl TensorViewMut<'_> {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        // SAFETY: constructor guarantees the row lies inside the buffer
+        // and this view exclusively owns its element set.
+        unsafe { std::slice::from_raw_parts(self.ptr.add(i * self.stride), self.cols) }
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        // SAFETY: as above, plus `&mut self` makes the access unique.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(i * self.stride), self.cols) }
+    }
+
+    /// Copy a same-shaped matrix into the view row by row.
+    pub fn copy_from(&mut self, src: &impl RowMat) {
+        assert_eq!((self.rows, self.cols), (src.rows(), src.cols()));
+        for i in 0..self.rows {
+            self.row_mut(i).copy_from_slice(src.row(i));
+        }
+    }
+}
+
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
     data: Vec<f32>,
+}
+
+impl RowMat for Tensor {
+    fn rows(&self) -> usize {
+        Tensor::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        Tensor::cols(self)
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        Tensor::row(self, i)
+    }
 }
 
 impl Tensor {
@@ -186,6 +320,63 @@ impl Tensor {
         self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
     }
 
+    /// Borrowed full view of a 2-D tensor.
+    pub fn view(&self) -> TensorView<'_> {
+        let (m, n) = (self.rows(), self.cols());
+        TensorView::new(&self.data, m, n, n)
+    }
+
+    /// Mutable full view of a 2-D tensor.
+    pub fn view_mut(&mut self) -> TensorViewMut<'_> {
+        let (m, n) = (self.rows(), self.cols());
+        TensorViewMut {
+            ptr: self.data.as_mut_ptr(),
+            rows: m,
+            cols: n,
+            stride: n,
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Split a fused (n, heads·hd) matrix into one read view per head —
+    /// column stripe `h*hd..(h+1)*hd` of every row, no copies.
+    pub fn head_views(&self, heads: usize) -> Vec<TensorView<'_>> {
+        let (m, n) = (self.rows(), self.cols());
+        assert!(heads > 0 && n % heads == 0, "cols {n} not divisible into {heads} heads");
+        let hd = n / heads;
+        (0..heads)
+            .map(|h| {
+                let lo = h * hd;
+                // Trim the slice so the view's last row ends inside it.
+                let hi = if m == 0 { lo } else { (m - 1) * n + lo + hd };
+                TensorView::new(&self.data[lo..hi.max(lo)], m, hd, n)
+            })
+            .collect()
+    }
+
+    /// Split a fused (n, heads·hd) matrix into one *mutable* view per
+    /// head.  The stripes are disjoint element sets, so handing them to
+    /// concurrent pool tasks is sound — this is how each head's attention
+    /// output lands directly in the fused buffer with no concat copy.
+    pub fn head_views_mut(&mut self, heads: usize) -> Vec<TensorViewMut<'_>> {
+        let (m, n) = (self.rows(), self.cols());
+        assert!(heads > 0 && n % heads == 0, "cols {n} not divisible into {heads} heads");
+        let hd = n / heads;
+        let base = self.data.as_mut_ptr();
+        (0..heads)
+            .map(|h| TensorViewMut {
+                // SAFETY: stripe h covers elements {i*n + h*hd .. +hd} for
+                // each row i — disjoint from every other stripe; the views
+                // borrow `self` mutably for their whole lifetime.
+                ptr: unsafe { base.add(h * hd) },
+                rows: m,
+                cols: hd,
+                stride: n,
+                _marker: std::marker::PhantomData,
+            })
+            .collect()
+    }
+
     /// Max |a - b| between same-shaped tensors.
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape);
@@ -197,9 +388,20 @@ impl Tensor {
     }
 }
 
-/// Parameter-free layer normalization over the last axis of a 2-D tensor
+/// Parameter-free layer normalization of one row — identical arithmetic
+/// to [`layernorm_rows`] (eps 1e-6), applied per token on the decode hot
+/// path.
+pub fn ln_row(x: &[f32]) -> Vec<f32> {
+    let n = x.len();
+    let mean: f32 = x.iter().sum::<f32>() / n as f32;
+    let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+    let inv = 1.0 / (var + 1e-6).sqrt();
+    x.iter().map(|v| (v - mean) * inv).collect()
+}
+
+/// Parameter-free layer normalization over the last axis of a 2-D matrix
 /// (matches python/compile/common.py::layernorm, eps = 1e-6).
-pub fn layernorm_rows(x: &Tensor) -> Tensor {
+pub fn layernorm_rows(x: &impl RowMat) -> Tensor {
     let (m, n) = (x.rows(), x.cols());
     let mut out = Tensor::zeros(&[m, n]);
     if out.is_empty() {
@@ -310,9 +512,54 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
     }
 }
 
+/// C = A @ B where A is any [`RowMat`] (possibly a strided view) and B
+/// is an owned tensor.  Per-row operation order is identical to
+/// [`matmul_into`]'s (zero-skip ikj), so a view and its copied tensor
+/// produce the same bytes.
+pub fn matmul_rowmat(a: &impl RowMat, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (kb, n) = (b.rows(), b.cols());
+    assert_eq!(k, kb, "matmul {}x{} @ {}x{}", m, k, kb, n);
+    let mut out = Tensor::zeros(&[m, n]);
+    if out.is_empty() {
+        return out;
+    }
+    let kernel = |row0: usize, chunk: &mut [f32]| {
+        chunk.fill(0.0);
+        for (r, crow) in chunk.chunks_mut(n).enumerate() {
+            let arow = a.row(row0 + r);
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                axpy(crow, b.row(kk), av);
+            }
+        }
+    };
+    if m.saturating_mul(k).saturating_mul(n) < PAR_MIN_FLOPS {
+        kernel(0, out.data_mut());
+    } else {
+        pool::par_row_chunks(out.data_mut(), n, PAR_MIN_ROWS, kernel);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn matmul_rowmat_bitwise_matches_matmul() {
+        let mut rng = Pcg::seeded(13);
+        let a = Tensor::gaussian(&mut rng, &[9, 12]);
+        let b = Tensor::gaussian(&mut rng, &[12, 7]);
+        assert_eq!(matmul_rowmat(&a, &b), a.matmul(&b));
+        // A strided head view agrees with its materialized copy.
+        let fused = Tensor::gaussian(&mut rng, &[9, 24]);
+        let view = fused.head_views(2)[1];
+        let c = Tensor::gaussian(&mut rng, &[12, 5]);
+        assert_eq!(matmul_rowmat(&view, &c), matmul_rowmat(&view.to_tensor(), &c));
+    }
 
     #[test]
     fn matmul_small() {
@@ -371,6 +618,68 @@ mod tests {
         let a = Tensor::zeros(&[2, 3]);
         let b = Tensor::zeros(&[2, 3]);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn ln_row_matches_layernorm_rows() {
+        let mut rng = Pcg::seeded(3);
+        let x = Tensor::gaussian(&mut rng, &[4, 16]).scale(2.5);
+        let want = layernorm_rows(&x);
+        for i in 0..4 {
+            assert_eq!(ln_row(x.row(i)).as_slice(), want.row(i));
+        }
+    }
+
+    #[test]
+    fn head_views_cover_column_stripes() {
+        let mut rng = Pcg::seeded(21);
+        let t = Tensor::gaussian(&mut rng, &[5, 12]);
+        let views = t.head_views(3);
+        assert_eq!(views.len(), 3);
+        for (h, v) in views.iter().enumerate() {
+            assert_eq!((v.rows(), v.cols()), (5, 4));
+            for i in 0..5 {
+                assert_eq!(v.row(i), &t.row(i)[h * 4..(h + 1) * 4], "head {h} row {i}");
+            }
+        }
+        // A view round-trips through to_tensor and layernorm_rows agrees
+        // with the layernorm of the copied stripe.
+        let copied = views[1].to_tensor();
+        assert_eq!(layernorm_rows(&views[1]), layernorm_rows(&copied));
+    }
+
+    #[test]
+    fn head_views_mut_write_disjoint_stripes() {
+        let mut t = Tensor::zeros(&[4, 6]);
+        {
+            let mut views = t.head_views_mut(2);
+            for (h, v) in views.iter_mut().enumerate() {
+                for i in 0..v.rows() {
+                    let c = v.cols();
+                    v.row_mut(i).copy_from_slice(
+                        &(0..c).map(|j| (h * 100 + i * 10 + j) as f32).collect::<Vec<_>>(),
+                    );
+                }
+            }
+        }
+        for i in 0..4 {
+            for j in 0..6 {
+                let h = j / 3;
+                assert_eq!(t.at2(i, j), (h * 100 + i * 10 + (j % 3)) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn view_mut_copy_from_view() {
+        let mut rng = Pcg::seeded(22);
+        let src = Tensor::gaussian(&mut rng, &[6, 8]);
+        let mut dst = Tensor::zeros(&[6, 16]);
+        dst.head_views_mut(2)[1].copy_from(&src.view());
+        for i in 0..6 {
+            assert_eq!(&dst.row(i)[8..], src.row(i));
+            assert!(dst.row(i)[..8].iter().all(|&x| x == 0.0));
+        }
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! pure native path.
 //!
 //! The correctness anchor is prefill/decode parity: stepping a model
-//! token-by-token through `infer::DecodeState` must reproduce the
+//! token-by-token through the per-head `KernelState`s must reproduce the
 //! full-context forward logits within fp tolerance, for every mechanism,
 //! at prompt lengths that do and do not align with block boundaries.
 
@@ -39,7 +39,7 @@ fn tokens(n: usize) -> Vec<u32> {
 
 #[test]
 fn prefill_decode_parity_all_mechanisms() {
-    // Decode from scratch: step every token through DecodeState and
+    // Decode from scratch: step every token through the kernel states and
     // compare each position's logits against the full-context forward.
     for (mech, tol) in mechanisms() {
         let model = tiny(mech.clone());

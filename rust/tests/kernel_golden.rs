@@ -1,0 +1,157 @@
+//! Golden fixtures pinning the kernel core's exact bytes.
+//!
+//! For all six mechanisms this captures, to `tests/fixtures/kernel_golden/`:
+//!
+//! * forward logits of a full-context (ragged-length) prefill,
+//! * the decode token stream + final logits of a sampled session,
+//! * the served token stream through the gateway (worker pool + prompt
+//!   cache), cold and cache-hit.
+//!
+//! Every value is serialized as raw f32 bit patterns, so equality is
+//! *byte* equality, not tolerance.  The first run (or `PSF_BLESS=1`)
+//! writes the fixtures; thereafter any refactor that changes a single
+//! bit of any mechanism's forward/decode/serve behavior fails here.
+//!
+//! Provenance: the fixtures are blessed by the first toolchain run at
+//! the kernel-core refactor commit that introduced this test (the
+//! growth container has no cargo, so a literal pre-refactor capture was
+//! impossible).  The pre-vs-post anchor is therefore indirect but
+//! strong: the engines reproduce the historical per-mechanism kernels'
+//! operation order op for op — `block_lt`'s ragged-vs-padded test pins
+//! that bitwise, and `attn::kernel::state` pins capture-vs-absorb —
+//! with the one documented exception (performer decode now follows the
+//! blocked recurrence, see CHANGES.md).  The serial-vs-pooled
+//! cross-check below and the `PSF_THREADS=2` CI rerun keep the
+//! fixtures thread-count independent from then on.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use polysketchformer::attn::Mechanism;
+use polysketchformer::exec::pool;
+use polysketchformer::infer::{DecodeSession, GenRequest, LmConfig, NativeLm, SamplePolicy};
+use polysketchformer::serve::{collect_stream, Gateway, GatewayConfig};
+
+fn mechanisms() -> Vec<Mechanism> {
+    vec![
+        Mechanism::Softmax,
+        Mechanism::Flash { block: 8 },
+        Mechanism::Poly { p: 4 },
+        Mechanism::Polysketch { r: 4, p: 4, block: 8, local: false },
+        Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
+        Mechanism::Performer { m: 16, block: 8 },
+    ]
+}
+
+fn lm(mech: Mechanism) -> NativeLm {
+    let cfg = LmConfig { vocab: 64, d_model: 32, layers: 2, heads: 2, ff_mult: 2, seed: 17 };
+    NativeLm::new(cfg, mech)
+}
+
+fn prompt(n: usize) -> Vec<u32> {
+    std::iter::once(0u32).chain((1..n as u32).map(|i| i.wrapping_mul(23) % 64)).collect()
+}
+
+fn hex_f32s(xs: &[f32]) -> String {
+    let mut s = String::with_capacity(xs.len() * 9);
+    for (i, x) in xs.iter().enumerate() {
+        if i > 0 {
+            s.push(' ');
+        }
+        let _ = write!(s, "{:08x}", x.to_bits());
+    }
+    s
+}
+
+fn ints(xs: &[u32]) -> String {
+    xs.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+}
+
+/// Capture forward/decode/serve behavior of one mechanism as a stable,
+/// byte-exact text artifact.
+fn capture(mech: &Mechanism) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "mechanism {}", mech.label());
+
+    // ---- forward logits (ragged length: 13 straddles block 8) --------
+    let model = lm(mech.clone());
+    let toks = prompt(13);
+    let logits = model.forward(&toks);
+    let _ = writeln!(out, "forward {}x{}", logits.rows(), logits.cols());
+    for i in 0..logits.rows() {
+        let _ = writeln!(out, "{}", hex_f32s(logits.row(i)));
+    }
+
+    // ---- decode token stream + final logits --------------------------
+    let req = GenRequest {
+        prompt: prompt(5),
+        max_new_tokens: 12,
+        policy: SamplePolicy::Temperature(0.8),
+        seed: 99,
+    };
+    let mut session = DecodeSession::new(&model, 0, req);
+    session.run_to_completion(&model);
+    let _ = writeln!(out, "decode {}", ints(session.generated()));
+    let _ = writeln!(out, "decode_logits {}", hex_f32s(&session.snapshot().last_logits));
+
+    // ---- served stream: cold, then cache hit -------------------------
+    let gw = Gateway::new(
+        lm(mech.clone()),
+        GatewayConfig { workers: 2, ..GatewayConfig::default() },
+    )
+    .expect("gateway");
+    let serve_req = || GenRequest {
+        prompt: prompt(9),
+        max_new_tokens: 8,
+        policy: SamplePolicy::TopP { p: 0.9, temperature: 0.7 },
+        seed: 41,
+    };
+    let (cold, _) = collect_stream(gw.submit(serve_req()).expect("cold submit"));
+    let (cached, _) = collect_stream(gw.submit(serve_req()).expect("cached submit"));
+    gw.finish().expect("gateway finish");
+    assert_eq!(cold, cached, "{}: cache hit diverged from cold serve", mech.label());
+    let _ = writeln!(out, "serve {}", ints(&cold));
+    out
+}
+
+fn fixture_path(mech: &Mechanism) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/kernel_golden")
+        .join(format!("{}.golden", mech.label()))
+}
+
+#[test]
+fn golden_outputs_byte_identical_for_all_mechanisms() {
+    let bless = std::env::var("PSF_BLESS").is_ok_and(|v| v == "1");
+    let mut blessed = Vec::new();
+    for mech in mechanisms() {
+        let got = capture(&mech);
+        // The pooled capture must already be thread-count independent;
+        // cross-check against the forced single-thread execution before
+        // trusting it as (or comparing it to) a fixture.
+        let serial = pool::serial(|| capture(&mech));
+        assert_eq!(got, serial, "{}: capture depends on thread count", mech.label());
+
+        let path = fixture_path(&mech);
+        match std::fs::read_to_string(&path) {
+            Ok(want) if !bless => {
+                assert_eq!(
+                    got,
+                    want,
+                    "{}: outputs changed vs golden fixture {} — a refactor moved bytes; \
+                     rerun with PSF_BLESS=1 only if the change is intended",
+                    mech.label(),
+                    path.display()
+                );
+            }
+            _ => {
+                std::fs::create_dir_all(path.parent().expect("fixture dir")).expect("mkdir");
+                std::fs::write(&path, &got).expect("write fixture");
+                blessed.push(path);
+            }
+        }
+    }
+    for p in &blessed {
+        eprintln!("blessed golden fixture {}", p.display());
+    }
+}

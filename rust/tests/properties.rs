@@ -5,7 +5,7 @@
 //! this environment).  No PJRT involvement: everything here is host math.
 
 use polysketchformer::attn::sketch::PolySketch;
-use polysketchformer::attn::{Attention, Mechanism};
+use polysketchformer::attn::Mechanism;
 use polysketchformer::checkpoint::Checkpoint;
 use polysketchformer::coordinator::dataparallel::shard_stream;
 use polysketchformer::coordinator::gen_cloze_questions;
@@ -170,6 +170,59 @@ fn prop_cloze_questions_well_formed() {
     });
 }
 
+// ----------------------------------------------------- mechanism labels
+
+#[test]
+fn prop_mechanism_label_parse_roundtrip() {
+    // `Mechanism::parse` is the exact inverse of `label` over the whole
+    // valid parameter space, not just the handful of spellings the unit
+    // tests pin: random valid mechanisms must survive label -> parse ->
+    // label unchanged.
+    check("mechanism label/parse roundtrip", 80, |rng, _size| {
+        let mech = match rng.usize_below(5) {
+            0 => Mechanism::Softmax,
+            1 => Mechanism::Flash { block: 1 + rng.usize_below(1024) },
+            2 => Mechanism::Poly { p: 2 * (1 + rng.usize_below(8) as u32) },
+            3 => Mechanism::Polysketch {
+                r: 1 + rng.usize_below(128),
+                p: 1u32 << (1 + rng.usize_below(3)),
+                block: 1 + rng.usize_below(2048),
+                local: rng.usize_below(2) == 1,
+            },
+            _ => Mechanism::Performer {
+                m: 1 + rng.usize_below(256),
+                block: 1 + rng.usize_below(2048),
+            },
+        };
+        let label = mech.label();
+        let back = Mechanism::parse(&label)
+            .map_err(|e| format!("`{label}` failed to re-parse: {e}"))?;
+        ensure(back == mech, format!("`{label}` round-tripped to {back:?}"))?;
+        ensure(back.label() == label, "label must be stable under re-parse")
+    });
+}
+
+#[test]
+fn prop_mechanism_parse_rejects_degenerate_labels() {
+    // Degenerate parameters that `label` can never emit (zero sizes, odd
+    // or non-power-of-two degrees) must be rejected at the parse
+    // boundary rather than panicking inside a kernel — `psk4_r0_b8` and
+    // friends are the canonical offenders.
+    for bad in [
+        "psk4_r0_b8", "psk4_r4_b0", "psk0_r4_b8", "psk1_r4_b8", "psk3_r4_b8",
+        "psk6_r4_b8", "flash_b0", "poly0", "poly1", "poly3", "poly7",
+        "performer0_b8", "performer16_b0", "psk4_r16_b64_localx",
+        "psk4_r16_b64_local_local", "psk4_r-1_b8", "performer16_b-2",
+    ] {
+        assert!(Mechanism::parse(bad).is_err(), "`{bad}` should not parse");
+    }
+    // Degenerate-but-valid extremes parse and round-trip.
+    for ok in ["flash_b1", "psk2_r1_b1", "psk2_r1_b1_local", "performer1_b1"] {
+        let m = Mechanism::parse(ok).unwrap_or_else(|e| panic!("`{ok}`: {e}"));
+        assert_eq!(m.label(), ok);
+    }
+}
+
 // ------------------------------------------------------- attention math
 
 #[test]
@@ -182,7 +235,7 @@ fn prop_polysketch_block_size_invariance() {
         let v = Tensor::gaussian(rng, &[n, h]);
         let mk = |block| {
             let mech = Mechanism::Polysketch { r: 8, p: 4, block, local: false };
-            Attention::new(&mech, h, &mut Pcg::seeded(7)).run(&q, &k, &v)
+            mech.build_kernel(h, &mut Pcg::seeded(7)).forward(&q, &k, &v)
         };
         let a = mk(n);
         for &b in &[16usize, 32] {
@@ -222,9 +275,9 @@ fn prop_attention_causality() {
             Mechanism::Polysketch { r: 8, p: 4, block: 8, local: true },
             Mechanism::Performer { m: 16, block: 8 },
         ] {
-            let attn = Attention::new(&mech, h, &mut Pcg::seeded(3));
-            let a = attn.run(&q, &k, &v);
-            let b = attn.run(&q, &k2, &v2);
+            let attn = mech.build_kernel(h, &mut Pcg::seeded(3));
+            let a = attn.forward(&q, &k, &v);
+            let b = attn.forward(&q, &k2, &v2);
             for i in 0..cut {
                 for (x, y) in a.row(i).iter().zip(b.row(i)) {
                     ensure(
