@@ -1,72 +1,101 @@
-//! Appendix F.2 — Induction Heads accuracy per attention mechanism.
+//! Appendix F.2 — Induction Heads accuracy per attention mechanism,
+//! trained **natively** (in-crate backprop through the kernel core; no
+//! PJRT artifacts required).
 //!
 //! The paper trains 2-layer models on the induction-heads task and finds
-//! every mechanism (softmax, poly 4/8, polysketch r=16/32) solves it at
-//! ctx 128 (>99.95%) and every mechanism fails at ctx 256 (~1/16 random)
-//! under the same optimization configuration.
-//!
-//! Here: the induction artifacts at ctx 128, softmax vs polysketch, with
-//! random-guess baseline printed for reference.
+//! every mechanism (softmax, poly, polysketch) solves it at ctx 128
+//! (>99.95%) under the same optimization configuration.  Here: the same
+//! task at ctx 128, softmax vs exact poly vs polysketch (local-exact),
+//! each trained with AdamW + cosine from the same seed, with the
+//! accuracy-vs-steps curve printed per mechanism and persisted to
+//! `bench_out/induction_heads.json`.
 
-use polysketchformer::bench::{banner, Mode, Table};
-use polysketchformer::coordinator::{run_task, TaskRunnerConfig};
-use polysketchformer::runtime::{self, LoadOpts};
+use polysketchformer::attn::Mechanism;
+use polysketchformer::bench::{banner, write_json, Mode, Table};
+use polysketchformer::infer::{LmConfig, NativeLm};
+use polysketchformer::metrics::Record;
 use polysketchformer::tasks::induction::InductionTask;
+use polysketchformer::train::{OptimConfig, TrainConfig, TrainSource, Trainer};
 
 fn main() -> anyhow::Result<()> {
     let mode = Mode::from_env();
-    banner("induction_heads", "Appendix F.2 (induction heads accuracy)", mode);
+    banner("induction_heads", "Appendix F.2 (induction heads accuracy, native training)", mode);
     let steps = mode.pick(10, 400, 4000);
     let eval_examples = mode.pick(16, 128, 512);
+    let ctx = mode.pick(32, 128, 128);
 
-    let artifacts = [
-        ("softmax", "induction_softmax"),
-        ("psk learned+local r16", "induction_psk"),
+    let mechs = [
+        ("softmax", "softmax"),
+        ("poly (p=4)", "poly4"),
+        ("psk r=16 + local", "psk4_r16_b32_local"),
     ];
 
     let mut table = Table::new(
-        &format!("Appendix F.2 analog — induction heads exact-match % after {steps} steps (ctx 128)"),
+        &format!(
+            "Appendix F.2 analog — induction heads answer accuracy % after {steps} steps (ctx {ctx})"
+        ),
         "mechanism",
         vec!["accuracy %".into(), "steps to >90%".into()],
     );
     println!("random-guess baseline: {:.1}%\n", 100.0 / 16.0);
+    let mut records: Vec<Record> = Vec::new();
 
-    for (label, name) in artifacts {
-        let mut model = match runtime::load_model(name, LoadOpts::default()) {
-            Ok(m) => m,
-            Err(e) => {
-                eprintln!("  [skip {name}: {e}]");
-                table.row(label, vec!["-".into(), "-".into()]);
-                continue;
-            }
-        };
-        let task = InductionTask::standard(model.ctx());
-        let cfg = TaskRunnerConfig {
+    for (label, mech_label) in mechs {
+        let task = InductionTask::standard(ctx);
+        let mech = Mechanism::parse(mech_label).expect("bench mechanism");
+        let mut model = NativeLm::new(
+            LmConfig {
+                vocab: task.vocab(),
+                d_model: 64,
+                layers: 2,
+                heads: 4,
+                seed: 0,
+                ..LmConfig::default()
+            },
+            mech,
+        );
+        let cfg = TrainConfig {
             steps,
+            batch: 16,
+            optim: OptimConfig { lr: 3e-3, warmup: 20, total_steps: steps, ..Default::default() },
+            seed: 0,
             eval_every: (steps / 10).max(1),
             eval_examples,
-            echo_every: 0,
-            seed: 0,
             stop_at_accuracy: 0.999,
+            echo_every: 0,
+            log_path: None,
+            ckpt_path: None,
+            ckpt_every: 0,
         };
-        let summary = run_task(&mut model, &task, &cfg)?;
+        let summary = Trainer::new(&mut model, TrainSource::Induction(task), cfg).run()?;
         println!("{label} accuracy curve:");
-        for &(step, acc) in &summary.curve {
-            println!("  step {step:>6}  {:>6.1}%", acc.exact * 100.0);
+        for pt in &summary.curve {
+            println!("  step {:>6}  {:>6.1}%  (loss {:.4})", pt.step, pt.accuracy * 100.0, pt.loss);
+            records.push(
+                Record::new()
+                    .str("mech", mech_label)
+                    .i64("step", pt.step as i64)
+                    .f64("accuracy", pt.accuracy)
+                    .f64("loss", pt.loss),
+            );
         }
         let jump = summary
             .curve
             .iter()
-            .find(|&&(_, a)| a.exact > 0.9)
-            .map(|&(s, _)| s.to_string())
+            .find(|pt| pt.accuracy > 0.9)
+            .map(|pt| pt.step.to_string())
             .unwrap_or_else(|| "-".into());
-        table.row(
-            label,
-            vec![format!("{:.1}", summary.final_accuracy.exact * 100.0), jump],
-        );
-        println!("{label} done\n");
+        table.row(label, vec![format!("{:.1}", summary.final_accuracy * 100.0), jump]);
+        println!("{label} done ({} steps in {:.1}s)\n", summary.steps_run, summary.wall_secs);
     }
     print!("{}", table.render());
     println!("csv: {}", table.save_csv("induction_heads")?.display());
+
+    let json_path = write_json(
+        "induction_heads",
+        &[("mode", format!("\"{mode:?}\"")), ("ctx", format!("{ctx}"))],
+        &records,
+    )?;
+    println!("json: {}", json_path.display());
     Ok(())
 }

@@ -1,0 +1,145 @@
+//! Train-step throughput vs context length — the native analogue of the
+//! paper's Table 4 training-speedup measurement.
+//!
+//! Times one full training step (forward tape + backward through the
+//! kernel core + AdamW update) per (mechanism, context) cell and writes
+//! `bench_out/train_throughput.json`.  The paper's claim is that the
+//! sketched mechanism's step time grows ~linearly in context while the
+//! softmax family grows quadratically; the bench prints per-mechanism
+//! growth ratios (time at ctx vs time at ctx/2) so the sub-quadratic
+//! separation — and the crossover point — is visible directly in the
+//! artifact.
+//!
+//! In quick/full modes (TRAIN_THROUGHPUT_CHECK also forces it) the bench
+//! fails if, at the largest context both families ran, the polysketch
+//! step is not faster than the softmax step — the minimal "crossover
+//! visible" gate.  Smoke mode prints the comparison but only enforces it
+//! under the env var, because sub-second smoke shapes sit inside timer
+//! noise on shared runners.
+
+use std::fmt::Write as _;
+
+use polysketchformer::attn::Mechanism;
+use polysketchformer::bench::{banner, time_fn, write_json, Mode, Table};
+use polysketchformer::infer::{LmConfig, NativeLm};
+use polysketchformer::metrics::Record;
+use polysketchformer::train::{compute_grads, AdamW, OptimConfig, TrainExample};
+
+fn main() -> anyhow::Result<()> {
+    let mode = Mode::from_env();
+    banner("train_throughput", "Table 4 analog (train-step seconds vs context)", mode);
+
+    let mech_labels = ["softmax", "flash_b256", "psk4_r16_b64_local"];
+    let ctxs: Vec<usize> = match mode {
+        Mode::Smoke => vec![256, 512],
+        Mode::Quick => vec![512, 1024, 2048, 4096],
+        Mode::Full => vec![1024, 2048, 4096, 8192, 16_384, 32_768],
+    };
+    // The quadratic backward at 32k is minutes of wall time; cap it the
+    // way fig1/decode_throughput cap their quadratic prefill cells.
+    let quad_cap = mode.pick(usize::MAX, 4096, 8192);
+    let iters = mode.pick(1, 2, 2);
+
+    let cfg = LmConfig { vocab: 257, d_model: 64, layers: 2, heads: 4, ..LmConfig::default() };
+    let mut table = Table::new(
+        &format!("train-step seconds vs context (d=64 L=2 H=4, batch 1, {iters} iters)"),
+        "mechanism",
+        ctxs.iter().map(|c| format!("{c}")).collect(),
+    );
+    let mut records: Vec<Record> = Vec::new();
+    // secs[mech][ctx_idx], NaN when capped out.
+    let mut secs = vec![vec![f64::NAN; ctxs.len()]; mech_labels.len()];
+
+    for (mi, label) in mech_labels.iter().enumerate() {
+        let mech = Mechanism::parse(label).expect("bench mechanism");
+        let mut cells: Vec<String> = Vec::new();
+        for (ci, &ctx) in ctxs.iter().enumerate() {
+            if !mech.is_linear() && ctx > quad_cap {
+                cells.push("capped".into());
+                continue;
+            }
+            let mut model = NativeLm::new(cfg.clone(), mech.clone());
+            let mut opt = AdamW::new(
+                OptimConfig { total_steps: 16, warmup: 0, ..OptimConfig::default() },
+                model.params(),
+            );
+            let tokens: Vec<u32> =
+                (0..=ctx as u32).map(|i| i.wrapping_mul(2654435761) % 257).collect();
+            let ex = TrainExample { tokens, mask: vec![true; ctx] };
+            let batch = [ex];
+            let t = time_fn(1, iters, || {
+                let (grads, stats) = compute_grads(&model, &batch);
+                assert!(stats.loss.is_finite(), "{label} ctx {ctx}: non-finite loss");
+                opt.step(model.params_mut(), &grads);
+            });
+            secs[mi][ci] = t.mean_s;
+            cells.push(format!("{:.3}s", t.mean_s));
+            records.push(
+                Record::new()
+                    .str("mech", *label)
+                    .i64("ctx", ctx as i64)
+                    .f64("step_secs", t.mean_s)
+                    .f64("tokens_per_sec", ctx as f64 / t.mean_s),
+            );
+            println!("{label:<20} ctx {ctx:>6}: {:.3}s/step", t.mean_s);
+        }
+        table.row(label, cells);
+    }
+
+    print!("{}", table.render());
+    println!("csv: {}", table.save_csv("train_throughput")?.display());
+
+    // Growth ratios: time(ctx) / time(ctx/2) — ~2 is linear, ~4 quadratic.
+    println!("\ngrowth ratios (step time at ctx vs previous swept ctx):");
+    for (mi, label) in mech_labels.iter().enumerate() {
+        let mut line = format!("  {label:<20}");
+        for ci in 1..ctxs.len() {
+            let (a, b) = (secs[mi][ci - 1], secs[mi][ci]);
+            if a.is_finite() && b.is_finite() && a > 0.0 {
+                let _ = write!(line, "  x{:.2}", b / a);
+            } else {
+                let _ = write!(line, "  -");
+            }
+        }
+        println!("{line}");
+    }
+
+    // Crossover gate at the largest context every mechanism completed.
+    let psk = mech_labels.iter().position(|l| l.starts_with("psk")).unwrap();
+    let soft = mech_labels.iter().position(|l| *l == "softmax").unwrap();
+    let common = (0..ctxs.len())
+        .rev()
+        .find(|&ci| secs[psk][ci].is_finite() && secs[soft][ci].is_finite());
+    let enforce = mode >= Mode::Quick || std::env::var_os("TRAIN_THROUGHPUT_CHECK").is_some();
+    if let Some(ci) = common {
+        let (ps, ss) = (secs[psk][ci], secs[soft][ci]);
+        println!(
+            "\nTRAIN_THROUGHPUT_CHECK: ctx {} — polysketch {:.3}s vs softmax {:.3}s",
+            ctxs[ci], ps, ss
+        );
+        if enforce && ps >= ss {
+            anyhow::bail!(
+                "TRAIN_THROUGHPUT_CHECK fail: polysketch train step ({ps:.3}s) not faster \
+                 than softmax ({ss:.3}s) at ctx {}",
+                ctxs[ci]
+            );
+        }
+    }
+
+    let json_path = write_json(
+        "train_throughput",
+        &[
+            ("mode", format!("\"{mode:?}\"")),
+            (
+                "model",
+                format!(
+                    "{{\"d_model\": {}, \"layers\": {}, \"heads\": {}, \"vocab\": {}}}",
+                    cfg.d_model, cfg.layers, cfg.heads, cfg.vocab
+                ),
+            ),
+        ],
+        &records,
+    )?;
+    println!("json: {}", json_path.display());
+    Ok(())
+}

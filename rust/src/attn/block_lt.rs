@@ -34,7 +34,7 @@ pub fn linear_attention_block(phi_q: &Tensor, phi_k: &Tensor, v: &Tensor,
     assert_eq!(v.rows(), n);
     let engine = LinearEngine::new(Arc::new(DirectFeatures::new(f)), None, block);
     let mut out = Tensor::zeros(&[n, h]);
-    engine.forward_mapped(phi_q, phi_k, None, None, &v.view(), None, &mut out.view_mut());
+    engine.forward_mapped(phi_q, phi_k, None, None, &v.view(), None, None, &mut out.view_mut());
     out
 }
 
@@ -66,12 +66,12 @@ pub fn polysketch_attention_block(lh: &Tensor, rh: &Tensor, v: &Tensor,
             let lq = layernorm_rows(le.q);
             let lk = layernorm_rows(le.k);
             let engine = LinearEngine::new(map, Some(local_map), block);
-            engine.forward_mapped(lh, rh, Some(&lq), Some(&lk), &v.view(), None,
+            engine.forward_mapped(lh, rh, Some(&lq), Some(&lk), &v.view(), None, None,
                                   &mut out.view_mut());
         }
         None => {
             let engine = LinearEngine::new(map, None, block);
-            engine.forward_mapped(lh, rh, None, None, &v.view(), None, &mut out.view_mut());
+            engine.forward_mapped(lh, rh, None, None, &v.view(), None, None, &mut out.view_mut());
         }
     }
     out

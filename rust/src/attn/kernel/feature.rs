@@ -16,7 +16,7 @@ use crate::attn::block_lt::self_tensor_row;
 use crate::attn::performer::PerformerFeatures;
 use crate::attn::poly::powi;
 use crate::attn::sketch::{HalfRowScratch, PolySketch};
-use crate::tensor::{dot, layernorm_rows, ln_row, Tensor, TensorView};
+use crate::tensor::{axpy, dot, layernorm_rows, ln_row, ln_row_vjp, Tensor, TensorView};
 
 /// Reusable per-state scratch for [`FeatureMap::map_row`] — the decode
 /// hot path (token × layer × head) must not rebuild recursion
@@ -70,6 +70,37 @@ pub trait FeatureMap: Send + Sync {
     /// Expand a mapped row into φ (length [`FeatureMap::feat_dim`]).
     /// Panics for score-only maps ([`IdentityPowerMap`]).
     fn expand(&self, mapped: &[f32], out: &mut [f32]);
+
+    // ----- training surface (VJPs; the forward path never calls these)
+
+    /// VJP of [`FeatureMap::map_row`]: gradient w.r.t. the *raw* row
+    /// given the gradient w.r.t. the mapped row.  Recomputes whatever
+    /// forward intermediates it needs (training recomputes, never tapes
+    /// inside the maps).
+    fn map_vjp(&self, raw: &[f32], d_mapped: &[f32]) -> Vec<f32>;
+
+    /// VJP of [`FeatureMap::score`]: accumulate into `da`/`db` the
+    /// gradient of `ds · score(a, b)` w.r.t. the two *mapped* rows.
+    fn score_vjp(&self, a: &[f32], b: &[f32], ds: f32, da: &mut [f32], db: &mut [f32]);
+
+    /// VJP of [`FeatureMap::expand`]: accumulate into `d_mapped` the
+    /// gradient pulled back from `d_phi` (length feat_dim).  Panics for
+    /// score-only maps, exactly like [`FeatureMap::expand`].
+    fn expand_vjp(&self, mapped: &[f32], d_phi: &[f32], d_mapped: &mut [f32]);
+}
+
+/// Shared pullback of the row self-tensor φ = l ⊗ l: with φ[i·r+j] =
+/// l[i]·l[j], `dl[i] += Σ_j (dφ[i·r+j] + dφ[j·r+i]) l[j]`.
+fn self_tensor_row_vjp(mapped: &[f32], d_phi: &[f32], d_mapped: &mut [f32]) {
+    let r = mapped.len();
+    debug_assert_eq!(d_phi.len(), r * r);
+    for i in 0..r {
+        let mut acc = 0.0f32;
+        for j in 0..r {
+            acc += (d_phi[i * r + j] + d_phi[j * r + i]) * mapped[j];
+        }
+        d_mapped[i] += acc;
+    }
 }
 
 // ---------------------------------------------------------- polysketch
@@ -116,6 +147,23 @@ impl FeatureMap for PolySketchMap {
     fn expand(&self, mapped: &[f32], out: &mut [f32]) {
         self_tensor_row(mapped, out);
     }
+
+    fn map_vjp(&self, raw: &[f32], d_mapped: &[f32]) -> Vec<f32> {
+        let normed = ln_row(raw);
+        let d_normed = self.sk.half_row_vjp(&normed, d_mapped);
+        ln_row_vjp(raw, &d_normed)
+    }
+
+    fn score_vjp(&self, a: &[f32], b: &[f32], ds: f32, da: &mut [f32], db: &mut [f32]) {
+        // s = (a·b)² ⇒ ds/da = 2(a·b)·b.
+        let coef = ds * 2.0 * dot(a, b);
+        axpy(da, b, coef);
+        axpy(db, a, coef);
+    }
+
+    fn expand_vjp(&self, mapped: &[f32], d_phi: &[f32], d_mapped: &mut [f32]) {
+        self_tensor_row_vjp(mapped, d_phi, d_mapped);
+    }
 }
 
 // ----------------------------------------------------------- performer
@@ -150,6 +198,20 @@ impl FeatureMap for PerformerMap {
 
     fn expand(&self, mapped: &[f32], out: &mut [f32]) {
         out.copy_from_slice(mapped);
+    }
+
+    fn map_vjp(&self, raw: &[f32], d_mapped: &[f32]) -> Vec<f32> {
+        let mapped = self.feats.apply_row(raw);
+        self.feats.apply_row_vjp(raw, &mapped, d_mapped)
+    }
+
+    fn score_vjp(&self, a: &[f32], b: &[f32], ds: f32, da: &mut [f32], db: &mut [f32]) {
+        axpy(da, b, ds);
+        axpy(db, a, ds);
+    }
+
+    fn expand_vjp(&self, _mapped: &[f32], d_phi: &[f32], d_mapped: &mut [f32]) {
+        axpy(d_mapped, d_phi, 1.0);
     }
 }
 
@@ -198,6 +260,21 @@ impl FeatureMap for IdentityPowerMap {
     fn expand(&self, _mapped: &[f32], _out: &mut [f32]) {
         panic!("identity-power features have no tractable prefix expansion (score-only map)");
     }
+
+    fn map_vjp(&self, raw: &[f32], d_mapped: &[f32]) -> Vec<f32> {
+        ln_row_vjp(raw, d_mapped)
+    }
+
+    fn score_vjp(&self, a: &[f32], b: &[f32], ds: f32, da: &mut [f32], db: &mut [f32]) {
+        // s = (a·b)^p ⇒ ds/da = p·(a·b)^{p-1}·b.
+        let coef = ds * self.p as f32 * powi(dot(a, b), self.p - 1);
+        axpy(da, b, coef);
+        axpy(db, a, coef);
+    }
+
+    fn expand_vjp(&self, _mapped: &[f32], _d_phi: &[f32], _d_mapped: &mut [f32]) {
+        panic!("identity-power features have no tractable prefix expansion (score-only map)");
+    }
 }
 
 // ------------------------------------------------- pre-mapped adapters
@@ -235,6 +312,19 @@ impl FeatureMap for DirectFeatures {
     fn expand(&self, mapped: &[f32], out: &mut [f32]) {
         out.copy_from_slice(mapped);
     }
+
+    fn map_vjp(&self, _raw: &[f32], d_mapped: &[f32]) -> Vec<f32> {
+        d_mapped.to_vec()
+    }
+
+    fn score_vjp(&self, a: &[f32], b: &[f32], ds: f32, da: &mut [f32], db: &mut [f32]) {
+        axpy(da, b, ds);
+        axpy(db, a, ds);
+    }
+
+    fn expand_vjp(&self, _mapped: &[f32], d_phi: &[f32], d_mapped: &mut [f32]) {
+        axpy(d_mapped, d_phi, 1.0);
+    }
 }
 
 /// Adapter for callers that already hold *half-sketch* rows: map is the
@@ -270,6 +360,20 @@ impl FeatureMap for SelfTensorFeatures {
 
     fn expand(&self, mapped: &[f32], out: &mut [f32]) {
         self_tensor_row(mapped, out);
+    }
+
+    fn map_vjp(&self, _raw: &[f32], d_mapped: &[f32]) -> Vec<f32> {
+        d_mapped.to_vec()
+    }
+
+    fn score_vjp(&self, a: &[f32], b: &[f32], ds: f32, da: &mut [f32], db: &mut [f32]) {
+        let coef = ds * 2.0 * dot(a, b);
+        axpy(da, b, coef);
+        axpy(db, a, coef);
+    }
+
+    fn expand_vjp(&self, mapped: &[f32], d_phi: &[f32], d_mapped: &mut [f32]) {
+        self_tensor_row_vjp(mapped, d_phi, d_mapped);
     }
 }
 
@@ -318,6 +422,118 @@ mod tests {
                 let a = map.map_row(&raw, &mut scratch);
                 let b = map.map_normed_row(&ln_row(&raw), &mut scratch);
                 assert_eq!(a, b, "map {mi} trial {t}");
+            }
+        }
+    }
+
+    fn fd_close(fd: f64, an: f64, ctx: &str) {
+        assert!(
+            (fd - an).abs() <= 1e-2 * (1.0 + fd.abs().max(an.abs())),
+            "{ctx}: fd {fd} vs analytic {an}"
+        );
+    }
+
+    #[test]
+    fn map_vjp_matches_finite_difference() {
+        let mut rng = Pcg::seeded(31);
+        let maps: Vec<Box<dyn FeatureMap>> = vec![
+            Box::new(PolySketchMap::new(Arc::new(PolySketch::sample(&mut rng, 8, 4, 4)))),
+            Box::new(PerformerMap::new(Arc::new(PerformerFeatures::sample(&mut rng, 8, 12)))),
+            Box::new(IdentityPowerMap::new(4)),
+            Box::new(DirectFeatures::new(8)),
+        ];
+        for (mi, map) in maps.iter().enumerate() {
+            let raw: Vec<f32> = rng.gaussians(8);
+            let mut scratch = MapScratch::default();
+            let width = map.map_row(&raw, &mut scratch).len();
+            let c: Vec<f32> = rng.gaussians(width);
+            let loss = |x: &[f32]| -> f64 {
+                let mut s = MapScratch::default();
+                map.map_row(x, &mut s)
+                    .iter()
+                    .zip(&c)
+                    .map(|(&m, &w)| (m as f64) * (w as f64))
+                    .sum()
+            };
+            let an = map.map_vjp(&raw, &c);
+            let eps = 1e-3f32;
+            for i in 0..raw.len() {
+                let mut xp = raw.clone();
+                xp[i] += eps;
+                let mut xm = raw.clone();
+                xm[i] -= eps;
+                let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps as f64);
+                fd_close(fd, an[i] as f64, &format!("map {mi} coord {i}"));
+            }
+        }
+    }
+
+    #[test]
+    fn score_vjp_matches_finite_difference() {
+        let mut rng = Pcg::seeded(32);
+        let maps: Vec<Box<dyn FeatureMap>> = vec![
+            Box::new(PolySketchMap::new(Arc::new(PolySketch::sample(&mut rng, 8, 5, 4)))),
+            Box::new(PerformerMap::new(Arc::new(PerformerFeatures::sample(&mut rng, 5, 5)))),
+            Box::new(IdentityPowerMap::new(4)),
+            Box::new(SelfTensorFeatures::new(5)),
+            Box::new(DirectFeatures::new(5)),
+        ];
+        for (mi, map) in maps.iter().enumerate() {
+            // Mapped rows are free inputs here: score is a function of
+            // two already-mapped rows of any common width.
+            let a: Vec<f32> = rng.gaussians(5);
+            let b: Vec<f32> = rng.gaussians(5);
+            let ds = 0.7f32;
+            let (mut da, mut db) = (vec![0.0f32; 5], vec![0.0f32; 5]);
+            map.score_vjp(&a, &b, ds, &mut da, &mut db);
+            let eps = 1e-3f32;
+            for i in 0..5 {
+                let mut ap = a.clone();
+                ap[i] += eps;
+                let mut am = a.clone();
+                am[i] -= eps;
+                let fd = (ds as f64)
+                    * ((map.score(&ap, &b) as f64) - (map.score(&am, &b) as f64))
+                    / (2.0 * eps as f64);
+                fd_close(fd, da[i] as f64, &format!("map {mi} da[{i}]"));
+                let mut bp = b.clone();
+                bp[i] += eps;
+                let mut bm = b.clone();
+                bm[i] -= eps;
+                let fd = (ds as f64)
+                    * ((map.score(&a, &bp) as f64) - (map.score(&a, &bm) as f64))
+                    / (2.0 * eps as f64);
+                fd_close(fd, db[i] as f64, &format!("map {mi} db[{i}]"));
+            }
+        }
+    }
+
+    #[test]
+    fn expand_vjp_matches_finite_difference() {
+        let mut rng = Pcg::seeded(33);
+        let maps: Vec<Box<dyn FeatureMap>> = vec![
+            Box::new(SelfTensorFeatures::new(4)),
+            Box::new(DirectFeatures::new(4)),
+        ];
+        for (mi, map) in maps.iter().enumerate() {
+            let mapped: Vec<f32> = rng.gaussians(4);
+            let f = map.feat_dim();
+            let c: Vec<f32> = rng.gaussians(f);
+            let loss = |m: &[f32]| -> f64 {
+                let mut phi = vec![0.0f32; f];
+                map.expand(m, &mut phi);
+                phi.iter().zip(&c).map(|(&p, &w)| (p as f64) * (w as f64)).sum()
+            };
+            let mut an = vec![0.0f32; 4];
+            map.expand_vjp(&mapped, &c, &mut an);
+            let eps = 1e-3f32;
+            for i in 0..4 {
+                let mut mp = mapped.clone();
+                mp[i] += eps;
+                let mut mm = mapped.clone();
+                mm[i] -= eps;
+                let fd = (loss(&mp) - loss(&mm)) / (2.0 * eps as f64);
+                fd_close(fd, an[i] as f64, &format!("map {mi} coord {i}"));
             }
         }
     }

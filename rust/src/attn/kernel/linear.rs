@@ -28,7 +28,7 @@ use std::sync::Arc;
 use crate::attn::kernel::feature::FeatureMap;
 use crate::attn::kernel::state::{KernelState, LinearState};
 use crate::attn::kernel::CausalKernel;
-use crate::tensor::{axpy, ln_row, Tensor, TensorView, TensorViewMut};
+use crate::tensor::{axpy, dot, ln_row, Tensor, TensorView, TensorViewMut};
 
 /// Linear causal attention over an arbitrary [`FeatureMap`], with an
 /// optional score-only local map for exact diagonal blocks.
@@ -36,6 +36,17 @@ pub struct LinearEngine {
     map: Arc<dyn FeatureMap>,
     local: Option<Arc<dyn FeatureMap>>,
     block: usize,
+}
+
+/// What the backward pass needs from the forward recompute: the prefix
+/// state `Z_l` *entering* each block and the per-row denominators
+/// `D_i = 1 + c_i`.  Filled by [`LinearEngine::forward_mapped`] when a
+/// sink is passed — the forward loop itself is the recorder, so forward
+/// and backward-recompute can never drift.
+#[derive(Default)]
+pub(crate) struct ForwardStats {
+    pub(crate) denom: Vec<f32>,
+    pub(crate) zsnaps: Vec<Vec<f32>>,
 }
 
 impl LinearEngine {
@@ -52,7 +63,11 @@ impl LinearEngine {
     /// configured) are the locally-mapped matrices scoring diagonal
     /// blocks.  Writes (n, h) into `out`; when `state` is given (must be
     /// fresh) it is left holding Z of every *full* block plus the ragged
-    /// tail buffered — exactly what absorbing all n rows produces.
+    /// tail buffered — exactly what absorbing all n rows produces.  When
+    /// `stats` is given, the pass additionally records what the backward
+    /// needs (per-block Z snapshots, per-row denominators) — one loop
+    /// serves forward and backward-recompute, so the two can never
+    /// drift.
     pub(crate) fn forward_mapped(
         &self,
         mq: &Tensor,
@@ -61,6 +76,7 @@ impl LinearEngine {
         lk: Option<&Tensor>,
         v: &TensorView<'_>,
         state: Option<&mut LinearState>,
+        mut stats: Option<&mut ForwardStats>,
         out: &mut TensorViewMut<'_>,
     ) {
         let n = mq.rows();
@@ -89,6 +105,9 @@ impl LinearEngine {
         let mut phi = vec![0.0f32; f];
 
         for l in 0..nb {
+            if let Some(s) = stats.as_deref_mut() {
+                s.zsnaps.push(z.clone());
+            }
             let base = l * b;
             let bl = b.min(n - base); // ragged tail: shorter final block
             // Diagonal block scores lt(score(q_i, k_j)).
@@ -132,6 +151,9 @@ impl LinearEngine {
                     prow[h] += w;
                 }
                 let inv = 1.0 / (1.0 + prow[h]);
+                if let Some(s) = stats.as_deref_mut() {
+                    s.denom.push(1.0 + prow[h]);
+                }
                 let orow = out.row_mut(base + bi);
                 for c in 0..h {
                     orow[c] = prow[c] * inv;
@@ -259,7 +281,7 @@ impl CausalKernel for LinearEngine {
             None => (None, None),
         };
         let st = state.map(|s| self.linear_state(s));
-        self.forward_mapped(&mq, &mk, lq.as_ref(), lk.as_ref(), v, st, out);
+        self.forward_mapped(&mq, &mk, lq.as_ref(), lk.as_ref(), v, st, None, out);
     }
 
     fn step(&self, q: &[f32], k: &[f32], v: &[f32], state: &mut KernelState) -> Vec<f32> {
@@ -300,5 +322,232 @@ impl CausalKernel for LinearEngine {
         let st = self.linear_state(state);
         self.buffer_key(k, v, st);
         self.maybe_flush(st);
+    }
+
+    /// The transpose of the block lower-triangular forward, still linear
+    /// in n: iterate blocks in *reverse*, carrying `dZ_suffix = Σ_{l'>l}
+    /// φ(Q_{l'})ᵀ dP_{l'}` — the suffix sum of feature outer-products.
+    /// At block l the (full-block) keys consume the current suffix
+    /// (`dφ(k) = [v|1]·dZ`, `dv += φ(k)·dZ`), then the block's queries
+    /// add their own `φ(q) ⊗ dacc` for consumption by earlier blocks.
+    /// Diagonal scores backprop through the score map (exact local map
+    /// when configured), and everything funnels through the feature-map
+    /// VJPs back to raw q/k rows.  O(n·(f·h + b·c)) per head.
+    fn vjp(
+        &self,
+        q: &TensorView<'_>,
+        k: &TensorView<'_>,
+        v: &TensorView<'_>,
+        d_out: &TensorView<'_>,
+        dq: &mut TensorViewMut<'_>,
+        dk: &mut TensorViewMut<'_>,
+        dv: &mut TensorViewMut<'_>,
+    ) {
+        let n = q.rows();
+        if n == 0 {
+            return;
+        }
+        let h = v.cols();
+        let f = self.map.feat_dim();
+        let hc = h + 1;
+        let b = self.block;
+        let nb = n.div_ceil(b);
+        assert_eq!((d_out.rows(), d_out.cols()), (n, h));
+
+        let mq = self.map.map(q);
+        let mk = self.map.map(k);
+        let (lq, lk) = match &self.local {
+            Some(loc) => (Some(loc.map(q)), Some(loc.map(k))),
+            None => (None, None),
+        };
+        let local = self
+            .local
+            .as_ref()
+            .map(|m| (m, lq.as_ref().expect("local q"), lk.as_ref().expect("local k")));
+        // Forward recompute through the one blocked loop, with the stats
+        // sink capturing Z snapshots + denominators.
+        let mut stats = ForwardStats::default();
+        let mut out = Tensor::zeros(&[n, h]);
+        self.forward_mapped(
+            &mq,
+            &mk,
+            lq.as_ref(),
+            lk.as_ref(),
+            v,
+            None,
+            Some(&mut stats),
+            &mut out.view_mut(),
+        );
+        let ForwardStats { denom, zsnaps } = stats;
+
+        let mut dmq = Tensor::zeros(&[n, mq.cols()]);
+        let mut dmk = Tensor::zeros(&[n, mk.cols()]);
+        let (mut dlq, mut dlk) = match (&lq, &lk) {
+            (Some(a), Some(c)) => (
+                Some(Tensor::zeros(&[n, a.cols()])),
+                Some(Tensor::zeros(&[n, c.cols()])),
+            ),
+            _ => (None, None),
+        };
+
+        let mut dz = vec![0.0f32; f * hc];
+        let mut phi = vec![0.0f32; f];
+        let mut dphi = vec![0.0f32; f];
+        let mut dacc = vec![0.0f32; hc];
+        for l in (0..nb).rev() {
+            let base = l * b;
+            let bl = b.min(n - base);
+            // Keys of a *full* block l feed the prefix of every later
+            // block; the ragged tail's keys only ever score diagonally,
+            // exactly as in the forward.
+            if bl == b {
+                for bj in 0..bl {
+                    let j = base + bj;
+                    self.map.expand(mk.row(j), &mut phi);
+                    let vrow = v.row(j);
+                    for c in 0..f {
+                        let zrow = &dz[c * hc..(c + 1) * hc];
+                        dphi[c] = dot(&zrow[..h], vrow) + zrow[h];
+                    }
+                    {
+                        let dvj = dv.row_mut(j);
+                        for (c, &pc) in phi.iter().enumerate() {
+                            if pc == 0.0 {
+                                continue;
+                            }
+                            axpy(dvj, &dz[c * hc..c * hc + h], pc);
+                        }
+                    }
+                    self.map.expand_vjp(mk.row(j), &dphi, dmk.row_mut(j));
+                }
+            }
+            let zl = &zsnaps[l];
+            for bi in 0..bl {
+                let i = base + bi;
+                let doi = d_out.row(i);
+                let inv = 1.0 / denom[i];
+                // out = acc[..h]/D, D = 1 + acc[h]:
+                // dacc[..h] = dout/D, dacc[h] = −(dout·out)/D.
+                for col in 0..h {
+                    dacc[col] = doi[col] * inv;
+                }
+                dacc[h] = -dot(doi, out.row(i)) * inv;
+                // Diagonal block.
+                for bj in 0..=bi {
+                    let j = base + bj;
+                    let w = match &local {
+                        Some((lm, lqm, lkm)) => lm.score(lqm.row(i), lkm.row(j)),
+                        None => self.map.score(mq.row(i), mk.row(j)),
+                    };
+                    axpy(dv.row_mut(j), &dacc[..h], w);
+                    let dw = dot(&dacc[..h], v.row(j)) + dacc[h];
+                    match &local {
+                        Some((lm, lqm, lkm)) => {
+                            // dlq/dlk are distinct tensors, so the two
+                            // row_mut borrows are disjoint even at i == j.
+                            let (dlq, dlk) =
+                                (dlq.as_mut().expect("dlq"), dlk.as_mut().expect("dlk"));
+                            lm.score_vjp(
+                                lqm.row(i),
+                                lkm.row(j),
+                                dw,
+                                dlq.row_mut(i),
+                                dlk.row_mut(j),
+                            );
+                        }
+                        None => {
+                            self.map.score_vjp(
+                                mq.row(i),
+                                mk.row(j),
+                                dw,
+                                dmq.row_mut(i),
+                                dmk.row_mut(j),
+                            );
+                        }
+                    }
+                }
+                // Prefix through Z_l (full hc width, like the forward).
+                self.map.expand(mq.row(i), &mut phi);
+                for c in 0..f {
+                    dphi[c] = dot(&zl[c * hc..(c + 1) * hc], &dacc);
+                }
+                self.map.expand_vjp(mq.row(i), &dphi, dmq.row_mut(i));
+                for (c, &pc) in phi.iter().enumerate() {
+                    if pc == 0.0 {
+                        continue;
+                    }
+                    axpy(&mut dz[c * hc..(c + 1) * hc], &dacc, pc);
+                }
+            }
+        }
+
+        // Pull mapped-row gradients back to the raw rows (both maps read
+        // the same raw row, so contributions add).
+        for i in 0..n {
+            let mut draw_q = self.map.map_vjp(q.row(i), dmq.row(i));
+            let mut draw_k = self.map.map_vjp(k.row(i), dmk.row(i));
+            if let Some((lm, _, _)) = &local {
+                let (dlq, dlk) = (dlq.as_ref().expect("dlq"), dlk.as_ref().expect("dlk"));
+                for (a, g) in draw_q.iter_mut().zip(lm.map_vjp(q.row(i), dlq.row(i))) {
+                    *a += g;
+                }
+                for (a, g) in draw_k.iter_mut().zip(lm.map_vjp(k.row(i), dlk.row(i))) {
+                    *a += g;
+                }
+            }
+            axpy(dq.row_mut(i), &draw_q, 1.0);
+            axpy(dk.row_mut(i), &draw_k, 1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::kernel::feature::{IdentityPowerMap, SelfTensorFeatures};
+    use crate::util::rng::Pcg;
+
+    /// The stats sink must be a pure observer: attaching it cannot change
+    /// output bytes, and what it records (per-row denominators, per-block
+    /// Z snapshots) must be shaped for the ragged partition (n = 13 vs
+    /// block 8), with and without a local map.
+    #[test]
+    fn forward_mapped_stats_sink_is_a_pure_observer() {
+        let mut rng = Pcg::seeded(41);
+        let (n, r, h, hl) = (13usize, 4usize, 5usize, 8usize);
+        let mq = Tensor::gaussian(&mut rng, &[n, r]);
+        let mk = Tensor::gaussian(&mut rng, &[n, r]);
+        let lq = Tensor::gaussian(&mut rng, &[n, hl]);
+        let lk = Tensor::gaussian(&mut rng, &[n, hl]);
+        let v = Tensor::gaussian(&mut rng, &[n, h]);
+        for with_local in [false, true] {
+            let local: Option<Arc<dyn FeatureMap>> =
+                with_local.then(|| Arc::new(IdentityPowerMap::new(4)) as Arc<dyn FeatureMap>);
+            let engine = LinearEngine::new(Arc::new(SelfTensorFeatures::new(r)), local, 8);
+            let (lq_opt, lk_opt) = if with_local { (Some(&lq), Some(&lk)) } else { (None, None) };
+            let mut plain = Tensor::zeros(&[n, h]);
+            engine.forward_mapped(
+                &mq, &mk, lq_opt, lk_opt, &v.view(), None, None, &mut plain.view_mut(),
+            );
+            let mut stats = ForwardStats::default();
+            let mut observed = Tensor::zeros(&[n, h]);
+            engine.forward_mapped(
+                &mq,
+                &mk,
+                lq_opt,
+                lk_opt,
+                &v.view(),
+                None,
+                Some(&mut stats),
+                &mut observed.view_mut(),
+            );
+            assert_eq!(plain, observed, "with_local={with_local}: stats sink changed bytes");
+            assert_eq!(stats.denom.len(), n);
+            assert_eq!(stats.zsnaps.len(), n.div_ceil(8));
+            assert!(stats.zsnaps[0].iter().all(|&z| z == 0.0), "block 0 enters with Z = 0");
+            // Non-negative kernel weights keep D = 1 + c near or above 1
+            // (allow float slack in the accumulated normalizer).
+            assert!(stats.denom.iter().all(|d| d.is_finite() && *d > 0.5));
+        }
     }
 }

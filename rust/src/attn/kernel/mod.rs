@@ -216,6 +216,25 @@ pub trait CausalKernel: Send + Sync {
     /// Fold a key/value pair into the state without producing an output.
     fn absorb(&self, k: &[f32], v: &[f32], state: &mut KernelState);
 
+    /// Training backward: accumulate into `dq`/`dk`/`dv` the gradients of
+    /// a scalar loss w.r.t. this head's raw `q`/`k`/`v`, given `d_out` =
+    /// ∂loss/∂(prefill output).  Forward internals are *recomputed*, not
+    /// taped (the recompute-softmax backward for the quadratic engine;
+    /// the reverse-direction blocked recurrence over suffix sums of
+    /// feature outer-products — still O(n·f·h) — for the linear engine).
+    /// Gradients accumulate (`+=`), so callers zero the buffers once and
+    /// may fold several heads into shared stripes.
+    fn vjp(
+        &self,
+        q: &TensorView<'_>,
+        k: &TensorView<'_>,
+        v: &TensorView<'_>,
+        d_out: &TensorView<'_>,
+        dq: &mut TensorViewMut<'_>,
+        dk: &mut TensorViewMut<'_>,
+        dv: &mut TensorViewMut<'_>,
+    );
+
     /// Allocating convenience over [`prefill_into`](CausalKernel::prefill_into).
     fn prefill(
         &self,
@@ -265,6 +284,41 @@ pub fn prefill_heads(
     };
     pool::par_map_mut(&mut units, 1, |hi, (o, st)| {
         kernels[hi].prefill_into(&qv[hi], &kv[hi], &vv[hi], st.as_deref_mut(), o);
+    });
+}
+
+/// Backward twin of [`prefill_heads`]: head `h` reads the column stripes
+/// of `q`/`k`/`v`/`d_out` and accumulates its raw-input gradients into
+/// the same stripes of `dq`/`dk`/`dv` (which must be zeroed by the
+/// caller).  Heads are independent and write disjoint stripes, so the
+/// pool fan-out cannot change bytes.
+pub fn vjp_heads(
+    kernels: &[Arc<dyn CausalKernel>],
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    d_out: &Tensor,
+    dq: &mut Tensor,
+    dk: &mut Tensor,
+    dv: &mut Tensor,
+) {
+    let heads = kernels.len();
+    assert!(heads > 0, "vjp_heads: no heads");
+    let qv = q.head_views(heads);
+    let kv = k.head_views(heads);
+    let vv = v.head_views(heads);
+    let dov = d_out.head_views(heads);
+    let dqv = dq.head_views_mut(heads);
+    let dkv = dk.head_views_mut(heads);
+    let dvv = dv.head_views_mut(heads);
+    let mut units: Vec<(TensorViewMut<'_>, TensorViewMut<'_>, TensorViewMut<'_>)> = dqv
+        .into_iter()
+        .zip(dkv)
+        .zip(dvv)
+        .map(|((a, b), c)| (a, b, c))
+        .collect();
+    pool::par_map_mut(&mut units, 1, |hi, (dqh, dkh, dvh)| {
+        kernels[hi].vjp(&qv[hi], &kv[hi], &vv[hi], &dov[hi], dqh, dkh, dvh);
     });
 }
 

@@ -10,9 +10,11 @@
 
 use crate::attn::kernel::state::{KernelState, KvState};
 use crate::attn::kernel::CausalKernel;
-use crate::attn::poly;
+use crate::attn::poly::{self, powi};
 use crate::attn::softmax;
-use crate::tensor::{layernorm_rows, ln_row, TensorView, TensorViewMut};
+use crate::tensor::{
+    axpy, dot, layernorm_rows, ln_row, ln_row_vjp, Tensor, TensorView, TensorViewMut,
+};
 
 enum QuadKind {
     Softmax,
@@ -109,6 +111,101 @@ impl CausalKernel for QuadraticEngine {
         match &self.kind {
             QuadKind::Softmax | QuadKind::Flash { .. } => st.push(k, v),
             QuadKind::Poly { .. } => st.push(&ln_row(k), v),
+        }
+    }
+
+    /// Recompute-attention backward.  Blocking (flash) is a prefill-side
+    /// schedule, not different math, so softmax and flash share the same
+    /// row-streaming backward; exact poly chains through the row
+    /// layernorms.  O(n²·h) per head — the quadratic engines pay the
+    /// quadratic price in training too, which is exactly what the
+    /// train_throughput bench measures against the linear engine.
+    fn vjp(
+        &self,
+        q: &TensorView<'_>,
+        k: &TensorView<'_>,
+        v: &TensorView<'_>,
+        d_out: &TensorView<'_>,
+        dq: &mut TensorViewMut<'_>,
+        dk: &mut TensorViewMut<'_>,
+        dv: &mut TensorViewMut<'_>,
+    ) {
+        let n = q.rows();
+        let hd = q.cols();
+        let hv = v.cols();
+        assert_eq!((d_out.rows(), d_out.cols()), (n, hv));
+        match &self.kind {
+            QuadKind::Softmax | QuadKind::Flash { .. } => {
+                let scale = 1.0 / (hd as f32).sqrt();
+                let mut scores = vec![0.0f32; n];
+                let mut dp = vec![0.0f32; n];
+                let mut dq_acc = vec![0.0f32; hd];
+                for i in 0..n {
+                    let qi = q.row(i);
+                    let doi = d_out.row(i);
+                    let m = i + 1;
+                    let mut mx = f32::NEG_INFINITY;
+                    for j in 0..m {
+                        scores[j] = dot(qi, k.row(j)) * scale;
+                        mx = mx.max(scores[j]);
+                    }
+                    let mut sum = 0.0f32;
+                    for s in scores[..m].iter_mut() {
+                        *s = (*s - mx).exp();
+                        sum += *s;
+                    }
+                    // s_j = scores[j]/sum; softmax VJP: da_j = s_j(dp_j - Σ s dp).
+                    let mut sdot = 0.0f32;
+                    for j in 0..m {
+                        dp[j] = dot(doi, v.row(j));
+                        sdot += scores[j] / sum * dp[j];
+                    }
+                    dq_acc.fill(0.0);
+                    for j in 0..m {
+                        let s = scores[j] / sum;
+                        axpy(dv.row_mut(j), doi, s);
+                        let da = s * (dp[j] - sdot) * scale;
+                        axpy(&mut dq_acc, k.row(j), da);
+                        axpy(dk.row_mut(j), qi, da);
+                    }
+                    axpy(dq.row_mut(i), &dq_acc, 1.0);
+                }
+            }
+            QuadKind::Poly { p } => {
+                let qn = layernorm_rows(q);
+                let kn = layernorm_rows(k);
+                let mut dqn = Tensor::zeros(&[n, hd]);
+                let mut dkn = Tensor::zeros(&[n, hd]);
+                let mut acc = vec![0.0f32; hv];
+                let mut w = vec![0.0f32; n];
+                for i in 0..n {
+                    let qni = qn.row(i);
+                    let doi = d_out.row(i);
+                    let mut denom = 1.0f32;
+                    acc.fill(0.0);
+                    for j in 0..=i {
+                        w[j] = powi(dot(qni, kn.row(j)), *p);
+                        denom += w[j];
+                        axpy(&mut acc, v.row(j), w[j]);
+                    }
+                    let inv = 1.0 / denom;
+                    // out_i = acc·inv; ∂out/∂w_j = (v_j − out_i)/denom.
+                    let dout_dot_out: f32 =
+                        doi.iter().zip(&acc).map(|(&d, &a)| d * a * inv).sum();
+                    for j in 0..=i {
+                        axpy(dv.row_mut(j), doi, w[j] * inv);
+                        let dw = (dot(doi, v.row(j)) - dout_dot_out) * inv;
+                        let t = dot(qni, kn.row(j));
+                        let dt = dw * *p as f32 * powi(t, *p - 1);
+                        axpy(dqn.row_mut(i), kn.row(j), dt);
+                        axpy(dkn.row_mut(j), qni, dt);
+                    }
+                }
+                for i in 0..n {
+                    axpy(dq.row_mut(i), &ln_row_vjp(q.row(i), dqn.row(i)), 1.0);
+                    axpy(dk.row_mut(i), &ln_row_vjp(k.row(i), dkn.row(i)), 1.0);
+                }
+            }
         }
     }
 }

@@ -93,6 +93,34 @@ impl PerformerFeatures {
         let t = Tensor::from_vec(&[1, row.len()], row.to_vec());
         self.apply(&t).into_vec()
     }
+
+    /// VJP of [`PerformerFeatures::apply_row`]: with φ_j(x) =
+    /// exp(w_j·x − ||x||²/2)/√m, dφ_j/dx = φ_j(x)·(w_j − x), so
+    /// `dx = Σ_j d_j φ_j (w_j − x)`.  `mapped` is the forward output
+    /// (recomputed by the caller); the training path through every
+    /// performer head runs through here.
+    pub fn apply_row_vjp(&self, row: &[f32], mapped: &[f32], d_mapped: &[f32]) -> Vec<f32> {
+        let h = row.len();
+        let m = self.w.cols();
+        debug_assert_eq!(mapped.len(), m);
+        debug_assert_eq!(d_mapped.len(), m);
+        let mut dx = vec![0.0f32; h];
+        let mut csum = 0.0f32;
+        for j in 0..m {
+            let c = d_mapped[j] * mapped[j];
+            if c == 0.0 {
+                continue;
+            }
+            csum += c;
+            for i in 0..h {
+                dx[i] += c * self.w.at2(i, j);
+            }
+        }
+        for i in 0..h {
+            dx[i] -= csum * row[i];
+        }
+        dx
+    }
 }
 
 fn chi_sample(rng: &mut Pcg, h: usize) -> f32 {
@@ -135,6 +163,32 @@ mod tests {
         let full = f.apply(&x);
         for i in 0..5 {
             assert_eq!(f.apply_row(x.row(i)).as_slice(), full.row(i));
+        }
+    }
+
+    #[test]
+    fn apply_row_vjp_matches_finite_difference() {
+        let mut rng = Pcg::seeded(8);
+        let f = PerformerFeatures::sample(&mut rng, 8, 16);
+        let x: Vec<f32> = rng.gaussians(8).iter().map(|v| v * 0.5).collect();
+        let c: Vec<f32> = rng.gaussians(16);
+        let loss = |x: &[f32]| -> f64 {
+            f.apply_row(x).iter().zip(&c).map(|(&p, &w)| (p as f64) * (w as f64)).sum()
+        };
+        let mapped = f.apply_row(&x);
+        let an = f.apply_row_vjp(&x, &mapped, &c);
+        let eps = 1e-3f32;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps as f64);
+            let a = an[i] as f64;
+            assert!(
+                (fd - a).abs() <= 1e-2 * (1.0 + fd.abs().max(a.abs())),
+                "coord {i}: fd {fd} vs analytic {a}"
+            );
         }
     }
 

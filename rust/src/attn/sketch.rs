@@ -6,7 +6,7 @@
 //! non-negativity, AMM error decay with r).
 
 use crate::exec::pool;
-use crate::tensor::{axpy, Tensor};
+use crate::tensor::{axpy, dot, Tensor};
 use crate::util::rng::Pcg;
 
 /// Output elements (n · r²) below which `self_tensor_rows` runs inline —
@@ -137,6 +137,72 @@ impl PolySketch {
         let s = 1.0 / (self.r as f32).sqrt();
         for (o, &t) in out.iter_mut().zip(tmp.iter()) {
             *o = (*o * t) * s;
+        }
+    }
+
+    /// VJP of [`PolySketch::half_row`]: gradient of the half sketch with
+    /// respect to the (already-normalized) input row.  The recursion is a
+    /// composition of fixed linear projections and elementwise products,
+    /// so the backward is the mirrored recursion: `out = (m1 G1) ⊙ (m2 G2)
+    /// · r^{-1/2}` gives `dm1 = G1 (d_out ⊙ m2G2) · r^{-1/2}` (and
+    /// symmetrically), with child gradients summed at the shared input.
+    /// The training path through every polysketch head runs through here.
+    pub fn half_row_vjp(&self, row: &[f32], d_out: &[f32]) -> Vec<f32> {
+        let d = self.p / 2;
+        let mut da = vec![0.0f32; row.len()];
+        if d == 1 {
+            // Degree-1 base case: the half sketch is the row itself.
+            da.copy_from_slice(d_out);
+            return da;
+        }
+        self.pswn_row_vjp(row, &self.gs, d, d_out, &mut da);
+        da
+    }
+
+    /// Allocating forward of `pswn_row` for the backward pass (the
+    /// training path recomputes intermediates instead of taping them).
+    /// Delegates to the *same* recursion the forward runs — bitwise
+    /// identical by construction, never by hand-kept parallel code.
+    fn pswn_row_alloc(&self, a: &[f32], gs: &[Tensor], d: usize) -> Vec<f32> {
+        if d == 1 {
+            return a.to_vec();
+        }
+        let levels = d.trailing_zeros() as usize;
+        let mut scratch = vec![Vec::new(); 3 * levels];
+        let mut out = vec![0.0f32; self.r];
+        self.pswn_row(a, gs, d, &mut scratch, &mut out);
+        out
+    }
+
+    fn pswn_row_vjp(&self, a: &[f32], gs: &[Tensor], d: usize, d_out: &[f32], da: &mut [f32]) {
+        debug_assert!(d >= 2 && d.is_power_of_two());
+        let n_sub = num_projections(d / 2);
+        let g1 = &gs[2 * n_sub];
+        let g2 = &gs[2 * n_sub + 1];
+        let (m1, m2): (Vec<f32>, Vec<f32>) = if d == 2 {
+            (a.to_vec(), a.to_vec())
+        } else {
+            (
+                self.pswn_row_alloc(a, &gs[..n_sub], d / 2),
+                self.pswn_row_alloc(a, &gs[n_sub..2 * n_sub], d / 2),
+            )
+        };
+        let mut u = vec![0.0f32; self.r];
+        let mut w = vec![0.0f32; self.r];
+        matvec(&m1, g1, &mut u);
+        matvec(&m2, g2, &mut w);
+        let s = 1.0 / (self.r as f32).sqrt();
+        let du: Vec<f32> = d_out.iter().zip(&w).map(|(&d0, &wv)| d0 * wv * s).collect();
+        let dw: Vec<f32> = d_out.iter().zip(&u).map(|(&d0, &uv)| d0 * uv * s).collect();
+        let dm1: Vec<f32> = (0..m1.len()).map(|c| dot(g1.row(c), &du)).collect();
+        let dm2: Vec<f32> = (0..m2.len()).map(|c| dot(g2.row(c), &dw)).collect();
+        if d == 2 {
+            for (o, (x, y)) in da.iter_mut().zip(dm1.iter().zip(&dm2)) {
+                *o += x + y;
+            }
+        } else {
+            self.pswn_row_vjp(a, &gs[..n_sub], d / 2, &dm1, da);
+            self.pswn_row_vjp(a, &gs[n_sub..2 * n_sub], d / 2, &dm2, da);
         }
     }
 
@@ -329,6 +395,39 @@ mod tests {
             for i in 0..7 {
                 let got = sk.half_row_scratch(x.row(i), &mut scratch);
                 assert_eq!(got.as_slice(), full.row(i), "p={p} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn half_row_vjp_matches_finite_difference() {
+        // Central difference against the analytic VJP at every degree the
+        // recursion exercises (p = 2 is the base case, p = 8 is two
+        // recursion levels).
+        let mut rng = Pcg::seeded(9);
+        for p in [2usize, 4, 8] {
+            let sk = PolySketch::sample(&mut rng, 8, 4, p);
+            let x: Vec<f32> = rng.gaussians(8);
+            // p = 2 is the degree-1 base case: the half sketch is the row
+            // itself (length h), not an r-dim sketch — size the cotangent
+            // to the actual output.
+            let c: Vec<f32> = rng.gaussians(sk.half_row(&x).len());
+            let loss = |x: &[f32]| -> f64 {
+                sk.half_row(x).iter().zip(&c).map(|(&h, &w)| (h as f64) * (w as f64)).sum()
+            };
+            let an = sk.half_row_vjp(&x, &c);
+            let eps = 1e-3f32;
+            for i in 0..x.len() {
+                let mut xp = x.clone();
+                xp[i] += eps;
+                let mut xm = x.clone();
+                xm[i] -= eps;
+                let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps as f64);
+                let a = an[i] as f64;
+                assert!(
+                    (fd - a).abs() <= 1e-2 * (1.0 + fd.abs().max(a.abs())),
+                    "p={p} coord {i}: fd {fd} vs analytic {a}"
+                );
             }
         }
     }

@@ -176,6 +176,33 @@ pub fn out_dir() -> PathBuf {
         .unwrap_or_else(|| Path::new("bench_out").to_path_buf())
 }
 
+/// Write a bench JSON artifact under `bench_out/<name>.json`:
+/// `{"bench": name, <header pairs>, "results": [records...]}`.  Header
+/// values are pre-encoded JSON fragments (`"\"Quick\""`, `"{...}"`,
+/// `"128"`), records use the same hand-rolled encoder `metrics` uses —
+/// one writer for every bench that emits a cross-PR tracking artifact.
+pub fn write_json(
+    name: &str,
+    header: &[(&str, String)],
+    records: &[crate::metrics::Record],
+) -> anyhow::Result<PathBuf> {
+    let mut json = format!("{{\n  \"bench\": \"{name}\",\n");
+    for (k, v) in header {
+        let _ = writeln!(json, "  \"{k}\": {v},");
+    }
+    json.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        let _ = write!(json, "    {}", r.to_json());
+        json.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    let dir = out_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, json)?;
+    Ok(path)
+}
+
 /// Standard bench banner.
 pub fn banner(name: &str, paper_ref: &str, mode: Mode) {
     println!("\n########################################################");

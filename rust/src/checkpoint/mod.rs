@@ -17,6 +17,57 @@ use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"PSFCKPT1";
 
+/// Std-only CRC-32 (IEEE 802.3, the zlib polynomial) with the same
+/// `Hasher::new/update/finalize` surface as the `crc32fast` crate — this
+/// environment is fully offline, so the checksum lives in-crate.
+mod crc32 {
+    const POLY: u32 = 0xedb8_8320;
+
+    const fn table() -> [u32; 256] {
+        let mut t = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            t[i] = c;
+            i += 1;
+        }
+        t
+    }
+
+    // Const-evaluated once at compile time.
+    static TABLE: [u32; 256] = table();
+
+    pub struct Hasher {
+        state: u32,
+    }
+
+    impl Hasher {
+        pub fn new() -> Hasher {
+            Hasher { state: 0xffff_ffff }
+        }
+
+        pub fn update(&mut self, data: &[u8]) {
+            for &b in data {
+                let idx = ((self.state ^ b as u32) & 0xff) as usize;
+                self.state = TABLE[idx] ^ (self.state >> 8);
+            }
+        }
+
+        pub fn finalize(self) -> u32 {
+            self.state ^ 0xffff_ffff
+        }
+    }
+}
+
+// The historical call sites spell `crc32fast::Hasher`; keep that name
+// aliased to the in-crate implementation.
+use crc32 as crc32fast;
+
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Checkpoint {
     pub step: u64,
@@ -168,6 +219,21 @@ mod tests {
 
     fn tmpfile(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join("psf_ckpt_test").join(name)
+    }
+
+    #[test]
+    fn crc32_known_answer() {
+        // The canonical IEEE CRC-32 check value.
+        let mut h = crc32fast::Hasher::new();
+        h.update(b"123456789");
+        assert_eq!(h.finalize(), 0xcbf4_3926);
+        // Incremental updates agree with one-shot hashing.
+        let mut a = crc32fast::Hasher::new();
+        a.update(b"1234");
+        a.update(b"56789");
+        let mut b = crc32fast::Hasher::new();
+        b.update(b"123456789");
+        assert_eq!(a.finalize(), b.finalize());
     }
 
     #[test]

@@ -22,7 +22,10 @@ impl Batch {
     }
 }
 
-/// Deterministic segment-shuffling batcher.
+/// Deterministic segment-shuffling batcher.  `Clone` snapshots the full
+/// iteration state: a clone draws the same upcoming batches without
+/// advancing the original (the trainer's fallback-eval primitive).
+#[derive(Clone)]
 pub struct Batcher {
     segments: Vec<Vec<u32>>,
     batch: usize,
@@ -93,6 +96,20 @@ impl Batcher {
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
+
+    /// Advance past `n` batches without materializing them — the same
+    /// cursor/epoch arithmetic as [`Batcher::next_batch`], so a resumed
+    /// trainer lands on exactly the batch an uninterrupted run would see
+    /// next.
+    pub fn skip_batches(&mut self, n: u64) {
+        for _ in 0..n {
+            if self.cursor + self.batch > self.order.len() {
+                self.epoch += 1;
+                self.reshuffle();
+            }
+            self.cursor += self.batch;
+        }
+    }
 }
 
 /// Split a token stream into train/test by fraction (test gets the tail).
@@ -157,6 +174,19 @@ mod tests {
         let epoch1_first = b.next_batch().tokens;
         assert_eq!(b.epoch(), 1);
         assert_ne!(epoch0_first, epoch1_first);
+    }
+
+    #[test]
+    fn skip_batches_matches_consuming() {
+        let s = stream(33 * 10);
+        let mut a = Batcher::new(&s, 3, 33, 5);
+        let mut b = Batcher::new(&s, 3, 33, 5);
+        for _ in 0..7 {
+            a.next_batch();
+        }
+        b.skip_batches(7);
+        assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+        assert_eq!(a.epoch(), b.epoch());
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub mod scheduler;
 pub mod session;
 
 pub use crate::attn::KernelState;
-pub use model::{LayerState, LmConfig, NativeLm};
+pub use model::{LayerParams, LayerState, LmConfig, NativeLm, Params};
 pub use sampler::SamplePolicy;
 pub use scheduler::{Scheduler, SchedulerConfig, ServeSummary, SessionReport};
 pub use session::{decode_text, encode_prompt, DecodeSession, GenRequest, SessionSnapshot};

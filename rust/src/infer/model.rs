@@ -2,13 +2,18 @@
 //!
 //! The PJRT model path (`runtime::ModelRuntime`) executes fixed-shape AOT
 //! artifacts and cannot step one token at a time; this model is its
-//! native-rust twin for the serving path, mirroring the paper recipe the
-//! JAX model uses (python/compile/model.py): sinusoidal absolute position
-//! embeddings on the token embedding, pre-LN blocks, RoPE on q/k, GEGLU
-//! feed-forward, final LN + readout.  Weights are deterministic in the
-//! config seed (this repo has no host-side checkpoint import — the
-//! serving subsystem's correctness story is prefill/decode parity, which
-//! is weight-independent).
+//! native-rust twin for the serving *and training* paths, mirroring the
+//! paper recipe the JAX model uses (python/compile/model.py): sinusoidal
+//! absolute position embeddings on the token embedding, pre-LN blocks,
+//! RoPE on q/k, GEGLU feed-forward, final LN + readout.
+//!
+//! Weights live in a shared [`Params`] struct — named-tensor iteration
+//! for the optimizer and checkpoint serialization — used identically by
+//! inference and by the native training subsystem (`crate::train`), and
+//! round-trip bitwise through [`NativeLm::to_checkpoint`] /
+//! [`NativeLm::from_checkpoint`], so weights trained with
+//! `psf train-native` are directly servable by `psf generate`/`psf
+//! serve`.  Fresh models are deterministic in the config seed.
 //!
 //! Attention is entirely behind [`CausalKernel`]: each (layer, head)
 //! holds one `Arc<dyn CausalKernel>` built by `Mechanism::build_kernel`
@@ -28,11 +33,15 @@ use std::sync::Arc;
 
 use crate::attn::kernel::{self, CausalKernel, KernelState};
 use crate::attn::Mechanism;
-use crate::tensor::{layernorm_rows, ln_row, Tensor};
+use crate::checkpoint::Checkpoint;
+use crate::tensor::{gelu, layernorm_rows, ln_row, Tensor};
 use crate::util::rng::Pcg;
 
+/// Checkpoint format version written into the `meta` section.
+const CKPT_FORMAT: f32 = 1.0;
+
 /// Native LM hyperparameters.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LmConfig {
     /// Vocabulary size; the `generate` path uses byte-level tokens
     /// (id 0 = BOS, ids 1..=256 = bytes), so 257 is the natural floor.
@@ -52,16 +61,118 @@ impl Default for LmConfig {
     }
 }
 
-struct Layer {
-    wq: Tensor,
-    wk: Tensor,
-    wv: Tensor,
-    wo: Tensor,
-    ffn_gate: Tensor,
-    ffn_up: Tensor,
-    ffn_down: Tensor,
-    /// One instantiated kernel (engine + sketches/features) per head.
-    heads: Vec<Arc<dyn CausalKernel>>,
+/// One transformer block's weights.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerParams {
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub ffn_gate: Tensor,
+    pub ffn_up: Tensor,
+    pub ffn_down: Tensor,
+}
+
+/// Every learnable tensor of a [`NativeLm`], shared between inference and
+/// training.  The kernels' random state (sketches/features) is *not* a
+/// parameter — it is reconstructed from the config seed — so a `Params`
+/// plus an [`LmConfig`] + [`Mechanism`] fully determines a model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Params {
+    pub embed: Tensor,
+    pub readout: Tensor,
+    pub layers: Vec<LayerParams>,
+}
+
+impl Params {
+    /// Named-tensor iteration in a fixed, stable order — the contract the
+    /// optimizer state, gradient buffers, and checkpoint sections share.
+    pub fn named(&self) -> Vec<(String, &Tensor)> {
+        let mut out: Vec<(String, &Tensor)> =
+            vec![("embed".into(), &self.embed), ("readout".into(), &self.readout)];
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push((format!("layer{i}.wq"), &l.wq));
+            out.push((format!("layer{i}.wk"), &l.wk));
+            out.push((format!("layer{i}.wv"), &l.wv));
+            out.push((format!("layer{i}.wo"), &l.wo));
+            out.push((format!("layer{i}.ffn_gate"), &l.ffn_gate));
+            out.push((format!("layer{i}.ffn_up"), &l.ffn_up));
+            out.push((format!("layer{i}.ffn_down"), &l.ffn_down));
+        }
+        out
+    }
+
+    /// Mutable twin of [`Params::named`], same order.
+    pub fn named_mut(&mut self) -> Vec<(String, &mut Tensor)> {
+        let mut out: Vec<(String, &mut Tensor)> = vec![
+            ("embed".into(), &mut self.embed),
+            ("readout".into(), &mut self.readout),
+        ];
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            out.push((format!("layer{i}.wq"), &mut l.wq));
+            out.push((format!("layer{i}.wk"), &mut l.wk));
+            out.push((format!("layer{i}.wv"), &mut l.wv));
+            out.push((format!("layer{i}.wo"), &mut l.wo));
+            out.push((format!("layer{i}.ffn_gate"), &mut l.ffn_gate));
+            out.push((format!("layer{i}.ffn_up"), &mut l.ffn_up));
+            out.push((format!("layer{i}.ffn_down"), &mut l.ffn_down));
+        }
+        out
+    }
+
+    /// Same-shaped all-zero buffer (gradient accumulator).
+    pub fn zeros_like(&self) -> Params {
+        Params {
+            embed: Tensor::zeros(self.embed.shape()),
+            readout: Tensor::zeros(self.readout.shape()),
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerParams {
+                    wq: Tensor::zeros(l.wq.shape()),
+                    wk: Tensor::zeros(l.wk.shape()),
+                    wv: Tensor::zeros(l.wv.shape()),
+                    wo: Tensor::zeros(l.wo.shape()),
+                    ffn_gate: Tensor::zeros(l.ffn_gate.shape()),
+                    ffn_up: Tensor::zeros(l.ffn_up.shape()),
+                    ffn_down: Tensor::zeros(l.ffn_down.shape()),
+                })
+                .collect(),
+        }
+    }
+
+    /// self += other · s, tensor by tensor (fixed iteration order — the
+    /// deterministic gradient reduction runs through here with s = 1).
+    pub fn add_scaled(&mut self, other: &Params, s: f32) {
+        let o = other.named();
+        for ((_, t), (_, u)) in self.named_mut().into_iter().zip(o) {
+            for (a, b) in t.data_mut().iter_mut().zip(u.data()) {
+                *a += b * s;
+            }
+        }
+    }
+
+    /// self *= s elementwise.
+    pub fn scale_in_place(&mut self, s: f32) {
+        for (_, t) in self.named_mut() {
+            for a in t.data_mut() {
+                *a *= s;
+            }
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.named().iter().map(|(_, t)| t.len()).sum()
+    }
+
+    /// Σ x² over every tensor, accumulated in f64 (global-norm clipping).
+    pub fn l2_norm_sq(&self) -> f64 {
+        self.named()
+            .iter()
+            .flat_map(|(_, t)| t.data())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum()
+    }
 }
 
 /// Decode state of one layer: one [`KernelState`] per head.
@@ -74,9 +185,10 @@ pub struct LayerState {
 pub struct NativeLm {
     pub cfg: LmConfig,
     pub mech: Mechanism,
-    embed: Tensor,
-    readout: Tensor,
-    layers: Vec<Layer>,
+    params: Params,
+    /// One instantiated kernel (engine + sketches/features) per
+    /// (layer, head).
+    kernels: Vec<Vec<Arc<dyn CausalKernel>>>,
 }
 
 impl NativeLm {
@@ -84,6 +196,9 @@ impl NativeLm {
         assert!(cfg.d_model % cfg.heads == 0, "d_model must divide into heads");
         let hd = cfg.d_model / cfg.heads;
         assert!(hd % 2 == 0, "head_dim must be even (RoPE pairs)");
+        // RNG consumption order is part of the golden-fixture contract:
+        // embed, readout, then per layer the seven weight tensors followed
+        // by that layer's head kernels.
         let mut rng = Pcg::seeded(cfg.seed ^ 0x1fe7);
         let d = cfg.d_model;
         let f = cfg.ff_mult * d;
@@ -91,8 +206,10 @@ impl NativeLm {
         let sf = 1.0 / (f as f32).sqrt();
         let embed = Tensor::gaussian(&mut rng, &[cfg.vocab, d]).scale(0.02);
         let readout = Tensor::gaussian(&mut rng, &[d, cfg.vocab]).scale(0.02);
-        let layers = (0..cfg.layers)
-            .map(|_| Layer {
+        let mut layers = Vec::with_capacity(cfg.layers);
+        let mut kernels = Vec::with_capacity(cfg.layers);
+        for _ in 0..cfg.layers {
+            layers.push(LayerParams {
                 wq: Tensor::gaussian(&mut rng, &[d, d]).scale(sd),
                 wk: Tensor::gaussian(&mut rng, &[d, d]).scale(sd),
                 wv: Tensor::gaussian(&mut rng, &[d, d]).scale(sd),
@@ -100,21 +217,44 @@ impl NativeLm {
                 ffn_gate: Tensor::gaussian(&mut rng, &[d, f]).scale(sd),
                 ffn_up: Tensor::gaussian(&mut rng, &[d, f]).scale(sd),
                 ffn_down: Tensor::gaussian(&mut rng, &[f, d]).scale(sf),
-                heads: (0..cfg.heads).map(|_| mech.build_kernel(hd, &mut rng)).collect(),
-            })
-            .collect();
-        NativeLm { cfg, mech, embed, readout, layers }
+            });
+            kernels.push((0..cfg.heads).map(|_| mech.build_kernel(hd, &mut rng)).collect());
+        }
+        NativeLm { cfg, mech, params: Params { embed, readout, layers }, kernels }
     }
 
     pub fn head_dim(&self) -> usize {
         self.cfg.d_model / self.cfg.heads
     }
 
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    /// Mutable weight access (the optimizer's write path).
+    pub fn params_mut(&mut self) -> &mut Params {
+        &mut self.params
+    }
+
+    /// Replace the weights wholesale (checkpoint restore); shapes must
+    /// match the model's config.
+    pub fn set_params(&mut self, p: Params) {
+        let want: Vec<_> = self.params.named().iter().map(|(n, t)| (n.clone(), t.shape().to_vec())).collect();
+        let got: Vec<_> = p.named().iter().map(|(n, t)| (n.clone(), t.shape().to_vec())).collect();
+        assert_eq!(want, got, "set_params: shape mismatch");
+        self.params = p;
+    }
+
+    /// Per-layer head kernels (the training backward walks these).
+    pub fn kernels(&self) -> &[Vec<Arc<dyn CausalKernel>>] {
+        &self.kernels
+    }
+
     /// Fresh per-layer decode states matching this model's kernels.
     pub fn new_states(&self) -> Vec<LayerState> {
-        self.layers
+        self.kernels
             .iter()
-            .map(|l| LayerState { heads: l.heads.iter().map(|k| k.new_state()).collect() })
+            .map(|l| LayerState { heads: l.iter().map(|k| k.new_state()).collect() })
             .collect()
     }
 
@@ -147,10 +287,10 @@ impl NativeLm {
         let mut x = Tensor::zeros(&[n, d]);
         for (i, &t) in tokens.iter().enumerate() {
             let row = x.row_mut(i);
-            row.copy_from_slice(self.embed.row(t as usize));
+            row.copy_from_slice(self.params.embed.row(t as usize));
             add_sinusoidal(row, i);
         }
-        for (li, layer) in self.layers.iter().enumerate() {
+        for (li, layer) in self.params.layers.iter().enumerate() {
             let xn = layernorm_rows(&x);
             let mut q = xn.matmul(&layer.wq);
             let mut k = xn.matmul(&layer.wk);
@@ -165,7 +305,7 @@ impl NativeLm {
             // no copies, so the bytes cannot depend on scheduling.
             let mut attn_out = Tensor::zeros(&[n, d]);
             kernel::prefill_heads(
-                &layer.heads,
+                &self.kernels[li],
                 &q,
                 &k,
                 &v,
@@ -178,7 +318,7 @@ impl NativeLm {
             let u = xn2.matmul(&layer.ffn_up);
             x = x.add(&g.hadamard(&u).matmul(&layer.ffn_down));
         }
-        layernorm_rows(&x).matmul(&self.readout)
+        layernorm_rows(&x).matmul(&self.params.readout)
     }
 
     /// One decode step: fold `token` (at absolute position `pos`) into the
@@ -186,9 +326,9 @@ impl NativeLm {
     pub fn step(&self, token: u32, pos: usize, states: &mut [LayerState]) -> Vec<f32> {
         let d = self.cfg.d_model;
         let hd = self.head_dim();
-        let mut x = self.embed.row(token as usize).to_vec();
+        let mut x = self.params.embed.row(token as usize).to_vec();
         add_sinusoidal(&mut x, pos);
-        for (li, layer) in self.layers.iter().enumerate() {
+        for (li, layer) in self.params.layers.iter().enumerate() {
             let xn = Tensor::from_vec(&[1, d], ln_row(&x));
             let q = xn.matmul(&layer.wq);
             let k = xn.matmul(&layer.wk);
@@ -200,7 +340,7 @@ impl NativeLm {
                 let vh = &v.row(0)[hi * hd..(hi + 1) * hd];
                 rope_row(&mut qh, pos);
                 rope_row(&mut kh, pos);
-                let oh = layer.heads[hi].step(&qh, &kh, vh, &mut states[li].heads[hi]);
+                let oh = self.kernels[li][hi].step(&qh, &kh, vh, &mut states[li].heads[hi]);
                 concat[hi * hd..(hi + 1) * hd].copy_from_slice(&oh);
             }
             let attn_out = Tensor::from_vec(&[1, d], concat).matmul(&layer.wo);
@@ -215,13 +355,117 @@ impl NativeLm {
                 *xi += a;
             }
         }
-        Tensor::from_vec(&[1, d], ln_row(&x)).matmul(&self.readout).into_vec()
+        Tensor::from_vec(&[1, d], ln_row(&x)).matmul(&self.params.readout).into_vec()
+    }
+
+    // ------------------------------------------------- checkpoint bridge
+
+    /// Serialize config, mechanism, and weights into a [`Checkpoint`]
+    /// (sections `meta`, `mech`, `param.<name>`); the trainer layers its
+    /// optimizer sections on top before saving.  Values are stored as raw
+    /// little-endian f32, so a save/load round-trip is bitwise exact.
+    pub fn to_checkpoint(&self, step: u64) -> Checkpoint {
+        let mut ck = Checkpoint::new(step);
+        let mut meta = vec![
+            CKPT_FORMAT,
+            self.cfg.vocab as f32,
+            self.cfg.d_model as f32,
+            self.cfg.layers as f32,
+            self.cfg.heads as f32,
+            self.cfg.ff_mult as f32,
+        ];
+        // The seed round-trips byte by byte (f32 holds 0..=255 exactly).
+        meta.extend(self.cfg.seed.to_le_bytes().iter().map(|&b| b as f32));
+        ck.sections.insert("meta".into(), meta);
+        ck.sections.insert(
+            "mech".into(),
+            self.mech.label().bytes().map(|b| b as f32).collect(),
+        );
+        for (name, t) in self.params.named() {
+            ck.sections.insert(format!("param.{name}"), t.data().to_vec());
+        }
+        ck
+    }
+
+    /// Rebuild a model from a checkpoint written by
+    /// [`NativeLm::to_checkpoint`]: config + mechanism from the `meta` /
+    /// `mech` sections (the kernels' sketches re-derive from the stored
+    /// seed), then the weights loaded bitwise from the `param.*`
+    /// sections.
+    pub fn from_checkpoint(ck: &Checkpoint) -> anyhow::Result<NativeLm> {
+        let meta = ck.get("meta").ok_or_else(|| anyhow::anyhow!("checkpoint has no meta section"))?;
+        anyhow::ensure!(meta.len() == 6 + 8, "meta section has {} entries, want 14", meta.len());
+        anyhow::ensure!(
+            meta[0] == CKPT_FORMAT,
+            "unsupported checkpoint format {} (want {})",
+            meta[0],
+            CKPT_FORMAT
+        );
+        let mut seed_bytes = [0u8; 8];
+        for (b, &v) in seed_bytes.iter_mut().zip(&meta[6..]) {
+            *b = v as u8;
+        }
+        let cfg = LmConfig {
+            vocab: meta[1] as usize,
+            d_model: meta[2] as usize,
+            layers: meta[3] as usize,
+            heads: meta[4] as usize,
+            ff_mult: meta[5] as usize,
+            seed: u64::from_le_bytes(seed_bytes),
+        };
+        // Validate here so a malformed (but CRC-valid) checkpoint yields
+        // a clean error instead of tripping NativeLm::new's asserts.
+        anyhow::ensure!(
+            cfg.vocab >= 1
+                && cfg.layers >= 1
+                && cfg.heads >= 1
+                && cfg.ff_mult >= 1
+                && cfg.d_model % cfg.heads == 0
+                && (cfg.d_model / cfg.heads) % 2 == 0,
+            "checkpoint meta is degenerate: vocab {} d_model {} layers {} heads {} ff_mult {} \
+             (need d_model divisible into heads with an even head_dim)",
+            cfg.vocab,
+            cfg.d_model,
+            cfg.layers,
+            cfg.heads,
+            cfg.ff_mult
+        );
+        let label: String = ck
+            .get("mech")
+            .ok_or_else(|| anyhow::anyhow!("checkpoint has no mech section"))?
+            .iter()
+            .map(|&v| v as u8 as char)
+            .collect();
+        let mech = Mechanism::parse(&label).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut lm = NativeLm::new(cfg, mech);
+        for (name, t) in lm.params.named_mut() {
+            let key = format!("param.{name}");
+            let data = ck
+                .get(&key)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint missing section {key}"))?;
+            anyhow::ensure!(
+                data.len() == t.len(),
+                "section {key}: {} values, want {}",
+                data.len(),
+                t.len()
+            );
+            t.data_mut().copy_from_slice(data);
+        }
+        Ok(lm)
+    }
+
+    /// Load a model from a checkpoint file; returns the model and the
+    /// training step it was saved at.
+    pub fn load_checkpoint(path: &std::path::Path) -> anyhow::Result<(NativeLm, u64)> {
+        let ck = Checkpoint::load(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let lm = NativeLm::from_checkpoint(&ck)?;
+        Ok((lm, ck.step))
     }
 }
 
 /// Apply RoPE to every head segment of every row of a fused (n, H·hd)
 /// projection, in place.  Row-parallel on the deterministic backend.
-fn rope_heads(t: &mut Tensor, hd: usize) {
+pub(crate) fn rope_heads(t: &mut Tensor, hd: usize) {
     use crate::exec::pool;
     let d = t.cols();
     debug_assert_eq!(d % hd, 0);
@@ -237,7 +481,7 @@ fn rope_heads(t: &mut Tensor, hd: usize) {
 
 /// Add the sinusoidal absolute position embedding for `pos` in place —
 /// the half-split layout of python/compile/model.py::sinusoidal_table.
-fn add_sinusoidal(row: &mut [f32], pos: usize) {
+pub(crate) fn add_sinusoidal(row: &mut [f32], pos: usize) {
     let d = row.len();
     let half = d / 2;
     for j in 0..half {
@@ -249,7 +493,7 @@ fn add_sinusoidal(row: &mut [f32], pos: usize) {
 
 /// Rotary position embedding of one head row (half-split pairing, matching
 /// python/compile/model.py::_rope).
-fn rope_row(x: &mut [f32], pos: usize) {
+pub(crate) fn rope_row(x: &mut [f32], pos: usize) {
     let hd = x.len();
     let half = hd / 2;
     for i in 0..half {
@@ -261,9 +505,18 @@ fn rope_row(x: &mut [f32], pos: usize) {
     }
 }
 
-/// Tanh-approximation GELU (python/compile/common.py's activation).
-fn gelu(x: f32) -> f32 {
-    0.5 * x * (1.0 + ((2.0 / std::f32::consts::PI).sqrt() * (x + 0.044715 * x * x * x)).tanh())
+/// Inverse (transpose) rotation of [`rope_row`] — RoPE is orthogonal, so
+/// the backward pass pulls gradients through with the adjoint rotation.
+pub(crate) fn rope_row_inv(x: &mut [f32], pos: usize) {
+    let hd = x.len();
+    let half = hd / 2;
+    for i in 0..half {
+        let theta = pos as f64 / 10000f64.powf(2.0 * i as f64 / hd as f64);
+        let (c, s) = (theta.cos() as f32, theta.sin() as f32);
+        let (x1, x2) = (x[i], x[half + i]);
+        x[i] = x1 * c + x2 * s;
+        x[half + i] = -x1 * s + x2 * c;
+    }
 }
 
 #[cfg(test)]
@@ -344,5 +597,67 @@ mod tests {
         rope_row(&mut x, 17);
         let n1: f32 = x.iter().map(|v| v * v).sum();
         assert!((n0 - n1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rope_inv_round_trips_bit_close() {
+        let orig: Vec<f32> = (0..8).map(|i| (i as f32 - 3.5) * 0.7).collect();
+        let mut x = orig.clone();
+        rope_row(&mut x, 23);
+        rope_row_inv(&mut x, 23);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn named_params_cover_everything_in_stable_order() {
+        let lm = tiny(Mechanism::Softmax);
+        let names: Vec<String> = lm.params().named().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names[0], "embed");
+        assert_eq!(names[1], "readout");
+        assert_eq!(names[2], "layer0.wq");
+        assert_eq!(names.len(), 2 + 7 * lm.cfg.layers);
+        let total = lm.params().num_params();
+        let d = lm.cfg.d_model;
+        let f = lm.cfg.ff_mult * d;
+        assert_eq!(total, 2 * 64 * d + lm.cfg.layers * (4 * d * d + 3 * d * f));
+    }
+
+    #[test]
+    fn checkpoint_round_trip_is_bitwise() {
+        let dir = std::env::temp_dir().join("psf_model_ckpt_test");
+        let path = dir.join("roundtrip.ckpt");
+        let mech = Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true };
+        let lm = tiny(mech);
+        lm.to_checkpoint(123).save(&path).unwrap();
+        let (back, step) = NativeLm::load_checkpoint(&path).unwrap();
+        assert_eq!(step, 123);
+        assert_eq!(back.cfg, lm.cfg);
+        assert_eq!(back.mech, lm.mech);
+        for ((an, at), (bn, bt)) in lm.params().named().iter().zip(back.params().named()) {
+            assert_eq!(an, &bn);
+            let a_bits: Vec<u32> = at.data().iter().map(|v| v.to_bits()).collect();
+            let b_bits: Vec<u32> = bt.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a_bits, b_bits, "{an}: payload not bitwise identical");
+        }
+        // The restored model serves the same bytes.
+        let tokens: Vec<u32> = (0..13).collect();
+        assert_eq!(lm.forward(&tokens), back.forward(&tokens));
+    }
+
+    #[test]
+    fn mutated_params_change_forward_and_round_trip() {
+        let dir = std::env::temp_dir().join("psf_model_ckpt_test");
+        let path = dir.join("mutated.ckpt");
+        let mut lm = tiny(Mechanism::Flash { block: 8 });
+        let tokens: Vec<u32> = (0..9).collect();
+        let before = lm.forward(&tokens);
+        lm.params_mut().embed.data_mut()[0] += 1.0;
+        let after = lm.forward(&tokens);
+        assert_ne!(before, after, "params_mut must feed the forward path");
+        lm.to_checkpoint(1).save(&path).unwrap();
+        let (back, _) = NativeLm::load_checkpoint(&path).unwrap();
+        assert_eq!(back.forward(&tokens), after);
     }
 }

@@ -10,8 +10,10 @@
 //!     constant-size prompt-state cache (`serve`), the deterministic
 //!     multi-threaded compute backend every native hot path runs on
 //!     (`exec::pool` — bitwise identical results at any thread count),
-//!     and the bench harness that regenerates every table/figure of the
-//!     paper's evaluation.
+//!     the native training subsystem with hand-written backward passes
+//!     through the kernel core (`train` — linear-time backward for the
+//!     sketched mechanisms, `psf train-native`), and the bench harness
+//!     that regenerates every table/figure of the paper's evaluation.
 
 pub mod attn;
 pub mod bench;
@@ -28,6 +30,7 @@ pub mod runtime;
 pub mod serve;
 pub mod tasks;
 pub mod tensor;
+pub mod train;
 pub mod util;
 
 pub use util::rng::Pcg;

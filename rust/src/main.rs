@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   list                       discover artifact bundles
 //!   train                      train a model artifact on a synthetic corpus
+//!   train-native               train the native model (no artifacts, backprop in-crate)
 //!   dp-train                   simulated data-parallel training
 //!   task                       train + evaluate a synthetic task artifact
 //!   eval                       perplexity + downstream MCQ of a trained run
@@ -12,8 +13,9 @@
 //!
 //! Artifact-backed subcommands execute AOT-compiled HLO through the PJRT
 //! CPU client; Python is never invoked (`make artifacts` must have run
-//! once).  `generate` and `serve` run entirely on the native kernels — no
-//! artifacts.
+//! once).  `train-native`, `generate`, and `serve` run entirely on the
+//! native kernels — no artifacts — and share one checkpoint format, so
+//! natively trained weights are directly servable.
 
 use std::path::PathBuf;
 
@@ -52,6 +54,7 @@ fn run(argv: &[String]) -> Result<()> {
         "list" => cmd_list(),
         "run" => cmd_run(rest),
         "train" => cmd_train(rest),
+        "train-native" => cmd_train_native(rest),
         "dp-train" => cmd_dp_train(rest),
         "task" => cmd_task(rest),
         "eval" => cmd_eval(rest),
@@ -72,6 +75,7 @@ fn top_usage() -> String {
        list        discover artifact bundles in ./artifacts\n\
        run         execute a TOML run config (see configs/)\n\
        train       train a model artifact on a synthetic corpus\n\
+       train-native  train the native model in-crate (tasks or byte LM)\n\
        dp-train    simulated data-parallel training (grad allreduce)\n\
        task        train + evaluate a synthetic task (copy | induction)\n\
        eval        perplexity + downstream MCQ accuracy\n\
@@ -254,6 +258,181 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         summary.steps_per_sec(),
         summary.tokens_per_sec(),
     );
+    Ok(())
+}
+
+// ---------------------------------------------------------- train-native
+
+/// Native training: hand-written backprop through the kernel core — no
+/// artifacts, no PJRT.  Trains the synthetic tasks (induction heads,
+/// selective copying) or a byte-level LM corpus, checkpoints `Params` +
+/// optimizer state for exact `--resume`, and produces weights `psf
+/// generate --checkpoint` / `psf serve --checkpoint` load directly.
+fn cmd_train_native(argv: &[String]) -> Result<()> {
+    let spec = Args::new("psf train-native", "train the native model (in-crate backprop)")
+        .opt("task", "induction", "induction | copy | lm")
+        .opt("ctx", "48", "context length (task sequence length)")
+        .opt("mech", "psk4_r8_b16_local",
+             "mechanism label (softmax | flash_b<B> | poly<P> | psk<P>_r<R>_b<B>[_local] | performer<M>_b<B>)")
+        .opt("d-model", "64", "model width")
+        .opt("layers", "2", "transformer layers")
+        .opt("heads", "4", "attention heads")
+        .opt("steps", "300", "training steps")
+        .opt("batch", "16", "sequences per step")
+        .opt("lr", "0.003", "peak learning rate")
+        .opt("warmup", "20", "linear warmup steps")
+        .opt("weight-decay", "0.01", "decoupled AdamW weight decay")
+        .opt("clip", "1.0", "global-norm gradient clip (0 = off)")
+        .opt("eval-every", "50", "held-out eval cadence (0 = end only)")
+        .opt("eval-examples", "64", "examples per eval")
+        .opt("stop-at", "0", "early-stop accuracy in percent (0 = off)")
+        .opt("ckpt", "", "checkpoint path (empty = no checkpointing)")
+        .opt("ckpt-every", "0", "checkpoint cadence in steps (0 = end only)")
+        .switch("resume", "resume params + optimizer from --ckpt if it exists")
+        .opt("corpus", "books", "books | wiki | web (task = lm)")
+        .opt("corpus-bytes", "2000000", "synthetic corpus size in bytes (task = lm)")
+        .opt("log", "", "JSONL metrics path (empty = none)")
+        .opt("threads", "0", "compute threads (0 = PSF_THREADS env, else all cores)")
+        .opt("seed", "0", "weight + data seed");
+    let p = parse(spec, argv)?;
+    apply_threads(&p)?;
+
+    use polysketchformer::train::{OptimConfig, TrainConfig, TrainSource, Trainer};
+
+    let mech = Mechanism::parse(p.str("mech")).map_err(|e| anyhow!("{e}"))?;
+    let ctx = p.usize("ctx")?;
+    let steps = p.u64("steps")?;
+    let seed = p.u64("seed")?;
+
+    // Data source + vocabulary.
+    let (source, vocab) = match p.str("task") {
+        "induction" => {
+            let task = InductionTask::standard(ctx);
+            (TrainSource::Induction(task), task.vocab())
+        }
+        "copy" => {
+            let task = SelectiveCopyTask::standard(ctx);
+            (TrainSource::Copy(task), task.vocab())
+        }
+        "lm" => {
+            let flavor = Flavor::parse(p.str("corpus"))
+                .ok_or_else(|| anyhow!("bad corpus {}", p.str("corpus")))?;
+            // Byte-level tokens (id 0 = BOS, ids 1..=256 = bytes) — the
+            // *same* encoding `psf generate`/`psf serve` use for prompts
+            // (`infer::encode_prompt`), so trained checkpoints decode
+            // real text.  No BPE: that path needs vocab > 257 and would
+            // produce ids the serving tokenizer cannot reproduce.
+            let vocab = 257usize;
+            let gen = data::corpus::CorpusGen::new(flavor, seed);
+            let text = gen.generate(p.usize("corpus-bytes")?, seed ^ 0x9e37);
+            let stream: Vec<u32> = text.bytes().map(|b| b as u32 + 1).collect();
+            let (train_s, test_s) = data::batcher::split_stream(&stream, 0.1);
+            let batch = p.usize("batch")?;
+            let train = Batcher::new(train_s, batch, ctx + 1, seed);
+            // Held-out eval split (skipped when the test split is too
+            // short for even one batch — evals then read a clone of the
+            // training stream).
+            let eval = (test_s.len() / (ctx + 1) >= batch)
+                .then(|| Batcher::new(test_s, batch, ctx + 1, seed ^ 1));
+            (TrainSource::Corpus { train, eval }, vocab)
+        }
+        other => bail!("unknown task `{other}` (want induction | copy | lm)"),
+    };
+
+    // Model: resume from the checkpoint when asked (and present), else
+    // fresh deterministic init.
+    let ckpt_path = non_empty(p.str("ckpt")).map(PathBuf::from);
+    let resume_ck = match (&ckpt_path, p.flag("resume")) {
+        (Some(path), true) if path.exists() => Some(
+            polysketchformer::checkpoint::Checkpoint::load(path)
+                .map_err(|e| anyhow!("{e}"))?,
+        ),
+        (None, true) => bail!("--resume needs --ckpt"),
+        _ => None,
+    };
+    let mut model = match &resume_ck {
+        Some(ck) => {
+            let m = NativeLm::from_checkpoint(ck)?;
+            println!(
+                "resuming from {} (step {}, mech {})",
+                ckpt_path.as_ref().unwrap().display(),
+                ck.step,
+                m.mech.label()
+            );
+            m
+        }
+        None => {
+            let cfg = LmConfig {
+                vocab,
+                d_model: p.usize("d-model")?,
+                layers: p.usize("layers")?,
+                heads: p.usize("heads")?,
+                seed,
+                ..LmConfig::default()
+            };
+            if cfg.heads == 0
+                || cfg.layers == 0
+                || cfg.d_model % cfg.heads != 0
+                || (cfg.d_model / cfg.heads) % 2 != 0
+            {
+                bail!(
+                    "--d-model {} must split into --heads {} (>= 1) with an even head_dim",
+                    cfg.d_model,
+                    cfg.heads
+                );
+            }
+            NativeLm::new(cfg, mech.clone())
+        }
+    };
+    println!(
+        "train-native: {} on mech {} ({} params, d_model {} x {} layers, ctx {ctx})",
+        p.str("task"),
+        model.mech.label(),
+        model.params().num_params(),
+        model.cfg.d_model,
+        model.cfg.layers,
+    );
+
+    let tcfg = TrainConfig {
+        steps,
+        batch: p.usize("batch")?,
+        optim: OptimConfig {
+            lr: p.f64("lr")? as f32,
+            warmup: p.u64("warmup")?,
+            total_steps: steps,
+            weight_decay: p.f64("weight-decay")? as f32,
+            clip: p.f64("clip")? as f32,
+            ..OptimConfig::default()
+        },
+        seed,
+        eval_every: p.u64("eval-every")?,
+        eval_examples: p.usize("eval-examples")?,
+        stop_at_accuracy: p.f64("stop-at")? / 100.0,
+        echo_every: 10,
+        log_path: non_empty(p.str("log")).map(PathBuf::from),
+        ckpt_path: ckpt_path.clone(),
+        ckpt_every: p.u64("ckpt-every")?,
+    };
+    let mut trainer = Trainer::new(&mut model, source, tcfg);
+    if let Some(ck) = &resume_ck {
+        trainer.resume_from(ck)?;
+    }
+    let summary = trainer.run()?;
+    // One stable, machine-parsable closing line (the CI train-smoke job
+    // reads it).
+    println!(
+        "train-native final: steps={} initial_loss={:.4} final_loss={:.4} accuracy={:.4} \
+         tokens={} wall={:.1}s",
+        summary.steps_run,
+        summary.initial_loss,
+        summary.final_loss,
+        summary.final_accuracy,
+        summary.tokens_seen,
+        summary.wall_secs,
+    );
+    if let Some(path) = &ckpt_path {
+        println!("checkpoint: {}", path.display());
+    }
     Ok(())
 }
 
@@ -462,6 +641,9 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     let spec = Args::new("psf generate", "autoregressive decoding on the native model path")
         .opt("mech", "psk4_r16_b32_local",
              "mechanism label (softmax | flash_b<B> | poly<P> | psk<P>_r<R>_b<B>[_local] | performer<M>_b<B>)")
+        .opt("checkpoint", "",
+             "load trained weights from a `psf train-native` checkpoint \
+              (overrides --mech/--d-model/--layers/--heads/--seed)")
         .opt("prompt", "The polynomial kernel ", "prompt text (byte-level tokens)")
         .opt("max-tokens", "64", "tokens to generate per session")
         .opt("sessions", "1", "concurrent sessions (same prompt, forked sampling seeds)")
@@ -480,7 +662,8 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     let p = parse(spec, argv)?;
     apply_threads(&p)?;
 
-    let mech = Mechanism::parse(p.str("mech")).map_err(|e| anyhow!("{e}"))?;
+    let model = load_native_model(&p)?;
+    let mech = model.mech.clone();
     let policy = SamplePolicy::from_flags(
         p.str("policy"),
         p.f64("temperature")? as f32,
@@ -489,8 +672,6 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     )
     .map_err(|e| anyhow!("{e}"))?;
     let seed = p.u64("seed")?;
-    let cfg = native_lm_config(&p)?;
-    let model = NativeLm::new(cfg, mech.clone());
     let sessions = p.usize("sessions")?.max(1);
     println!(
         "generate: mech {} ({}), d_model {} x {} layers, {} session(s)",
@@ -502,6 +683,13 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     );
 
     let prompt = infer::encode_prompt(p.str("prompt"));
+    if prompt.iter().any(|&t| t as usize >= model.cfg.vocab) {
+        bail!(
+            "model vocab {} is too small for byte-level prompts (checkpoints from \
+             `psf train-native --task lm` have vocab 257; task checkpoints do not)",
+            model.cfg.vocab
+        );
+    }
     let sched_cfg = SchedulerConfig {
         max_concurrent: p.usize("concurrent")?,
         tick_tokens: p.usize("tick")?,
@@ -552,6 +740,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("addr", "127.0.0.1:8080", "listen address (port 0 = ephemeral)")
         .opt("mech", "psk4_r16_b32_local",
              "mechanism label (softmax | flash_b<B> | poly<P> | psk<P>_r<R>_b<B>[_local] | performer<M>_b<B>)")
+        .opt("checkpoint", "",
+             "load trained weights from a `psf train-native` checkpoint \
+              (overrides --mech/--d-model/--layers/--heads/--seed)")
         .opt("workers", "2", "decode worker threads")
         .opt("queue-cap", "64", "admission queue depth (429 beyond it)")
         .opt("resident", "8", "max concurrent sessions across workers")
@@ -569,8 +760,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let p = parse(spec, argv)?;
     apply_threads(&p)?;
 
-    let mech = Mechanism::parse(p.str("mech")).map_err(|e| anyhow!("{e}"))?;
-    let model = NativeLm::new(native_lm_config(&p)?, mech);
+    let model = load_native_model(&p)?;
+    if model.cfg.vocab < 257 {
+        bail!(
+            "serve needs byte-level vocab (>= 257); checkpoint has vocab {} — \
+             train with `psf train-native --task lm`",
+            model.cfg.vocab
+        );
+    }
     let gw_cfg = GatewayConfig {
         addr: p.str("addr").to_string(),
         workers: p.usize("workers")?,
@@ -585,6 +782,29 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
     let gateway = std::sync::Arc::new(Gateway::new(model, gw_cfg)?);
     gateway.run_http()
+}
+
+/// Build the native model for `generate`/`serve`: from a `--checkpoint`
+/// file when given (trained weights are servable — config + mechanism
+/// come from the checkpoint's meta sections), otherwise fresh
+/// deterministic weights from the `--mech`/`--d-model`/... flags.
+fn load_native_model(p: &polysketchformer::cli::Parsed) -> Result<NativeLm> {
+    match non_empty(p.str("checkpoint")) {
+        Some(ck) => {
+            let (model, step) = NativeLm::load_checkpoint(std::path::Path::new(ck))?;
+            eprintln!(
+                "loaded checkpoint {ck} (step {step}, mech {}, d_model {} x {} layers)",
+                model.mech.label(),
+                model.cfg.d_model,
+                model.cfg.layers,
+            );
+            Ok(model)
+        }
+        None => {
+            let mech = Mechanism::parse(p.str("mech")).map_err(|e| anyhow!("{e}"))?;
+            Ok(NativeLm::new(native_lm_config(p)?, mech))
+        }
+    }
 }
 
 /// Shared `--d-model/--layers/--heads/--seed` surface of the native-model

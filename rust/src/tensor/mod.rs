@@ -399,6 +399,46 @@ pub fn ln_row(x: &[f32]) -> Vec<f32> {
     x.iter().map(|v| (v - mean) * inv).collect()
 }
 
+/// VJP of [`ln_row`]: given the raw row `x` and the gradient `dy` w.r.t.
+/// the normalized output, return the gradient w.r.t. `x`.
+///
+/// With μ = mean(x), σ² = var(x) + eps, y = (x − μ)/σ the closed form is
+/// `dx = (dy − mean(dy) − y·mean(dy ⊙ y)) / σ` — the parameter-free
+/// specialization of the usual layernorm backward.
+pub fn ln_row_vjp(x: &[f32], dy: &[f32]) -> Vec<f32> {
+    let n = x.len();
+    debug_assert_eq!(dy.len(), n);
+    let mean: f32 = x.iter().sum::<f32>() / n as f32;
+    let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+    let inv = 1.0 / (var + 1e-6).sqrt();
+    let dy_mean: f32 = dy.iter().sum::<f32>() / n as f32;
+    let dyy_mean: f32 = x
+        .iter()
+        .zip(dy)
+        .map(|(&xv, &dv)| dv * (xv - mean) * inv)
+        .sum::<f32>()
+        / n as f32;
+    x.iter()
+        .zip(dy)
+        .map(|(&xv, &dv)| (dv - dy_mean - (xv - mean) * inv * dyy_mean) * inv)
+        .collect()
+}
+
+/// Tanh-approximation GELU (python/compile/common.py's activation).  Lives
+/// here (not in the model) because both the forward model and the training
+/// subsystem's backward need the identical scalar function.
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((2.0 / std::f32::consts::PI).sqrt() * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d gelu(x) / dx for the tanh approximation above.
+pub fn gelu_grad(x: f32) -> f32 {
+    let c = (2.0 / std::f32::consts::PI).sqrt();
+    let u = c * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * c * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
 /// Parameter-free layer normalization over the last axis of a 2-D matrix
 /// (matches python/compile/common.py::layernorm, eps = 1e-6).
 pub fn layernorm_rows(x: &impl RowMat) -> Tensor {
@@ -679,6 +719,40 @@ mod tests {
         for i in 0..6 {
             assert_eq!(&dst.row(i)[8..], src.row(i));
             assert!(dst.row(i)[..8].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn ln_row_vjp_matches_finite_difference() {
+        let mut rng = Pcg::seeded(40);
+        let x: Vec<f32> = rng.gaussians(12);
+        let dy: Vec<f32> = rng.gaussians(12);
+        let an = ln_row_vjp(&x, &dy);
+        let loss = |x: &[f32]| -> f64 {
+            ln_row(x).iter().zip(&dy).map(|(&y, &d)| (y as f64) * (d as f64)).sum()
+        };
+        let eps = 1e-3f32;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps as f64);
+            let a = an[i] as f64;
+            assert!(
+                (fd - a).abs() <= 1e-2 * (1.0 + fd.abs().max(a.abs())),
+                "coord {i}: fd {fd} vs analytic {a}"
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-3.0f32, -1.0, -0.1, 0.0, 0.2, 1.5, 4.0] {
+            let eps = 1e-3f32;
+            let fd = ((gelu(x + eps) - gelu(x - eps)) / (2.0 * eps)) as f64;
+            let an = gelu_grad(x) as f64;
+            assert!((fd - an).abs() < 1e-3 * (1.0 + fd.abs()), "x={x}: {fd} vs {an}");
         }
     }
 

@@ -1,0 +1,315 @@
+//! Hand-written backward pass through the whole [`NativeLm`] stack.
+//!
+//! [`forward_tape`] runs exactly the arithmetic of `NativeLm::forward`
+//! (same ops, same order — the logits are the inference logits) while
+//! caching per-layer activations; [`backward_tape`] walks the tape in
+//! reverse, routing attention gradients through the kernel core's
+//! `CausalKernel::vjp` (the single dispatch stays in `attn::kernel`) and
+//! everything else through the closed-form adjoints in [`super::grad`].
+//!
+//! Batching: examples are independent, so [`compute_grads`] fans them
+//! over the deterministic pool, each into its own `Params`-shaped
+//! accumulator, and reduces **sequentially in example order** — gradient
+//! bytes can never depend on the thread count.  The per-example gradient
+//! rows (`softmax − onehot`) are left unscaled until the batch-wide
+//! masked-position count is known, so normalization is one exact scalar
+//! multiply at the end.
+
+use crate::attn::kernel;
+use crate::exec::pool;
+use crate::infer::model::{add_sinusoidal, rope_heads, rope_row_inv};
+use crate::infer::{NativeLm, Params};
+use crate::tensor::{axpy, gelu, gelu_grad, layernorm_rows, Tensor};
+use crate::train::grad::{
+    add_into, add_matmul_tn, layernorm_rows_vjp, masked_cross_entropy,
+};
+
+/// One training sequence: `tokens` of length ctx+1 (inputs = `[..ctx]`,
+/// targets = `[1..]`) and a per-target loss mask of length ctx.
+#[derive(Clone, Debug)]
+pub struct TrainExample {
+    pub tokens: Vec<u32>,
+    pub mask: Vec<bool>,
+}
+
+impl TrainExample {
+    pub fn inputs(&self) -> &[u32] {
+        &self.tokens[..self.tokens.len() - 1]
+    }
+
+    pub fn targets(&self) -> &[u32] {
+        &self.tokens[1..]
+    }
+}
+
+/// Cached activations of one transformer block.
+struct LayerTape {
+    x_in: Tensor,
+    xn: Tensor,
+    /// Post-RoPE fused projections.
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    /// Concatenated head outputs (pre-W_o).
+    ao: Tensor,
+    x_mid: Tensor,
+    xn2: Tensor,
+    g_pre: Tensor,
+    g: Tensor,
+    u: Tensor,
+}
+
+/// Activation tape of one example's forward pass.
+pub struct Tape {
+    layers: Vec<LayerTape>,
+    x_last: Tensor,
+    xf: Tensor,
+}
+
+/// Forward pass with activation capture: identical math to
+/// `NativeLm::forward` (the returned logits *are* the inference logits).
+pub fn forward_tape(model: &NativeLm, inputs: &[u32]) -> (Tensor, Tape) {
+    let n = inputs.len();
+    assert!(n > 0, "empty token sequence");
+    let d = model.cfg.d_model;
+    let hd = model.head_dim();
+    let params = model.params();
+    let mut x = Tensor::zeros(&[n, d]);
+    for (i, &t) in inputs.iter().enumerate() {
+        let row = x.row_mut(i);
+        row.copy_from_slice(params.embed.row(t as usize));
+        add_sinusoidal(row, i);
+    }
+    let mut layers = Vec::with_capacity(params.layers.len());
+    for (li, layer) in params.layers.iter().enumerate() {
+        let x_in = x;
+        let xn = layernorm_rows(&x_in);
+        let mut q = xn.matmul(&layer.wq);
+        let mut k = xn.matmul(&layer.wk);
+        let v = xn.matmul(&layer.wv);
+        rope_heads(&mut q, hd);
+        rope_heads(&mut k, hd);
+        let mut ao = Tensor::zeros(&[n, d]);
+        kernel::prefill_heads(&model.kernels()[li], &q, &k, &v, None, &mut ao);
+        let x_mid = x_in.add(&ao.matmul(&layer.wo));
+        let xn2 = layernorm_rows(&x_mid);
+        let g_pre = xn2.matmul(&layer.ffn_gate);
+        let g = g_pre.clone().map(gelu);
+        let u = xn2.matmul(&layer.ffn_up);
+        x = x_mid.add(&g.hadamard(&u).matmul(&layer.ffn_down));
+        layers.push(LayerTape { x_in, xn, q, k, v, ao, x_mid, xn2, g_pre, g, u });
+    }
+    let x_last = x;
+    let xf = layernorm_rows(&x_last);
+    let logits = xf.matmul(&params.readout);
+    (logits, Tape { layers, x_last, xf })
+}
+
+/// Reverse pass: accumulate ∂loss/∂θ into `grads` given ∂loss/∂logits.
+pub fn backward_tape(
+    model: &NativeLm,
+    inputs: &[u32],
+    tape: &Tape,
+    d_logits: &Tensor,
+    grads: &mut Params,
+) {
+    let n = inputs.len();
+    let d = model.cfg.d_model;
+    let hd = model.head_dim();
+    let params = model.params();
+
+    // Readout head.
+    add_matmul_tn(&mut grads.readout, &tape.xf, d_logits);
+    let dxf = d_logits.matmul_t(&params.readout);
+    let mut dx = layernorm_rows_vjp(&tape.x_last, &dxf);
+
+    for li in (0..params.layers.len()).rev() {
+        let layer = &params.layers[li];
+        let t = &tape.layers[li];
+        let glayer = &mut grads.layers[li];
+
+        // FFN: x_out = x_mid + (g ⊙ u) W_down.
+        let hprod = t.g.hadamard(&t.u);
+        add_matmul_tn(&mut glayer.ffn_down, &hprod, &dx);
+        let dhprod = dx.matmul_t(&layer.ffn_down);
+        let dg = dhprod.hadamard(&t.u);
+        let du = dhprod.hadamard(&t.g);
+        let mut dg_pre = dg;
+        for (v, &pre) in dg_pre.data_mut().iter_mut().zip(t.g_pre.data()) {
+            *v *= gelu_grad(pre);
+        }
+        add_matmul_tn(&mut glayer.ffn_gate, &t.xn2, &dg_pre);
+        add_matmul_tn(&mut glayer.ffn_up, &t.xn2, &du);
+        let mut dxn2 = dg_pre.matmul_t(&layer.ffn_gate);
+        add_into(&mut dxn2, &du.matmul_t(&layer.ffn_up));
+        let mut dx_mid = dx; // residual branch
+        add_into(&mut dx_mid, &layernorm_rows_vjp(&t.x_mid, &dxn2));
+
+        // Attention: x_mid = x_in + ao W_o.
+        add_matmul_tn(&mut glayer.wo, &t.ao, &dx_mid);
+        let dao = dx_mid.matmul_t(&layer.wo);
+        let mut dq = Tensor::zeros(&[n, d]);
+        let mut dk = Tensor::zeros(&[n, d]);
+        let mut dv = Tensor::zeros(&[n, d]);
+        kernel::vjp_heads(
+            &model.kernels()[li],
+            &t.q,
+            &t.k,
+            &t.v,
+            &dao,
+            &mut dq,
+            &mut dk,
+            &mut dv,
+        );
+        // RoPE is orthogonal: pull gradients back with the inverse
+        // rotation, per head segment, per position.
+        for i in 0..n {
+            for seg in dq.row_mut(i).chunks_mut(hd) {
+                rope_row_inv(seg, i);
+            }
+            for seg in dk.row_mut(i).chunks_mut(hd) {
+                rope_row_inv(seg, i);
+            }
+        }
+        add_matmul_tn(&mut glayer.wq, &t.xn, &dq);
+        add_matmul_tn(&mut glayer.wk, &t.xn, &dk);
+        add_matmul_tn(&mut glayer.wv, &t.xn, &dv);
+        let mut dxn = dq.matmul_t(&layer.wq);
+        add_into(&mut dxn, &dk.matmul_t(&layer.wk));
+        add_into(&mut dxn, &dv.matmul_t(&layer.wv));
+        dx = dx_mid;
+        add_into(&mut dx, &layernorm_rows_vjp(&t.x_in, &dxn));
+    }
+
+    // Embedding scatter (the sinusoidal table is a constant).
+    for (i, &tok) in inputs.iter().enumerate() {
+        axpy(grads.embed.row_mut(tok as usize), dx.row(i), 1.0);
+    }
+}
+
+/// Aggregate loss/accuracy statistics of one batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    /// Mean cross-entropy per counted position.
+    pub loss: f64,
+    /// Counted (masked-in) positions across the batch.
+    pub counted: usize,
+    /// Greedy-correct counted positions.
+    pub correct: usize,
+}
+
+impl BatchStats {
+    pub fn accuracy(&self) -> f64 {
+        if self.counted == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.counted as f64
+        }
+    }
+}
+
+/// One full gradient computation over a batch: per-example forward tape +
+/// backward in parallel (each example owns a private accumulator), then a
+/// sequential in-order reduction and one exact `1/counted` scale.
+pub fn compute_grads(model: &NativeLm, examples: &[TrainExample]) -> (Params, BatchStats) {
+    assert!(!examples.is_empty(), "empty training batch");
+    let mut slots: Vec<Option<(Params, f64, usize, usize)>> = vec![None; examples.len()];
+    pool::par_map_mut(&mut slots, 1, |i, slot| {
+        let ex = &examples[i];
+        let (logits, tape) = forward_tape(model, ex.inputs());
+        let ce = masked_cross_entropy(&logits, ex.targets(), &ex.mask);
+        let mut g = model.params().zeros_like();
+        backward_tape(model, ex.inputs(), &tape, &ce.d_logits, &mut g);
+        *slot = Some((g, ce.loss_sum, ce.counted, ce.correct));
+    });
+    let mut total = model.params().zeros_like();
+    let mut stats = BatchStats::default();
+    let mut loss_sum = 0.0f64;
+    for slot in slots {
+        let (g, loss, counted, correct) = slot.expect("example gradient missing");
+        total.add_scaled(&g, 1.0);
+        loss_sum += loss;
+        stats.counted += counted;
+        stats.correct += correct;
+    }
+    assert!(stats.counted > 0, "batch has no loss-carrying positions");
+    total.scale_in_place(1.0 / stats.counted as f32);
+    stats.loss = loss_sum / stats.counted as f64;
+    (total, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::Mechanism;
+    use crate::infer::LmConfig;
+
+    fn tiny(mech: Mechanism) -> NativeLm {
+        let cfg = LmConfig { vocab: 32, d_model: 16, layers: 2, heads: 2, ff_mult: 2, seed: 5 };
+        NativeLm::new(cfg, mech)
+    }
+
+    fn example(n: usize) -> TrainExample {
+        let tokens: Vec<u32> = (0..=n as u32).map(|i| (i * 7) % 32).collect();
+        TrainExample { tokens, mask: vec![true; n] }
+    }
+
+    #[test]
+    fn forward_tape_logits_match_inference_forward() {
+        // The drift guard for the tape: training must differentiate
+        // exactly the function serving runs, so the taped forward is
+        // pinned **bitwise** against `NativeLm::forward` for every
+        // mechanism, at a ragged (13 vs block 8) and a block-aligned
+        // (16) length.  Any edit to either forward that is not mirrored
+        // in the other fails here.
+        let mechs = [
+            Mechanism::Softmax,
+            Mechanism::Flash { block: 8 },
+            Mechanism::Poly { p: 4 },
+            Mechanism::Polysketch { r: 4, p: 4, block: 8, local: false },
+            Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
+            Mechanism::Performer { m: 16, block: 8 },
+        ];
+        for mech in mechs {
+            for n in [13usize, 16] {
+                let lm = tiny(mech.clone());
+                let ex = example(n);
+                let (logits, _) = forward_tape(&lm, ex.inputs());
+                assert_eq!(logits, lm.forward(ex.inputs()), "{} n={n}", mech.label());
+            }
+        }
+    }
+
+    #[test]
+    fn compute_grads_shapes_and_finiteness() {
+        let lm = tiny(Mechanism::Performer { m: 8, block: 8 });
+        let (g, stats) = compute_grads(&lm, &[example(13), example(9)]);
+        assert!(stats.loss.is_finite() && stats.loss > 0.0);
+        assert_eq!(stats.counted, 22);
+        for (name, t) in g.named() {
+            assert!(t.data().iter().all(|v| v.is_finite()), "{name} has non-finite grads");
+        }
+        // Something actually flowed everywhere.
+        assert!(g.l2_norm_sq() > 0.0);
+    }
+
+    #[test]
+    fn masked_positions_do_not_leak_gradient() {
+        // With every mask bit off except position 0, only tokens at
+        // positions <= 1 can receive embedding gradient (causality).
+        let lm = tiny(Mechanism::Softmax);
+        let mut ex = example(8);
+        ex.mask = vec![false; 8];
+        ex.mask[0] = true;
+        let (g, _) = compute_grads(&lm, &[ex.clone()]);
+        let touched: Vec<u32> = (0..32u32)
+            .filter(|&t| g.embed.row(t as usize).iter().any(|&v| v != 0.0))
+            .collect();
+        for t in &touched {
+            assert!(
+                ex.tokens[..2].contains(t),
+                "token {t} got gradient but only positions 0..2 are live"
+            );
+        }
+    }
+}

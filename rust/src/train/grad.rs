@@ -1,0 +1,159 @@
+//! Gradient building blocks for the native trainer: the tensor-level
+//! VJPs (matmul adjoints, row layernorm backward) and the masked
+//! cross-entropy LM loss.
+//!
+//! Everything here is deterministic by construction: the matmul adjoints
+//! reuse the pooled-but-bitwise-stable `tensor` primitives, and the
+//! row-wise ops run the identical sequential inner loop per row.  Loss
+//! sums accumulate in f64 so the finite-difference gradient checks are
+//! not dominated by f32 summation noise.
+
+use crate::tensor::{ln_row_vjp, softmax_rows, Tensor};
+
+/// C = Aᵀ·B for A (n, a), B (n, b) → (a, b): the weight-gradient adjoint
+/// of `x.matmul(w)` (dW = xᵀ·dy).
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    a.transpose2().matmul(b)
+}
+
+/// acc += Aᵀ·B — weight-gradient accumulation into a Params tensor.
+pub fn add_matmul_tn(acc: &mut Tensor, a: &Tensor, b: &Tensor) {
+    let g = matmul_tn(a, b);
+    assert_eq!(acc.shape(), g.shape());
+    for (x, y) in acc.data_mut().iter_mut().zip(g.data()) {
+        *x += y;
+    }
+}
+
+/// Row-wise backward of `layernorm_rows`: `x` is the raw input, `dy` the
+/// gradient w.r.t. the normalized output.
+pub fn layernorm_rows_vjp(x: &Tensor, dy: &Tensor) -> Tensor {
+    assert_eq!(x.shape(), dy.shape());
+    let (n, d) = (x.rows(), x.cols());
+    let mut out = Tensor::zeros(&[n, d]);
+    for i in 0..n {
+        out.row_mut(i).copy_from_slice(&ln_row_vjp(x.row(i), dy.row(i)));
+    }
+    out
+}
+
+/// a += b elementwise (same shape).
+pub fn add_into(a: &mut Tensor, b: &Tensor) {
+    assert_eq!(a.shape(), b.shape());
+    for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x += y;
+    }
+}
+
+/// Masked cross-entropy statistics of one example.
+pub struct CeStats {
+    /// Σ −ln p(target) over counted positions, in f64.
+    pub loss_sum: f64,
+    /// Number of positions that carried loss (mask true).
+    pub counted: usize,
+    /// Counted positions where the greedy argmax equals the target.
+    pub correct: usize,
+    /// ∂(Σ loss)/∂logits: `softmax − onehot` at counted rows, zero
+    /// elsewhere.  *Unscaled* — the batch driver divides the reduced
+    /// gradient by the batch-wide counted total, keeping the reduction
+    /// order (and therefore the bytes) independent of the thread count.
+    pub d_logits: Tensor,
+}
+
+/// Masked next-token cross-entropy: `logits` is (n, vocab) for inputs
+/// `tokens[..n]`, `targets` is `tokens[1..]` (length n), and `mask[i]`
+/// says whether target position i carries loss (answer positions for the
+/// synthetic tasks, non-pad targets for LM corpora).
+pub fn masked_cross_entropy(logits: &Tensor, targets: &[u32], mask: &[bool]) -> CeStats {
+    let (n, vocab) = (logits.rows(), logits.cols());
+    assert_eq!(targets.len(), n);
+    assert_eq!(mask.len(), n);
+    let probs = softmax_rows(logits);
+    let mut d_logits = Tensor::zeros(&[n, vocab]);
+    let mut loss_sum = 0.0f64;
+    let mut counted = 0usize;
+    let mut correct = 0usize;
+    for i in 0..n {
+        if !mask[i] {
+            continue;
+        }
+        let t = targets[i] as usize;
+        assert!(t < vocab, "target {t} out of vocab {vocab}");
+        let p = probs.row(i);
+        loss_sum += -((p[t] as f64).max(1e-30).ln());
+        counted += 1;
+        let mut best = 0usize;
+        for (j, &v) in p.iter().enumerate() {
+            if v > p[best] {
+                best = j;
+            }
+        }
+        if best == t {
+            correct += 1;
+        }
+        let drow = d_logits.row_mut(i);
+        drow.copy_from_slice(p);
+        drow[t] -= 1.0;
+    }
+    CeStats { loss_sum, counted, correct, d_logits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let mut rng = Pcg::seeded(1);
+        let a = Tensor::gaussian(&mut rng, &[7, 3]);
+        let b = Tensor::gaussian(&mut rng, &[7, 5]);
+        let got = matmul_tn(&a, &b);
+        assert_eq!(got.shape(), &[3, 5]);
+        for i in 0..3 {
+            for j in 0..5 {
+                let want: f32 = (0..7).map(|r| a.at2(r, i) * b.at2(r, j)).sum();
+                assert!((got.at2(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_ce_grad_matches_finite_difference() {
+        let mut rng = Pcg::seeded(2);
+        let logits = Tensor::gaussian(&mut rng, &[4, 6]);
+        let targets = [1u32, 5, 0, 3];
+        let mask = [true, false, true, true];
+        let st = masked_cross_entropy(&logits, &targets, &mask);
+        assert_eq!(st.counted, 3);
+        // Masked rows carry no gradient.
+        assert!(st.d_logits.row(1).iter().all(|&v| v == 0.0));
+        let eps = 1e-3f32;
+        for i in 0..4 {
+            for j in 0..6 {
+                let mut lp = logits.clone();
+                lp.set2(i, j, lp.at2(i, j) + eps);
+                let mut lm = logits.clone();
+                lm.set2(i, j, lm.at2(i, j) - eps);
+                let fp = masked_cross_entropy(&lp, &targets, &mask).loss_sum;
+                let fm = masked_cross_entropy(&lm, &targets, &mask).loss_sum;
+                let fd = (fp - fm) / (2.0 * eps as f64);
+                let an = st.d_logits.at2(i, j) as f64;
+                assert!(
+                    (fd - an).abs() <= 1e-2 * (1.0 + fd.abs().max(an.abs())),
+                    "({i},{j}): fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_ce_counts_greedy_correct() {
+        // Put all the mass on the target for row 0 and off-target for row 1.
+        let logits = Tensor::from_vec(&[2, 3], vec![0.0, 9.0, 0.0, 9.0, 0.0, 0.0]);
+        let st = masked_cross_entropy(&logits, &[1, 2], &[true, true]);
+        assert_eq!(st.counted, 2);
+        assert_eq!(st.correct, 1);
+        assert!(st.loss_sum.is_finite());
+    }
+}

@@ -19,9 +19,10 @@
 use polysketchformer::attn::Mechanism;
 use polysketchformer::exec::pool;
 use polysketchformer::infer::{
-    DecodeSession, GenRequest, LmConfig, NativeLm, SamplePolicy,
+    DecodeSession, GenRequest, LmConfig, NativeLm, Params, SamplePolicy,
 };
 use polysketchformer::serve::{collect_stream, Gateway, GatewayConfig};
+use polysketchformer::train::{compute_grads, AdamW, OptimConfig, TrainExample};
 
 fn mechanisms() -> Vec<Mechanism> {
     vec![
@@ -113,6 +114,68 @@ fn served_request_matches_single_threaded_oracle() {
         });
         assert_eq!(served, oracle, "{}: served stream != 1-thread oracle", mech.label());
     }
+}
+
+fn train_batch() -> Vec<TrainExample> {
+    // Two ragged-length examples so the per-example fan-out has real work.
+    [21usize, 13]
+        .iter()
+        .map(|&n| TrainExample {
+            tokens: prompt(n + 1),
+            mask: (0..n).map(|i| i % 3 != 0).collect(),
+        })
+        .collect()
+}
+
+/// One gradient computation + two AdamW steps; returns (grad bits of the
+/// first step, post-update weight bits) for byte comparison.
+fn train_step_bits(mech: Mechanism) -> (Vec<u32>, Vec<u32>) {
+    let mut model = lm(mech);
+    let mut opt = AdamW::new(
+        OptimConfig { total_steps: 4, warmup: 1, ..OptimConfig::default() },
+        model.params(),
+    );
+    let batch = train_batch();
+    let (grads, _) = compute_grads(&model, &batch);
+    let grad_bits = param_bits(&grads);
+    opt.step(model.params_mut(), &grads);
+    let (grads2, _) = compute_grads(&model, &batch);
+    opt.step(model.params_mut(), &grads2);
+    (grad_bits, param_bits(model.params()))
+}
+
+fn param_bits(p: &Params) -> Vec<u32> {
+    p.named()
+        .iter()
+        .flat_map(|(_, t)| t.data().iter().map(|v| v.to_bits()))
+        .collect()
+}
+
+#[test]
+fn train_step_bitwise_identical_serial_vs_parallel() {
+    // The PR 3 guarantee, extended to training: per-example gradients fan
+    // out over the pool but reduce sequentially in example order, and the
+    // optimizer is sequential scalar math — so gradient bytes and
+    // post-AdamW weight bytes cannot depend on the thread count.
+    for mech in mechanisms() {
+        let pooled = train_step_bits(mech.clone());
+        let inline = pool::serial(|| train_step_bits(mech.clone()));
+        assert_eq!(pooled.0, inline.0, "{}: gradient bytes moved", mech.label());
+        assert_eq!(pooled.1, inline.1, "{}: post-AdamW weights moved", mech.label());
+    }
+}
+
+#[test]
+fn train_step_invariant_across_pool_resizes() {
+    let mech = Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true };
+    let baseline = train_step_bits(mech.clone());
+    for t in [1usize, 2, 8] {
+        pool::set_threads(t);
+        let got = train_step_bits(mech.clone());
+        assert_eq!(got.0, baseline.0, "threads={t}: gradient bytes moved");
+        assert_eq!(got.1, baseline.1, "threads={t}: post-AdamW weights moved");
+    }
+    pool::set_threads(pool::default_threads());
 }
 
 #[test]
