@@ -14,7 +14,9 @@
 //! Results print as a table, persist as CSV, and land in
 //! `bench_out/serve_load.json` for the cross-PR perf trajectory.
 
+use std::collections::HashMap;
 use std::fmt::Write as _;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use polysketchformer::attn::Mechanism;
@@ -22,6 +24,9 @@ use polysketchformer::bench::{banner, out_dir, Mode, Table};
 use polysketchformer::infer::{GenRequest, LmConfig, NativeLm, SamplePolicy};
 use polysketchformer::metrics::Record;
 use polysketchformer::serve::{collect_stream, Gateway, GatewayConfig, RequestStats};
+use polysketchformer::shard::{
+    collect_shard_stream, ShardConfig, ShardGateway, Supervisor, SupervisorConfig,
+};
 use polysketchformer::util::rng::Pcg;
 use polysketchformer::util::stats::percentile;
 
@@ -180,6 +185,139 @@ fn main() -> anyhow::Result<()> {
     print!("{}", table.render());
     println!("csv: {}", table.save_csv("serve_load")?.display());
 
+    // ---- runner sweep: multi-process sharded serving scaling ----------
+    //
+    // Same closed-loop clients, but the gateway routes over Unix-socket
+    // IPC to `psf runner` worker processes (one exec-pool thread each, so
+    // runner count — not thread count — is the compute knob).  The payoff
+    // is data-parallel throughput scaling: 2 runners must beat 1 by at
+    // least 1.5x.  Enforced when PSF_SERVE_SCALE_CHECK=1 (the CI bench
+    // smoke sets it), advisory otherwise so loaded laptops don't fail.
+    let sweep_clients: Vec<usize> = match mode {
+        Mode::Smoke => vec![2],
+        Mode::Quick | Mode::Full => vec![2, 8],
+    };
+    let sweep_reqs = mode.pick(3, 6, 10);
+    let sweep_label = "psk4_r16_b32_local";
+    let sweep_mech = Mechanism::parse(sweep_label).expect("bench mechanism labels must parse");
+    let mut sweep_table = Table::new(
+        &format!("runner sweep (sharded serving, {max_new} new/req, {sweep_reqs} req/client)"),
+        "runners · clients",
+        vec!["tok/s".into(), "requests".into(), "failed".into()],
+    );
+    let mut sweep_records: Vec<Record> = Vec::new();
+    let mut tput: HashMap<(usize, usize), f64> = HashMap::new();
+
+    for &runners in &[1usize, 2] {
+        for &clients in &sweep_clients {
+            let sup = Supervisor::start(SupervisorConfig {
+                runners,
+                runner_exe: PathBuf::from(env!("CARGO_BIN_EXE_psf")),
+                model_args: vec![
+                    "--mech".into(),
+                    sweep_label.into(),
+                    "--d-model".into(),
+                    "64".into(),
+                    "--layers".into(),
+                    "2".into(),
+                    "--heads".into(),
+                    "2".into(),
+                    "--seed".into(),
+                    "0".into(),
+                ],
+                runner_workers: 2,
+                threads_per_runner: 1,
+                ..SupervisorConfig::default()
+            })?;
+            let gw = Arc::new(ShardGateway::new(sup, sweep_mech.clone(), ShardConfig::default())?);
+
+            let t0 = std::time::Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|ci| {
+                    let gw = Arc::clone(&gw);
+                    std::thread::spawn(move || {
+                        let (mut tokens, mut failed) = (0usize, 0usize);
+                        for j in 0..sweep_reqs {
+                            // Distinct prompts: spread the hash ring, so
+                            // every runner's cache slice stays in play.
+                            let req = GenRequest {
+                                prompt: prompt(7_000 + (ci * 1_000 + j) as u64, 32),
+                                max_new_tokens: max_new,
+                                policy: SamplePolicy::Greedy,
+                                seed: (ci * 31 + j) as u64,
+                            };
+                            match gw.submit(req) {
+                                Ok(rx) => {
+                                    let reply = collect_shard_stream(rx);
+                                    tokens += reply.tokens.len();
+                                    if reply.done.is_none() {
+                                        failed += 1;
+                                    }
+                                }
+                                Err(_) => failed += 1,
+                            }
+                        }
+                        (tokens, failed)
+                    })
+                })
+                .collect();
+            let (mut total_tokens, mut total_failed) = (0usize, 0usize);
+            for h in handles {
+                let (t, f) = h.join().expect("sweep client panicked");
+                total_tokens += t;
+                total_failed += f;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            gw.finish()?;
+
+            anyhow::ensure!(
+                total_failed == 0,
+                "runner sweep had {total_failed} failed requests ({runners} runners, {clients} clients)"
+            );
+            let tok_s = if wall > 0.0 { total_tokens as f64 / wall } else { 0.0 };
+            tput.insert((runners, clients), tok_s);
+            sweep_table.row(
+                &format!("{runners} · c{clients}"),
+                vec![
+                    format!("{tok_s:.1}"),
+                    format!("{}", clients * sweep_reqs),
+                    format!("{total_failed}"),
+                ],
+            );
+            sweep_records.push(
+                Record::new()
+                    .str("mech", sweep_label)
+                    .i64("runners", runners as i64)
+                    .i64("clients", clients as i64)
+                    .i64("requests", (clients * sweep_reqs) as i64)
+                    .i64("failed", total_failed as i64)
+                    .f64("tokens_per_sec", tok_s)
+                    .f64("wall_secs", wall),
+            );
+        }
+    }
+
+    print!("{}", sweep_table.render());
+    let enforce = std::env::var("PSF_SERVE_SCALE_CHECK").ok().as_deref() == Some("1");
+    for &clients in &sweep_clients {
+        let t1 = tput[&(1, clients)];
+        let t2 = tput[&(2, clients)];
+        let speedup = if t1 > 0.0 { t2 / t1 } else { 0.0 };
+        println!(
+            "runner scaling @ c{clients}: 1 runner {t1:.1} tok/s -> 2 runners {t2:.1} tok/s \
+             ({speedup:.2}x)"
+        );
+        if enforce {
+            anyhow::ensure!(
+                speedup >= 1.5,
+                "2-runner throughput {t2:.1} tok/s < 1.5x 1-runner {t1:.1} tok/s at \
+                 concurrency {clients}"
+            );
+        } else if speedup < 1.5 {
+            println!("  advisory: below the 1.5x target (PSF_SERVE_SCALE_CHECK=1 enforces)");
+        }
+    }
+
     // JSON artifact, assembled with the same hand-rolled encoder the
     // metrics substrate uses (no serde in this environment).
     let mut json = String::from("{\n  \"bench\": \"serve_load\",\n");
@@ -193,6 +331,11 @@ fn main() -> anyhow::Result<()> {
     for (i, r) in records.iter().enumerate() {
         let _ = write!(json, "    {}", r.to_json());
         json.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ],\n  \"runner_sweep\": [\n");
+    for (i, r) in sweep_records.iter().enumerate() {
+        let _ = write!(json, "    {}", r.to_json());
+        json.push_str(if i + 1 < sweep_records.len() { ",\n" } else { "\n" });
     }
     json.push_str("  ]\n}\n");
     let dir = out_dir();

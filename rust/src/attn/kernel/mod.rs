@@ -287,6 +287,57 @@ pub fn prefill_heads(
     });
 }
 
+/// Head-range variant of [`prefill_heads`] for tensor-parallel shards:
+/// runs only heads `range.start..range.end`, leaving the other output
+/// stripes untouched (callers pass a zeroed `out`, so the product
+/// `out · wo` is this shard's *partial* attention output).  The views
+/// are still built over the full head count — a head's stripe offset is
+/// its index in the whole layer, not its index within the shard.
+pub fn prefill_head_range(
+    kernels: &[Arc<dyn CausalKernel>],
+    range: std::ops::Range<usize>,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    states: Option<&mut [KernelState]>,
+    out: &mut Tensor,
+) {
+    let heads = kernels.len();
+    assert!(heads > 0, "prefill_head_range: no heads");
+    assert!(
+        range.start < range.end && range.end <= heads,
+        "prefill_head_range: bad head range {}..{} of {heads}",
+        range.start,
+        range.end,
+    );
+    let qv = q.head_views(heads);
+    let kv = k.head_views(heads);
+    let vv = v.head_views(heads);
+    let ov = out.head_views_mut(heads);
+    // Tag each unit with its head index: after filtering, position in
+    // the vec no longer equals the head index.
+    let mut units: Vec<(usize, TensorViewMut<'_>, Option<&mut KernelState>)> = match states {
+        Some(s) => {
+            assert_eq!(s.len(), heads, "prefill_head_range: state/head count mismatch");
+            ov.into_iter()
+                .zip(s.iter_mut().map(Some))
+                .enumerate()
+                .filter(|(hi, _)| range.contains(hi))
+                .map(|(hi, (o, st))| (hi, o, st))
+                .collect()
+        }
+        None => ov
+            .into_iter()
+            .enumerate()
+            .filter(|(hi, _)| range.contains(hi))
+            .map(|(hi, o)| (hi, o, None))
+            .collect(),
+    };
+    pool::par_map_mut(&mut units, 1, |_, (hi, o, st)| {
+        kernels[*hi].prefill_into(&qv[*hi], &kv[*hi], &vv[*hi], st.as_deref_mut(), o);
+    });
+}
+
 /// Backward twin of [`prefill_heads`]: head `h` reads the column stripes
 /// of `q`/`k`/`v`/`d_out` and accumulates its raw-input gradients into
 /// the same stripes of `dq`/`dk`/`dv` (which must be zeroed by the
@@ -435,5 +486,29 @@ mod tests {
                 assert_eq!(got, want, "{} head {hi}", mech.label());
             }
         }
+    }
+
+    #[test]
+    fn head_range_shards_reassemble_to_full_prefill() {
+        // Two disjoint ranges, each into its own zeroed output, must sum
+        // (= disjoint-stripe assemble) to exactly the full fan-out —
+        // bitwise, since every head computes identical bytes either way.
+        let mut rng = Pcg::seeded(11);
+        let (n, heads, hd) = (16usize, 4usize, 8usize);
+        let d = heads * hd;
+        let q = Tensor::gaussian(&mut rng, &[n, d]);
+        let k = Tensor::gaussian(&mut rng, &[n, d]);
+        let v = Tensor::gaussian(&mut rng, &[n, d]);
+        let mech = Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true };
+        let mut krng = Pcg::seeded(5);
+        let kernels: Vec<_> = (0..heads).map(|_| mech.build_kernel(hd, &mut krng)).collect();
+        let mut full = Tensor::zeros(&[n, d]);
+        prefill_heads(&kernels, &q, &k, &v, None, &mut full);
+        let mut lo = Tensor::zeros(&[n, d]);
+        let mut hi = Tensor::zeros(&[n, d]);
+        prefill_head_range(&kernels, 0..1, &q, &k, &v, None, &mut lo);
+        prefill_head_range(&kernels, 1..heads, &q, &k, &v, None, &mut hi);
+        let sum = lo.add(&hi);
+        assert_eq!(sum, full);
     }
 }

@@ -1,24 +1,33 @@
 //! Simulated synchronous data-parallel training (the paper's 32-TPU
-//! protocol) + microbatch gradient accumulation.
+//! protocol) + microbatch gradient accumulation, over the **native**
+//! training subsystem (`train/` — hand-written backward passes through
+//! the kernel core).
 //!
-//! Real multi-host collectives are not available on a single CPU PJRT
-//! client, so the coordinator *simulates the topology while keeping the
-//! math exact*: synchronous data-parallel SGD keeps every replica's
-//! parameters identical, so one device-resident state plus W independent
-//! gradient computations — averaged with an on-device allreduce tree and
-//! applied once — produces bit-for-bit the update a W-worker cluster
-//! performs.  Each worker owns a disjoint shard of the batch stream.
+//! Real multi-host collectives are not available here, so the
+//! coordinator *simulates the topology while keeping the math exact*:
+//! synchronous data-parallel SGD keeps every replica's parameters
+//! identical, so one resident model plus W independent gradient
+//! computations — combined with an allreduce tree and applied once —
+//! produces bit-for-bit the update a W-worker cluster performs.  Each
+//! worker owns a disjoint contiguous shard of the token stream.
 //!
-//! The same grads/gradstep factoring gives microbatch gradient
-//! accumulation: A microbatches are summed before a single optimizer step,
-//! enabling "1M-token batch" protocols that exceed device memory.
+//! The same grads/step factoring gives microbatch gradient
+//! accumulation: A microbatches are summed per worker before the sync
+//! point, enabling "1M-token batch" protocols that exceed memory.
+//!
+//! Determinism: the tree combines workers in a fixed pairwise-halving
+//! order and every per-worker sum is sequential, so a (stream, seed,
+//! W, A) tuple yields one exact parameter trajectory — and with
+//! W = A = 1 the whole apparatus collapses to `compute_grads` +
+//! `AdamW::step`, bitwise (the tests pin both properties).
 
 use anyhow::Result;
-use xla::PjRtBuffer;
 
 use crate::data::batcher::Batcher;
+use crate::infer::{NativeLm, Params};
 use crate::metrics::{Record, RunLogger};
-use crate::runtime::{ops, ModelRuntime, StepStats};
+use crate::train::backprop::{compute_grads, TrainExample};
+use crate::train::optim::{AdamW, OptimConfig, StepInfo};
 
 /// Shard a token stream into `workers` disjoint contiguous shards.
 pub fn shard_stream(stream: &[u32], workers: usize) -> Vec<&[u32]> {
@@ -27,38 +36,74 @@ pub fn shard_stream(stream: &[u32], workers: usize) -> Vec<&[u32]> {
     (0..workers).map(|w| &stream[w * per..(w + 1) * per]).collect()
 }
 
-/// Synchronous data-parallel coordinator.
+/// Sum gradient vectors with a pairwise-halving tree — the association
+/// order a bandwidth-optimal allreduce uses, fixed here so the f32 sum
+/// is one deterministic function of the inputs (never claim order).
+pub fn allreduce_tree(mut parts: Vec<Params>) -> Params {
+    assert!(!parts.is_empty(), "allreduce over zero workers");
+    while parts.len() > 1 {
+        let half = parts.len().div_ceil(2);
+        let tail = parts.split_off(half);
+        for (i, t) in tail.into_iter().enumerate() {
+            parts[i].add_scaled(&t, 1.0);
+        }
+    }
+    parts.pop().expect("tree root")
+}
+
+/// Post-step statistics of one global data-parallel step.
+#[derive(Clone, Copy, Debug)]
+pub struct DpStepStats {
+    /// Optimizer step count *after* this update.
+    pub step: u64,
+    /// Mean microbatch loss across the (W · A) gradient computations.
+    pub loss: f64,
+    pub lr: f32,
+    pub grad_norm: f64,
+}
+
+/// Synchronous data-parallel coordinator over a native model.
 pub struct DataParallel<'a> {
-    pub model: &'a mut ModelRuntime,
+    pub model: &'a mut NativeLm,
     /// One batch source per simulated worker (disjoint shards).
     pub workers: Vec<Batcher>,
     /// Microbatches accumulated per worker before the sync point.
     pub accum: usize,
+    opt: AdamW,
 }
 
 impl<'a> DataParallel<'a> {
-    pub fn new(model: &'a mut ModelRuntime, workers: Vec<Batcher>, accum: usize) -> Self {
+    pub fn new(
+        model: &'a mut NativeLm,
+        workers: Vec<Batcher>,
+        accum: usize,
+        optim: OptimConfig,
+    ) -> Self {
         assert!(!workers.is_empty());
         assert!(accum >= 1);
-        DataParallel { model, workers, accum }
+        let opt = AdamW::new(optim, model.params());
+        DataParallel { model, workers, accum, opt }
     }
 
     /// Build from a single stream, sharding it across `workers` workers.
+    /// `seq` is ctx + 1 (each row carries its shifted target).
+    #[allow(clippy::too_many_arguments)]
     pub fn from_stream(
-        model: &'a mut ModelRuntime,
+        model: &'a mut NativeLm,
         stream: &[u32],
         workers: usize,
+        batch: usize,
+        seq: usize,
         accum: usize,
         seed: u64,
+        optim: OptimConfig,
     ) -> Self {
-        let batch = model.batch();
-        let seq = model.ctx() + 1;
         let batchers = shard_stream(stream, workers)
             .into_iter()
             .enumerate()
             .map(|(w, shard)| Batcher::new(shard, batch, seq, seed ^ (w as u64) << 32))
             .collect();
-        Self::new(model, batchers, accum)
+        Self::new(model, batchers, accum, optim)
     }
 
     /// Number of simulated workers.
@@ -68,31 +113,50 @@ impl<'a> DataParallel<'a> {
 
     /// Tokens consumed per global step.
     pub fn tokens_per_step(&self) -> u64 {
-        (self.model.batch() * (self.model.ctx() + 1) * self.workers.len() * self.accum) as u64
+        self.workers
+            .iter()
+            .map(|b| (b.batch_size() * b.seq_len()) as u64)
+            .sum::<u64>()
+            * self.accum as u64
     }
 
-    /// One global step: every worker computes `accum` microbatch gradients,
-    /// the (W * A) gradient vectors are averaged on-device, and a single
-    /// optimizer update is applied.  Returns post-update stats whose loss
-    /// is the mean microbatch loss (the grad vector's fused loss slot is
-    /// averaged alongside the gradients).
-    pub fn step(&mut self) -> Result<StepStats> {
-        let n = self.model.grad_dim();
-        let mut acc: Option<PjRtBuffer> = None;
-        let mut count = 0usize;
-        for w in 0..self.workers.len() {
-            for _ in 0..self.accum {
-                let batch = self.workers[w].next_batch();
-                let g = self.model.grad_loss(&batch.tokens)?;
+    /// One global step: every worker computes `accum` microbatch
+    /// gradients (each already mean-normalized by its counted
+    /// positions, exactly as single-worker training does), the W
+    /// per-worker sums are allreduced, the result is scaled to the
+    /// mean over all (W · A) microbatches, and a single optimizer
+    /// update is applied.
+    pub fn step(&mut self) -> Result<DpStepStats> {
+        let micro = self.workers.len() * self.accum;
+        let accum = self.accum;
+        let model = &*self.model;
+        let mut parts: Vec<Params> = Vec::with_capacity(self.workers.len());
+        let mut loss_sum = 0.0f64;
+        for worker in self.workers.iter_mut() {
+            let mut acc: Option<Params> = None;
+            for _ in 0..accum {
+                let examples = next_examples(worker);
+                let (g, stats) = compute_grads(model, &examples);
+                loss_sum += stats.loss;
                 acc = Some(match acc {
                     None => g,
-                    Some(a) => ops::add(&a, &g, n)?,
+                    Some(mut a) => {
+                        a.add_scaled(&g, 1.0);
+                        a
+                    }
                 });
-                count += 1;
             }
+            parts.push(acc.expect("accum >= 1"));
         }
-        let avg = ops::scale(&acc.expect("at least one worker"), 1.0 / count as f32, n)?;
-        self.model.apply_gradvec(&avg)
+        let mut avg = allreduce_tree(parts);
+        avg.scale_in_place(1.0 / micro as f32);
+        let info: StepInfo = self.opt.step(self.model.params_mut(), &avg);
+        Ok(DpStepStats {
+            step: self.opt.step_count(),
+            loss: loss_sum / micro as f64,
+            lr: info.lr,
+            grad_norm: info.grad_norm,
+        })
     }
 
     /// Run `steps` global steps with logging; returns (final stats, curve).
@@ -100,25 +164,44 @@ impl<'a> DataParallel<'a> {
         &mut self,
         steps: u64,
         logger: &mut RunLogger,
-    ) -> Result<(StepStats, Vec<(u64, f32)>)> {
+    ) -> Result<(DpStepStats, Vec<(u64, f64)>)> {
         let mut curve = Vec::with_capacity(steps as usize);
-        let mut last = StepStats { step: 0, loss: f32::NAN };
+        let mut last = DpStepStats { step: 0, loss: f64::NAN, lr: 0.0, grad_norm: 0.0 };
         for _ in 0..steps {
             last = self.step()?;
             curve.push((last.step, last.loss));
             logger.log_step(
                 last.step,
-                last.loss as f64,
-                Record::new().i64("workers", self.workers.len() as i64),
+                last.loss,
+                Record::new()
+                    .i64("workers", self.workers.len() as i64)
+                    .i64("accum", self.accum as i64)
+                    .f64("grad_norm", last.grad_norm),
             )?;
         }
         Ok((last, curve))
     }
 }
 
+/// One worker's next microbatch as training examples (byte-level LM
+/// convention shared with `train::loop`: token 0 is padding, so only
+/// non-pad targets carry loss).
+fn next_examples(b: &mut Batcher) -> Vec<TrainExample> {
+    let bt = b.next_batch();
+    (0..bt.batch)
+        .map(|r| {
+            let tokens: Vec<u32> = bt.row(r).iter().map(|&t| t as u32).collect();
+            let mask = tokens[1..].iter().map(|&t| t != 0).collect();
+            TrainExample { tokens, mask }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attn::Mechanism;
+    use crate::infer::LmConfig;
 
     #[test]
     fn shards_are_disjoint_and_cover_prefix() {
@@ -135,5 +218,88 @@ mod tests {
     #[should_panic]
     fn zero_workers_panics() {
         shard_stream(&[1, 2, 3], 0);
+    }
+
+    fn tiny_model(seed: u64) -> NativeLm {
+        let cfg = LmConfig { vocab: 32, d_model: 16, layers: 1, heads: 2, ff_mult: 2, seed };
+        NativeLm::new(cfg, Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true })
+    }
+
+    fn stream(len: usize) -> Vec<u32> {
+        // Byte-level-style tokens, no zeros (zero = pad = no loss).
+        (0..len as u32).map(|i| 1 + (i * 7) % 31).collect()
+    }
+
+    #[test]
+    fn tree_of_identical_parts_is_exact_multiple() {
+        let model = tiny_model(11);
+        let ex = TrainExample {
+            tokens: (0..17u32).map(|i| 1 + (i * 5) % 31).collect(),
+            mask: vec![true; 16],
+        };
+        let (g, _) = compute_grads(&model, &[ex]);
+        let total = allreduce_tree(vec![g.clone(), g.clone(), g.clone(), g.clone()]);
+        // x+x and 2x+2x are exact in binary fp, so the tree of four
+        // identical parts must be bitwise 4·g.
+        let mut four = g;
+        four.scale_in_place(4.0);
+        assert_eq!(total, four);
+    }
+
+    #[test]
+    fn world_one_matches_single_worker_training_bitwise() {
+        let tokens = stream(33 * 8);
+        let seq = 9; // ctx 8 + shifted target
+        let optim = OptimConfig { lr: 1e-2, warmup: 1, total_steps: 4, ..Default::default() };
+
+        // Reference: the exact sequential path DataParallel must equal.
+        let mut reference = tiny_model(7);
+        let mut ref_batcher = Batcher::new(shard_stream(&tokens, 1)[0], 4, seq, 42);
+        let mut ref_opt = AdamW::new(optim.clone(), reference.params());
+        for _ in 0..4 {
+            let examples = next_examples(&mut ref_batcher);
+            let (mut g, _) = compute_grads(&reference, &examples);
+            g.scale_in_place(1.0); // the W·A=1 mean is a no-op, bitwise
+            ref_opt.step(reference.params_mut(), &g);
+        }
+
+        let mut model = tiny_model(7);
+        let mut dp = DataParallel::from_stream(&mut model, &tokens, 1, 4, seq, 1, 42, optim);
+        for _ in 0..4 {
+            dp.step().unwrap();
+        }
+        assert_eq!(model.params(), reference.params());
+    }
+
+    #[test]
+    fn two_workers_step_finite_and_deterministic() {
+        let tokens = stream(40 * 9);
+        let seq = 9;
+        let optim = OptimConfig { lr: 5e-3, warmup: 1, total_steps: 3, ..Default::default() };
+        let run = |seed: u64| {
+            let mut model = tiny_model(seed);
+            let mut dp =
+                DataParallel::from_stream(&mut model, &tokens, 2, 2, seq, 2, 42, optim.clone());
+            assert_eq!(dp.world_size(), 2);
+            assert_eq!(dp.tokens_per_step(), 2 * 2 * 9 * 2);
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                let s = dp.step().unwrap();
+                assert!(s.loss.is_finite());
+                assert!(s.grad_norm.is_finite());
+                losses.push(s.loss);
+            }
+            let named: Vec<Vec<u32>> = model
+                .params()
+                .named()
+                .iter()
+                .map(|(_, t)| t.data().iter().map(|v| v.to_bits()).collect())
+                .collect();
+            (losses, named)
+        };
+        let (l1, p1) = run(7);
+        let (l2, p2) = run(7);
+        assert_eq!(l1, l2);
+        assert_eq!(p1, p2, "same inputs must give bitwise-identical trajectories");
     }
 }

@@ -6,8 +6,9 @@
 //! * [`trainer`] — single-worker loop over the fused AOT train step with
 //!   eval cadence, checkpointing, NaN guard, and loss-curve logging;
 //! * [`dataparallel`] — simulated synchronous data-parallel training
-//!   (exact allreduce math over on-device gradient buffers) + microbatch
-//!   gradient accumulation for the paper's 1M-token batch protocol;
+//!   over the native training subsystem (exact pairwise-tree allreduce
+//!   of `train::Params` gradients) + microbatch gradient accumulation
+//!   for the paper's 1M-token batch protocol (`psf dp-train`);
 //! * [`evaluator`] — test perplexity and multiple-choice likelihood
 //!   scoring (Table 1's downstream-QA analog);
 //! * [`task_runner`] — Appendix F synthetic tasks (Selective Copying,
@@ -21,7 +22,7 @@ pub mod evaluator;
 pub mod task_runner;
 pub mod trainer;
 
-pub use dataparallel::DataParallel;
+pub use dataparallel::{allreduce_tree, shard_stream, DataParallel, DpStepStats};
 pub use evaluator::{gen_cloze_questions, perplexity, score_mcq, McqQuestion};
 pub use task_runner::{eval_accuracy, run_task, Accuracy, TaskRunnerConfig, TaskSource, TaskSummary};
 pub use trainer::{RunSummary, Trainer, TrainerConfig};

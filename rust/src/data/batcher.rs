@@ -67,6 +67,16 @@ impl Batcher {
         self.segments.len()
     }
 
+    /// Rows per batch (the `batch` this source was built with).
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Tokens per row (ctx + 1: each row carries its shifted target).
+    pub fn seq_len(&self) -> usize {
+        self.seq
+    }
+
     pub fn batches_per_epoch(&self) -> usize {
         self.segments.len() / self.batch
     }

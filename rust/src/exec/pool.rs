@@ -200,6 +200,14 @@ pub fn threads() -> usize {
     current().threads
 }
 
+/// Thread budget for each of `processes` cooperating processes on this
+/// machine (sharded serving spawns one model runner per shard; giving
+/// every runner the full `default_threads` would oversubscribe the
+/// cores `processes`-fold and serialize in the OS scheduler instead).
+pub fn per_process_threads(processes: usize) -> usize {
+    (default_threads() / processes.max(1)).max(1)
+}
+
 /// Replace the global pool with one of `n` threads (clamped to >= 1).
 /// By the determinism contract this can never change results — only wall
 /// time.  Safe to call at any point from a *non-worker* thread (the CLI
@@ -408,6 +416,15 @@ pub fn par_map_mut<T: Send, R: Send>(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn per_process_threads_divides_and_floors_at_one() {
+        let total = default_threads();
+        assert_eq!(per_process_threads(1), total);
+        assert_eq!(per_process_threads(2), (total / 2).max(1));
+        assert_eq!(per_process_threads(0), total); // treated as 1 process
+        assert_eq!(per_process_threads(total * 8), 1);
+    }
 
     #[test]
     fn par_iter_covers_every_index_once() {

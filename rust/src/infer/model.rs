@@ -358,6 +358,148 @@ impl NativeLm {
         Tensor::from_vec(&[1, d], ln_row(&x)).matmul(&self.params.readout).into_vec()
     }
 
+    // ---------------------------------------- head-sharded (TP) twins
+    //
+    // Deliberate near-copies of `forward_capture`/`step` rather than a
+    // refactor: those two bodies carry the bitwise-determinism contract
+    // for every existing test and cache snapshot, and the sharded path
+    // differs in kind (fallible, combine hook in the middle of each
+    // layer), not just in head range.
+    //
+    // Partition: each shard computes heads `range` of every layer's
+    // attention (its stripes of the masked concat, so `concat · wo` is a
+    // *partial* attention output), hands that partial to `combine`, and
+    // receives the world sum; everything outside attention (embeddings,
+    // layernorms, FFN, readout) is replicated bit-identically on every
+    // shard.  Because all shards add the *same* combined bytes into the
+    // same replicated residual, their logits — and hence sampled tokens
+    // — are identical, which is what lets any one shard own the token
+    // stream.  The world sum must be formed in shard-index order on
+    // every shard: f32 addition does not commute bitwise.
+
+    /// Sharded prefill: like [`NativeLm::prefill`], but runs only heads
+    /// `range` of each layer and routes each layer's partial attention
+    /// output (length `n·d_model`, row-major) through `combine`, which
+    /// must return the shard-order world sum of the same length.
+    pub fn prefill_sharded(
+        &self,
+        tokens: &[u32],
+        mut states: Option<&mut [LayerState]>,
+        range: std::ops::Range<usize>,
+        combine: &mut dyn FnMut(usize, Vec<f32>) -> anyhow::Result<Vec<f32>>,
+    ) -> anyhow::Result<Tensor> {
+        let n = tokens.len();
+        anyhow::ensure!(n > 0, "empty token sequence");
+        anyhow::ensure!(
+            range.start < range.end && range.end <= self.cfg.heads,
+            "bad head range {}..{} of {}",
+            range.start,
+            range.end,
+            self.cfg.heads
+        );
+        let d = self.cfg.d_model;
+        let hd = self.head_dim();
+        let mut x = Tensor::zeros(&[n, d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            let row = x.row_mut(i);
+            row.copy_from_slice(self.params.embed.row(t as usize));
+            add_sinusoidal(row, i);
+        }
+        for (li, layer) in self.params.layers.iter().enumerate() {
+            let xn = layernorm_rows(&x);
+            let mut q = xn.matmul(&layer.wq);
+            let mut k = xn.matmul(&layer.wk);
+            let v = xn.matmul(&layer.wv);
+            rope_heads(&mut q, hd);
+            rope_heads(&mut k, hd);
+            let mut attn_out = Tensor::zeros(&[n, d]);
+            kernel::prefill_head_range(
+                &self.kernels[li],
+                range.clone(),
+                &q,
+                &k,
+                &v,
+                states.as_deref_mut().map(|s| s[li].heads.as_mut_slice()),
+                &mut attn_out,
+            );
+            // Stripes outside `range` are zero, so this is the shard's
+            // partial contribution to the full attention output.
+            let partial = attn_out.matmul(&layer.wo);
+            let combined = combine(li, partial.into_vec())?;
+            anyhow::ensure!(
+                combined.len() == n * d,
+                "combine returned {} floats for layer {li}, expected {}",
+                combined.len(),
+                n * d
+            );
+            x = x.add(&Tensor::from_vec(&[n, d], combined));
+            let xn2 = layernorm_rows(&x);
+            let g = xn2.matmul(&layer.ffn_gate).map(gelu);
+            let u = xn2.matmul(&layer.ffn_up);
+            x = x.add(&g.hadamard(&u).matmul(&layer.ffn_down));
+        }
+        Ok(layernorm_rows(&x).matmul(&self.params.readout))
+    }
+
+    /// Sharded decode step: like [`NativeLm::step`], but runs only heads
+    /// `range` and routes each layer's partial attention output (length
+    /// `d_model`) through `combine`.  Only this shard's `states[..][range]`
+    /// entries advance; the others stay untouched.
+    pub fn step_sharded(
+        &self,
+        token: u32,
+        pos: usize,
+        states: &mut [LayerState],
+        range: std::ops::Range<usize>,
+        combine: &mut dyn FnMut(usize, Vec<f32>) -> anyhow::Result<Vec<f32>>,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            range.start < range.end && range.end <= self.cfg.heads,
+            "bad head range {}..{} of {}",
+            range.start,
+            range.end,
+            self.cfg.heads
+        );
+        let d = self.cfg.d_model;
+        let hd = self.head_dim();
+        let mut x = self.params.embed.row(token as usize).to_vec();
+        add_sinusoidal(&mut x, pos);
+        for (li, layer) in self.params.layers.iter().enumerate() {
+            let xn = Tensor::from_vec(&[1, d], ln_row(&x));
+            let q = xn.matmul(&layer.wq);
+            let k = xn.matmul(&layer.wk);
+            let v = xn.matmul(&layer.wv);
+            let mut concat = vec![0.0f32; d];
+            for hi in range.clone() {
+                let mut qh = q.row(0)[hi * hd..(hi + 1) * hd].to_vec();
+                let mut kh = k.row(0)[hi * hd..(hi + 1) * hd].to_vec();
+                let vh = &v.row(0)[hi * hd..(hi + 1) * hd];
+                rope_row(&mut qh, pos);
+                rope_row(&mut kh, pos);
+                let oh = self.kernels[li][hi].step(&qh, &kh, vh, &mut states[li].heads[hi]);
+                concat[hi * hd..(hi + 1) * hd].copy_from_slice(&oh);
+            }
+            let partial = Tensor::from_vec(&[1, d], concat).matmul(&layer.wo);
+            let combined = combine(li, partial.into_vec())?;
+            anyhow::ensure!(
+                combined.len() == d,
+                "combine returned {} floats for layer {li}, expected {d}",
+                combined.len()
+            );
+            for (xi, a) in x.iter_mut().zip(&combined) {
+                *xi += a;
+            }
+            let xn2 = Tensor::from_vec(&[1, d], ln_row(&x));
+            let g = xn2.matmul(&layer.ffn_gate).map(gelu);
+            let u = xn2.matmul(&layer.ffn_up);
+            let ffn = g.hadamard(&u).matmul(&layer.ffn_down);
+            for (xi, a) in x.iter_mut().zip(ffn.data()) {
+                *xi += a;
+            }
+        }
+        Ok(Tensor::from_vec(&[1, d], ln_row(&x)).matmul(&self.params.readout).into_vec())
+    }
+
     // ------------------------------------------------- checkpoint bridge
 
     /// Serialize config, mechanism, and weights into a [`Checkpoint`]
@@ -588,6 +730,41 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sharded_full_range_identity_combine_is_bitwise() {
+        // One shard owning every head with a pass-through combine must
+        // reproduce the unsharded path exactly — prefill logits, decode
+        // logits, and the states they leave behind.
+        let lm = tiny(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true });
+        let tokens: Vec<u32> = (0..11).map(|i| (i * 3) % 64).collect();
+        let mut ident = |_li: usize, partial: Vec<f32>| Ok(partial);
+        let mut plain = lm.new_states();
+        let want = lm.prefill(&tokens, &mut plain);
+        let mut sharded = lm.new_states();
+        let got = lm
+            .prefill_sharded(&tokens, Some(&mut sharded), 0..lm.cfg.heads, &mut ident)
+            .unwrap();
+        assert_eq!(got, want);
+        let mut pos = tokens.len();
+        for t in [5u32, 9, 17] {
+            let la = lm.step(t, pos, &mut plain);
+            let lb = lm.step_sharded(t, pos, &mut sharded, 0..lm.cfg.heads, &mut ident).unwrap();
+            let la_bits: Vec<u32> = la.iter().map(|v| v.to_bits()).collect();
+            let lb_bits: Vec<u32> = lb.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(la_bits, lb_bits, "step at pos {pos} diverged");
+            pos += 1;
+        }
+    }
+
+    #[test]
+    fn sharded_combine_error_propagates() {
+        let lm = tiny(Mechanism::Softmax);
+        let mut fail = |_li: usize, _p: Vec<f32>| anyhow::bail!("peer lost");
+        assert!(lm.prefill_sharded(&[1, 2, 3], None, 0..1, &mut fail).is_err());
+        let mut states = lm.new_states();
+        assert!(lm.step_sharded(1, 0, &mut states, 0..1, &mut fail).is_err());
     }
 
     #[test]

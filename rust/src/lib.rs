@@ -13,7 +13,10 @@
 //!     the native training subsystem with hand-written backward passes
 //!     through the kernel core (`train` — linear-time backward for the
 //!     sketched mechanisms, `psf train-native`), and the bench harness
-//!     that regenerates every table/figure of the paper's evaluation.
+//!     that regenerates every table/figure of the paper's evaluation,
+//!     and multi-process sharded serving (`shard` — gateway + runner
+//!     worker processes over a versioned Unix-socket IPC protocol,
+//!     `psf serve --runners N`).
 
 pub mod attn;
 pub mod bench;
@@ -28,6 +31,7 @@ pub mod metrics;
 pub mod prop;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod tasks;
 pub mod tensor;
 pub mod train;

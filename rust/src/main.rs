@@ -4,18 +4,21 @@
 //!   list                       discover artifact bundles
 //!   train                      train a model artifact on a synthetic corpus
 //!   train-native               train the native model (no artifacts, backprop in-crate)
-//!   dp-train                   simulated data-parallel training
+//!   dp-train                   data-parallel training (native backprop, exact allreduce)
 //!   task                       train + evaluate a synthetic task artifact
 //!   eval                       perplexity + downstream MCQ of a trained run
 //!   attn                       run one attention micro-artifact (sanity)
 //!   generate                   autoregressive decoding (native model path)
-//!   serve                      HTTP serving gateway (concurrent, cached)
+//!   serve                      HTTP serving gateway (single- or multi-process)
+//!   runner                     [hidden] model-runner process (spawned by serve)
 //!
 //! Artifact-backed subcommands execute AOT-compiled HLO through the PJRT
 //! CPU client; Python is never invoked (`make artifacts` must have run
-//! once).  `train-native`, `generate`, and `serve` run entirely on the
-//! native kernels — no artifacts — and share one checkpoint format, so
-//! natively trained weights are directly servable.
+//! once).  `train-native`, `dp-train`, `generate`, and `serve` run
+//! entirely on the native kernels — no artifacts — and share one
+//! checkpoint format, so natively trained weights are directly servable.
+//! `psf serve --runners N` spawns N `psf runner` worker processes behind
+//! the gateway (data-parallel replicas, or head shards with `--tp`).
 
 use std::path::PathBuf;
 
@@ -29,7 +32,8 @@ use polysketchformer::coordinator::{
 use polysketchformer::data::{self, batcher::Batcher, corpus::Flavor};
 use polysketchformer::metrics::RunLogger;
 use polysketchformer::runtime::{self, LoadOpts};
-use polysketchformer::serve::{Gateway, GatewayConfig};
+use polysketchformer::serve::{Gateway, GatewayConfig, WorkerConfig};
+use polysketchformer::shard;
 use polysketchformer::tasks::{induction::InductionTask, selective_copy::SelectiveCopyTask};
 
 fn main() {
@@ -61,6 +65,9 @@ fn run(argv: &[String]) -> Result<()> {
         "attn" => cmd_attn(rest),
         "generate" => cmd_generate(rest),
         "serve" => cmd_serve(rest),
+        // Hidden: the worker-process body `psf serve --runners N` spawns.
+        // Deliberately absent from `top_usage` — never invoked by hand.
+        "runner" => cmd_runner(rest),
         "--help" | "-h" | "help" => {
             eprintln!("{}", top_usage());
             Ok(())
@@ -139,8 +146,14 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let steps = cfg.int_or("steps", 200).to_string();
     let seed = cfg.int_or("seed", 0).to_string();
 
-    let mut argv: Vec<String> =
-        vec!["--model".into(), model, "--steps".into(), steps, "--seed".into(), seed];
+    let mut argv: Vec<String> = vec![
+        "--model".into(),
+        model,
+        "--steps".into(),
+        steps.clone(),
+        "--seed".into(),
+        seed.clone(),
+    ];
     match mode.as_str() {
         "train" => {
             argv.extend([
@@ -181,7 +194,15 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         "dp-train" => {
-            argv.extend([
+            // Native path: no artifact — the config's `mech` key (not
+            // `model`) picks the attention mechanism.
+            let dp_argv: Vec<String> = vec![
+                "--mech".into(),
+                cfg.str_or("mech", "psk4_r8_b16_local").into(),
+                "--steps".into(),
+                steps,
+                "--seed".into(),
+                seed,
                 "--workers".into(),
                 cfg.int_or("dp.workers", 4).to_string(),
                 "--accum".into(),
@@ -190,8 +211,8 @@ fn cmd_run(argv: &[String]) -> Result<()> {
                 cfg.str_or("data.corpus", "books").into(),
                 "--corpus-bytes".into(),
                 cfg.int_or("data.bytes", 4_000_000).to_string(),
-            ]);
-            cmd_dp_train(&argv)
+            ];
+            cmd_dp_train(&dp_argv)
         }
         "task" => {
             argv.extend([
@@ -438,41 +459,77 @@ fn cmd_train_native(argv: &[String]) -> Result<()> {
 
 // -------------------------------------------------------------- dp-train
 
+/// Simulated synchronous data-parallel training over the **native**
+/// training subsystem: W workers on disjoint corpus shards, microbatch
+/// accumulation, exact pairwise-tree allreduce, one optimizer update per
+/// global step.  No artifacts, no PJRT — the same backprop `psf
+/// train-native` uses, so W = accum = 1 reproduces it bitwise.
 fn cmd_dp_train(argv: &[String]) -> Result<()> {
     let spec = Args::new(
         "psf dp-train",
-        "simulated synchronous data-parallel training (exact allreduce math)",
+        "data-parallel training on the native model (exact allreduce math)",
     )
-    .req("model", "artifact name")
+    .opt("mech", "psk4_r8_b16_local",
+         "mechanism label (softmax | flash_b<B> | poly<P> | psk<P>_r<R>_b<B>[_local] | performer<M>_b<B>)")
     .opt("workers", "4", "simulated data-parallel workers")
     .opt("accum", "1", "microbatches accumulated per worker per step")
     .opt("steps", "50", "global steps")
+    .opt("ctx", "64", "context length")
+    .opt("batch", "8", "sequences per microbatch per worker")
+    .opt("d-model", "64", "model width")
+    .opt("layers", "2", "transformer layers")
+    .opt("heads", "4", "attention heads")
+    .opt("lr", "0.003", "peak learning rate")
+    .opt("warmup", "20", "linear warmup steps")
     .opt("corpus", "books", "books | wiki | web")
     .opt("corpus-bytes", "4000000", "synthetic corpus size in bytes")
-    .opt("seed", "0", "data seed");
+    .opt("log", "", "JSONL metrics path (empty = none)")
+    .opt("threads", "0", "compute threads (0 = PSF_THREADS env, else all cores)")
+    .opt("seed", "0", "weight + data seed");
     let p = parse(spec, argv)?;
+    apply_threads(&p)?;
 
-    let mut model =
-        runtime::load_model(p.str("model"), LoadOpts::none().with_grads().with_evalloss())?;
+    use polysketchformer::train::OptimConfig;
+
+    let mech = Mechanism::parse(p.str("mech")).map_err(|e| anyhow!("{e}"))?;
+    let ctx = p.usize("ctx")?;
+    let steps = p.u64("steps")?;
+    let seed = p.u64("seed")?;
     let flavor = Flavor::parse(p.str("corpus"))
         .ok_or_else(|| anyhow!("bad corpus {}", p.str("corpus")))?;
-    let seed = p.u64("seed")?;
-    let ds = data::load_corpus_tokens(
-        flavor,
-        p.usize("corpus-bytes")?,
-        model.vocab(),
-        seed,
-        None,
-    )?;
-    let mut test = Batcher::new(&ds.test, model.batch(), model.ctx() + 1, seed);
 
-    let workers = p.usize("workers")?;
+    // Byte-level stream, the encoding `psf serve`/`generate` decode
+    // (id 0 = BOS/pad, ids 1..=256 = bytes).
+    let gen = data::corpus::CorpusGen::new(flavor, seed);
+    let text = gen.generate(p.usize("corpus-bytes")?, seed ^ 0x9e37);
+    let stream: Vec<u32> = text.bytes().map(|b| b as u32 + 1).collect();
+
+    let mut cfg = native_lm_config(&p)?;
+    cfg.vocab = 257;
+    let mut model = NativeLm::new(cfg, mech);
+    println!(
+        "dp-train: mech {} ({} params, d_model {} x {} layers, ctx {ctx})",
+        model.mech.label(),
+        model.params().num_params(),
+        model.cfg.d_model,
+        model.cfg.layers,
+    );
+
+    let optim = OptimConfig {
+        lr: p.f64("lr")? as f32,
+        warmup: p.u64("warmup")?,
+        total_steps: steps,
+        ..OptimConfig::default()
+    };
     let mut dp = DataParallel::from_stream(
         &mut model,
-        &ds.train,
-        workers,
+        &stream,
+        p.usize("workers")?,
+        p.usize("batch")?,
+        ctx + 1,
         p.usize("accum")?,
         seed,
+        optim,
     );
     println!(
         "dp-train: {} workers x {} accum = {} tokens/step",
@@ -480,10 +537,13 @@ fn cmd_dp_train(argv: &[String]) -> Result<()> {
         dp.accum,
         dp.tokens_per_step(),
     );
-    let mut logger = RunLogger::new(None, 5)?;
-    let (last, _) = dp.run(p.u64("steps")?, &mut logger)?;
-    let ppl = coordinator::perplexity(&model, &mut test, 4)?;
-    println!("done: step {} loss {:.4}, test ppl {:.2}", last.step, last.loss, ppl);
+    let mut logger = RunLogger::new(non_empty(p.str("log")).map(std::path::Path::new), 5)?;
+    let (last, _) = dp.run(steps, &mut logger)?;
+    // One stable, machine-parsable closing line (mirrors train-native's).
+    println!(
+        "dp-train final: step={} loss={:.4} grad_norm={:.4} lr={:.5}",
+        last.step, last.loss, last.grad_norm, last.lr,
+    );
     Ok(())
 }
 
@@ -735,6 +795,13 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
 /// workers (continuous batching across threads) + a prompt-prefix state
 /// cache that skips prefill for repeated prompts — constant-size entries
 /// for the linear mechanisms, O(n) KV entries for the softmax family.
+///
+/// `--runners N` switches to multi-process sharded serving: the gateway
+/// spawns N `psf runner` worker processes (full replicas, or contiguous
+/// head shards with `--tp`), routes requests over Unix-socket IPC by
+/// consistent-hashing the prompt-cache key, and survives runner crashes
+/// by respawning from the same model args.  Either way SIGTERM/SIGINT
+/// drains in-flight work and flushes the closing metrics record.
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let spec = Args::new("psf serve", "HTTP serving gateway on the native model path")
         .opt("addr", "127.0.0.1:8080", "listen address (port 0 = ephemeral)")
@@ -743,17 +810,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("checkpoint", "",
              "load trained weights from a `psf train-native` checkpoint \
               (overrides --mech/--d-model/--layers/--heads/--seed)")
-        .opt("workers", "2", "decode worker threads")
+        .opt("runners", "0",
+             "model-runner worker processes (0 = single-process in-thread serving)")
+        .switch("tp", "head-shard one model across the runners (tensor \
+                 parallelism) instead of full data-parallel replicas")
+        .opt("heartbeat-ms", "500", "runner heartbeat cadence in milliseconds")
+        .opt("workers", "2", "decode worker threads (per runner when sharded)")
         .opt("queue-cap", "64", "admission queue depth (429 beyond it)")
         .opt("resident", "8", "max concurrent sessions across workers")
         .opt("slice", "4", "tokens per worker grab (fairness dial)")
-        .opt("cache-mb", "64", "prompt-prefix cache budget in MiB")
+        .opt("cache-mb", "64", "prompt-prefix cache budget in MiB (per runner when sharded)")
         .opt("default-max-tokens", "64", "max_tokens when the request omits it")
         .opt("max-tokens-cap", "512", "hard per-request max_tokens ceiling")
         .opt("d-model", "64", "model width")
         .opt("layers", "2", "transformer layers")
         .opt("heads", "4", "attention heads")
-        .opt("threads", "0", "compute threads (0 = PSF_THREADS env, else all cores)")
+        .opt("threads", "0",
+             "compute threads (0 = PSF_THREADS env, else all cores; \
+              sharded: cores divided evenly across runners)")
         .opt("log", "", "JSONL metrics path (empty = none)")
         .opt("max-requests", "0", "stop after N completed requests (0 = run forever)")
         .opt("seed", "0", "weight seed");
@@ -768,20 +842,146 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             model.cfg.vocab
         );
     }
-    let gw_cfg = GatewayConfig {
-        addr: p.str("addr").to_string(),
-        workers: p.usize("workers")?,
-        queue_cap: p.usize("queue-cap")?,
-        max_resident: p.usize("resident")?,
+
+    let runners = p.usize("runners")?;
+    if runners == 0 {
+        let gw_cfg = GatewayConfig {
+            addr: p.str("addr").to_string(),
+            workers: p.usize("workers")?,
+            queue_cap: p.usize("queue-cap")?,
+            max_resident: p.usize("resident")?,
+            slice_tokens: p.usize("slice")?,
+            cache_bytes: p.usize("cache-mb")? << 20,
+            default_max_tokens: p.usize("default-max-tokens")?,
+            max_tokens_cap: p.usize("max-tokens-cap")?,
+            log_path: non_empty(p.str("log")).map(PathBuf::from),
+            max_requests: p.u64("max-requests")?,
+        };
+        let gateway = std::sync::Arc::new(Gateway::new(model, gw_cfg)?);
+        spawn_signal_watcher(gateway.stop_handle());
+        return gateway.run_http();
+    }
+
+    // Multi-process sharded serving.  The gateway loaded the model only
+    // to validate it and read mech + head count; the runner processes
+    // own the actual replicas/shards (built from the same args, which is
+    // what makes them byte-equivalent to each other and to respawns).
+    let mech = model.mech.clone();
+    let heads = model.cfg.heads;
+    let model_args: Vec<String> = match non_empty(p.str("checkpoint")) {
+        Some(ck) => vec!["--checkpoint".into(), ck.to_string()],
+        None => vec![
+            "--mech".into(),
+            mech.label(),
+            "--d-model".into(),
+            model.cfg.d_model.to_string(),
+            "--layers".into(),
+            model.cfg.layers.to_string(),
+            "--heads".into(),
+            heads.to_string(),
+            "--seed".into(),
+            p.str("seed").to_string(),
+        ],
+    };
+    drop(model);
+
+    let threads = p.usize("threads")?;
+    let sup_cfg = shard::SupervisorConfig {
+        runners,
+        runner_exe: std::env::current_exe()?,
+        model_args,
+        runner_workers: p.usize("workers")?,
         slice_tokens: p.usize("slice")?,
-        cache_bytes: p.usize("cache-mb")? << 20,
+        max_resident: p.usize("resident")?,
+        queue_cap: p.usize("queue-cap")?,
+        cache_mb: p.usize("cache-mb")?,
+        threads_per_runner: if threads > 0 {
+            threads
+        } else {
+            polysketchformer::exec::pool::per_process_threads(runners)
+        },
+        heartbeat_ms: p.u64("heartbeat-ms")?,
+        tp: p.flag("tp"),
+        heads,
+        ..shard::SupervisorConfig::default()
+    };
+    let sup = shard::Supervisor::start(sup_cfg)?;
+    let shard_cfg = shard::ShardConfig {
+        addr: p.str("addr").to_string(),
         default_max_tokens: p.usize("default-max-tokens")?,
         max_tokens_cap: p.usize("max-tokens-cap")?,
         log_path: non_empty(p.str("log")).map(PathBuf::from),
         max_requests: p.u64("max-requests")?,
     };
-    let gateway = std::sync::Arc::new(Gateway::new(model, gw_cfg)?);
+    let gateway = std::sync::Arc::new(shard::ShardGateway::new(sup, mech, shard_cfg)?);
+    spawn_signal_watcher(gateway.stop_handle());
     gateway.run_http()
+}
+
+// ---------------------------------------------------------------- runner
+
+/// The model-runner process body (hidden subcommand): connect back to
+/// the supervisor socket, announce a `Hello`, then serve multiplexed
+/// request frames until the gateway goes away.  Spawned by `psf serve
+/// --runners N`; never invoked by hand, hence absent from `top_usage`.
+fn cmd_runner(argv: &[String]) -> Result<()> {
+    let spec = Args::new("psf runner", "model-runner process (spawned by `psf serve --runners`)")
+        .req("socket", "supervisor Unix socket to connect back to")
+        .opt("id", "0", "runner id assigned by the supervisor")
+        .opt("mech", "psk4_r16_b32_local", "mechanism label")
+        .opt("checkpoint", "",
+             "load trained weights from a checkpoint \
+              (overrides --mech/--d-model/--layers/--heads/--seed)")
+        .opt("d-model", "64", "model width")
+        .opt("layers", "2", "transformer layers")
+        .opt("heads", "4", "attention heads")
+        .opt("workers", "2", "decode worker threads")
+        .opt("slice", "4", "tokens per worker grab")
+        .opt("resident", "8", "max concurrent sessions")
+        .opt("queue-cap", "64", "admission queue depth")
+        .opt("cache-mb", "64", "prompt-prefix cache budget in MiB")
+        .opt("threads", "0", "compute threads (0 = PSF_THREADS env, else all cores)")
+        .opt("head-start", "0", "first head of this shard (TP mode)")
+        .opt("head-end", "0", "one-past-last head of this shard (0 = full replica)")
+        .opt("seed", "0", "weight seed");
+    let p = parse(spec, argv)?;
+    apply_threads(&p)?;
+
+    let model = load_native_model(&p)?;
+    if model.cfg.vocab < 257 {
+        bail!(
+            "runner needs byte-level vocab (>= 257); checkpoint has vocab {}",
+            model.cfg.vocab
+        );
+    }
+    let cfg = shard::RunnerConfig {
+        socket: PathBuf::from(p.str("socket")),
+        runner_id: p.u64("id")? as u32,
+        worker: WorkerConfig {
+            workers: p.usize("workers")?,
+            slice_tokens: p.usize("slice")?,
+            max_resident: p.usize("resident")?,
+        },
+        queue_cap: p.usize("queue-cap")?,
+        cache_bytes: p.usize("cache-mb")? << 20,
+        head_start: p.usize("head-start")?,
+        head_end: p.usize("head-end")?,
+    };
+    shard::run_runner(model, cfg)
+}
+
+/// Arm SIGINT/SIGTERM for graceful shutdown: the watcher thread flips
+/// the gateway's stop flag, which makes the HTTP accept loop exit,
+/// workers drain, and the closing `serve_metrics` record flush —
+/// instead of the process dying mid-request.
+fn spawn_signal_watcher(stop: std::sync::Arc<std::sync::atomic::AtomicBool>) {
+    polysketchformer::util::signal::install();
+    std::thread::spawn(move || {
+        while !polysketchformer::util::signal::triggered() {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    });
 }
 
 /// Build the native model for `generate`/`serve`: from a `--checkpoint`

@@ -223,36 +223,19 @@ impl Gateway {
 
     /// Build a GenRequest from a parsed `/v1/generate` body.
     fn parse_generate(&self, body: &str) -> Result<GenRequest, String> {
-        let obj = parse_json_object(body)?;
-        let prompt_text = json_get(&obj, "prompt")
-            .and_then(Json::as_str)
-            .ok_or("missing required string field `prompt`")?;
-        let num = |key: &str, default: f64| -> Result<f64, String> {
-            match json_get(&obj, key) {
-                None | Some(Json::Null) => Ok(default),
-                Some(v) => v.as_f64().ok_or(format!("field `{key}` must be a number")),
-            }
-        };
-        let max_tokens = num("max_tokens", self.cfg.default_max_tokens as f64)? as usize;
-        if max_tokens == 0 {
-            return Err("`max_tokens` must be >= 1".into());
-        }
-        let policy_name = match json_get(&obj, "policy") {
-            None | Some(Json::Null) => "greedy",
-            Some(v) => v.as_str().ok_or("field `policy` must be a string")?,
-        };
-        let policy = SamplePolicy::from_flags(
-            policy_name,
-            num("temperature", 1.0)? as f32,
-            num("top_k", 40.0)? as usize,
-            num("top_p", 0.9)? as f32,
-        )?;
-        Ok(GenRequest {
-            prompt: encode_prompt(prompt_text),
-            max_new_tokens: max_tokens.min(self.cfg.max_tokens_cap),
-            policy,
-            seed: num("seed", 0.0)? as u64,
-        })
+        parse_generate_body(
+            body,
+            &GenDefaults {
+                default_max_tokens: self.cfg.default_max_tokens,
+                max_tokens_cap: self.cfg.max_tokens_cap,
+            },
+        )
+    }
+
+    /// Shared stop flag — external signal handlers (SIGTERM/SIGINT
+    /// watchers) set it to make `run_http`'s accept loop exit and drain.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
     }
 
     /// Stream one admitted request out as chunked JSON lines.
@@ -265,24 +248,11 @@ impl Gateway {
         for event in rx.iter() {
             match event {
                 TokenEvent::Token { token, text } => {
-                    resp.chunk(&format!(
-                        "{{\"token\":{},\"text\":{}}}\n",
-                        token,
-                        json_escape(&text)
-                    ))?;
+                    resp.chunk(&token_chunk(token, &text))?;
                 }
                 TokenEvent::Done(stats) => {
                     self.on_done(&stats);
-                    resp.chunk(&format!(
-                        "{{\"done\":true,\"new_tokens\":{},\"cache_hit\":{},\"ttft_ms\":{:.3},\
-                         \"prefill_ms\":{:.3},\"decode_tokens_per_sec\":{:.1},\"text\":{}}}\n",
-                        stats.new_tokens,
-                        stats.cache_hit,
-                        stats.ttft_secs * 1e3,
-                        stats.prefill_secs * 1e3,
-                        stats.decode_tokens_per_sec(),
-                        json_escape(&decode_text(&stats.generated)),
-                    ))?;
+                    resp.chunk(&done_chunk(&stats, ""))?;
                 }
             }
         }
@@ -297,7 +267,7 @@ impl Gateway {
     /// each call writes one record, so call it once).
     pub fn on_done(&self, stats: &RequestStats) {
         if let Some(w) = self.log.lock().expect("log lock poisoned").as_mut() {
-            let _ = w.write(&request_record(&self.model, stats));
+            let _ = w.write(&request_record(&self.model.mech.label(), stats));
             let _ = w.flush();
         }
         if self.cfg.max_requests > 0
@@ -356,12 +326,77 @@ impl Handler for Gateway {
     }
 }
 
+/// Request-shape knobs [`parse_generate_body`] needs — split out so the
+/// sharded gateway (which has no `GatewayConfig`) parses identically.
+pub struct GenDefaults {
+    pub default_max_tokens: usize,
+    pub max_tokens_cap: usize,
+}
+
+/// Build a GenRequest from a `/v1/generate` body.  One parser for every
+/// gateway front-end, so single-process and sharded serving accept the
+/// same request language byte for byte.
+pub fn parse_generate_body(body: &str, defaults: &GenDefaults) -> Result<GenRequest, String> {
+    let obj = parse_json_object(body)?;
+    let prompt_text = json_get(&obj, "prompt")
+        .and_then(Json::as_str)
+        .ok_or("missing required string field `prompt`")?;
+    let num = |key: &str, default: f64| -> Result<f64, String> {
+        match json_get(&obj, key) {
+            None | Some(Json::Null) => Ok(default),
+            Some(v) => v.as_f64().ok_or(format!("field `{key}` must be a number")),
+        }
+    };
+    let max_tokens = num("max_tokens", defaults.default_max_tokens as f64)? as usize;
+    if max_tokens == 0 {
+        return Err("`max_tokens` must be >= 1".into());
+    }
+    let policy_name = match json_get(&obj, "policy") {
+        None | Some(Json::Null) => "greedy",
+        Some(v) => v.as_str().ok_or("field `policy` must be a string")?,
+    };
+    let policy = SamplePolicy::from_flags(
+        policy_name,
+        num("temperature", 1.0)? as f32,
+        num("top_k", 40.0)? as usize,
+        num("top_p", 0.9)? as f32,
+    )?;
+    Ok(GenRequest {
+        prompt: encode_prompt(prompt_text),
+        max_new_tokens: max_tokens.min(defaults.max_tokens_cap),
+        policy,
+        seed: num("seed", 0.0)? as u64,
+    })
+}
+
+/// One `{"token":..}` stream line (shared by every gateway front-end).
+pub fn token_chunk(token: u32, text: &str) -> String {
+    format!("{{\"token\":{},\"text\":{}}}\n", token, json_escape(text))
+}
+
+/// The closing `{"done":true,..}` stream line.  `extra` is splice-in
+/// JSON appended before the closing brace (e.g. `,"runner":1`) — empty
+/// for the single-process gateway, so its bytes are unchanged.
+pub fn done_chunk(stats: &RequestStats, extra: &str) -> String {
+    format!(
+        "{{\"done\":true,\"new_tokens\":{},\"cache_hit\":{},\"ttft_ms\":{:.3},\
+         \"prefill_ms\":{:.3},\"decode_tokens_per_sec\":{:.1},\"text\":{}{}}}\n",
+        stats.new_tokens,
+        stats.cache_hit,
+        stats.ttft_secs * 1e3,
+        stats.prefill_secs * 1e3,
+        stats.decode_tokens_per_sec(),
+        json_escape(&decode_text(&stats.generated)),
+        extra,
+    )
+}
+
 /// Per-request JSONL record (`kind = "serve_request"`), the serving
 /// counterpart of the scheduler's `session` records.
-fn request_record(model: &NativeLm, s: &RequestStats) -> Record {
+pub(crate) fn request_record(mech_label: &str, s: &RequestStats) -> Record {
     Record::new()
         .str("kind", "serve_request")
-        .str("mech", model.mech.label())
+        .str("mech", mech_label)
         .i64("id", s.id as i64)
         .i64("prompt_len", s.prompt_len as i64)
         .i64("new_tokens", s.new_tokens as i64)

@@ -32,6 +32,9 @@ pub mod http;
 pub mod worker;
 
 pub use cache::{CacheKey, CacheStats, PrefixSnapshot, PromptCache};
-pub use gateway::{collect_stream, Gateway, GatewayConfig, Rejected};
+pub use gateway::{
+    collect_stream, done_chunk, parse_generate_body, token_chunk, Gateway, GatewayConfig,
+    GenDefaults, Rejected,
+};
 pub use http::{HttpRequest, HttpServer, Responder};
 pub use worker::{RequestStats, ServeJob, TokenEvent, WorkerConfig, WorkerPool};

@@ -1,0 +1,543 @@
+//! The sharded serving gateway: an HTTP router over runner processes.
+//!
+//! Same request language and stream format as the single-process
+//! `serve::Gateway` (the parser and chunk formatters are shared —
+//! `serve::gateway::{parse_generate_body, token_chunk, done_chunk}`),
+//! but the model lives in runner processes: the gateway holds no
+//! weights, no decode states, and no prompt cache.  Each request's
+//! cache key (mech label + prompt tokens) is consistent-hashed onto the
+//! ring, so repeats land on the runner whose cache already holds the
+//! prefix snapshot.
+//!
+//! Failure semantics: a request in flight on a runner that dies gets a
+//! terminal `{"error":...,"retriable":true}` stream line — fast, from
+//! the mux disconnect, not a timeout — while the supervisor respawns
+//! the runner.  The gateway itself never dies with a runner; `/healthz`
+//! reports `degraded` until the world is whole again.
+
+use std::io;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::attn::Mechanism;
+use crate::infer::GenRequest;
+use crate::metrics::{json_escape, JsonlWriter, Record, ServeCounters};
+use crate::serve::gateway::{
+    done_chunk, parse_generate_body, request_record, token_chunk, GenDefaults,
+};
+use crate::serve::http::{Handler, HttpRequest, HttpServer, Responder};
+use crate::serve::worker::RequestStats;
+use crate::serve::Rejected;
+
+use super::proto::{
+    decode_done, decode_error, decode_token, decode_tp_vec, encode_tp_vec, Frame, FrameKind,
+};
+use super::ring::hash_key;
+use super::supervisor::{OpenStream, Supervisor};
+
+/// How long the gateway waits for the next frame of a replica stream.
+/// A dead runner disconnects instantly (mux EOF); this limit only fires
+/// on a wedged-but-alive runner.
+const STREAM_TIMEOUT: Duration = Duration::from_secs(120);
+/// Per-frame wait inside a TP exchange (lock-step, so much tighter).
+const TP_TIMEOUT: Duration = Duration::from_secs(60);
+/// Budget for collecting one runner's live counters into `/metrics`.
+const METRICS_TIMEOUT: Duration = Duration::from_millis(250);
+
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    pub addr: String,
+    pub default_max_tokens: usize,
+    pub max_tokens_cap: usize,
+    pub log_path: Option<PathBuf>,
+    /// Stop after this many completed requests (0 = run forever).
+    pub max_requests: u64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            addr: "127.0.0.1:0".into(),
+            default_max_tokens: 64,
+            max_tokens_cap: 512,
+            log_path: None,
+            max_requests: 0,
+        }
+    }
+}
+
+/// Events of one routed request (the sharded analogue of
+/// `serve::TokenEvent`, with runner attribution and explicit failure).
+#[derive(Clone, Debug)]
+pub enum ShardEvent {
+    Token { token: u32, text: String },
+    Done { stats: RequestStats, runner: u32 },
+    Failed { retriable: bool, msg: String, runner: Option<u32> },
+}
+
+/// Collected outcome of one request (bench/test client loop).
+pub struct ShardReply {
+    pub tokens: Vec<u32>,
+    pub done: Option<(RequestStats, u32)>,
+    pub error: Option<(bool, String)>,
+}
+
+/// Drain a [`ShardGateway::submit`] receiver to its terminal event.
+pub fn collect_shard_stream(rx: Receiver<ShardEvent>) -> ShardReply {
+    let mut reply = ShardReply { tokens: Vec::new(), done: None, error: None };
+    for ev in rx.iter() {
+        match ev {
+            ShardEvent::Token { token, .. } => reply.tokens.push(token),
+            ShardEvent::Done { stats, runner } => reply.done = Some((stats, runner)),
+            ShardEvent::Failed { retriable, msg, .. } => reply.error = Some((retriable, msg)),
+        }
+    }
+    reply
+}
+
+/// Gateway-side per-runner tallies.  The runner's own counters are
+/// fetched live over IPC for `/metrics`; these survive runner deaths.
+#[derive(Default)]
+struct RunnerTally {
+    routed: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+}
+
+pub struct ShardGateway {
+    sup: Arc<Supervisor>,
+    cfg: ShardConfig,
+    mech: Mechanism,
+    pub counters: Arc<ServeCounters>,
+    tally: Vec<RunnerTally>,
+    stop: Arc<AtomicBool>,
+    log: Mutex<Option<JsonlWriter>>,
+    bound: Mutex<Option<std::net::SocketAddr>>,
+    /// TP requests run the whole world lock-step; one at a time.
+    tp_serial: Mutex<()>,
+}
+
+impl ShardGateway {
+    pub fn new(
+        sup: Arc<Supervisor>,
+        mech: Mechanism,
+        cfg: ShardConfig,
+    ) -> anyhow::Result<ShardGateway> {
+        let log = match &cfg.log_path {
+            Some(p) => Some(JsonlWriter::create(p)?),
+            None => None,
+        };
+        let tally = (0..sup.runners()).map(|_| RunnerTally::default()).collect();
+        Ok(ShardGateway {
+            sup,
+            cfg,
+            mech,
+            counters: Arc::new(ServeCounters::new()),
+            tally,
+            stop: Arc::new(AtomicBool::new(false)),
+            log: Mutex::new(log),
+            bound: Mutex::new(None),
+            tp_serial: Mutex::new(()),
+        })
+    }
+
+    pub fn http_addr(&self) -> Option<std::net::SocketAddr> {
+        *self.bound.lock().expect("bound lock poisoned")
+    }
+
+    pub fn mech_label(&self) -> String {
+        self.mech.label()
+    }
+
+    /// Flip this to stop `run_http` (what the SIGTERM watcher holds).
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    pub fn supervisor(&self) -> &Arc<Supervisor> {
+        &self.sup
+    }
+
+    /// Route and run one request, streaming events to the receiver — the
+    /// in-process analogue of `Gateway::submit` for benches and tests.
+    /// (HTTP connections instead run `drive` on the connection thread.)
+    pub fn submit(self: &Arc<Self>, req: GenRequest) -> Result<Receiver<ShardEvent>, Rejected> {
+        if self.stop.load(Ordering::SeqCst) {
+            self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(Rejected::Draining);
+        }
+        self.counters.admitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let gw = Arc::clone(self);
+        thread::spawn(move || {
+            gw.drive(req, &mut |ev| drop(tx.send(ev)));
+        });
+        Ok(rx)
+    }
+
+    /// Run one admitted request to its terminal event, synchronously.
+    fn drive(&self, req: GenRequest, emit: &mut dyn FnMut(ShardEvent)) {
+        if self.sup.is_tp() {
+            self.drive_tp(req, emit);
+        } else {
+            self.drive_replica(req, emit);
+        }
+    }
+
+    /// One replica-routed request: hash -> runner -> relay frames.
+    fn drive_replica(&self, req: GenRequest, emit: &mut dyn FnMut(ShardEvent)) {
+        let hash = hash_key(&self.mech.label(), &req.prompt);
+        let runner = match self.sup.route(hash) {
+            Some(r) => r,
+            None => {
+                emit(ShardEvent::Failed {
+                    retriable: true,
+                    msg: "no healthy runner (all shards down, respawning)".into(),
+                    runner: None,
+                });
+                return;
+            }
+        };
+        self.tally[runner as usize].routed.fetch_add(1, Ordering::Relaxed);
+        let open = match self.sup.open_generate(runner, &req) {
+            Ok(o) => o,
+            Err(e) => {
+                self.fail(emit, runner, true, &format!("runner {runner} unavailable: {e}"));
+                return;
+            }
+        };
+        loop {
+            let frame = match open.rx.recv_timeout(STREAM_TIMEOUT) {
+                Ok(f) => f,
+                Err(_) => {
+                    // Disconnected (runner died — the usual case) or wedged.
+                    self.fail(emit, runner, true, "runner connection lost mid-stream, retry");
+                    return;
+                }
+            };
+            match frame.kind {
+                FrameKind::Token => match decode_token(&frame.payload) {
+                    Ok((token, text)) => emit(ShardEvent::Token { token, text }),
+                    Err(e) => {
+                        self.fail(emit, runner, true, &format!("bad token frame: {e}"));
+                        return;
+                    }
+                },
+                FrameKind::Done => match decode_done(&frame.payload) {
+                    Ok(stats) => {
+                        self.complete(runner, &stats);
+                        emit(ShardEvent::Done { stats, runner });
+                        return;
+                    }
+                    Err(e) => {
+                        self.fail(emit, runner, true, &format!("bad done frame: {e}"));
+                        return;
+                    }
+                },
+                FrameKind::Error => {
+                    let (retriable, msg) = decode_error(&frame.payload)
+                        .unwrap_or((true, "undecodable runner error".into()));
+                    self.fail(emit, runner, retriable, &msg);
+                    return;
+                }
+                _ => {} // stray frame kinds on a request stream: ignore
+            }
+        }
+    }
+
+    /// One tensor-parallel request: every runner steps the same request
+    /// lock-step; the gateway is the combine hub (sum partials in shard
+    /// order, broadcast the result) and relays the leader's tokens.
+    fn drive_tp(&self, req: GenRequest, emit: &mut dyn FnMut(ShardEvent)) {
+        let _serial = self.tp_serial.lock().expect("tp lock poisoned");
+        let streams: Vec<OpenStream> = match self.sup.tp_streams(&req) {
+            Ok(s) => s,
+            Err(e) => {
+                emit(ShardEvent::Failed {
+                    retriable: true,
+                    msg: format!("TP world incomplete: {e}"),
+                    runner: None,
+                });
+                return;
+            }
+        };
+        let cancel_all = |streams: &[OpenStream]| {
+            for s in streams {
+                s.cancel();
+            }
+        };
+        'rounds: loop {
+            // Gather one TpPartial per shard.  Shard 0 is the leader and
+            // is polled first: its interleaved Token frames are relayed,
+            // and its Done — sent only after every shard has made its
+            // final combine call — ends the run before we wait on
+            // followers (who send nothing after their last partial).
+            let mut partials: Vec<Option<(u32, Vec<f32>)>> =
+                (0..streams.len()).map(|_| None).collect();
+            for (i, open) in streams.iter().enumerate() {
+                while partials[i].is_none() {
+                    let frame = match open.rx.recv_timeout(TP_TIMEOUT) {
+                        Ok(f) => f,
+                        Err(_) => {
+                            cancel_all(&streams);
+                            self.fail(emit, open.runner, true, "TP shard lost mid-request, retry");
+                            return;
+                        }
+                    };
+                    match frame.kind {
+                        FrameKind::TpPartial => match decode_tp_vec(&frame.payload) {
+                            Ok(p) => partials[i] = Some(p),
+                            Err(e) => {
+                                cancel_all(&streams);
+                                self.fail(emit, open.runner, true, &format!("bad TpPartial: {e}"));
+                                return;
+                            }
+                        },
+                        FrameKind::Token => {
+                            if let Ok((token, text)) = decode_token(&frame.payload) {
+                                emit(ShardEvent::Token { token, text });
+                            }
+                        }
+                        FrameKind::Done => {
+                            if let Ok(stats) = decode_done(&frame.payload) {
+                                self.complete(open.runner, &stats);
+                                emit(ShardEvent::Done { stats, runner: open.runner });
+                            }
+                            break 'rounds;
+                        }
+                        FrameKind::Error => {
+                            let (retriable, msg) = decode_error(&frame.payload)
+                                .unwrap_or((true, "undecodable runner error".into()));
+                            cancel_all(&streams);
+                            self.fail(emit, open.runner, retriable, &msg);
+                            return;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            // Shard-index-order sum — the bitwise contract every shard's
+            // residual depends on (f32 addition is order-sensitive).
+            let (layer, mut sum) = partials[0].take().expect("leader partial gathered");
+            for p in partials.iter_mut().skip(1) {
+                let (l, data) = p.take().expect("follower partial gathered");
+                if l != layer || data.len() != sum.len() {
+                    cancel_all(&streams);
+                    self.fail(emit, streams[0].runner, true, "TP shards out of step");
+                    return;
+                }
+                for (s, v) in sum.iter_mut().zip(&data) {
+                    *s += v;
+                }
+            }
+            let combined = encode_tp_vec(layer, &sum);
+            for open in &streams {
+                let frame = Frame::new(FrameKind::TpCombined, open.stream, combined.clone());
+                if open.send(&frame).is_err() {
+                    cancel_all(&streams);
+                    self.fail(emit, open.runner, true, "TP shard lost during broadcast, retry");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn complete(&self, runner: u32, stats: &RequestStats) {
+        self.tally[runner as usize].completed.fetch_add(1, Ordering::Relaxed);
+        self.counters.completed.fetch_add(1, Ordering::Relaxed);
+        self.counters.tokens_generated.fetch_add(stats.new_tokens as u64, Ordering::Relaxed);
+        self.counters.record_ttft(stats.ttft_secs);
+        if stats.cache_hit {
+            self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        self.on_done(runner, stats);
+    }
+
+    fn fail(&self, emit: &mut dyn FnMut(ShardEvent), runner: u32, retriable: bool, msg: &str) {
+        self.tally[runner as usize].failed.fetch_add(1, Ordering::Relaxed);
+        emit(ShardEvent::Failed { retriable, msg: msg.to_string(), runner: Some(runner) });
+    }
+
+    /// Per-request JSONL record + the `max_requests` stop condition.
+    fn on_done(&self, runner: u32, stats: &RequestStats) {
+        if let Some(w) = self.log.lock().expect("log lock poisoned").as_mut() {
+            let _ = w.write(&request_record(&self.mech.label(), stats).i64("runner", runner as i64));
+            let _ = w.flush();
+        }
+        if self.cfg.max_requests > 0
+            && self.counters.completed.load(Ordering::Relaxed) >= self.cfg.max_requests
+        {
+            self.stop.store(true, Ordering::SeqCst);
+        }
+    }
+
+    /// Aggregate serve counters (same `serve_metrics` shape as the
+    /// single-process gateway, plus fleet gauges).
+    pub fn metrics_record(&self) -> Record {
+        let (total, healthy) = self.sup.health();
+        self.counters
+            .record()
+            .str("mech", self.mech.label())
+            .i64("runners", total as i64)
+            .i64("healthy_runners", healthy as i64)
+            .i64("respawns", self.sup.respawn_count() as i64)
+    }
+
+    /// `/metrics` body: the aggregate record with a `"runners":[..]`
+    /// array spliced in — per-runner gateway tallies plus each live
+    /// runner's own counters (`null` for a dead or unresponsive runner).
+    pub fn metrics_json(&self) -> String {
+        let base = self.metrics_record().to_json();
+        let states = self.sup.runner_states();
+        let mut runners = String::from("[");
+        for (i, (healthy, respawns)) in states.iter().enumerate() {
+            if i > 0 {
+                runners.push(',');
+            }
+            let live = if *healthy {
+                self.sup
+                    .fetch_runner_metrics(i as u32, METRICS_TIMEOUT)
+                    .unwrap_or_else(|| "null".into())
+            } else {
+                "null".into()
+            };
+            runners.push_str(&format!(
+                "{{\"runner\":{i},\"healthy\":{healthy},\"respawns\":{respawns},\
+                 \"routed\":{},\"completed\":{},\"failed\":{},\"live\":{live}}}",
+                self.tally[i].routed.load(Ordering::Relaxed),
+                self.tally[i].completed.load(Ordering::Relaxed),
+                self.tally[i].failed.load(Ordering::Relaxed),
+            ));
+        }
+        runners.push(']');
+        format!("{},\"runners\":{}}}", &base[..base.len() - 1], runners)
+    }
+
+    /// Serve HTTP until stopped, then shut the runner fleet down and
+    /// flush the closing metrics record.  The first banner line matches
+    /// the single-process gateway (the CI smoke scrapes the addr off it).
+    pub fn run_http(self: Arc<ShardGateway>) -> anyhow::Result<()> {
+        let server = HttpServer::bind(&self.cfg.addr)?;
+        let addr = server.local_addr()?;
+        *self.bound.lock().expect("bound lock poisoned") = Some(addr);
+        println!("psf serve: listening on http://{addr} (mech {})", self.mech_label());
+        println!(
+            "psf serve: {} runner processes ({})",
+            self.sup.runners(),
+            if self.sup.is_tp() {
+                "head-sharded tensor parallel"
+            } else {
+                "data-parallel replicas"
+            },
+        );
+        let stop = Arc::clone(&self.stop);
+        let handler: Arc<dyn Handler> = Arc::clone(&self) as Arc<dyn Handler>;
+        server.serve(handler, stop)?;
+        self.finish()
+    }
+
+    /// Stop accepting, shut down the fleet, flush the closing record.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        self.sup.shutdown();
+        let record = self.metrics_record();
+        if let Some(w) = self.log.lock().expect("log lock poisoned").as_mut() {
+            w.write(&record)?;
+            w.flush()?;
+        }
+        eprintln!("psf serve: drained — {}", record.to_json());
+        Ok(())
+    }
+
+    /// Stream one request out as chunked JSON lines (the connection
+    /// thread blocks in `drive` while tokens relay through it).
+    fn stream_response(&self, req: GenRequest, resp: &mut Responder<'_>) -> io::Result<()> {
+        resp.start_chunked(200, "application/json")?;
+        let mut io_err: Option<io::Error> = None;
+        self.drive(req, &mut |ev| {
+            if io_err.is_some() {
+                return; // client went away; let the drive finish quietly
+            }
+            let result = match ev {
+                ShardEvent::Token { token, text } => resp.chunk(&token_chunk(token, &text)),
+                ShardEvent::Done { stats, runner } => {
+                    resp.chunk(&done_chunk(&stats, &format!(",\"runner\":{runner}")))
+                }
+                ShardEvent::Failed { retriable, msg, runner } => resp.chunk(&format!(
+                    "{{\"error\":{},\"retriable\":{},\"runner\":{}}}\n",
+                    json_escape(&msg),
+                    retriable,
+                    runner.map_or("null".to_string(), |r| r.to_string()),
+                )),
+            };
+            if let Err(e) = result {
+                io_err = Some(e);
+            }
+        });
+        match io_err {
+            Some(e) => Err(e),
+            None => resp.finish(),
+        }
+    }
+}
+
+impl Handler for ShardGateway {
+    fn handle(&self, req: HttpRequest, resp: &mut Responder<'_>) -> io::Result<()> {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => {
+                let (total, healthy) = self.sup.health();
+                resp.simple(
+                    200,
+                    "application/json",
+                    &format!(
+                        "{{\"ok\":true,\"mech\":{},\"linear\":{},\"runners\":{},\
+                         \"healthy\":{},\"degraded\":{},\"respawns\":{}}}",
+                        json_escape(&self.mech.label()),
+                        self.mech.is_linear(),
+                        total,
+                        healthy,
+                        healthy < total,
+                        self.sup.respawn_count(),
+                    ),
+                )
+            }
+            ("GET", "/metrics") => resp.simple(200, "application/json", &self.metrics_json()),
+            ("POST", "/v1/generate") => {
+                let defaults = GenDefaults {
+                    default_max_tokens: self.cfg.default_max_tokens,
+                    max_tokens_cap: self.cfg.max_tokens_cap,
+                };
+                let gen_req = match parse_generate_body(&req.body_str(), &defaults) {
+                    Ok(r) => r,
+                    Err(msg) => {
+                        return resp.simple(
+                            400,
+                            "application/json",
+                            &format!("{{\"error\":{}}}", json_escape(&msg)),
+                        );
+                    }
+                };
+                if self.stop.load(Ordering::SeqCst) {
+                    self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                    return resp.simple(
+                        503,
+                        "application/json",
+                        "{\"error\":\"gateway is draining\"}",
+                    );
+                }
+                self.counters.admitted.fetch_add(1, Ordering::Relaxed);
+                self.stream_response(gen_req, resp)
+            }
+            (_, "/healthz" | "/metrics" | "/v1/generate") => {
+                resp.simple(405, "application/json", "{\"error\":\"method not allowed\"}")
+            }
+            _ => resp.simple(404, "application/json", "{\"error\":\"no such route\"}"),
+        }
+    }
+}

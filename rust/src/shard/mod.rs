@@ -1,0 +1,60 @@
+//! Multi-process sharded serving: a gateway process routing over
+//! model-runner worker processes, std-only (Unix sockets + threads).
+//!
+//! One `psf serve --runners N` invocation becomes N+1 processes: the
+//! gateway (HTTP front-end, supervisor, consistent-hash router) and N
+//! runners, each launched as the hidden `psf runner` subcommand of the
+//! same binary and owning either a full `NativeLm` replica
+//! (data-parallel, the default) or a contiguous head range of one model
+//! (`--tp`, head-sharded tensor parallelism over the strided head views
+//! the kernel core already exposes).
+//!
+//! The pieces, bottom-up:
+//!
+//! * [`proto`] — the versioned IPC frame codec: length-prefixed binary
+//!   frames (magic, version, kind, stream id, payload) plus the
+//!   payload codecs for requests, tokens, stats, and TP partials.
+//!   Version mismatch is a hard connection error by design: gateway
+//!   and runners ship in one binary, so disagreement means a stale
+//!   process, not a peer to negotiate with.
+//! * [`mux`] — stream multiplexing over one `UnixStream` per runner:
+//!   a reader thread routes frames to per-stream channels; peer death
+//!   is a *channel property* (every receiver disconnects at once), so
+//!   in-flight requests fail fast instead of timing out.
+//! * [`ring`] — consistent hashing (FNV-1a, 64 vnodes/runner) of the
+//!   prompt-cache key, so each runner's prompt cache stays hot and a
+//!   dead runner's keys move without reshuffling the rest.
+//! * [`runner`] — the worker process body: replicas serve `Generate`
+//!   through the same `serve::WorkerPool` continuous-batching path as
+//!   single-process serving; head shards run the lock-step TP loop.
+//! * [`supervisor`] — spawns runners, detects death (EOF, exit,
+//!   heartbeat staleness), respawns and rebalances; the gateway
+//!   degrades, it never dies with a runner.
+//! * [`tp`] — head-range session driver shared by the in-process
+//!   `LocalCombine` harness (tests) and the IPC combine path.
+//! * [`gateway`] — the HTTP front-end: same request language, chunk
+//!   format, and metrics shape as `serve::Gateway`, plus per-runner
+//!   attribution, `/healthz` degradation reporting, and crash-retry
+//!   error lines.
+//!
+//! Determinism contract, extended across process boundaries: a (seed,
+//! prompt, policy) triple yields the same token stream whether served
+//! by `psf serve` single-process, by any replica runner, or (world=1)
+//! by the TP path — `tests/integration_shard.rs` pins this against the
+//! in-process `DecodeSession` oracle.
+
+pub mod gateway;
+pub mod mux;
+pub mod proto;
+pub mod ring;
+pub mod runner;
+pub mod supervisor;
+pub mod tp;
+
+pub use gateway::{collect_shard_stream, ShardConfig, ShardEvent, ShardGateway, ShardReply};
+pub use mux::Mux;
+pub use proto::{Frame, FrameKind, Hello, ProtoError, VERSION};
+pub use ring::{hash_key, HashRing};
+pub use runner::{run_runner, RunnerConfig};
+pub use supervisor::{OpenStream, Supervisor, SupervisorConfig};
+pub use tp::{partition_heads, run_tp_session, LocalCombine, TpCombine, TpRun};

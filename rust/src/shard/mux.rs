@@ -1,0 +1,218 @@
+//! Stream multiplexer: many in-flight requests share one Unix-socket
+//! connection per runner.
+//!
+//! Both ends are symmetric: a dedicated reader thread decodes frames
+//! off the socket and dispatches each by stream id — registered streams
+//! get their own channel, everything else (new work, control traffic)
+//! lands on the connection's `inbound` channel.  Writes go through a
+//! mutex so concurrent senders cannot interleave frame bytes.
+//!
+//! Death is a channel property, not a status code: when the socket hits
+//! EOF or an I/O error, the reader thread drops every registered sender
+//! and the inbound sender, so every `Receiver` immediately observes
+//! `Disconnected`.  Callers therefore need no separate liveness poll on
+//! the happy path — a dead peer fails every pending `recv` at once,
+//! which is what gives in-flight requests their fail-fast retriable
+//! error when a runner is SIGKILLed mid-stream.
+//!
+//! Stream-id discipline: 0 is connection control (Hello/Ping/Pong/
+//! Shutdown); the gateway allocates ids >= 1 via [`Mux::open_stream`];
+//! runners only ever echo ids they were given, so the two sides cannot
+//! collide without a coordination handshake.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::Shutdown;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use super::proto::Frame;
+
+pub struct Mux {
+    writer: Mutex<UnixStream>,
+    /// Socket handle the reader owns a clone of; kept for shutdown.
+    sock: UnixStream,
+    streams: Mutex<HashMap<u64, Sender<Frame>>>,
+    alive: Arc<AtomicBool>,
+    next_stream: AtomicU64,
+}
+
+impl Mux {
+    /// Wrap a connected socket.  Frames for unregistered stream ids are
+    /// sent to `inbound`; the sender is dropped when the connection dies
+    /// so the peer's death is visible as `inbound` disconnecting.
+    pub fn start(conn: UnixStream, inbound: Sender<Frame>) -> io::Result<Arc<Mux>> {
+        let reader_half = conn.try_clone()?;
+        let writer_half = conn.try_clone()?;
+        let mux = Arc::new(Mux {
+            writer: Mutex::new(writer_half),
+            sock: conn,
+            streams: Mutex::new(HashMap::new()),
+            alive: Arc::new(AtomicBool::new(true)),
+            next_stream: AtomicU64::new(1),
+        });
+        let m = Arc::clone(&mux);
+        thread::Builder::new()
+            .name("shard-mux-reader".into())
+            .spawn(move || m.reader_loop(reader_half, inbound))
+            .map_err(|e| io::Error::new(io::ErrorKind::Other, e))?;
+        Ok(mux)
+    }
+
+    fn reader_loop(&self, mut sock: UnixStream, inbound: Sender<Frame>) {
+        loop {
+            match Frame::read_from(&mut sock) {
+                Ok(Some(frame)) => {
+                    let target = self.streams.lock().unwrap().get(&frame.stream).cloned();
+                    match target {
+                        // A consumer that already hung up is not a
+                        // connection error — just drop the frame.
+                        Some(tx) => drop(tx.send(frame)),
+                        None => {
+                            if inbound.send(frame).is_err() {
+                                break; // connection owner went away
+                            }
+                        }
+                    }
+                }
+                Ok(None) | Err(_) => break, // EOF or poisoned wire: connection is dead
+            }
+        }
+        self.alive.store(false, Ordering::SeqCst);
+        // Dropping every sender turns peer death into `Disconnected` on
+        // all pending receivers at once.
+        self.streams.lock().unwrap().clear();
+        drop(inbound);
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Send one frame; serialized against other senders.
+    pub fn send(&self, frame: &Frame) -> io::Result<()> {
+        if !self.is_alive() {
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "mux connection is dead"));
+        }
+        let mut w = self.writer.lock().unwrap();
+        frame.write_to(&mut *w)
+    }
+
+    /// Allocate a fresh stream id and register a receiver for it.
+    pub fn open_stream(&self) -> (u64, Receiver<Frame>) {
+        let id = self.next_stream.fetch_add(1, Ordering::SeqCst);
+        (id, self.register_stream(id))
+    }
+
+    /// Register a receiver for frames addressed to `id` (used by the
+    /// runner side, which echoes gateway-assigned ids).
+    pub fn register_stream(&self, id: u64) -> Receiver<Frame> {
+        let (tx, rx) = channel();
+        let stale = {
+            let mut streams = self.streams.lock().unwrap();
+            let stale = streams.insert(id, tx);
+            // Registering against a dead connection must still yield a
+            // receiver that reports Disconnected immediately.
+            if !self.is_alive() {
+                streams.clear();
+            }
+            stale
+        };
+        drop(stale);
+        rx
+    }
+
+    pub fn close_stream(&self, id: u64) {
+        self.streams.lock().unwrap().remove(&id);
+    }
+
+    /// Tear the connection down: the reader thread unblocks and marks
+    /// the mux dead, cascading `Disconnected` to every receiver.
+    pub fn shutdown(&self) {
+        self.alive.store(false, Ordering::SeqCst);
+        let _ = self.sock.shutdown(Shutdown::Both);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::proto::{encode_token, FrameKind};
+    use super::*;
+    use std::time::Duration;
+
+    fn pair() -> ((Arc<Mux>, Receiver<Frame>), (Arc<Mux>, Receiver<Frame>)) {
+        let (a, b) = UnixStream::pair().unwrap();
+        let (atx, arx) = channel();
+        let (btx, brx) = channel();
+        ((Mux::start(a, atx).unwrap(), arx), (Mux::start(b, btx).unwrap(), brx))
+    }
+
+    #[test]
+    fn frames_route_by_stream_id() {
+        let ((gw, _gw_in), (rn, rn_in)) = pair();
+        let (s1, rx1) = gw.open_stream();
+        let (s2, rx2) = gw.open_stream();
+        assert_ne!(s1, s2);
+        // Unregistered ids land on the peer's inbound channel.
+        gw.send(&Frame::new(FrameKind::Generate, s1, vec![1])).unwrap();
+        gw.send(&Frame::new(FrameKind::Generate, s2, vec![2])).unwrap();
+        let f1 = rn_in.recv_timeout(Duration::from_secs(5)).unwrap();
+        let f2 = rn_in.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!((f1.stream, f1.payload.clone()), (s1, vec![1]));
+        assert_eq!((f2.stream, f2.payload.clone()), (s2, vec![2]));
+        // Replies tagged with the stream id come back on the right
+        // receiver, interleaved or not.
+        rn.send(&Frame::new(FrameKind::Token, s2, encode_token(7, "b"))).unwrap();
+        rn.send(&Frame::new(FrameKind::Token, s1, encode_token(3, "a"))).unwrap();
+        assert_eq!(rx1.recv_timeout(Duration::from_secs(5)).unwrap().stream, s1);
+        assert_eq!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().stream, s2);
+    }
+
+    #[test]
+    fn peer_death_disconnects_every_receiver() {
+        let ((gw, gw_in), (rn, _rn_in)) = pair();
+        let (_s1, rx1) = gw.open_stream();
+        let (_s2, rx2) = gw.open_stream();
+        rn.shutdown();
+        // Both per-stream receivers and the inbound channel observe the
+        // death without any frame ever arriving.
+        assert!(rx1.recv_timeout(Duration::from_secs(5)).is_err());
+        assert!(rx2.recv_timeout(Duration::from_secs(5)).is_err());
+        assert!(gw_in.recv_timeout(Duration::from_secs(5)).is_err());
+        assert!(!gw.is_alive() || {
+            // reader thread may still be between EOF and the flag store;
+            // give it a beat
+            std::thread::sleep(Duration::from_millis(200));
+            !gw.is_alive()
+        });
+        assert!(gw.send(&Frame::control(FrameKind::Ping)).is_err());
+    }
+
+    #[test]
+    fn concurrent_senders_do_not_interleave_frames() {
+        let ((gw, _gw_in), (_rn, rn_in)) = pair();
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let gw = Arc::clone(&gw);
+            handles.push(thread::spawn(move || {
+                for i in 0..50u32 {
+                    let payload = encode_token(i, &format!("t{t}"));
+                    gw.send(&Frame::new(FrameKind::Token, 100 + t, payload)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // All 200 frames decode cleanly — torn writes would poison the
+        // wire and kill the reader early.
+        for _ in 0..200 {
+            let f = rn_in.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(f.kind, FrameKind::Token);
+            assert!((100..104).contains(&f.stream));
+        }
+    }
+}

@@ -1,0 +1,658 @@
+//! Versioned length-prefixed frame codec — the wire format of the
+//! gateway <-> model-runner IPC layer.
+//!
+//! Every message on a runner connection is one [`Frame`]:
+//!
+//! ```text
+//!   magic   u32 LE   0x50534652 ("PSFR")
+//!   version u16 LE   protocol version (readers reject mismatches)
+//!   kind    u8       FrameKind discriminant
+//!   flags   u8       reserved, must be 0
+//!   stream  u64 LE   multiplexer stream id (0 = connection control)
+//!   len     u32 LE   payload length, <= MAX_PAYLOAD
+//!   payload [u8; len]
+//! ```
+//!
+//! Versioning rules: the header layout above is frozen forever; any
+//! change to a payload encoding or the kind set bumps [`VERSION`].  A
+//! reader that sees a different version fails the whole connection (the
+//! supervisor then treats the runner as incompatible) — there is no
+//! in-band negotiation, because gateway and runners ship in one binary
+//! and can only disagree across an in-place upgrade, where tearing the
+//! connection down is the correct behavior.
+//!
+//! Payloads are binary (little-endian, length-prefixed slices) rather
+//! than JSON: token streams are hot-path traffic and the serving JSON
+//! substrate (`serve::http`) is deliberately flat-objects-only.
+//! Round-trip + corruption behavior is pinned by `tests/properties.rs`.
+
+use std::io::{self, Read, Write};
+
+use crate::infer::sampler::SamplePolicy;
+use crate::infer::session::GenRequest;
+use crate::serve::worker::RequestStats;
+
+/// Frame magic: "PSFR" interpreted as a little-endian u32.
+pub const MAGIC: u32 = 0x5053_4652;
+/// Protocol version; bump on any payload/kind change.
+pub const VERSION: u16 = 1;
+/// Hard payload ceiling: large enough for a long prefill's combined
+/// activation matrix, small enough that a corrupt length field cannot
+/// ask the reader to allocate gigabytes.
+pub const MAX_PAYLOAD: u32 = 16 << 20;
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 20;
+
+/// Message discriminants.  Stream 0 carries connection control
+/// (`Hello`/`Ping`/`Pong`/`Shutdown`); every request opens its own
+/// stream id for the remaining kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// runner -> gateway, once, on connect: identity + shard info.
+    Hello = 0,
+    /// gateway -> runner: serve one generation request on this stream.
+    Generate = 1,
+    /// runner -> gateway: one generated token.
+    Token = 2,
+    /// runner -> gateway: terminal accounting for the stream.
+    Done = 3,
+    /// runner -> gateway: terminal failure for the stream.
+    Error = 4,
+    /// gateway -> runner heartbeat probe.
+    Ping = 5,
+    /// runner -> gateway heartbeat answer.
+    Pong = 6,
+    /// gateway -> runner: report serve counters on this stream.
+    MetricsReq = 7,
+    /// runner -> gateway: counters as a JSON object string.
+    MetricsReply = 8,
+    /// gateway -> runner: drain and exit.
+    Shutdown = 9,
+    /// gateway -> runner: abandon the request on this stream.
+    Cancel = 10,
+    /// gateway -> runner: serve a head-sharded (tensor-parallel) request.
+    TpGenerate = 11,
+    /// runner -> gateway: this shard's partial attention output.
+    TpPartial = 12,
+    /// gateway -> runner: the world-summed attention output.
+    TpCombined = 13,
+}
+
+impl FrameKind {
+    pub fn from_u8(b: u8) -> Option<FrameKind> {
+        use FrameKind::*;
+        Some(match b {
+            0 => Hello,
+            1 => Generate,
+            2 => Token,
+            3 => Done,
+            4 => Error,
+            5 => Ping,
+            6 => Pong,
+            7 => MetricsReq,
+            8 => MetricsReply,
+            9 => Shutdown,
+            10 => Cancel,
+            11 => TpGenerate,
+            12 => TpPartial,
+            13 => TpCombined,
+            _ => return None,
+        })
+    }
+}
+
+/// Decode failures, each naming what the reader saw.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Fewer bytes than one complete frame.
+    Truncated,
+    BadMagic(u32),
+    VersionMismatch { got: u16, want: u16 },
+    Oversize { len: u32, max: u32 },
+    BadKind(u8),
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Truncated => write!(f, "truncated frame"),
+            ProtoError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            ProtoError::VersionMismatch { got, want } => {
+                write!(f, "protocol version mismatch: peer speaks v{got}, this binary v{want}")
+            }
+            ProtoError::Oversize { len, max } => {
+                write!(f, "frame payload {len} bytes exceeds the {max}-byte cap")
+            }
+            ProtoError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            ProtoError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+fn proto_io(e: ProtoError) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, e)
+}
+
+/// One wire message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    /// Multiplexer stream id (0 = connection control).
+    pub stream: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(kind: FrameKind, stream: u64, payload: Vec<u8>) -> Frame {
+        assert!(payload.len() as u64 <= MAX_PAYLOAD as u64, "payload over MAX_PAYLOAD");
+        Frame { kind, stream, payload }
+    }
+
+    /// Control-plane frame with no payload.
+    pub fn control(kind: FrameKind) -> Frame {
+        Frame::new(kind, 0, Vec::new())
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(HEADER_LEN + self.payload.len());
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.push(self.kind as u8);
+        buf.push(0); // flags, reserved
+        buf.extend_from_slice(&self.stream.to_le_bytes());
+        buf.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&self.payload);
+        buf
+    }
+
+    /// Decode one frame from the front of `buf`, returning it and the
+    /// number of bytes consumed.  Any strict prefix of a valid encoding
+    /// yields [`ProtoError::Truncated`].
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize), ProtoError> {
+        if buf.len() < HEADER_LEN {
+            return Err(ProtoError::Truncated);
+        }
+        let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            return Err(ProtoError::BadMagic(magic));
+        }
+        let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+        if version != VERSION {
+            return Err(ProtoError::VersionMismatch { got: version, want: VERSION });
+        }
+        let kind = FrameKind::from_u8(buf[6]).ok_or(ProtoError::BadKind(buf[6]))?;
+        let stream = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        let len = u32::from_le_bytes(buf[16..20].try_into().unwrap());
+        if len > MAX_PAYLOAD {
+            return Err(ProtoError::Oversize { len, max: MAX_PAYLOAD });
+        }
+        let total = HEADER_LEN + len as usize;
+        if buf.len() < total {
+            return Err(ProtoError::Truncated);
+        }
+        Ok((Frame { kind, stream, payload: buf[HEADER_LEN..total].to_vec() }, total))
+    }
+
+    /// Read one frame from a blocking reader.  `Ok(None)` is a clean EOF
+    /// at a frame boundary; mid-frame EOF and malformed headers surface
+    /// as `io::Error` (kind `UnexpectedEof` / `InvalidData`).
+    pub fn read_from(r: &mut impl Read) -> io::Result<Option<Frame>> {
+        let mut header = [0u8; HEADER_LEN];
+        if !read_exact_or_eof(r, &mut header)? {
+            return Ok(None);
+        }
+        let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            return Err(proto_io(ProtoError::BadMagic(magic)));
+        }
+        let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+        if version != VERSION {
+            return Err(proto_io(ProtoError::VersionMismatch { got: version, want: VERSION }));
+        }
+        let kind = FrameKind::from_u8(header[6]).ok_or_else(|| proto_io(ProtoError::BadKind(header[6])))?;
+        let stream = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        let len = u32::from_le_bytes(header[16..20].try_into().unwrap());
+        if len > MAX_PAYLOAD {
+            return Err(proto_io(ProtoError::Oversize { len, max: MAX_PAYLOAD }));
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload)?;
+        Ok(Some(Frame { kind, stream, payload }))
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> io::Result<()> {
+        w.write_all(&self.encode())
+    }
+}
+
+/// `read_exact` that distinguishes clean EOF before the first byte
+/// (`Ok(false)`) from EOF mid-buffer (`Err(UnexpectedEof)`).
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> io::Result<bool> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof mid-frame"));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+// ------------------------------------------------------- payload codecs
+
+/// Little-endian payload writer.
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> WireWriter {
+        WireWriter::default()
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        // Bit-exact: the determinism contract extends onto the wire.
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        self
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        self
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.bytes(v.as_bytes())
+    }
+
+    pub fn tokens(&mut self, v: &[u32]) -> &mut Self {
+        self.u32(v.len() as u32);
+        for &t in v {
+            self.buf.extend_from_slice(&t.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) -> &mut Self {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        self
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Little-endian payload reader; every getter fails cleanly on short or
+/// oversized input instead of panicking.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> WireReader<'a> {
+        WireReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.buf.len() - self.pos < n {
+            return Err(ProtoError::Malformed("payload too short"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, ProtoError> {
+        Ok(f32::from_bits(u32::from_le_bytes(self.take(4)?.try_into().unwrap())))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, ProtoError> {
+        Ok(f64::from_bits(u64::from_le_bytes(self.take(8)?.try_into().unwrap())))
+    }
+
+    /// Length-guarded slice count: a corrupt length cannot allocate more
+    /// than the remaining payload holds.
+    fn counted(&mut self, elem_bytes: usize) -> Result<usize, ProtoError> {
+        let n = self.u32()? as usize;
+        if n.checked_mul(elem_bytes).map_or(true, |b| b > self.buf.len() - self.pos) {
+            return Err(ProtoError::Malformed("length field exceeds payload"));
+        }
+        Ok(n)
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8], ProtoError> {
+        let n = self.counted(1)?;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String, ProtoError> {
+        let b = self.bytes()?;
+        String::from_utf8(b.to_vec()).map_err(|_| ProtoError::Malformed("invalid utf-8 string"))
+    }
+
+    pub fn tokens(&mut self) -> Result<Vec<u32>, ProtoError> {
+        let n = self.counted(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, ProtoError> {
+        let n = self.counted(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn finish(self) -> Result<(), ProtoError> {
+        if self.pos != self.buf.len() {
+            return Err(ProtoError::Malformed("trailing bytes"));
+        }
+        Ok(())
+    }
+}
+
+/// Runner identity announced on connect.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub runner_id: u32,
+    pub mech: String,
+    /// Head range this runner computes: `[head_start, head_end)`.
+    /// The full range marks a data-parallel replica.
+    pub head_start: u32,
+    pub head_end: u32,
+}
+
+pub fn encode_hello(h: &Hello) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u32(h.runner_id).str(&h.mech).u32(h.head_start).u32(h.head_end);
+    w.finish()
+}
+
+pub fn decode_hello(b: &[u8]) -> Result<Hello, ProtoError> {
+    let mut r = WireReader::new(b);
+    let h = Hello {
+        runner_id: r.u32()?,
+        mech: r.str()?,
+        head_start: r.u32()?,
+        head_end: r.u32()?,
+    };
+    r.finish()?;
+    Ok(h)
+}
+
+fn policy_code(p: &SamplePolicy) -> (u8, f32, u64, f32) {
+    match p {
+        SamplePolicy::Greedy => (0, 0.0, 0, 0.0),
+        SamplePolicy::Temperature(t) => (1, *t, 0, 0.0),
+        SamplePolicy::TopK { k, temperature } => (2, *temperature, *k as u64, 0.0),
+        SamplePolicy::TopP { p, temperature } => (3, *temperature, 0, *p),
+    }
+}
+
+pub fn encode_generate(req: &GenRequest) -> Vec<u8> {
+    let (tag, temp, k, p) = policy_code(&req.policy);
+    let mut w = WireWriter::new();
+    w.u64(req.seed)
+        .u64(req.max_new_tokens as u64)
+        .u8(tag)
+        .f32(temp)
+        .u64(k)
+        .f32(p)
+        .tokens(&req.prompt);
+    w.finish()
+}
+
+pub fn decode_generate(b: &[u8]) -> Result<GenRequest, ProtoError> {
+    let mut r = WireReader::new(b);
+    let seed = r.u64()?;
+    let max_new = r.u64()? as usize;
+    let tag = r.u8()?;
+    let temp = r.f32()?;
+    let k = r.u64()? as usize;
+    let p = r.f32()?;
+    let prompt = r.tokens()?;
+    r.finish()?;
+    let policy = match tag {
+        0 => SamplePolicy::Greedy,
+        1 => SamplePolicy::Temperature(temp),
+        2 => SamplePolicy::TopK { k, temperature: temp },
+        3 => SamplePolicy::TopP { p, temperature: temp },
+        _ => return Err(ProtoError::Malformed("unknown sampling policy tag")),
+    };
+    Ok(GenRequest { prompt, max_new_tokens: max_new, policy, seed })
+}
+
+pub fn encode_token(token: u32, text: &str) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u32(token).str(text);
+    w.finish()
+}
+
+pub fn decode_token(b: &[u8]) -> Result<(u32, String), ProtoError> {
+    let mut r = WireReader::new(b);
+    let t = r.u32()?;
+    let s = r.str()?;
+    r.finish()?;
+    Ok((t, s))
+}
+
+pub fn encode_done(s: &RequestStats) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u64(s.id)
+        .u64(s.prompt_len as u64)
+        .u64(s.new_tokens as u64)
+        .u8(s.cache_hit as u8)
+        .f64(s.ttft_secs)
+        .f64(s.prefill_secs)
+        .f64(s.decode_secs)
+        .f64(s.wall_secs)
+        .tokens(&s.generated);
+    w.finish()
+}
+
+pub fn decode_done(b: &[u8]) -> Result<RequestStats, ProtoError> {
+    let mut r = WireReader::new(b);
+    let s = RequestStats {
+        id: r.u64()?,
+        prompt_len: r.u64()? as usize,
+        new_tokens: r.u64()? as usize,
+        cache_hit: r.u8()? != 0,
+        ttft_secs: r.f64()?,
+        prefill_secs: r.f64()?,
+        decode_secs: r.f64()?,
+        wall_secs: r.f64()?,
+        generated: r.tokens()?,
+    };
+    r.finish()?;
+    Ok(s)
+}
+
+pub fn encode_error(retriable: bool, msg: &str) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u8(retriable as u8).str(msg);
+    w.finish()
+}
+
+pub fn decode_error(b: &[u8]) -> Result<(bool, String), ProtoError> {
+    let mut r = WireReader::new(b);
+    let retriable = r.u8()? != 0;
+    let msg = r.str()?;
+    r.finish()?;
+    Ok((retriable, msg))
+}
+
+/// TP activation exchange: (layer index, row-major f32 data).  Used by
+/// both `TpPartial` and `TpCombined`.
+pub fn encode_tp_vec(layer: u32, data: &[f32]) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u32(layer).f32s(data);
+    w.finish()
+}
+
+pub fn decode_tp_vec(b: &[u8]) -> Result<(u32, Vec<f32>), ProtoError> {
+    let mut r = WireReader::new(b);
+    let layer = r.u32()?;
+    let data = r.f32s()?;
+    r.finish()?;
+    Ok((layer, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frame() -> Frame {
+        Frame::new(FrameKind::Generate, 7, encode_generate(&GenRequest {
+            prompt: vec![0, 5, 9, 200],
+            max_new_tokens: 12,
+            policy: SamplePolicy::TopP { p: 0.9, temperature: 0.7 },
+            seed: 42,
+        }))
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let f = sample_frame();
+        let bytes = f.encode();
+        let (g, used) = Frame::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(g, f);
+        let req = decode_generate(&g.payload).unwrap();
+        assert_eq!(req.prompt, vec![0, 5, 9, 200]);
+        assert_eq!(req.policy, SamplePolicy::TopP { p: 0.9, temperature: 0.7 });
+    }
+
+    #[test]
+    fn every_strict_prefix_is_truncated() {
+        let bytes = sample_frame().encode();
+        for cut in 0..bytes.len() {
+            assert_eq!(
+                Frame::decode(&bytes[..cut]).unwrap_err(),
+                ProtoError::Truncated,
+                "prefix of {cut} bytes"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_headers_are_rejected() {
+        let good = sample_frame().encode();
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xff;
+        assert!(matches!(Frame::decode(&bad_magic), Err(ProtoError::BadMagic(_))));
+        let mut bad_version = good.clone();
+        bad_version[4] = 0xfe;
+        assert!(matches!(
+            Frame::decode(&bad_version),
+            Err(ProtoError::VersionMismatch { got: 0xfe, want: VERSION })
+        ));
+        let mut bad_kind = good.clone();
+        bad_kind[6] = 0x7f;
+        assert!(matches!(Frame::decode(&bad_kind), Err(ProtoError::BadKind(0x7f))));
+        let mut oversize = good;
+        oversize[16..20].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(Frame::decode(&oversize), Err(ProtoError::Oversize { .. })));
+    }
+
+    #[test]
+    fn read_from_stream_and_clean_eof() {
+        let a = Frame::control(FrameKind::Ping);
+        let b = Frame::new(FrameKind::Token, 3, encode_token(17, "q"));
+        let mut wire = a.encode();
+        wire.extend_from_slice(&b.encode());
+        let mut cursor = std::io::Cursor::new(wire);
+        assert_eq!(Frame::read_from(&mut cursor).unwrap().unwrap(), a);
+        assert_eq!(Frame::read_from(&mut cursor).unwrap().unwrap(), b);
+        assert!(Frame::read_from(&mut cursor).unwrap().is_none(), "clean EOF");
+        // EOF mid-frame is an error, not a silent None.
+        let mut partial = std::io::Cursor::new(a.encode()[..HEADER_LEN - 3].to_vec());
+        assert!(Frame::read_from(&mut partial).is_err());
+    }
+
+    #[test]
+    fn stats_and_error_payloads_roundtrip() {
+        let s = RequestStats {
+            id: 9,
+            prompt_len: 4,
+            new_tokens: 3,
+            cache_hit: true,
+            ttft_secs: 0.5,
+            prefill_secs: 0.25,
+            decode_secs: 0.125,
+            wall_secs: 1.0,
+            generated: vec![1, 2, 3],
+        };
+        let d = decode_done(&encode_done(&s)).unwrap();
+        assert_eq!(d.id, 9);
+        assert_eq!(d.generated, vec![1, 2, 3]);
+        assert!(d.cache_hit);
+        let (retriable, msg) = decode_error(&encode_error(true, "runner died")).unwrap();
+        assert!(retriable);
+        assert_eq!(msg, "runner died");
+        let h = Hello { runner_id: 2, mech: "psk4_r4_b8_local".into(), head_start: 0, head_end: 4 };
+        assert_eq!(decode_hello(&encode_hello(&h)).unwrap(), h);
+        let (layer, data) = decode_tp_vec(&encode_tp_vec(5, &[1.0, -2.5])).unwrap();
+        assert_eq!(layer, 5);
+        assert_eq!(data, vec![1.0, -2.5]);
+    }
+
+    #[test]
+    fn malformed_payloads_fail_cleanly() {
+        assert!(decode_generate(&[1, 2, 3]).is_err());
+        // A length field larger than the remaining payload must not
+        // allocate or panic.
+        let mut w = WireWriter::new();
+        w.u32(u32::MAX);
+        assert!(WireReader::new(&w.finish()).tokens().is_err());
+        // Trailing garbage is rejected.
+        let mut ok = encode_token(5, "x");
+        ok.push(0);
+        assert!(decode_token(&ok).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Consistent-hash ring routing requests to runners.
+//!
+//! Routing key = the prompt-cache key (mech label + prompt tokens), so a
+//! repeated prompt always lands on the runner whose `serve::cache`
+//! already holds its prefix snapshot.  Consistent hashing (rather than
+//! `hash % runners`) means removing a crashed runner only remaps the
+//! keys that lived on it — every other runner's cache stays hot, which
+//! is the whole point of sharding the keyspace.
+//!
+//! Each runner owns [`VNODES`] virtual points on a `u64` ring; a key
+//! routes to the first point clockwise from its hash.  Rebalance
+//! stability is pinned by a property test in `tests/properties.rs`.
+
+use std::collections::BTreeMap;
+
+/// Virtual points per runner: enough to keep the keyspace split within a
+/// few percent of even for single-digit runner counts.
+pub const VNODES: u32 = 64;
+
+/// FNV-1a, 64-bit.  Stable across platforms and releases — ring layout
+/// is part of the cache-locality contract, so no `DefaultHasher`.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Hash of a prompt-cache key: mech label, a separator that cannot occur
+/// in a label, then the token ids little-endian.
+pub fn hash_key(mech: &str, prompt: &[u32]) -> u64 {
+    let mut buf = Vec::with_capacity(mech.len() + 1 + prompt.len() * 4);
+    buf.extend_from_slice(mech.as_bytes());
+    buf.push(0xff);
+    for &t in prompt {
+        buf.extend_from_slice(&t.to_le_bytes());
+    }
+    fnv1a(&buf)
+}
+
+/// The ring: hash point -> runner id.
+#[derive(Clone, Debug, Default)]
+pub struct HashRing {
+    points: BTreeMap<u64, u32>,
+}
+
+impl HashRing {
+    pub fn new() -> HashRing {
+        HashRing::default()
+    }
+
+    fn vnode_hash(runner: u32, vnode: u32) -> u64 {
+        let mut buf = [0u8; 16];
+        buf[..4].copy_from_slice(&runner.to_le_bytes());
+        buf[4..8].copy_from_slice(&vnode.to_le_bytes());
+        buf[8..16].copy_from_slice(b"psf-ring");
+        fnv1a(&buf)
+    }
+
+    pub fn add(&mut self, runner: u32) {
+        for v in 0..VNODES {
+            self.points.insert(Self::vnode_hash(runner, v), runner);
+        }
+    }
+
+    pub fn remove(&mut self, runner: u32) {
+        for v in 0..VNODES {
+            let h = Self::vnode_hash(runner, v);
+            // Only remove a point we own: two runners' vnodes could in
+            // principle collide, and the survivor must keep its point.
+            if self.points.get(&h) == Some(&runner) {
+                self.points.remove(&h);
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn len_runners(&self) -> usize {
+        let mut ids: Vec<u32> = self.points.values().copied().collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+
+    /// First point clockwise from `hash`, wrapping at the top of the
+    /// keyspace.  `None` only when the ring is empty (all runners down).
+    pub fn route(&self, hash: u64) -> Option<u32> {
+        self.points
+            .range(hash..)
+            .next()
+            .or_else(|| self.points.iter().next())
+            .map(|(_, &r)| r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_spread_across_runners() {
+        let mut ring = HashRing::new();
+        for r in 0..4 {
+            ring.add(r);
+        }
+        let mut counts = [0usize; 4];
+        for i in 0..4000u32 {
+            let h = hash_key("psk4_r4_b8_local", &[i, i * 7 + 1]);
+            counts[ring.route(h).unwrap() as usize] += 1;
+        }
+        for (r, &c) in counts.iter().enumerate() {
+            assert!(c > 400, "runner {r} got only {c}/4000 keys — vnode spread too lumpy");
+        }
+    }
+
+    #[test]
+    fn removal_only_moves_victims_keys() {
+        let mut ring = HashRing::new();
+        for r in 0..3 {
+            ring.add(r);
+        }
+        let keys: Vec<u64> = (0..2000u32).map(|i| hash_key("softmax", &[i])).collect();
+        let before: Vec<u32> = keys.iter().map(|&h| ring.route(h).unwrap()).collect();
+        ring.remove(1);
+        for (&h, &owner) in keys.iter().zip(&before) {
+            let after = ring.route(h).unwrap();
+            if owner != 1 {
+                assert_eq!(after, owner, "key moved off a surviving runner");
+            } else {
+                assert_ne!(after, 1);
+            }
+        }
+        // Re-adding restores the exact original layout (vnode hashes are
+        // deterministic).
+        ring.add(1);
+        let restored: Vec<u32> = keys.iter().map(|&h| ring.route(h).unwrap()).collect();
+        assert_eq!(restored, before);
+    }
+
+    #[test]
+    fn empty_ring_routes_nowhere() {
+        let mut ring = HashRing::new();
+        assert!(ring.route(123).is_none());
+        ring.add(0);
+        assert_eq!(ring.route(123), Some(0));
+        ring.remove(0);
+        assert!(ring.route(123).is_none());
+    }
+}

@@ -1,0 +1,322 @@
+//! The model-runner process: one `NativeLm` (full replica or a head
+//! shard), a private prompt cache, and a `serve::WorkerPool`, driven
+//! entirely by frames from the gateway connection.
+//!
+//! A runner is launched by the supervisor as `psf runner --socket ...`
+//! (a hidden subcommand), connects back over the Unix socket, announces
+//! itself with a `Hello`, then serves multiplexed streams until the
+//! connection dies or a `Shutdown` frame arrives.  It never binds a
+//! port and never outlives its gateway: the gateway exiting closes the
+//! socket, the inbound channel disconnects, and the runner drains and
+//! exits — no orphan processes to reap.
+//!
+//! Two execution modes, chosen by the head range in [`RunnerConfig`]:
+//!
+//! * **replica** (full head range): `Generate` frames go through the
+//!   same `WorkerPool` continuous-batching path as single-process
+//!   serving, so a routed request is byte-identical to one served by
+//!   `psf serve` without `--runners`;
+//! * **head shard** (partial range): `TpGenerate` frames run the
+//!   lock-step [`run_tp_session`] loop, exchanging per-layer partials
+//!   with the gateway via `TpPartial`/`TpCombined` frames; the leader
+//!   shard (head 0) additionally owns the token stream.
+
+use std::collections::HashMap;
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::infer::{decode_text, NativeLm};
+use crate::metrics::ServeCounters;
+use crate::serve::cache::PromptCache;
+use crate::serve::worker::{RequestStats, ServeJob, TokenEvent, WorkerConfig, WorkerPool};
+
+use super::mux::Mux;
+use super::proto::{
+    decode_generate, encode_done, encode_error, encode_hello, encode_token, Frame, FrameKind,
+    Hello,
+};
+use super::tp::{run_tp_session, IpcCombine};
+
+/// How long a runner keeps retrying the supervisor's socket on startup.
+const CONNECT_WINDOW: Duration = Duration::from_secs(5);
+/// Ceiling on one TP combine round-trip before the shard gives up.
+const TP_COMBINE_TIMEOUT: Duration = Duration::from_secs(60);
+
+#[derive(Clone, Debug)]
+pub struct RunnerConfig {
+    /// Supervisor's listening socket to connect back to.
+    pub socket: PathBuf,
+    pub runner_id: u32,
+    pub worker: WorkerConfig,
+    /// Admission-queue cap for this runner's pool.
+    pub queue_cap: usize,
+    /// Prompt-prefix cache byte budget (per runner — each shard caches
+    /// only its keyslice, which is why routing keeps the slices stable).
+    pub cache_bytes: usize,
+    /// Head range `[head_start, head_end)` for TP mode; `head_end == 0`
+    /// means full replica.
+    pub head_start: usize,
+    pub head_end: usize,
+}
+
+/// Process body of `psf runner`.  Returns when the gateway shuts the
+/// connection down (or told us to), after draining in-flight work.
+pub fn run_runner(model: NativeLm, cfg: RunnerConfig) -> anyhow::Result<()> {
+    let heads = model.cfg.heads;
+    let (range, tp) = if cfg.head_end > cfg.head_start {
+        anyhow::ensure!(cfg.head_end <= heads, "head range end {} > {heads} heads", cfg.head_end);
+        let full = cfg.head_start == 0 && cfg.head_end == heads;
+        (cfg.head_start..cfg.head_end, !full)
+    } else {
+        (0..heads, false)
+    };
+
+    // The supervisor binds the listener before spawning us, but give the
+    // accept loop a grace window anyway.
+    let deadline = Instant::now() + CONNECT_WINDOW;
+    let conn = loop {
+        match UnixStream::connect(&cfg.socket) {
+            Ok(c) => break c,
+            Err(e) if Instant::now() < deadline => {
+                let _ = e;
+                thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("connecting to {}", cfg.socket.display()))
+            }
+        }
+    };
+
+    let (inbound_tx, inbound_rx) = channel();
+    let mux = Mux::start(conn, inbound_tx).context("starting runner mux")?;
+    let hello = Hello {
+        runner_id: cfg.runner_id,
+        mech: model.mech.label(),
+        head_start: range.start as u32,
+        head_end: range.end as u32,
+    };
+    mux.send(&Frame::new(FrameKind::Hello, 0, encode_hello(&hello)))
+        .context("sending hello")?;
+    eprintln!(
+        "psf runner {}: connected (mech {}, heads {}..{}{})",
+        cfg.runner_id,
+        hello.mech,
+        range.start,
+        range.end,
+        if tp { ", tensor-parallel" } else { "" },
+    );
+
+    let model = Arc::new(model);
+    let cache = Arc::new(PromptCache::new(cfg.cache_bytes));
+    let counters = Arc::new(ServeCounters::new());
+    // TP shards run requests lock-step on dedicated threads; only
+    // replicas need the continuous-batching pool.
+    let pool = if tp {
+        None
+    } else {
+        Some(WorkerPool::new(
+            Arc::clone(&model),
+            Arc::clone(&cache),
+            Arc::clone(&counters),
+            cfg.worker.clone(),
+        ))
+    };
+    let cancels: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>> = Arc::new(Mutex::new(HashMap::new()));
+
+    while let Ok(frame) = inbound_rx.recv() {
+        match frame.kind {
+            FrameKind::Generate => {
+                let stream = frame.stream;
+                let req = match decode_generate(&frame.payload) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let _ = mux.send(&Frame::new(
+                            FrameKind::Error,
+                            stream,
+                            encode_error(false, &format!("bad generate payload: {e}")),
+                        ));
+                        continue;
+                    }
+                };
+                let pool = match pool.as_ref() {
+                    Some(p) => p,
+                    None => {
+                        let _ = mux.send(&Frame::new(
+                            FrameKind::Error,
+                            stream,
+                            encode_error(false, "head-shard runner cannot serve Generate"),
+                        ));
+                        continue;
+                    }
+                };
+                let (tx, rx) = channel();
+                let job = ServeJob { id: stream, req, events: tx, queued: Instant::now() };
+                match pool.try_submit(job, cfg.queue_cap) {
+                    Ok(()) => {
+                        counters.admitted.fetch_add(1, Ordering::Relaxed);
+                        let flag = Arc::new(AtomicBool::new(false));
+                        cancels.lock().unwrap().insert(stream, Arc::clone(&flag));
+                        let mux = Arc::clone(&mux);
+                        let cancels = Arc::clone(&cancels);
+                        thread::spawn(move || {
+                            for ev in rx.iter() {
+                                // Dropping `rx` mid-stream is how the pool
+                                // learns the request is cancelled.
+                                if flag.load(Ordering::Relaxed) {
+                                    break;
+                                }
+                                let out = match ev {
+                                    TokenEvent::Token { token, text } => Frame::new(
+                                        FrameKind::Token,
+                                        stream,
+                                        encode_token(token, &text),
+                                    ),
+                                    TokenEvent::Done(stats) => {
+                                        Frame::new(FrameKind::Done, stream, encode_done(&stats))
+                                    }
+                                };
+                                if mux.send(&out).is_err() {
+                                    break;
+                                }
+                            }
+                            cancels.lock().unwrap().remove(&stream);
+                        });
+                    }
+                    Err(_job) => {
+                        counters.rejected.fetch_add(1, Ordering::Relaxed);
+                        let _ = mux.send(&Frame::new(
+                            FrameKind::Error,
+                            stream,
+                            encode_error(true, "runner admission queue full, retry later"),
+                        ));
+                    }
+                }
+            }
+            FrameKind::TpGenerate => {
+                let stream = frame.stream;
+                let req = match decode_generate(&frame.payload) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let _ = mux.send(&Frame::new(
+                            FrameKind::Error,
+                            stream,
+                            encode_error(false, &format!("bad generate payload: {e}")),
+                        ));
+                        continue;
+                    }
+                };
+                // Register before the first TpPartial goes out: the
+                // gateway only addresses this stream in response.
+                let rx = mux.register_stream(stream);
+                let mux = Arc::clone(&mux);
+                let model = Arc::clone(&model);
+                let range = range.clone();
+                let counters = Arc::clone(&counters);
+                thread::spawn(move || {
+                    let leader = range.start == 0;
+                    let t0 = Instant::now();
+                    let mut combine =
+                        IpcCombine { mux: &mux, rx: &rx, stream, timeout: TP_COMBINE_TIMEOUT };
+                    let mut on_token = |tok: u32| -> anyhow::Result<()> {
+                        if leader {
+                            mux.send(&Frame::new(
+                                FrameKind::Token,
+                                stream,
+                                encode_token(tok, &decode_text(&[tok])),
+                            ))?;
+                        }
+                        Ok(())
+                    };
+                    match run_tp_session(&model, range, &req, &mut combine, &mut on_token) {
+                        Ok(run) => {
+                            counters.completed.fetch_add(1, Ordering::Relaxed);
+                            counters
+                                .tokens_generated
+                                .fetch_add(run.generated.len() as u64, Ordering::Relaxed);
+                            if leader {
+                                let stats = RequestStats {
+                                    id: stream,
+                                    prompt_len: run.prompt_len,
+                                    new_tokens: run.generated.len(),
+                                    cache_hit: false,
+                                    ttft_secs: run.ttft_secs,
+                                    prefill_secs: run.prefill_secs,
+                                    decode_secs: run.decode_secs,
+                                    wall_secs: t0.elapsed().as_secs_f64(),
+                                    generated: run.generated,
+                                };
+                                let _ = mux.send(&Frame::new(
+                                    FrameKind::Done,
+                                    stream,
+                                    encode_done(&stats),
+                                ));
+                            }
+                        }
+                        Err(e) => {
+                            let _ = mux.send(&Frame::new(
+                                FrameKind::Error,
+                                stream,
+                                encode_error(true, &e.to_string()),
+                            ));
+                        }
+                    }
+                    mux.close_stream(stream);
+                });
+            }
+            FrameKind::Ping => {
+                let _ = mux.send(&Frame::control(FrameKind::Pong));
+            }
+            FrameKind::Cancel => {
+                if let Some(flag) = cancels.lock().unwrap().get(&frame.stream) {
+                    flag.store(true, Ordering::Relaxed);
+                }
+            }
+            FrameKind::MetricsReq => {
+                let json = metrics_json(&cfg, &counters, &cache, pool.as_ref());
+                let _ = mux.send(&Frame::new(
+                    FrameKind::MetricsReply,
+                    frame.stream,
+                    json.into_bytes(),
+                ));
+            }
+            FrameKind::Shutdown => break,
+            // Hello/Token/Done/Error/Pong/Tp* are things *we* send (or
+            // gateway-side answers to registered streams) — ignore.
+            _ => {}
+        }
+    }
+
+    if let Some(pool) = pool {
+        pool.drain();
+    }
+    eprintln!("psf runner {}: drained, exiting", cfg.runner_id);
+    Ok(())
+}
+
+/// Runner-local serve counters as a JSON object (a `serve_metrics`
+/// record plus runner identity and pool gauges) — the payload of
+/// `MetricsReply`, spliced verbatim into the gateway's `/metrics`.
+fn metrics_json(
+    cfg: &RunnerConfig,
+    counters: &ServeCounters,
+    cache: &PromptCache,
+    pool: Option<&WorkerPool>,
+) -> String {
+    let stats = cache.stats();
+    counters.cache_bytes.store(stats.bytes as u64, Ordering::Relaxed);
+    counters
+        .record()
+        .i64("runner_id", cfg.runner_id as i64)
+        .i64("cache_entries", stats.entries as i64)
+        .i64("cache_evictions", stats.evictions as i64)
+        .i64("queue_depth", pool.map_or(0, |p| p.queued()) as i64)
+        .i64("resident", pool.map_or(0, |p| p.resident()) as i64)
+        .to_json()
+}

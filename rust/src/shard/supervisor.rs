@@ -1,0 +1,481 @@
+//! Runner process supervision: spawn, monitor, respawn, never die.
+//!
+//! The supervisor owns N slots, one per runner process.  Each slot
+//! holds the child handle, the mux over its Unix-socket connection, and
+//! its health state.  A monitor thread heartbeats every slot
+//! ([`SupervisorConfig::heartbeat_ms`]): any inbound frame refreshes
+//! `last_seen`, a `Ping` goes out each tick, and a runner is declared
+//! dead when its process has exited, its connection hit EOF, or its
+//! silence exceeds the staleness window.  Death is graceful
+//! degradation, not gateway death:
+//!
+//! ```text
+//!   healthy --(EOF | exit | stale)--> dead: ring.remove(id),
+//!       mux torn down (=> every in-flight stream on it disconnects,
+//!       the gateway answers those requests with a retriable error)
+//!   dead --(respawn ok: fresh socket, Hello)--> healthy: ring.add(id)
+//!   dead --(respawn fails)--> dead (retried next tick; the gateway
+//!       keeps serving on the surviving runners)
+//! ```
+//!
+//! Respawned replicas rebuild from the same model args (checkpoint or
+//! config+seed) the originals got, so a retried request is byte-identical
+//! to what the dead runner would have produced — determinism makes crash
+//! recovery invisible to clients beyond the one retriable error.
+
+use std::os::unix::net::UnixListener;
+use std::path::PathBuf;
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context};
+
+use super::mux::Mux;
+use super::proto::{decode_hello, encode_generate, Frame, FrameKind};
+use super::ring::HashRing;
+use super::tp::partition_heads;
+use crate::infer::GenRequest;
+
+#[derive(Clone, Debug)]
+pub struct SupervisorConfig {
+    pub runners: usize,
+    /// Binary to exec for runners; the gateway's own executable in
+    /// production (`psf runner` is a hidden subcommand), overridden by
+    /// tests/benches with `env!("CARGO_BIN_EXE_psf")`.
+    pub runner_exe: PathBuf,
+    /// Model flags forwarded verbatim to every runner (`--checkpoint p`
+    /// or `--mech m --d-model d ...`) — identical args + identical seed
+    /// is what makes replicas and respawns byte-equivalent.
+    pub model_args: Vec<String>,
+    pub runner_workers: usize,
+    pub slice_tokens: usize,
+    pub max_resident: usize,
+    pub queue_cap: usize,
+    pub cache_mb: usize,
+    /// Exec-pool threads per runner; 0 lets `psf runner` auto-size.
+    pub threads_per_runner: usize,
+    pub heartbeat_ms: u64,
+    pub connect_timeout_ms: u64,
+    /// Head-sharded tensor parallelism instead of data-parallel replicas.
+    pub tp: bool,
+    /// Model head count (needed to partition in TP mode).
+    pub heads: usize,
+    pub socket_dir: PathBuf,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            runners: 2,
+            runner_exe: std::env::current_exe().unwrap_or_else(|_| PathBuf::from("psf")),
+            model_args: Vec::new(),
+            runner_workers: 2,
+            slice_tokens: 4,
+            max_resident: 8,
+            queue_cap: 64,
+            cache_mb: 64,
+            threads_per_runner: 0,
+            heartbeat_ms: 500,
+            connect_timeout_ms: 30_000,
+            tp: false,
+            heads: 0,
+            socket_dir: std::env::temp_dir(),
+        }
+    }
+}
+
+struct Slot {
+    id: u32,
+    head_start: usize,
+    head_end: usize,
+    socket: PathBuf,
+    child: Option<Child>,
+    mux: Option<Arc<Mux>>,
+    inbound: Option<Receiver<Frame>>,
+    healthy: bool,
+    last_seen: Instant,
+    respawns: u64,
+}
+
+/// An open request stream on a runner connection: receive frames from
+/// `rx`; drop closes the stream registration.
+pub struct OpenStream {
+    pub runner: u32,
+    pub stream: u64,
+    pub rx: Receiver<Frame>,
+    mux: Arc<Mux>,
+}
+
+impl OpenStream {
+    /// Ask the runner to abandon this request (best-effort).
+    pub fn cancel(&self) {
+        let _ = self.mux.send(&Frame::new(FrameKind::Cancel, self.stream, Vec::new()));
+    }
+
+    /// Send the gateway-side answer in a TP exchange.
+    pub fn send(&self, frame: &Frame) -> std::io::Result<()> {
+        self.mux.send(frame)
+    }
+}
+
+impl Drop for OpenStream {
+    fn drop(&mut self) {
+        self.mux.close_stream(self.stream);
+    }
+}
+
+pub struct Supervisor {
+    cfg: SupervisorConfig,
+    slots: Vec<Mutex<Slot>>,
+    ring: Mutex<HashRing>,
+    stop: Arc<AtomicBool>,
+    monitor: Mutex<Option<JoinHandle<()>>>,
+    respawn_total: AtomicU64,
+    ever_degraded: AtomicBool,
+}
+
+impl Supervisor {
+    /// Spawn every runner, wait for their Hellos, build the ring, and
+    /// start the monitor.  Startup is strict (any runner failing to come
+    /// up is an error); post-startup failures degrade instead.
+    pub fn start(cfg: SupervisorConfig) -> anyhow::Result<Arc<Supervisor>> {
+        anyhow::ensure!(cfg.runners > 0, "need at least one runner");
+        let ranges = if cfg.tp {
+            anyhow::ensure!(
+                cfg.heads >= cfg.runners,
+                "tensor parallelism needs heads >= runners ({} < {})",
+                cfg.heads,
+                cfg.runners
+            );
+            partition_heads(cfg.heads, cfg.runners)
+        } else {
+            (0..cfg.runners).map(|_| 0..0).collect()
+        };
+        let slots = ranges
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                Mutex::new(Slot {
+                    id: i as u32,
+                    head_start: r.start,
+                    head_end: r.end,
+                    socket: cfg
+                        .socket_dir
+                        .join(format!("psf-runner-{}-{i}.sock", std::process::id())),
+                    child: None,
+                    mux: None,
+                    inbound: None,
+                    healthy: false,
+                    last_seen: Instant::now(),
+                    respawns: 0,
+                })
+            })
+            .collect();
+        let sup = Arc::new(Supervisor {
+            cfg,
+            slots,
+            ring: Mutex::new(HashRing::new()),
+            stop: Arc::new(AtomicBool::new(false)),
+            monitor: Mutex::new(None),
+            respawn_total: AtomicU64::new(0),
+            ever_degraded: AtomicBool::new(false),
+        });
+        for slot in &sup.slots {
+            let mut slot = slot.lock().unwrap();
+            sup.spawn_slot(&mut slot)
+                .with_context(|| format!("starting runner {}", slot.id))?;
+            sup.ring.lock().unwrap().add(slot.id);
+        }
+        let m = Arc::clone(&sup);
+        let handle = thread::Builder::new()
+            .name("shard-supervisor".into())
+            .spawn(move || m.monitor_loop())?;
+        *sup.monitor.lock().unwrap() = Some(handle);
+        Ok(sup)
+    }
+
+    fn spawn_slot(&self, slot: &mut Slot) -> anyhow::Result<()> {
+        let _ = std::fs::remove_file(&slot.socket);
+        let listener = UnixListener::bind(&slot.socket)
+            .with_context(|| format!("binding {}", slot.socket.display()))?;
+        listener.set_nonblocking(true)?;
+        let mut cmd = Command::new(&self.cfg.runner_exe);
+        cmd.arg("runner")
+            .arg("--socket")
+            .arg(&slot.socket)
+            .args(["--id", &slot.id.to_string()])
+            .args(["--workers", &self.cfg.runner_workers.to_string()])
+            .args(["--slice", &self.cfg.slice_tokens.to_string()])
+            .args(["--resident", &self.cfg.max_resident.to_string()])
+            .args(["--queue-cap", &self.cfg.queue_cap.to_string()])
+            .args(["--cache-mb", &self.cfg.cache_mb.to_string()])
+            .args(["--threads", &self.cfg.threads_per_runner.to_string()])
+            .args(&self.cfg.model_args);
+        if slot.head_end > slot.head_start {
+            cmd.args(["--head-start", &slot.head_start.to_string()])
+                .args(["--head-end", &slot.head_end.to_string()]);
+        }
+        let mut child = cmd.spawn().context("spawning runner process")?;
+
+        // Nonblocking accept with a deadline: a runner that never
+        // connects must not wedge the supervisor.
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.connect_timeout_ms);
+        let conn = loop {
+            match listener.accept() {
+                Ok((conn, _)) => break conn,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if let Ok(Some(status)) = child.try_wait() {
+                        bail!("runner {} exited before connecting: {status}", slot.id);
+                    }
+                    if Instant::now() >= deadline {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        bail!("runner {} did not connect within timeout", slot.id);
+                    }
+                    thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return Err(e).context("accepting runner connection");
+                }
+            }
+        };
+        conn.set_nonblocking(false)?;
+        let (tx, rx) = channel();
+        let mux = Mux::start(conn, tx)?;
+
+        // First frame must be the Hello announcing identity.
+        let hello_deadline = Duration::from_millis(self.cfg.connect_timeout_ms);
+        let frame = rx
+            .recv_timeout(hello_deadline)
+            .map_err(|_| anyhow::anyhow!("runner {} sent no Hello", slot.id))?;
+        anyhow::ensure!(
+            frame.kind == FrameKind::Hello,
+            "runner {} opened with {:?}, expected Hello",
+            slot.id,
+            frame.kind
+        );
+        let hello = decode_hello(&frame.payload)?;
+        anyhow::ensure!(
+            hello.runner_id == slot.id,
+            "socket {} answered as runner {}, expected {}",
+            slot.socket.display(),
+            hello.runner_id,
+            slot.id
+        );
+
+        slot.child = Some(child);
+        slot.mux = Some(mux);
+        slot.inbound = Some(rx);
+        slot.healthy = true;
+        slot.last_seen = Instant::now();
+        Ok(())
+    }
+
+    fn staleness_window(&self) -> Duration {
+        Duration::from_millis((self.cfg.heartbeat_ms * 5).max(2_000))
+    }
+
+    fn monitor_loop(&self) {
+        while !self.stop.load(Ordering::SeqCst) {
+            thread::sleep(Duration::from_millis(self.cfg.heartbeat_ms));
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            for slot in &self.slots {
+                let mut slot = slot.lock().unwrap();
+                if !slot.healthy {
+                    if self.spawn_slot(&mut slot).is_ok() {
+                        self.ring.lock().unwrap().add(slot.id);
+                        slot.respawns += 1;
+                        self.respawn_total.fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "psf serve: runner {} respawned (respawn #{})",
+                            slot.id, slot.respawns
+                        );
+                    }
+                    continue;
+                }
+                // Any inbound traffic (Pong, stray frames for closed
+                // streams) counts as liveness.
+                let mut saw_traffic = false;
+                if let Some(rx) = slot.inbound.as_ref() {
+                    while rx.try_recv().is_ok() {
+                        saw_traffic = true;
+                    }
+                }
+                if saw_traffic {
+                    slot.last_seen = Instant::now();
+                }
+                let exited = slot
+                    .child
+                    .as_mut()
+                    .map_or(true, |c| matches!(c.try_wait(), Ok(Some(_)) | Err(_)));
+                let mux_dead = slot.mux.as_ref().map_or(true, |m| !m.is_alive());
+                let stale = slot.last_seen.elapsed() > self.staleness_window();
+                if exited || mux_dead || stale {
+                    self.mark_dead(&mut slot, if exited { "exited" } else if mux_dead { "connection lost" } else { "heartbeat stale" });
+                    continue;
+                }
+                if let Some(mux) = slot.mux.as_ref() {
+                    let _ = mux.send(&Frame::control(FrameKind::Ping));
+                }
+            }
+        }
+    }
+
+    fn mark_dead(&self, slot: &mut Slot, why: &str) {
+        eprintln!("psf serve: runner {} is down ({why}) — degraded, respawning", slot.id);
+        self.ever_degraded.store(true, Ordering::SeqCst);
+        slot.healthy = false;
+        self.ring.lock().unwrap().remove(slot.id);
+        if let Some(mux) = slot.mux.take() {
+            // Cascades Disconnected to every in-flight stream on this
+            // runner: the gateway answers them with a retriable error.
+            mux.shutdown();
+        }
+        slot.inbound = None;
+        if let Some(mut child) = slot.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+
+    // ------------------------------------------------------ gateway API
+
+    /// Route a cache-key hash to a healthy runner.
+    pub fn route(&self, hash: u64) -> Option<u32> {
+        self.ring.lock().unwrap().route(hash)
+    }
+
+    /// Open a request stream on `runner` and send the Generate frame.
+    pub fn open_generate(&self, runner: u32, req: &GenRequest) -> anyhow::Result<OpenStream> {
+        self.open_with(runner, FrameKind::Generate, req)
+    }
+
+    /// Open a TP request stream on every runner (slot order), sending
+    /// each the same request.  TP needs the full world, so any unhealthy
+    /// runner is an error.
+    pub fn tp_streams(&self, req: &GenRequest) -> anyhow::Result<Vec<OpenStream>> {
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(i, _)| self.open_with(i as u32, FrameKind::TpGenerate, req))
+            .collect()
+    }
+
+    fn open_with(&self, runner: u32, kind: FrameKind, req: &GenRequest) -> anyhow::Result<OpenStream> {
+        let slot = self.slots[runner as usize].lock().unwrap();
+        anyhow::ensure!(slot.healthy, "runner {runner} is down");
+        let mux = Arc::clone(slot.mux.as_ref().expect("healthy slot has a mux"));
+        drop(slot);
+        let (stream, rx) = mux.open_stream();
+        mux.send(&Frame::new(kind, stream, encode_generate(req)))
+            .with_context(|| format!("sending request to runner {runner}"))?;
+        Ok(OpenStream { runner, stream, rx, mux })
+    }
+
+    /// Ask `runner` for its serve counters (JSON object), bounded by
+    /// `timeout`.  `None` if the runner is down or slow.
+    pub fn fetch_runner_metrics(&self, runner: u32, timeout: Duration) -> Option<String> {
+        let mux = {
+            let slot = self.slots[runner as usize].lock().unwrap();
+            if !slot.healthy {
+                return None;
+            }
+            Arc::clone(slot.mux.as_ref()?)
+        };
+        let (stream, rx) = mux.open_stream();
+        if mux.send(&Frame::new(FrameKind::MetricsReq, stream, Vec::new())).is_err() {
+            mux.close_stream(stream);
+            return None;
+        }
+        let reply = rx.recv_timeout(timeout).ok();
+        mux.close_stream(stream);
+        match reply {
+            Some(f) if f.kind == FrameKind::MetricsReply => String::from_utf8(f.payload).ok(),
+            _ => None,
+        }
+    }
+
+    /// (total, healthy) runner counts.
+    pub fn health(&self) -> (usize, usize) {
+        let healthy =
+            self.slots.iter().filter(|s| s.lock().unwrap().healthy).count();
+        (self.slots.len(), healthy)
+    }
+
+    /// Per-runner (healthy, respawns) snapshot, slot order.
+    pub fn runner_states(&self) -> Vec<(bool, u64)> {
+        self.slots
+            .iter()
+            .map(|s| {
+                let s = s.lock().unwrap();
+                (s.healthy, s.respawns)
+            })
+            .collect()
+    }
+
+    pub fn respawn_count(&self) -> u64 {
+        self.respawn_total.load(Ordering::Relaxed)
+    }
+
+    pub fn was_ever_degraded(&self) -> bool {
+        self.ever_degraded.load(Ordering::SeqCst)
+    }
+
+    pub fn is_tp(&self) -> bool {
+        self.cfg.tp
+    }
+
+    pub fn runners(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// SIGKILL a runner process (crash-recovery tests and smokes; the
+    /// monitor detects and respawns it like any real crash).
+    pub fn kill_runner(&self, runner: u32) {
+        let mut slot = self.slots[runner as usize].lock().unwrap();
+        if let Some(child) = slot.child.as_mut() {
+            let _ = child.kill();
+        }
+    }
+
+    /// Stop the monitor, ask every runner to drain, and reap them
+    /// (5s of grace, then SIGKILL).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.monitor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        for slot in &self.slots {
+            let mut slot = slot.lock().unwrap();
+            if let Some(mux) = slot.mux.take() {
+                let _ = mux.send(&Frame::control(FrameKind::Shutdown));
+            }
+            if let Some(mut child) = slot.child.take() {
+                let deadline = Instant::now() + Duration::from_secs(5);
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            thread::sleep(Duration::from_millis(20));
+                        }
+                        _ => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+            let _ = std::fs::remove_file(&slot.socket);
+            slot.healthy = false;
+        }
+    }
+}

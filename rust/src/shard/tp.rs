@@ -1,0 +1,338 @@
+//! Head-sharded tensor parallelism: one model, its attention heads split
+//! across runners.
+//!
+//! Partition: each shard owns a contiguous head range of *every* layer
+//! ([`partition_heads`]) and computes only those heads' attention through
+//! `kernel::prefill_head_range` / the per-head `step` path
+//! (`NativeLm::{prefill_sharded, step_sharded}`).  Everything else —
+//! embeddings, layernorms, FFN, readout — is replicated bit-identically
+//! on every shard.  Per layer, each shard contributes a *partial*
+//! attention output (its head stripes of the masked concat times `wo`);
+//! a [`TpCombine`] implementation produces the world sum, which every
+//! shard adds into its replicated residual.
+//!
+//! Determinism: the world sum is always formed in shard-index order
+//! (f32 addition does not commute bitwise), and all shards receive the
+//! *same* summed bytes, so their residuals, logits, and sampled tokens
+//! are identical — any one shard (the leader, shard 0) can own the token
+//! stream.  A TP run is bitwise reproducible against itself and against
+//! [`LocalCombine`] (the in-process reference), but *not* against the
+//! unsharded model: splitting the `concat · wo` matmul reassociates the
+//! inner-product sums.  World size 1 *is* bitwise-identical to the
+//! unsharded path (one partial, identity sum) — pinned by tests.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context};
+
+use crate::infer::{GenRequest, NativeLm};
+use crate::util::rng::Pcg;
+
+use super::mux::Mux;
+use super::proto::{decode_tp_vec, encode_tp_vec, Frame, FrameKind};
+
+/// Contiguous near-equal head ranges: the first `heads % world` shards
+/// get one extra head.  Every range is non-empty, so `world` must not
+/// exceed `heads`.
+pub fn partition_heads(heads: usize, world: usize) -> Vec<Range<usize>> {
+    assert!(world > 0 && world <= heads, "world {world} must be in 1..={heads}");
+    let base = heads / world;
+    let extra = heads % world;
+    let mut ranges = Vec::with_capacity(world);
+    let mut start = 0;
+    for s in 0..world {
+        let len = base + usize::from(s < extra);
+        ranges.push(start..start + len);
+        start += len;
+    }
+    ranges
+}
+
+/// World-sum exchange for one shard's sequence of partial attention
+/// outputs.  Implementations must return the shard-index-ordered sum of
+/// all shards' partials for the same call position.
+pub trait TpCombine {
+    fn combine(&mut self, layer: usize, partial: Vec<f32>) -> anyhow::Result<Vec<f32>>;
+}
+
+/// Outcome of a sharded generation run (leader and followers compute
+/// identical values).
+pub struct TpRun {
+    pub generated: Vec<u32>,
+    pub prompt_len: usize,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub ttft_secs: f64,
+    pub last_logits: Vec<f32>,
+}
+
+/// Run one generation request on one shard, mirroring `DecodeSession`'s
+/// sample/step order exactly (sample from last logits, push, step even
+/// on the final token).  `on_token` fires per generated token — the
+/// leader streams from it; followers pass a no-op.
+pub fn run_tp_session(
+    model: &NativeLm,
+    range: Range<usize>,
+    req: &GenRequest,
+    combine: &mut dyn TpCombine,
+    on_token: &mut dyn FnMut(u32) -> anyhow::Result<()>,
+) -> anyhow::Result<TpRun> {
+    ensure!(!req.prompt.is_empty(), "prompt must contain at least BOS");
+    let mut states = model.new_states();
+    let mut cb = |li: usize, partial: Vec<f32>| combine.combine(li, partial);
+    let t0 = Instant::now();
+    let logits = model.prefill_sharded(&req.prompt, Some(&mut states), range.clone(), &mut cb)?;
+    let prefill_secs = t0.elapsed().as_secs_f64();
+    let mut last = logits.row(req.prompt.len() - 1).to_vec();
+    let mut rng = Pcg::seeded(req.seed);
+    let mut tokens = req.prompt.clone();
+    let mut generated = Vec::with_capacity(req.max_new_tokens);
+    let mut decode_secs = 0.0;
+    let mut ttft_secs = prefill_secs;
+    for i in 0..req.max_new_tokens {
+        let ts = Instant::now();
+        let tok = req.policy.sample(&last, &mut rng) as u32;
+        tokens.push(tok);
+        generated.push(tok);
+        if i == 0 {
+            ttft_secs = t0.elapsed().as_secs_f64();
+        }
+        on_token(tok)?;
+        let pos = tokens.len() - 1;
+        last = model.step_sharded(tok, pos, &mut states, range.clone(), &mut cb)?;
+        decode_secs += ts.elapsed().as_secs_f64();
+    }
+    Ok(TpRun {
+        generated,
+        prompt_len: req.prompt.len(),
+        prefill_secs,
+        decode_secs,
+        ttft_secs,
+        last_logits: last,
+    })
+}
+
+// ------------------------------------------------------- LocalCombine
+
+struct WorldState {
+    /// round -> per-shard partials collected so far.
+    pending: HashMap<u64, Vec<Option<Vec<f32>>>>,
+    /// round -> (world sum, shards that have consumed it).
+    results: HashMap<u64, (Arc<Vec<f32>>, usize)>,
+}
+
+struct WorldInner {
+    world: usize,
+    state: Mutex<WorldState>,
+    cv: Condvar,
+}
+
+/// In-process reference combiner: `world(n)` hands one handle per shard
+/// to `n` threads stepping the same request in lock-step.  Rounds are
+/// keyed by each handle's private call counter — all shards make the
+/// same sequence of combine calls, so counters align without any global
+/// barrier state to reset (a fast shard entering round `r+1` while a
+/// slow one is still summing round `r` just parks both rounds in the
+/// maps independently).
+pub struct LocalCombine {
+    inner: Arc<WorldInner>,
+    shard: usize,
+    round: u64,
+    /// Deadlock guard for tests: a peer that died mid-run would
+    /// otherwise park us on the condvar forever.
+    timeout: Duration,
+}
+
+impl LocalCombine {
+    pub fn world(n: usize) -> Vec<LocalCombine> {
+        assert!(n > 0);
+        let inner = Arc::new(WorldInner {
+            world: n,
+            state: Mutex::new(WorldState { pending: HashMap::new(), results: HashMap::new() }),
+            cv: Condvar::new(),
+        });
+        (0..n)
+            .map(|shard| LocalCombine {
+                inner: Arc::clone(&inner),
+                shard,
+                round: 0,
+                timeout: Duration::from_secs(60),
+            })
+            .collect()
+    }
+}
+
+impl TpCombine for LocalCombine {
+    fn combine(&mut self, _layer: usize, partial: Vec<f32>) -> anyhow::Result<Vec<f32>> {
+        let round = self.round;
+        self.round += 1;
+        let world = self.inner.world;
+        let mut st = self.inner.state.lock().unwrap();
+        {
+            let entry = st.pending.entry(round).or_insert_with(|| vec![None; world]);
+            ensure!(entry[self.shard].is_none(), "shard {} double-submitted round {round}", self.shard);
+            entry[self.shard] = Some(partial);
+        }
+        if st.pending[&round].iter().all(|p| p.is_some()) {
+            // Last arriver sums in shard-index order — the order every
+            // combiner implementation must honor.
+            let parts = st.pending.remove(&round).unwrap();
+            let mut iter = parts.into_iter().map(Option::unwrap);
+            let mut sum = iter.next().unwrap();
+            for p in iter {
+                ensure!(p.len() == sum.len(), "partial length mismatch in round {round}");
+                for (s, v) in sum.iter_mut().zip(&p) {
+                    *s += v;
+                }
+            }
+            st.results.insert(round, (Arc::new(sum), 0));
+            self.inner.cv.notify_all();
+        }
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            if let Some((sum, taken)) = st.results.get_mut(&round) {
+                let out = (**sum).clone();
+                *taken += 1;
+                if *taken == world {
+                    st.results.remove(&round);
+                }
+                return Ok(out);
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                bail!("LocalCombine timed out waiting for round {round}");
+            }
+            let (guard, _) = self.inner.cv.wait_timeout(st, left).unwrap();
+            st = guard;
+        }
+    }
+}
+
+// --------------------------------------------------------- IpcCombine
+
+/// Runner-side combiner over the gateway connection: sends this shard's
+/// partial as a `TpPartial` frame and blocks (bounded) for the
+/// gateway-summed `TpCombined` answer on the request's stream.
+pub struct IpcCombine<'a> {
+    pub mux: &'a Mux,
+    pub rx: &'a Receiver<Frame>,
+    pub stream: u64,
+    pub timeout: Duration,
+}
+
+impl TpCombine for IpcCombine<'_> {
+    fn combine(&mut self, layer: usize, partial: Vec<f32>) -> anyhow::Result<Vec<f32>> {
+        self.mux
+            .send(&Frame::new(FrameKind::TpPartial, self.stream, encode_tp_vec(layer as u32, &partial)))
+            .context("sending TpPartial")?;
+        let f = self
+            .rx
+            .recv_timeout(self.timeout)
+            .context("waiting for TpCombined (gateway gone?)")?;
+        match f.kind {
+            FrameKind::TpCombined => {
+                let (l, data) = decode_tp_vec(&f.payload)?;
+                ensure!(l as usize == layer, "TpCombined for layer {l}, expected {layer}");
+                Ok(data)
+            }
+            FrameKind::Cancel => bail!("request cancelled by gateway"),
+            other => bail!("unexpected {other:?} frame on TP stream"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::Mechanism;
+    use crate::infer::{DecodeSession, LmConfig, SamplePolicy};
+    use std::thread;
+
+    fn model() -> NativeLm {
+        let cfg = LmConfig { vocab: 64, d_model: 32, layers: 2, heads: 4, ff_mult: 2, seed: 3 };
+        NativeLm::new(cfg, Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true })
+    }
+
+    fn req() -> GenRequest {
+        GenRequest {
+            prompt: vec![0, 5, 9, 21, 2],
+            max_new_tokens: 8,
+            policy: SamplePolicy::TopP { p: 0.9, temperature: 0.8 },
+            seed: 99,
+        }
+    }
+
+    #[test]
+    fn partition_is_contiguous_and_covers() {
+        for heads in 1..=8 {
+            for world in 1..=heads {
+                let ranges = partition_heads(heads, world);
+                assert_eq!(ranges.len(), world);
+                assert_eq!(ranges[0].start, 0);
+                assert_eq!(ranges[world - 1].end, heads);
+                for w in 1..world {
+                    assert_eq!(ranges[w].start, ranges[w - 1].end);
+                    assert!(!ranges[w].is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn world_one_is_bitwise_identical_to_decode_session() {
+        let m = model();
+        let mut session = DecodeSession::new(&m, 0, req());
+        session.run_to_completion(&m);
+        let mut combine = LocalCombine::world(1).pop().unwrap();
+        let run =
+            run_tp_session(&m, 0..m.cfg.heads, &req(), &mut combine, &mut |_| Ok(())).unwrap();
+        assert_eq!(run.generated, session.generated());
+        let want: Vec<u32> = session.snapshot().last_logits.iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u32> = run.last_logits.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "world-1 TP must be the unsharded computation");
+    }
+
+    #[test]
+    fn two_shards_agree_bitwise_and_match_full_model_closely() {
+        let m = Arc::new(model());
+        let ranges = partition_heads(m.cfg.heads, 2);
+        let combines = LocalCombine::world(2);
+        let mut handles = Vec::new();
+        for (range, mut combine) in ranges.into_iter().zip(combines) {
+            let m = Arc::clone(&m);
+            handles.push(thread::spawn(move || {
+                run_tp_session(&m, range, &req(), &mut combine, &mut |_| Ok(())).unwrap()
+            }));
+        }
+        let runs: Vec<TpRun> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Cross-shard agreement is exact: both added the same combined
+        // bytes into the same replicated residual.
+        assert_eq!(runs[0].generated, runs[1].generated);
+        let a: Vec<u32> = runs[0].last_logits.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = runs[1].last_logits.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "shards diverged — combine is not giving both the same bytes");
+        // Against the unsharded model the match is close, not bitwise
+        // (the split reassociates the wo matmul's inner sums).
+        let mut session = DecodeSession::new(&m, 0, req());
+        session.run_to_completion(&m);
+        let full = session.snapshot().last_logits;
+        for (x, y) in runs[0].last_logits.iter().zip(&full) {
+            let tol = 1e-3 * (1.0 + x.abs().max(y.abs()));
+            assert!((x - y).abs() <= tol, "TP logit {x} vs full {y}");
+        }
+    }
+
+    #[test]
+    fn dead_shard_times_out_instead_of_hanging() {
+        let m = model();
+        let mut combine = LocalCombine::world(2).pop().unwrap();
+        combine.timeout = Duration::from_millis(100);
+        // The other shard never shows up: combine must error out.
+        let err = run_tp_session(&m, 2..4, &req(), &mut combine, &mut |_| Ok(()));
+        assert!(err.is_err());
+    }
+}

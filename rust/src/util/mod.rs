@@ -1,6 +1,8 @@
-//! Shared utilities: deterministic RNG, streaming statistics, timing.
+//! Shared utilities: deterministic RNG, streaming statistics, timing,
+//! and the graceful-shutdown signal flag.
 
 pub mod rng;
+pub mod signal;
 pub mod stats;
 
 use std::time::Instant;

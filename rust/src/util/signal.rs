@@ -1,0 +1,82 @@
+//! Graceful-shutdown signal flag, std-only.
+//!
+//! `psf serve` (single-process and sharded) wants SIGTERM/SIGINT to
+//! mean "stop accepting, drain, flush the closing metrics record" —
+//! not instant death.  There is no libc crate in this tree, so the
+//! handler is installed through the C `signal(2)` symbol directly; the
+//! handler body only stores into a static atomic, which is the entire
+//! async-signal-safe budget and all we need.  Serving loops poll
+//! [`triggered`] and flip their own stop flags.
+//!
+//! Installation is idempotent and the flag is process-global: one
+//! shutdown intent per process is the right granularity (the sharded
+//! gateway forwards it to runners over IPC, not via signals).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+const SIGINT: i32 = 2;
+#[cfg(unix)]
+const SIGTERM: i32 = 15;
+
+#[cfg(unix)]
+extern "C" fn on_signal(_sig: i32) {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Install the SIGINT/SIGTERM handlers.  Safe to call more than once.
+#[cfg(unix)]
+pub fn install() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(SIGINT, on_signal as usize);
+        signal(SIGTERM, on_signal as usize);
+    }
+}
+
+/// Non-unix builds: no handler; `triggered` just never fires.
+#[cfg(not(unix))]
+pub fn install() {}
+
+/// Has a shutdown signal arrived since process start?
+pub fn triggered() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// Test hook: reset the flag (the handler can fire only once per test
+/// process otherwise).
+#[cfg(test)]
+pub(crate) fn reset() {
+    SHUTDOWN.store(false, Ordering::SeqCst);
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigterm_flips_the_flag() {
+        extern "C" {
+            fn raise(sig: i32) -> i32;
+        }
+        install();
+        reset();
+        assert!(!triggered());
+        unsafe {
+            raise(SIGTERM);
+        }
+        // Delivery is synchronous for raise() on the calling thread.
+        assert!(triggered());
+        reset();
+        install(); // idempotent
+        unsafe {
+            raise(SIGINT);
+        }
+        assert!(triggered());
+        reset();
+    }
+}

@@ -12,9 +12,8 @@
 //! file forces a single test thread via serial helpers per test — each test
 //! creates its own runtime objects; the thread-local client is shared.
 
-use polysketchformer::coordinator::{self, DataParallel, Trainer, TrainerConfig};
+use polysketchformer::coordinator::{self, Trainer, TrainerConfig};
 use polysketchformer::data::{batcher::Batcher, random_tokens};
-use polysketchformer::metrics::RunLogger;
 use polysketchformer::runtime::{self, LoadOpts, ModelRuntime};
 
 fn load(name: &str, opts: LoadOpts) -> ModelRuntime {
@@ -150,42 +149,10 @@ fn gradstep_equals_fused_train_step() {
     assert!(max_dev < 1e-5, "state dev {max_dev}");
 }
 
-#[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla_extension backend"]
-fn dataparallel_single_worker_matches_train_step() {
-    // One worker, accum 1, same batch => the dp step must equal the fused
-    // step (allreduce over a single gradient is the identity).
-    let mut dp_model = load("tiny_softmax", LoadOpts::grads_only());
-    let mut ref_model = load("tiny_softmax", LoadOpts::train_only());
-
-    let stream = random_tokens(8 * 33 * 4, dp_model.vocab(), 6);
-    let batcher = Batcher::new(&stream, dp_model.batch(), dp_model.ctx() + 1, 9);
-    let mut ref_batcher = Batcher::new(&stream, ref_model.batch(), ref_model.ctx() + 1, 9);
-
-    let mut dp = DataParallel::new(&mut dp_model, vec![batcher], 1);
-    let dp_stats = dp.step().unwrap();
-    let ref_stats = ref_model.train_step(&ref_batcher.next_batch().tokens).unwrap();
-    assert!(
-        (dp_stats.loss - ref_stats.loss).abs() < 1e-6,
-        "dp {} vs fused {}",
-        dp_stats.loss,
-        ref_stats.loss
-    );
-}
-
-#[test]
-#[ignore = "requires PJRT artifacts (make artifacts) and the real xla_extension backend"]
-fn dataparallel_multi_worker_runs_and_learns() {
-    let mut model = load("tiny_psk", LoadOpts::grads_only());
-    let stream = random_tokens(33 * 2 * 16, model.vocab(), 7);
-    let mut dp = DataParallel::from_stream(&mut model, &stream, 2, 2, 0);
-    assert_eq!(dp.world_size(), 2);
-    let mut logger = RunLogger::new(None, 0).unwrap();
-    let (last, curve) = dp.run(4, &mut logger).unwrap();
-    assert_eq!(last.step, 4);
-    assert_eq!(curve.len(), 4);
-    assert!(curve.iter().all(|(_, l)| l.is_finite()));
-}
+// NOTE: the DataParallel coordinator moved off the PJRT runtime onto the
+// native training subsystem (`train/`); its single-worker-bitwise and
+// multi-worker tests now live in `coordinator/dataparallel.rs` and run
+// un-ignored in tier-1.
 
 #[test]
 #[ignore = "requires PJRT artifacts (make artifacts) and the real xla_extension backend"]

@@ -1,0 +1,234 @@
+//! Integration tests over multi-process sharded serving: a real
+//! supervisor spawning real `psf runner` child processes (the binary
+//! cargo builds for this test run), driven through the in-process
+//! `ShardGateway` API — no HTTP in the loop, but everything else is the
+//! production path: Unix-socket IPC, framed protocol, hash-ring
+//! routing, crash detection, respawn.
+//!
+//! The determinism contract under test: a request served by a runner
+//! replica is byte-identical to the same request served by the
+//! single-process gateway, before AND after the runner serving it was
+//! SIGKILLed and respawned.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use polysketchformer::attn::Mechanism;
+use polysketchformer::infer::{GenRequest, LmConfig, NativeLm, SamplePolicy};
+use polysketchformer::serve::{collect_stream, Gateway, GatewayConfig};
+use polysketchformer::shard::{
+    hash_key, partition_heads, run_tp_session, LocalCombine, ShardConfig, ShardEvent,
+    ShardGateway, Supervisor, SupervisorConfig,
+};
+
+const MECH: &str = "psk4_r4_b8_local";
+
+fn model_args() -> Vec<String> {
+    ["--mech", MECH, "--d-model", "32", "--layers", "2", "--heads", "2", "--seed", "1"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+/// The same model the runners build from `model_args` (vocab 257 is the
+/// `LmConfig` default, matching `psf runner`'s flag-built path).
+fn oracle_model() -> NativeLm {
+    let cfg = LmConfig { d_model: 32, layers: 2, heads: 2, seed: 1, ..LmConfig::default() };
+    NativeLm::new(cfg, Mechanism::parse(MECH).expect("test mechanism label"))
+}
+
+fn sup_config(runners: usize, tp: bool) -> SupervisorConfig {
+    SupervisorConfig {
+        runners,
+        runner_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_psf")),
+        model_args: model_args(),
+        threads_per_runner: 1,
+        tp,
+        heads: 2,
+        ..SupervisorConfig::default()
+    }
+}
+
+fn prompt(tag: u32) -> Vec<u32> {
+    std::iter::once(0u32)
+        .chain((0..24u32).map(|i| 1 + (tag.wrapping_mul(97) + i * 13) % 256))
+        .collect()
+}
+
+fn request(tag: u32, max_new: usize) -> GenRequest {
+    GenRequest {
+        prompt: prompt(tag),
+        max_new_tokens: max_new,
+        policy: SamplePolicy::Greedy,
+        seed: 7 + tag as u64,
+    }
+}
+
+/// Drain a submit receiver with a hang guard (never `iter()` in tests:
+/// a wedged gateway thread must fail the test, not freeze CI).
+fn drain(rx: &Receiver<ShardEvent>) -> (Vec<u32>, bool, Option<(bool, String)>) {
+    let mut tokens = Vec::new();
+    let mut done = false;
+    let mut error = None;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        match rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(ShardEvent::Token { token, .. }) => tokens.push(token),
+            Ok(ShardEvent::Done { .. }) => done = true,
+            Ok(ShardEvent::Failed { retriable, msg, .. }) => error = Some((retriable, msg)),
+            Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) => {
+                assert!(Instant::now() < deadline, "stream hung: no event within 60s");
+            }
+        }
+    }
+    (tokens, done, error)
+}
+
+/// What the single-process serving path generates for `req`.
+fn single_process_tokens(req: &GenRequest) -> Vec<u32> {
+    let gw = Arc::new(
+        Gateway::new(oracle_model(), GatewayConfig::default()).expect("oracle gateway"),
+    );
+    let rx = gw.submit(req.clone()).expect("oracle admission");
+    let (tokens, stats) = collect_stream(rx);
+    gw.finish().expect("oracle drain");
+    assert!(stats.is_some(), "oracle request must complete");
+    tokens
+}
+
+fn wait_all_healthy(sup: &Supervisor, within: Duration) {
+    let deadline = Instant::now() + within;
+    loop {
+        let (total, healthy) = sup.health();
+        if healthy == total {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "runners did not recover within {within:?}: {healthy}/{total} healthy"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn replica_serving_matches_single_process_gateway_byte_identically() {
+    let sup = Supervisor::start(sup_config(2, false)).expect("supervisor start");
+    let gw = Arc::new(
+        ShardGateway::new(
+            Arc::clone(&sup),
+            Mechanism::parse(MECH).unwrap(),
+            ShardConfig::default(),
+        )
+        .expect("shard gateway"),
+    );
+
+    // Distinct prompts spread over the ring: both runners serve some.
+    for tag in 0..4u32 {
+        let req = request(tag, 12);
+        let rx = gw.submit(req.clone()).expect("admission");
+        let (tokens, done, error) = drain(&rx);
+        assert!(error.is_none(), "request {tag} failed: {error:?}");
+        assert!(done, "request {tag} never completed");
+        assert_eq!(
+            tokens,
+            single_process_tokens(&req),
+            "runner replica diverged from the single-process path (tag {tag})"
+        );
+    }
+    gw.finish().expect("drain");
+}
+
+#[test]
+fn runner_crash_fails_fast_then_respawn_serves_identically() {
+    let sup = Supervisor::start(sup_config(2, false)).expect("supervisor start");
+    let gw = Arc::new(
+        ShardGateway::new(
+            Arc::clone(&sup),
+            Mechanism::parse(MECH).unwrap(),
+            ShardConfig::default(),
+        )
+        .expect("shard gateway"),
+    );
+
+    // Find a prompt routed to runner 0's ring slice so the kill target
+    // is the runner actually serving the stream.
+    let tag = (0..u32::MAX)
+        .find(|&t| sup.route(hash_key(MECH, &prompt(t))) == Some(0))
+        .expect("some prompt routes to runner 0");
+    let victim = 0u32;
+
+    // Long-running stream: enough decode steps that the SIGKILL lands
+    // mid-stream (tiny model, but 4000 steps is hundreds of ms).
+    let rx = gw.submit(request(tag, 4000)).expect("admission");
+    match rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(ShardEvent::Token { .. }) => {}
+        other => panic!("expected first token, got {other:?}"),
+    }
+    sup.kill_runner(victim);
+    let (_, done, error) = drain(&rx);
+    assert!(!done, "stream must not complete after its runner was killed");
+    let (retriable, msg) = error.expect("killed stream must end in a Failed event");
+    assert!(retriable, "mid-stream runner death must be retriable: {msg}");
+
+    // Graceful degradation: the gateway lives, the supervisor noticed,
+    // and the runner comes back within the recovery window.
+    assert!(sup.was_ever_degraded());
+    wait_all_healthy(&sup, Duration::from_secs(30));
+    assert!(sup.respawn_count() >= 1, "dead runner must have been respawned");
+
+    // The retried request — same routing key, now served by the respawned
+    // replica — is byte-identical to a cold single-process run.
+    let req = request(tag, 12);
+    let rx = gw.submit(req.clone()).expect("admission after recovery");
+    let (tokens, done, error) = drain(&rx);
+    assert!(error.is_none(), "retried request failed: {error:?}");
+    assert!(done, "retried request never completed");
+    assert_eq!(
+        tokens,
+        single_process_tokens(&req),
+        "respawned runner diverged from the cold single-process run"
+    );
+    gw.finish().expect("drain");
+}
+
+#[test]
+fn tp_over_ipc_matches_local_combine_bitwise() {
+    let req = request(9, 10);
+
+    // In-process reference: two shard threads over LocalCombine.
+    let model = Arc::new(oracle_model());
+    let ranges = partition_heads(2, 2);
+    let mut handles = Vec::new();
+    for (range, mut combine) in ranges.into_iter().zip(LocalCombine::world(2)) {
+        let model = Arc::clone(&model);
+        let req = req.clone();
+        handles.push(std::thread::spawn(move || {
+            run_tp_session(&model, range, &req, &mut combine, &mut |_| Ok(())).unwrap()
+        }));
+    }
+    let runs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(runs[0].generated, runs[1].generated, "local shards must agree");
+    let want = runs[0].generated.clone();
+
+    // Production path: the same two shards as separate processes, the
+    // gateway as combine hub over the framed protocol.
+    let sup = Supervisor::start(sup_config(2, true)).expect("tp supervisor start");
+    assert!(sup.is_tp());
+    let gw = Arc::new(
+        ShardGateway::new(
+            Arc::clone(&sup),
+            Mechanism::parse(MECH).unwrap(),
+            ShardConfig::default(),
+        )
+        .expect("shard gateway"),
+    );
+    let rx = gw.submit(req).expect("admission");
+    let (tokens, done, error) = drain(&rx);
+    assert!(error.is_none(), "tp request failed: {error:?}");
+    assert!(done, "tp request never completed");
+    assert_eq!(tokens, want, "IPC combine must be bitwise-identical to LocalCombine");
+    gw.finish().expect("drain");
+}

@@ -11,8 +11,12 @@ use polysketchformer::coordinator::dataparallel::shard_stream;
 use polysketchformer::coordinator::gen_cloze_questions;
 use polysketchformer::data::batcher::{split_stream, Batcher};
 use polysketchformer::data::bpe::Bpe;
-use polysketchformer::infer::SamplePolicy;
+use polysketchformer::infer::{GenRequest, SamplePolicy};
 use polysketchformer::prop::{check, close, ensure};
+use polysketchformer::shard::proto::{
+    decode_generate, encode_generate, Frame, FrameKind, ProtoError, MAX_PAYLOAD, VERSION,
+};
+use polysketchformer::shard::{hash_key, HashRing};
 use polysketchformer::tensor::{layernorm_rows, Tensor};
 use polysketchformer::util::rng::Pcg;
 
@@ -429,5 +433,169 @@ fn prop_sampling_is_seed_deterministic_across_policies() {
             ensure(draw(seed) == draw(seed), format!("{policy:?} not replayable"))?;
         }
         Ok(())
+    });
+}
+
+// ----------------------------------------------------- shard IPC protocol
+
+#[test]
+fn prop_frame_roundtrip() {
+    check("frame encode/decode roundtrip", 60, |rng, size| {
+        let kind = FrameKind::from_u8(rng.usize_below(14) as u8).expect("all kinds covered");
+        let stream = rng.next_u64();
+        let payload: Vec<u8> = (0..size * 9).map(|_| rng.usize_below(256) as u8).collect();
+        let frame = Frame::new(kind, stream, payload);
+        let buf = frame.encode();
+        let (back, consumed) = Frame::decode(&buf).map_err(|e| format!("decode: {e}"))?;
+        ensure(consumed == buf.len(), "decode must consume the whole encoding")?;
+        ensure(back == frame, "frame must survive the wire byte-identically")?;
+        // The stream path must agree with the slice path.
+        let streamed = Frame::read_from(&mut &buf[..]).map_err(|e| format!("read_from: {e}"))?;
+        ensure(streamed == Some(frame), "read_from must match decode")?;
+        // A clean EOF right after the frame is Ok(None), not an error.
+        let mut r = &buf[buf.len()..];
+        ensure(
+            Frame::read_from(&mut r).ok() == Some(None),
+            "EOF at a frame boundary must be a clean end-of-stream",
+        )
+    });
+}
+
+#[test]
+fn prop_frame_strict_prefixes_are_truncated() {
+    check("frame truncation detection", 40, |rng, size| {
+        let kind = FrameKind::from_u8(rng.usize_below(14) as u8).expect("all kinds covered");
+        let payload: Vec<u8> = (0..1 + size * 5).map(|_| rng.usize_below(256) as u8).collect();
+        let buf = Frame::new(kind, rng.next_u64(), payload).encode();
+        // Every strict prefix must be rejected as Truncated — never
+        // misparsed as a shorter valid frame.
+        let cut = rng.usize_below(buf.len());
+        ensure(
+            Frame::decode(&buf[..cut]) == Err(ProtoError::Truncated),
+            format!("prefix of {cut}/{} bytes must be Truncated", buf.len()),
+        )?;
+        // Mid-frame EOF on the stream path is an error, not a clean end.
+        if cut > 0 {
+            ensure(
+                Frame::read_from(&mut &buf[..cut]).is_err(),
+                "mid-frame EOF must surface as an io::Error",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_frame_rejects_corrupted_headers() {
+    check("frame header validation", 40, |rng, _| {
+        let buf = Frame::new(FrameKind::Ping, rng.next_u64(), vec![7u8; 3]).encode();
+
+        // Version skew: peers from different builds must fail loudly
+        // (the protocol has no negotiation — one binary ships both ends).
+        let mut skewed = buf.clone();
+        let bad_version = VERSION + 1 + rng.usize_below(100) as u16;
+        skewed[4..6].copy_from_slice(&bad_version.to_le_bytes());
+        ensure(
+            Frame::decode(&skewed)
+                == Err(ProtoError::VersionMismatch { got: bad_version, want: VERSION }),
+            "version skew must be VersionMismatch",
+        )?;
+
+        // Corrupted magic.
+        let mut garbled = buf.clone();
+        garbled[0] ^= 0xff;
+        ensure(
+            matches!(Frame::decode(&garbled), Err(ProtoError::BadMagic(_))),
+            "corrupted magic must be BadMagic",
+        )?;
+
+        // Unknown frame kind.
+        let mut unknown = buf.clone();
+        unknown[6] = 14 + rng.usize_below(200) as u8;
+        ensure(
+            Frame::decode(&unknown) == Err(ProtoError::BadKind(unknown[6])),
+            "unknown kind must be BadKind",
+        )?;
+
+        // Oversized length claim: bounded before any allocation.
+        let mut huge = buf;
+        let len = MAX_PAYLOAD + 1 + rng.usize_below(1 << 20) as u32;
+        huge[16..20].copy_from_slice(&len.to_le_bytes());
+        ensure(
+            Frame::decode(&huge) == Err(ProtoError::Oversize { len, max: MAX_PAYLOAD }),
+            "over-limit length must be Oversize",
+        )
+    });
+}
+
+#[test]
+fn prop_generate_payload_roundtrip() {
+    check("generate payload roundtrip", 50, |rng, size| {
+        let policy = match rng.usize_below(4) {
+            0 => SamplePolicy::Greedy,
+            1 => SamplePolicy::Temperature(0.05 + rng.f64() as f32 * 2.0),
+            2 => SamplePolicy::TopK {
+                k: 1 + rng.usize_below(300),
+                temperature: 0.05 + rng.f64() as f32 * 2.0,
+            },
+            _ => SamplePolicy::TopP {
+                p: rng.f64() as f32,
+                temperature: 0.05 + rng.f64() as f32 * 2.0,
+            },
+        };
+        let req = GenRequest {
+            prompt: (0..1 + size * 3).map(|_| rng.usize_below(257) as u32).collect(),
+            max_new_tokens: rng.usize_below(4096),
+            policy,
+            seed: rng.next_u64(),
+        };
+        let bytes = encode_generate(&req);
+        let back = decode_generate(&bytes).map_err(|e| format!("decode: {e}"))?;
+        ensure(back.prompt == req.prompt, "prompt tokens must round-trip")?;
+        ensure(back.max_new_tokens == req.max_new_tokens, "max_new must round-trip")?;
+        ensure(back.seed == req.seed, "seed must round-trip")?;
+        ensure(back.policy == req.policy, "policy must round-trip (f32 knobs bit-exact)")?;
+        // Re-encoding is byte-identical: f32 knobs crossed the wire as
+        // raw bits, never through a lossy text form.
+        ensure(encode_generate(&back) == bytes, "re-encode must be byte-identical")
+    });
+}
+
+// -------------------------------------------------- shard routing ring
+
+#[test]
+fn prop_ring_removal_only_moves_victims_keys() {
+    check("ring rebalance stability", 30, |rng, size| {
+        let runners = 2 + rng.usize_below(6) as u32;
+        let mut ring = HashRing::new();
+        for r in 0..runners {
+            ring.add(r);
+        }
+        let keys: Vec<u64> = (0..20 + size * 10)
+            .map(|i| hash_key("psk4_r16_b32_local", &[i as u32, rng.usize_below(257) as u32]))
+            .collect();
+        let before: Vec<u32> = keys.iter().map(|&k| ring.route(k).unwrap()).collect();
+
+        // Remove one runner: only its keys may move.
+        let victim = rng.usize_below(runners as usize) as u32;
+        ring.remove(victim);
+        ensure(ring.len_runners() == runners as usize - 1, "runner count drops by one")?;
+        for (&k, &owner) in keys.iter().zip(&before) {
+            let now = ring.route(k).unwrap();
+            if owner != victim {
+                ensure(
+                    now == owner,
+                    format!("key moved {owner} -> {now} though {victim} was removed"),
+                )?;
+            } else {
+                ensure(now != victim, "victim's keys must be re-homed")?;
+            }
+        }
+
+        // Re-adding restores the original assignment exactly (vnode
+        // points are a pure function of the runner id).
+        ring.add(victim);
+        let after: Vec<u32> = keys.iter().map(|&k| ring.route(k).unwrap()).collect();
+        ensure(after == before, "re-add must restore the original routing")
     });
 }
