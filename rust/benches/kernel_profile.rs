@@ -1,0 +1,132 @@
+//! Kernel profile — per-phase time breakdown of the attention engines.
+//!
+//! Runs prefill + a burst of decode steps for one linear (polysketch)
+//! and one quadratic (softmax) kernel with the obs phase accumulators
+//! on, then reports where the nanoseconds went: feature map vs diagonal
+//! scores vs prefix multiply vs emit vs Z-fold for the linear engine,
+//! attention vs state capture vs step for the quadratic one.  This JSON
+//! (`bench_out/kernel_profile.json`) is the baseline the SIMD work
+//! optimizes against — a phase that dominates here is the phase worth
+//! vectorizing first.
+//!
+//! Doubles as a determinism check for the overhead contract: the same
+//! prefill runs with phases off and on and must produce bitwise
+//! identical output (timing is write-only telemetry).
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use polysketchformer::attn::kernel::CausalKernel;
+use polysketchformer::attn::Mechanism;
+use polysketchformer::bench::{banner, out_dir, Mode};
+use polysketchformer::metrics::Record;
+use polysketchformer::obs;
+use polysketchformer::tensor::Tensor;
+use polysketchformer::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let mode = Mode::from_env();
+    banner("kernel_profile", "per-phase kernel time breakdown (obs accumulators)", mode);
+
+    let hd = 32usize;
+    // +3 keeps the ragged tail in play so block-edge phases are exercised.
+    let n = mode.pick(512, 2048, 8192) + 3;
+    let decode_steps = mode.pick(32, 128, 256);
+    let mechs = ["psk4_r16_b32_local", "softmax"];
+
+    let mut rng = Pcg::seeded(n as u64);
+    let q = Tensor::gaussian(&mut rng, &[n, hd]);
+    let k = Tensor::gaussian(&mut rng, &[n, hd]);
+    let v = Tensor::gaussian(&mut rng, &[n, hd]);
+
+    let mut records: Vec<Record> = Vec::new();
+    let mut seen: Vec<(&str, &str)> = Vec::new();
+    for label in mechs {
+        let mech = Mechanism::parse(label).expect("bench mechanism");
+        let kernel: Arc<dyn CausalKernel> = mech.build_kernel(hd, &mut Pcg::seeded(42));
+
+        // Overhead contract: phases off vs on, bitwise identical output.
+        obs::set_phases(false);
+        let want = kernel.forward(&q, &k, &v);
+        obs::set_phases(true);
+        obs::phase::reset();
+
+        let t0 = Instant::now();
+        let mut state = kernel.new_state();
+        let got = kernel.prefill(&q.view(), &k.view(), &v.view(), Some(&mut state));
+        let prefill_secs = t0.elapsed().as_secs_f64();
+        assert_eq!(got, want, "{label}: output changed with phase accounting on");
+
+        let t0 = Instant::now();
+        for i in 0..decode_steps {
+            let row = (i * 7) % n;
+            std::hint::black_box(kernel.step(q.row(row), k.row(row), v.row(row), &mut state));
+        }
+        let decode_secs = t0.elapsed().as_secs_f64();
+
+        let totals = obs::phase::totals();
+        obs::set_phases(false);
+        let accounted: u64 = totals.iter().map(|(_, ns, _)| ns).sum();
+        anyhow::ensure!(
+            !totals.is_empty(),
+            "{label}: no phase accumulated — kernel hooks are dead"
+        );
+
+        println!(
+            "{label}: n={n} prefill {prefill_secs:.4}s, {decode_steps} decode steps {decode_secs:.4}s"
+        );
+        println!("  {:>14}  {:>12}  {:>10}  {:>7}", "phase", "nanos", "count", "share");
+        for &(name, nanos, count) in &totals {
+            let share = nanos as f64 / accounted.max(1) as f64;
+            println!("  {name:>14}  {nanos:>12}  {count:>10}  {:>6.1}%", share * 100.0);
+            seen.push((label, name));
+            records.push(
+                Record::new()
+                    .str("mech", label)
+                    .str("phase", name)
+                    .i64("n", n as i64)
+                    .i64("head_dim", hd as i64)
+                    .i64("decode_steps", decode_steps as i64)
+                    .i64("nanos", nanos as i64)
+                    .i64("count", count as i64)
+                    .f64("share", share)
+                    .f64("prefill_secs", prefill_secs)
+                    .f64("decode_secs", decode_secs),
+            );
+        }
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"kernel_profile\",\n");
+    let _ = writeln!(json, "  \"mode\": \"{mode:?}\",");
+    let _ = writeln!(json, "  \"n\": {n},");
+    let _ = writeln!(json, "  \"head_dim\": {hd},");
+    let _ = writeln!(json, "  \"decode_steps\": {decode_steps},");
+    json.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        let _ = write!(json, "    {}", r.to_json());
+        json.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    let dir = out_dir();
+    std::fs::create_dir_all(&dir)?;
+    let json_path = dir.join("kernel_profile.json");
+    std::fs::write(&json_path, json)?;
+    println!("json: {}", json_path.display());
+
+    // The breakdown must cover the phases the SIMD work targets.
+    for (m, p) in [
+        ("psk4_r16_b32_local", "lin_map"),
+        ("psk4_r16_b32_local", "lin_scores"),
+        ("psk4_r16_b32_local", "lin_step"),
+        ("softmax", "quad_attn"),
+        ("softmax", "quad_step"),
+    ] {
+        anyhow::ensure!(
+            seen.contains(&(m, p)),
+            "KERNEL_PROFILE_CHECK fail: phase {p} missing for {m}"
+        );
+    }
+    println!("KERNEL_PROFILE_CHECK pass: all target phases present, output bit-identical with phases on");
+    Ok(())
+}

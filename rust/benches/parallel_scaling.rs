@@ -129,6 +129,7 @@ fn main() -> anyhow::Result<()> {
                         },
                         events: tx,
                         queued: Instant::now(),
+                        trace: 0,
                     },
                     1024,
                 )

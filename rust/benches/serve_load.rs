@@ -318,6 +318,77 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- tracing-overhead A/B -----------------------------------------
+    //
+    // Same closed-loop load twice — obs spans+phases off, then on — to
+    // check the observability hooks stay near-free.  Tracing can never
+    // change output bytes (tests/obs_trace.rs pins that); this pins the
+    // wall-clock side of the overhead contract.  Enforced when
+    // PSF_OBS_OVERHEAD_CHECK=1 (the CI bench smoke sets it), advisory
+    // otherwise so loaded laptops don't fail.
+    let overhead_reqs = mode.pick(3, 6, 10);
+    let overhead_load = |on: bool| -> anyhow::Result<f64> {
+        polysketchformer::obs::set_tracing(on);
+        polysketchformer::obs::set_phases(on);
+        let lm_cfg = LmConfig { d_model: 64, layers: 2, heads: 2, ..LmConfig::default() };
+        let gateway = Arc::new(Gateway::new(
+            NativeLm::new(lm_cfg, Mechanism::parse("psk4_r16_b32_local").unwrap()),
+            GatewayConfig {
+                workers: 2,
+                queue_cap: 64,
+                max_resident: 4,
+                cache_bytes: 64 << 20,
+                ..GatewayConfig::default()
+            },
+        )?);
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..2usize)
+            .map(|ci| {
+                let gw = Arc::clone(&gateway);
+                std::thread::spawn(move || {
+                    let mut tokens = 0usize;
+                    for j in 0..overhead_reqs {
+                        let req = GenRequest {
+                            prompt: prompt(40_000 + (ci * 100 + j) as u64, prompt_len),
+                            max_new_tokens: max_new,
+                            policy: SamplePolicy::Greedy,
+                            seed: (ci * 17 + j) as u64,
+                        };
+                        if let Ok(rx) = gw.submit(req) {
+                            let (toks, _) = collect_stream(rx);
+                            tokens += toks.len();
+                        }
+                    }
+                    tokens
+                })
+            })
+            .collect();
+        let total: usize =
+            handles.into_iter().map(|h| h.join().expect("overhead client panicked")).sum();
+        let wall = t0.elapsed().as_secs_f64();
+        gateway.finish()?;
+        polysketchformer::obs::set_tracing(false);
+        polysketchformer::obs::set_phases(false);
+        Ok(if wall > 0.0 { total as f64 / wall } else { 0.0 })
+    };
+    let off_tok_s = overhead_load(false)?;
+    let on_tok_s = overhead_load(true)?;
+    let retained = if off_tok_s > 0.0 { on_tok_s / off_tok_s } else { 1.0 };
+    println!(
+        "tracing overhead: off {off_tok_s:.1} tok/s -> on {on_tok_s:.1} tok/s \
+         ({:.0}% retained)",
+        retained * 100.0
+    );
+    if std::env::var("PSF_OBS_OVERHEAD_CHECK").ok().as_deref() == Some("1") {
+        anyhow::ensure!(
+            on_tok_s >= 0.5 * off_tok_s,
+            "tracing-on throughput {on_tok_s:.1} tok/s fell below half of tracing-off \
+             {off_tok_s:.1} tok/s — the obs hooks are no longer near-free"
+        );
+    } else if retained < 0.5 {
+        println!("  advisory: below the 50% floor (PSF_OBS_OVERHEAD_CHECK=1 enforces)");
+    }
+
     // JSON artifact, assembled with the same hand-rolled encoder the
     // metrics substrate uses (no serde in this environment).
     let mut json = String::from("{\n  \"bench\": \"serve_load\",\n");
@@ -337,7 +408,14 @@ fn main() -> anyhow::Result<()> {
         let _ = write!(json, "    {}", r.to_json());
         json.push_str(if i + 1 < sweep_records.len() { ",\n" } else { "\n" });
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ],\n");
+    let _ = writeln!(
+        json,
+        "  \"obs_overhead\": {{\"off_tok_s\": {off_tok_s:.3}, \"on_tok_s\": {on_tok_s:.3}, \
+         \"retained\": {retained:.4}}}"
+    );
+    json.push('}');
+    json.push('\n');
     let dir = out_dir();
     std::fs::create_dir_all(&dir)?;
     let json_path = dir.join("serve_load.json");

@@ -28,6 +28,7 @@ use std::sync::Arc;
 use crate::attn::kernel::feature::FeatureMap;
 use crate::attn::kernel::state::{KernelState, LinearState};
 use crate::attn::kernel::CausalKernel;
+use crate::obs::{self, Phase};
 use crate::tensor::{axpy, dot, ln_row, Tensor, TensorView, TensorViewMut};
 
 /// Linear causal attention over an arbitrary [`FeatureMap`], with an
@@ -111,6 +112,7 @@ impl LinearEngine {
             let base = l * b;
             let bl = b.min(n - base); // ragged tail: shorter final block
             // Diagonal block scores lt(score(q_i, k_j)).
+            let t_phase = obs::phase::maybe_now();
             for bi in 0..bl {
                 let srow = &mut scores[bi * bm..bi * bm + bl];
                 match &local {
@@ -128,6 +130,7 @@ impl LinearEngine {
                     }
                 }
             }
+            let t_phase = obs::phase::add_since(Phase::LinScores, t_phase);
             // Prefix contribution: pl[bi] = phi(q_i) . Z, the phi feature
             // expanded row-by-row into scratch.
             for bi in 0..bl {
@@ -141,6 +144,7 @@ impl LinearEngine {
                     axpy(prow, &z[c * hc..(c + 1) * hc], qv);
                 }
             }
+            let t_phase = obs::phase::add_since(Phase::LinPrefix, t_phase);
             // Diagonal contribution + emit normalized rows.
             for bi in 0..bl {
                 let prow = &mut pl[bi * hc..(bi + 1) * hc];
@@ -159,6 +163,7 @@ impl LinearEngine {
                     orow[c] = prow[c] * inv;
                 }
             }
+            let t_phase = obs::phase::add_since(Phase::LinEmit, t_phase);
             // Z += phi(k_j)^T [V_l | 1] — full blocks only: a ragged tail
             // is never read by a later block, and the decode state keeps
             // tail rows buffered, not folded.
@@ -176,6 +181,7 @@ impl LinearEngine {
                     }
                 }
             }
+            obs::phase::add_since(Phase::LinFold, t_phase);
         }
 
         if let Some(st) = state {
@@ -274,17 +280,21 @@ impl CausalKernel for LinearEngine {
         state: Option<&mut KernelState>,
         out: &mut TensorViewMut<'_>,
     ) {
+        let _span = obs::span("lin_prefill", "kernel");
+        let t_map = obs::phase::maybe_now();
         let mq = self.map.map(q);
         let mk = self.map.map(k);
         let (lq, lk) = match &self.local {
             Some(loc) => (Some(loc.map(q)), Some(loc.map(k))),
             None => (None, None),
         };
+        obs::phase::add_since(Phase::LinMap, t_map);
         let st = state.map(|s| self.linear_state(s));
         self.forward_mapped(&mq, &mk, lq.as_ref(), lk.as_ref(), v, st, None, out);
     }
 
     fn step(&self, q: &[f32], k: &[f32], v: &[f32], state: &mut KernelState) -> Vec<f32> {
+        let _t = obs::phase::timer(Phase::LinStep);
         let st = self.linear_state(state);
         self.buffer_key(k, v, st);
         let (mq, lq) = self.map_row_pair(q, st);

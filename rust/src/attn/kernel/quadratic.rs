@@ -12,6 +12,7 @@ use crate::attn::kernel::state::{KernelState, KvState};
 use crate::attn::kernel::CausalKernel;
 use crate::attn::poly::{self, powi};
 use crate::attn::softmax;
+use crate::obs::{self, Phase};
 use crate::tensor::{
     axpy, dot, layernorm_rows, ln_row, ln_row_vjp, Tensor, TensorView, TensorViewMut,
 };
@@ -62,10 +63,12 @@ impl CausalKernel for QuadraticEngine {
         state: Option<&mut KernelState>,
         out: &mut TensorViewMut<'_>,
     ) {
+        let _span = obs::span("quad_prefill", "kernel");
         let n = q.rows();
         // Keys are cached in score form: layernormed for exact poly, raw
         // for the softmax family.
         let mut normed_k: Option<crate::tensor::Tensor> = None;
+        let t_attn = obs::phase::maybe_now();
         match &self.kind {
             QuadKind::Softmax => out.copy_from(&softmax::softmax_attention(q, k, v)),
             QuadKind::Flash { block } => {
@@ -78,6 +81,7 @@ impl CausalKernel for QuadraticEngine {
                 normed_k = Some(kn);
             }
         }
+        let t_capture = obs::phase::add_since(Phase::QuadAttn, t_attn);
         if let Some(st) = state {
             let st = self.kv_state(st);
             assert_eq!(st.len, 0, "prefill requires a fresh state");
@@ -88,9 +92,11 @@ impl CausalKernel for QuadraticEngine {
                 }
             }
         }
+        obs::phase::add_since(Phase::QuadCapture, t_capture);
     }
 
     fn step(&self, q: &[f32], k: &[f32], v: &[f32], state: &mut KernelState) -> Vec<f32> {
+        let _t = obs::phase::timer(Phase::QuadStep);
         let st = self.kv_state(state);
         match &self.kind {
             // Blocked streaming is a prefill-side layout; the decode math

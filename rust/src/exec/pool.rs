@@ -156,6 +156,9 @@ impl Pool {
 
 fn worker_loop(shared: &Shared) {
     loop {
+        // Busy/idle accounting is wall-clock-only profiling: the obs
+        // timers never influence which chunk a worker claims.
+        let t_idle = crate::obs::phase::maybe_now();
         let batch = {
             let mut q = shared.injector.lock().expect("pool injector");
             loop {
@@ -173,7 +176,10 @@ fn worker_loop(shared: &Shared) {
                 q = shared.cvar.wait(q).expect("pool injector wait");
             }
         };
+        crate::obs::phase::add_since(crate::obs::Phase::PoolIdle, t_idle);
+        let t_busy = crate::obs::phase::maybe_now();
         batch.work();
+        crate::obs::phase::add_since(crate::obs::Phase::PoolBusy, t_busy);
     }
 }
 

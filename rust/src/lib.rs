@@ -14,9 +14,13 @@
 //!     through the kernel core (`train` — linear-time backward for the
 //!     sketched mechanisms, `psf train-native`), and the bench harness
 //!     that regenerates every table/figure of the paper's evaluation,
-//!     and multi-process sharded serving (`shard` — gateway + runner
+//!     multi-process sharded serving (`shard` — gateway + runner
 //!     worker processes over a versioned Unix-socket IPC protocol,
-//!     `psf serve --runners N`).
+//!     `psf serve --runners N`), and the std-only observability layer
+//!     (`obs` — span tracing to Chrome trace-event JSON with
+//!     cross-process trace-id propagation, fixed-bucket latency
+//!     histograms with Prometheus exposition, and per-phase kernel
+//!     profiling; near-zero overhead when off).
 
 pub mod attn;
 pub mod bench;
@@ -28,6 +32,7 @@ pub mod data;
 pub mod exec;
 pub mod infer;
 pub mod metrics;
+pub mod obs;
 pub mod prop;
 pub mod runtime;
 pub mod serve;

@@ -49,12 +49,16 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
+    // PSF_TRACE=<path> turns span tracing on for any subcommand; the
+    // serve/runner paths flush on their drain paths, everything else
+    // flushes via the catch-all below.
+    polysketchformer::obs::init_from_env();
     let Some(cmd) = argv.first().map(String::as_str) else {
         eprintln!("{}", top_usage());
         return Ok(());
     };
     let rest = &argv[1..];
-    match cmd {
+    let result = match cmd {
         "list" => cmd_list(),
         "run" => cmd_run(rest),
         "train" => cmd_train(rest),
@@ -65,6 +69,7 @@ fn run(argv: &[String]) -> Result<()> {
         "attn" => cmd_attn(rest),
         "generate" => cmd_generate(rest),
         "serve" => cmd_serve(rest),
+        "trace-report" => cmd_trace_report(rest),
         // Hidden: the worker-process body `psf serve --runners N` spawns.
         // Deliberately absent from `top_usage` — never invoked by hand.
         "runner" => cmd_runner(rest),
@@ -73,7 +78,36 @@ fn run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         other => bail!("unknown subcommand `{other}` (try --help)"),
+    };
+    // Catch-all flush for PSF_TRACE on subcommands without their own
+    // drain path; serve and runner flush themselves (and print there).
+    if !matches!(cmd, "serve" | "runner") {
+        match polysketchformer::obs::flush() {
+            Ok(Some(path)) => eprintln!("psf: trace written to {}", path.display()),
+            Ok(None) => {}
+            Err(e) => eprintln!("psf: trace flush failed: {e}"),
+        }
     }
+    result
+}
+
+// ---------------------------------------------------------- trace-report
+
+/// Summarize a Chrome trace-event file written by `--trace`/`PSF_TRACE`:
+/// top spans by self time, cross-process trace-id stitching, and the
+/// kernel/pool phase breakdown.
+fn cmd_trace_report(argv: &[String]) -> Result<()> {
+    let spec = Args::new("psf trace-report", "summarize a trace.json written by --trace")
+        .req("trace", "path to the trace file")
+        .opt("top", "15", "rows in the top-spans-by-self-time table");
+    let p = parse(spec, argv)?;
+    let path = p.str("trace");
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {path}: {e}"))?;
+    let tf = polysketchformer::obs::trace::parse(&text)
+        .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    print!("{}", polysketchformer::obs::trace::report(&tf, p.usize("top")?));
+    Ok(())
 }
 
 fn top_usage() -> String {
@@ -88,7 +122,8 @@ fn top_usage() -> String {
        eval        perplexity + downstream MCQ accuracy\n\
        attn        run one attention micro-artifact\n\
        generate    autoregressive decoding on the native model path\n\
-       serve       HTTP serving gateway (concurrent workers + prompt cache)\n\n\
+       serve       HTTP serving gateway (concurrent workers + prompt cache)\n\
+       trace-report  summarize a trace.json written by `serve --trace` / PSF_TRACE\n\n\
      run `psf <subcommand> --help` for flags."
         .to_string()
 }
@@ -829,10 +864,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              "compute threads (0 = PSF_THREADS env, else all cores; \
               sharded: cores divided evenly across runners)")
         .opt("log", "", "JSONL metrics path (empty = none)")
+        .opt("trace", "",
+             "write a Chrome trace-event / Perfetto file here on drain \
+              (sharded runs merge per-runner traces in; also via PSF_TRACE)")
         .opt("max-requests", "0", "stop after N completed requests (0 = run forever)")
         .opt("seed", "0", "weight seed");
     let p = parse(spec, argv)?;
     apply_threads(&p)?;
+
+    let trace_path = non_empty(p.str("trace")).map(PathBuf::from);
+    if let Some(tp) = &trace_path {
+        polysketchformer::obs::init_tracing(tp);
+    }
 
     let model = load_native_model(&p)?;
     if model.cfg.vocab < 257 {
@@ -859,7 +902,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         };
         let gateway = std::sync::Arc::new(Gateway::new(model, gw_cfg)?);
         spawn_signal_watcher(gateway.stop_handle());
-        return gateway.run_http();
+        polysketchformer::util::signal::on_shutdown(|| flush_serve_trace(Vec::new()));
+        let result = gateway.run_http();
+        // The drain path (signal or max-requests) funnels through here;
+        // hooks flush the trace exactly once.
+        polysketchformer::util::signal::run_shutdown_hooks();
+        return result;
     }
 
     // Multi-process sharded serving.  The gateway loaded the model only
@@ -903,6 +951,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         heartbeat_ms: p.u64("heartbeat-ms")?,
         tp: p.flag("tp"),
         heads,
+        trace_base: trace_path.clone(),
         ..shard::SupervisorConfig::default()
     };
     let sup = shard::Supervisor::start(sup_cfg)?;
@@ -915,7 +964,38 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
     let gateway = std::sync::Arc::new(shard::ShardGateway::new(sup, mech, shard_cfg)?);
     spawn_signal_watcher(gateway.stop_handle());
-    gateway.run_http()
+    {
+        // Runner children flush their own `<trace>.runnerN` files when the
+        // Shutdown frame drains them (the supervisor reaps each child
+        // before `run_http` returns), so merging here sees them on disk.
+        let sup = std::sync::Arc::clone(gateway.supervisor());
+        polysketchformer::util::signal::on_shutdown(move || {
+            flush_serve_trace(sup.runner_trace_paths())
+        });
+    }
+    let result = std::sync::Arc::clone(&gateway).run_http();
+    polysketchformer::util::signal::run_shutdown_hooks();
+    result
+}
+
+/// Drain this process's spans to the configured trace file, then fold in
+/// the per-runner trace files (sharded serving) for one Perfetto-loadable
+/// timeline where a request's gateway and runner spans share a trace id.
+fn flush_serve_trace(runner_traces: Vec<PathBuf>) {
+    use polysketchformer::obs;
+    match obs::flush() {
+        Ok(Some(path)) => {
+            if !runner_traces.is_empty() {
+                match obs::trace::merge_files(&path, &runner_traces) {
+                    Ok(n) => eprintln!("psf serve: merged {n} runner trace file(s)"),
+                    Err(e) => eprintln!("psf serve: runner trace merge failed: {e}"),
+                }
+            }
+            eprintln!("psf serve: trace written to {}", path.display());
+        }
+        Ok(None) => {}
+        Err(e) => eprintln!("psf serve: trace flush failed: {e}"),
+    }
 }
 
 // ---------------------------------------------------------------- runner
@@ -943,9 +1023,13 @@ fn cmd_runner(argv: &[String]) -> Result<()> {
         .opt("threads", "0", "compute threads (0 = PSF_THREADS env, else all cores)")
         .opt("head-start", "0", "first head of this shard (TP mode)")
         .opt("head-end", "0", "one-past-last head of this shard (0 = full replica)")
+        .opt("trace", "", "write this runner's trace-event file here on drain")
         .opt("seed", "0", "weight seed");
     let p = parse(spec, argv)?;
     apply_threads(&p)?;
+    if let Some(tp) = non_empty(p.str("trace")) {
+        polysketchformer::obs::init_tracing(std::path::Path::new(tp));
+    }
 
     let model = load_native_model(&p)?;
     if model.cfg.vocab < 257 {

@@ -10,9 +10,9 @@ use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
-use crate::util::stats::{percentile, Ema};
+use crate::obs::Hist;
+use crate::util::stats::Ema;
 
 /// A flat JSON-encodable record.
 #[derive(Clone, Debug, Default)]
@@ -180,12 +180,17 @@ impl RunLogger {
 }
 
 /// Shared counters of the serving gateway (`serve::Gateway`): admission,
-/// prompt-cache effectiveness, and time-to-first-token tail latency.
+/// prompt-cache effectiveness, and latency distributions.
 ///
 /// All fields are thread-safe — HTTP handler threads and decode workers
 /// update them concurrently; [`ServeCounters::record`] freezes a snapshot
-/// into the same JSONL [`Record`] shape every other subsystem logs.
-#[derive(Default)]
+/// into the same JSONL [`Record`] shape every other subsystem logs, and
+/// [`ServeCounters::prometheus_text`] renders the whole set as Prometheus
+/// text exposition for `GET /metrics?format=prometheus`.
+///
+/// Latency distributions are fixed-bucket [`Hist`]s: memory is constant
+/// no matter how long the server runs (this replaced an earlier sliding
+/// sample window whose per-scrape clone+sort cost grew with the window).
 pub struct ServeCounters {
     /// Requests accepted into the admission queue.
     pub admitted: AtomicU64,
@@ -201,21 +206,36 @@ pub struct ServeCounters {
     pub cache_bytes: AtomicU64,
     /// Total generated tokens across completed requests.
     pub tokens_generated: AtomicU64,
-    /// Sliding window of time-to-first-token samples (seconds) — bounded
-    /// so a run-forever server cannot grow it without limit.
-    ttft_secs: Mutex<TtftWindow>,
+    /// Time-to-first-token, seconds.
+    pub ttft: Hist,
+    /// Per-decoded-token latency, seconds.
+    pub token_latency: Hist,
+    /// Admission-queue wait (submit to first worker touch), seconds.
+    pub queue_wait: Hist,
+    /// Gateway<->runner IPC round trip (heartbeat ping/pong), seconds.
+    pub ipc_rtt: Hist,
+    /// Prompt-cache lookup duration, seconds.
+    pub cache_lookup: Hist,
 }
 
-/// Ring of the last [`TTFT_WINDOW`] TTFT samples.
-#[derive(Default)]
-struct TtftWindow {
-    samples: Vec<f64>,
-    seen: u64,
+impl Default for ServeCounters {
+    fn default() -> Self {
+        ServeCounters {
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            cache_bytes: AtomicU64::new(0),
+            tokens_generated: AtomicU64::new(0),
+            ttft: Hist::latency(),
+            token_latency: Hist::latency(),
+            queue_wait: Hist::latency(),
+            ipc_rtt: Hist::latency(),
+            cache_lookup: Hist::latency(),
+        }
+    }
 }
-
-/// Percentiles are computed over the most recent this-many requests; the
-/// window keeps the per-scrape sort O(1)-ish and memory bounded forever.
-const TTFT_WINDOW: usize = 4096;
 
 impl ServeCounters {
     pub fn new() -> Self {
@@ -224,24 +244,12 @@ impl ServeCounters {
 
     /// Record one request's time-to-first-token.
     pub fn record_ttft(&self, secs: f64) {
-        let mut w = self.ttft_secs.lock().expect("ttft lock poisoned");
-        if w.samples.len() < TTFT_WINDOW {
-            w.samples.push(secs);
-        } else {
-            let slot = (w.seen % TTFT_WINDOW as u64) as usize;
-            w.samples[slot] = secs;
-        }
-        w.seen += 1;
+        self.ttft.observe(secs);
     }
 
-    /// (p50, p99) TTFT in milliseconds over the sample window.
+    /// (p50, p99) TTFT in milliseconds.
     pub fn ttft_percentiles_ms(&self) -> (f64, f64) {
-        let mut xs = self.ttft_secs.lock().expect("ttft lock poisoned").samples.clone();
-        if xs.is_empty() {
-            return (0.0, 0.0);
-        }
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        (percentile(&xs, 50.0) * 1e3, percentile(&xs, 99.0) * 1e3)
+        (self.ttft.percentile(50.0) * 1e3, self.ttft.percentile(99.0) * 1e3)
     }
 
     /// Snapshot as a JSONL record (`kind = "serve_metrics"`).
@@ -258,6 +266,50 @@ impl ServeCounters {
             .i64("tokens_generated", self.tokens_generated.load(Ordering::Relaxed) as i64)
             .f64("ttft_p50_ms", p50)
             .f64("ttft_p99_ms", p99)
+    }
+
+    /// Prometheus text exposition (content type
+    /// `text/plain; version=0.0.4`): monotone counters as `_total`,
+    /// `cache_bytes` as a gauge, and every latency [`Hist`].
+    pub fn prometheus_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(4096);
+        let counters: [(&str, &AtomicU64); 6] = [
+            ("psf_requests_admitted_total", &self.admitted),
+            ("psf_requests_rejected_total", &self.rejected),
+            ("psf_requests_completed_total", &self.completed),
+            ("psf_cache_hits_total", &self.cache_hits),
+            ("psf_cache_misses_total", &self.cache_misses),
+            ("psf_tokens_generated_total", &self.tokens_generated),
+        ];
+        for (name, v) in counters {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", v.load(Ordering::Relaxed));
+        }
+        let _ = writeln!(out, "# TYPE psf_cache_bytes gauge");
+        let _ = writeln!(out, "psf_cache_bytes {}", self.cache_bytes.load(Ordering::Relaxed));
+        self.ttft.prometheus_into("psf_ttft_seconds", "Time to first token", &mut out);
+        self.token_latency.prometheus_into(
+            "psf_token_latency_seconds",
+            "Per-decoded-token latency",
+            &mut out,
+        );
+        self.queue_wait.prometheus_into(
+            "psf_queue_wait_seconds",
+            "Admission queue wait before first worker touch",
+            &mut out,
+        );
+        self.ipc_rtt.prometheus_into(
+            "psf_ipc_rtt_seconds",
+            "Gateway to runner IPC round trip",
+            &mut out,
+        );
+        self.cache_lookup.prometheus_into(
+            "psf_cache_lookup_seconds",
+            "Prompt cache lookup duration",
+            &mut out,
+        );
+        out
     }
 }
 
@@ -353,9 +405,11 @@ mod tests {
         for i in 0..100 {
             c.record_ttft(0.001 * (i + 1) as f64);
         }
+        // Histogram percentiles are bucket-interpolated, not exact order
+        // statistics: assert the right neighborhood, not sample values.
         let (p50, p99) = c.ttft_percentiles_ms();
-        assert!((p50 - 50.5).abs() < 1.0, "p50 {p50}");
-        assert!(p99 > 98.0 && p99 <= 100.0, "p99 {p99}");
+        assert!(p50 >= 25.0 && p50 <= 50.0, "p50 {p50}");
+        assert!(p99 > p50 && p99 <= 100.0, "p99 {p99}");
         let json = c.record().to_json();
         for needle in [
             "\"kind\":\"serve_metrics\"",
@@ -377,20 +431,45 @@ mod tests {
     }
 
     #[test]
-    fn serve_counters_ttft_window_is_bounded_and_slides() {
+    fn serve_counters_ttft_memory_is_bounded() {
         let c = ServeCounters::new();
-        // Fill well past the window with a high plateau, then overwrite the
-        // whole window with a low one: old samples must age out entirely.
-        for _ in 0..(TTFT_WINDOW + 100) {
-            c.record_ttft(10.0);
+        let buckets = c.ttft.bucket_counts().len();
+        for i in 0..50_000u64 {
+            c.record_ttft((i % 400) as f64 * 1e-4);
         }
-        for _ in 0..TTFT_WINDOW {
-            c.record_ttft(0.001);
-        }
-        assert_eq!(c.ttft_secs.lock().unwrap().samples.len(), TTFT_WINDOW);
+        // Fixed-bucket histogram: footprint never grows with samples.
+        assert_eq!(c.ttft.bucket_counts().len(), buckets);
+        assert_eq!(c.ttft.count(), 50_000);
         let (p50, p99) = c.ttft_percentiles_ms();
-        assert!((p50 - 1.0).abs() < 1e-9, "p50 {p50}");
-        assert!((p99 - 1.0).abs() < 1e-9, "p99 {p99}");
+        assert!(p50 > 0.0 && p99 >= p50, "p50 {p50} p99 {p99}");
+    }
+
+    #[test]
+    fn serve_counters_prometheus_text() {
+        let c = ServeCounters::new();
+        c.admitted.store(7, Ordering::Relaxed);
+        c.cache_bytes.store(1024, Ordering::Relaxed);
+        c.record_ttft(0.03);
+        c.queue_wait.observe(0.002);
+        c.ipc_rtt.observe(0.0004);
+        c.cache_lookup.observe(0.00002);
+        c.token_latency.observe(0.008);
+        let text = c.prometheus_text();
+        for needle in [
+            "# TYPE psf_requests_admitted_total counter",
+            "psf_requests_admitted_total 7",
+            "# TYPE psf_cache_bytes gauge",
+            "psf_cache_bytes 1024",
+            "# TYPE psf_ttft_seconds histogram",
+            "psf_ttft_seconds_count 1",
+            "psf_queue_wait_seconds_count 1",
+            "psf_ipc_rtt_seconds_count 1",
+            "psf_cache_lookup_seconds_count 1",
+            "psf_token_latency_seconds_count 1",
+            "psf_ttft_seconds_bucket{le=\"+Inf\"} 1",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
     }
 
     #[test]

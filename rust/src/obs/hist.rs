@@ -1,0 +1,228 @@
+//! Fixed-bucket atomic histograms for latency distributions.
+//!
+//! A [`Hist`] is a set of ascending upper bounds plus an implicit `+Inf`
+//! bucket, each backed by an `AtomicU64` — `observe` is one binary
+//! search and three relaxed atomic adds, memory is fixed at
+//! construction forever (the bounded replacement for the old
+//! grow-without-limit percentile vecs in `ServeCounters`).  Percentiles
+//! come from linear interpolation inside the owning bucket, and the
+//! whole thing renders as Prometheus text exposition (cumulative `le`
+//! buckets, `_sum`, `_count`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Fixed-bound histogram; values are seconds unless stated otherwise.
+pub struct Hist {
+    /// Ascending bucket upper bounds; an implicit `+Inf` bucket follows.
+    bounds: Vec<f64>,
+    /// Per-bucket counts, `bounds.len() + 1` entries.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Accumulated value in microseconds (u64 add is atomic; f64 isn't).
+    sum_us: AtomicU64,
+}
+
+/// Default latency bounds: 50 µs to 60 s in a roughly 1-2.5-5 ladder —
+/// wide enough for cache lookups (µs) and cold 32k prefills (seconds).
+pub const LATENCY_BOUNDS: &[f64] = &[
+    50e-6, 100e-6, 250e-6, 500e-6, 1e-3, 2.5e-3, 5e-3, 10e-3, 25e-3, 50e-3, 0.1, 0.25, 0.5, 1.0,
+    2.5, 5.0, 10.0, 30.0, 60.0,
+];
+
+impl Hist {
+    /// Build from ascending, finite, positive upper bounds.
+    pub fn new(bounds: &[f64]) -> Hist {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]) && bounds.iter().all(|b| b.is_finite() && *b > 0.0),
+            "histogram bounds must be ascending, finite, positive"
+        );
+        let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Hist { bounds: bounds.to_vec(), buckets, count: AtomicU64::new(0), sum_us: AtomicU64::new(0) }
+    }
+
+    /// The standard latency histogram every serving metric uses.
+    pub fn latency() -> Hist {
+        Hist::new(LATENCY_BOUNDS)
+    }
+
+    /// Record one sample.  Non-finite or negative samples count into the
+    /// `+Inf` / first bucket rather than panicking (telemetry must never
+    /// take the server down).
+    pub fn observe(&self, secs: f64) {
+        let idx = if secs.is_nan() {
+            self.bounds.len() // NaN -> +Inf bucket
+        } else {
+            self.bounds.partition_point(|b| *b < secs)
+        };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let us = if secs.is_finite() && secs > 0.0 { (secs * 1e6) as u64 } else { 0 };
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Per-bucket counts (last entry is the `+Inf` bucket).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// `q`-th percentile (`0.0..=100.0`) by linear interpolation inside
+    /// the owning bucket; 0.0 on an empty histogram.  Samples beyond the
+    /// last bound report the last bound (the histogram's resolution
+    /// limit — a documented property, not a bug).
+    pub fn percentile(&self, q: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 100.0);
+        let rank = ((q / 100.0 * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if cum + c >= rank {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = match self.bounds.get(i) {
+                    Some(b) => *b,
+                    None => return *self.bounds.last().expect("bounds nonempty"),
+                };
+                let frac = (rank - cum) as f64 / c as f64;
+                return lo + (hi - lo) * frac;
+            }
+            cum += c;
+        }
+        *self.bounds.last().expect("bounds nonempty")
+    }
+
+    /// Append Prometheus text exposition for this histogram: cumulative
+    /// `le` buckets, `+Inf`, `_sum`, `_count`.
+    pub fn prometheus_into(&self, name: &str, help: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let counts = self.bucket_counts();
+        let mut cum = 0u64;
+        for (i, bound) in self.bounds.iter().enumerate() {
+            cum += counts[i];
+            let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cum}");
+        }
+        cum += counts[self.bounds.len()];
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "{name}_sum {}", self.sum_secs());
+        let _ = writeln!(out, "{name}_count {}", self.count());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_values_land_in_their_bound_bucket() {
+        // `le` semantics: a sample exactly on a bound counts into that
+        // bound's bucket (bucket upper bounds are inclusive).
+        let h = Hist::new(&[1.0, 2.0, 4.0]);
+        h.observe(1.0);
+        h.observe(2.0);
+        h.observe(4.0);
+        h.observe(4.0001);
+        assert_eq!(h.bucket_counts(), vec![1, 1, 1, 1]);
+        assert_eq!(h.count(), 4);
+    }
+
+    #[test]
+    fn below_first_bound_and_overflow() {
+        let h = Hist::new(&[0.5]);
+        h.observe(0.0);
+        h.observe(0.2);
+        h.observe(9.0);
+        assert_eq!(h.bucket_counts(), vec![2, 1]);
+        // +Inf samples report the last bound (resolution limit).
+        assert_eq!(h.percentile(100.0), 0.5);
+    }
+
+    #[test]
+    fn nonfinite_samples_do_not_panic() {
+        let h = Hist::new(&[1.0]);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        h.observe(-3.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.bucket_counts()[1], 2); // NaN + Inf overflow
+        assert_eq!(h.bucket_counts()[0], 1); // negative clamps low
+        assert_eq!(h.sum_secs(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate_and_stay_monotonic() {
+        let h = Hist::latency();
+        for i in 1..=100 {
+            h.observe(0.001 * i as f64); // 1ms ..= 100ms
+        }
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 >= 0.025 && p50 <= 0.05, "p50 {p50}");
+        assert!(p99 > p50 && p99 <= 0.1, "p99 {p99}");
+        let mut last = 0.0;
+        for q in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let v = h.percentile(q);
+            assert!(v >= last, "percentile not monotonic at q={q}: {v} < {last}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Hist::latency();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum_secs(), 0.0);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let h = Hist::new(&[0.5, 1.0]);
+        h.observe(0.1);
+        h.observe(0.7);
+        h.observe(2.0);
+        let mut out = String::new();
+        h.prometheus_into("psf_test_seconds", "test", &mut out);
+        let want = [
+            "# HELP psf_test_seconds test",
+            "# TYPE psf_test_seconds histogram",
+            "psf_test_seconds_bucket{le=\"0.5\"} 1",
+            "psf_test_seconds_bucket{le=\"1\"} 2",
+            "psf_test_seconds_bucket{le=\"+Inf\"} 3",
+            "psf_test_seconds_count 3",
+        ];
+        for line in want {
+            assert!(out.contains(line), "missing {line:?} in:\n{out}");
+        }
+        // Cumulative: each bucket count >= the previous one (checked
+        // above by construction: 1 <= 2 <= 3).
+        assert!(out.contains("psf_test_seconds_sum 2.8"), "{out}");
+    }
+
+    #[test]
+    fn memory_is_fixed_under_sustained_load() {
+        // The regression this module exists for: the old percentile vec
+        // grew per request.  A histogram's footprint is its bucket count,
+        // independent of samples.
+        let h = Hist::latency();
+        let buckets_before = h.bucket_counts().len();
+        for i in 0..100_000u64 {
+            h.observe((i % 977) as f64 * 1e-4);
+        }
+        assert_eq!(h.bucket_counts().len(), buckets_before);
+        assert_eq!(h.count(), 100_000);
+        assert!(h.percentile(50.0) > 0.0);
+    }
+}

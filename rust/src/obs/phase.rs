@@ -1,0 +1,210 @@
+//! Per-phase profiling accumulators: global `(nanos, count)` pairs, one
+//! per [`Phase`], fed by hooks in the kernel engines, the exec pool, and
+//! the trainer.
+//!
+//! This is the *only* sanctioned timing path inside `attn/kernel/` and
+//! `tensor/` (CI greps for raw `Instant::now()` there): an engine asks
+//! for a [`timer`], which is `None` — one relaxed load, no clock read —
+//! unless phase accounting is on.  Accumulators are write-only
+//! telemetry; nothing here feeds back into computation, so enabling
+//! phases cannot change a single output byte.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Instrumented phases.  Kernel phases mirror the linear engine's
+/// block-lower-triangular decomposition — exactly the breakdown the
+/// SIMD work needs to target (feature expansion vs prefix multiply vs
+/// diagonal scores vs output emit).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Linear engine: mapping raw q/k rows through the feature map.
+    LinMap,
+    /// Linear engine: diagonal-block score computation.
+    LinScores,
+    /// Linear engine: prefix contribution `phi(q) . Z`.
+    LinPrefix,
+    /// Linear engine: diagonal accumulate + normalized output emit.
+    LinEmit,
+    /// Linear engine: folding a full block into Z.
+    LinFold,
+    /// Linear engine: one decode step (recurrence update + output).
+    LinStep,
+    /// Quadratic engine: the attention computation itself.
+    QuadAttn,
+    /// Quadratic engine: capturing the KV decode state after prefill.
+    QuadCapture,
+    /// Quadratic engine: one decode step over the KV cache.
+    QuadStep,
+    /// Exec pool workers: time inside claimed batch chunks.
+    PoolBusy,
+    /// Exec pool workers: time blocked waiting for work.
+    PoolIdle,
+    /// Trainer: forward + backward (gradient computation).
+    TrainGrad,
+    /// Trainer: optimizer step (AdamW + clip).
+    TrainOptim,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 13] = [
+        Phase::LinMap,
+        Phase::LinScores,
+        Phase::LinPrefix,
+        Phase::LinEmit,
+        Phase::LinFold,
+        Phase::LinStep,
+        Phase::QuadAttn,
+        Phase::QuadCapture,
+        Phase::QuadStep,
+        Phase::PoolBusy,
+        Phase::PoolIdle,
+        Phase::TrainGrad,
+        Phase::TrainOptim,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::LinMap => "lin_map",
+            Phase::LinScores => "lin_scores",
+            Phase::LinPrefix => "lin_prefix",
+            Phase::LinEmit => "lin_emit",
+            Phase::LinFold => "lin_fold",
+            Phase::LinStep => "lin_step",
+            Phase::QuadAttn => "quad_attn",
+            Phase::QuadCapture => "quad_capture",
+            Phase::QuadStep => "quad_step",
+            Phase::PoolBusy => "pool_busy",
+            Phase::PoolIdle => "pool_idle",
+            Phase::TrainGrad => "train_grad",
+            Phase::TrainOptim => "train_optim",
+        }
+    }
+
+    fn index(self) -> usize {
+        Phase::ALL.iter().position(|p| *p == self).expect("phase in ALL")
+    }
+}
+
+struct Stat {
+    nanos: AtomicU64,
+    count: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)] // const used only as array initializer
+const ZERO_STAT: Stat = Stat { nanos: AtomicU64::new(0), count: AtomicU64::new(0) };
+static STATS: [Stat; Phase::ALL.len()] = [ZERO_STAT; Phase::ALL.len()];
+
+/// Add `nanos` to a phase directly (for callers that already hold a
+/// duration, like the pool's idle accounting).
+pub fn add(phase: Phase, nanos: u64) {
+    let s = &STATS[phase.index()];
+    s.nanos.fetch_add(nanos, Ordering::Relaxed);
+    s.count.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A clock reading for later [`add_since`], `None` when phases are off.
+#[inline]
+pub fn maybe_now() -> Option<Instant> {
+    if super::phases_on() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Accumulate the elapsed time since a [`maybe_now`] reading (no-op for
+/// `None`).  Returns a fresh reading taken at the same clock sample, so
+/// back-to-back phases can hand the timer off without gaps:
+/// `let t = add_since(Phase::A, t); ... add_since(Phase::B, t);`
+#[inline]
+pub fn add_since(phase: Phase, t0: Option<Instant>) -> Option<Instant> {
+    t0.map(|t0| {
+        let now = Instant::now();
+        add(phase, now.duration_since(t0).as_nanos() as u64);
+        now
+    })
+}
+
+/// RAII phase timer: accumulates on drop.  `None` when phases are off —
+/// bind with `let _t = timer(...)` and the off-path is one relaxed load.
+#[inline]
+pub fn timer(phase: Phase) -> Option<PhaseTimer> {
+    if super::phases_on() {
+        Some(PhaseTimer { phase, t0: Instant::now() })
+    } else {
+        None
+    }
+}
+
+pub struct PhaseTimer {
+    phase: Phase,
+    t0: Instant,
+}
+
+impl Drop for PhaseTimer {
+    fn drop(&mut self) {
+        add(self.phase, self.t0.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Snapshot of every phase with a nonzero count: `(name, nanos, count)`.
+pub fn totals() -> Vec<(&'static str, u64, u64)> {
+    Phase::ALL
+        .iter()
+        .map(|p| {
+            let s = &STATS[p.index()];
+            (p.name(), s.nanos.load(Ordering::Relaxed), s.count.load(Ordering::Relaxed))
+        })
+        .filter(|(_, n, c)| *n > 0 || *c > 0)
+        .collect()
+}
+
+/// Zero every accumulator (benches call this between sweep points).
+pub fn reset() {
+    for s in &STATS {
+        s.nanos.store(0, Ordering::Relaxed);
+        s.count.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_stable() {
+        let names: Vec<_> = Phase::ALL.iter().map(|p| p.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate phase name");
+        assert_eq!(Phase::LinScores.name(), "lin_scores");
+    }
+
+    #[test]
+    fn add_accumulates_and_reset_clears() {
+        // Global state: keep this test self-consistent under concurrent
+        // unit tests by checking deltas on one rarely-used phase.
+        let before: u64 = totals()
+            .iter()
+            .find(|(n, _, _)| *n == "train_optim")
+            .map(|(_, ns, _)| *ns)
+            .unwrap_or(0);
+        add(Phase::TrainOptim, 1234);
+        let after: u64 = totals()
+            .iter()
+            .find(|(n, _, _)| *n == "train_optim")
+            .map(|(_, ns, _)| *ns)
+            .unwrap_or(0);
+        assert!(after >= before + 1234);
+    }
+
+    #[test]
+    fn timer_is_none_when_off() {
+        if !super::super::phases_on() {
+            assert!(timer(Phase::LinMap).is_none());
+            assert!(maybe_now().is_none());
+        }
+    }
+}

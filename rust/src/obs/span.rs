@@ -1,0 +1,208 @@
+//! Span tracing: thread-local span stacks feeding per-thread ring
+//! buffers of completed events.
+//!
+//! A [`Span`] is an RAII guard: construction records the start
+//! timestamp, drop records the duration and pushes one event into the
+//! calling thread's buffer.  Buffers are bounded rings ([`RING_CAP`]
+//! events; oldest dropped first, with a drop counter) registered in a
+//! global list so [`drain_all`] can collect everything at flush time.
+//!
+//! Timestamps are wall-clock microseconds: a per-process base pair
+//! (`SystemTime` + `Instant`) is captured once, and every event stamp is
+//! `wall_base + monotonic_elapsed` — monotonic within a process, and
+//! roughly aligned *across* processes so gateway and runner spans land
+//! on one Perfetto timeline.  Exact cross-process ordering is not
+//! promised; the shared trace id is what stitches a request together.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Per-thread event capacity.  At ~100 bytes/event this bounds tracing
+/// memory to a few MiB per thread no matter how long the server runs.
+pub const RING_CAP: usize = 1 << 16;
+
+/// One completed span, ready for trace-event export.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub name: String,
+    /// Category shown in the trace UI (`gateway` / `serve` / `kernel` /
+    /// `train` / `shard`).
+    pub cat: &'static str,
+    /// Start, microseconds since the UNIX epoch.
+    pub ts_us: u64,
+    pub dur_us: u64,
+    /// Small per-process thread ordinal (not the OS tid).
+    pub tid: u64,
+    /// Request trace id active on the thread when the span closed
+    /// (0 = none).
+    pub trace_id: u64,
+    /// Nesting depth at open (0 = top-level span on its thread).
+    pub depth: u32,
+}
+
+struct ThreadBuf {
+    tid: u64,
+    events: Mutex<VecDeque<Event>>,
+    dropped: AtomicU64,
+}
+
+static REGISTRY: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TRACE_ID: Cell<u64> = const { Cell::new(0) };
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+    static BUF: RefCell<Option<Arc<ThreadBuf>>> = const { RefCell::new(None) };
+}
+
+/// (wall µs at base, monotonic base) — captured once per process.
+fn time_base() -> &'static (u64, Instant) {
+    static BASE: OnceLock<(u64, Instant)> = OnceLock::new();
+    BASE.get_or_init(|| {
+        let wall =
+            SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_micros() as u64).unwrap_or(0);
+        (wall, Instant::now())
+    })
+}
+
+/// Current timestamp in epoch microseconds (monotonic within the
+/// process).
+pub(crate) fn now_us() -> u64 {
+    let (wall, mono) = *time_base();
+    wall + mono.elapsed().as_micros() as u64
+}
+
+/// Set the request trace id for spans opened on this thread from now on.
+/// Worker threads call this when they pick up a job; handler threads
+/// when they admit a request.
+pub fn set_trace_id(id: u64) {
+    TRACE_ID.with(|t| t.set(id));
+}
+
+/// The trace id active on this thread (0 = none).
+pub fn current_trace_id() -> u64 {
+    TRACE_ID.with(|t| t.get())
+}
+
+/// Open a span.  When tracing is off this is one relaxed load and a
+/// no-op guard — no clock read, no allocation.
+pub fn span(name: &str, cat: &'static str) -> Span {
+    if !super::tracing_on() {
+        return Span { name: String::new(), cat, start_us: 0, depth: 0, active: false };
+    }
+    let depth = DEPTH.with(|d| {
+        let v = d.get();
+        d.set(v + 1);
+        v
+    });
+    Span { name: name.to_string(), cat, start_us: now_us(), depth, active: true }
+}
+
+/// RAII span guard — see [`span`].
+pub struct Span {
+    name: String,
+    cat: &'static str,
+    start_us: u64,
+    depth: u32,
+    active: bool,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        let dur_us = now_us().saturating_sub(self.start_us);
+        let ev = Event {
+            name: std::mem::take(&mut self.name),
+            cat: self.cat,
+            ts_us: self.start_us,
+            dur_us,
+            tid: 0, // stamped in push_event
+            trace_id: current_trace_id(),
+            depth: self.depth,
+        };
+        push_event(ev);
+    }
+}
+
+fn push_event(mut ev: Event) {
+    BUF.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let buf = slot.get_or_insert_with(|| {
+            let buf = Arc::new(ThreadBuf {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                events: Mutex::new(VecDeque::new()),
+                dropped: AtomicU64::new(0),
+            });
+            REGISTRY.lock().expect("obs span registry").push(Arc::clone(&buf));
+            buf
+        });
+        ev.tid = buf.tid;
+        let mut q = buf.events.lock().expect("obs span ring");
+        if q.len() >= RING_CAP {
+            q.pop_front();
+            buf.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(ev);
+    });
+}
+
+/// Take every buffered event from every thread (clearing the buffers)
+/// plus the total count of events dropped to ring overflow.
+pub fn drain_all() -> (Vec<Event>, u64) {
+    let registry = REGISTRY.lock().expect("obs span registry");
+    let mut out = Vec::new();
+    let mut dropped = 0u64;
+    for buf in registry.iter() {
+        let drained = std::mem::take(&mut *buf.events.lock().expect("obs span ring"));
+        out.extend(drained);
+        dropped += buf.dropped.swap(0, Ordering::Relaxed);
+    }
+    out.sort_by_key(|e| e.ts_us);
+    (out, dropped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The span substrate is global per-process; integration-level
+    // lifecycle tests live in `tests/obs_trace.rs` (their own process).
+    // Here: only the parts testable without toggling the global flag.
+
+    #[test]
+    fn trace_id_is_thread_local() {
+        set_trace_id(0xabc);
+        assert_eq!(current_trace_id(), 0xabc);
+        let other = std::thread::spawn(|| current_trace_id()).join().unwrap();
+        assert_eq!(other, 0, "fresh thread starts with no trace id");
+        set_trace_id(0);
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        if super::super::tracing_on() {
+            return; // another test enabled tracing; skip rather than race
+        }
+        let before = REGISTRY.lock().unwrap().len();
+        {
+            let _s = span("noop", "test");
+        }
+        assert_eq!(REGISTRY.lock().unwrap().len(), before, "no buffer registered when off");
+        DEPTH.with(|d| assert_eq!(d.get(), 0));
+    }
+
+    #[test]
+    fn now_us_is_monotonic() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+        // Sanity: the base is a plausible epoch stamp (after 2020).
+        assert!(a > 1_577_836_800_000_000, "epoch base looks wrong: {a}");
+    }
+}

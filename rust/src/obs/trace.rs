@@ -1,0 +1,775 @@
+//! Chrome trace-event export, parsing, merging, and reporting.
+//!
+//! The export is the JSON *object* flavor of the trace-event format —
+//! `{"traceEvents": [...]}` with `"X"` (complete) events carrying
+//! `ts`/`dur` in microseconds — loadable directly in Perfetto or
+//! `chrome://tracing`.  Two PSF-specific extensions ride along as extra
+//! top-level keys (legal in the format, ignored by viewers):
+//! `psf_phases` (the kernel/pool phase accumulator totals) and `psf`
+//! (drop counters).  The request trace id crosses as a hex string in
+//! each event's `args` (u64 doesn't survive JS number precision).
+//!
+//! The parser is a minimal full-JSON reader (objects, arrays, strings,
+//! numbers) — the flat parser in `serve::http` deliberately rejects
+//! nesting, and `trace-report` / the shutdown merge need to re-read
+//! files this module wrote (runner processes flush their own trace
+//! files; the gateway merges them into one timeline at drain).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::span::Event;
+
+/// One parsed trace event (only the fields this crate emits/uses).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub ph: String,
+    pub name: String,
+    pub cat: String,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub pid: u64,
+    pub tid: u64,
+    /// Request trace id from `args.trace_id` (hex), 0 when absent.
+    pub trace_id: u64,
+    pub depth: u32,
+}
+
+/// A parsed trace file: events + the PSF phase totals extension.
+#[derive(Clone, Debug, Default)]
+pub struct TraceFile {
+    pub events: Vec<TraceEvent>,
+    /// `(phase name, nanos, count)` — summed on merge.
+    pub phases: Vec<(String, u64, u64)>,
+    pub dropped: u64,
+}
+
+// ----------------------------------------------------------------- write
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn process_label() -> String {
+    // "psf serve" / "psf runner" — argv[0] basename + subcommand.
+    let mut args = std::env::args();
+    let exe = args
+        .next()
+        .map(|a| {
+            Path::new(&a).file_name().map(|f| f.to_string_lossy().into_owned()).unwrap_or(a.clone())
+        })
+        .unwrap_or_else(|| "psf".into());
+    match args.next() {
+        Some(sub) => format!("{exe} {sub}"),
+        None => exe,
+    }
+}
+
+fn write_file(
+    path: &Path,
+    events: &[TraceEvent],
+    phases: &[(String, u64, u64)],
+    dropped: u64,
+    labels: &[(u64, String)],
+) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut out = String::with_capacity(events.len() * 128 + 1024);
+    out.push_str("{\n\"displayTimeUnit\": \"ms\",\n");
+    let _ = writeln!(out, "\"psf\": {{\"dropped_events\": {dropped}}},");
+    out.push_str("\"psf_phases\": [");
+    for (i, (name, nanos, count)) in phases.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "\n  {{\"name\": {}, \"nanos\": {nanos}, \"count\": {count}}}", esc(name));
+    }
+    out.push_str("\n],\n\"traceEvents\": [");
+    let mut first = true;
+    let mut sep = |out: &mut String| {
+        if first {
+            first = false;
+        } else {
+            out.push(',');
+        }
+        out.push_str("\n  ");
+    };
+    for (pid, label) in labels {
+        sep(&mut out);
+        let _ = write!(
+            out,
+            "{{\"ph\": \"M\", \"name\": \"process_name\", \"pid\": {pid}, \"tid\": 0, \
+             \"args\": {{\"name\": {}}}}}",
+            esc(label)
+        );
+    }
+    for ev in events {
+        sep(&mut out);
+        let _ = write!(
+            out,
+            "{{\"ph\": {}, \"name\": {}, \"cat\": {}, \"ts\": {}, \"dur\": {}, \"pid\": {}, \
+             \"tid\": {}, \"args\": {{\"trace_id\": \"{:#x}\", \"depth\": {}}}}}",
+            esc(&ev.ph),
+            esc(&ev.name),
+            esc(&ev.cat),
+            ev.ts_us,
+            ev.dur_us,
+            ev.pid,
+            ev.tid,
+            ev.trace_id,
+            ev.depth,
+        );
+    }
+    out.push_str("\n]\n}\n");
+    std::fs::write(path, out)
+}
+
+fn live_events(events: &[Event]) -> Vec<TraceEvent> {
+    let pid = std::process::id() as u64;
+    events
+        .iter()
+        .map(|e| TraceEvent {
+            ph: "X".into(),
+            name: e.name.clone(),
+            cat: e.cat.into(),
+            ts_us: e.ts_us,
+            dur_us: e.dur_us,
+            pid,
+            tid: e.tid,
+            trace_id: e.trace_id,
+            depth: e.depth,
+        })
+        .collect()
+}
+
+/// Write this process's drained events + phase totals as a fresh trace.
+pub fn write(
+    path: &Path,
+    events: &[Event],
+    phases: &[(&'static str, u64, u64)],
+    dropped: u64,
+) -> io::Result<()> {
+    let owned: Vec<(String, u64, u64)> =
+        phases.iter().map(|(n, a, b)| (n.to_string(), *a, *b)).collect();
+    let pid = std::process::id() as u64;
+    write_file(path, &live_events(events), &owned, dropped, &[(pid, process_label())])
+}
+
+/// Merge this process's drained events into an existing trace file
+/// (periodic flushes, or a signal-hook flush followed by the drain-path
+/// flush, must not duplicate or clobber earlier spans).
+pub fn append(
+    path: &Path,
+    events: &[Event],
+    phases: &[(&'static str, u64, u64)],
+    dropped: u64,
+) -> io::Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let mut tf = parse(&text)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("{}: {e}", path.display())))?;
+    tf.events.extend(live_events(events));
+    let mut sums: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+    for (n, ns, c) in tf.phases.drain(..) {
+        let e = sums.entry(n).or_insert((0, 0));
+        e.0 += ns;
+        e.1 += c;
+    }
+    for (n, ns, c) in phases {
+        let e = sums.entry(n.to_string()).or_insert((0, 0));
+        e.0 += ns;
+        e.1 += c;
+    }
+    let merged: Vec<(String, u64, u64)> =
+        sums.into_iter().map(|(n, (ns, c))| (n, ns, c)).collect();
+    let pid = std::process::id() as u64;
+    write_file(path, &tf.events, &merged, tf.dropped + dropped, &[(pid, process_label())])
+}
+
+/// Merge extra trace files (runner children flush their own) into
+/// `main`, producing one Perfetto-loadable timeline whose events keep
+/// their original pids.  Unreadable/unparsable extras are skipped with a
+/// warning — a half-written runner trace must not break gateway
+/// shutdown.  Returns the total merged event count.
+pub fn merge_files(main: &Path, extras: &[PathBuf]) -> io::Result<usize> {
+    let mut merged = match std::fs::read_to_string(main) {
+        Ok(text) => parse(&text).map_err(|e| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("{}: {e}", main.display()))
+        })?,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => TraceFile::default(),
+        Err(e) => return Err(e),
+    };
+    let mut phase_sums: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+    for (n, ns, c) in merged.phases.drain(..) {
+        let e = phase_sums.entry(n).or_insert((0, 0));
+        e.0 += ns;
+        e.1 += c;
+    }
+    for extra in extras {
+        let text = match std::fs::read_to_string(extra) {
+            Ok(t) => t,
+            Err(_) => continue, // runner died before flushing: skip
+        };
+        match parse(&text) {
+            Ok(tf) => {
+                merged.events.extend(tf.events);
+                merged.dropped += tf.dropped;
+                for (n, ns, c) in tf.phases {
+                    let e = phase_sums.entry(n).or_insert((0, 0));
+                    e.0 += ns;
+                    e.1 += c;
+                }
+                let _ = std::fs::remove_file(extra); // subsumed by the merge
+            }
+            Err(e) => eprintln!("psf: skipping unparsable trace {}: {e}", extra.display()),
+        }
+    }
+    merged.events.sort_by_key(|e| e.ts_us);
+    merged.phases = phase_sums.into_iter().map(|(n, (ns, c))| (n, ns, c)).collect();
+    write_file(main, &merged.events, &merged.phases, merged.dropped, &[])?;
+    Ok(merged.events.len())
+}
+
+// ----------------------------------------------------------------- parse
+
+#[derive(Clone, Debug, PartialEq)]
+enum JVal {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JVal>),
+    Obj(Vec<(String, JVal)>),
+}
+
+impl JVal {
+    fn get(&self, key: &str) -> Option<&JVal> {
+        match self {
+            JVal::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_u64(&self) -> Option<u64> {
+        match self {
+            JVal::Num(n) if *n >= 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            JVal::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn next(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, want: u8) -> Result<(), String> {
+        match self.next() {
+            Some(c) if c == want => Ok(()),
+            other => Err(format!(
+                "byte {}: expected `{}`, got {:?}",
+                self.pos,
+                want as char,
+                other.map(char::from)
+            )),
+        }
+    }
+
+    fn value(&mut self) -> Result<JVal, String> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JVal::Str(self.string()?)),
+            Some(b't') => self.literal("true", JVal::Bool(true)),
+            Some(b'f') => self.literal("false", JVal::Bool(false)),
+            Some(b'n') => self.literal("null", JVal::Null),
+            Some(_) => self.number(),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn literal(&mut self, word: &str, val: JVal) -> Result<JVal, String> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(val)
+        } else {
+            Err(format!("byte {}: bad literal (expected {word})", self.pos))
+        }
+    }
+
+    fn number(&mut self) -> Result<JVal, String> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.pos]).map_err(|e| e.to_string())?;
+        text.parse::<f64>().map(JVal::Num).map_err(|_| format!("bad number `{text}`"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.next() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.next() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        if self.pos + 4 > self.b.len() {
+                            return Err("truncated \\u escape".into());
+                        }
+                        let hex = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
+                            .map_err(|e| e.to_string())?;
+                        let code =
+                            u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape".to_string())?;
+                        self.pos += 4;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    other => return Err(format!("bad escape {:?}", other.map(char::from))),
+                },
+                Some(c) if c < 0x80 => out.push(c as char),
+                Some(c) => {
+                    let len = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    let start = self.pos - 1;
+                    if start + len > self.b.len() {
+                        return Err("truncated utf-8 scalar".into());
+                    }
+                    let s = std::str::from_utf8(&self.b[start..start + len])
+                        .map_err(|e| e.to_string())?;
+                    out.push_str(s);
+                    self.pos = start + len;
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JVal, String> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JVal::Obj(kv));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            kv.push((key, val));
+            self.ws();
+            match self.next() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(JVal::Obj(kv)),
+                other => {
+                    return Err(format!(
+                        "byte {}: expected `,` or `}}`, got {:?}",
+                        self.pos,
+                        other.map(char::from)
+                    ))
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JVal, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JVal::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.ws();
+            match self.next() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(JVal::Arr(items)),
+                other => {
+                    return Err(format!(
+                        "byte {}: expected `,` or `]`, got {:?}",
+                        self.pos,
+                        other.map(char::from)
+                    ))
+                }
+            }
+        }
+    }
+}
+
+fn parse_trace_id(args: Option<&JVal>) -> u64 {
+    let Some(s) = args.and_then(|a| a.get("trace_id")).and_then(|v| v.as_str()) else {
+        return 0;
+    };
+    let hex = s.strip_prefix("0x").unwrap_or(s);
+    u64::from_str_radix(hex, 16).unwrap_or(0)
+}
+
+/// Parse a trace file written by this module (tolerates any valid
+/// trace-event object JSON; unknown keys are ignored).
+pub fn parse(text: &str) -> Result<TraceFile, String> {
+    let mut p = Parser { b: text.as_bytes(), pos: 0 };
+    let root = p.value()?;
+    p.ws();
+    if p.pos != p.b.len() {
+        return Err(format!("trailing bytes after trace object at {}", p.pos));
+    }
+    let Some(JVal::Arr(raw_events)) = root.get("traceEvents").cloned() else {
+        return Err("missing traceEvents array".into());
+    };
+    let mut events = Vec::with_capacity(raw_events.len());
+    for ev in &raw_events {
+        let ph = ev.get("ph").and_then(|v| v.as_str()).unwrap_or("X").to_string();
+        if ph != "X" {
+            continue; // metadata rows aren't spans
+        }
+        events.push(TraceEvent {
+            ph,
+            name: ev.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+            cat: ev.get("cat").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            ts_us: ev.get("ts").and_then(|v| v.as_u64()).ok_or("event missing ts")?,
+            dur_us: ev.get("dur").and_then(|v| v.as_u64()).unwrap_or(0),
+            pid: ev.get("pid").and_then(|v| v.as_u64()).unwrap_or(0),
+            tid: ev.get("tid").and_then(|v| v.as_u64()).unwrap_or(0),
+            trace_id: parse_trace_id(ev.get("args")),
+            depth: ev
+                .get("args")
+                .and_then(|a| a.get("depth"))
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0) as u32,
+        });
+    }
+    let mut phases = Vec::new();
+    if let Some(JVal::Arr(raw)) = root.get("psf_phases") {
+        for ph in raw {
+            let name = ph.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+            let nanos = ph.get("nanos").and_then(|v| v.as_u64()).unwrap_or(0);
+            let count = ph.get("count").and_then(|v| v.as_u64()).unwrap_or(0);
+            phases.push((name, nanos, count));
+        }
+    }
+    let dropped = root
+        .get("psf")
+        .and_then(|p| p.get("dropped_events"))
+        .and_then(|v| v.as_u64())
+        .unwrap_or(0);
+    Ok(TraceFile { events, phases, dropped })
+}
+
+// ---------------------------------------------------------------- report
+
+/// Per-name self-time aggregation: spans on one thread are properly
+/// nested (RAII), so a ts-ordered stack replay attributes each span's
+/// duration minus its direct children's durations as *self* time.
+fn self_times(tf: &TraceFile) -> Vec<(String, String, u64, u64, u64)> {
+    let mut by_thread: BTreeMap<(u64, u64), Vec<usize>> = BTreeMap::new();
+    for (i, ev) in tf.events.iter().enumerate() {
+        by_thread.entry((ev.pid, ev.tid)).or_default().push(i);
+    }
+    let mut self_us: Vec<u64> = tf.events.iter().map(|e| e.dur_us).collect();
+    for idxs in by_thread.values_mut() {
+        idxs.sort_by_key(|&i| (tf.events[i].ts_us, std::cmp::Reverse(tf.events[i].dur_us)));
+        let mut stack: Vec<usize> = Vec::new();
+        for &i in idxs.iter() {
+            let ev = &tf.events[i];
+            while let Some(&top) = stack.last() {
+                let t = &tf.events[top];
+                if t.ts_us + t.dur_us <= ev.ts_us {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&parent) = stack.last() {
+                self_us[parent] = self_us[parent].saturating_sub(ev.dur_us);
+            }
+            stack.push(i);
+        }
+    }
+    // (name, cat) -> (count, total, self)
+    let mut agg: BTreeMap<(String, String), (u64, u64, u64)> = BTreeMap::new();
+    for (i, ev) in tf.events.iter().enumerate() {
+        let e = agg.entry((ev.name.clone(), ev.cat.clone())).or_insert((0, 0, 0));
+        e.0 += 1;
+        e.1 += ev.dur_us;
+        e.2 += self_us[i];
+    }
+    let mut rows: Vec<(String, String, u64, u64, u64)> =
+        agg.into_iter().map(|((n, c), (cnt, tot, slf))| (n, c, cnt, tot, slf)).collect();
+    rows.sort_by_key(|r| std::cmp::Reverse(r.4));
+    rows
+}
+
+/// Human-readable summary: overview, trace-id stitching, top spans by
+/// self time, and the kernel/pool phase breakdown.
+pub fn report(tf: &TraceFile, top: usize) -> String {
+    let mut out = String::new();
+    let pids: std::collections::BTreeSet<u64> = tf.events.iter().map(|e| e.pid).collect();
+    let tids: std::collections::BTreeSet<(u64, u64)> =
+        tf.events.iter().map(|e| (e.pid, e.tid)).collect();
+    let (lo, hi) = tf.events.iter().fold((u64::MAX, 0u64), |(lo, hi), e| {
+        (lo.min(e.ts_us), hi.max(e.ts_us + e.dur_us))
+    });
+    let wall_ms = if tf.events.is_empty() { 0.0 } else { (hi - lo) as f64 / 1e3 };
+    let _ = writeln!(
+        out,
+        "trace report: {} events, {} processes, {} threads, wall {:.2} ms, dropped {}",
+        tf.events.len(),
+        pids.len(),
+        tids.len(),
+        wall_ms,
+        tf.dropped
+    );
+
+    // Trace-id stitching: which requests span which processes.
+    let mut ids: BTreeMap<u64, std::collections::BTreeSet<u64>> = BTreeMap::new();
+    let mut id_events: BTreeMap<u64, u64> = BTreeMap::new();
+    for ev in &tf.events {
+        if ev.trace_id != 0 {
+            ids.entry(ev.trace_id).or_default().insert(ev.pid);
+            *id_events.entry(ev.trace_id).or_insert(0) += 1;
+        }
+    }
+    let _ = writeln!(out, "trace ids: {} distinct", ids.len());
+    for (id, pids) in ids.iter().take(8) {
+        let _ = writeln!(
+            out,
+            "  trace {:#x}: {} events across {} process{}",
+            id,
+            id_events[id],
+            pids.len(),
+            if pids.len() == 1 { "" } else { "es" }
+        );
+    }
+
+    let rows = self_times(tf);
+    if !rows.is_empty() {
+        let _ = writeln!(out, "top spans by self time:");
+        let _ = writeln!(
+            out,
+            "  {:<24} {:<8} {:>8} {:>12} {:>12} {:>10}",
+            "span", "cat", "count", "total ms", "self ms", "avg us"
+        );
+        for (name, cat, count, total, slf) in rows.iter().take(top) {
+            let _ = writeln!(
+                out,
+                "  {:<24} {:<8} {:>8} {:>12.3} {:>12.3} {:>10.1}",
+                name,
+                cat,
+                count,
+                *total as f64 / 1e3,
+                *slf as f64 / 1e3,
+                *total as f64 / (*count).max(1) as f64
+            );
+        }
+    }
+
+    if !tf.phases.is_empty() {
+        let kernel_total: u64 = tf
+            .phases
+            .iter()
+            .filter(|(n, _, _)| n.starts_with("lin_") || n.starts_with("quad_"))
+            .map(|(_, ns, _)| *ns)
+            .sum();
+        let _ = writeln!(out, "kernel/pool phase breakdown:");
+        let _ = writeln!(
+            out,
+            "  {:<14} {:>10} {:>12} {:>10} {:>8}",
+            "phase", "calls", "total ms", "avg us", "share"
+        );
+        for (name, nanos, count) in &tf.phases {
+            let share = if kernel_total > 0 && (name.starts_with("lin_") || name.starts_with("quad_"))
+            {
+                format!("{:.1}%", *nanos as f64 / kernel_total as f64 * 100.0)
+            } else {
+                "-".into()
+            };
+            let _ = writeln!(
+                out,
+                "  {:<14} {:>10} {:>12.3} {:>10.2} {:>8}",
+                name,
+                count,
+                *nanos as f64 / 1e6,
+                *nanos as f64 / 1e3 / (*count).max(1) as f64,
+                share
+            );
+        }
+        let busy = tf.phases.iter().find(|(n, _, _)| n == "pool_busy").map(|(_, ns, _)| *ns);
+        let idle = tf.phases.iter().find(|(n, _, _)| n == "pool_idle").map(|(_, ns, _)| *ns);
+        if let (Some(b), Some(i)) = (busy, idle) {
+            if b + i > 0 {
+                let _ = writeln!(
+                    out,
+                    "pool utilization: {:.1}% busy ({:.1} ms busy / {:.1} ms idle)",
+                    b as f64 / (b + i) as f64 * 100.0,
+                    b as f64 / 1e6,
+                    i as f64 / 1e6
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, ts: u64, dur: u64, tid: u64, depth: u32) -> TraceEvent {
+        TraceEvent {
+            ph: "X".into(),
+            name: name.into(),
+            cat: "test".into(),
+            ts_us: ts,
+            dur_us: dur,
+            pid: 1,
+            tid,
+            trace_id: 0x42,
+            depth,
+        }
+    }
+
+    #[test]
+    fn write_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("psf_obs_trace_test");
+        let path = dir.join("roundtrip.json");
+        let events =
+            vec![ev("outer", 100, 50, 1, 0), ev("inner", 110, 20, 1, 1), ev("other", 200, 5, 2, 0)];
+        let phases = vec![("lin_scores".to_string(), 1_000_000, 10)];
+        write_file(&path, &events, &phases, 3, &[(1, "psf test".into())]).unwrap();
+        let tf = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(tf.events.len(), 3, "metadata row must not parse as a span");
+        assert_eq!(tf.events[0].name, "outer");
+        assert_eq!(tf.events[0].trace_id, 0x42);
+        assert_eq!(tf.events[1].depth, 1);
+        assert_eq!(tf.phases, phases);
+        assert_eq!(tf.dropped, 3);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("not json").is_err());
+        assert!(parse("{\"traceEvents\": 3}").is_err());
+        assert!(parse("{}").is_err());
+        assert!(parse("{\"traceEvents\": []} x").is_err());
+    }
+
+    #[test]
+    fn self_time_subtracts_children() {
+        let tf = TraceFile {
+            events: vec![
+                ev("outer", 100, 100, 1, 0),
+                ev("child_a", 110, 30, 1, 1),
+                ev("child_b", 150, 20, 1, 1),
+                ev("grandchild", 115, 10, 1, 2),
+            ],
+            phases: vec![],
+            dropped: 0,
+        };
+        let rows = self_times(&tf);
+        let find = |n: &str| rows.iter().find(|r| r.0 == n).unwrap();
+        assert_eq!(find("outer").4, 50, "outer self = 100 - 30 - 20");
+        assert_eq!(find("child_a").4, 20, "child_a self = 30 - 10");
+        assert_eq!(find("child_b").4, 20);
+        assert_eq!(find("grandchild").4, 10);
+    }
+
+    #[test]
+    fn merge_files_combines_and_sums_phases() {
+        let dir = std::env::temp_dir().join("psf_obs_trace_test");
+        let main = dir.join("merge_main.json");
+        let extra = dir.join("merge_extra.json");
+        write_file(&main, &[ev("gw", 100, 10, 1, 0)], &[("lin_map".into(), 5, 1)], 0, &[]).unwrap();
+        let mut rev = ev("run", 105, 5, 1, 0);
+        rev.pid = 2;
+        write_file(&extra, &[rev], &[("lin_map".into(), 7, 2)], 1, &[]).unwrap();
+        let n = merge_files(&main, &[extra.clone()]).unwrap();
+        assert_eq!(n, 2);
+        assert!(!extra.exists(), "merged extras are removed");
+        let tf = parse(&std::fs::read_to_string(&main).unwrap()).unwrap();
+        assert_eq!(tf.events.len(), 2);
+        let pids: Vec<u64> = tf.events.iter().map(|e| e.pid).collect();
+        assert!(pids.contains(&1) && pids.contains(&2), "pids preserved: {pids:?}");
+        assert_eq!(tf.phases, vec![("lin_map".to_string(), 12, 3)]);
+        assert_eq!(tf.dropped, 1);
+    }
+
+    #[test]
+    fn report_mentions_cross_process_ids() {
+        let mut a = ev("gw", 100, 10, 1, 0);
+        a.pid = 10;
+        let mut b = ev("run", 105, 5, 1, 0);
+        b.pid = 20;
+        let tf = TraceFile {
+            events: vec![a, b],
+            phases: vec![("lin_scores".into(), 2_000_000, 4), ("pool_busy".into(), 100, 1)],
+            dropped: 0,
+        };
+        let r = report(&tf, 10);
+        assert!(r.contains("2 processes"), "{r}");
+        assert!(r.contains("trace 0x42: 2 events across 2 processes"), "{r}");
+        assert!(r.contains("lin_scores"), "{r}");
+        assert!(r.contains("top spans by self time"), "{r}");
+    }
+}

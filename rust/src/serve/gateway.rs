@@ -31,6 +31,7 @@ use crate::infer::model::NativeLm;
 use crate::infer::sampler::SamplePolicy;
 use crate::infer::session::{decode_text, encode_prompt, GenRequest};
 use crate::metrics::{json_escape, JsonlWriter, Record, ServeCounters};
+use crate::obs;
 use crate::serve::cache::PromptCache;
 use crate::serve::http::{
     json_get, parse_json_object, Handler, HttpRequest, HttpServer, Json, Responder,
@@ -155,12 +156,13 @@ impl Gateway {
             return Err(Rejected::Draining);
         }
         let (tx, rx) = channel();
-        let job = ServeJob {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            req,
-            events: tx,
-            queued: Instant::now(),
-        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // Mint the trace id here and adopt it on the submitting thread:
+        // spans the caller still has open pick it up at close, and the
+        // workers inherit it through the job.
+        let trace = obs::mint_trace_id(id);
+        obs::set_trace_id(trace);
+        let job = ServeJob { id, req, events: tx, queued: Instant::now(), trace };
         match self.pool.try_submit(job, self.cfg.queue_cap) {
             Ok(()) => {
                 self.counters.admitted.fetch_add(1, Ordering::Relaxed);
@@ -280,7 +282,13 @@ impl Gateway {
 
 impl Handler for Gateway {
     fn handle(&self, req: HttpRequest, resp: &mut Responder<'_>) -> io::Result<()> {
-        match (req.method.as_str(), req.path.as_str()) {
+        // The request-target may carry a query string (`/metrics?format=..`):
+        // route on the bare path.
+        let (path, query) = match req.path.split_once('?') {
+            Some((p, q)) => (p, q),
+            None => (req.path.as_str(), ""),
+        };
+        match (req.method.as_str(), path) {
             ("GET", "/healthz") => resp.simple(
                 200,
                 "application/json",
@@ -290,10 +298,15 @@ impl Handler for Gateway {
                     self.model.mech.is_linear(),
                 ),
             ),
+            ("GET", "/metrics") if query.split('&').any(|kv| kv == "format=prometheus") => {
+                self.counters.cache_bytes.store(self.cache.stats().bytes as u64, Ordering::Relaxed);
+                resp.simple(200, "text/plain; version=0.0.4", &self.counters.prometheus_text())
+            }
             ("GET", "/metrics") => {
                 resp.simple(200, "application/json", &self.metrics_record().to_json())
             }
             ("POST", "/v1/generate") => {
+                let _span = obs::span("serve_request", "gateway");
                 let gen_req = match self.parse_generate(&req.body_str()) {
                     Ok(r) => r,
                     Err(msg) => {

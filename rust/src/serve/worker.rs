@@ -38,6 +38,7 @@ use std::time::Instant;
 use crate::infer::model::NativeLm;
 use crate::infer::session::{decode_text, DecodeSession, GenRequest};
 use crate::metrics::ServeCounters;
+use crate::obs;
 use crate::serve::cache::{CacheKey, PrefixSnapshot, PromptCache};
 
 /// Worker-pool knobs.
@@ -103,6 +104,9 @@ pub struct ServeJob {
     pub req: GenRequest,
     pub events: Sender<TokenEvent>,
     pub queued: Instant,
+    /// Request trace id for span stitching across threads and processes
+    /// (0 = untraced).
+    pub trace: u64,
 }
 
 /// A session resident in the pool, between step slices.
@@ -114,6 +118,7 @@ struct Running {
     cache_hit: bool,
     /// Peer hung up (send failed) — finish silently, skip accounting.
     cancelled: bool,
+    trace: u64,
 }
 
 #[derive(Default)]
@@ -249,6 +254,9 @@ fn worker_loop(shared: &Shared) {
                 return;
             }
             Work::Admit(job) => {
+                // Adopt the request's trace id so spans opened on this
+                // worker thread stitch into the request's timeline.
+                obs::set_trace_id(job.trace);
                 let running = admit(shared, job);
                 let mut q = shared.queues.lock().expect("worker queues lock poisoned");
                 q.run.push_back(running);
@@ -256,6 +264,7 @@ fn worker_loop(shared: &Shared) {
                 shared.cvar.notify_one();
             }
             Work::Step(mut r) => {
+                obs::set_trace_id(r.trace);
                 step_slice(shared, &mut r);
                 if r.session.finished || r.cancelled {
                     retire(shared, r);
@@ -279,8 +288,13 @@ fn worker_loop(shared: &Shared) {
 /// possible (skipping prefill entirely), full prefill + cache fill
 /// otherwise.
 fn admit(shared: &Shared, job: ServeJob) -> Running {
+    shared.counters.queue_wait.observe(job.queued.elapsed().as_secs_f64());
+    let _span = obs::span("admit", "serve");
     let key = CacheKey { mech: shared.model.mech.label(), prompt: job.req.prompt.clone() };
-    let (session, cache_hit) = match shared.cache.get(&key) {
+    let t_lookup = Instant::now();
+    let cached = shared.cache.get(&key);
+    shared.counters.cache_lookup.observe(t_lookup.elapsed().as_secs_f64());
+    let (session, cache_hit) = match cached {
         Some(prefix) => {
             shared.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
             // The deep copy happens here, on this worker's thread — the
@@ -311,13 +325,17 @@ fn admit(shared: &Shared, job: ServeJob) -> Running {
         ttft_secs: None,
         cache_hit,
         cancelled: false,
+        trace: job.trace,
     }
 }
 
 /// Step one session up to `slice_tokens` tokens, streaming each out.
 fn step_slice(shared: &Shared, r: &mut Running) {
+    let _span = obs::span("step_slice", "serve");
     for _ in 0..shared.cfg.slice_tokens {
+        let t_tok = Instant::now();
         let Some(tok) = r.session.step(&shared.model) else { break };
+        shared.counters.token_latency.observe(t_tok.elapsed().as_secs_f64());
         if r.ttft_secs.is_none() {
             let ttft = r.queued.elapsed().as_secs_f64();
             r.ttft_secs = Some(ttft);
@@ -395,7 +413,7 @@ mod tests {
         let submit = |i: u64| {
             let (tx, rx) = channel();
             pool.try_submit(
-                ServeJob { id: i, req: req(i, 5), events: tx, queued: Instant::now() },
+                ServeJob { id: i, req: req(i, 5), events: tx, queued: Instant::now(), trace: 0 },
                 64,
             )
             .ok()
@@ -446,7 +464,7 @@ mod tests {
         });
         pool.drain();
         let (tx, _rx) = channel();
-        let job = ServeJob { id: 0, req: req(0, 1), events: tx, queued: Instant::now() };
+        let job = ServeJob { id: 0, req: req(0, 1), events: tx, queued: Instant::now(), trace: 0 };
         assert!(pool.try_submit(job, 64).is_err(), "draining pool must reject");
     }
 
@@ -460,7 +478,7 @@ mod tests {
         let (tx, rx) = channel();
         drop(rx); // peer gone before the first token
         pool.try_submit(
-            ServeJob { id: 0, req: req(0, 50), events: tx, queued: Instant::now() },
+            ServeJob { id: 0, req: req(0, 50), events: tx, queued: Instant::now(), trace: 0 },
             64,
         )
         .ok()
@@ -468,7 +486,7 @@ mod tests {
         // A live request behind it must still complete.
         let (tx2, rx2) = channel();
         pool.try_submit(
-            ServeJob { id: 1, req: req(1, 3), events: tx2, queued: Instant::now() },
+            ServeJob { id: 1, req: req(1, 3), events: tx2, queued: Instant::now(), trace: 0 },
             64,
         )
         .ok()

@@ -26,6 +26,7 @@ use std::time::Duration;
 use crate::attn::Mechanism;
 use crate::infer::GenRequest;
 use crate::metrics::{json_escape, JsonlWriter, Record, ServeCounters};
+use crate::obs;
 use crate::serve::gateway::{
     done_chunk, parse_generate_body, request_record, token_chunk, GenDefaults,
 };
@@ -114,6 +115,7 @@ pub struct ShardGateway {
     mech: Mechanism,
     pub counters: Arc<ServeCounters>,
     tally: Vec<RunnerTally>,
+    next_trace: AtomicU64,
     stop: Arc<AtomicBool>,
     log: Mutex<Option<JsonlWriter>>,
     bound: Mutex<Option<std::net::SocketAddr>>,
@@ -132,12 +134,16 @@ impl ShardGateway {
             None => None,
         };
         let tally = (0..sup.runners()).map(|_| RunnerTally::default()).collect();
+        let counters = Arc::new(ServeCounters::new());
+        // The supervisor's heartbeat feeds the IPC round-trip histogram.
+        sup.set_counters(Arc::clone(&counters));
         Ok(ShardGateway {
             sup,
             cfg,
             mech,
-            counters: Arc::new(ServeCounters::new()),
+            counters,
             tally,
+            next_trace: AtomicU64::new(0),
             stop: Arc::new(AtomicBool::new(false)),
             log: Mutex::new(log),
             bound: Mutex::new(None),
@@ -180,16 +186,22 @@ impl ShardGateway {
     }
 
     /// Run one admitted request to its terminal event, synchronously.
+    /// Mints the request's trace id here so both entry points (the
+    /// `submit` thread and the HTTP connection thread) get one; the id
+    /// rides the Generate frame so runner-side spans stitch to ours.
     fn drive(&self, req: GenRequest, emit: &mut dyn FnMut(ShardEvent)) {
+        let trace = obs::mint_trace_id(self.next_trace.fetch_add(1, Ordering::Relaxed));
+        obs::set_trace_id(trace);
+        let _span = obs::span("serve_request", "gateway");
         if self.sup.is_tp() {
-            self.drive_tp(req, emit);
+            self.drive_tp(req, trace, emit);
         } else {
-            self.drive_replica(req, emit);
+            self.drive_replica(req, trace, emit);
         }
     }
 
     /// One replica-routed request: hash -> runner -> relay frames.
-    fn drive_replica(&self, req: GenRequest, emit: &mut dyn FnMut(ShardEvent)) {
+    fn drive_replica(&self, req: GenRequest, trace: u64, emit: &mut dyn FnMut(ShardEvent)) {
         let hash = hash_key(&self.mech.label(), &req.prompt);
         let runner = match self.sup.route(hash) {
             Some(r) => r,
@@ -203,7 +215,7 @@ impl ShardGateway {
             }
         };
         self.tally[runner as usize].routed.fetch_add(1, Ordering::Relaxed);
-        let open = match self.sup.open_generate(runner, &req) {
+        let open = match self.sup.open_generate(runner, &req, trace) {
             Ok(o) => o,
             Err(e) => {
                 self.fail(emit, runner, true, &format!("runner {runner} unavailable: {e}"));
@@ -252,9 +264,9 @@ impl ShardGateway {
     /// One tensor-parallel request: every runner steps the same request
     /// lock-step; the gateway is the combine hub (sum partials in shard
     /// order, broadcast the result) and relays the leader's tokens.
-    fn drive_tp(&self, req: GenRequest, emit: &mut dyn FnMut(ShardEvent)) {
+    fn drive_tp(&self, req: GenRequest, trace: u64, emit: &mut dyn FnMut(ShardEvent)) {
         let _serial = self.tp_serial.lock().expect("tp lock poisoned");
-        let streams: Vec<OpenStream> = match self.sup.tp_streams(&req) {
+        let streams: Vec<OpenStream> = match self.sup.tp_streams(&req, trace) {
             Ok(s) => s,
             Err(e) => {
                 emit(ShardEvent::Failed {
@@ -489,7 +501,11 @@ impl ShardGateway {
 
 impl Handler for ShardGateway {
     fn handle(&self, req: HttpRequest, resp: &mut Responder<'_>) -> io::Result<()> {
-        match (req.method.as_str(), req.path.as_str()) {
+        let (path, query) = match req.path.split_once('?') {
+            Some((p, q)) => (p, q),
+            None => (req.path.as_str(), ""),
+        };
+        match (req.method.as_str(), path) {
             ("GET", "/healthz") => {
                 let (total, healthy) = self.sup.health();
                 resp.simple(
@@ -507,6 +523,8 @@ impl Handler for ShardGateway {
                     ),
                 )
             }
+            ("GET", "/metrics") if query.split('&').any(|kv| kv == "format=prometheus") => resp
+                .simple(200, "text/plain; version=0.0.4", &self.counters.prometheus_text()),
             ("GET", "/metrics") => resp.simple(200, "application/json", &self.metrics_json()),
             ("POST", "/v1/generate") => {
                 let defaults = GenDefaults {

@@ -35,7 +35,8 @@ use crate::serve::worker::RequestStats;
 /// Frame magic: "PSFR" interpreted as a little-endian u32.
 pub const MAGIC: u32 = 0x5053_4652;
 /// Protocol version; bump on any payload/kind change.
-pub const VERSION: u16 = 1;
+/// v2: `Generate` payload gained a leading trace id (span stitching).
+pub const VERSION: u16 = 2;
 /// Hard payload ceiling: large enough for a long prefill's combined
 /// activation matrix, small enough that a corrupt length field cannot
 /// ask the reader to allocate gigabytes.
@@ -435,10 +436,14 @@ fn policy_code(p: &SamplePolicy) -> (u8, f32, u64, f32) {
     }
 }
 
-pub fn encode_generate(req: &GenRequest) -> Vec<u8> {
+/// `trace_id` is the gateway-minted span-stitching id (0 = untraced);
+/// it rides first in the payload so one request's spans share an id
+/// across the gateway/runner process boundary.
+pub fn encode_generate(req: &GenRequest, trace_id: u64) -> Vec<u8> {
     let (tag, temp, k, p) = policy_code(&req.policy);
     let mut w = WireWriter::new();
-    w.u64(req.seed)
+    w.u64(trace_id)
+        .u64(req.seed)
         .u64(req.max_new_tokens as u64)
         .u8(tag)
         .f32(temp)
@@ -448,8 +453,9 @@ pub fn encode_generate(req: &GenRequest) -> Vec<u8> {
     w.finish()
 }
 
-pub fn decode_generate(b: &[u8]) -> Result<GenRequest, ProtoError> {
+pub fn decode_generate(b: &[u8]) -> Result<(GenRequest, u64), ProtoError> {
     let mut r = WireReader::new(b);
+    let trace_id = r.u64()?;
     let seed = r.u64()?;
     let max_new = r.u64()? as usize;
     let tag = r.u8()?;
@@ -465,7 +471,7 @@ pub fn decode_generate(b: &[u8]) -> Result<GenRequest, ProtoError> {
         3 => SamplePolicy::TopP { p, temperature: temp },
         _ => return Err(ProtoError::Malformed("unknown sampling policy tag")),
     };
-    Ok(GenRequest { prompt, max_new_tokens: max_new, policy, seed })
+    Ok((GenRequest { prompt, max_new_tokens: max_new, policy, seed }, trace_id))
 }
 
 pub fn encode_token(token: u32, text: &str) -> Vec<u8> {
@@ -548,12 +554,19 @@ mod tests {
     use super::*;
 
     fn sample_frame() -> Frame {
-        Frame::new(FrameKind::Generate, 7, encode_generate(&GenRequest {
-            prompt: vec![0, 5, 9, 200],
-            max_new_tokens: 12,
-            policy: SamplePolicy::TopP { p: 0.9, temperature: 0.7 },
-            seed: 42,
-        }))
+        Frame::new(
+            FrameKind::Generate,
+            7,
+            encode_generate(
+                &GenRequest {
+                    prompt: vec![0, 5, 9, 200],
+                    max_new_tokens: 12,
+                    policy: SamplePolicy::TopP { p: 0.9, temperature: 0.7 },
+                    seed: 42,
+                },
+                0xdead_beef,
+            ),
+        )
     }
 
     #[test]
@@ -563,9 +576,10 @@ mod tests {
         let (g, used) = Frame::decode(&bytes).unwrap();
         assert_eq!(used, bytes.len());
         assert_eq!(g, f);
-        let req = decode_generate(&g.payload).unwrap();
+        let (req, trace_id) = decode_generate(&g.payload).unwrap();
         assert_eq!(req.prompt, vec![0, 5, 9, 200]);
         assert_eq!(req.policy, SamplePolicy::TopP { p: 0.9, temperature: 0.7 });
+        assert_eq!(trace_id, 0xdead_beef, "trace id survives the wire");
     }
 
     #[test]

@@ -34,6 +34,7 @@ use anyhow::Context;
 
 use crate::infer::{decode_text, NativeLm};
 use crate::metrics::ServeCounters;
+use crate::obs;
 use crate::serve::cache::PromptCache;
 use crate::serve::worker::{RequestStats, ServeJob, TokenEvent, WorkerConfig, WorkerPool};
 
@@ -134,7 +135,7 @@ pub fn run_runner(model: NativeLm, cfg: RunnerConfig) -> anyhow::Result<()> {
         match frame.kind {
             FrameKind::Generate => {
                 let stream = frame.stream;
-                let req = match decode_generate(&frame.payload) {
+                let (req, trace_id) = match decode_generate(&frame.payload) {
                     Ok(r) => r,
                     Err(e) => {
                         let _ = mux.send(&Frame::new(
@@ -157,7 +158,13 @@ pub fn run_runner(model: NativeLm, cfg: RunnerConfig) -> anyhow::Result<()> {
                     }
                 };
                 let (tx, rx) = channel();
-                let job = ServeJob { id: stream, req, events: tx, queued: Instant::now() };
+                let job = ServeJob {
+                    id: stream,
+                    req,
+                    events: tx,
+                    queued: Instant::now(),
+                    trace: trace_id,
+                };
                 match pool.try_submit(job, cfg.queue_cap) {
                     Ok(()) => {
                         counters.admitted.fetch_add(1, Ordering::Relaxed);
@@ -201,7 +208,7 @@ pub fn run_runner(model: NativeLm, cfg: RunnerConfig) -> anyhow::Result<()> {
             }
             FrameKind::TpGenerate => {
                 let stream = frame.stream;
-                let req = match decode_generate(&frame.payload) {
+                let (req, trace_id) = match decode_generate(&frame.payload) {
                     Ok(r) => r,
                     Err(e) => {
                         let _ = mux.send(&Frame::new(
@@ -220,6 +227,8 @@ pub fn run_runner(model: NativeLm, cfg: RunnerConfig) -> anyhow::Result<()> {
                 let range = range.clone();
                 let counters = Arc::clone(&counters);
                 thread::spawn(move || {
+                    obs::set_trace_id(trace_id);
+                    let _span = obs::span("tp_session", "shard");
                     let leader = range.start == 0;
                     let t0 = Instant::now();
                     let mut combine =
@@ -295,6 +304,15 @@ pub fn run_runner(model: NativeLm, cfg: RunnerConfig) -> anyhow::Result<()> {
 
     if let Some(pool) = pool {
         pool.drain();
+    }
+    // Export this process's spans before exiting — the gateway merges
+    // the per-runner files into its own trace after shutdown.
+    match obs::flush() {
+        Ok(Some(path)) => {
+            eprintln!("psf runner {}: trace written to {}", cfg.runner_id, path.display())
+        }
+        Ok(None) => {}
+        Err(e) => eprintln!("psf runner {}: trace flush failed: {e}", cfg.runner_id),
     }
     eprintln!("psf runner {}: drained, exiting", cfg.runner_id);
     Ok(())

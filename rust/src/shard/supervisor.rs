@@ -39,6 +39,7 @@ use super::proto::{decode_hello, encode_generate, Frame, FrameKind};
 use super::ring::HashRing;
 use super::tp::partition_heads;
 use crate::infer::GenRequest;
+use crate::metrics::ServeCounters;
 
 #[derive(Clone, Debug)]
 pub struct SupervisorConfig {
@@ -65,6 +66,10 @@ pub struct SupervisorConfig {
     /// Model head count (needed to partition in TP mode).
     pub heads: usize,
     pub socket_dir: PathBuf,
+    /// When set, each runner gets `--trace <base>.runner<id>` so it
+    /// exports its own span trace; the gateway merges those files into
+    /// the base trace at shutdown (one Perfetto timeline).
+    pub trace_base: Option<PathBuf>,
 }
 
 impl Default for SupervisorConfig {
@@ -84,6 +89,7 @@ impl Default for SupervisorConfig {
             tp: false,
             heads: 0,
             socket_dir: std::env::temp_dir(),
+            trace_base: None,
         }
     }
 }
@@ -136,6 +142,9 @@ pub struct Supervisor {
     monitor: Mutex<Option<JoinHandle<()>>>,
     respawn_total: AtomicU64,
     ever_degraded: AtomicBool,
+    /// Optional counters sink (the sharded gateway's) for the heartbeat
+    /// RTT histogram.
+    counters: Mutex<Option<Arc<ServeCounters>>>,
 }
 
 impl Supervisor {
@@ -183,6 +192,7 @@ impl Supervisor {
             monitor: Mutex::new(None),
             respawn_total: AtomicU64::new(0),
             ever_degraded: AtomicBool::new(false),
+            counters: Mutex::new(None),
         });
         for slot in &sup.slots {
             let mut slot = slot.lock().unwrap();
@@ -218,6 +228,9 @@ impl Supervisor {
         if slot.head_end > slot.head_start {
             cmd.args(["--head-start", &slot.head_start.to_string()])
                 .args(["--head-end", &slot.head_end.to_string()]);
+        }
+        if let Some(base) = &self.cfg.trace_base {
+            cmd.arg("--trace").arg(format!("{}.runner{}", base.display(), slot.id));
         }
         let mut child = cmd.spawn().context("spawning runner process")?;
 
@@ -322,8 +335,33 @@ impl Supervisor {
                     self.mark_dead(&mut slot, if exited { "exited" } else if mux_dead { "connection lost" } else { "heartbeat stale" });
                     continue;
                 }
-                if let Some(mux) = slot.mux.as_ref() {
-                    let _ = mux.send(&Frame::control(FrameKind::Ping));
+                // Heartbeat probe.  Wait briefly for the Pong right here:
+                // pairing it with the *next* tick's drain would record the
+                // tick period, not the round trip.  The bound is well under
+                // the tick period, so the monitor cannot fall behind.
+                let pong_rtt = match (slot.mux.as_ref(), slot.inbound.as_ref()) {
+                    (Some(mux), Some(rx))
+                        if mux.send(&Frame::control(FrameKind::Ping)).is_ok() =>
+                    {
+                        let t0 = Instant::now();
+                        let budget = Duration::from_millis(50);
+                        let mut rtt = None;
+                        while rtt.is_none() && t0.elapsed() < budget {
+                            match rx.recv_timeout(budget.saturating_sub(t0.elapsed())) {
+                                Ok(f) if f.kind == FrameKind::Pong => rtt = Some(t0.elapsed()),
+                                Ok(_) => {} // stray stream traffic; keep waiting
+                                Err(_) => break,
+                            }
+                        }
+                        rtt
+                    }
+                    _ => None,
+                };
+                if let Some(rtt) = pong_rtt {
+                    slot.last_seen = Instant::now();
+                    if let Some(c) = self.counters.lock().unwrap().as_ref() {
+                        c.ipc_rtt.observe(rtt.as_secs_f64());
+                    }
                 }
             }
         }
@@ -348,34 +386,64 @@ impl Supervisor {
 
     // ------------------------------------------------------ gateway API
 
+    /// Sink for supervisor-side histograms (heartbeat IPC RTT).  The
+    /// sharded gateway passes its own counters in.
+    pub fn set_counters(&self, c: Arc<ServeCounters>) {
+        *self.counters.lock().unwrap() = Some(c);
+    }
+
+    /// Per-runner trace files this configuration makes runners write —
+    /// what the gateway merges into one timeline at shutdown.
+    pub fn runner_trace_paths(&self) -> Vec<PathBuf> {
+        match &self.cfg.trace_base {
+            Some(base) => (0..self.slots.len())
+                .map(|i| PathBuf::from(format!("{}.runner{i}", base.display())))
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
     /// Route a cache-key hash to a healthy runner.
     pub fn route(&self, hash: u64) -> Option<u32> {
         self.ring.lock().unwrap().route(hash)
     }
 
     /// Open a request stream on `runner` and send the Generate frame.
-    pub fn open_generate(&self, runner: u32, req: &GenRequest) -> anyhow::Result<OpenStream> {
-        self.open_with(runner, FrameKind::Generate, req)
+    /// `trace_id` crosses the wire so runner spans stitch into the
+    /// request's trace (0 = untraced).
+    pub fn open_generate(
+        &self,
+        runner: u32,
+        req: &GenRequest,
+        trace_id: u64,
+    ) -> anyhow::Result<OpenStream> {
+        self.open_with(runner, FrameKind::Generate, req, trace_id)
     }
 
     /// Open a TP request stream on every runner (slot order), sending
     /// each the same request.  TP needs the full world, so any unhealthy
     /// runner is an error.
-    pub fn tp_streams(&self, req: &GenRequest) -> anyhow::Result<Vec<OpenStream>> {
+    pub fn tp_streams(&self, req: &GenRequest, trace_id: u64) -> anyhow::Result<Vec<OpenStream>> {
         self.slots
             .iter()
             .enumerate()
-            .map(|(i, _)| self.open_with(i as u32, FrameKind::TpGenerate, req))
+            .map(|(i, _)| self.open_with(i as u32, FrameKind::TpGenerate, req, trace_id))
             .collect()
     }
 
-    fn open_with(&self, runner: u32, kind: FrameKind, req: &GenRequest) -> anyhow::Result<OpenStream> {
+    fn open_with(
+        &self,
+        runner: u32,
+        kind: FrameKind,
+        req: &GenRequest,
+        trace_id: u64,
+    ) -> anyhow::Result<OpenStream> {
         let slot = self.slots[runner as usize].lock().unwrap();
         anyhow::ensure!(slot.healthy, "runner {runner} is down");
         let mux = Arc::clone(slot.mux.as_ref().expect("healthy slot has a mux"));
         drop(slot);
         let (stream, rx) = mux.open_stream();
-        mux.send(&Frame::new(kind, stream, encode_generate(req)))
+        mux.send(&Frame::new(kind, stream, encode_generate(req, trace_id)))
             .with_context(|| format!("sending request to runner {runner}"))?;
         Ok(OpenStream { runner, stream, rx, mux })
     }

@@ -286,8 +286,19 @@ impl<'a> Trainer<'a> {
         let mut stopped_early = false;
         for step in start..self.cfg.steps {
             let batch = self.source.next_batch(self.cfg.batch.max(1), &mut data_rng);
+            // Per-step timing is telemetry only (JSONL + obs phase
+            // accumulators); it never feeds the update itself.
+            let t_grad = Instant::now();
             let (grads, stats) = compute_grads(self.model, &batch);
+            let fwd_bwd_secs = t_grad.elapsed().as_secs_f64();
+            crate::obs::phase::add(
+                crate::obs::Phase::TrainGrad,
+                (fwd_bwd_secs * 1e9) as u64,
+            );
+            let t_opt = Instant::now();
             let info = self.opt.step(self.model.params_mut(), &grads);
+            let opt_secs = t_opt.elapsed().as_secs_f64();
+            crate::obs::phase::add(crate::obs::Phase::TrainOptim, (opt_secs * 1e9) as u64);
             tokens_seen += batch.iter().map(|e| e.mask.len() as u64).sum::<u64>();
             steps_run += 1;
             if initial_loss.is_nan() {
@@ -303,7 +314,9 @@ impl<'a> Trainer<'a> {
                         .f64("lr", info.lr as f64)
                         .f64("grad_norm", info.grad_norm)
                         .bool("clipped", info.clipped)
-                        .f64("batch_accuracy", stats.accuracy()),
+                        .f64("batch_accuracy", stats.accuracy())
+                        .f64("fwd_bwd_secs", fwd_bwd_secs)
+                        .f64("opt_secs", opt_secs),
                 )?;
             }
             if self.cfg.echo_every > 0 && (step + 1) % self.cfg.echo_every == 0 {

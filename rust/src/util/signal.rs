@@ -13,8 +13,32 @@
 //! gateway forwards it to runners over IPC, not via signals).
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
 
 static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Cleanup closures run on the *drain path* (not in the handler — the
+/// handler's async-signal-safe budget is one atomic store).  Serving
+/// loops call [`run_shutdown_hooks`] after they stop accepting; hooks
+/// flush traces/metrics that would otherwise die with the process.
+#[allow(clippy::type_complexity)]
+static HOOKS: Mutex<Vec<Box<dyn FnOnce() + Send>>> = Mutex::new(Vec::new());
+
+/// Register a cleanup closure for the drain path.  Hooks run once, in
+/// registration order, when [`run_shutdown_hooks`] is called.
+pub fn on_shutdown(hook: impl FnOnce() + Send + 'static) {
+    HOOKS.lock().expect("shutdown hooks poisoned").push(Box::new(hook));
+}
+
+/// Run (and consume) every registered shutdown hook.  Idempotent:
+/// a second call sees an empty registry and does nothing, so both the
+/// signal drain path and normal exit can call it safely.
+pub fn run_shutdown_hooks() {
+    let hooks = std::mem::take(&mut *HOOKS.lock().expect("shutdown hooks poisoned"));
+    for hook in hooks {
+        hook();
+    }
+}
 
 #[cfg(unix)]
 const SIGINT: i32 = 2;
@@ -78,5 +102,25 @@ mod tests {
         }
         assert!(triggered());
         reset();
+    }
+
+    #[test]
+    fn shutdown_hooks_run_once_in_order() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Arc;
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let runs = Arc::new(AtomicUsize::new(0));
+        for i in 0..3 {
+            let order = Arc::clone(&order);
+            let runs = Arc::clone(&runs);
+            on_shutdown(move || {
+                order.lock().unwrap().push(i);
+                runs.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        run_shutdown_hooks();
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2]);
+        run_shutdown_hooks(); // second call is a no-op
+        assert_eq!(runs.load(Ordering::SeqCst), 3);
     }
 }

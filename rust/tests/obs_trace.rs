@@ -1,0 +1,340 @@
+//! Observability integration: span lifecycle/nesting over the real
+//! thread-local ring buffers, histogram boundary semantics through the
+//! Prometheus exposition, the tracing-on/off determinism contract on the
+//! serving path, and one end-to-end sharded run — a spawned
+//! `psf serve --runners 2 --trace` process whose exported trace must
+//! parse as valid Chrome trace-event JSON with gateway and runner spans
+//! stitched by one trace id.
+//!
+//! The in-process tests toggle the global tracing flag, so they
+//! serialize on [`OBS_LOCK`]; the spawned-process test has its own
+//! address space and runs freely.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use polysketchformer::infer::{GenRequest, LmConfig, NativeLm, SamplePolicy};
+use polysketchformer::obs;
+use polysketchformer::serve::{collect_stream, Gateway, GatewayConfig};
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+// ------------------------------------------------------------ span tests
+
+#[test]
+fn span_records_nesting_depth_and_trace_id() {
+    let _g = obs_lock();
+    obs::set_tracing(true);
+    obs::span::drain_all(); // discard anything a prior test buffered
+    obs::set_trace_id(0xbeef);
+    {
+        let _outer = obs::span("outer", "test");
+        let _inner = obs::span("inner", "test");
+    }
+    obs::set_trace_id(0);
+    obs::set_tracing(false);
+    let (events, dropped) = obs::span::drain_all();
+    assert_eq!(dropped, 0);
+    let outer = events.iter().find(|e| e.name == "outer").expect("outer span recorded");
+    let inner = events.iter().find(|e| e.name == "inner").expect("inner span recorded");
+    assert_eq!(outer.depth, 0);
+    assert_eq!(inner.depth, 1);
+    assert_eq!(outer.trace_id, 0xbeef);
+    assert_eq!(inner.trace_id, 0xbeef);
+    assert_eq!(outer.tid, inner.tid, "same thread, same tid");
+    assert!(inner.ts_us >= outer.ts_us, "child starts within parent");
+    assert!(
+        inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us,
+        "child ends within parent (RAII nesting)"
+    );
+}
+
+/// Property-style sweep: for every depth d, a stack of d nested spans
+/// yields exactly d events with depths 0..d, properly contained, and the
+/// thread-local depth counter returns to zero (no leak across
+/// iterations).
+#[test]
+fn span_nesting_property_across_depths() {
+    let _g = obs_lock();
+    obs::set_tracing(true);
+    obs::span::drain_all();
+    for d in 1..=8usize {
+        let mut spans: Vec<obs::Span> =
+            (0..d).map(|i| obs::span(&format!("lvl{i}"), "test")).collect();
+        // Unwind innermost-first (Vec drops front-to-back, which would
+        // close the parent before its children).
+        while let Some(s) = spans.pop() {
+            drop(s);
+        }
+        let (events, _) = obs::span::drain_all();
+        assert_eq!(events.len(), d, "depth {d}: one event per span");
+        let mut depths: Vec<u32> = events.iter().map(|e| e.depth).collect();
+        depths.sort_unstable();
+        assert_eq!(depths, (0..d as u32).collect::<Vec<_>>(), "depth {d}: depths are 0..d");
+        for w in 1..d {
+            let outer = events.iter().find(|e| e.depth == (w - 1) as u32).unwrap();
+            let inner = events.iter().find(|e| e.depth == w as u32).unwrap();
+            assert!(
+                inner.ts_us >= outer.ts_us
+                    && inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us,
+                "depth {d}: level {w} not contained in level {}",
+                w - 1
+            );
+        }
+        // Next span opens at depth 0 again: the counter unwound fully.
+        {
+            let _probe = obs::span("probe", "test");
+        }
+        let (probe, _) = obs::span::drain_all();
+        assert_eq!(probe[0].depth, 0, "depth counter leaked after iteration {d}");
+    }
+    obs::set_tracing(false);
+}
+
+#[test]
+fn trace_id_does_not_leak_across_threads() {
+    let _g = obs_lock();
+    obs::set_tracing(true);
+    obs::span::drain_all();
+    obs::set_trace_id(0x111);
+    let handle = std::thread::spawn(|| {
+        // Fresh thread: no inherited trace id.
+        assert_eq!(obs::current_trace_id(), 0);
+        obs::set_trace_id(0x222);
+        let _s = obs::span("worker", "test");
+    });
+    handle.join().unwrap();
+    {
+        let _s = obs::span("main", "test");
+    }
+    obs::set_trace_id(0);
+    obs::set_tracing(false);
+    let (events, _) = obs::span::drain_all();
+    let worker = events.iter().find(|e| e.name == "worker").unwrap();
+    let main = events.iter().find(|e| e.name == "main").unwrap();
+    assert_eq!(worker.trace_id, 0x222);
+    assert_eq!(main.trace_id, 0x111);
+    assert_ne!(worker.tid, main.tid, "distinct threads get distinct tids");
+}
+
+// ------------------------------------------------- histogram boundaries
+
+#[test]
+fn histogram_bucket_boundaries_are_le_inclusive() {
+    // Prometheus `le` semantics: a sample exactly on a bound counts into
+    // that bound's bucket.
+    let h = obs::Hist::new(&[1.0, 2.0]);
+    h.observe(1.0); // == first bound -> le="1" bucket
+    h.observe(1.5); // -> le="2"
+    h.observe(2.0000001); // just past last bound -> +Inf only
+    let mut text = String::new();
+    h.prometheus_into("psf_boundary_seconds", "t", &mut text);
+    assert!(text.contains("psf_boundary_seconds_bucket{le=\"1\"} 1"), "{text}");
+    assert!(text.contains("psf_boundary_seconds_bucket{le=\"2\"} 2"), "{text}");
+    assert!(text.contains("psf_boundary_seconds_bucket{le=\"+Inf\"} 3"), "{text}");
+    assert!(text.contains("psf_boundary_seconds_count 3"), "{text}");
+}
+
+// ------------------------------------------- determinism with tracing on
+
+fn serve_once(req: &GenRequest) -> Vec<u32> {
+    let cfg = LmConfig { d_model: 32, layers: 2, heads: 2, seed: 1, ..LmConfig::default() };
+    let model = NativeLm::new(cfg, polysketchformer::attn::Mechanism::parse("psk4_r4_b8_local").unwrap());
+    let gw = Gateway::new(model, GatewayConfig::default()).expect("gateway");
+    let rx = gw.submit(req.clone()).expect("admission");
+    let (tokens, stats) = collect_stream(rx);
+    gw.finish().expect("drain");
+    assert!(stats.is_some(), "request must complete");
+    tokens
+}
+
+#[test]
+fn token_stream_identical_with_tracing_on_and_off() {
+    let _g = obs_lock();
+    let req = GenRequest {
+        prompt: (0..32u32).map(|i| 1 + (i * 37) % 256).collect(),
+        max_new_tokens: 16,
+        policy: SamplePolicy::Greedy,
+        seed: 11,
+    };
+    obs::set_tracing(false);
+    obs::set_phases(false);
+    let off = serve_once(&req);
+    obs::set_tracing(true);
+    obs::set_phases(true);
+    let on = serve_once(&req);
+    obs::set_tracing(false);
+    obs::set_phases(false);
+    obs::span::drain_all();
+    obs::phase::reset();
+    assert_eq!(off, on, "tracing must never change a token (write-only telemetry)");
+}
+
+// --------------------------------------- sharded end-to-end trace export
+
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn http_roundtrip(addr: &str, request: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect to psf serve");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    stream.write_all(request.as_bytes()).expect("send request");
+    let mut response = String::new();
+    // Server closes the connection at end of response (streaming chunks).
+    let _ = stream.read_to_string(&mut response);
+    response
+}
+
+#[test]
+fn sharded_serve_exports_one_stitched_perfetto_trace() {
+    let dir = std::env::temp_dir().join(format!("psf_obs_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("trace.json");
+    let _ = std::fs::remove_file(&trace_path);
+
+    let child = Command::new(env!("CARGO_BIN_EXE_psf"))
+        .args([
+            "serve",
+            "--addr", "127.0.0.1:0",
+            "--mech", "psk4_r4_b8_local",
+            "--d-model", "32",
+            "--layers", "2",
+            "--heads", "2",
+            "--seed", "1",
+            "--runners", "2",
+            "--workers", "1",
+            "--threads", "1",
+            "--max-requests", "1",
+            "--trace", trace_path.to_str().unwrap(),
+        ])
+        .env_remove("PSF_TRACE")
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn psf serve");
+    let mut child = KillOnDrop(child);
+
+    // Drain stderr in the background so the child can't block on a full
+    // pipe; scrape the bound address off the stdout banner.
+    let stderr = child.0.stderr.take().unwrap();
+    let stderr_thread = std::thread::spawn(move || {
+        let mut text = String::new();
+        let _ = BufReader::new(stderr).read_to_string(&mut text);
+        text
+    });
+    let stdout = BufReader::new(child.0.stdout.take().unwrap());
+    let mut addr = None;
+    let mut lines = stdout.lines();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    for line in &mut lines {
+        let line = line.expect("serve stdout");
+        if let Some(rest) = line.split("listening on http://").nth(1) {
+            addr = Some(rest.split_whitespace().next().unwrap().to_string());
+            break;
+        }
+        assert!(Instant::now() < deadline, "no listening banner within 120s");
+    }
+    let addr = addr.expect("psf serve exited before printing its address");
+    // Keep draining stdout so the gateway never blocks writing to it.
+    let stdout_thread = std::thread::spawn(move || for _ in &mut lines {});
+
+    // Prometheus exposition must be live before the drain (the generate
+    // below is the max-requests stop trigger).
+    let metrics = http_roundtrip(
+        &addr,
+        &format!(
+            "GET /metrics?format=prometheus HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+        ),
+    );
+    assert!(metrics.contains("200"), "metrics status: {metrics}");
+    for want in
+        ["psf_ttft_seconds_bucket", "psf_queue_wait_seconds_bucket", "le=\"+Inf\"", "_count"]
+    {
+        assert!(metrics.contains(want), "prometheus exposition missing `{want}`:\n{metrics}");
+    }
+
+    let body = "{\"prompt\": \"observability end to end\", \"max_tokens\": 8}";
+    let response = http_roundtrip(
+        &addr,
+        &format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    );
+    assert!(response.contains("\"done\":true"), "generate stream incomplete:\n{response}");
+
+    // --max-requests 1 drains the fleet and flushes + merges the traces.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let status = loop {
+        if let Some(status) = child.0.try_wait().expect("try_wait") {
+            break status;
+        }
+        assert!(Instant::now() < deadline, "psf serve did not exit after --max-requests 1");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    stdout_thread.join().unwrap();
+    let stderr_text = stderr_thread.join().unwrap();
+    assert!(status.success(), "psf serve failed: {status:?}\nstderr:\n{stderr_text}");
+
+    let text = std::fs::read_to_string(&trace_path).unwrap_or_else(|e| {
+        panic!("trace file missing at {}: {e}\nstderr:\n{stderr_text}", trace_path.display())
+    });
+    let tf = obs::trace::parse(&text).expect("exported trace must be valid trace-event JSON");
+    assert!(!tf.events.is_empty(), "trace has no events");
+
+    let pids: std::collections::BTreeSet<u64> = tf.events.iter().map(|e| e.pid).collect();
+    assert!(
+        pids.len() >= 2,
+        "want gateway + runner processes in one timeline, got pids {pids:?}\nstderr:\n{stderr_text}"
+    );
+    assert!(
+        tf.events.iter().any(|e| e.name == "serve_request"),
+        "gateway serve_request span missing"
+    );
+
+    // The acceptance criterion: one request's gateway and runner spans
+    // share a trace id.
+    let stitched = tf
+        .events
+        .iter()
+        .filter(|e| e.trace_id != 0)
+        .map(|e| e.trace_id)
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .find(|id| {
+            let span_pids: std::collections::BTreeSet<u64> = tf
+                .events
+                .iter()
+                .filter(|e| e.trace_id == *id)
+                .map(|e| e.pid)
+                .collect();
+            span_pids.len() >= 2
+        });
+    assert!(
+        stitched.is_some(),
+        "no trace id spans both the gateway and a runner process\nstderr:\n{stderr_text}"
+    );
+
+    // Runner trace files were merged into the main file and removed.
+    for slot in 0..2 {
+        let runner_file = PathBuf::from(format!("{}.runner{slot}", trace_path.display()));
+        assert!(!runner_file.exists(), "{} not merged/removed", runner_file.display());
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -549,15 +549,18 @@ fn prop_generate_payload_roundtrip() {
             policy,
             seed: rng.next_u64(),
         };
-        let bytes = encode_generate(&req);
-        let back = decode_generate(&bytes).map_err(|e| format!("decode: {e}"))?;
+        let trace_id = rng.next_u64();
+        let bytes = encode_generate(&req, trace_id);
+        let (back, back_trace) =
+            decode_generate(&bytes).map_err(|e| format!("decode: {e}"))?;
         ensure(back.prompt == req.prompt, "prompt tokens must round-trip")?;
         ensure(back.max_new_tokens == req.max_new_tokens, "max_new must round-trip")?;
         ensure(back.seed == req.seed, "seed must round-trip")?;
         ensure(back.policy == req.policy, "policy must round-trip (f32 knobs bit-exact)")?;
+        ensure(back_trace == trace_id, "trace id must round-trip")?;
         // Re-encoding is byte-identical: f32 knobs crossed the wire as
         // raw bits, never through a lossy text form.
-        ensure(encode_generate(&back) == bytes, "re-encode must be byte-identical")
+        ensure(encode_generate(&back, back_trace) == bytes, "re-encode must be byte-identical")
     });
 }
 
