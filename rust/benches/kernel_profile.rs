@@ -1,17 +1,26 @@
-//! Kernel profile — per-phase time breakdown of the attention engines.
+//! Kernel profile — per-phase time breakdown of the attention engines,
+//! scalar vs SIMD.
 //!
 //! Runs prefill + a burst of decode steps for one linear (polysketch)
 //! and one quadratic (softmax) kernel with the obs phase accumulators
-//! on, then reports where the nanoseconds went: feature map vs diagonal
-//! scores vs prefix multiply vs emit vs Z-fold for the linear engine,
-//! attention vs state capture vs step for the quadratic one.  This JSON
-//! (`bench_out/kernel_profile.json`) is the baseline the SIMD work
-//! optimizes against — a phase that dominates here is the phase worth
-//! vectorizing first.
+//! on, once under the forced scalar microkernel backend and once under
+//! the best available SIMD backend, then reports where the nanoseconds
+//! went per backend: feature map vs diagonal scores vs prefix multiply
+//! vs emit vs Z-fold for the linear engine, attention vs state capture
+//! vs step for the quadratic one.  The JSON
+//! (`bench_out/kernel_profile.json`) carries both timings per phase plus
+//! the speedup, so CI can watch the SIMD win per phase over time.
 //!
-//! Doubles as a determinism check for the overhead contract: the same
-//! prefill runs with phases off and on and must produce bitwise
-//! identical output (timing is write-only telemetry).
+//! Doubles as the determinism check for two contracts:
+//! * phases off vs on must produce bitwise identical output (timing is
+//!   write-only telemetry);
+//! * the scalar and SIMD backends must produce bitwise identical prefill
+//!   outputs AND decode streams — the lane-tree invariant, end to end.
+//!
+//! With `PSF_SIMD_CHECK=1` the run additionally *fails* if any phase
+//! that spent meaningful time under the scalar backend got slower under
+//! SIMD (beyond a noise allowance) — the CI gate that the vectorized
+//! backends never regress below scalar throughput.
 
 use std::fmt::Write as _;
 use std::sync::Arc;
@@ -22,12 +31,63 @@ use polysketchformer::attn::Mechanism;
 use polysketchformer::bench::{banner, out_dir, Mode};
 use polysketchformer::metrics::Record;
 use polysketchformer::obs;
-use polysketchformer::tensor::Tensor;
+use polysketchformer::tensor::{micro, Tensor};
 use polysketchformer::util::rng::Pcg;
+
+/// One profiled pass: prefill + decode burst under whatever microkernel
+/// backend is currently active, with phase accumulators on.
+struct ProfiledRun {
+    prefill_out: Tensor,
+    decode_outs: Vec<Vec<f32>>,
+    totals: Vec<(&'static str, u64, u64)>,
+    prefill_secs: f64,
+    decode_secs: f64,
+}
+
+fn profile_run(
+    kernel: &Arc<dyn CausalKernel>,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    decode_steps: usize,
+) -> ProfiledRun {
+    let n = q.rows();
+    obs::phase::reset();
+    let t0 = Instant::now();
+    let mut state = kernel.new_state();
+    let prefill_out = kernel.prefill(&q.view(), &k.view(), &v.view(), Some(&mut state));
+    let prefill_secs = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let mut decode_outs = Vec::with_capacity(decode_steps);
+    for i in 0..decode_steps {
+        let row = (i * 7) % n;
+        decode_outs.push(std::hint::black_box(kernel.step(
+            q.row(row),
+            k.row(row),
+            v.row(row),
+            &mut state,
+        )));
+    }
+    let decode_secs = t0.elapsed().as_secs_f64();
+    let totals = obs::phase::totals();
+    ProfiledRun { prefill_out, decode_outs, totals, prefill_secs, decode_secs }
+}
+
+/// Phases faster than this under the scalar backend are too noisy to
+/// gate on (one timer quantum can flip the comparison).
+const GATE_FLOOR_NANOS: u64 = 200_000;
+/// Noise allowance for the `PSF_SIMD_CHECK` gate: SIMD must stay within
+/// this factor of scalar time for every gated phase.
+const GATE_SLACK: f64 = 1.25;
 
 fn main() -> anyhow::Result<()> {
     let mode = Mode::from_env();
-    banner("kernel_profile", "per-phase kernel time breakdown (obs accumulators)", mode);
+    banner("kernel_profile", "per-phase kernel time breakdown, scalar vs simd", mode);
+
+    let simd_check = std::env::var("PSF_SIMD_CHECK").map(|v| v == "1").unwrap_or(false);
+    let best = micro::best_available();
+    println!("microkernel backends: scalar vs {} (simd_check={simd_check})", best.label());
 
     let hd = 32usize;
     // +3 keeps the ragged tail in play so block-edge phases are exercised.
@@ -42,6 +102,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut records: Vec<Record> = Vec::new();
     let mut seen: Vec<(&str, &str)> = Vec::new();
+    let mut gate_failures: Vec<String> = Vec::new();
     for label in mechs {
         let mech = Mechanism::parse(label).expect("bench mechanism");
         let kernel: Arc<dyn CausalKernel> = mech.build_kernel(hd, &mut Pcg::seeded(42));
@@ -50,49 +111,89 @@ fn main() -> anyhow::Result<()> {
         obs::set_phases(false);
         let want = kernel.forward(&q, &k, &v);
         obs::set_phases(true);
-        obs::phase::reset();
 
-        let t0 = Instant::now();
-        let mut state = kernel.new_state();
-        let got = kernel.prefill(&q.view(), &k.view(), &v.view(), Some(&mut state));
-        let prefill_secs = t0.elapsed().as_secs_f64();
-        assert_eq!(got, want, "{label}: output changed with phase accounting on");
-
-        let t0 = Instant::now();
-        for i in 0..decode_steps {
-            let row = (i * 7) % n;
-            std::hint::black_box(kernel.step(q.row(row), k.row(row), v.row(row), &mut state));
-        }
-        let decode_secs = t0.elapsed().as_secs_f64();
-
-        let totals = obs::phase::totals();
+        micro::force_backend(micro::Backend::Scalar).expect("scalar backend");
+        let scalar = profile_run(&kernel, &q, &k, &v, decode_steps);
+        micro::force_backend(best).expect("detected backend");
+        let simd = profile_run(&kernel, &q, &k, &v, decode_steps);
+        micro::reset_backend();
         obs::set_phases(false);
-        let accounted: u64 = totals.iter().map(|(_, ns, _)| ns).sum();
+
+        assert_eq!(
+            scalar.prefill_out, want,
+            "{label}: output changed with phase accounting on"
+        );
+        // The lane-tree contract, end to end: backends differ in speed
+        // only, never in bytes — prefill logits and the decode stream.
+        assert_eq!(
+            scalar.prefill_out, simd.prefill_out,
+            "{label}: scalar vs {} prefill bytes diverged",
+            best.label()
+        );
+        assert_eq!(
+            scalar.decode_outs, simd.decode_outs,
+            "{label}: scalar vs {} decode bytes diverged",
+            best.label()
+        );
+
+        let accounted: u64 = simd.totals.iter().map(|(_, ns, _)| ns).sum();
         anyhow::ensure!(
-            !totals.is_empty(),
+            !simd.totals.is_empty(),
             "{label}: no phase accumulated — kernel hooks are dead"
         );
 
         println!(
-            "{label}: n={n} prefill {prefill_secs:.4}s, {decode_steps} decode steps {decode_secs:.4}s"
+            "{label}: n={n} prefill scalar {:.4}s / {} {:.4}s, {decode_steps} decode steps scalar {:.4}s / {} {:.4}s",
+            scalar.prefill_secs,
+            best.label(),
+            simd.prefill_secs,
+            scalar.decode_secs,
+            best.label(),
+            simd.decode_secs,
         );
-        println!("  {:>14}  {:>12}  {:>10}  {:>7}", "phase", "nanos", "count", "share");
-        for &(name, nanos, count) in &totals {
+        println!(
+            "  {:>14}  {:>12}  {:>12}  {:>8}  {:>10}  {:>7}",
+            "phase", "scalar_ns", "simd_ns", "speedup", "count", "share"
+        );
+        for &(name, nanos, count) in &simd.totals {
+            let scalar_nanos = scalar
+                .totals
+                .iter()
+                .find(|(p, _, _)| *p == name)
+                .map(|&(_, ns, _)| ns)
+                .unwrap_or(0);
             let share = nanos as f64 / accounted.max(1) as f64;
-            println!("  {name:>14}  {nanos:>12}  {count:>10}  {:>6.1}%", share * 100.0);
+            let speedup = scalar_nanos as f64 / nanos.max(1) as f64;
+            println!(
+                "  {name:>14}  {scalar_nanos:>12}  {nanos:>12}  {speedup:>7.2}x  {count:>10}  {:>6.1}%",
+                share * 100.0
+            );
+            if best != micro::Backend::Scalar
+                && scalar_nanos >= GATE_FLOOR_NANOS
+                && (nanos as f64) > scalar_nanos as f64 * GATE_SLACK
+            {
+                gate_failures.push(format!(
+                    "{label}/{name}: simd {nanos}ns > scalar {scalar_nanos}ns x{GATE_SLACK}"
+                ));
+            }
             seen.push((label, name));
             records.push(
                 Record::new()
                     .str("mech", label)
                     .str("phase", name)
+                    .str("simd_backend", best.label())
                     .i64("n", n as i64)
                     .i64("head_dim", hd as i64)
                     .i64("decode_steps", decode_steps as i64)
                     .i64("nanos", nanos as i64)
+                    .i64("nanos_scalar", scalar_nanos as i64)
                     .i64("count", count as i64)
                     .f64("share", share)
-                    .f64("prefill_secs", prefill_secs)
-                    .f64("decode_secs", decode_secs),
+                    .f64("speedup", speedup)
+                    .f64("prefill_secs", simd.prefill_secs)
+                    .f64("prefill_secs_scalar", scalar.prefill_secs)
+                    .f64("decode_secs", simd.decode_secs)
+                    .f64("decode_secs_scalar", scalar.decode_secs),
             );
         }
     }
@@ -102,6 +203,8 @@ fn main() -> anyhow::Result<()> {
     let _ = writeln!(json, "  \"n\": {n},");
     let _ = writeln!(json, "  \"head_dim\": {hd},");
     let _ = writeln!(json, "  \"decode_steps\": {decode_steps},");
+    let _ = writeln!(json, "  \"simd_backend\": \"{}\",", best.label());
+    let _ = writeln!(json, "  \"simd_check\": {simd_check},");
     json.push_str("  \"results\": [\n");
     for (i, r) in records.iter().enumerate() {
         let _ = write!(json, "    {}", r.to_json());
@@ -114,7 +217,7 @@ fn main() -> anyhow::Result<()> {
     std::fs::write(&json_path, json)?;
     println!("json: {}", json_path.display());
 
-    // The breakdown must cover the phases the SIMD work targets.
+    // The breakdown must cover the phases the SIMD backends accelerate.
     for (m, p) in [
         ("psk4_r16_b32_local", "lin_map"),
         ("psk4_r16_b32_local", "lin_scores"),
@@ -127,6 +230,16 @@ fn main() -> anyhow::Result<()> {
             "KERNEL_PROFILE_CHECK fail: phase {p} missing for {m}"
         );
     }
-    println!("KERNEL_PROFILE_CHECK pass: all target phases present, output bit-identical with phases on");
+    if simd_check {
+        anyhow::ensure!(
+            gate_failures.is_empty(),
+            "PSF_SIMD_CHECK fail: SIMD slower than scalar on gated phases:\n  {}",
+            gate_failures.join("\n  ")
+        );
+        println!("PSF_SIMD_CHECK pass: {} >= scalar throughput on every gated phase", best.label());
+    } else if !gate_failures.is_empty() {
+        println!("note (gate off): {}", gate_failures.join("; "));
+    }
+    println!("KERNEL_PROFILE_CHECK pass: all target phases present, scalar/simd byte-identical, output bit-identical with phases on");
     Ok(())
 }

@@ -20,7 +20,7 @@ use std::sync::Arc;
 
 use crate::attn::kernel::feature::{DirectFeatures, IdentityPowerMap, SelfTensorFeatures};
 use crate::attn::kernel::{FeatureMap, LinearEngine};
-use crate::tensor::{axpy, dot, layernorm_rows, Tensor};
+use crate::tensor::{layernorm_rows, micro, Tensor};
 
 /// Generic causal linear attention over explicit feature maps.
 ///
@@ -82,15 +82,8 @@ pub fn polysketch_attention_block(lh: &Tensor, rh: &Tensor, v: &Tensor,
 /// engine's state expansion).
 #[inline]
 pub(crate) fn self_tensor_row(l: &[f32], out: &mut [f32]) {
-    let r = l.len();
-    debug_assert_eq!(out.len(), r * r);
-    for a in 0..r {
-        let la = l[a];
-        let orow = &mut out[a * r..(a + 1) * r];
-        for b in 0..r {
-            orow[b] = la * l[b];
-        }
-    }
+    debug_assert_eq!(out.len(), l.len() * l.len());
+    micro::outer(out, l, l);
 }
 
 /// Naive lt(A B^T) C — oracle for the block algorithm's tests/benches.
@@ -101,7 +94,7 @@ pub fn lt_mult_naive(a: &Tensor, b: &Tensor, c: &Tensor) -> Tensor {
         let ar = a.row(i);
         let orow = out.row_mut(i);
         for j in 0..=i {
-            axpy(orow, c.row(j), dot(ar, b.row(j)));
+            micro::axpy(orow, c.row(j), micro::dot(ar, b.row(j)));
         }
     }
     out
@@ -113,6 +106,7 @@ mod tests {
     use crate::attn::sketch::self_tensor_rows;
     use crate::attn::poly::poly_attention;
     use crate::attn::sketch::PolySketch;
+    use crate::tensor::{axpy, dot};
     use crate::util::rng::Pcg;
 
     fn naive_linear(pq: &Tensor, pk: &Tensor, v: &Tensor) -> Tensor {

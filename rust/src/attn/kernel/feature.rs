@@ -90,16 +90,18 @@ pub trait FeatureMap: Send + Sync {
 }
 
 /// Shared pullback of the row self-tensor φ = l ⊗ l: with φ[i·r+j] =
-/// l[i]·l[j], `dl[i] += Σ_j (dφ[i·r+j] + dφ[j·r+i]) l[j]`.
+/// l[i]·l[j], `dl[i] += Σ_j (dφ[i·r+j] + dφ[j·r+i]) l[j]`.  The row and
+/// column slices of dφ are gathered into one temp so the reduction runs
+/// through the micro lane tree like every other dot in the codebase.
 fn self_tensor_row_vjp(mapped: &[f32], d_phi: &[f32], d_mapped: &mut [f32]) {
     let r = mapped.len();
     debug_assert_eq!(d_phi.len(), r * r);
+    let mut t = vec![0.0f32; r];
     for i in 0..r {
-        let mut acc = 0.0f32;
-        for j in 0..r {
-            acc += (d_phi[i * r + j] + d_phi[j * r + i]) * mapped[j];
+        for (j, tj) in t.iter_mut().enumerate() {
+            *tj = d_phi[i * r + j] + d_phi[j * r + i];
         }
-        d_mapped[i] += acc;
+        d_mapped[i] += dot(&t, mapped);
     }
 }
 

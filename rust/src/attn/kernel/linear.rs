@@ -29,7 +29,7 @@ use crate::attn::kernel::feature::FeatureMap;
 use crate::attn::kernel::state::{KernelState, LinearState};
 use crate::attn::kernel::CausalKernel;
 use crate::obs::{self, Phase};
-use crate::tensor::{axpy, dot, ln_row, Tensor, TensorView, TensorViewMut};
+use crate::tensor::{axpy, dot, ln_row, micro, Tensor, TensorView, TensorViewMut};
 
 /// Linear causal attention over an arbitrary [`FeatureMap`], with an
 /// optional score-only local map for exact diagonal blocks.
@@ -104,6 +104,10 @@ impl LinearEngine {
         let mut scores = vec![0.0f32; bm * bm];
         let mut pl = vec![0.0f32; bm * hc];
         let mut phi = vec![0.0f32; f];
+        // Value row extended with the normalizer's 1: folding [v | 1]
+        // into Z is one rank-1 update (kc·1.0 == kc bitwise).
+        let mut vext = vec![0.0f32; hc];
+        vext[h] = 1.0;
 
         for l in 0..nb {
             if let Some(s) = stats.as_deref_mut() {
@@ -132,17 +136,13 @@ impl LinearEngine {
             }
             let t_phase = obs::phase::add_since(Phase::LinScores, t_phase);
             // Prefix contribution: pl[bi] = phi(q_i) . Z, the phi feature
-            // expanded row-by-row into scratch.
+            // expanded row-by-row into scratch.  Z is an (f, hc) packed
+            // matrix, so the contraction is exactly the micro GEMM tile.
             for bi in 0..bl {
                 self.map.expand(mq.row(base + bi), &mut phi);
                 let prow = &mut pl[bi * hc..(bi + 1) * hc];
                 prow.fill(0.0);
-                for (c, &qv) in phi.iter().enumerate() {
-                    if qv == 0.0 {
-                        continue;
-                    }
-                    axpy(prow, &z[c * hc..(c + 1) * hc], qv);
-                }
+                micro::gemm_row(prow, &phi, &z);
             }
             let t_phase = obs::phase::add_since(Phase::LinPrefix, t_phase);
             // Diagonal contribution + emit normalized rows.
@@ -158,10 +158,7 @@ impl LinearEngine {
                 if let Some(s) = stats.as_deref_mut() {
                     s.denom.push(1.0 + prow[h]);
                 }
-                let orow = out.row_mut(base + bi);
-                for c in 0..h {
-                    orow[c] = prow[c] * inv;
-                }
+                micro::scale(out.row_mut(base + bi), &prow[..h], inv);
             }
             let t_phase = obs::phase::add_since(Phase::LinEmit, t_phase);
             // Z += phi(k_j)^T [V_l | 1] — full blocks only: a ragged tail
@@ -170,15 +167,8 @@ impl LinearEngine {
             if bl == b {
                 for bj in 0..bl {
                     self.map.expand(mk.row(base + bj), &mut phi);
-                    let vrow = v.row(base + bj);
-                    for (c, &kc) in phi.iter().enumerate() {
-                        if kc == 0.0 {
-                            continue;
-                        }
-                        let zrow = &mut z[c * hc..(c + 1) * hc];
-                        axpy(&mut zrow[..h], vrow, kc);
-                        zrow[h] += kc;
-                    }
+                    vext[..h].copy_from_slice(v.row(base + bj));
+                    micro::outer_accum(&mut z, &phi, &vext);
                 }
             }
             obs::phase::add_since(Phase::LinFold, t_phase);
@@ -204,16 +194,12 @@ impl LinearEngine {
         let h = st.h;
         let hc = h + 1;
         let LinearState { z, buf_mapped, buf_local, buf_v, phi, .. } = st;
+        let mut vext = vec![0.0f32; hc];
+        vext[h] = 1.0;
         for (mrow, vrow) in buf_mapped.iter().zip(buf_v.iter()) {
             self.map.expand(mrow, phi);
-            for (c, &kc) in phi.iter().enumerate() {
-                if kc == 0.0 {
-                    continue;
-                }
-                let zrow = &mut z[c * hc..(c + 1) * hc];
-                axpy(&mut zrow[..h], vrow, kc);
-                zrow[h] += kc;
-            }
+            vext[..h].copy_from_slice(vrow);
+            micro::outer_accum(z, phi, &vext);
         }
         buf_mapped.clear();
         buf_local.clear();
@@ -303,12 +289,7 @@ impl CausalKernel for LinearEngine {
         // accumulation as the blocked prefill's prefix pass.
         self.map.expand(&mq, &mut st.phi);
         let mut acc = vec![0.0f32; hc];
-        for (c, &qv) in st.phi.iter().enumerate() {
-            if qv == 0.0 {
-                continue;
-            }
-            axpy(&mut acc, &st.z[c * hc..(c + 1) * hc], qv);
-        }
+        micro::gemm_row(&mut acc, &st.phi, &st.z);
         // Diagonal block: engine scores (or exact local scores) over the
         // buffered in-progress rows.
         for j in 0..st.buf_mapped.len() {
@@ -321,9 +302,7 @@ impl CausalKernel for LinearEngine {
         }
         let inv = 1.0 / (1.0 + acc[st.h]);
         acc.truncate(st.h);
-        for o in acc.iter_mut() {
-            *o *= inv;
-        }
+        micro::scale_inplace(&mut acc, inv);
         self.maybe_flush(st);
         acc
     }
@@ -404,6 +383,8 @@ impl CausalKernel for LinearEngine {
         let mut phi = vec![0.0f32; f];
         let mut dphi = vec![0.0f32; f];
         let mut dacc = vec![0.0f32; hc];
+        let mut vext = vec![0.0f32; hc];
+        vext[h] = 1.0;
         for l in (0..nb).rev() {
             let base = l * b;
             let bl = b.min(n - base);
@@ -414,11 +395,10 @@ impl CausalKernel for LinearEngine {
                 for bj in 0..bl {
                     let j = base + bj;
                     self.map.expand(mk.row(j), &mut phi);
-                    let vrow = v.row(j);
-                    for c in 0..f {
-                        let zrow = &dz[c * hc..(c + 1) * hc];
-                        dphi[c] = dot(&zrow[..h], vrow) + zrow[h];
-                    }
+                    // dφ(k) = dZ·[v|1]: one fused dot-rows over the packed
+                    // (f, hc) dZ with the extended value row.
+                    vext[..h].copy_from_slice(v.row(j));
+                    micro::dot_rows(&vext, &dz, &mut dphi);
                     {
                         let dvj = dv.row_mut(j);
                         for (c, &pc) in phi.iter().enumerate() {
@@ -476,18 +456,13 @@ impl CausalKernel for LinearEngine {
                         }
                     }
                 }
-                // Prefix through Z_l (full hc width, like the forward).
+                // Prefix through Z_l (full hc width, like the forward):
+                // dφ(q) = Z_l·dacc as one fused dot-rows, then the rank-1
+                // suffix update dZ += φ(q) ⊗ dacc.
                 self.map.expand(mq.row(i), &mut phi);
-                for c in 0..f {
-                    dphi[c] = dot(&zl[c * hc..(c + 1) * hc], &dacc);
-                }
+                micro::dot_rows(&dacc, zl, &mut dphi);
                 self.map.expand_vjp(mq.row(i), &dphi, dmq.row_mut(i));
-                for (c, &pc) in phi.iter().enumerate() {
-                    if pc == 0.0 {
-                        continue;
-                    }
-                    axpy(&mut dz[c * hc..(c + 1) * hc], &dacc, pc);
-                }
+                micro::outer_accum(&mut dz, &phi, &dacc);
             }
         }
 

@@ -14,7 +14,7 @@ use crate::attn::poly::{self, powi};
 use crate::attn::softmax;
 use crate::obs::{self, Phase};
 use crate::tensor::{
-    axpy, dot, layernorm_rows, ln_row, ln_row_vjp, Tensor, TensorView, TensorViewMut,
+    axpy, dot, layernorm_rows, ln_row, ln_row_vjp, micro, Tensor, TensorView, TensorViewMut,
 };
 
 enum QuadKind {
@@ -155,20 +155,22 @@ impl CausalKernel for QuadraticEngine {
                         scores[j] = dot(qi, k.row(j)) * scale;
                         mx = mx.max(scores[j]);
                     }
-                    let mut sum = 0.0f32;
                     for s in scores[..m].iter_mut() {
                         *s = (*s - mx).exp();
-                        sum += *s;
                     }
-                    // s_j = scores[j]/sum; softmax VJP: da_j = s_j(dp_j - Σ s dp).
-                    let mut sdot = 0.0f32;
+                    let sum = micro::sum(&scores[..m]);
+                    // Normalize in place: scores becomes the probability row
+                    // s_j; softmax VJP: da_j = s_j(dp_j - Σ s dp).
+                    for s in scores[..m].iter_mut() {
+                        *s /= sum;
+                    }
                     for j in 0..m {
                         dp[j] = dot(doi, v.row(j));
-                        sdot += scores[j] / sum * dp[j];
                     }
+                    let sdot = micro::dot(&scores[..m], &dp[..m]);
                     dq_acc.fill(0.0);
                     for j in 0..m {
-                        let s = scores[j] / sum;
+                        let s = scores[j];
                         axpy(dv.row_mut(j), doi, s);
                         let da = s * (dp[j] - sdot) * scale;
                         axpy(&mut dq_acc, k.row(j), da);
@@ -196,8 +198,7 @@ impl CausalKernel for QuadraticEngine {
                     }
                     let inv = 1.0 / denom;
                     // out_i = acc·inv; ∂out/∂w_j = (v_j − out_i)/denom.
-                    let dout_dot_out: f32 =
-                        doi.iter().zip(&acc).map(|(&d, &a)| d * a * inv).sum();
+                    let dout_dot_out = micro::dot(doi, &acc) * inv;
                     for j in 0..=i {
                         axpy(dv.row_mut(j), doi, w[j] * inv);
                         let dw = (dot(doi, v.row(j)) - dout_dot_out) * inv;

@@ -15,7 +15,7 @@
 //! KV cache.
 
 use crate::attn::kernel::feature::MapScratch;
-use crate::tensor::{axpy, dot};
+use crate::tensor::{axpy, dot, micro};
 
 /// Attention state of one (layer, head) during autoregressive decoding.
 /// Engines construct and interpret it; everyone else treats it as an
@@ -106,11 +106,10 @@ impl KvState {
             scores[j] = dot(q, self.krow(j)) * scale;
             mx = mx.max(scores[j]);
         }
-        let mut sum = 0.0;
         for s in scores.iter_mut() {
             *s = (*s - mx).exp();
-            sum += *s;
         }
+        let sum = micro::sum(&scores);
         let mut out = vec![0.0f32; self.vd];
         for j in 0..self.len {
             axpy(&mut out, self.vrow(j), scores[j] / sum);
@@ -130,10 +129,7 @@ impl KvState {
             denom += w;
             axpy(&mut out, self.vrow(j), w);
         }
-        let inv = 1.0 / denom;
-        for o in out.iter_mut() {
-            *o *= inv;
-        }
+        micro::scale_inplace(&mut out, 1.0 / denom);
         out
     }
 }

@@ -1,7 +1,7 @@
 //! Performer (FAVOR+) baseline: positive orthogonal random features.
 
 use crate::exec::pool;
-use crate::tensor::{dot, matmul_rowmat, RowMat, Tensor};
+use crate::tensor::{matmul_rowmat, micro, RowMat, Tensor};
 use crate::util::rng::Pcg;
 use crate::attn::block_lt::linear_attention_block;
 
@@ -30,13 +30,11 @@ impl PerformerFeatures {
             let mut cols: Vec<Vec<f32>> = (0..take).map(|_| rng.gaussians(h)).collect();
             for c in 0..take {
                 for prev in 0..c {
-                    let proj = dot(&cols[c], &cols[prev]);
+                    let proj = micro::dot(&cols[c], &cols[prev]);
                     let prev_col = cols[prev].clone();
-                    for (x, p) in cols[c].iter_mut().zip(&prev_col) {
-                        *x -= proj * p;
-                    }
+                    micro::axpy(&mut cols[c], &prev_col, -proj);
                 }
-                let norm = dot(&cols[c], &cols[c]).sqrt().max(1e-12);
+                let norm = micro::dot(&cols[c], &cols[c]).sqrt().max(1e-12);
                 // Rescale to chi(h)-distributed norm like an iid Gaussian row.
                 let target = chi_sample(rng, h);
                 for x in cols[c].iter_mut() {
@@ -70,7 +68,7 @@ impl PerformerFeatures {
         let kernel = |row0: usize, chunk: &mut [f32]| {
             for (r, orow) in chunk.chunks_mut(m).enumerate() {
                 let i = row0 + r;
-                let sq = 0.5 * dot(x.row(i), x.row(i));
+                let sq = 0.5 * micro::dot(x.row(i), x.row(i));
                 for (o, &p) in orow.iter_mut().zip(proj.row(i)) {
                     *o = (p - sq).exp() * scale;
                 }
@@ -104,21 +102,14 @@ impl PerformerFeatures {
         let m = self.w.cols();
         debug_assert_eq!(mapped.len(), m);
         debug_assert_eq!(d_mapped.len(), m);
+        // dx = W·c − (Σ c)·x with c = d ⊙ φ: one elementwise product,
+        // one fused dot-rows over W's packed rows, one axpy.
+        let mut cvec = d_mapped.to_vec();
+        micro::mul_inplace(&mut cvec, mapped);
+        let csum = micro::sum(&cvec);
         let mut dx = vec![0.0f32; h];
-        let mut csum = 0.0f32;
-        for j in 0..m {
-            let c = d_mapped[j] * mapped[j];
-            if c == 0.0 {
-                continue;
-            }
-            csum += c;
-            for i in 0..h {
-                dx[i] += c * self.w.at2(i, j);
-            }
-        }
-        for i in 0..h {
-            dx[i] -= csum * row[i];
-        }
+        micro::dot_rows(&cvec, self.w.data(), &mut dx);
+        micro::axpy(&mut dx, row, -csum);
         dx
     }
 }
@@ -144,6 +135,7 @@ pub fn performer_attention(q: &Tensor, k: &Tensor, v: &Tensor,
 mod tests {
     use super::*;
     use crate::attn::softmax::softmax_attention;
+    use crate::tensor::dot;
 
     #[test]
     fn features_positive() {

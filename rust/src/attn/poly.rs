@@ -1,7 +1,7 @@
 //! Exact degree-p polynomial attention (Section 2.1) — quadratic baseline.
 
 use crate::exec::pool;
-use crate::tensor::{axpy, dot, layernorm_rows, RowMat, Tensor};
+use crate::tensor::{layernorm_rows, micro, RowMat, Tensor};
 
 /// Quadratic work (n² · h MACs) below which the kernel runs inline —
 /// the same tuning knob family as `attn::softmax::PAR_MIN_WORK`.
@@ -49,14 +49,11 @@ pub fn poly_attention_prenormed(qn: &Tensor, kn: &Tensor, v: &impl RowMat, p: u3
             let qi = qn.row(i);
             let mut denom = 1.0f32;
             for j in 0..=i {
-                let w = powi(dot(qi, kn.row(j)), p);
+                let w = powi(micro::dot(qi, kn.row(j)), p);
                 denom += w;
-                axpy(orow, v.row(j), w);
+                micro::axpy(orow, v.row(j), w);
             }
-            let inv = 1.0 / denom;
-            for o in orow.iter_mut() {
-                *o *= inv;
-            }
+            micro::scale_inplace(orow, 1.0 / denom);
         }
     };
     if n * n * qn.cols() < PAR_MIN_WORK {

@@ -6,7 +6,7 @@
 //! non-negativity, AMM error decay with r).
 
 use crate::exec::pool;
-use crate::tensor::{axpy, dot, Tensor};
+use crate::tensor::{micro, Tensor};
 use crate::util::rng::Pcg;
 
 /// Output elements (n · r²) below which `self_tensor_rows` runs inline —
@@ -134,10 +134,8 @@ impl PolySketch {
         tmp.resize(self.r, 0.0);
         matvec(m1, g1, out);
         matvec(m2, g2, tmp);
-        let s = 1.0 / (self.r as f32).sqrt();
-        for (o, &t) in out.iter_mut().zip(tmp.iter()) {
-            *o = (*o * t) * s;
-        }
+        micro::mul_inplace(out, tmp);
+        micro::scale_inplace(out, 1.0 / (self.r as f32).sqrt());
     }
 
     /// VJP of [`PolySketch::half_row`]: gradient of the half sketch with
@@ -194,8 +192,11 @@ impl PolySketch {
         let s = 1.0 / (self.r as f32).sqrt();
         let du: Vec<f32> = d_out.iter().zip(&w).map(|(&d0, &wv)| d0 * wv * s).collect();
         let dw: Vec<f32> = d_out.iter().zip(&u).map(|(&d0, &uv)| d0 * uv * s).collect();
-        let dm1: Vec<f32> = (0..m1.len()).map(|c| dot(g1.row(c), &du)).collect();
-        let dm2: Vec<f32> = (0..m2.len()).map(|c| dot(g2.row(c), &dw)).collect();
+        // dm = G · du — fused dot-rows over the packed Gaussian rows.
+        let mut dm1 = vec![0.0f32; m1.len()];
+        micro::dot_rows(&du, g1.data(), &mut dm1);
+        let mut dm2 = vec![0.0f32; m2.len()];
+        micro::dot_rows(&dw, g2.data(), &mut dm2);
         if d == 2 {
             for (o, (x, y)) in da.iter_mut().zip(dm1.iter().zip(&dm2)) {
                 *o += x + y;
@@ -232,12 +233,7 @@ pub struct HalfRowScratch {
 /// the identical accumulation order and zero-skip (bitwise parity).
 fn matvec(a: &[f32], g: &Tensor, out: &mut [f32]) {
     out.fill(0.0);
-    for (c, &av) in a.iter().enumerate() {
-        if av == 0.0 {
-            continue;
-        }
-        axpy(out, g.row(c), av);
-    }
+    micro::gemm_row(out, a, g.data());
 }
 
 /// Row-wise self Kronecker product: (n, r) -> (n, r^2).  Row-parallel;
@@ -251,12 +247,7 @@ pub fn self_tensor_rows(m: &Tensor) -> Tensor {
     let kernel = |row0: usize, chunk: &mut [f32]| {
         for (i, orow) in chunk.chunks_mut(r * r).enumerate() {
             let row = m.row(row0 + i);
-            for a in 0..r {
-                let ra = row[a];
-                for b in 0..r {
-                    orow[a * r + b] = ra * row[b];
-                }
-            }
+            micro::outer(orow, row, row);
         }
     };
     if n * r * r < PAR_MIN_WORK {

@@ -10,7 +10,7 @@
 //! (the final query/key blocks are simply shorter) — callers never pad.
 
 use crate::exec::pool;
-use crate::tensor::{axpy, dot, RowMat, Tensor};
+use crate::tensor::{micro, RowMat, Tensor};
 
 /// Quadratic work (n² · h MACs) below which the kernels run inline.
 const PAR_MIN_WORK: usize = 32 * 1024;
@@ -34,16 +34,15 @@ pub fn softmax_attention(q: &impl RowMat, k: &impl RowMat, v: &impl RowMat) -> T
             let qi = q.row(i);
             let mut mx = f32::NEG_INFINITY;
             for j in 0..=i {
-                scores[j] = dot(qi, k.row(j)) * scale;
+                scores[j] = micro::dot(qi, k.row(j)) * scale;
                 mx = mx.max(scores[j]);
             }
-            let mut sum = 0.0;
             for s in scores[..=i].iter_mut() {
                 *s = (*s - mx).exp();
-                sum += *s;
             }
+            let sum = micro::sum(&scores[..=i]);
             for j in 0..=i {
-                axpy(orow, v.row(j), scores[j] / sum);
+                micro::axpy(orow, v.row(j), scores[j] / sum);
             }
         }
     };
@@ -152,22 +151,20 @@ fn flash_query_block(
             let trow = &mut tile[bi * block..bi * block + klen];
             for (bj, t) in trow.iter_mut().enumerate() {
                 let j = k0 + bj;
-                *t = if j <= q0 + bi { dot(qi, k.row(j)) * scale } else { f32::NEG_INFINITY };
+                *t = if j <= q0 + bi { micro::dot(qi, k.row(j)) * scale } else { f32::NEG_INFINITY };
             }
         }
         // online rescale + accumulate
         for bi in 0..qlen {
             let trow = &tile[bi * block..bi * block + klen];
-            let row_max = trow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let m_new = m[bi].max(row_max);
+            let tile_max = micro::row_max(trow);
+            let m_new = m[bi].max(tile_max);
             if m_new == f32::NEG_INFINITY {
                 continue;
             }
             let corr = if m[bi] == f32::NEG_INFINITY { 0.0 } else { (m[bi] - m_new).exp() };
             let arow = &mut acc[bi * hv..(bi + 1) * hv];
-            for x in arow.iter_mut() {
-                *x *= corr;
-            }
+            micro::scale_inplace(arow, corr);
             let mut local_sum = 0.0;
             for (bj, &t) in trow.iter().enumerate() {
                 if t == f32::NEG_INFINITY {
@@ -175,7 +172,7 @@ fn flash_query_block(
                 }
                 let p = (t - m_new).exp();
                 local_sum += p;
-                axpy(arow, v.row(k0 + bj), p);
+                micro::axpy(arow, v.row(k0 + bj), p);
             }
             s[bi] = s[bi] * corr + local_sum;
             m[bi] = m_new;
@@ -184,10 +181,7 @@ fn flash_query_block(
     for bi in 0..qlen {
         let orow = &mut orows[bi * hv..(bi + 1) * hv];
         let arow = &acc[bi * hv..(bi + 1) * hv];
-        let inv = 1.0 / s[bi];
-        for (o, a) in orow.iter_mut().zip(arow) {
-            *o = a * inv;
-        }
+        micro::scale(orow, arow, 1.0 / s[bi]);
     }
 }
 

@@ -34,7 +34,7 @@ use std::sync::Arc;
 use crate::attn::kernel::{self, CausalKernel, KernelState};
 use crate::attn::Mechanism;
 use crate::checkpoint::Checkpoint;
-use crate::tensor::{gelu, layernorm_rows, ln_row, Tensor};
+use crate::tensor::{micro, layernorm_rows, ln_row, Tensor};
 use crate::util::rng::Pcg;
 
 /// Checkpoint format version written into the `meta` section.
@@ -314,7 +314,8 @@ impl NativeLm {
             );
             x = x.add(&attn_out.matmul(&layer.wo));
             let xn2 = layernorm_rows(&x);
-            let g = xn2.matmul(&layer.ffn_gate).map(gelu);
+            let mut g = xn2.matmul(&layer.ffn_gate);
+            micro::gelu_rows(g.data_mut());
             let u = xn2.matmul(&layer.ffn_up);
             x = x.add(&g.hadamard(&u).matmul(&layer.ffn_down));
         }
@@ -348,7 +349,8 @@ impl NativeLm {
                 *xi += a;
             }
             let xn2 = Tensor::from_vec(&[1, d], ln_row(&x));
-            let g = xn2.matmul(&layer.ffn_gate).map(gelu);
+            let mut g = xn2.matmul(&layer.ffn_gate);
+            micro::gelu_rows(g.data_mut());
             let u = xn2.matmul(&layer.ffn_up);
             let ffn = g.hadamard(&u).matmul(&layer.ffn_down);
             for (xi, a) in x.iter_mut().zip(ffn.data()) {
@@ -434,7 +436,8 @@ impl NativeLm {
             );
             x = x.add(&Tensor::from_vec(&[n, d], combined));
             let xn2 = layernorm_rows(&x);
-            let g = xn2.matmul(&layer.ffn_gate).map(gelu);
+            let mut g = xn2.matmul(&layer.ffn_gate);
+            micro::gelu_rows(g.data_mut());
             let u = xn2.matmul(&layer.ffn_up);
             x = x.add(&g.hadamard(&u).matmul(&layer.ffn_down));
         }
@@ -490,7 +493,8 @@ impl NativeLm {
                 *xi += a;
             }
             let xn2 = Tensor::from_vec(&[1, d], ln_row(&x));
-            let g = xn2.matmul(&layer.ffn_gate).map(gelu);
+            let mut g = xn2.matmul(&layer.ffn_gate);
+            micro::gelu_rows(g.data_mut());
             let u = xn2.matmul(&layer.ffn_up);
             let ffn = g.hadamard(&u).matmul(&layer.ffn_down);
             for (xi, a) in x.iter_mut().zip(ffn.data()) {

@@ -293,9 +293,10 @@ impl Handler for Gateway {
                 200,
                 "application/json",
                 &format!(
-                    "{{\"ok\":true,\"mech\":{},\"linear\":{}}}",
+                    "{{\"ok\":true,\"mech\":{},\"linear\":{},\"simd\":{}}}",
                     json_escape(&self.model.mech.label()),
                     self.model.mech.is_linear(),
+                    json_escape(crate::tensor::micro::backend_label()),
                 ),
             ),
             ("GET", "/metrics") if query.split('&').any(|kv| kv == "format=prometheus") => {

@@ -512,10 +512,11 @@ impl Handler for ShardGateway {
                     200,
                     "application/json",
                     &format!(
-                        "{{\"ok\":true,\"mech\":{},\"linear\":{},\"runners\":{},\
+                        "{{\"ok\":true,\"mech\":{},\"linear\":{},\"simd\":{},\"runners\":{},\
                          \"healthy\":{},\"degraded\":{},\"respawns\":{}}}",
                         json_escape(&self.mech.label()),
                         self.mech.is_linear(),
+                        json_escape(crate::tensor::micro::backend_label()),
                         total,
                         healthy,
                         healthy < total,

@@ -1,0 +1,447 @@
+//! The microkernel layer: every f32 inner loop in the crate, behind one
+//! trait with two interchangeable backends.
+//!
+//! Everything numeric above this module — the matmul family in
+//! `tensor/`, the block lower-triangular linear engine, the sketch and
+//! Performer feature maps, softmax/flash/poly attention, and the
+//! training VJPs — is written against the free functions here ([`dot`],
+//! [`gemm_row`], [`axpy`], [`outer_accum`], …).  They dispatch to one of
+//! two [`MicroKernel`] backends:
+//!
+//! * [`scalar::Scalar`] — the portable reference implementation.  This
+//!   *is* the numeric spec: what it computes, bit for bit, is what every
+//!   other backend must compute.
+//! * [`simd::Sse2`] / [`simd::Avx2`] — `std::arch` x86_64
+//!   implementations behind the `simd` cargo feature, selected at
+//!   runtime via CPU-feature detection.
+//!
+//! ## The lane-tree reduction order (determinism invariant #11)
+//!
+//! Every reduction (dot products, row sums, squared-deviation sums) uses
+//! one fixed **lane-width-8 reduction tree**, regardless of backend:
+//!
+//! * 8 independent accumulator lanes; element `i` is accumulated into
+//!   lane `i % 8`, in increasing-`i` order (so a ragged tail of length
+//!   `r` lands in lanes `0..r`);
+//! * the 8 lanes are combined in the fixed tree
+//!   `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` ([`lane_tree`]).
+//!
+//! An 8-lane accumulator is exactly one AVX2 `ymm` register (or two SSE2
+//! `xmm` registers), so the SIMD backends implement the spec natively
+//! while the scalar backend walks the same lanes one element at a time.
+//! Together with three more rules the result is bitwise identical across
+//! backends, CPU features, and thread counts:
+//!
+//! * **no FMA** — every multiply-accumulate is a rounded multiply
+//!   followed by a rounded add (`_mm256_mul_ps` + `_mm256_add_ps`, never
+//!   `_mm256_fmadd_ps`), because fused rounding would diverge from SSE2
+//!   and scalar;
+//! * **transcendentals stay scalar** — `exp`/`tanh`(gelu) call libm per
+//!   element in every backend; a vectorized polynomial would be a second
+//!   numeric spec;
+//! * **zero-skip is part of the spec** — accumulate primitives skip
+//!   coefficients that compare `== 0.0` (so `0 × ∞` never manufactures a
+//!   NaN in padded/ragged blocks), identically in every backend.
+//!
+//! Elementwise primitives (axpy, scale, outer product) are a single
+//! rounded op sequence per element and are therefore backend-identical
+//! by IEEE-754 semantics alone.  Max folds ([`row_max`]) stay a
+//! sequential scalar fold because packed-max NaN semantics differ from
+//! `f32::max`.
+//!
+//! ## Backend selection
+//!
+//! The active backend is chosen once per process from `PSF_SIMD`
+//! (`auto` | `off` | `avx2` | `sse2`, default `auto`) clamped to what
+//! the CPU and the `simd` cargo feature actually provide, and is
+//! reported by serve `/healthz`.  [`force_backend`] exists for tests and
+//! benches; flipping backends mid-run is benign *because* of the
+//! invariant above — every backend produces the same bytes.
+
+pub mod scalar;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub mod simd;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Width of the reduction tree: 8 lanes == one AVX2 register of f32.
+pub const LANES: usize = 8;
+
+/// Which [`MicroKernel`] implementation services the free functions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable reference implementation — the numeric spec.
+    Scalar,
+    /// x86_64 SSE2 (baseline on every x86_64 CPU).
+    Sse2,
+    /// x86_64 AVX2 (runtime-detected).
+    Avx2,
+}
+
+impl Backend {
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Sse2 => "sse2",
+            Backend::Avx2 => "avx2",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Backend::Scalar => 1,
+            Backend::Sse2 => 2,
+            Backend::Avx2 => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<Backend> {
+        match c {
+            1 => Some(Backend::Scalar),
+            2 => Some(Backend::Sse2),
+            3 => Some(Backend::Avx2),
+            _ => None,
+        }
+    }
+}
+
+/// The tiled f32 primitive set.  Two implementors: [`scalar::Scalar`]
+/// (the spec) and the `std::arch` backends in [`simd`].  The
+/// transcendental row primitives have default bodies that call scalar
+/// libm per element — backends must **not** override them (that is the
+/// spec: see the module docs).
+pub trait MicroKernel {
+    fn name(&self) -> &'static str;
+
+    /// Lane-tree dot product of two equal-length rows.
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// Fused dot-rows: `out[j] = dot(a, b[j*a.len() .. (j+1)*a.len()])`
+    /// for each of the `out.len()` packed rows of `b`.
+    fn dot_rows(&self, a: &[f32], b: &[f32], out: &mut [f32]);
+
+    /// Lane-tree sum of a row.
+    fn sum(&self, a: &[f32]) -> f32;
+
+    /// Lane-tree sum of squared deviations `Σ (a[i]-mean)²`.
+    fn sq_dev_sum(&self, a: &[f32], mean: f32) -> f32;
+
+    /// `out[i] += a[i] * s`.
+    fn axpy(&self, out: &mut [f32], a: &[f32], s: f32);
+
+    /// `out[i] = a[i] * s`.
+    fn scale(&self, out: &mut [f32], a: &[f32], s: f32);
+
+    /// `out[i] *= s`.
+    fn scale_inplace(&self, out: &mut [f32], s: f32);
+
+    /// `out[i] *= a[i]`.
+    fn mul_inplace(&self, out: &mut [f32], a: &[f32]);
+
+    /// `out[i] = (a[i] - mean) * inv` — the layernorm normalize step.
+    fn norm_scale(&self, out: &mut [f32], a: &[f32], mean: f32, inv: f32);
+
+    /// Packed GEMM row tile: `c[j] += Σ_k a[k] · b[k*c.len() + j]`, the
+    /// `k` additions in increasing-`k` order per element, coefficients
+    /// `a[k] == 0.0` skipped.  `b` is `a.len()` packed rows of `c.len()`.
+    fn gemm_row(&self, c: &mut [f32], a: &[f32], b: &[f32]);
+
+    /// Outer product, overwrite: `out[i*b.len()+j] = a[i] * b[j]`.
+    fn outer(&self, out: &mut [f32], a: &[f32], b: &[f32]);
+
+    /// Outer-product accumulate: `z[i*b.len()+j] += a[i] * b[j]`, rows
+    /// with `a[i] == 0.0` skipped.
+    fn outer_accum(&self, z: &mut [f32], a: &[f32], b: &[f32]);
+
+    /// `out[i] = exp(x[i] - mx)` — scalar libm per element (spec).
+    fn exp_sub(&self, out: &mut [f32], x: &[f32], mx: f32) {
+        debug_assert_eq!(out.len(), x.len());
+        for (o, &v) in out.iter_mut().zip(x) {
+            *o = (v - mx).exp();
+        }
+    }
+
+    /// In-place tanh-approximation GELU — scalar libm per element (spec).
+    fn gelu_rows(&self, x: &mut [f32]) {
+        for v in x.iter_mut() {
+            *v = crate::tensor::gelu(*v);
+        }
+    }
+}
+
+/// The fixed combine order for the 8 accumulator lanes.  This exact
+/// association is the spec — changing it re-blesses every golden.
+#[inline]
+pub fn lane_tree(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Sequential scalar max fold (`f32::max`, NaN-ignoring) — shared by all
+/// backends; packed-max NaN semantics differ, so this never vectorizes.
+#[inline]
+pub fn row_max(a: &[f32]) -> f32 {
+    a.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+}
+
+/// Layernorm row statistics via the lane-tree reductions: returns
+/// `(mean, 1/sqrt(var + eps))`.
+#[inline]
+pub fn ln_stats(x: &[f32], eps: f32) -> (f32, f32) {
+    let n = x.len() as f32;
+    let mean = sum(x) / n;
+    let var = sq_dev_sum(x, mean) / n;
+    (mean, 1.0 / (var + eps).sqrt())
+}
+
+const UNINIT: u8 = 0;
+static ACTIVE: AtomicU8 = AtomicU8::new(UNINIT);
+
+/// The backend servicing the free functions, initialized on first use
+/// from `PSF_SIMD` + CPU detection.
+#[inline]
+pub fn active() -> Backend {
+    match Backend::from_code(ACTIVE.load(Ordering::Relaxed)) {
+        Some(b) => b,
+        None => init_active(),
+    }
+}
+
+#[cold]
+fn init_active() -> Backend {
+    let b = detect_from_env();
+    ACTIVE.store(b.code(), Ordering::Relaxed);
+    b
+}
+
+/// `"scalar"` / `"sse2"` / `"avx2"` — surfaced by serve `/healthz`.
+pub fn backend_label() -> &'static str {
+    active().label()
+}
+
+/// Whether `b` can run on this build + CPU.
+pub fn available(b: Backend) -> bool {
+    match b {
+        Backend::Scalar => true,
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Backend::Sse2 => true,
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Backend::Avx2 => is_x86_feature_detected!("avx2"),
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        _ => false,
+    }
+}
+
+/// Best backend this build + CPU supports (what `PSF_SIMD=auto` picks).
+pub fn best_available() -> Backend {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Backend::Avx2;
+        }
+        return Backend::Sse2;
+    }
+    #[allow(unreachable_code)]
+    Backend::Scalar
+}
+
+/// Clamp a requested backend to what is actually available: an
+/// unavailable request falls back to the best available at or below it
+/// (`avx2` → `sse2` → `scalar`), never silently above it.
+fn clamp_to_available(req: Backend) -> Backend {
+    if available(req) {
+        return req;
+    }
+    match req {
+        Backend::Avx2 if available(Backend::Sse2) => Backend::Sse2,
+        _ => Backend::Scalar,
+    }
+}
+
+/// Parse `PSF_SIMD` (`auto` | `off` | `avx2` | `sse2`; unset or unknown
+/// values mean `auto`) and clamp to availability.
+fn detect_from_env() -> Backend {
+    let req = std::env::var("PSF_SIMD").unwrap_or_default();
+    match req.trim().to_ascii_lowercase().as_str() {
+        "off" | "scalar" | "0" => Backend::Scalar,
+        "sse2" => clamp_to_available(Backend::Sse2),
+        "avx2" => clamp_to_available(Backend::Avx2),
+        _ => best_available(),
+    }
+}
+
+/// Force the active backend (tests / benches / the parity gates).
+/// Errors if `b` is not available on this build + CPU.  Safe to call
+/// while other threads compute: every backend produces identical bytes,
+/// so a mid-computation switch cannot change any result.
+pub fn force_backend(b: Backend) -> Result<Backend, String> {
+    if !available(b) {
+        return Err(format!("micro backend `{}` not available on this build/CPU", b.label()));
+    }
+    ACTIVE.store(b.code(), Ordering::Relaxed);
+    Ok(b)
+}
+
+/// Drop back to env + CPU detection on next use.
+pub fn reset_backend() {
+    ACTIVE.store(UNINIT, Ordering::Relaxed);
+}
+
+macro_rules! dispatch {
+    ($(#[$doc:meta])* $name:ident ( $($arg:ident : $ty:ty),* ) $(-> $ret:ty)?) => {
+        $(#[$doc])*
+        #[inline]
+        pub fn $name($($arg: $ty),*) $(-> $ret)? {
+            match active() {
+                #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                Backend::Sse2 => MicroKernel::$name(&simd::Sse2, $($arg),*),
+                #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                Backend::Avx2 => MicroKernel::$name(&simd::Avx2, $($arg),*),
+                _ => MicroKernel::$name(&scalar::Scalar, $($arg),*),
+            }
+        }
+    };
+}
+
+dispatch! {
+    /// Lane-tree dot product — see [`MicroKernel::dot`].
+    dot(a: &[f32], b: &[f32]) -> f32
+}
+dispatch! {
+    /// Fused dot-rows — see [`MicroKernel::dot_rows`].
+    dot_rows(a: &[f32], b: &[f32], out: &mut [f32])
+}
+dispatch! {
+    /// Lane-tree row sum — see [`MicroKernel::sum`].
+    sum(a: &[f32]) -> f32
+}
+dispatch! {
+    /// Lane-tree squared-deviation sum — see [`MicroKernel::sq_dev_sum`].
+    sq_dev_sum(a: &[f32], mean: f32) -> f32
+}
+dispatch! {
+    /// `out += a · s` — see [`MicroKernel::axpy`].
+    axpy(out: &mut [f32], a: &[f32], s: f32)
+}
+dispatch! {
+    /// `out = a · s` — see [`MicroKernel::scale`].
+    scale(out: &mut [f32], a: &[f32], s: f32)
+}
+dispatch! {
+    /// `out *= s` — see [`MicroKernel::scale_inplace`].
+    scale_inplace(out: &mut [f32], s: f32)
+}
+dispatch! {
+    /// `out *= a` elementwise — see [`MicroKernel::mul_inplace`].
+    mul_inplace(out: &mut [f32], a: &[f32])
+}
+dispatch! {
+    /// `out = (a - mean) · inv` — see [`MicroKernel::norm_scale`].
+    norm_scale(out: &mut [f32], a: &[f32], mean: f32, inv: f32)
+}
+dispatch! {
+    /// Packed GEMM row tile — see [`MicroKernel::gemm_row`].
+    gemm_row(c: &mut [f32], a: &[f32], b: &[f32])
+}
+dispatch! {
+    /// Outer product (overwrite) — see [`MicroKernel::outer`].
+    outer(out: &mut [f32], a: &[f32], b: &[f32])
+}
+dispatch! {
+    /// Outer-product accumulate — see [`MicroKernel::outer_accum`].
+    outer_accum(z: &mut [f32], a: &[f32], b: &[f32])
+}
+dispatch! {
+    /// `out = exp(x - mx)` rows, scalar libm — see [`MicroKernel::exp_sub`].
+    exp_sub(out: &mut [f32], x: &[f32], mx: f32)
+}
+dispatch! {
+    /// In-place GELU rows, scalar libm — see [`MicroKernel::gelu_rows`].
+    gelu_rows(x: &mut [f32])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    // Spec reference, written independently of any backend: 8 lanes,
+    // element i into lane i % 8, fixed combine tree.
+    fn ref_dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        for i in 0..a.len() {
+            lanes[i % LANES] += a[i] * b[i];
+        }
+        lane_tree(&lanes)
+    }
+
+    #[test]
+    fn dot_is_the_lane_tree_spec() {
+        let mut rng = Pcg::seeded(77);
+        for n in [0usize, 1, 7, 8, 9, 13, 16, 31, 32, 33, 100] {
+            let a: Vec<f32> = rng.gaussians(n);
+            let b: Vec<f32> = rng.gaussians(n);
+            assert_eq!(dot(&a, &b).to_bits(), ref_dot(&a, &b).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn off_and_auto_backends_are_byte_identical() {
+        // The satellite unit test: force `off` (scalar) and `auto`
+        // (best available) and compare bytes across the primitive set.
+        let prev = active();
+        let mut rng = Pcg::seeded(78);
+        let n = 37usize;
+        let k = 5usize;
+        let a: Vec<f32> = rng.gaussians(n);
+        let b: Vec<f32> = rng.gaussians(n);
+        let coeff: Vec<f32> = rng.gaussians(k);
+        let packed: Vec<f32> = rng.gaussians(k * n);
+
+        let run = |backend: Backend| -> Vec<u32> {
+            force_backend(backend).unwrap();
+            let mut bits = Vec::new();
+            bits.push(dot(&a, &b).to_bits());
+            bits.push(sum(&a).to_bits());
+            bits.push(sq_dev_sum(&a, 0.25).to_bits());
+            let mut c = vec![0.0f32; n];
+            gemm_row(&mut c, &coeff, &packed);
+            let mut o = b.clone();
+            axpy(&mut o, &a, 1.5);
+            let mut z = vec![0.0f32; k * n];
+            outer_accum(&mut z, &coeff, &a);
+            let mut d = vec![0.0f32; k];
+            dot_rows(&a, &packed, &mut d);
+            for v in c.iter().chain(&o).chain(&z).chain(&d) {
+                bits.push(v.to_bits());
+            }
+            bits
+        };
+
+        let off = run(Backend::Scalar);
+        let auto = run(best_available());
+        assert_eq!(off, auto, "PSF_SIMD=off and auto must produce identical bytes");
+        force_backend(prev).unwrap();
+    }
+
+    #[test]
+    fn forced_backend_reports_label() {
+        let prev = active();
+        force_backend(Backend::Scalar).unwrap();
+        assert_eq!(backend_label(), "scalar");
+        force_backend(prev).unwrap();
+        assert!(matches!(backend_label(), "scalar" | "sse2" | "avx2"));
+    }
+
+    #[test]
+    fn zero_skip_never_manufactures_nan() {
+        // 0-coefficients must skip rows even when those rows hold inf/NaN.
+        let coeff = [0.0f32, 2.0];
+        let packed = [f32::INFINITY, f32::NAN, 1.0, -1.0];
+        let mut c = [1.0f32, 1.0];
+        gemm_row(&mut c, &coeff, &packed);
+        assert_eq!(c, [3.0, -1.0]);
+        let mut z = [0.0f32; 4];
+        outer_accum(&mut z, &coeff, &[1.0, 2.0]);
+        assert_eq!(z, [0.0, 0.0, 2.0, 4.0]);
+    }
+}

@@ -1,0 +1,142 @@
+//! The portable reference backend — this file *is* the numeric spec.
+//!
+//! Every loop here walks the same 8 accumulator lanes and the same
+//! per-element mul-then-add sequence the SIMD backends execute in
+//! registers; see the module docs in [`super`] for the four rules
+//! (lane tree, no FMA, scalar transcendentals, zero-skip).  Any change
+//! to an operation order in this file is a golden-re-blessing event and
+//! must be mirrored bit-for-bit in `simd.rs`.
+
+use super::{lane_tree, MicroKernel, LANES};
+
+/// The reference implementation of [`MicroKernel`].
+pub struct Scalar;
+
+impl MicroKernel for Scalar {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut lanes = [0.0f32; LANES];
+        let chunks = a.len() / LANES;
+        for c in 0..chunks {
+            let i = c * LANES;
+            for l in 0..LANES {
+                lanes[l] += a[i + l] * b[i + l];
+            }
+        }
+        for i in chunks * LANES..a.len() {
+            lanes[i % LANES] += a[i] * b[i];
+        }
+        lane_tree(&lanes)
+    }
+
+    fn dot_rows(&self, a: &[f32], b: &[f32], out: &mut [f32]) {
+        let k = a.len();
+        debug_assert_eq!(b.len(), k * out.len());
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.dot(a, &b[j * k..(j + 1) * k]);
+        }
+    }
+
+    fn sum(&self, a: &[f32]) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        let chunks = a.len() / LANES;
+        for c in 0..chunks {
+            let i = c * LANES;
+            for l in 0..LANES {
+                lanes[l] += a[i + l];
+            }
+        }
+        for i in chunks * LANES..a.len() {
+            lanes[i % LANES] += a[i];
+        }
+        lane_tree(&lanes)
+    }
+
+    fn sq_dev_sum(&self, a: &[f32], mean: f32) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        let chunks = a.len() / LANES;
+        for c in 0..chunks {
+            let i = c * LANES;
+            for l in 0..LANES {
+                let d = a[i + l] - mean;
+                lanes[l] += d * d;
+            }
+        }
+        for i in chunks * LANES..a.len() {
+            let d = a[i] - mean;
+            lanes[i % LANES] += d * d;
+        }
+        lane_tree(&lanes)
+    }
+
+    fn axpy(&self, out: &mut [f32], a: &[f32], s: f32) {
+        debug_assert_eq!(out.len(), a.len());
+        for (o, &v) in out.iter_mut().zip(a) {
+            *o += v * s;
+        }
+    }
+
+    fn scale(&self, out: &mut [f32], a: &[f32], s: f32) {
+        debug_assert_eq!(out.len(), a.len());
+        for (o, &v) in out.iter_mut().zip(a) {
+            *o = v * s;
+        }
+    }
+
+    fn scale_inplace(&self, out: &mut [f32], s: f32) {
+        for o in out.iter_mut() {
+            *o *= s;
+        }
+    }
+
+    fn mul_inplace(&self, out: &mut [f32], a: &[f32]) {
+        debug_assert_eq!(out.len(), a.len());
+        for (o, &v) in out.iter_mut().zip(a) {
+            *o *= v;
+        }
+    }
+
+    fn norm_scale(&self, out: &mut [f32], a: &[f32], mean: f32, inv: f32) {
+        debug_assert_eq!(out.len(), a.len());
+        for (o, &v) in out.iter_mut().zip(a) {
+            *o = (v - mean) * inv;
+        }
+    }
+
+    fn gemm_row(&self, c: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = c.len();
+        debug_assert_eq!(b.len(), a.len() * n);
+        for (kk, &av) in a.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &v) in c.iter_mut().zip(brow) {
+                *o += v * av;
+            }
+        }
+    }
+
+    fn outer(&self, out: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = b.len();
+        debug_assert_eq!(out.len(), a.len() * n);
+        for (i, &av) in a.iter().enumerate() {
+            self.scale(&mut out[i * n..(i + 1) * n], b, av);
+        }
+    }
+
+    fn outer_accum(&self, z: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = b.len();
+        debug_assert_eq!(z.len(), a.len() * n);
+        for (i, &av) in a.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            self.axpy(&mut z[i * n..(i + 1) * n], b, av);
+        }
+    }
+}

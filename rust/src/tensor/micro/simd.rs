@@ -1,0 +1,651 @@
+//! `std::arch` x86_64 backends: [`Sse2`] (baseline) and [`Avx2`]
+//! (runtime-detected).  Compiled only with the `simd` cargo feature on
+//! x86_64; selected in `micro::detect_from_env` / `force_backend`.
+//!
+//! Bitwise parity with [`super::scalar::Scalar`] is not approximate —
+//! it is the whole point.  The rules that make it hold:
+//!
+//! * reductions keep 8 accumulator lanes (one `ymm`, or two `xmm`) and
+//!   spill them to an array so the ragged tail and the final
+//!   [`super::lane_tree`] combine run the *scalar* spec code;
+//! * every multiply-accumulate is `mul` then `add` — **no FMA** — so
+//!   each lane performs the same two IEEE-754 roundings as the scalar
+//!   backend (`mulss`/`addss` and `mulps`/`addps` round identically
+//!   per lane, including NaN payloads, infinities, and subnormals;
+//!   Rust never enables FTZ/DAZ);
+//! * elementwise primitives vectorize freely because each output is a
+//!   single rounded op sequence — lane position cannot change it;
+//! * transcendentals ([`MicroKernel::exp_sub`], `gelu_rows`) keep the
+//!   trait's default scalar-libm bodies — deliberately not overridden.
+//!
+//! Tail handling: vector loops cover `len / width * width` elements;
+//! tails run the scalar spec loop starting at the same element index
+//! and (for reductions) the same lane assignment `i % 8`.
+
+#![allow(unsafe_code)]
+
+use std::arch::x86_64::*;
+
+use super::{lane_tree, scalar::Scalar, MicroKernel, LANES};
+
+/// SSE2 backend: 8-lane reductions as two `__m128` accumulators.
+pub struct Sse2;
+
+/// AVX2 backend: 8-lane reductions as one `__m256` accumulator.
+pub struct Avx2;
+
+// ---------------------------------------------------------------- SSE2
+
+// SSE2 is part of the x86_64 baseline, so these are sound to call on
+// any CPU this module compiles for; `unsafe` is only for the raw
+// pointer arithmetic of the unaligned loads/stores.
+
+#[inline]
+unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut lo = _mm_setzero_ps();
+    let mut hi = _mm_setzero_ps();
+    for c in 0..chunks {
+        let i = c * LANES;
+        lo = _mm_add_ps(lo, _mm_mul_ps(_mm_loadu_ps(ap.add(i)), _mm_loadu_ps(bp.add(i))));
+        hi = _mm_add_ps(hi, _mm_mul_ps(_mm_loadu_ps(ap.add(i + 4)), _mm_loadu_ps(bp.add(i + 4))));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm_storeu_ps(lanes.as_mut_ptr(), lo);
+    _mm_storeu_ps(lanes.as_mut_ptr().add(4), hi);
+    for i in chunks * LANES..n {
+        lanes[i % LANES] += a[i] * b[i];
+    }
+    lane_tree(&lanes)
+}
+
+#[inline]
+unsafe fn sum_sse2(a: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let mut lo = _mm_setzero_ps();
+    let mut hi = _mm_setzero_ps();
+    for c in 0..chunks {
+        let i = c * LANES;
+        lo = _mm_add_ps(lo, _mm_loadu_ps(ap.add(i)));
+        hi = _mm_add_ps(hi, _mm_loadu_ps(ap.add(i + 4)));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm_storeu_ps(lanes.as_mut_ptr(), lo);
+    _mm_storeu_ps(lanes.as_mut_ptr().add(4), hi);
+    for i in chunks * LANES..n {
+        lanes[i % LANES] += a[i];
+    }
+    lane_tree(&lanes)
+}
+
+#[inline]
+unsafe fn sq_dev_sum_sse2(a: &[f32], mean: f32) -> f32 {
+    let n = a.len();
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let vm = _mm_set1_ps(mean);
+    let mut lo = _mm_setzero_ps();
+    let mut hi = _mm_setzero_ps();
+    for c in 0..chunks {
+        let i = c * LANES;
+        let d0 = _mm_sub_ps(_mm_loadu_ps(ap.add(i)), vm);
+        let d1 = _mm_sub_ps(_mm_loadu_ps(ap.add(i + 4)), vm);
+        lo = _mm_add_ps(lo, _mm_mul_ps(d0, d0));
+        hi = _mm_add_ps(hi, _mm_mul_ps(d1, d1));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm_storeu_ps(lanes.as_mut_ptr(), lo);
+    _mm_storeu_ps(lanes.as_mut_ptr().add(4), hi);
+    for i in chunks * LANES..n {
+        let d = a[i] - mean;
+        lanes[i % LANES] += d * d;
+    }
+    lane_tree(&lanes)
+}
+
+#[inline]
+unsafe fn axpy_sse2(out: &mut [f32], a: &[f32], s: f32) {
+    debug_assert_eq!(out.len(), a.len());
+    let n = out.len();
+    let vs = _mm_set1_ps(s);
+    let (op, ap) = (out.as_mut_ptr(), a.as_ptr());
+    let mut i = 0;
+    while i + 4 <= n {
+        let r = _mm_add_ps(_mm_loadu_ps(op.add(i)), _mm_mul_ps(_mm_loadu_ps(ap.add(i)), vs));
+        _mm_storeu_ps(op.add(i), r);
+        i += 4;
+    }
+    while i < n {
+        out[i] += a[i] * s;
+        i += 1;
+    }
+}
+
+#[inline]
+unsafe fn scale_sse2(out: &mut [f32], a: &[f32], s: f32) {
+    debug_assert_eq!(out.len(), a.len());
+    let n = out.len();
+    let vs = _mm_set1_ps(s);
+    let (op, ap) = (out.as_mut_ptr(), a.as_ptr());
+    let mut i = 0;
+    while i + 4 <= n {
+        _mm_storeu_ps(op.add(i), _mm_mul_ps(_mm_loadu_ps(ap.add(i)), vs));
+        i += 4;
+    }
+    while i < n {
+        out[i] = a[i] * s;
+        i += 1;
+    }
+}
+
+#[inline]
+unsafe fn mul_inplace_sse2(out: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    let n = out.len();
+    let (op, ap) = (out.as_mut_ptr(), a.as_ptr());
+    let mut i = 0;
+    while i + 4 <= n {
+        _mm_storeu_ps(op.add(i), _mm_mul_ps(_mm_loadu_ps(op.add(i)), _mm_loadu_ps(ap.add(i))));
+        i += 4;
+    }
+    while i < n {
+        out[i] *= a[i];
+        i += 1;
+    }
+}
+
+#[inline]
+unsafe fn norm_scale_sse2(out: &mut [f32], a: &[f32], mean: f32, inv: f32) {
+    debug_assert_eq!(out.len(), a.len());
+    let n = out.len();
+    let vm = _mm_set1_ps(mean);
+    let vi = _mm_set1_ps(inv);
+    let (op, ap) = (out.as_mut_ptr(), a.as_ptr());
+    let mut i = 0;
+    while i + 4 <= n {
+        _mm_storeu_ps(op.add(i), _mm_mul_ps(_mm_sub_ps(_mm_loadu_ps(ap.add(i)), vm), vi));
+        i += 4;
+    }
+    while i < n {
+        out[i] = (a[i] - mean) * inv;
+        i += 1;
+    }
+}
+
+#[inline]
+unsafe fn gemm_row_sse2(c: &mut [f32], a: &[f32], b: &[f32]) {
+    let n = c.len();
+    let k = a.len();
+    debug_assert_eq!(b.len(), k * n);
+    let (cp, bp) = (c.as_mut_ptr(), b.as_ptr());
+    let mut j = 0;
+    // 16-wide register tile: each c element still accumulates in
+    // increasing-k order, identical to the scalar spec.
+    while j + 16 <= n {
+        let mut acc0 = _mm_loadu_ps(cp.add(j));
+        let mut acc1 = _mm_loadu_ps(cp.add(j + 4));
+        let mut acc2 = _mm_loadu_ps(cp.add(j + 8));
+        let mut acc3 = _mm_loadu_ps(cp.add(j + 12));
+        for (kk, &av) in a.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let vav = _mm_set1_ps(av);
+            let base = bp.add(kk * n + j);
+            acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(base), vav));
+            acc1 = _mm_add_ps(acc1, _mm_mul_ps(_mm_loadu_ps(base.add(4)), vav));
+            acc2 = _mm_add_ps(acc2, _mm_mul_ps(_mm_loadu_ps(base.add(8)), vav));
+            acc3 = _mm_add_ps(acc3, _mm_mul_ps(_mm_loadu_ps(base.add(12)), vav));
+        }
+        _mm_storeu_ps(cp.add(j), acc0);
+        _mm_storeu_ps(cp.add(j + 4), acc1);
+        _mm_storeu_ps(cp.add(j + 8), acc2);
+        _mm_storeu_ps(cp.add(j + 12), acc3);
+        j += 16;
+    }
+    while j + 4 <= n {
+        let mut acc = _mm_loadu_ps(cp.add(j));
+        for (kk, &av) in a.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            acc = _mm_add_ps(acc, _mm_mul_ps(_mm_loadu_ps(bp.add(kk * n + j)), _mm_set1_ps(av)));
+        }
+        _mm_storeu_ps(cp.add(j), acc);
+        j += 4;
+    }
+    for jj in j..n {
+        let mut s = c[jj];
+        for (kk, &av) in a.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            s += b[kk * n + jj] * av;
+        }
+        c[jj] = s;
+    }
+}
+
+impl MicroKernel for Sse2 {
+    fn name(&self) -> &'static str {
+        "sse2"
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: SSE2 is baseline on x86_64; slices bound all accesses.
+        unsafe { dot_sse2(a, b) }
+    }
+
+    fn dot_rows(&self, a: &[f32], b: &[f32], out: &mut [f32]) {
+        let k = a.len();
+        debug_assert_eq!(b.len(), k * out.len());
+        for (j, o) in out.iter_mut().enumerate() {
+            // SAFETY: as above.
+            *o = unsafe { dot_sse2(a, &b[j * k..(j + 1) * k]) };
+        }
+    }
+
+    fn sum(&self, a: &[f32]) -> f32 {
+        // SAFETY: as above.
+        unsafe { sum_sse2(a) }
+    }
+
+    fn sq_dev_sum(&self, a: &[f32], mean: f32) -> f32 {
+        // SAFETY: as above.
+        unsafe { sq_dev_sum_sse2(a, mean) }
+    }
+
+    fn axpy(&self, out: &mut [f32], a: &[f32], s: f32) {
+        // SAFETY: as above.
+        unsafe { axpy_sse2(out, a, s) }
+    }
+
+    fn scale(&self, out: &mut [f32], a: &[f32], s: f32) {
+        // SAFETY: as above.
+        unsafe { scale_sse2(out, a, s) }
+    }
+
+    fn scale_inplace(&self, out: &mut [f32], s: f32) {
+        // In-place scale is scale() aliased onto itself element by
+        // element; reuse the scalar loop shape via a raw split.
+        let n = out.len();
+        // SAFETY: as above; reading and writing the same element of a
+        // packed lane is fine (load happens before store).
+        unsafe {
+            let op = out.as_mut_ptr();
+            let vs = _mm_set1_ps(s);
+            let mut i = 0;
+            while i + 4 <= n {
+                _mm_storeu_ps(op.add(i), _mm_mul_ps(_mm_loadu_ps(op.add(i)), vs));
+                i += 4;
+            }
+            while i < n {
+                out[i] *= s;
+                i += 1;
+            }
+        }
+    }
+
+    fn mul_inplace(&self, out: &mut [f32], a: &[f32]) {
+        // SAFETY: as above.
+        unsafe { mul_inplace_sse2(out, a) }
+    }
+
+    fn norm_scale(&self, out: &mut [f32], a: &[f32], mean: f32, inv: f32) {
+        // SAFETY: as above.
+        unsafe { norm_scale_sse2(out, a, mean, inv) }
+    }
+
+    fn gemm_row(&self, c: &mut [f32], a: &[f32], b: &[f32]) {
+        // SAFETY: as above.
+        unsafe { gemm_row_sse2(c, a, b) }
+    }
+
+    fn outer(&self, out: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = b.len();
+        debug_assert_eq!(out.len(), a.len() * n);
+        for (i, &av) in a.iter().enumerate() {
+            self.scale(&mut out[i * n..(i + 1) * n], b, av);
+        }
+    }
+
+    fn outer_accum(&self, z: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = b.len();
+        debug_assert_eq!(z.len(), a.len() * n);
+        for (i, &av) in a.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            self.axpy(&mut z[i * n..(i + 1) * n], b, av);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- AVX2
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let i = c * LANES;
+        acc = _mm256_add_ps(
+            acc,
+            _mm256_mul_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i))),
+        );
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for i in chunks * LANES..n {
+        lanes[i % LANES] += a[i] * b[i];
+    }
+    lane_tree(&lanes)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sum_avx2(a: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        acc = _mm256_add_ps(acc, _mm256_loadu_ps(ap.add(c * LANES)));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for i in chunks * LANES..n {
+        lanes[i % LANES] += a[i];
+    }
+    lane_tree(&lanes)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sq_dev_sum_avx2(a: &[f32], mean: f32) -> f32 {
+    let n = a.len();
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let vm = _mm256_set1_ps(mean);
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let d = _mm256_sub_ps(_mm256_loadu_ps(ap.add(c * LANES)), vm);
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for i in chunks * LANES..n {
+        let d = a[i] - mean;
+        lanes[i % LANES] += d * d;
+    }
+    lane_tree(&lanes)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(out: &mut [f32], a: &[f32], s: f32) {
+    debug_assert_eq!(out.len(), a.len());
+    let n = out.len();
+    let vs = _mm256_set1_ps(s);
+    let (op, ap) = (out.as_mut_ptr(), a.as_ptr());
+    let mut i = 0;
+    while i + 8 <= n {
+        let r = _mm256_add_ps(
+            _mm256_loadu_ps(op.add(i)),
+            _mm256_mul_ps(_mm256_loadu_ps(ap.add(i)), vs),
+        );
+        _mm256_storeu_ps(op.add(i), r);
+        i += 8;
+    }
+    while i < n {
+        out[i] += a[i] * s;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_avx2(out: &mut [f32], a: &[f32], s: f32) {
+    debug_assert_eq!(out.len(), a.len());
+    let n = out.len();
+    let vs = _mm256_set1_ps(s);
+    let (op, ap) = (out.as_mut_ptr(), a.as_ptr());
+    let mut i = 0;
+    while i + 8 <= n {
+        _mm256_storeu_ps(op.add(i), _mm256_mul_ps(_mm256_loadu_ps(ap.add(i)), vs));
+        i += 8;
+    }
+    while i < n {
+        out[i] = a[i] * s;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_inplace_avx2(out: &mut [f32], s: f32) {
+    let n = out.len();
+    let vs = _mm256_set1_ps(s);
+    let op = out.as_mut_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        _mm256_storeu_ps(op.add(i), _mm256_mul_ps(_mm256_loadu_ps(op.add(i)), vs));
+        i += 8;
+    }
+    while i < n {
+        out[i] *= s;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn mul_inplace_avx2(out: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    let n = out.len();
+    let (op, ap) = (out.as_mut_ptr(), a.as_ptr());
+    let mut i = 0;
+    while i + 8 <= n {
+        _mm256_storeu_ps(
+            op.add(i),
+            _mm256_mul_ps(_mm256_loadu_ps(op.add(i)), _mm256_loadu_ps(ap.add(i))),
+        );
+        i += 8;
+    }
+    while i < n {
+        out[i] *= a[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn norm_scale_avx2(out: &mut [f32], a: &[f32], mean: f32, inv: f32) {
+    debug_assert_eq!(out.len(), a.len());
+    let n = out.len();
+    let vm = _mm256_set1_ps(mean);
+    let vi = _mm256_set1_ps(inv);
+    let (op, ap) = (out.as_mut_ptr(), a.as_ptr());
+    let mut i = 0;
+    while i + 8 <= n {
+        _mm256_storeu_ps(
+            op.add(i),
+            _mm256_mul_ps(_mm256_sub_ps(_mm256_loadu_ps(ap.add(i)), vm), vi),
+        );
+        i += 8;
+    }
+    while i < n {
+        out[i] = (a[i] - mean) * inv;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_row_avx2(c: &mut [f32], a: &[f32], b: &[f32]) {
+    let n = c.len();
+    let k = a.len();
+    debug_assert_eq!(b.len(), k * n);
+    let (cp, bp) = (c.as_mut_ptr(), b.as_ptr());
+    let mut j = 0;
+    // 32-wide register tile (4 ymm); each c element accumulates in
+    // increasing-k order, identical to the scalar spec.
+    while j + 32 <= n {
+        let mut acc0 = _mm256_loadu_ps(cp.add(j));
+        let mut acc1 = _mm256_loadu_ps(cp.add(j + 8));
+        let mut acc2 = _mm256_loadu_ps(cp.add(j + 16));
+        let mut acc3 = _mm256_loadu_ps(cp.add(j + 24));
+        for (kk, &av) in a.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let vav = _mm256_set1_ps(av);
+            let base = bp.add(kk * n + j);
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_loadu_ps(base), vav));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_loadu_ps(base.add(8)), vav));
+            acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_loadu_ps(base.add(16)), vav));
+            acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_loadu_ps(base.add(24)), vav));
+        }
+        _mm256_storeu_ps(cp.add(j), acc0);
+        _mm256_storeu_ps(cp.add(j + 8), acc1);
+        _mm256_storeu_ps(cp.add(j + 16), acc2);
+        _mm256_storeu_ps(cp.add(j + 24), acc3);
+        j += 32;
+    }
+    while j + 8 <= n {
+        let mut acc = _mm256_loadu_ps(cp.add(j));
+        for (kk, &av) in a.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            acc = _mm256_add_ps(
+                acc,
+                _mm256_mul_ps(_mm256_loadu_ps(bp.add(kk * n + j)), _mm256_set1_ps(av)),
+            );
+        }
+        _mm256_storeu_ps(cp.add(j), acc);
+        j += 8;
+    }
+    for jj in j..n {
+        let mut s = c[jj];
+        for (kk, &av) in a.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            s += b[kk * n + jj] * av;
+        }
+        c[jj] = s;
+    }
+}
+
+impl MicroKernel for Avx2 {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    // SAFETY (all methods): the Avx2 backend is only selectable when
+    // `is_x86_feature_detected!("avx2")` held at selection time
+    // (micro::available), so the target-feature contract is met; slices
+    // bound all pointer arithmetic.
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        unsafe { dot_avx2(a, b) }
+    }
+
+    fn dot_rows(&self, a: &[f32], b: &[f32], out: &mut [f32]) {
+        let k = a.len();
+        debug_assert_eq!(b.len(), k * out.len());
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = unsafe { dot_avx2(a, &b[j * k..(j + 1) * k]) };
+        }
+    }
+
+    fn sum(&self, a: &[f32]) -> f32 {
+        unsafe { sum_avx2(a) }
+    }
+
+    fn sq_dev_sum(&self, a: &[f32], mean: f32) -> f32 {
+        unsafe { sq_dev_sum_avx2(a, mean) }
+    }
+
+    fn axpy(&self, out: &mut [f32], a: &[f32], s: f32) {
+        unsafe { axpy_avx2(out, a, s) }
+    }
+
+    fn scale(&self, out: &mut [f32], a: &[f32], s: f32) {
+        unsafe { scale_avx2(out, a, s) }
+    }
+
+    fn scale_inplace(&self, out: &mut [f32], s: f32) {
+        unsafe { scale_inplace_avx2(out, s) }
+    }
+
+    fn mul_inplace(&self, out: &mut [f32], a: &[f32]) {
+        unsafe { mul_inplace_avx2(out, a) }
+    }
+
+    fn norm_scale(&self, out: &mut [f32], a: &[f32], mean: f32, inv: f32) {
+        unsafe { norm_scale_avx2(out, a, mean, inv) }
+    }
+
+    fn gemm_row(&self, c: &mut [f32], a: &[f32], b: &[f32]) {
+        unsafe { gemm_row_avx2(c, a, b) }
+    }
+
+    fn outer(&self, out: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = b.len();
+        debug_assert_eq!(out.len(), a.len() * n);
+        for (i, &av) in a.iter().enumerate() {
+            self.scale(&mut out[i * n..(i + 1) * n], b, av);
+        }
+    }
+
+    fn outer_accum(&self, z: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = b.len();
+        debug_assert_eq!(z.len(), a.len() * n);
+        for (i, &av) in a.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            self.axpy(&mut z[i * n..(i + 1) * n], b, av);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{best_available, Backend};
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    /// Every primitive, scalar vs the best SIMD backend, bit for bit.
+    #[test]
+    fn simd_backends_match_scalar_bitwise() {
+        let mut rng = Pcg::seeded(91);
+        let simd_kinds: Vec<&dyn MicroKernel> = match best_available() {
+            Backend::Avx2 => vec![&Sse2, &Avx2],
+            Backend::Sse2 => vec![&Sse2],
+            Backend::Scalar => vec![],
+        };
+        for n in [1usize, 3, 4, 7, 8, 9, 13, 16, 17, 31, 32, 33, 64, 65] {
+            let a: Vec<f32> = rng.gaussians(n);
+            let b: Vec<f32> = rng.gaussians(n);
+            let k = 5usize;
+            let coeff: Vec<f32> = rng.gaussians(k);
+            let packed: Vec<f32> = rng.gaussians(k * n);
+            for kern in &simd_kinds {
+                assert_eq!(kern.dot(&a, &b).to_bits(), Scalar.dot(&a, &b).to_bits(), "dot n={n}");
+                assert_eq!(kern.sum(&a).to_bits(), Scalar.sum(&a).to_bits(), "sum n={n}");
+                assert_eq!(
+                    kern.sq_dev_sum(&a, 0.3).to_bits(),
+                    Scalar.sq_dev_sum(&a, 0.3).to_bits(),
+                    "sq_dev n={n}"
+                );
+                let (mut c1, mut c2) = (vec![0.1f32; n], vec![0.1f32; n]);
+                kern.gemm_row(&mut c1, &coeff, &packed);
+                Scalar.gemm_row(&mut c2, &coeff, &packed);
+                assert_eq!(c1, c2, "gemm_row n={n} ({})", kern.name());
+            }
+        }
+    }
+}

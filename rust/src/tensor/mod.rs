@@ -10,9 +10,19 @@
 //! row is produced by exactly the sequential inner loop — results are
 //! bitwise identical at every thread count, and small shapes (decode
 //! steps are 1-row) never leave the calling thread.
+//!
+//! The inner loops themselves live one layer down, in [`micro`]: every
+//! dot product, GEMM row tile, axpy, and row reduction dispatches to the
+//! microkernel backend (scalar reference or runtime-detected SSE2/AVX2),
+//! all of which share the fixed lane-width-8 reduction-tree order — so
+//! "bitwise identical" extends across SIMD backends too.
+
+pub mod micro;
 
 use crate::exec::pool;
 use crate::util::rng::Pcg;
+
+pub use micro::{axpy, dot};
 
 /// Shapes below this many multiply-accumulates run inline: the dispatch
 /// cost would exceed the work, and the decode hot path (m = 1) must never
@@ -268,10 +278,9 @@ impl Tensor {
         }
         let kernel = |row0: usize, chunk: &mut [f32]| {
             for (r, orow) in chunk.chunks_mut(n).enumerate() {
-                let a = self.row(row0 + r);
-                for (j, o) in orow.iter_mut().enumerate() {
-                    *o = dot(a, other.row(j));
-                }
+                // Fused dot-rows over B's packed rows (one tile call per
+                // C row instead of n separate dots).
+                micro::dot_rows(self.row(row0 + r), other.data(), orow);
             }
         };
         if m.saturating_mul(ka).saturating_mul(n) < PAR_MIN_FLOPS {
@@ -317,7 +326,7 @@ impl Tensor {
     }
 
     pub fn frob_norm(&self) -> f32 {
-        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+        micro::dot(&self.data, &self.data).sqrt()
     }
 
     /// Borrowed full view of a 2-D tensor.
@@ -392,11 +401,10 @@ impl Tensor {
 /// to [`layernorm_rows`] (eps 1e-6), applied per token on the decode hot
 /// path.
 pub fn ln_row(x: &[f32]) -> Vec<f32> {
-    let n = x.len();
-    let mean: f32 = x.iter().sum::<f32>() / n as f32;
-    let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
-    let inv = 1.0 / (var + 1e-6).sqrt();
-    x.iter().map(|v| (v - mean) * inv).collect()
+    let (mean, inv) = micro::ln_stats(x, 1e-6);
+    let mut out = vec![0.0f32; x.len()];
+    micro::norm_scale(&mut out, x, mean, inv);
+    out
 }
 
 /// VJP of [`ln_row`]: given the raw row `x` and the gradient `dy` w.r.t.
@@ -408,19 +416,14 @@ pub fn ln_row(x: &[f32]) -> Vec<f32> {
 pub fn ln_row_vjp(x: &[f32], dy: &[f32]) -> Vec<f32> {
     let n = x.len();
     debug_assert_eq!(dy.len(), n);
-    let mean: f32 = x.iter().sum::<f32>() / n as f32;
-    let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
-    let inv = 1.0 / (var + 1e-6).sqrt();
-    let dy_mean: f32 = dy.iter().sum::<f32>() / n as f32;
-    let dyy_mean: f32 = x
-        .iter()
+    let (mean, inv) = micro::ln_stats(x, 1e-6);
+    let mut y = vec![0.0f32; n];
+    micro::norm_scale(&mut y, x, mean, inv);
+    let dy_mean = micro::sum(dy) / n as f32;
+    let dyy_mean = micro::dot(dy, &y) / n as f32;
+    y.iter()
         .zip(dy)
-        .map(|(&xv, &dv)| dv * (xv - mean) * inv)
-        .sum::<f32>()
-        / n as f32;
-    x.iter()
-        .zip(dy)
-        .map(|(&xv, &dv)| (dv - dy_mean - (xv - mean) * inv * dyy_mean) * inv)
+        .map(|(&yv, &dv)| (dv - dy_mean - yv * dyy_mean) * inv)
         .collect()
 }
 
@@ -450,12 +453,8 @@ pub fn layernorm_rows(x: &impl RowMat) -> Tensor {
     let kernel = |row0: usize, chunk: &mut [f32]| {
         for (r, orow) in chunk.chunks_mut(n).enumerate() {
             let row = x.row(row0 + r);
-            let mean: f32 = row.iter().sum::<f32>() / n as f32;
-            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
-            let inv = 1.0 / (var + 1e-6).sqrt();
-            for (o, &v) in orow.iter_mut().zip(row) {
-                *o = (v - mean) * inv;
-            }
+            let (mean, inv) = micro::ln_stats(row, 1e-6);
+            micro::norm_scale(orow, row, mean, inv);
         }
     };
     if m * n < PAR_MIN_FLOPS {
@@ -476,13 +475,9 @@ pub fn softmax_rows(x: &Tensor) -> Tensor {
     let kernel = |row0: usize, chunk: &mut [f32]| {
         for (r, orow) in chunk.chunks_mut(n).enumerate() {
             let row = x.row(row0 + r);
-            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut sum = 0.0;
-            for (o, &v) in orow.iter_mut().zip(row) {
-                let e = (v - mx).exp();
-                *o = e;
-                sum += e;
-            }
+            let mx = micro::row_max(row);
+            micro::exp_sub(orow, row, mx);
+            let sum = micro::sum(orow);
             for v in orow.iter_mut() {
                 *v /= sum;
             }
@@ -496,38 +491,10 @@ pub fn softmax_rows(x: &Tensor) -> Tensor {
     out
 }
 
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    // 4-wide unroll: lets LLVM vectorize without unsafe.
-    let chunks = a.len() / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    for i in chunks * 4..a.len() {
-        acc += a[i] * b[i];
-    }
-    acc + s0 + s1 + s2 + s3
-}
-
-/// out += a_row (x) scale — axpy helper used by the attention inner loops.
-#[inline]
-pub fn axpy(out: &mut [f32], a: &[f32], scale: f32) {
-    debug_assert_eq!(out.len(), a.len());
-    for i in 0..out.len() {
-        out[i] += a[i] * scale;
-    }
-}
-
 /// Plain row-major matmul into preallocated storage: C(m,n) = A(m,k) B(k,n).
-/// Row-parallel above [`PAR_MIN_FLOPS`]; every C row is produced by the
-/// same ikj loop (zero-skip included) regardless of thread count.
+/// Row-parallel above [`PAR_MIN_FLOPS`]; every C row is one
+/// [`micro::gemm_row`] tile (zero-skip included) regardless of thread
+/// count or backend.
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     if c.is_empty() {
         return;
@@ -536,13 +503,7 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
         chunk.fill(0.0);
         for (r, crow) in chunk.chunks_mut(n).enumerate() {
             let i = row0 + r;
-            for kk in 0..k {
-                let av = a[i * k + kk];
-                if av == 0.0 {
-                    continue;
-                }
-                axpy(crow, &b[kk * n..(kk + 1) * n], av);
-            }
+            micro::gemm_row(crow, &a[i * k..(i + 1) * k], b);
         }
     };
     if m.saturating_mul(k).saturating_mul(n) < PAR_MIN_FLOPS {
@@ -554,8 +515,8 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
 
 /// C = A @ B where A is any [`RowMat`] (possibly a strided view) and B
 /// is an owned tensor.  Per-row operation order is identical to
-/// [`matmul_into`]'s (zero-skip ikj), so a view and its copied tensor
-/// produce the same bytes.
+/// [`matmul_into`]'s (the same [`micro::gemm_row`] tile), so a view and
+/// its copied tensor produce the same bytes.
 pub fn matmul_rowmat(a: &impl RowMat, b: &Tensor) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (kb, n) = (b.rows(), b.cols());
@@ -567,13 +528,7 @@ pub fn matmul_rowmat(a: &impl RowMat, b: &Tensor) -> Tensor {
     let kernel = |row0: usize, chunk: &mut [f32]| {
         chunk.fill(0.0);
         for (r, crow) in chunk.chunks_mut(n).enumerate() {
-            let arow = a.row(row0 + r);
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                axpy(crow, b.row(kk), av);
-            }
+            micro::gemm_row(crow, a.row(row0 + r), b.data());
         }
     };
     if m.saturating_mul(k).saturating_mul(n) < PAR_MIN_FLOPS {
@@ -646,6 +601,10 @@ mod tests {
 
     #[test]
     fn dot_matches_naive() {
+        // Small exact integers: every product and partial sum is exactly
+        // representable, so the lane-tree reduction agrees with the
+        // sequential sum bit for bit here.  (The tree order itself is
+        // pinned by tensor::micro's own tests and tests/properties.rs.)
         let a: Vec<f32> = (0..13).map(|i| i as f32).collect();
         let b: Vec<f32> = (0..13).map(|i| (i * 2) as f32).collect();
         let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();

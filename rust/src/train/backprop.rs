@@ -19,7 +19,7 @@ use crate::attn::kernel;
 use crate::exec::pool;
 use crate::infer::model::{add_sinusoidal, rope_heads, rope_row_inv};
 use crate::infer::{NativeLm, Params};
-use crate::tensor::{axpy, gelu, gelu_grad, layernorm_rows, Tensor};
+use crate::tensor::{axpy, gelu_grad, layernorm_rows, micro, Tensor};
 use crate::train::grad::{
     add_into, add_matmul_tn, layernorm_rows_vjp, masked_cross_entropy,
 };
@@ -94,7 +94,8 @@ pub fn forward_tape(model: &NativeLm, inputs: &[u32]) -> (Tensor, Tape) {
         let x_mid = x_in.add(&ao.matmul(&layer.wo));
         let xn2 = layernorm_rows(&x_mid);
         let g_pre = xn2.matmul(&layer.ffn_gate);
-        let g = g_pre.clone().map(gelu);
+        let mut g = g_pre.clone();
+        micro::gelu_rows(g.data_mut());
         let u = xn2.matmul(&layer.ffn_up);
         x = x_mid.add(&g.hadamard(&u).matmul(&layer.ffn_down));
         layers.push(LayerTape { x_in, xn, q, k, v, ao, x_mid, xn2, g_pre, g, u });

@@ -8,7 +8,7 @@
 //! sums accumulate in f64 so the finite-difference gradient checks are
 //! not dominated by f32 summation noise.
 
-use crate::tensor::{ln_row_vjp, softmax_rows, Tensor};
+use crate::tensor::{micro, ln_row_vjp, softmax_rows, Tensor};
 
 /// C = Aᵀ·B for A (n, a), B (n, b) → (a, b): the weight-gradient adjoint
 /// of `x.matmul(w)` (dW = xᵀ·dy).
@@ -16,13 +16,12 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     a.transpose2().matmul(b)
 }
 
-/// acc += Aᵀ·B — weight-gradient accumulation into a Params tensor.
+/// acc += Aᵀ·B — weight-gradient accumulation into a Params tensor
+/// (axpy with unit scale: y·1.0 == y bitwise, so this is a pure add).
 pub fn add_matmul_tn(acc: &mut Tensor, a: &Tensor, b: &Tensor) {
     let g = matmul_tn(a, b);
     assert_eq!(acc.shape(), g.shape());
-    for (x, y) in acc.data_mut().iter_mut().zip(g.data()) {
-        *x += y;
-    }
+    micro::axpy(acc.data_mut(), g.data(), 1.0);
 }
 
 /// Row-wise backward of `layernorm_rows`: `x` is the raw input, `dy` the
@@ -40,9 +39,7 @@ pub fn layernorm_rows_vjp(x: &Tensor, dy: &Tensor) -> Tensor {
 /// a += b elementwise (same shape).
 pub fn add_into(a: &mut Tensor, b: &Tensor) {
     assert_eq!(a.shape(), b.shape());
-    for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
-        *x += y;
-    }
+    micro::axpy(a.data_mut(), b.data(), 1.0);
 }
 
 /// Masked cross-entropy statistics of one example.

@@ -236,6 +236,8 @@ fn http_end_to_end_cached_equals_uncached() {
     let health = http_request(addr, "GET", "/healthz", "");
     assert!(health.starts_with("HTTP/1.1 200"), "{health}");
     assert!(health.contains("\"ok\":true"), "{health}");
+    // The active microkernel backend is part of the liveness identity.
+    assert!(health.contains("\"simd\":"), "{health}");
 
     let body = r#"{"prompt":"the polynomial kernel","max_tokens":12,"policy":"greedy","seed":3}"#;
     let cold = http_request(addr, "POST", "/v1/generate", body);

@@ -23,6 +23,16 @@
 //! blocked recurrence, see CHANGES.md).  The serial-vs-pooled
 //! cross-check below and the `PSF_THREADS=2` CI rerun keep the
 //! fixtures thread-count independent from then on.
+//!
+//! Re-bless (microkernel refactor): moving every inner loop onto
+//! `tensor::micro` replaced the historical sequential `sum += a[i]*b[i]`
+//! folds with the fixed lane-width-8 reduction tree, which rounds
+//! differently, so these fixtures were re-blessed exactly once at that
+//! commit.  The lane tree is now *the spec* (DESIGN.md, invariant #11):
+//! it is what makes scalar and SIMD backends byte-identical, so it can
+//! never change again — any future bit movement here is a bug, not a
+//! candidate for re-blessing.  CI reruns this suite under `PSF_SIMD=off`
+//! to pin both backends to the same fixtures.
 
 use std::fmt::Write as _;
 use std::path::PathBuf;

@@ -17,7 +17,7 @@ use polysketchformer::shard::proto::{
     decode_generate, encode_generate, Frame, FrameKind, ProtoError, MAX_PAYLOAD, VERSION,
 };
 use polysketchformer::shard::{hash_key, HashRing};
-use polysketchformer::tensor::{layernorm_rows, Tensor};
+use polysketchformer::tensor::{layernorm_rows, micro, Tensor};
 use polysketchformer::util::rng::Pcg;
 
 // ------------------------------------------------------------- batching
@@ -348,6 +348,147 @@ fn prop_flash_matches_naive_softmax() {
             ensure(close(*x, *y, 1e-4), format!("{x} vs {y}"))?;
         }
         Ok(())
+    });
+}
+
+// ------------------------------------------------------- microkernel layer
+
+/// Independent transcription of the documented reduction spec: element i
+/// feeds lane i % 8 in increasing-i order, lanes combine as the fixed
+/// balanced tree.  Deliberately *not* calling into `micro` — this is the
+/// oracle the lane-tree invariant is checked against.
+fn spec_dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; micro::LANES];
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        lanes[i % micro::LANES] += x * y;
+    }
+    ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+}
+
+fn spec_sum(a: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; micro::LANES];
+    for (i, x) in a.iter().enumerate() {
+        lanes[i % micro::LANES] += x;
+    }
+    ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+}
+
+#[test]
+fn prop_lane_tree_reductions_match_spec_for_ragged_lengths() {
+    // Every length 1..=33 — full 8-wide bodies, every ragged tail length
+    // (including the canonical n = 13: one full chunk + a 5-tail), and
+    // the 32/33 boundary where the AVX2 4x-unrolled tile turns over —
+    // must produce the spec bytes under whatever backend is active.
+    check("lane-tree reduction spec", 20, |rng, _size| {
+        for n in 1..=33usize {
+            let a: Vec<f32> = rng.gaussians(n);
+            let b: Vec<f32> = rng.gaussians(n);
+            let (got, want) = (micro::dot(&a, &b), spec_dot(&a, &b));
+            ensure(
+                got.to_bits() == want.to_bits(),
+                format!("dot n={n}: {got} vs spec {want}"),
+            )?;
+            let (got, want) = (micro::sum(&a), spec_sum(&a));
+            ensure(
+                got.to_bits() == want.to_bits(),
+                format!("sum n={n}: {got} vs spec {want}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Draw a vector whose entries are mostly Gaussian but sprinkled with the
+/// IEEE edge cases the bitwise-parity contract must survive: NaN, both
+/// infinities, subnormals, and exact zeros (the zero-skip path).
+fn edge_case_vec(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| match rng.usize_below(16) {
+            0 => f32::NAN,
+            1 => f32::INFINITY,
+            2 => f32::NEG_INFINITY,
+            3 => 1.0e-42,  // subnormal
+            4 => -1.0e-42, // subnormal
+            5 => 0.0,
+            6 => -0.0,
+            _ => rng.gaussian(),
+        })
+        .collect()
+}
+
+/// Run every micro primitive once and collect all output bits.  The
+/// parity property is that this entire transcript is identical across
+/// backends.
+fn micro_battery_bits(a: &[f32], b: &[f32], mat: &[f32], rows: usize) -> Vec<u32> {
+    let n = a.len();
+    debug_assert_eq!(mat.len(), rows * n);
+    let mut bits: Vec<u32> = Vec::new();
+    bits.push(micro::dot(a, b).to_bits());
+    bits.push(micro::sum(a).to_bits());
+    bits.push(micro::sq_dev_sum(a, 0.25).to_bits());
+    let mut out = vec![0.0f32; rows];
+    micro::dot_rows(a, mat, &mut out);
+    bits.extend(out.iter().map(|v| v.to_bits()));
+    let mut o = b.to_vec();
+    micro::axpy(&mut o, a, 1.5);
+    bits.extend(o.iter().map(|v| v.to_bits()));
+    let mut o = vec![0.0f32; n];
+    micro::scale(&mut o, a, -0.75);
+    bits.extend(o.iter().map(|v| v.to_bits()));
+    let mut o = b.to_vec();
+    micro::scale_inplace(&mut o, 3.0);
+    bits.extend(o.iter().map(|v| v.to_bits()));
+    let mut o = b.to_vec();
+    micro::mul_inplace(&mut o, a);
+    bits.extend(o.iter().map(|v| v.to_bits()));
+    let mut o = vec![0.0f32; n];
+    micro::norm_scale(&mut o, a, 0.1, 2.0);
+    bits.extend(o.iter().map(|v| v.to_bits()));
+    let mut c = vec![0.0f32; rows];
+    micro::gemm_row(&mut c, a, mat);
+    bits.extend(c.iter().map(|v| v.to_bits()));
+    let mut z = vec![0.0f32; n * n];
+    micro::outer(&mut z, a, b);
+    bits.extend(z.iter().map(|v| v.to_bits()));
+    micro::outer_accum(&mut z, b, a);
+    bits.extend(z.iter().map(|v| v.to_bits()));
+    let mut e = vec![0.0f32; n];
+    micro::exp_sub(&mut e, a, 0.5);
+    bits.extend(e.iter().map(|v| v.to_bits()));
+    let mut g = b.to_vec();
+    micro::gelu_rows(&mut g);
+    bits.extend(g.iter().map(|v| v.to_bits()));
+    bits
+}
+
+#[test]
+fn prop_micro_backends_bitwise_identical_under_edge_cases() {
+    // The tentpole invariant: every primitive, every backend, the same
+    // bytes — including NaN/inf/subnormal inputs and ragged lengths.
+    // (Flipping the backend mid-process is benign precisely *because* of
+    // this property; other tests racing micro calls see identical bytes.)
+    let best = micro::best_available();
+    check("micro scalar/simd bitwise parity", 30, |rng, size| {
+        let n = 1 + size % 40;
+        let rows = 1 + size % 5;
+        let a = edge_case_vec(rng, n);
+        let b = edge_case_vec(rng, n);
+        let mat = edge_case_vec(rng, rows * n);
+        micro::force_backend(micro::Backend::Scalar)?;
+        let scalar_bits = micro_battery_bits(&a, &b, &mat, rows);
+        micro::force_backend(best)?;
+        let simd_bits = micro_battery_bits(&a, &b, &mat, rows);
+        micro::reset_backend();
+        ensure(
+            scalar_bits == simd_bits,
+            format!(
+                "scalar vs {} diverged at bit index {:?} (n={n}, rows={rows})",
+                best.label(),
+                scalar_bits.iter().zip(&simd_bits).position(|(x, y)| x != y),
+            ),
+        )
     });
 }
 
