@@ -29,8 +29,11 @@ use std::time::Instant;
 use polysketchformer::attn::kernel::CausalKernel;
 use polysketchformer::attn::Mechanism;
 use polysketchformer::bench::{banner, out_dir, Mode};
+use polysketchformer::infer::{DecodeSession, GenRequest, LmConfig, NativeLm, SamplePolicy};
+use polysketchformer::mem::quant::{self, QuantMode};
 use polysketchformer::metrics::Record;
 use polysketchformer::obs;
+use polysketchformer::serve::PromptCache;
 use polysketchformer::tensor::{micro, Tensor};
 use polysketchformer::util::rng::Pcg;
 
@@ -198,6 +201,74 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- quantized decode profile: f32 vs int8 weight twins -----------
+    //
+    // Drives the full LM decode loop through a frozen/thawed prompt
+    // prefix so the quantize (int8 twin build + compact-tier freeze) and
+    // dequantize (thaw) phases show up in the breakdown alongside the
+    // per-step cost of the q8 matvec path.
+    let lm_steps = mode.pick(16, 64, 128);
+    let lm_prompt: Vec<u32> = std::iter::once(0u32).chain((0..32u32).map(|i| 1 + (i * 13) % 60)).collect();
+    obs::set_phases(true);
+    for (tier, qm) in [("lm_decode:f32", QuantMode::Off), ("lm_decode:q8", QuantMode::Q8)] {
+        quant::force_mode(qm);
+        obs::phase::reset();
+        let lm_cfg = LmConfig { d_model: 64, layers: 2, heads: 2, ..LmConfig::default() };
+        let mut m = NativeLm::new(lm_cfg, Mechanism::parse("psk4_r16_b32_local").unwrap());
+        m.requantize();
+        let cache = PromptCache::new(32 << 20);
+        let prefilled = DecodeSession::new(
+            &m,
+            0,
+            GenRequest {
+                prompt: lm_prompt.clone(),
+                max_new_tokens: 0,
+                policy: SamplePolicy::Greedy,
+                seed: 0,
+            },
+        );
+        let snap = cache.freeze(&prefilled);
+        let (states, logits) = snap.thaw(&m);
+        let mut s = DecodeSession::from_prefix(
+            1,
+            GenRequest {
+                prompt: lm_prompt.clone(),
+                max_new_tokens: lm_steps,
+                policy: SamplePolicy::Greedy,
+                seed: 0,
+            },
+            states,
+            logits,
+        );
+        let t0 = Instant::now();
+        s.run_to_completion(&m);
+        let decode_secs = t0.elapsed().as_secs_f64();
+        let totals = obs::phase::totals();
+        quant::reset_mode();
+
+        let tok_s = if decode_secs > 0.0 { lm_steps as f64 / decode_secs } else { 0.0 };
+        println!("{tier}: {lm_steps} decode steps in {decode_secs:.4}s ({tok_s:.1} tok/s)");
+        let accounted: u64 = totals.iter().map(|(_, ns, _)| ns).sum();
+        for &(name, nanos, count) in &totals {
+            let share = nanos as f64 / accounted.max(1) as f64;
+            println!("  {name:>14}  {nanos:>12}  {count:>10}  {:>6.1}%", share * 100.0);
+            seen.push((tier, name));
+            records.push(
+                Record::new()
+                    .str("mech", tier)
+                    .str("phase", name)
+                    .str("simd_backend", best.label())
+                    .i64("decode_steps", lm_steps as i64)
+                    .i64("nanos", nanos as i64)
+                    .i64("count", count as i64)
+                    .f64("share", share)
+                    .f64("decode_secs", decode_secs)
+                    .f64("tokens_per_sec", tok_s),
+            );
+        }
+    }
+    obs::set_phases(false);
+
     let mut json = String::from("{\n  \"bench\": \"kernel_profile\",\n");
     let _ = writeln!(json, "  \"mode\": \"{mode:?}\",");
     let _ = writeln!(json, "  \"n\": {n},");
@@ -224,6 +295,10 @@ fn main() -> anyhow::Result<()> {
         ("psk4_r16_b32_local", "lin_step"),
         ("softmax", "quad_attn"),
         ("softmax", "quad_step"),
+        // The storage-tier phases: int8/f16 narrowing on freeze and the
+        // widen-back on thaw, both exercised by the q8 lm_decode pass.
+        ("lm_decode:q8", "quantize"),
+        ("lm_decode:q8", "dequantize"),
     ] {
         anyhow::ensure!(
             seen.contains(&(m, p)),

@@ -21,9 +21,11 @@ use std::sync::Arc;
 
 use polysketchformer::attn::Mechanism;
 use polysketchformer::bench::{banner, out_dir, Mode, Table};
-use polysketchformer::infer::{GenRequest, LmConfig, NativeLm, SamplePolicy};
+use polysketchformer::infer::{DecodeSession, GenRequest, LmConfig, NativeLm, SamplePolicy};
+use polysketchformer::mem::quant::{self, QuantMode};
 use polysketchformer::metrics::Record;
-use polysketchformer::serve::{collect_stream, Gateway, GatewayConfig, RequestStats};
+use polysketchformer::serve::cache::ENTRY_OVERHEAD_BYTES;
+use polysketchformer::serve::{collect_stream, Gateway, GatewayConfig, PromptCache, RequestStats};
 use polysketchformer::shard::{
     collect_shard_stream, ShardConfig, ShardGateway, Supervisor, SupervisorConfig,
 };
@@ -389,6 +391,177 @@ fn main() -> anyhow::Result<()> {
         println!("  advisory: below the 50% floor (PSF_OBS_OVERHEAD_CHECK=1 enforces)");
     }
 
+    // ---- memory sweep: frozen sessions per GB across storage tiers ----
+    //
+    // Freezes a prefilled prompt-prefix under the exact (f32) and compact
+    // (f16) cold tiers and converts the measured per-entry footprint into
+    // cached-sessions-per-GB at 1k/10k-session fleet sizes, plus the TTFT
+    // split (cold prefill vs thaw-from-cache).  Sub-block prompts
+    // (shorter than the mechanism block: tail-only images, Z elided) are
+    // the gated points — the compact tier must hold >= 3x the sessions of
+    // f32 there when PSF_MEM_CHECK=1 (the CI bench smoke sets it);
+    // block-crossing prompts carry the dense Z moments and are reported
+    // ungated (f16 approaches its plain 2x there by construction).
+    let mem_check = std::env::var("PSF_MEM_CHECK").ok().as_deref() == Some("1");
+    let mem_label = "psk4_r16_b32_local";
+    let mem_mech = Mechanism::parse(mem_label).expect("bench mechanism labels must parse");
+    // (tag, prompt tokens after BOS, gated): totals 24 and 31 stay inside
+    // the 32-block; 91 crosses it twice.
+    let mem_points: &[(&str, usize, bool)] =
+        &[("subblock", 23, true), ("subblock", 30, true), ("z+tail", 90, false)];
+    let mut mem_records: Vec<Record> = Vec::new();
+    let mut mem_table = Table::new(
+        "memory sweep (frozen prompt-prefix entries, f32 vs f16 cold tier)",
+        "point · prompt",
+        vec![
+            "f32 B/entry".into(),
+            "f16 B/entry".into(),
+            "ratio".into(),
+            "f16 sess/GB".into(),
+            "GB @ 10k".into(),
+            "cold TTFT ms".into(),
+            "thaw ms".into(),
+        ],
+    );
+    for &(tag, plen, gated) in mem_points {
+        let lm_cfg = LmConfig { d_model: 64, layers: 2, heads: 2, ..LmConfig::default() };
+        let m = NativeLm::new(lm_cfg, mem_mech.clone());
+        let p = prompt(77, plen);
+        let zero_req = || GenRequest {
+            prompt: p.clone(),
+            max_new_tokens: 0,
+            policy: SamplePolicy::Greedy,
+            seed: 0,
+        };
+        // Cold TTFT proxy: the prefill a cache hit erases (best of 3).
+        let cold_secs = (0..3)
+            .map(|_| {
+                let t = std::time::Instant::now();
+                let _ = DecodeSession::new(&m, 0, zero_req());
+                t.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min);
+        let entry_bytes = |qm: QuantMode| -> usize {
+            quant::force_mode(qm);
+            let cache = PromptCache::new(1 << 30);
+            let snap = cache.freeze(&DecodeSession::new(&m, 0, zero_req()));
+            let b = snap.bytes() + p.len() * 4 + ENTRY_OVERHEAD_BYTES;
+            quant::reset_mode();
+            b
+        };
+        let f32_entry = entry_bytes(QuantMode::Off);
+        let f16_entry = entry_bytes(QuantMode::F16);
+        // Thaw latency of the compact tier (what a hit pays instead).
+        quant::force_mode(QuantMode::F16);
+        let cache = PromptCache::new(1 << 30);
+        let snap = cache.freeze(&DecodeSession::new(&m, 0, zero_req()));
+        let thaw_secs = (0..3)
+            .map(|_| {
+                let t = std::time::Instant::now();
+                let (states, logits) = snap.thaw(&m);
+                let _ = DecodeSession::from_prefix(1, zero_req(), states, logits);
+                t.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min);
+        quant::reset_mode();
+
+        let ratio = f32_entry as f64 / f16_entry as f64;
+        let f16_per_gb = (1u64 << 30) as f64 / f16_entry as f64;
+        let gb_at = |sessions: f64, entry: usize| sessions * entry as f64 / (1u64 << 30) as f64;
+        mem_table.row(
+            &format!("{tag} · {} tok", p.len()),
+            vec![
+                format!("{f32_entry}"),
+                format!("{f16_entry}"),
+                format!("{ratio:.2}x"),
+                format!("{f16_per_gb:.0}"),
+                format!("{:.3}", gb_at(10_000.0, f16_entry)),
+                format!("{:.2}", cold_secs * 1e3),
+                format!("{:.2}", thaw_secs * 1e3),
+            ],
+        );
+        mem_records.push(
+            Record::new()
+                .str("mech", mem_label)
+                .str("point", tag)
+                .bool("gated", gated)
+                .i64("prompt_len", p.len() as i64)
+                .i64("f32_entry_bytes", f32_entry as i64)
+                .i64("f16_entry_bytes", f16_entry as i64)
+                .f64("ratio", ratio)
+                .f64("f32_sessions_per_gb", (1u64 << 30) as f64 / f32_entry as f64)
+                .f64("f16_sessions_per_gb", f16_per_gb)
+                .f64("gb_at_1k_f16", gb_at(1_000.0, f16_entry))
+                .f64("gb_at_10k_f16", gb_at(10_000.0, f16_entry))
+                .f64("gb_at_10k_f32", gb_at(10_000.0, f32_entry))
+                .f64("cold_ttft_ms", cold_secs * 1e3)
+                .f64("thaw_ms", thaw_secs * 1e3),
+        );
+        if gated {
+            if mem_check {
+                anyhow::ensure!(
+                    ratio >= 3.0,
+                    "f16 tier holds only {ratio:.2}x the sessions of f32 at {tag} \
+                     prompt {} (< 3x floor)",
+                    p.len()
+                );
+            } else if ratio < 3.0 {
+                println!(
+                    "  advisory: {tag} prompt {} ratio {ratio:.2}x below the 3x floor \
+                     (PSF_MEM_CHECK=1 enforces)",
+                    p.len()
+                );
+            }
+        }
+    }
+    print!("{}", mem_table.render());
+
+    // q8 weights vs f32 on the single-token decode path (where weight
+    // bandwidth dominates): the int8 twins must retain >= 0.9x of f32
+    // decode throughput when PSF_MEM_CHECK=1.
+    let q8_steps = mode.pick(48, 160, 320);
+    let decode_tok_s = |qm: QuantMode| -> f64 {
+        quant::force_mode(qm);
+        let lm_cfg = LmConfig { d_model: 64, layers: 2, heads: 2, ..LmConfig::default() };
+        let mut m = NativeLm::new(lm_cfg, mem_mech.clone());
+        m.requantize();
+        let mut s = DecodeSession::new(
+            &m,
+            0,
+            GenRequest {
+                prompt: prompt(5, 32),
+                max_new_tokens: q8_steps,
+                policy: SamplePolicy::Greedy,
+                seed: 1,
+            },
+        );
+        let t0 = std::time::Instant::now();
+        s.run_to_completion(&m);
+        let wall = t0.elapsed().as_secs_f64();
+        quant::reset_mode();
+        if wall > 0.0 {
+            q8_steps as f64 / wall
+        } else {
+            0.0
+        }
+    };
+    let f32_decode = decode_tok_s(QuantMode::Off);
+    let q8_decode = decode_tok_s(QuantMode::Q8);
+    let q8_retained = if f32_decode > 0.0 { q8_decode / f32_decode } else { 1.0 };
+    println!(
+        "q8 decode: f32 {f32_decode:.1} tok/s -> q8 {q8_decode:.1} tok/s \
+         ({:.0}% retained)",
+        q8_retained * 100.0
+    );
+    if mem_check {
+        anyhow::ensure!(
+            q8_retained >= 0.9,
+            "q8 decode throughput {q8_decode:.1} tok/s < 0.9x f32 {f32_decode:.1} tok/s"
+        );
+    } else if q8_retained < 0.9 {
+        println!("  advisory: below the 0.9x floor (PSF_MEM_CHECK=1 enforces)");
+    }
+
     // JSON artifact, assembled with the same hand-rolled encoder the
     // metrics substrate uses (no serde in this environment).
     let mut json = String::from("{\n  \"bench\": \"serve_load\",\n");
@@ -412,7 +585,18 @@ fn main() -> anyhow::Result<()> {
     let _ = writeln!(
         json,
         "  \"obs_overhead\": {{\"off_tok_s\": {off_tok_s:.3}, \"on_tok_s\": {on_tok_s:.3}, \
-         \"retained\": {retained:.4}}}"
+         \"retained\": {retained:.4}}},"
+    );
+    json.push_str("  \"mem_sweep\": [\n");
+    for (i, r) in mem_records.iter().enumerate() {
+        let _ = write!(json, "    {}", r.to_json());
+        json.push_str(if i + 1 < mem_records.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ],\n");
+    let _ = writeln!(
+        json,
+        "  \"q8_decode\": {{\"f32_tok_s\": {f32_decode:.3}, \"q8_tok_s\": {q8_decode:.3}, \
+         \"retained\": {q8_retained:.4}}}"
     );
     json.push('}');
     json.push('\n');

@@ -193,7 +193,7 @@ impl LinearEngine {
     fn flush(&self, st: &mut LinearState) {
         let h = st.h;
         let hc = h + 1;
-        let LinearState { z, buf_mapped, buf_local, buf_v, phi, .. } = st;
+        let LinearState { z, buf_mapped, buf_local, buf_v, buf_raw, phi, .. } = st;
         let mut vext = vec![0.0f32; hc];
         vext[h] = 1.0;
         for (mrow, vrow) in buf_mapped.iter().zip(buf_v.iter()) {
@@ -204,6 +204,7 @@ impl LinearEngine {
         buf_mapped.clear();
         buf_local.clear();
         buf_v.clear();
+        buf_raw.clear();
     }
 
     fn maybe_flush(&self, st: &mut LinearState) {
@@ -242,6 +243,7 @@ impl LinearEngine {
             st.buf_local.push(lk);
         }
         st.buf_v.push(v.to_vec());
+        st.buf_raw.push(k.to_vec());
         st.tokens += 1;
     }
 
@@ -275,8 +277,18 @@ impl CausalKernel for LinearEngine {
             None => (None, None),
         };
         obs::phase::add_since(Phase::LinMap, t_map);
-        let st = state.map(|s| self.linear_state(s));
-        self.forward_mapped(&mq, &mk, lq.as_ref(), lk.as_ref(), v, st, None, out);
+        let mut st = state.map(|s| self.linear_state(s));
+        self.forward_mapped(&mq, &mk, lq.as_ref(), lk.as_ref(), v, st.as_deref_mut(), None, out);
+        if let Some(st) = st {
+            // Raw tail keys ride along with the captured state (the
+            // blocked pass only sees mapped rows); the compact cold
+            // encoding re-absorbs them through the map on thaw.
+            let n = k.rows();
+            let full_end = (n / self.block) * self.block;
+            for i in full_end..n {
+                st.buf_raw.push(k.row(i).to_vec());
+            }
+        }
     }
 
     fn step(&self, q: &[f32], k: &[f32], v: &[f32], state: &mut KernelState) -> Vec<f32> {

@@ -15,6 +15,7 @@
 //! KV cache.
 
 use crate::attn::kernel::feature::MapScratch;
+use crate::mem::arena::{PagedBuf, StateArena};
 use crate::tensor::{axpy, dot, micro};
 
 /// Attention state of one (layer, head) during autoregressive decoding.
@@ -52,6 +53,7 @@ impl KernelState {
                     + st.buf_mapped.iter().map(Vec::len).sum::<usize>()
                     + st.buf_local.iter().map(Vec::len).sum::<usize>()
                     + st.buf_v.iter().map(Vec::len).sum::<usize>()
+                    + st.buf_raw.iter().map(Vec::len).sum::<usize>()
             }
         }
     }
@@ -148,17 +150,24 @@ impl KvState {
 pub struct LinearState {
     /// Value dim (+1 normalizer column); set on first token.
     pub(crate) h: usize,
-    /// Prefix state Z: f x (h+1), row-major by feature index.
-    pub(crate) z: Vec<f32>,
+    /// Prefix state Z: f x (h+1), row-major by feature index.  Leased
+    /// from the global [`StateArena`] — the dominant per-session
+    /// footprint must come from page-able, free-listed slots.
+    pub(crate) z: PagedBuf,
     /// In-progress block: mapped key rows.
     pub(crate) buf_mapped: Vec<Vec<f32>>,
     /// In-progress block: locally-mapped key rows (only with a local map).
     pub(crate) buf_local: Vec<Vec<f32>>,
     /// In-progress block: value rows (h,).
     pub(crate) buf_v: Vec<Vec<f32>>,
+    /// In-progress block: *raw* key rows.  Never read by decode math
+    /// (mapped rows serve the diagonal) — kept so the compact f16 cold
+    /// encoding can re-absorb the tail through the feature map on thaw.
+    pub(crate) buf_raw: Vec<Vec<f32>>,
     /// Scratch for one φ feature row (f,) — reused every token so the
-    /// per-token hot path does not hit the allocator for it.
-    pub(crate) phi: Vec<f32>,
+    /// per-token hot path does not hit the allocator for it.  Arena-
+    /// leased alongside Z.
+    pub(crate) phi: PagedBuf,
     /// Feature-map scratch (e.g. the half-sketch row recursion), same
     /// rationale: the token × layer × head hot path must not rebuild
     /// per-level temporaries on every call.
@@ -171,12 +180,12 @@ impl LinearState {
         LinearState::default()
     }
 
-    /// Allocate Z/φ on first contact with a value row of width `h`.
+    /// Lease Z/φ on first contact with a value row of width `h`.
     pub(crate) fn ensure_init(&mut self, h: usize, feat_dim: usize) {
         if self.h == 0 {
             self.h = h;
-            self.z = vec![0.0; feat_dim * (h + 1)];
-            self.phi = vec![0.0; feat_dim];
+            self.z = StateArena::global().alloc_zeroed(feat_dim * (h + 1));
+            self.phi = StateArena::global().alloc_zeroed(feat_dim);
         }
     }
 }

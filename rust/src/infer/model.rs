@@ -34,6 +34,8 @@ use std::sync::Arc;
 use crate::attn::kernel::{self, CausalKernel, KernelState};
 use crate::attn::Mechanism;
 use crate::checkpoint::Checkpoint;
+use crate::mem::quant::{self, QuantMatrix};
+use crate::obs::phase;
 use crate::tensor::{micro, layernorm_rows, ln_row, Tensor};
 use crate::util::rng::Pcg;
 
@@ -181,6 +183,27 @@ pub struct LayerState {
     pub heads: Vec<KernelState>,
 }
 
+/// Int8 twins of one transformer block's weights (per-row scales).
+struct QuantLayer {
+    wq: QuantMatrix,
+    wk: QuantMatrix,
+    wv: QuantMatrix,
+    wo: QuantMatrix,
+    ffn_gate: QuantMatrix,
+    ffn_up: QuantMatrix,
+    ffn_down: QuantMatrix,
+}
+
+/// Int8 twins of every [`Params`] tensor, built by
+/// [`NativeLm::requantize`] under `PSF_QUANT=q8`.  The f32 originals
+/// stay resident (training, prefill, and the sharded paths keep using
+/// them); only the single-token decode step reads these.
+struct QuantWeights {
+    embed: QuantMatrix,
+    readout: QuantMatrix,
+    layers: Vec<QuantLayer>,
+}
+
 /// Native autoregressive LM (one per served mechanism).
 pub struct NativeLm {
     pub cfg: LmConfig,
@@ -189,6 +212,8 @@ pub struct NativeLm {
     /// One instantiated kernel (engine + sketches/features) per
     /// (layer, head).
     kernels: Vec<Vec<Arc<dyn CausalKernel>>>,
+    /// Int8 decode weights, `Some` only under `PSF_QUANT=q8`.
+    qweights: Option<QuantWeights>,
 }
 
 impl NativeLm {
@@ -220,7 +245,46 @@ impl NativeLm {
             });
             kernels.push((0..cfg.heads).map(|_| mech.build_kernel(hd, &mut rng)).collect());
         }
-        NativeLm { cfg, mech, params: Params { embed, readout, layers }, kernels }
+        let mut lm =
+            NativeLm { cfg, mech, params: Params { embed, readout, layers }, kernels, qweights: None };
+        // After all RNG consumption: requantize reads no randomness, so
+        // the fixture contract above is unaffected by PSF_QUANT.
+        lm.requantize();
+        lm
+    }
+
+    /// (Re)build the int8 weight twins when `PSF_QUANT=q8`; drops them
+    /// otherwise.  Must be re-run after any bulk weight mutation (the
+    /// optimizer step, checkpoint restore) or decode serves stale
+    /// weights.  Consumes no RNG.
+    pub fn requantize(&mut self) {
+        if !quant::mode().q8_weights() {
+            self.qweights = None;
+            return;
+        }
+        let _t = phase::timer(phase::Phase::Quantize);
+        self.qweights = Some(self.build_qweights());
+    }
+
+    fn build_qweights(&self) -> QuantWeights {
+        QuantWeights {
+            embed: QuantMatrix::from_tensor(&self.params.embed),
+            readout: QuantMatrix::from_tensor(&self.params.readout),
+            layers: self
+                .params
+                .layers
+                .iter()
+                .map(|l| QuantLayer {
+                    wq: QuantMatrix::from_tensor(&l.wq),
+                    wk: QuantMatrix::from_tensor(&l.wk),
+                    wv: QuantMatrix::from_tensor(&l.wv),
+                    wo: QuantMatrix::from_tensor(&l.wo),
+                    ffn_gate: QuantMatrix::from_tensor(&l.ffn_gate),
+                    ffn_up: QuantMatrix::from_tensor(&l.ffn_up),
+                    ffn_down: QuantMatrix::from_tensor(&l.ffn_down),
+                })
+                .collect(),
+        }
     }
 
     pub fn head_dim(&self) -> usize {
@@ -325,6 +389,9 @@ impl NativeLm {
     /// One decode step: fold `token` (at absolute position `pos`) into the
     /// states and return the next-token logits (vocab,).
     pub fn step(&self, token: u32, pos: usize, states: &mut [LayerState]) -> Vec<f32> {
+        if let Some(qw) = &self.qweights {
+            return self.step_q8(qw, token, pos, states);
+        }
         let d = self.cfg.d_model;
         let hd = self.head_dim();
         let mut x = self.params.embed.row(token as usize).to_vec();
@@ -358,6 +425,55 @@ impl NativeLm {
             }
         }
         Tensor::from_vec(&[1, d], ln_row(&x)).matmul(&self.params.readout).into_vec()
+    }
+
+    /// Quantized twin of [`NativeLm::step`]: identical control flow, but
+    /// every per-token matvec (the seven layer matrices, the embedding
+    /// row, the readout) reads the int8 twins through the micro layer's
+    /// fused q8 primitives with f32 accumulation.  A deliberate
+    /// near-copy rather than a parameterization of `step` — that body
+    /// carries the bitwise contract for `PSF_QUANT=off` and must not
+    /// change shape (see the sharded-twins note below).  Prefill and the
+    /// sharded paths stay f32: q8 targets the decode step, where weight
+    /// bandwidth dominates.
+    fn step_q8(&self, qw: &QuantWeights, token: u32, pos: usize, states: &mut [LayerState]) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let hd = self.head_dim();
+        let mut x = vec![0.0f32; d];
+        micro::dequant_row(&mut x, qw.embed.qrow(token as usize), qw.embed.scales[token as usize]);
+        add_sinusoidal(&mut x, pos);
+        for (li, qlayer) in qw.layers.iter().enumerate() {
+            let xn = ln_row(&x);
+            let q = q8_vecmat(&xn, &qlayer.wq);
+            let k = q8_vecmat(&xn, &qlayer.wk);
+            let v = q8_vecmat(&xn, &qlayer.wv);
+            let mut concat = vec![0.0f32; d];
+            for hi in 0..self.cfg.heads {
+                let mut qh = q[hi * hd..(hi + 1) * hd].to_vec();
+                let mut kh = k[hi * hd..(hi + 1) * hd].to_vec();
+                let vh = &v[hi * hd..(hi + 1) * hd];
+                rope_row(&mut qh, pos);
+                rope_row(&mut kh, pos);
+                let oh = self.kernels[li][hi].step(&qh, &kh, vh, &mut states[li].heads[hi]);
+                concat[hi * hd..(hi + 1) * hd].copy_from_slice(&oh);
+            }
+            let attn_out = q8_vecmat(&concat, &qlayer.wo);
+            for (xi, a) in x.iter_mut().zip(&attn_out) {
+                *xi += a;
+            }
+            let xn2 = ln_row(&x);
+            let mut g = q8_vecmat(&xn2, &qlayer.ffn_gate);
+            micro::gelu_rows(&mut g);
+            let u = q8_vecmat(&xn2, &qlayer.ffn_up);
+            for (gi, ui) in g.iter_mut().zip(&u) {
+                *gi *= ui;
+            }
+            let ffn = q8_vecmat(&g, &qlayer.ffn_down);
+            for (xi, a) in x.iter_mut().zip(&ffn) {
+                *xi += a;
+            }
+        }
+        q8_vecmat(&ln_row(&x), &qw.readout)
     }
 
     // ---------------------------------------- head-sharded (TP) twins
@@ -597,6 +713,9 @@ impl NativeLm {
             );
             t.data_mut().copy_from_slice(data);
         }
+        // The int8 twins built by `new` quantized the random init;
+        // rebuild them from the restored weights.
+        lm.requantize();
         Ok(lm)
     }
 
@@ -607,6 +726,16 @@ impl NativeLm {
         let lm = NativeLm::from_checkpoint(&ck)?;
         Ok((lm, ck.step))
     }
+}
+
+/// Row-vector × per-row-quantized matrix with f32 accumulation:
+/// `out[c] = Σ_r a[r] · (q[r·cols+c] as f32 · scales[r])`, weights
+/// staying int8 in memory end to end.
+fn q8_vecmat(a: &[f32], m: &QuantMatrix) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m.rows);
+    let mut out = vec![0.0f32; m.cols];
+    micro::gemm_row_q8(&mut out, a, &m.q, &m.scales);
+    out
 }
 
 /// Apply RoPE to every head segment of every row of a fused (n, H·hd)
@@ -769,6 +898,30 @@ mod tests {
         assert!(lm.prefill_sharded(&[1, 2, 3], None, 0..1, &mut fail).is_err());
         let mut states = lm.new_states();
         assert!(lm.step_sharded(1, 0, &mut states, 0..1, &mut fail).is_err());
+    }
+
+    #[test]
+    fn step_q8_tracks_f32_step_closely() {
+        // Direct call (no PSF_QUANT global): the int8 decode path is an
+        // approximation of step(), so compare in normalized L2, not
+        // bitwise — per-row quantization bounds each weight's relative
+        // error by ~1/254.
+        let lm = tiny(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true });
+        let qw = lm.build_qweights();
+        let tokens: Vec<u32> = (0..9).map(|i| (i * 5) % 64).collect();
+        let mut sf = lm.new_states();
+        let mut sq = lm.new_states();
+        lm.prefill(&tokens, &mut sf);
+        lm.prefill(&tokens, &mut sq);
+        let mut pos = tokens.len();
+        for t in [3u32, 11, 40] {
+            let a = lm.step(t, pos, &mut sf);
+            let b = lm.step_q8(&qw, t, pos, &mut sq);
+            let norm: f32 = a.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let dist: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt();
+            assert!(dist <= 0.15 * norm + 0.05, "pos {pos}: |a-b| {dist} vs |a| {norm}");
+            pos += 1;
+        }
     }
 
     #[test]

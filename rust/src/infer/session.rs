@@ -226,6 +226,17 @@ impl DecodeSession {
         &self.tokens[self.prompt_len..]
     }
 
+    /// Per-layer decode states (read-only; the cache freezer walks these
+    /// without the deep copy a [`DecodeSession::snapshot`] would make).
+    pub fn states(&self) -> &[LayerState] {
+        &self.states
+    }
+
+    /// Next-token logits produced by the last prefill/step.
+    pub fn last_logits(&self) -> &[f32] {
+        &self.last_logits
+    }
+
     /// Decode-state footprint right now, in f32 words.
     pub fn state_memory_floats(&self) -> usize {
         NativeLm::state_memory_floats(&self.states)

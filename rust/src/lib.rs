@@ -20,7 +20,10 @@
 //!     (`obs` — span tracing to Chrome trace-event JSON with
 //!     cross-process trace-id propagation, fixed-bucket latency
 //!     histograms with Prometheus exposition, and per-phase kernel
-//!     profiling; near-zero overhead when off).
+//!     profiling; near-zero overhead when off), and the memory
+//!     subsystem (`mem` — a paged slab arena with generation-tagged
+//!     handles for decode states, plus `PSF_QUANT`-gated f16/int8
+//!     quantized storage for cached states and weights).
 
 pub mod attn;
 pub mod bench;
@@ -31,6 +34,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod infer;
+pub mod mem;
 pub mod metrics;
 pub mod obs;
 pub mod prop;

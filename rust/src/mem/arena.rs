@@ -1,0 +1,412 @@
+//! Slab/paged arena for linear-mechanism decode state.
+//!
+//! Every psk/performer/local decode state has a fixed O(r²·h) footprint
+//! per (mechanism, config), so state buffers come in a handful of exact
+//! sizes.  The arena exploits that: each distinct buffer length is a
+//! *size class*, and a class commits backing memory one page-sized batch
+//! of uniform slots at a time instead of hitting the global allocator
+//! once per session.  Freed slots go on the class free list and are
+//! handed back zeroed, so steady-state admission/eviction churn at 10k+
+//! sessions allocates nothing.
+//!
+//! Three properties the serve layer builds on:
+//!
+//! * **Generation-tagged handles** — every slot carries a generation
+//!   counter bumped on free.  A [`Handle`] captured before eviction can
+//!   never alias the session that later reuses the slot:
+//!   [`StateArena::is_live`] goes false the instant the slot is freed.
+//! * **Page-pressure counters** — live/committed byte counters are
+//!   maintained outside the lock and drive cache admission/eviction
+//!   (`serve::cache`), replacing the old approximate byte ledger.
+//! * **Deterministic contents** — a slot is returned `0.0`-filled
+//!   whether fresh or reused, so allocation history can never leak into
+//!   output bytes (invariant #11 stays intact).
+
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Target page size: a size class commits backing memory in batches of
+/// roughly this many bytes (at least one slot, at most
+/// [`MAX_SLOTS_PER_PAGE`] slots per batch).
+pub const PAGE_BYTES: usize = 64 * 1024;
+
+/// Cap on slots carved from one page batch, so tiny classes (short
+/// ragged-tail payloads) do not over-commit thousands of slots up front.
+const MAX_SLOTS_PER_PAGE: usize = 64;
+
+/// Slot id meaning "no slot": the buffer is empty and arena-less.
+const NO_SLOT: u32 = u32::MAX;
+
+/// Generation-tagged reference to an arena slot.  Stale handles (the
+/// slot was freed, possibly reused) are detected by generation mismatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Handle {
+    pub slot: u32,
+    pub gen: u32,
+}
+
+/// Point-in-time arena gauges, exported on `/healthz` and as Prometheus
+/// gauges.  `bytes_live` counts leased slots; `bytes_committed` counts
+/// leased + free-listed slots (what the process actually holds).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    pub slots_total: usize,
+    pub slots_live: usize,
+    pub bytes_live: usize,
+    pub bytes_committed: usize,
+    pub high_water_bytes: usize,
+    pub gen_bumps: u64,
+    pub pages: usize,
+}
+
+struct SlotMeta {
+    gen: u32,
+    live: bool,
+    words: usize,
+}
+
+struct FreeSlot {
+    id: u32,
+    data: Box<[f32]>,
+}
+
+#[derive(Default)]
+struct Class {
+    free: Vec<FreeSlot>,
+}
+
+#[derive(Default)]
+struct ArenaInner {
+    /// Size class per distinct slot length (in f32 words).
+    classes: HashMap<usize, Class>,
+    /// Slot registry indexed by slot id; ids are never reused, only the
+    /// backing boxes are.
+    slots: Vec<SlotMeta>,
+}
+
+/// The arena.  One process-global instance backs active decode states
+/// ([`StateArena::global`]); each `PromptCache` owns a private instance
+/// for its cold (frozen) entries so cache pressure is its own ledger.
+pub struct StateArena {
+    inner: Mutex<ArenaInner>,
+    bytes_live: AtomicUsize,
+    bytes_committed: AtomicUsize,
+    high_water: AtomicUsize,
+    slots_live: AtomicUsize,
+    slots_total: AtomicUsize,
+    gen_bumps: AtomicU64,
+}
+
+impl StateArena {
+    pub fn new() -> Arc<StateArena> {
+        Arc::new(StateArena {
+            inner: Mutex::new(ArenaInner::default()),
+            bytes_live: AtomicUsize::new(0),
+            bytes_committed: AtomicUsize::new(0),
+            high_water: AtomicUsize::new(0),
+            slots_live: AtomicUsize::new(0),
+            slots_total: AtomicUsize::new(0),
+            gen_bumps: AtomicU64::new(0),
+        })
+    }
+
+    /// The process-global arena backing *active* decode states (Z/φ of
+    /// every live `LinearState`).
+    pub fn global() -> &'static Arc<StateArena> {
+        static GLOBAL: OnceLock<Arc<StateArena>> = OnceLock::new();
+        GLOBAL.get_or_init(StateArena::new)
+    }
+
+    /// Lease a zero-filled slot of exactly `words` f32s.  `words == 0`
+    /// returns an empty, arena-less buffer.
+    pub fn alloc_zeroed(self: &Arc<Self>, words: usize) -> PagedBuf {
+        if words == 0 {
+            return PagedBuf::default();
+        }
+        let (id, gen, mut data) = {
+            let mut inner = self.inner.lock().expect("arena lock");
+            let popped = inner.classes.entry(words).or_default().free.pop();
+            let (id, data) = match popped {
+                Some(fs) => (fs.id, fs.data),
+                None => {
+                    // Commit a fresh page batch for this class: uniform
+                    // slots, all but one parked on the free list.
+                    let batch = (PAGE_BYTES / (words * 4)).clamp(1, MAX_SLOTS_PER_PAGE);
+                    let first = inner.slots.len() as u32;
+                    for i in 0..batch {
+                        inner.slots.push(SlotMeta { gen: 0, live: false, words });
+                        if i > 0 {
+                            let boxed = vec![0.0f32; words].into_boxed_slice();
+                            inner
+                                .classes
+                                .get_mut(&words)
+                                .expect("class just created")
+                                .free
+                                .push(FreeSlot { id: first + i as u32, data: boxed });
+                        }
+                    }
+                    self.slots_total.fetch_add(batch, Ordering::Relaxed);
+                    self.bytes_committed.fetch_add(batch * words * 4, Ordering::Relaxed);
+                    (first, vec![0.0f32; words].into_boxed_slice())
+                }
+            };
+            let meta = &mut inner.slots[id as usize];
+            debug_assert!(!meta.live, "free-listed slot marked live");
+            meta.live = true;
+            (id, meta.gen, data)
+        };
+        // Reused slots hold the previous lease's bytes; the zero-fill is
+        // the determinism contract (fresh boxes are already zero).
+        data.fill(0.0);
+        self.slots_live.fetch_add(1, Ordering::Relaxed);
+        let live = self.bytes_live.fetch_add(words * 4, Ordering::Relaxed) + words * 4;
+        self.high_water.fetch_max(live, Ordering::Relaxed);
+        PagedBuf { data, slot: id, gen, arena: Some(Arc::clone(self)) }
+    }
+
+    /// Lease a slot holding a copy of `src`.
+    pub fn alloc_copy(self: &Arc<Self>, src: &[f32]) -> PagedBuf {
+        let mut buf = self.alloc_zeroed(src.len());
+        buf.copy_from_slice(src);
+        buf
+    }
+
+    /// Is the slot behind `h` still the same lease the handle was taken
+    /// from?  False the moment the buffer is dropped (generation bump),
+    /// and forever after — reuse can never resurrect a stale handle.
+    pub fn is_live(&self, h: Handle) -> bool {
+        let inner = self.inner.lock().expect("arena lock");
+        inner
+            .slots
+            .get(h.slot as usize)
+            .map(|m| m.live && m.gen == h.gen)
+            .unwrap_or(false)
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        let committed = self.bytes_committed.load(Ordering::Relaxed);
+        ArenaStats {
+            slots_total: self.slots_total.load(Ordering::Relaxed),
+            slots_live: self.slots_live.load(Ordering::Relaxed),
+            bytes_live: self.bytes_live.load(Ordering::Relaxed),
+            bytes_committed: committed,
+            high_water_bytes: self.high_water.load(Ordering::Relaxed),
+            gen_bumps: self.gen_bumps.load(Ordering::Relaxed),
+            pages: committed.div_ceil(PAGE_BYTES),
+        }
+    }
+
+    /// Release free-listed slots until committed bytes fall to `target`
+    /// (or every free slot is gone — leased slots are never touched).
+    /// Retired slot ids stay in the registry so stale handles keep
+    /// resolving to "not live".
+    pub fn trim(&self, target_bytes: usize) {
+        let mut inner = self.inner.lock().expect("arena lock");
+        if self.bytes_committed.load(Ordering::Relaxed) <= target_bytes {
+            return;
+        }
+        let sizes: Vec<usize> = inner.classes.keys().copied().collect();
+        'outer: for words in sizes {
+            loop {
+                if self.bytes_committed.load(Ordering::Relaxed) <= target_bytes {
+                    break 'outer;
+                }
+                let Some(fs) = inner.classes.get_mut(&words).and_then(|c| c.free.pop()) else {
+                    break;
+                };
+                let meta = &mut inner.slots[fs.id as usize];
+                debug_assert!(!meta.live);
+                meta.gen = meta.gen.wrapping_add(1);
+                self.bytes_committed.fetch_sub(words * 4, Ordering::Relaxed);
+                self.slots_total.fetch_sub(1, Ordering::Relaxed);
+                drop(fs.data);
+            }
+        }
+    }
+
+    fn release(&self, slot: u32, data: Box<[f32]>) {
+        let words = data.len();
+        let mut inner = self.inner.lock().expect("arena lock");
+        let meta = &mut inner.slots[slot as usize];
+        debug_assert!(meta.live, "double free of arena slot");
+        debug_assert_eq!(meta.words, words);
+        meta.live = false;
+        meta.gen = meta.gen.wrapping_add(1);
+        inner.classes.entry(words).or_default().free.push(FreeSlot { id: slot, data });
+        drop(inner);
+        self.gen_bumps.fetch_add(1, Ordering::Relaxed);
+        self.slots_live.fetch_sub(1, Ordering::Relaxed);
+        self.bytes_live.fetch_sub(words * 4, Ordering::Relaxed);
+    }
+}
+
+/// An arena-leased f32 buffer.  Derefs to `[f32]`, so callers use it
+/// exactly like the `Vec<f32>` it replaces; the backing slot returns to
+/// the arena free list on drop (with a generation bump).  `Clone` takes
+/// a fresh lease and copies — deep-copy semantics, as the prompt cache
+/// requires.
+pub struct PagedBuf {
+    data: Box<[f32]>,
+    slot: u32,
+    gen: u32,
+    arena: Option<Arc<StateArena>>,
+}
+
+impl PagedBuf {
+    /// Generation-tagged handle to the backing slot (sentinel slot id
+    /// for empty buffers).
+    pub fn handle(&self) -> Handle {
+        Handle { slot: self.slot, gen: self.gen }
+    }
+
+    pub fn arena(&self) -> Option<&Arc<StateArena>> {
+        self.arena.as_ref()
+    }
+}
+
+impl Default for PagedBuf {
+    fn default() -> PagedBuf {
+        PagedBuf { data: Box::default(), slot: NO_SLOT, gen: 0, arena: None }
+    }
+}
+
+impl Deref for PagedBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl DerefMut for PagedBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+impl Clone for PagedBuf {
+    fn clone(&self) -> PagedBuf {
+        if self.data.is_empty() {
+            return PagedBuf::default();
+        }
+        self.arena.as_ref().unwrap_or_else(|| StateArena::global()).alloc_copy(&self.data)
+    }
+}
+
+impl Drop for PagedBuf {
+    fn drop(&mut self) {
+        if let Some(arena) = self.arena.take() {
+            if self.slot != NO_SLOT {
+                arena.release(self.slot, std::mem::take(&mut self.data));
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for PagedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedBuf")
+            .field("len", &self.data.len())
+            .field("slot", &self.slot)
+            .field("gen", &self.gen)
+            .finish()
+    }
+}
+
+impl PartialEq for PagedBuf {
+    fn eq(&self, other: &PagedBuf) -> bool {
+        self.data == other.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_zeroed_and_deref_works() {
+        let arena = StateArena::new();
+        let mut a = arena.alloc_zeroed(17);
+        assert_eq!(a.len(), 17);
+        assert!(a.iter().all(|&x| x.to_bits() == 0));
+        a[3] = 2.5;
+        assert_eq!(a[3], 2.5);
+        let stats = arena.stats();
+        assert_eq!(stats.slots_live, 1);
+        assert_eq!(stats.bytes_live, 17 * 4);
+        assert!(stats.bytes_committed >= stats.bytes_live);
+    }
+
+    #[test]
+    fn page_batches_commit_uniform_slots() {
+        let arena = StateArena::new();
+        // 1024-word slots: 64KiB page / 4KiB slot = 16 slots per batch.
+        let a = arena.alloc_zeroed(1024);
+        let stats = arena.stats();
+        assert_eq!(stats.slots_total, 16);
+        assert_eq!(stats.bytes_committed, 16 * 1024 * 4);
+        assert_eq!(stats.pages, 1);
+        // A second lease comes off the free list: no new commitment.
+        let b = arena.alloc_zeroed(1024);
+        assert_eq!(arena.stats().bytes_committed, 16 * 1024 * 4);
+        assert_eq!(arena.stats().slots_live, 2);
+        drop((a, b));
+        assert_eq!(arena.stats().slots_live, 0);
+        assert_eq!(arena.stats().bytes_live, 0);
+    }
+
+    #[test]
+    fn reused_slot_is_rezeroed_and_generation_bumps() {
+        let arena = StateArena::new();
+        let mut a = arena.alloc_zeroed(8);
+        a.fill(7.0);
+        let h = a.handle();
+        assert!(arena.is_live(h));
+        drop(a);
+        assert!(!arena.is_live(h), "freed slot must kill the handle");
+        let b = arena.alloc_zeroed(8);
+        assert!(b.iter().all(|&x| x.to_bits() == 0), "reused slot not rezeroed");
+        if b.handle().slot == h.slot {
+            assert_ne!(b.handle().gen, h.gen, "reuse must change the generation");
+        }
+        assert!(!arena.is_live(h), "stale handle must stay dead after reuse");
+        assert!(arena.is_live(b.handle()));
+        assert_eq!(arena.stats().gen_bumps, 1);
+    }
+
+    #[test]
+    fn clone_is_a_deep_copy_on_a_fresh_slot() {
+        let arena = StateArena::new();
+        let mut a = arena.alloc_copy(&[1.0, 2.0, 3.0]);
+        let b = a.clone();
+        a[0] = 9.0;
+        assert_eq!(&b[..], &[1.0, 2.0, 3.0]);
+        assert_ne!(a.handle(), b.handle());
+    }
+
+    #[test]
+    fn trim_releases_only_free_slots() {
+        let arena = StateArena::new();
+        let a = arena.alloc_zeroed(1024); // commits a 16-slot batch
+        let committed = arena.stats().bytes_committed;
+        arena.trim(0);
+        // Only the 15 free slots can go; the leased one stays.
+        assert_eq!(arena.stats().bytes_committed, 1024 * 4);
+        assert!(arena.stats().bytes_committed < committed);
+        drop(a);
+        arena.trim(0);
+        assert_eq!(arena.stats().bytes_committed, 0);
+        assert_eq!(arena.stats().slots_total, 0);
+    }
+
+    #[test]
+    fn empty_alloc_is_arena_less() {
+        let arena = StateArena::new();
+        let a = arena.alloc_zeroed(0);
+        assert!(a.is_empty());
+        assert_eq!(arena.stats().slots_total, 0);
+        let b = PagedBuf::default();
+        assert_eq!(a.handle(), b.handle());
+    }
+}

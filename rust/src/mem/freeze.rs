@@ -1,0 +1,431 @@
+//! Freeze/thaw: the cold form a kernel decode state takes while it sits
+//! in the prompt-prefix cache, stored in arena slots.
+//!
+//! Freezing happens on the evict-to-cache boundary, thawing on
+//! promote-to-active; active decode states are always full f32, so the
+//! hot-path math never sees narrowed values.  Two tiers:
+//!
+//! * **Exact** (`PSF_QUANT=off`) — a bit-for-bit f32 image of the
+//!   state.  Thawing reconstructs the state byte-identically, so serve
+//!   output with caching on equals serve output with caching off.
+//! * **f16** (`PSF_QUANT=f16|q8`) — the *compact* cold encoding: the
+//!   prefix moments Z in f16, plus the in-progress block's **raw** key
+//!   and value rows in f16.  Mapped/local rows and φ scratch are not
+//!   stored — thawing replays the tail rows through
+//!   [`CausalKernel::absorb`], which regenerates them through the same
+//!   deterministic feature-map code the live path uses.  For sub-block
+//!   prompts (Z still all-zero, elided) this stores 2 rows of `h` halves
+//!   per token versus 4 rows of f32 — a >3x cut; Z-dominated states
+//!   approach the plain f16 2x.
+//!
+//! Both tiers elide an all-`+0.0` Z (`has_z = false`): bit-exact either
+//! way, and it is what makes short-prefix entries cheap.
+
+use std::sync::Arc;
+
+use crate::attn::kernel::{CausalKernel, KernelState, KvState, LinearState};
+use crate::mem::arena::{Handle, PagedBuf, StateArena};
+use crate::mem::quant::{self, QuantMode};
+use crate::obs::{self, Phase};
+
+/// One (layer, head) state in cold form.  `bytes` come from the arena
+/// slot backing `data`, so the cache ledger is exact by construction.
+/// Cloning deep-copies through the backing arena.
+#[derive(Clone)]
+pub struct FrozenState {
+    repr: Repr,
+}
+
+#[derive(Clone)]
+enum Repr {
+    /// Exact f32 image of a KV cache: k rows then v rows.
+    KvExact { kd: usize, vd: usize, len: usize, data: PagedBuf },
+    /// f16 image of a KV cache (packed halves): k rows then v rows.
+    KvF16 { kd: usize, vd: usize, len: usize, data: PagedBuf },
+    /// Exact f32 image of a linear state: Z (when `has_z`), then per
+    /// buffered tail row: mapped, local (when `ld > 0`), v, raw.
+    LinExact {
+        h: usize,
+        feat: usize,
+        md: usize,
+        ld: usize,
+        kd: usize,
+        tokens: usize,
+        tail: usize,
+        has_z: bool,
+        data: PagedBuf,
+    },
+    /// Compact f16 image of a linear state (packed halves): Z (when
+    /// `has_z`), then per buffered tail row: raw key, then v.  Mapped
+    /// rows are regenerated via `absorb` on thaw.
+    LinF16 {
+        h: usize,
+        feat: usize,
+        kd: usize,
+        tokens: usize,
+        tail: usize,
+        has_z: bool,
+        data: PagedBuf,
+    },
+}
+
+/// Is every word an exact `+0.0`?  (`-0.0` has a different bit pattern
+/// and must be preserved, so the test is on bits, not value.)
+fn all_zero_bits(xs: &[f32]) -> bool {
+    xs.iter().all(|x| x.to_bits() == 0)
+}
+
+fn push_f16(halves: &mut Vec<u16>, xs: &[f32]) {
+    for &x in xs {
+        halves.push(quant::f16_encode(x));
+    }
+}
+
+/// Cursor over packed f16 halves.
+struct HalfReader<'a> {
+    words: &'a [f32],
+    idx: usize,
+}
+
+impl<'a> HalfReader<'a> {
+    fn new(words: &'a [f32]) -> HalfReader<'a> {
+        HalfReader { words, idx: 0 }
+    }
+
+    fn read_into(&mut self, out: &mut [f32]) {
+        for o in out.iter_mut() {
+            *o = quant::f16_decode(quant::unpack_half(self.words, self.idx));
+            self.idx += 1;
+        }
+    }
+
+    fn read_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n];
+        self.read_into(&mut out);
+        out
+    }
+}
+
+impl FrozenState {
+    /// Freeze one state into `arena` under `mode` (q8 uses the f16 cold
+    /// tier; weight quantization is a separate, model-level concern).
+    pub fn freeze(state: &KernelState, mode: QuantMode, arena: &Arc<StateArena>) -> FrozenState {
+        let _t = obs::phase::timer(Phase::Quantize);
+        let repr = match state {
+            KernelState::Kv(st) => {
+                if mode.f16_cold_tier() {
+                    let mut halves = Vec::with_capacity(st.k.len() + st.v.len());
+                    push_f16(&mut halves, &st.k);
+                    push_f16(&mut halves, &st.v);
+                    let mut data = arena.alloc_zeroed(quant::packed_words(halves.len()));
+                    quant::pack_halves(&halves, &mut data);
+                    Repr::KvF16 { kd: st.kd, vd: st.vd, len: st.len, data }
+                } else {
+                    let mut data = arena.alloc_zeroed(st.k.len() + st.v.len());
+                    data[..st.k.len()].copy_from_slice(&st.k);
+                    data[st.k.len()..].copy_from_slice(&st.v);
+                    Repr::KvExact { kd: st.kd, vd: st.vd, len: st.len, data }
+                }
+            }
+            KernelState::Linear(st) => {
+                let tail = st.buf_v.len();
+                let md = st.buf_mapped.first().map_or(0, Vec::len);
+                let ld = st.buf_local.first().map_or(0, Vec::len);
+                let kd = st.buf_raw.first().map_or(0, Vec::len);
+                debug_assert_eq!(st.buf_mapped.len(), tail);
+                debug_assert_eq!(st.buf_raw.len(), tail, "raw tail rows out of sync");
+                let feat = if st.h == 0 { 0 } else { st.z.len() / (st.h + 1) };
+                let has_z = !all_zero_bits(&st.z);
+                if mode.f16_cold_tier() {
+                    let mut halves = Vec::new();
+                    if has_z {
+                        push_f16(&mut halves, &st.z);
+                    }
+                    for t in 0..tail {
+                        push_f16(&mut halves, &st.buf_raw[t]);
+                        push_f16(&mut halves, &st.buf_v[t]);
+                    }
+                    let mut data = arena.alloc_zeroed(quant::packed_words(halves.len()));
+                    quant::pack_halves(&halves, &mut data);
+                    Repr::LinF16 { h: st.h, feat, kd, tokens: st.tokens, tail, has_z, data }
+                } else {
+                    let z_words = if has_z { st.z.len() } else { 0 };
+                    let words = z_words + tail * (md + ld + st.h + kd);
+                    let mut data = arena.alloc_zeroed(words);
+                    let mut at = 0usize;
+                    let mut put = |src: &[f32], data: &mut PagedBuf| {
+                        data[at..at + src.len()].copy_from_slice(src);
+                        at += src.len();
+                    };
+                    if has_z {
+                        put(&st.z, &mut data);
+                    }
+                    for t in 0..tail {
+                        put(&st.buf_mapped[t], &mut data);
+                        if ld > 0 {
+                            put(&st.buf_local[t], &mut data);
+                        }
+                        put(&st.buf_v[t], &mut data);
+                        put(&st.buf_raw[t], &mut data);
+                    }
+                    debug_assert_eq!(at, words);
+                    Repr::LinExact {
+                        h: st.h,
+                        feat,
+                        md,
+                        ld,
+                        kd,
+                        tokens: st.tokens,
+                        tail,
+                        has_z,
+                        data,
+                    }
+                }
+            }
+        };
+        FrozenState { repr }
+    }
+
+    /// Rebuild an active (f32) state.  Exact images reconstruct
+    /// byte-identically; f16 images decode Z and replay the tail rows
+    /// through `kernel.absorb`, regenerating mapped rows with the same
+    /// deterministic feature-map code the live path uses.
+    pub fn thaw(&self, kernel: &Arc<dyn CausalKernel>) -> KernelState {
+        let _t = obs::phase::timer(Phase::Dequantize);
+        match &self.repr {
+            Repr::KvExact { kd, vd, len, data } => {
+                let ksz = len * kd;
+                KernelState::Kv(KvState {
+                    k: data[..ksz].to_vec(),
+                    v: data[ksz..].to_vec(),
+                    kd: *kd,
+                    vd: *vd,
+                    len: *len,
+                })
+            }
+            Repr::KvF16 { kd, vd, len, data } => {
+                let mut r = HalfReader::new(data);
+                let k = r.read_vec(len * kd);
+                let v = r.read_vec(len * vd);
+                KernelState::Kv(KvState { k, v, kd: *kd, vd: *vd, len: *len })
+            }
+            Repr::LinExact { h, feat, md, ld, kd, tokens, tail, has_z, data } => {
+                let mut st = LinearState::new();
+                if *h > 0 {
+                    st.ensure_init(*h, *feat);
+                }
+                let mut at = 0usize;
+                let mut take = |n: usize, at: &mut usize| {
+                    let s = data[*at..*at + n].to_vec();
+                    *at += n;
+                    s
+                };
+                if *has_z {
+                    st.z.copy_from_slice(&data[..st.z.len()]);
+                    at = st.z.len();
+                }
+                for _ in 0..*tail {
+                    st.buf_mapped.push(take(*md, &mut at));
+                    if *ld > 0 {
+                        st.buf_local.push(take(*ld, &mut at));
+                    }
+                    st.buf_v.push(take(*h, &mut at));
+                    st.buf_raw.push(take(*kd, &mut at));
+                }
+                st.tokens = *tokens;
+                KernelState::Linear(st)
+            }
+            Repr::LinF16 { h, feat, kd, tokens, tail, has_z, data } => {
+                let mut state = kernel.new_state();
+                {
+                    let KernelState::Linear(st) = &mut state else {
+                        unreachable!("f16 linear image thawed by a non-linear kernel")
+                    };
+                    if *h > 0 {
+                        st.ensure_init(*h, *feat);
+                    }
+                    st.tokens = tokens - tail;
+                }
+                let mut r = HalfReader::new(data);
+                if *has_z {
+                    let KernelState::Linear(st) = &mut state else { unreachable!() };
+                    r.read_into(&mut st.z);
+                }
+                for _ in 0..*tail {
+                    let raw = r.read_vec(*kd);
+                    let vrow = r.read_vec(*h);
+                    kernel.absorb(&raw, &vrow, &mut state);
+                }
+                state
+            }
+        }
+    }
+
+    /// Bytes this image holds in its arena slot.
+    pub fn arena_bytes(&self) -> usize {
+        self.data().len() * 4
+    }
+
+    /// Generation-tagged handle to the backing slot.
+    pub fn handle(&self) -> Handle {
+        self.data().handle()
+    }
+
+    pub fn is_f16(&self) -> bool {
+        matches!(self.repr, Repr::KvF16 { .. } | Repr::LinF16 { .. })
+    }
+
+    fn data(&self) -> &PagedBuf {
+        match &self.repr {
+            Repr::KvExact { data, .. }
+            | Repr::KvF16 { data, .. }
+            | Repr::LinExact { data, .. }
+            | Repr::LinF16 { data, .. } => data,
+        }
+    }
+}
+
+/// A frozen f32 row (the cached last-logits vector): exact under `off`,
+/// packed f16 otherwise.
+#[derive(Clone)]
+pub struct FrozenRow {
+    n: usize,
+    f16: bool,
+    data: PagedBuf,
+}
+
+impl FrozenRow {
+    pub fn freeze(row: &[f32], mode: QuantMode, arena: &Arc<StateArena>) -> FrozenRow {
+        let _t = obs::phase::timer(Phase::Quantize);
+        if mode.f16_cold_tier() {
+            let mut halves = Vec::with_capacity(row.len());
+            push_f16(&mut halves, row);
+            let mut data = arena.alloc_zeroed(quant::packed_words(halves.len()));
+            quant::pack_halves(&halves, &mut data);
+            FrozenRow { n: row.len(), f16: true, data }
+        } else {
+            FrozenRow { n: row.len(), f16: false, data: arena.alloc_copy(row) }
+        }
+    }
+
+    pub fn thaw(&self) -> Vec<f32> {
+        let _t = obs::phase::timer(Phase::Dequantize);
+        if self.f16 {
+            HalfReader::new(&self.data).read_vec(self.n)
+        } else {
+            self.data.to_vec()
+        }
+    }
+
+    pub fn arena_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::Mechanism;
+    use crate::util::rng::Pcg;
+
+    fn mechs() -> Vec<Mechanism> {
+        vec![
+            Mechanism::Softmax,
+            Mechanism::Poly { p: 4 },
+            Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
+            Mechanism::Performer { m: 16, block: 8 },
+        ]
+    }
+
+    /// Exact freeze → thaw must continue bit-identically to the
+    /// original state, for both engines, at a ragged tail length.
+    #[test]
+    fn exact_roundtrip_continues_bitwise() {
+        let arena = StateArena::new();
+        let h = 8;
+        for mech in mechs() {
+            let kernel = mech.build_kernel(h, &mut Pcg::seeded(3));
+            let mut rng = Pcg::seeded(9);
+            let mut st = kernel.new_state();
+            for _ in 0..13 {
+                let (q, k, v) = (rng.gaussians(h), rng.gaussians(h), rng.gaussians(h));
+                kernel.step(&q, &k, &v, &mut st);
+            }
+            let frozen = FrozenState::freeze(&st, QuantMode::Off, &arena);
+            assert!(!frozen.is_f16());
+            let mut thawed = frozen.thaw(&kernel);
+            assert_eq!(thawed.tokens_seen(), st.tokens_seen(), "{}", mech.label());
+            assert_eq!(thawed.memory_floats(), st.memory_floats(), "{}", mech.label());
+            let (q, k, v) = (rng.gaussians(h), rng.gaussians(h), rng.gaussians(h));
+            let a = kernel.step(&q, &k, &v, &mut st);
+            let b = kernel.step(&q, &k, &v, &mut thawed);
+            assert_eq!(a, b, "{}: exact thaw diverged", mech.label());
+        }
+    }
+
+    /// f16 freeze → thaw is deterministic (same image thaws to the same
+    /// continuation) and stays close to the f32 state's continuation.
+    #[test]
+    fn f16_roundtrip_is_deterministic_and_close() {
+        let arena = StateArena::new();
+        let h = 8;
+        for mech in mechs() {
+            let kernel = mech.build_kernel(h, &mut Pcg::seeded(3));
+            let mut rng = Pcg::seeded(10);
+            let mut st = kernel.new_state();
+            for _ in 0..13 {
+                let (q, k, v) = (rng.gaussians(h), rng.gaussians(h), rng.gaussians(h));
+                kernel.step(&q, &k, &v, &mut st);
+            }
+            let frozen = FrozenState::freeze(&st, QuantMode::F16, &arena);
+            assert!(frozen.is_f16());
+            let mut t1 = frozen.thaw(&kernel);
+            let mut t2 = frozen.thaw(&kernel);
+            assert_eq!(t1.tokens_seen(), 13, "{}", mech.label());
+            let (q, k, v) = (rng.gaussians(h), rng.gaussians(h), rng.gaussians(h));
+            let a = kernel.step(&q, &k, &v, &mut t1);
+            let b = kernel.step(&q, &k, &v, &mut t2);
+            assert_eq!(a, b, "{}: f16 thaw not deterministic", mech.label());
+            let exact = kernel.step(&q, &k, &v, &mut st);
+            for (x, y) in a.iter().zip(&exact) {
+                assert!(
+                    (x - y).abs() <= 2e-2 * (1.0 + y.abs()),
+                    "{}: f16 drift {x} vs {y}",
+                    mech.label()
+                );
+            }
+        }
+    }
+
+    /// The compact f16 linear image beats exact f32 by >3x for
+    /// sub-block prefixes (Z elided, tail stored as raw+v halves).
+    #[test]
+    fn f16_linear_image_is_compact_for_subblock_prefixes() {
+        let arena = StateArena::new();
+        let h = 8;
+        let mech = Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true };
+        let kernel = mech.build_kernel(h, &mut Pcg::seeded(3));
+        let mut rng = Pcg::seeded(11);
+        let mut st = kernel.new_state();
+        for _ in 0..7 {
+            let (q, k, v) = (rng.gaussians(h), rng.gaussians(h), rng.gaussians(h));
+            kernel.step(&q, &k, &v, &mut st);
+        }
+        let exact = FrozenState::freeze(&st, QuantMode::Off, &arena);
+        let f16 = FrozenState::freeze(&st, QuantMode::F16, &arena);
+        let ratio = exact.arena_bytes() as f64 / f16.arena_bytes() as f64;
+        assert!(ratio > 3.0, "compact tier ratio {ratio:.2} <= 3x");
+    }
+
+    #[test]
+    fn frozen_row_roundtrips() {
+        let arena = StateArena::new();
+        let row = vec![0.5f32, -1.25, 3.0, 0.0];
+        let exact = FrozenRow::freeze(&row, QuantMode::Off, &arena);
+        assert_eq!(exact.thaw(), row);
+        let f16 = FrozenRow::freeze(&row, QuantMode::F16, &arena);
+        // These values are all exactly representable in f16.
+        assert_eq!(f16.thaw(), row);
+        assert!(f16.arena_bytes() < exact.arena_bytes());
+    }
+}

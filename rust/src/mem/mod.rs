@@ -1,0 +1,27 @@
+//! Memory subsystem: the paged state arena and quantized cold storage.
+//!
+//! Serving "millions of users" rests on the linear mechanisms' O(r²·h)
+//! constant-size decode state; this module is about how many of those
+//! states a box can actually hold.  Three layers:
+//!
+//! * [`arena`] — slab/paged allocation for state buffers: uniform-size
+//!   slots with free lists, generation-tagged handles, and
+//!   page-pressure counters that drive cache admission/eviction.
+//! * [`quant`] — the `PSF_QUANT=off|f16|q8` gate, the f16
+//!   round-to-nearest-even conversion spec, and per-row int8 weight
+//!   matrices (f32 accumulation; see `tensor::micro`'s q8 primitives).
+//! * [`freeze`] — the cold form cached prompt-prefix states take:
+//!   exact f32 under `off` (byte-identical serve output), compact f16
+//!   under `f16`/`q8`.
+//!
+//! `PSF_QUANT=off` (the default) is bitwise-identical to the
+//! pre-quantization tree; that contract is what CI's fixture rerun
+//! pins.
+
+pub mod arena;
+pub mod freeze;
+pub mod quant;
+
+pub use arena::{ArenaStats, Handle, PagedBuf, StateArena};
+pub use freeze::{FrozenRow, FrozenState};
+pub use quant::{QuantMatrix, QuantMode};

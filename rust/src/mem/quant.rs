@@ -1,0 +1,351 @@
+//! Quantized storage: the `PSF_QUANT` mode gate, the IEEE 754 binary16
+//! (f16) round-to-nearest-even conversion spec, and per-row-scaled int8
+//! weight matrices.
+//!
+//! The scalar routines here are the *spec*: any vectorized path (the
+//! micro q8 primitives, a future f16 SIMD encoder) must match them
+//! bit-for-bit.  Three modes, process-global like the micro backend:
+//!
+//! * `off` — everything stays f32; byte-identical to the pre-quant tree
+//!   (the default, and the mode all golden fixtures are blessed under);
+//! * `f16` — *cold* prompt-prefix states narrow to f16 on the
+//!   evict-to-cache boundary and widen back on promote-to-active;
+//!   active decode math is untouched f32;
+//! * `q8`  — additionally stores weight matrices as per-row int8 with an
+//!   f32 scale per row; decode matvecs accumulate in f32.  Implies the
+//!   f16 cold tier.
+//!
+//! Quantization error contract (tested in `tests/properties.rs`): f16
+//! round-trip is exact nearest-even per IEEE 754; int8 per-row error is
+//! at most `scale / 2` per element with `scale = max|row| / 127`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::tensor::Tensor;
+
+/// Storage-narrowing mode, selected once per process via `PSF_QUANT`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// All storage f32 — bitwise identical to the pre-quant code.
+    Off,
+    /// Cold cached states in f16; active states and weights f32.
+    F16,
+    /// f16 cold tier + per-row int8 weights with f32 accumulation.
+    Q8,
+}
+
+impl QuantMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            QuantMode::Off => "off",
+            QuantMode::F16 => "f16",
+            QuantMode::Q8 => "q8",
+        }
+    }
+
+    /// Does this mode narrow cached (cold) states to f16?
+    pub fn f16_cold_tier(self) -> bool {
+        self != QuantMode::Off
+    }
+
+    /// Does this mode run decode matvecs over int8 weights?
+    pub fn q8_weights(self) -> bool {
+        self == QuantMode::Q8
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            QuantMode::Off => 1,
+            QuantMode::F16 => 2,
+            QuantMode::Q8 => 3,
+        }
+    }
+
+    fn from_code(code: u8) -> Option<QuantMode> {
+        match code {
+            1 => Some(QuantMode::Off),
+            2 => Some(QuantMode::F16),
+            3 => Some(QuantMode::Q8),
+            _ => None,
+        }
+    }
+}
+
+const UNINIT: u8 = 0;
+
+/// Process-wide active mode; resolved from `PSF_QUANT` on first use,
+/// overridable for tests/benches via [`force_mode`] (mirrors
+/// `micro::force_backend`).
+static ACTIVE: AtomicU8 = AtomicU8::new(UNINIT);
+
+fn detect_from_env() -> QuantMode {
+    match std::env::var("PSF_QUANT").ok().as_deref() {
+        Some("f16") => QuantMode::F16,
+        Some("q8") => QuantMode::Q8,
+        // "off", unset, or unrecognized: the bitwise-identical default.
+        _ => QuantMode::Off,
+    }
+}
+
+/// The active quantization mode (reads `PSF_QUANT` once).
+pub fn mode() -> QuantMode {
+    match QuantMode::from_code(ACTIVE.load(Ordering::Relaxed)) {
+        Some(m) => m,
+        None => {
+            let m = detect_from_env();
+            ACTIVE.store(m.code(), Ordering::Relaxed);
+            m
+        }
+    }
+}
+
+/// Pin the mode, bypassing `PSF_QUANT` (tests and benches).
+pub fn force_mode(m: QuantMode) {
+    ACTIVE.store(m.code(), Ordering::Relaxed);
+}
+
+/// Drop back to env-driven selection on next use.
+pub fn reset_mode() {
+    ACTIVE.store(UNINIT, Ordering::Relaxed);
+}
+
+// ----------------------------------------------------------------- f16
+
+/// f32 → IEEE 754 binary16, round-to-nearest-even.  This scalar routine
+/// is the conversion spec: subnormals round correctly, overflow past
+/// 65520 goes to ±inf, NaN stays NaN (quiet, top payload bits kept),
+/// ±0 and ±inf pass through exactly.
+pub fn f16_encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        if man == 0 {
+            return sign | 0x7c00; // infinity
+        }
+        // NaN: force quiet, keep the top 9 payload bits.
+        return sign | 0x7e00 | ((man >> 13) as u16 & 0x01ff);
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        // Magnitude ≥ 2^16: beyond the largest representable half even
+        // before rounding.
+        return sign | 0x7c00;
+    }
+    if e >= -14 {
+        // Normal half range.  Mantissa rounding may carry into the
+        // exponent; at e = 15 that carry lands exactly on the infinity
+        // encoding, which is the correct nearest-even result for
+        // values in [65520, 65536).
+        let half_exp = (e + 15) as u32;
+        let mant = man >> 13;
+        let rest = man & 0x1fff;
+        let mut h = (half_exp << 10) | mant;
+        if rest > 0x1000 || (rest == 0x1000 && (mant & 1) == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    if e >= -25 {
+        // Subnormal half: the 24-bit significand (implicit bit included)
+        // shifts right so the result lsb is 2^-24, then rounds RTNE.
+        let shift = (13 - 14 - e) as u32;
+        let full = 0x0080_0000 | man;
+        let mant = full >> shift;
+        let rest = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut h = mant;
+        if rest > halfway || (rest == halfway && (mant & 1) == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    // Magnitude below half the smallest subnormal: rounds to ±0.
+    sign
+}
+
+/// binary16 → f32 — exact (every half value is representable in f32).
+pub fn f16_decode(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN (payload shifted up)
+    } else if exp != 0 {
+        sign | ((exp + 112) << 23) | (man << 13)
+    } else if man != 0 {
+        // Subnormal half → normal f32: value = man · 2^-24.
+        let n = 32 - man.leading_zeros(); // bit length, 1..=10
+        sign | ((102 + n) << 23) | ((man << (24 - n)) & 0x007f_ffff)
+    } else {
+        sign // ±0
+    };
+    f32::from_bits(bits)
+}
+
+/// Pack a stream of u16 halves into f32 bit-words, two per word, low
+/// half first.  The words are *bit patterns* riding in arena slots —
+/// they are never used arithmetically.
+pub fn pack_halves(halves: &[u16], words: &mut [f32]) {
+    assert_eq!(words.len(), halves.len().div_ceil(2));
+    for (w, pair) in words.iter_mut().zip(halves.chunks(2)) {
+        let lo = pair[0] as u32;
+        let hi = if pair.len() > 1 { pair[1] as u32 } else { 0 };
+        *w = f32::from_bits(lo | (hi << 16));
+    }
+}
+
+/// Read half `idx` back out of a packed word stream.
+pub fn unpack_half(words: &[f32], idx: usize) -> u16 {
+    let bits = words[idx / 2].to_bits();
+    if idx % 2 == 0 {
+        (bits & 0xffff) as u16
+    } else {
+        (bits >> 16) as u16
+    }
+}
+
+/// Words needed to pack `halves` u16s.
+pub fn packed_words(halves: usize) -> usize {
+    halves.div_ceil(2)
+}
+
+// ------------------------------------------------------------- int8 rows
+
+/// A weight matrix stored as per-row int8 codes plus one f32 scale per
+/// row: `w[r][c] ≈ q[r·cols + c] · scales[r]` with
+/// `scales[r] = max|row r| / 127`.  Rows are the *contraction* axis of
+/// the decode matvec (`out[c] = Σ_r x[r]·w[r][c]`), so per-row scales
+/// fold into the activation exactly once per row and accumulation stays
+/// f32 throughout.
+#[derive(Clone, Debug, Default)]
+pub struct QuantMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub q: Vec<i8>,
+    pub scales: Vec<f32>,
+}
+
+impl QuantMatrix {
+    /// Quantize a row-major `rows × cols` f32 matrix.  All-zero rows get
+    /// scale 0 (and all-zero codes), so dequantization is exact there.
+    pub fn from_rows(data: &[f32], rows: usize, cols: usize) -> QuantMatrix {
+        assert_eq!(data.len(), rows * cols);
+        let mut q = vec![0i8; rows * cols];
+        let mut scales = vec![0.0f32; rows];
+        for r in 0..rows {
+            let row = &data[r * cols..(r + 1) * cols];
+            let mut amax = 0.0f32;
+            for &x in row {
+                let a = x.abs();
+                if a > amax {
+                    amax = a;
+                }
+            }
+            if amax == 0.0 {
+                continue;
+            }
+            let inv = 127.0 / amax;
+            scales[r] = amax / 127.0;
+            for (qc, &x) in q[r * cols..(r + 1) * cols].iter_mut().zip(row) {
+                *qc = (x * inv).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantMatrix { rows, cols, q, scales }
+    }
+
+    pub fn from_tensor(t: &Tensor) -> QuantMatrix {
+        QuantMatrix::from_rows(t.data(), t.rows(), t.cols())
+    }
+
+    /// Storage footprint: one byte per element + one f32 scale per row.
+    pub fn bytes(&self) -> usize {
+        self.q.len() + self.scales.len() * 4
+    }
+
+    pub fn qrow(&self, r: usize) -> &[i8] {
+        &self.q[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: force_mode/reset_mode flip process-global state, and lib
+    // unit tests share one process — mode-switching behavior is covered
+    // in `tests/integration_quant.rs`, which owns its process.
+
+    #[test]
+    fn mode_labels_and_tier_implications() {
+        assert_eq!(QuantMode::Off.label(), "off");
+        assert_eq!(QuantMode::F16.label(), "f16");
+        assert_eq!(QuantMode::Q8.label(), "q8");
+        assert!(!QuantMode::Off.f16_cold_tier());
+        assert!(QuantMode::F16.f16_cold_tier());
+        assert!(QuantMode::Q8.f16_cold_tier(), "q8 implies the f16 cold tier");
+        assert!(QuantMode::Q8.q8_weights());
+        assert!(!QuantMode::F16.q8_weights());
+    }
+
+    #[test]
+    fn f16_well_known_values() {
+        // (f32, expected half bits) — transcribed from the IEEE 754
+        // tables, independent of the encoder implementation.
+        let cases: &[(f32, u16)] = &[
+            (0.0, 0x0000),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),         // largest normal half
+            (65520.0, 0x7c00),         // halfway to 2^16, ties-to-even → inf
+            (65519.9, 0x7bff),         // just under halfway stays finite
+            (f32::INFINITY, 0x7c00),
+            (f32::NEG_INFINITY, 0xfc00),
+            (6.103_515_6e-5, 0x0400),  // smallest normal half
+            (5.960_464_5e-8, 0x0001),  // smallest subnormal half
+            (2.980_232_2e-8, 0x0000),  // exactly half the smallest subnormal: ties to even 0
+            (3.0e-8, 0x0001),          // just above: rounds up
+        ];
+        for &(x, want) in cases {
+            assert_eq!(f16_encode(x), want, "encode {x}");
+        }
+        assert_eq!(f16_decode(0x3c00), 1.0);
+        assert_eq!(f16_decode(0x0001), 5.960_464_5e-8);
+        assert!(f16_decode(f16_encode(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrips_odd_and_even_counts() {
+        for n in [0usize, 1, 2, 3, 7, 8] {
+            let halves: Vec<u16> = (0..n).map(|i| (i as u16) * 1031 + 7).collect();
+            let mut words = vec![0.0f32; packed_words(n)];
+            pack_halves(&halves, &mut words);
+            for (i, &h) in halves.iter().enumerate() {
+                assert_eq!(unpack_half(&words, i), h, "n={n} idx={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_matrix_error_bound_and_zero_rows() {
+        let data: Vec<f32> = (0..24).map(|i| ((i * 37 % 17) as f32 - 8.0) * 0.31).collect();
+        let qm = QuantMatrix::from_rows(&data, 4, 6);
+        for r in 0..4 {
+            let scale = qm.scales[r];
+            for c in 0..6 {
+                let want = data[r * 6 + c];
+                let got = qm.qrow(r)[c] as f32 * scale;
+                assert!(
+                    (want - got).abs() <= scale * 0.5 + 1e-7,
+                    "row {r} col {c}: {want} vs {got} (scale {scale})"
+                );
+            }
+        }
+        let zeros = QuantMatrix::from_rows(&[0.0; 6], 1, 6);
+        assert_eq!(zeros.scales[0], 0.0);
+        assert!(zeros.q.iter().all(|&q| q == 0));
+    }
+}

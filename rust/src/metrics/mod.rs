@@ -204,6 +204,12 @@ pub struct ServeCounters {
     pub cache_misses: AtomicU64,
     /// Current prompt-cache footprint in bytes (gauge).
     pub cache_bytes: AtomicU64,
+    /// State-arena pages committed by the cache's arena (gauge).
+    pub arena_pages: AtomicU64,
+    /// Live (checked-out) arena slots (gauge).
+    pub arena_slots_live: AtomicU64,
+    /// Arena bytes committed — live + free-listed (gauge).
+    pub arena_bytes_committed: AtomicU64,
     /// Total generated tokens across completed requests.
     pub tokens_generated: AtomicU64,
     /// Time-to-first-token, seconds.
@@ -227,6 +233,9 @@ impl Default for ServeCounters {
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             cache_bytes: AtomicU64::new(0),
+            arena_pages: AtomicU64::new(0),
+            arena_slots_live: AtomicU64::new(0),
+            arena_bytes_committed: AtomicU64::new(0),
             tokens_generated: AtomicU64::new(0),
             ttft: Hist::latency(),
             token_latency: Hist::latency(),
@@ -247,6 +256,13 @@ impl ServeCounters {
         self.ttft.observe(secs);
     }
 
+    /// Refresh the state-arena gauges from a page-ledger snapshot.
+    pub fn record_arena(&self, s: &crate::mem::ArenaStats) {
+        self.arena_pages.store(s.pages as u64, Ordering::Relaxed);
+        self.arena_slots_live.store(s.slots_live as u64, Ordering::Relaxed);
+        self.arena_bytes_committed.store(s.bytes_committed as u64, Ordering::Relaxed);
+    }
+
     /// (p50, p99) TTFT in milliseconds.
     pub fn ttft_percentiles_ms(&self) -> (f64, f64) {
         (self.ttft.percentile(50.0) * 1e3, self.ttft.percentile(99.0) * 1e3)
@@ -263,6 +279,12 @@ impl ServeCounters {
             .i64("cache_hits", self.cache_hits.load(Ordering::Relaxed) as i64)
             .i64("cache_misses", self.cache_misses.load(Ordering::Relaxed) as i64)
             .i64("cache_bytes", self.cache_bytes.load(Ordering::Relaxed) as i64)
+            .i64("arena_pages", self.arena_pages.load(Ordering::Relaxed) as i64)
+            .i64("arena_slots_live", self.arena_slots_live.load(Ordering::Relaxed) as i64)
+            .i64(
+                "arena_bytes_committed",
+                self.arena_bytes_committed.load(Ordering::Relaxed) as i64,
+            )
             .i64("tokens_generated", self.tokens_generated.load(Ordering::Relaxed) as i64)
             .f64("ttft_p50_ms", p50)
             .f64("ttft_p99_ms", p99)
@@ -286,8 +308,16 @@ impl ServeCounters {
             let _ = writeln!(out, "# TYPE {name} counter");
             let _ = writeln!(out, "{name} {}", v.load(Ordering::Relaxed));
         }
-        let _ = writeln!(out, "# TYPE psf_cache_bytes gauge");
-        let _ = writeln!(out, "psf_cache_bytes {}", self.cache_bytes.load(Ordering::Relaxed));
+        let gauges: [(&str, &AtomicU64); 4] = [
+            ("psf_cache_bytes", &self.cache_bytes),
+            ("psf_arena_pages", &self.arena_pages),
+            ("psf_arena_slots_live", &self.arena_slots_live),
+            ("psf_arena_bytes_committed", &self.arena_bytes_committed),
+        ];
+        for (name, v) in gauges {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", v.load(Ordering::Relaxed));
+        }
         self.ttft.prometheus_into("psf_ttft_seconds", "Time to first token", &mut out);
         self.token_latency.prometheus_into(
             "psf_token_latency_seconds",
@@ -449,6 +479,8 @@ mod tests {
         let c = ServeCounters::new();
         c.admitted.store(7, Ordering::Relaxed);
         c.cache_bytes.store(1024, Ordering::Relaxed);
+        c.arena_pages.store(3, Ordering::Relaxed);
+        c.arena_bytes_committed.store(196608, Ordering::Relaxed);
         c.record_ttft(0.03);
         c.queue_wait.observe(0.002);
         c.ipc_rtt.observe(0.0004);
@@ -460,6 +492,9 @@ mod tests {
             "psf_requests_admitted_total 7",
             "# TYPE psf_cache_bytes gauge",
             "psf_cache_bytes 1024",
+            "# TYPE psf_arena_pages gauge",
+            "psf_arena_pages 3",
+            "psf_arena_bytes_committed 196608",
             "# TYPE psf_ttft_seconds histogram",
             "psf_ttft_seconds_count 1",
             "psf_queue_wait_seconds_count 1",

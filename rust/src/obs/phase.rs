@@ -44,10 +44,14 @@ pub enum Phase {
     TrainGrad,
     /// Trainer: optimizer step (AdamW + clip).
     TrainOptim,
+    /// Narrowing to cold storage: f16 state freeze, int8 weight quantize.
+    Quantize,
+    /// Widening from cold storage: f16 state thaw / row dequantize.
+    Dequantize,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 13] = [
+    pub const ALL: [Phase; 15] = [
         Phase::LinMap,
         Phase::LinScores,
         Phase::LinPrefix,
@@ -61,6 +65,8 @@ impl Phase {
         Phase::PoolIdle,
         Phase::TrainGrad,
         Phase::TrainOptim,
+        Phase::Quantize,
+        Phase::Dequantize,
     ];
 
     pub fn name(self) -> &'static str {
@@ -78,6 +84,8 @@ impl Phase {
             Phase::PoolIdle => "pool_idle",
             Phase::TrainGrad => "train_grad",
             Phase::TrainOptim => "train_optim",
+            Phase::Quantize => "quantize",
+            Phase::Dequantize => "dequantize",
         }
     }
 

@@ -7,8 +7,16 @@
 //! skips its prefill completely.  The softmax family can be cached too,
 //! but its snapshots are O(n·h) KV tensors: the byte budget admits far
 //! fewer of them, which is exactly the paper's complexity gap made
-//! operational (`KernelState::memory_floats` in `attn::kernel` is the per-engine
-//! accounting).
+//! operational.
+//!
+//! Entries are stored *frozen* (`mem::freeze`): every f32 payload lives in
+//! a slot of this cache's private [`StateArena`], converted to packed f16
+//! halves when `PSF_QUANT` enables the cold tier.  Freezing on insert and
+//! thawing on hit keeps active sessions in full f32 while cached prefixes
+//! pay the narrow-storage price — and makes the byte ledger *exact*: entry
+//! bytes are the arena slot sizes plus a fixed per-entry overhead
+//! constant, not an estimate, and a debug assert reconciles the ledger
+//! against the arena's live-byte counter on every insert.
 //!
 //! Keying is (mechanism label, exact prompt token sequence): the mechanism
 //! label pins the state *shape* (same `HashMap` can serve several models),
@@ -21,7 +29,8 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::infer::model::{LayerState, NativeLm};
-use crate::infer::session::{DecodeSession, SessionSnapshot};
+use crate::infer::session::DecodeSession;
+use crate::mem::{quant, ArenaStats, FrozenRow, FrozenState, QuantMode, StateArena};
 
 /// Cache key: which model family the state belongs to + the exact prompt.
 #[derive(Clone, Debug, Hash, PartialEq, Eq)]
@@ -30,37 +39,73 @@ pub struct CacheKey {
     pub prompt: Vec<u32>,
 }
 
-/// The cached value: per-layer decode states and the next-token logits of
-/// a session that prefilled the prompt and has not decoded yet.
+/// Fixed per-entry bookkeeping charge: the `HashMap` entry, the key
+/// struct, the `Arc`, and the `Entry` metadata.  A constant (rather than
+/// a measured value) so the ledger stays exactly reproducible; 160 bytes
+/// is deliberately on the generous side of what those structs occupy.
+pub const ENTRY_OVERHEAD_BYTES: usize = 160;
+
+/// The cached value: per-(layer, head) *frozen* decode states and the
+/// frozen next-token logits of a session that prefilled the prompt and
+/// has not decoded yet.  Cloning deep-copies through the arena.
 #[derive(Clone)]
 pub struct PrefixSnapshot {
-    pub states: Vec<LayerState>,
-    pub last_logits: Vec<f32>,
+    /// `frozen[layer][head]`.
+    frozen: Vec<Vec<FrozenState>>,
+    logits: FrozenRow,
 }
 
 impl PrefixSnapshot {
-    /// Capture the prompt-prefix state of a freshly prefilled session.
+    /// Freeze the prompt-prefix state of a freshly prefilled session into
+    /// `arena` slots, narrowing to f16 when `mode` enables the cold tier.
     /// Panics if the session has already decoded — a mid-generation state
     /// must never be served as a prompt prefix.
-    pub fn of(session: &DecodeSession) -> PrefixSnapshot {
-        let snap: SessionSnapshot = session.snapshot();
-        assert_eq!(snap.new_tokens(), 0, "prefix snapshot of a session that already decoded");
-        PrefixSnapshot { states: snap.states, last_logits: snap.last_logits }
+    pub fn freeze(session: &DecodeSession, mode: QuantMode, arena: &Arc<StateArena>) -> PrefixSnapshot {
+        assert_eq!(session.new_tokens(), 0, "prefix snapshot of a session that already decoded");
+        let frozen = session
+            .states()
+            .iter()
+            .map(|l| l.heads.iter().map(|h| FrozenState::freeze(h, mode, arena)).collect())
+            .collect();
+        let logits = FrozenRow::freeze(session.last_logits(), mode, arena);
+        PrefixSnapshot { frozen, logits }
     }
 
-    /// Approximate heap footprint in bytes (f32 payloads dominate).  The
-    /// sketch/feature projections are *not* counted: they live behind
-    /// `Arc` and are shared with the model, not duplicated per entry.
+    /// Rebuild live decode states + logits, pairing each frozen head with
+    /// the model's kernel for that (layer, head) (the f16 tier re-absorbs
+    /// buffered tail rows through the kernel).  The caller hands the
+    /// result straight to [`DecodeSession::from_prefix`].
+    pub fn thaw(&self, model: &NativeLm) -> (Vec<LayerState>, Vec<f32>) {
+        let states = self
+            .frozen
+            .iter()
+            .zip(model.kernels())
+            .map(|(layer, kernels)| LayerState {
+                heads: layer.iter().zip(kernels).map(|(f, k)| f.thaw(k)).collect(),
+            })
+            .collect();
+        (states, self.logits.thaw())
+    }
+
+    /// Exact arena footprint in bytes: the sum of the backing slot sizes.
     pub fn bytes(&self) -> usize {
-        (NativeLm::state_memory_floats(&self.states) + self.last_logits.len()) * 4
+        self.frozen.iter().flatten().map(FrozenState::arena_bytes).sum::<usize>()
+            + self.logits.arena_bytes()
+    }
+
+    /// Whether this snapshot is stored in the f16 cold tier.
+    pub fn is_f16(&self) -> bool {
+        self.frozen.iter().flatten().any(FrozenState::is_f16)
     }
 }
 
 struct Entry {
-    /// `Arc` so a hit is O(1) under the cache lock — the deep copy a
-    /// session needs happens on the caller's thread, outside the mutex.
+    /// `Arc` so a hit is O(1) under the cache lock — the thaw a session
+    /// needs happens on the caller's thread, outside the mutex.
     snap: Arc<PrefixSnapshot>,
     bytes: usize,
+    /// Arena portion of `bytes` (the ledger ↔ arena reconciliation).
+    arena_bytes: usize,
     last_used: u64,
 }
 
@@ -68,6 +113,7 @@ struct Entry {
 struct Inner {
     map: HashMap<CacheKey, Entry>,
     bytes: usize,
+    arena_bytes: usize,
     clock: u64,
     hits: u64,
     misses: u64,
@@ -97,23 +143,43 @@ impl CacheStats {
     }
 }
 
-/// Thread-safe LRU prompt-prefix cache with a byte budget.
+/// Thread-safe LRU prompt-prefix cache with a byte budget, backed by a
+/// private paged [`StateArena`] holding every frozen payload.
 pub struct PromptCache {
     inner: Mutex<Inner>,
     budget_bytes: usize,
+    arena: Arc<StateArena>,
 }
 
 impl PromptCache {
     pub fn new(budget_bytes: usize) -> PromptCache {
-        PromptCache { inner: Mutex::new(Inner::default()), budget_bytes }
+        PromptCache { inner: Mutex::new(Inner::default()), budget_bytes, arena: StateArena::new() }
     }
 
     pub fn budget_bytes(&self) -> usize {
         self.budget_bytes
     }
 
+    /// The arena backing this cache's frozen entries (freeze into this;
+    /// its stats drive `/healthz` and the admission pressure gauges).
+    pub fn arena(&self) -> &Arc<StateArena> {
+        &self.arena
+    }
+
+    /// Page-level arena counters (committed bytes, live slots, …).
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
+    }
+
+    /// Freeze a prefilled session into this cache's arena under the
+    /// process-wide `PSF_QUANT` mode — the snapshot [`PromptCache::insert`]
+    /// expects.
+    pub fn freeze(&self, session: &DecodeSession) -> PrefixSnapshot {
+        PrefixSnapshot::freeze(session, quant::mode(), &self.arena)
+    }
+
     /// Look up a prompt prefix; a hit refreshes the LRU position and
-    /// returns a shared handle (an `Arc` bump, not a copy — callers clone
+    /// returns a shared handle (an `Arc` bump, not a copy — callers thaw
     /// the states they need outside the lock).  Every call counts as a
     /// hit or a miss.
     pub fn get(&self, key: &CacheKey) -> Option<Arc<PrefixSnapshot>> {
@@ -134,37 +200,63 @@ impl PromptCache {
         }
     }
 
-    /// Insert a prompt prefix, evicting least-recently-used entries until
-    /// the byte budget holds.  A snapshot larger than the whole budget is
-    /// dropped rather than wiping the cache for one uncacheable prompt.
-    /// Inserting an existing key refreshes the entry.
+    /// Insert a prompt prefix (frozen via [`PromptCache::freeze`]),
+    /// evicting least-recently-used entries until the byte budget holds.
+    /// Admission is driven by the exact ledger — arena slot bytes + key
+    /// bytes + [`ENTRY_OVERHEAD_BYTES`] — not an estimate.  A snapshot
+    /// larger than the whole budget is dropped (releasing its slots)
+    /// rather than wiping the cache for one uncacheable prompt.
+    /// Inserting an existing key refreshes the entry without drifting the
+    /// ledger.
     pub fn insert(&self, key: CacheKey, snap: PrefixSnapshot) {
-        let bytes = snap.bytes() + key.prompt.len() * 4;
+        let arena_bytes = snap.bytes();
+        let bytes = arena_bytes + key.prompt.len() * 4 + ENTRY_OVERHEAD_BYTES;
         if bytes > self.budget_bytes {
-            return;
+            return; // dropping `snap` releases its arena slots
         }
-        let mut inner = self.lock();
-        inner.clock += 1;
-        let clock = inner.clock;
-        if let Some(old) = inner.map.remove(&key) {
-            inner.bytes -= old.bytes;
-        }
-        while inner.bytes + bytes > self.budget_bytes {
-            let Some(lru_key) = inner
+        {
+            let mut inner = self.lock();
+            inner.clock += 1;
+            let clock = inner.clock;
+            if let Some(old) = inner.map.remove(&key) {
+                inner.bytes -= old.bytes;
+                inner.arena_bytes -= old.arena_bytes;
+            }
+            while inner.bytes + bytes > self.budget_bytes {
+                let Some(lru_key) = inner
+                    .map
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| k.clone())
+                else {
+                    break;
+                };
+                let evicted = inner.map.remove(&lru_key).expect("lru key vanished");
+                inner.bytes -= evicted.bytes;
+                inner.arena_bytes -= evicted.arena_bytes;
+                inner.evictions += 1;
+            }
+            inner
                 .map
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
-            else {
-                break;
-            };
-            let evicted = inner.map.remove(&lru_key).expect("lru key vanished");
-            inner.bytes -= evicted.bytes;
-            inner.evictions += 1;
+                .insert(key, Entry { snap: Arc::new(snap), bytes, arena_bytes, last_used: clock });
+            inner.bytes += bytes;
+            inner.arena_bytes += arena_bytes;
+            inner.insertions += 1;
+            // Ledger ↔ arena reconciliation: every live arena byte beyond
+            // the ledger belongs to snapshots still held by callers
+            // (outstanding `Arc`s, evicted-but-referenced entries), never
+            // the other way around.
+            debug_assert!(
+                self.arena.stats().bytes_live >= inner.arena_bytes,
+                "cache ledger ({}) exceeds arena live bytes ({})",
+                inner.arena_bytes,
+                self.arena.stats().bytes_live
+            );
         }
-        inner.map.insert(key, Entry { snap: Arc::new(snap), bytes, last_used: clock });
-        inner.bytes += bytes;
-        inner.insertions += 1;
+        // Outside the map lock: cap the arena's committed (free-slot)
+        // memory at the cache budget so eviction returns pages, not just
+        // ledger headroom.
+        self.arena.trim(self.budget_bytes);
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -198,14 +290,14 @@ mod tests {
         NativeLm::new(cfg, mech)
     }
 
-    fn prefix(model: &NativeLm, prompt: &[u32]) -> PrefixSnapshot {
+    fn session(model: &NativeLm, prompt: &[u32]) -> DecodeSession {
         let req = GenRequest {
             prompt: prompt.to_vec(),
             max_new_tokens: 0,
             policy: SamplePolicy::Greedy,
             seed: 0,
         };
-        PrefixSnapshot::of(&DecodeSession::new(model, 0, req))
+        DecodeSession::new(model, 0, req)
     }
 
     fn key(model: &NativeLm, prompt: &[u32]) -> CacheKey {
@@ -213,19 +305,24 @@ mod tests {
     }
 
     #[test]
-    fn hit_returns_equal_snapshot_and_counts() {
+    fn hit_thaws_to_equal_state_and_counts() {
         let m = model(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true });
         let cache = PromptCache::new(10 << 20);
         let prompt = vec![0u32, 3, 7, 9];
         assert!(cache.get(&key(&m, &prompt)).is_none());
-        let snap = prefix(&m, &prompt);
-        cache.insert(key(&m, &prompt), snap.clone());
+        let s = session(&m, &prompt);
+        cache.insert(key(&m, &prompt), cache.freeze(&s));
         let got = cache.get(&key(&m, &prompt)).expect("hit");
-        assert_eq!(got.last_logits, snap.last_logits);
-        let s = cache.stats();
-        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
-        assert!(s.bytes > 0);
-        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        let (_, logits) = got.thaw(&m);
+        // Default mode is off → the frozen round trip is bitwise.
+        assert_eq!(logits, s.last_logits());
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+        assert!(st.bytes > 0);
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+        // The arena holds exactly the one entry's payload (live bytes
+        // match the ledger's arena portion).
+        assert!(cache.arena_stats().bytes_live > 0);
     }
 
     #[test]
@@ -233,7 +330,7 @@ mod tests {
         let a = model(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true });
         let b = model(Mechanism::Softmax);
         let cache = PromptCache::new(10 << 20);
-        cache.insert(key(&a, &[0, 1]), prefix(&a, &[0, 1]));
+        cache.insert(key(&a, &[0, 1]), cache.freeze(&session(&a, &[0, 1])));
         assert!(cache.get(&key(&a, &[0, 1, 2])).is_none());
         assert!(cache.get(&key(&b, &[0, 1])).is_none());
         assert!(cache.get(&key(&a, &[0, 1])).is_some());
@@ -241,43 +338,78 @@ mod tests {
 
     #[test]
     fn linear_snapshot_is_constant_size_while_kv_grows() {
-        // The constant-size-cache argument, measured: doubling the prompt
-        // leaves the polysketch snapshot's footprint unchanged (modulo the
-        // in-progress block buffer at block-aligned lengths) but doubles
-        // the softmax KV snapshot.
+        // The constant-size-cache argument, measured: quadrupling the
+        // prompt leaves the polysketch snapshot's footprint unchanged
+        // (modulo the in-progress block buffer at block-aligned lengths)
+        // but blows up the softmax KV snapshot.
         let lin = model(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: false });
         let kv = model(Mechanism::Softmax);
+        let cache = PromptCache::new(10 << 20);
         let short: Vec<u32> = (0..64u32).map(|i| i % 60).collect();
         let long: Vec<u32> = (0..256u32).map(|i| i % 60).collect();
-        assert_eq!(prefix(&lin, &short).bytes(), prefix(&lin, &long).bytes());
-        assert!(prefix(&kv, &long).bytes() > 2 * prefix(&kv, &short).bytes());
+        assert_eq!(
+            cache.freeze(&session(&lin, &short)).bytes(),
+            cache.freeze(&session(&lin, &long)).bytes()
+        );
+        assert!(
+            cache.freeze(&session(&kv, &long)).bytes()
+                > 2 * cache.freeze(&session(&kv, &short)).bytes()
+        );
     }
 
     #[test]
-    fn lru_eviction_respects_byte_budget() {
+    fn lru_eviction_respects_byte_budget_and_releases_arena_slots() {
         let m = model(Mechanism::Softmax);
         let prompts: Vec<Vec<u32>> =
             (0..4).map(|s| (0..32u32).map(|i| (i + s) % 60).collect()).collect();
-        let one = prefix(&m, &prompts[0]).bytes() + prompts[0].len() * 4;
-        // Budget for two entries (all four prompts have identical shape).
+        // All four prompts have identical shape, so one probe fixes the
+        // exact per-entry charge.
+        let probe = PromptCache::new(10 << 20);
+        let one = probe.freeze(&session(&m, &prompts[0])).bytes()
+            + prompts[0].len() * 4
+            + ENTRY_OVERHEAD_BYTES;
+        // Budget for two entries.
         let cache = PromptCache::new(2 * one + one / 2);
         for p in &prompts[..3] {
-            cache.insert(key(&m, p), prefix(&m, p));
+            cache.insert(key(&m, p), cache.freeze(&session(&m, p)));
         }
         let s = cache.stats();
         assert_eq!(s.entries, 2, "{s:?}");
         assert_eq!(s.evictions, 1);
         assert!(s.bytes <= cache.budget_bytes());
+        // Eviction returned the evicted entry's slots to the free list;
+        // trim then keeps committed memory at or under the budget scale.
+        // 2 layers × 2 heads + 1 logits row = 5 slots per entry.
+        let astats = cache.arena_stats();
+        assert_eq!(astats.slots_live, 5 * cache.stats().entries);
         // prompts[0] was LRU, so it is the one gone.
         assert!(cache.get(&key(&m, &prompts[0])).is_none());
         assert!(cache.get(&key(&m, &prompts[1])).is_some());
         assert!(cache.get(&key(&m, &prompts[2])).is_some());
         // Touch prompts[1]; inserting prompts[3] must now evict prompts[2].
         assert!(cache.get(&key(&m, &prompts[1])).is_some());
-        cache.insert(key(&m, &prompts[3]), prefix(&m, &prompts[3]));
+        cache.insert(key(&m, &prompts[3]), cache.freeze(&session(&m, &prompts[3])));
         assert!(cache.get(&key(&m, &prompts[1])).is_some());
         assert!(cache.get(&key(&m, &prompts[2])).is_none());
         assert!(cache.get(&key(&m, &prompts[3])).is_some());
+    }
+
+    #[test]
+    fn reinsertion_does_not_drift_the_ledger() {
+        let m = model(Mechanism::Softmax);
+        let prompt: Vec<u32> = (0..16u32).collect();
+        let cache = PromptCache::new(10 << 20);
+        cache.insert(key(&m, &prompt), cache.freeze(&session(&m, &prompt)));
+        let once = cache.stats().bytes;
+        for _ in 0..5 {
+            cache.insert(key(&m, &prompt), cache.freeze(&session(&m, &prompt)));
+        }
+        let st = cache.stats();
+        assert_eq!(st.bytes, once, "re-inserting the same key drifted the ledger");
+        assert_eq!(st.entries, 1);
+        // The replaced snapshots' slots went back to the free list: live
+        // slots stay at one entry's worth (4 head states + 1 logits row).
+        assert_eq!(cache.arena_stats().slots_live, 5);
     }
 
     #[test]
@@ -285,8 +417,10 @@ mod tests {
         let m = model(Mechanism::Softmax);
         let prompt: Vec<u32> = (0..64u32).collect();
         let cache = PromptCache::new(16); // tiny budget
-        cache.insert(key(&m, &prompt), prefix(&m, &prompt));
+        cache.insert(key(&m, &prompt), cache.freeze(&session(&m, &prompt)));
         assert_eq!(cache.stats().entries, 0);
         assert_eq!(cache.stats().insertions, 0);
+        // The rejected snapshot's slots were released, not leaked.
+        assert_eq!(cache.arena_stats().slots_live, 0);
     }
 }

@@ -214,6 +214,7 @@ impl Gateway {
     pub fn metrics_record(&self) -> Record {
         let stats = self.cache.stats();
         self.counters.cache_bytes.store(stats.bytes as u64, Ordering::Relaxed);
+        self.counters.record_arena(&self.cache.arena_stats());
         self.counters
             .record()
             .str("mech", self.model.mech.label())
@@ -289,18 +290,29 @@ impl Handler for Gateway {
             None => (req.path.as_str(), ""),
         };
         match (req.method.as_str(), path) {
-            ("GET", "/healthz") => resp.simple(
-                200,
-                "application/json",
-                &format!(
-                    "{{\"ok\":true,\"mech\":{},\"linear\":{},\"simd\":{}}}",
-                    json_escape(&self.model.mech.label()),
-                    self.model.mech.is_linear(),
-                    json_escape(crate::tensor::micro::backend_label()),
-                ),
-            ),
+            ("GET", "/healthz") => {
+                let a = self.cache.arena_stats();
+                resp.simple(
+                    200,
+                    "application/json",
+                    &format!(
+                        "{{\"ok\":true,\"mech\":{},\"linear\":{},\"simd\":{},\"quant\":{},\
+                         \"arena\":{{\"slots_live\":{},\"bytes_live\":{},\
+                         \"bytes_committed\":{},\"pages\":{}}}}}",
+                        json_escape(&self.model.mech.label()),
+                        self.model.mech.is_linear(),
+                        json_escape(crate::tensor::micro::backend_label()),
+                        json_escape(crate::mem::quant::mode().label()),
+                        a.slots_live,
+                        a.bytes_live,
+                        a.bytes_committed,
+                        a.pages,
+                    ),
+                )
+            }
             ("GET", "/metrics") if query.split('&').any(|kv| kv == "format=prometheus") => {
                 self.counters.cache_bytes.store(self.cache.stats().bytes as u64, Ordering::Relaxed);
+                self.counters.record_arena(&self.cache.arena_stats());
                 resp.simple(200, "text/plain; version=0.0.4", &self.counters.prometheus_text())
             }
             ("GET", "/metrics") => {

@@ -39,7 +39,7 @@ use crate::infer::model::NativeLm;
 use crate::infer::session::{decode_text, DecodeSession, GenRequest};
 use crate::metrics::ServeCounters;
 use crate::obs;
-use crate::serve::cache::{CacheKey, PrefixSnapshot, PromptCache};
+use crate::serve::cache::{CacheKey, PromptCache};
 
 /// Worker-pool knobs.
 #[derive(Clone, Debug)]
@@ -297,20 +297,17 @@ fn admit(shared: &Shared, job: ServeJob) -> Running {
     let (session, cache_hit) = match cached {
         Some(prefix) => {
             shared.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
-            // The deep copy happens here, on this worker's thread — the
+            // The thaw (f16 → f32 widening + tail re-absorb when the cold
+            // tier is on) happens here, on this worker's thread — the
             // cache lock was only held for an Arc bump.
-            let s = DecodeSession::from_prefix(
-                job.id as usize,
-                job.req,
-                prefix.states.clone(),
-                prefix.last_logits.clone(),
-            );
+            let (states, last_logits) = prefix.thaw(&shared.model);
+            let s = DecodeSession::from_prefix(job.id as usize, job.req, states, last_logits);
             (s, true)
         }
         None => {
             shared.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
             let s = DecodeSession::new(&shared.model, job.id as usize, job.req);
-            shared.cache.insert(key, PrefixSnapshot::of(&s));
+            shared.cache.insert(key, shared.cache.freeze(&s));
             (s, false)
         }
     };
@@ -318,6 +315,7 @@ fn admit(shared: &Shared, job: ServeJob) -> Running {
         .counters
         .cache_bytes
         .store(shared.cache.stats().bytes as u64, Ordering::Relaxed);
+    shared.counters.record_arena(&shared.cache.arena_stats());
     Running {
         session,
         events: job.events,

@@ -512,11 +512,12 @@ impl Handler for ShardGateway {
                     200,
                     "application/json",
                     &format!(
-                        "{{\"ok\":true,\"mech\":{},\"linear\":{},\"simd\":{},\"runners\":{},\
-                         \"healthy\":{},\"degraded\":{},\"respawns\":{}}}",
+                        "{{\"ok\":true,\"mech\":{},\"linear\":{},\"simd\":{},\"quant\":{},\
+                         \"runners\":{},\"healthy\":{},\"degraded\":{},\"respawns\":{}}}",
                         json_escape(&self.mech.label()),
                         self.mech.is_linear(),
                         json_escape(crate::tensor::micro::backend_label()),
+                        json_escape(crate::mem::quant::mode().label()),
                         total,
                         healthy,
                         healthy < total,

@@ -329,6 +329,9 @@ fn metrics_json(
 ) -> String {
     let stats = cache.stats();
     counters.cache_bytes.store(stats.bytes as u64, Ordering::Relaxed);
+    // Arena gauges come from this runner's private cache arena — each
+    // shard reports only the pages backing its own keyslice.
+    counters.record_arena(&cache.arena_stats());
     counters
         .record()
         .i64("runner_id", cfg.runner_id as i64)

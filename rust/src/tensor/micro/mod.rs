@@ -153,6 +153,24 @@ pub trait MicroKernel {
     /// with `a[i] == 0.0` skipped.
     fn outer_accum(&self, z: &mut [f32], a: &[f32], b: &[f32]);
 
+    /// Lane-tree dot of an f32 row against an int8 row sharing one
+    /// scale: element `i` contributes `a[i] · (q[i] as f32 · scale)` —
+    /// the int→float conversion is exact, then two rounded multiplies,
+    /// so every backend produces identical bytes.
+    fn dot_q8(&self, a: &[f32], q: &[i8], scale: f32) -> f32;
+
+    /// Packed GEMM row tile over per-row-quantized int8 weights:
+    /// `c[j] += Σ_k (a[k]·scales[k]) · (q[k*c.len()+j] as f32)`, the
+    /// per-row weight `w = a[k]·scales[k]` computed once (one scalar
+    /// rounding) and rows with `w == 0.0` skipped — the zero-skip rule,
+    /// which also covers all-zero quantized rows (`scales[k] == 0`).
+    /// Accumulation is f32 throughout.
+    fn gemm_row_q8(&self, c: &mut [f32], a: &[f32], q: &[i8], scales: &[f32]);
+
+    /// `out[i] = q[i] as f32 · scale` — dequantize one int8 row (exact
+    /// conversion, one rounded multiply).
+    fn dequant_row(&self, out: &mut [f32], q: &[i8], scale: f32);
+
     /// `out[i] = exp(x[i] - mx)` — scalar libm per element (spec).
     fn exp_sub(&self, out: &mut [f32], x: &[f32], mx: f32) {
         debug_assert_eq!(out.len(), x.len());
@@ -351,6 +369,19 @@ dispatch! {
     outer_accum(z: &mut [f32], a: &[f32], b: &[f32])
 }
 dispatch! {
+    /// Lane-tree f32 × int8 dot — see [`MicroKernel::dot_q8`].
+    dot_q8(a: &[f32], q: &[i8], scale: f32) -> f32
+}
+dispatch! {
+    /// Packed GEMM row tile over int8 weights — see
+    /// [`MicroKernel::gemm_row_q8`].
+    gemm_row_q8(c: &mut [f32], a: &[f32], q: &[i8], scales: &[f32])
+}
+dispatch! {
+    /// Dequantize one int8 row — see [`MicroKernel::dequant_row`].
+    dequant_row(out: &mut [f32], q: &[i8], scale: f32)
+}
+dispatch! {
     /// `out = exp(x - mx)` rows, scalar libm — see [`MicroKernel::exp_sub`].
     exp_sub(out: &mut [f32], x: &[f32], mx: f32)
 }
@@ -430,6 +461,51 @@ mod tests {
         assert_eq!(backend_label(), "scalar");
         force_backend(prev).unwrap();
         assert!(matches!(backend_label(), "scalar" | "sse2" | "avx2"));
+    }
+
+    #[test]
+    fn dot_q8_is_the_lane_tree_spec() {
+        // Independent transcription: lane i % 8, per element
+        // `a[i] * (q[i] as f32 * scale)`, fixed combine tree.
+        let mut rng = Pcg::seeded(79);
+        for n in [0usize, 1, 7, 8, 9, 33] {
+            let a: Vec<f32> = rng.gaussians(n);
+            let q: Vec<i8> = (0..n).map(|i| ((i * 83 + 11) % 255) as i16 as i8).collect();
+            let mut lanes = [0.0f32; LANES];
+            for i in 0..n {
+                lanes[i % LANES] += a[i] * (q[i] as f32 * 0.031_25);
+            }
+            let want = lane_tree(&lanes);
+            assert_eq!(dot_q8(&a, &q, 0.031_25).to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn gemm_row_q8_matches_dequantized_gemm_row_on_zero_free_rows() {
+        // With w = a[k]·scales[k] folded per row, the q8 tile must equal
+        // gemm_row over `a[k]·scales[k]` coefficients and raw `q as f32`
+        // rows — same op sequence, so bitwise, not approximately.
+        let mut rng = Pcg::seeded(80);
+        let (k, n) = (4usize, 13usize);
+        let a: Vec<f32> = rng.gaussians(k);
+        let scales = [0.5f32, 0.0, 1.25, 0.031_25];
+        let q: Vec<i8> = (0..k * n).map(|i| ((i * 97 + 53) % 255) as i16 as i8).collect();
+        let mut c1 = vec![0.2f32; n];
+        gemm_row_q8(&mut c1, &a, &q, &scales);
+        let coeff: Vec<f32> = a.iter().zip(&scales).map(|(&x, &s)| x * s).collect();
+        let packed: Vec<f32> = q.iter().map(|&v| v as f32).collect();
+        let mut c2 = vec![0.2f32; n];
+        gemm_row(&mut c2, &coeff, &packed);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn dequant_row_is_exact_conversion_then_one_multiply() {
+        let q: Vec<i8> = vec![-128, -127, -1, 0, 1, 2, 127];
+        let mut out = vec![0.0f32; q.len()];
+        dequant_row(&mut out, &q, 0.25);
+        let want: Vec<f32> = q.iter().map(|&v| v as f32 * 0.25).collect();
+        assert_eq!(out, want);
     }
 
     #[test]

@@ -121,6 +121,45 @@ impl MicroKernel for Scalar {
         }
     }
 
+    fn dot_q8(&self, a: &[f32], q: &[i8], scale: f32) -> f32 {
+        debug_assert_eq!(a.len(), q.len());
+        let mut lanes = [0.0f32; LANES];
+        let chunks = a.len() / LANES;
+        for c in 0..chunks {
+            let i = c * LANES;
+            for l in 0..LANES {
+                lanes[l] += a[i + l] * (q[i + l] as f32 * scale);
+            }
+        }
+        for i in chunks * LANES..a.len() {
+            lanes[i % LANES] += a[i] * (q[i] as f32 * scale);
+        }
+        lane_tree(&lanes)
+    }
+
+    fn gemm_row_q8(&self, c: &mut [f32], a: &[f32], q: &[i8], scales: &[f32]) {
+        let n = c.len();
+        debug_assert_eq!(q.len(), a.len() * n);
+        debug_assert_eq!(scales.len(), a.len());
+        for (kk, &av) in a.iter().enumerate() {
+            let w = av * scales[kk];
+            if w == 0.0 {
+                continue;
+            }
+            let qrow = &q[kk * n..(kk + 1) * n];
+            for (o, &qv) in c.iter_mut().zip(qrow) {
+                *o += qv as f32 * w;
+            }
+        }
+    }
+
+    fn dequant_row(&self, out: &mut [f32], q: &[i8], scale: f32) {
+        debug_assert_eq!(out.len(), q.len());
+        for (o, &qv) in out.iter_mut().zip(q) {
+            *o = qv as f32 * scale;
+        }
+    }
+
     fn outer(&self, out: &mut [f32], a: &[f32], b: &[f32]) {
         let n = b.len();
         debug_assert_eq!(out.len(), a.len() * n);

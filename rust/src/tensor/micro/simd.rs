@@ -231,6 +231,120 @@ unsafe fn gemm_row_sse2(c: &mut [f32], a: &[f32], b: &[f32]) {
     }
 }
 
+#[inline]
+unsafe fn cvt_q8x4_sse2(p: *const i8) -> __m128 {
+    // SSE2 has no byte→dword sign extension (that is SSE4.1): duplicate
+    // each byte up to the high byte of its 32-bit lane, then
+    // arithmetic-shift back down.  Both the extension and the
+    // int→float conversion are exact, so parity with the scalar
+    // backend's `q as f32` holds bit for bit.
+    let raw = _mm_cvtsi32_si128((p as *const i32).read_unaligned());
+    let w = _mm_unpacklo_epi8(raw, raw);
+    let d = _mm_unpacklo_epi16(w, w);
+    _mm_cvtepi32_ps(_mm_srai_epi32::<24>(d))
+}
+
+#[inline]
+unsafe fn dot_q8_sse2(a: &[f32], q: &[i8], scale: f32) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    let (ap, qp) = (a.as_ptr(), q.as_ptr());
+    let vs = _mm_set1_ps(scale);
+    let mut lo = _mm_setzero_ps();
+    let mut hi = _mm_setzero_ps();
+    for c in 0..chunks {
+        let i = c * LANES;
+        // Same rounding sequence as scalar: exact convert, then
+        // `* scale`, then `* a`, then lane add — no FMA.
+        let d0 = _mm_mul_ps(cvt_q8x4_sse2(qp.add(i)), vs);
+        let d1 = _mm_mul_ps(cvt_q8x4_sse2(qp.add(i + 4)), vs);
+        lo = _mm_add_ps(lo, _mm_mul_ps(_mm_loadu_ps(ap.add(i)), d0));
+        hi = _mm_add_ps(hi, _mm_mul_ps(_mm_loadu_ps(ap.add(i + 4)), d1));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm_storeu_ps(lanes.as_mut_ptr(), lo);
+    _mm_storeu_ps(lanes.as_mut_ptr().add(4), hi);
+    for i in chunks * LANES..n {
+        lanes[i % LANES] += a[i] * (q[i] as f32 * scale);
+    }
+    lane_tree(&lanes)
+}
+
+#[inline]
+unsafe fn gemm_row_q8_sse2(c: &mut [f32], a: &[f32], q: &[i8], scales: &[f32]) {
+    let n = c.len();
+    debug_assert_eq!(q.len(), a.len() * n);
+    debug_assert_eq!(scales.len(), a.len());
+    let (cp, qp) = (c.as_mut_ptr(), q.as_ptr());
+    let mut j = 0;
+    // Same tiling as gemm_row_sse2; the per-row weight `w = a·scale` is
+    // one scalar rounding, identical to the spec.
+    while j + 16 <= n {
+        let mut acc0 = _mm_loadu_ps(cp.add(j));
+        let mut acc1 = _mm_loadu_ps(cp.add(j + 4));
+        let mut acc2 = _mm_loadu_ps(cp.add(j + 8));
+        let mut acc3 = _mm_loadu_ps(cp.add(j + 12));
+        for (kk, &av) in a.iter().enumerate() {
+            let w = av * scales[kk];
+            if w == 0.0 {
+                continue;
+            }
+            let vw = _mm_set1_ps(w);
+            let base = qp.add(kk * n + j);
+            acc0 = _mm_add_ps(acc0, _mm_mul_ps(cvt_q8x4_sse2(base), vw));
+            acc1 = _mm_add_ps(acc1, _mm_mul_ps(cvt_q8x4_sse2(base.add(4)), vw));
+            acc2 = _mm_add_ps(acc2, _mm_mul_ps(cvt_q8x4_sse2(base.add(8)), vw));
+            acc3 = _mm_add_ps(acc3, _mm_mul_ps(cvt_q8x4_sse2(base.add(12)), vw));
+        }
+        _mm_storeu_ps(cp.add(j), acc0);
+        _mm_storeu_ps(cp.add(j + 4), acc1);
+        _mm_storeu_ps(cp.add(j + 8), acc2);
+        _mm_storeu_ps(cp.add(j + 12), acc3);
+        j += 16;
+    }
+    while j + 4 <= n {
+        let mut acc = _mm_loadu_ps(cp.add(j));
+        for (kk, &av) in a.iter().enumerate() {
+            let w = av * scales[kk];
+            if w == 0.0 {
+                continue;
+            }
+            acc = _mm_add_ps(acc, _mm_mul_ps(cvt_q8x4_sse2(qp.add(kk * n + j)), _mm_set1_ps(w)));
+        }
+        _mm_storeu_ps(cp.add(j), acc);
+        j += 4;
+    }
+    for jj in j..n {
+        let mut s = c[jj];
+        for (kk, &av) in a.iter().enumerate() {
+            let w = av * scales[kk];
+            if w == 0.0 {
+                continue;
+            }
+            s += q[kk * n + jj] as f32 * w;
+        }
+        c[jj] = s;
+    }
+}
+
+#[inline]
+unsafe fn dequant_row_sse2(out: &mut [f32], q: &[i8], scale: f32) {
+    debug_assert_eq!(out.len(), q.len());
+    let n = out.len();
+    let vs = _mm_set1_ps(scale);
+    let (op, qp) = (out.as_mut_ptr(), q.as_ptr());
+    let mut i = 0;
+    while i + 4 <= n {
+        _mm_storeu_ps(op.add(i), _mm_mul_ps(cvt_q8x4_sse2(qp.add(i)), vs));
+        i += 4;
+    }
+    while i < n {
+        out[i] = q[i] as f32 * scale;
+        i += 1;
+    }
+}
+
 impl MicroKernel for Sse2 {
     fn name(&self) -> &'static str {
         "sse2"
@@ -304,6 +418,23 @@ impl MicroKernel for Sse2 {
     fn gemm_row(&self, c: &mut [f32], a: &[f32], b: &[f32]) {
         // SAFETY: as above.
         unsafe { gemm_row_sse2(c, a, b) }
+    }
+
+    fn dot_q8(&self, a: &[f32], q: &[i8], scale: f32) -> f32 {
+        // SAFETY: as above; cvt_q8x4_sse2's 4-byte unaligned read stays
+        // inside the slice because every call site has >= 4 elements
+        // remaining.
+        unsafe { dot_q8_sse2(a, q, scale) }
+    }
+
+    fn gemm_row_q8(&self, c: &mut [f32], a: &[f32], q: &[i8], scales: &[f32]) {
+        // SAFETY: as above.
+        unsafe { gemm_row_q8_sse2(c, a, q, scales) }
+    }
+
+    fn dequant_row(&self, out: &mut [f32], q: &[i8], scale: f32) {
+        // SAFETY: as above.
+        unsafe { dequant_row_sse2(out, q, scale) }
     }
 
     fn outer(&self, out: &mut [f32], a: &[f32], b: &[f32]) {
@@ -538,6 +669,112 @@ unsafe fn gemm_row_avx2(c: &mut [f32], a: &[f32], b: &[f32]) {
     }
 }
 
+#[target_feature(enable = "avx2")]
+unsafe fn cvt_q8x8_avx2(p: *const i8) -> __m256 {
+    // `_mm_loadl_epi64` reads exactly 8 bytes; `cvtepi8_epi32`
+    // sign-extends the low 8 — both exact, so parity with the scalar
+    // backend's `q as f32` holds bit for bit.
+    _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i)))
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_q8_avx2(a: &[f32], q: &[i8], scale: f32) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    let (ap, qp) = (a.as_ptr(), q.as_ptr());
+    let vs = _mm256_set1_ps(scale);
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let i = c * LANES;
+        let d = _mm256_mul_ps(cvt_q8x8_avx2(qp.add(i)), vs);
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_loadu_ps(ap.add(i)), d));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for i in chunks * LANES..n {
+        lanes[i % LANES] += a[i] * (q[i] as f32 * scale);
+    }
+    lane_tree(&lanes)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_row_q8_avx2(c: &mut [f32], a: &[f32], q: &[i8], scales: &[f32]) {
+    let n = c.len();
+    debug_assert_eq!(q.len(), a.len() * n);
+    debug_assert_eq!(scales.len(), a.len());
+    let (cp, qp) = (c.as_mut_ptr(), q.as_ptr());
+    let mut j = 0;
+    // Same tiling as gemm_row_avx2; per-row weight `w = a·scale` is one
+    // scalar rounding, identical to the spec.
+    while j + 32 <= n {
+        let mut acc0 = _mm256_loadu_ps(cp.add(j));
+        let mut acc1 = _mm256_loadu_ps(cp.add(j + 8));
+        let mut acc2 = _mm256_loadu_ps(cp.add(j + 16));
+        let mut acc3 = _mm256_loadu_ps(cp.add(j + 24));
+        for (kk, &av) in a.iter().enumerate() {
+            let w = av * scales[kk];
+            if w == 0.0 {
+                continue;
+            }
+            let vw = _mm256_set1_ps(w);
+            let base = qp.add(kk * n + j);
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(cvt_q8x8_avx2(base), vw));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(cvt_q8x8_avx2(base.add(8)), vw));
+            acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(cvt_q8x8_avx2(base.add(16)), vw));
+            acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(cvt_q8x8_avx2(base.add(24)), vw));
+        }
+        _mm256_storeu_ps(cp.add(j), acc0);
+        _mm256_storeu_ps(cp.add(j + 8), acc1);
+        _mm256_storeu_ps(cp.add(j + 16), acc2);
+        _mm256_storeu_ps(cp.add(j + 24), acc3);
+        j += 32;
+    }
+    while j + 8 <= n {
+        let mut acc = _mm256_loadu_ps(cp.add(j));
+        for (kk, &av) in a.iter().enumerate() {
+            let w = av * scales[kk];
+            if w == 0.0 {
+                continue;
+            }
+            acc = _mm256_add_ps(
+                acc,
+                _mm256_mul_ps(cvt_q8x8_avx2(qp.add(kk * n + j)), _mm256_set1_ps(w)),
+            );
+        }
+        _mm256_storeu_ps(cp.add(j), acc);
+        j += 8;
+    }
+    for jj in j..n {
+        let mut s = c[jj];
+        for (kk, &av) in a.iter().enumerate() {
+            let w = av * scales[kk];
+            if w == 0.0 {
+                continue;
+            }
+            s += q[kk * n + jj] as f32 * w;
+        }
+        c[jj] = s;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_row_avx2(out: &mut [f32], q: &[i8], scale: f32) {
+    debug_assert_eq!(out.len(), q.len());
+    let n = out.len();
+    let vs = _mm256_set1_ps(scale);
+    let (op, qp) = (out.as_mut_ptr(), q.as_ptr());
+    let mut i = 0;
+    while i + 8 <= n {
+        _mm256_storeu_ps(op.add(i), _mm256_mul_ps(cvt_q8x8_avx2(qp.add(i)), vs));
+        i += 8;
+    }
+    while i < n {
+        out[i] = q[i] as f32 * scale;
+        i += 1;
+    }
+}
+
 impl MicroKernel for Avx2 {
     fn name(&self) -> &'static str {
         "avx2"
@@ -590,6 +827,18 @@ impl MicroKernel for Avx2 {
 
     fn gemm_row(&self, c: &mut [f32], a: &[f32], b: &[f32]) {
         unsafe { gemm_row_avx2(c, a, b) }
+    }
+
+    fn dot_q8(&self, a: &[f32], q: &[i8], scale: f32) -> f32 {
+        unsafe { dot_q8_avx2(a, q, scale) }
+    }
+
+    fn gemm_row_q8(&self, c: &mut [f32], a: &[f32], q: &[i8], scales: &[f32]) {
+        unsafe { gemm_row_q8_avx2(c, a, q, scales) }
+    }
+
+    fn dequant_row(&self, out: &mut [f32], q: &[i8], scale: f32) {
+        unsafe { dequant_row_avx2(out, q, scale) }
     }
 
     fn outer(&self, out: &mut [f32], a: &[f32], b: &[f32]) {
@@ -645,6 +894,42 @@ mod tests {
                 kern.gemm_row(&mut c1, &coeff, &packed);
                 Scalar.gemm_row(&mut c2, &coeff, &packed);
                 assert_eq!(c1, c2, "gemm_row n={n} ({})", kern.name());
+            }
+        }
+    }
+
+    /// The int8 primitives, scalar vs every SIMD backend, bit for bit —
+    /// including the -128 code the quantizer never emits.
+    #[test]
+    fn q8_primitives_match_scalar_bitwise() {
+        let mut rng = Pcg::seeded(92);
+        let simd_kinds: Vec<&dyn MicroKernel> = match best_available() {
+            Backend::Avx2 => vec![&Sse2, &Avx2],
+            Backend::Sse2 => vec![&Sse2],
+            Backend::Scalar => vec![],
+        };
+        for n in [1usize, 3, 4, 7, 8, 9, 13, 16, 17, 31, 32, 33, 64, 65] {
+            let a: Vec<f32> = rng.gaussians(n);
+            let q: Vec<i8> = (0..n).map(|i| ((i * 71 + 5) % 256) as u8 as i8).collect();
+            let k = 5usize;
+            let coeff: Vec<f32> = rng.gaussians(k);
+            let scales = [0.5f32, 0.031_25, 0.0, 1.0, 0.007_8];
+            let qmat: Vec<i8> = (0..k * n).map(|i| ((i * 113 + 9) % 256) as u8 as i8).collect();
+            for kern in &simd_kinds {
+                assert_eq!(
+                    kern.dot_q8(&a, &q, 0.062_5).to_bits(),
+                    Scalar.dot_q8(&a, &q, 0.062_5).to_bits(),
+                    "dot_q8 n={n} ({})",
+                    kern.name()
+                );
+                let (mut c1, mut c2) = (vec![0.1f32; n], vec![0.1f32; n]);
+                kern.gemm_row_q8(&mut c1, &coeff, &qmat, &scales);
+                Scalar.gemm_row_q8(&mut c2, &coeff, &qmat, &scales);
+                assert_eq!(c1, c2, "gemm_row_q8 n={n} ({})", kern.name());
+                let (mut d1, mut d2) = (vec![0.0f32; n], vec![0.0f32; n]);
+                kern.dequant_row(&mut d1, &q, 0.25);
+                Scalar.dequant_row(&mut d2, &q, 0.25);
+                assert_eq!(d1, d2, "dequant_row n={n} ({})", kern.name());
             }
         }
     }

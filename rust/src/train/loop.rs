@@ -299,6 +299,9 @@ impl<'a> Trainer<'a> {
             let info = self.opt.step(self.model.params_mut(), &grads);
             let opt_secs = t_opt.elapsed().as_secs_f64();
             crate::obs::phase::add(crate::obs::Phase::TrainOptim, (opt_secs * 1e9) as u64);
+            // Weights moved: rebuild the int8 decode twins (no-op unless
+            // PSF_QUANT=q8) so mid-training eval never decodes stale scales.
+            self.model.requantize();
             tokens_seen += batch.iter().map(|e| e.mask.len() as u64).sum::<u64>();
             steps_run += 1;
             if initial_loss.is_nan() {

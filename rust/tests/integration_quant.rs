@@ -1,0 +1,270 @@
+//! End-to-end tests of the `PSF_QUANT` storage tiers: cached-session
+//! resume through the frozen prompt-prefix cache (bitwise under `off`,
+//! bounded drift under `f16`), int8 weight gating, and the arena's
+//! generation-tag aliasing guarantee.
+//!
+//! These tests flip the process-global quant mode (`quant::force_mode`),
+//! which is why they live in their own integration binary instead of the
+//! lib unit tests: this process runs nothing else.  Tests inside the
+//! binary still run on parallel threads, so every test serializes on
+//! [`mode_lock`] and restores env-driven selection on drop.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use polysketchformer::attn::Mechanism;
+use polysketchformer::infer::{DecodeSession, GenRequest, LmConfig, NativeLm, SamplePolicy};
+use polysketchformer::mem::quant::{self, QuantMode};
+use polysketchformer::mem::{FrozenRow, FrozenState, StateArena};
+use polysketchformer::serve::cache::{CacheKey, PromptCache};
+use polysketchformer::util::rng::Pcg;
+
+/// Serialize quant-mode flips across this binary's test threads; the
+/// guard drops the mode back to env-driven selection afterwards.
+struct ModeGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for ModeGuard {
+    fn drop(&mut self) {
+        quant::reset_mode();
+    }
+}
+
+fn mode_lock(mode: QuantMode) -> ModeGuard {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let guard = LOCK
+        .get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner());
+    quant::force_mode(mode);
+    ModeGuard(guard)
+}
+
+fn all_mechanisms() -> Vec<Mechanism> {
+    vec![
+        Mechanism::Softmax,
+        Mechanism::Flash { block: 8 },
+        Mechanism::Poly { p: 4 },
+        Mechanism::Polysketch { r: 4, p: 4, block: 8, local: false },
+        Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
+        Mechanism::Performer { m: 16, block: 8 },
+    ]
+}
+
+fn model(mech: Mechanism) -> NativeLm {
+    let cfg = LmConfig { vocab: 64, d_model: 32, layers: 2, heads: 2, ff_mult: 2, seed: 7 };
+    NativeLm::new(cfg, mech)
+}
+
+/// A prompt long enough to cross block boundaries (blocks of 8) so the
+/// linear mechanisms carry both absorbed prefix moments and a ragged
+/// in-progress tail into the freeze.
+fn prompt() -> Vec<u32> {
+    std::iter::once(0u32).chain((0..42u32).map(|i| 1 + (i * 13) % 60)).collect()
+}
+
+fn req(prompt: Vec<u32>, max_new: usize, seed: u64) -> GenRequest {
+    GenRequest {
+        prompt,
+        max_new_tokens: max_new,
+        policy: SamplePolicy::Temperature(0.8),
+        seed,
+    }
+}
+
+/// Resume a request through the prompt-prefix cache: prefill once with a
+/// zero-token request, freeze into the cache, hit it, thaw, and decode.
+fn resume_via_cache(m: &NativeLm, cache: &PromptCache, r: GenRequest) -> DecodeSession {
+    let key = CacheKey { mech: m.mech.label(), prompt: r.prompt.clone() };
+    let prefilled =
+        DecodeSession::new(m, 0, GenRequest { max_new_tokens: 0, ..r.clone() });
+    cache.insert(key.clone(), cache.freeze(&prefilled));
+    let snap = cache.get(&key).expect("entry just inserted");
+    let (states, logits) = snap.thaw(m);
+    let mut session = DecodeSession::from_prefix(1, r, states, logits);
+    session.run_to_completion(m);
+    session
+}
+
+#[test]
+fn off_mode_cached_resume_is_bitwise_for_every_mechanism() {
+    let _mode = mode_lock(QuantMode::Off);
+    for mech in all_mechanisms() {
+        let m = model(mech.clone());
+        let cache = PromptCache::new(32 << 20);
+        let mut direct = DecodeSession::new(&m, 0, req(prompt(), 10, 99));
+        direct.run_to_completion(&m);
+        let cached = resume_via_cache(&m, &cache, req(prompt(), 10, 99));
+        assert_eq!(
+            cached.generated(),
+            direct.generated(),
+            "{}: off-mode cached resume diverged",
+            mech.label()
+        );
+        // Down to the final logits, not just the sampled tokens.
+        assert_eq!(
+            cached.last_logits(),
+            direct.last_logits(),
+            "{}: off-mode final logits diverged",
+            mech.label()
+        );
+    }
+}
+
+#[test]
+fn f16_tier_resume_is_deterministic_and_tracks_f32() {
+    let _mode = mode_lock(QuantMode::F16);
+    for mech in all_mechanisms() {
+        let m = model(mech.clone());
+
+        // Oracle: freeze the same prefilled session by hand through the
+        // spec'd f16 freeze/thaw (no cache involved) and decode.
+        let prefilled = DecodeSession::new(&m, 0, req(prompt(), 0, 0));
+        let arena = StateArena::new();
+        let frozen: Vec<Vec<FrozenState>> = prefilled
+            .states()
+            .iter()
+            .map(|l| {
+                l.heads.iter().map(|h| FrozenState::freeze(h, QuantMode::F16, &arena)).collect()
+            })
+            .collect();
+        let logits_row = FrozenRow::freeze(prefilled.last_logits(), QuantMode::F16, &arena);
+        let states = prefilled
+            .states()
+            .iter()
+            .enumerate()
+            .map(|(li, _)| polysketchformer::infer::LayerState {
+                heads: frozen[li]
+                    .iter()
+                    .zip(&m.kernels()[li])
+                    .map(|(f, k)| f.thaw(k))
+                    .collect(),
+            })
+            .collect();
+        let thawed_logits = logits_row.thaw();
+        // f16 narrowing of the logits row stays within half-ulp bounds.
+        for (x, y) in thawed_logits.iter().zip(prefilled.last_logits()) {
+            assert!(
+                (x - y).abs() <= 1e-2 * (1.0 + y.abs()),
+                "{}: f16 logits drift {x} vs {y}",
+                mech.label()
+            );
+        }
+        let mut oracle = DecodeSession::from_prefix(2, req(prompt(), 10, 99), states, thawed_logits);
+        oracle.run_to_completion(&m);
+
+        // Serving path: same request resumed through the cache's frozen
+        // tier must match the hand-built oracle token for token (the
+        // freeze is deterministic, so there is exactly one right answer).
+        let cache = PromptCache::new(32 << 20);
+        let cached = resume_via_cache(&m, &cache, req(prompt(), 10, 99));
+        assert_eq!(
+            cached.generated(),
+            oracle.generated(),
+            "{}: f16 cached resume diverged from the freeze/thaw oracle",
+            mech.label()
+        );
+        assert_eq!(cached.last_logits(), oracle.last_logits(), "{}", mech.label());
+    }
+}
+
+#[test]
+fn f16_tier_compacts_subblock_linear_prefixes_by_3x() {
+    // The admission-pressure payoff the memory sweep gates on: a linear
+    // mechanism's sub-block prefix (Z still elided, tail stored as raw+v
+    // halves) must freeze at least 3x smaller than the exact image.
+    let mech = Mechanism::Polysketch { r: 4, p: 4, block: 32, local: true };
+    let short: Vec<u32> = std::iter::once(0u32).chain((0..26u32).map(|i| 1 + i)).collect();
+    let f32_bytes;
+    let f16_bytes;
+    {
+        let _mode = mode_lock(QuantMode::Off);
+        let m = model(mech.clone());
+        let cache = PromptCache::new(32 << 20);
+        f32_bytes = cache.freeze(&DecodeSession::new(&m, 0, req(short.clone(), 0, 0))).bytes();
+    }
+    {
+        let _mode = mode_lock(QuantMode::F16);
+        let m = model(mech);
+        let cache = PromptCache::new(32 << 20);
+        let snap = cache.freeze(&DecodeSession::new(&m, 0, req(short, 0, 0)));
+        assert!(snap.is_f16());
+        f16_bytes = snap.bytes();
+    }
+    let ratio = f32_bytes as f64 / f16_bytes as f64;
+    assert!(ratio >= 3.0, "sub-block compact tier ratio {ratio:.2} < 3x");
+}
+
+#[test]
+fn q8_weights_gate_on_mode_and_requantize() {
+    // Baseline logits under `off`.
+    let baseline = {
+        let _mode = mode_lock(QuantMode::Off);
+        let m = model(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true });
+        let mut s = DecodeSession::new(&m, 0, req(prompt(), 3, 5));
+        s.run_to_completion(&m);
+        s.last_logits().to_vec()
+    };
+
+    let _mode = mode_lock(QuantMode::Q8);
+    assert_eq!(quant::mode().label(), "q8");
+    assert!(quant::mode().q8_weights());
+    assert!(quant::mode().f16_cold_tier(), "q8 implies the f16 cold tier");
+    let mut m = model(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true });
+    // The constructor already quantized under the active mode; calling
+    // again must be idempotent (the training loop calls it every step).
+    m.requantize();
+    let mut s = DecodeSession::new(&m, 0, req(prompt(), 3, 5));
+    s.run_to_completion(&m);
+    let q8_logits = s.last_logits().to_vec();
+
+    // int8 decode tracks f32 closely but not bitwise.
+    let (mut dist2, mut norm2) = (0.0f64, 0.0f64);
+    for (x, y) in q8_logits.iter().zip(&baseline) {
+        dist2 += ((x - y) as f64).powi(2);
+        norm2 += (*y as f64).powi(2);
+    }
+    let (dist, norm) = (dist2.sqrt(), norm2.sqrt());
+    assert!(dist <= 0.15 * norm + 0.05, "q8 drifted too far: {dist:.4} vs norm {norm:.4}");
+
+    // Dropping back to `off` and requantizing clears the int8 twins:
+    // decode returns to the bitwise f32 path.
+    quant::force_mode(QuantMode::Off);
+    m.requantize();
+    let mut s = DecodeSession::new(&m, 0, req(prompt(), 3, 5));
+    s.run_to_completion(&m);
+    assert_eq!(s.last_logits(), &baseline[..], "off-mode decode must be bitwise again");
+}
+
+#[test]
+fn generation_tags_kill_stale_handles_through_reuse() {
+    // Pure arena level: a handle dies the moment its buffer drops, and
+    // slot reuse can never resurrect it.
+    let arena = StateArena::new();
+    let a = arena.alloc_copy(&[1.0, 2.0, 3.0, 4.0]);
+    let stale = a.handle();
+    assert!(arena.is_live(stale));
+    drop(a);
+    assert!(!arena.is_live(stale), "dropped buffer left a live handle");
+    let b = arena.alloc_zeroed(4);
+    assert!(!arena.is_live(stale), "slot reuse resurrected a stale handle");
+    assert!(arena.is_live(b.handle()));
+    if b.handle().slot == stale.slot {
+        assert_ne!(b.handle().gen, stale.gen, "reuse must bump the generation");
+    }
+    assert!(arena.stats().gen_bumps >= 1);
+
+    // Frozen-state level: eviction (drop) of a cache entry invalidates
+    // handles captured while it was resident.
+    let mech = Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true };
+    let kernel = mech.build_kernel(8, &mut Pcg::seeded(3));
+    let mut rng = Pcg::seeded(4);
+    let mut st = kernel.new_state();
+    for _ in 0..11 {
+        let (q, k, v) = (rng.gaussians(8), rng.gaussians(8), rng.gaussians(8));
+        kernel.step(&q, &k, &v, &mut st);
+    }
+    let frozen = FrozenState::freeze(&st, QuantMode::Off, &arena);
+    let h = frozen.handle();
+    assert!(arena.is_live(h));
+    drop(frozen);
+    assert!(!arena.is_live(h), "evicted frozen state left a live handle");
+}

@@ -12,6 +12,7 @@ use polysketchformer::coordinator::gen_cloze_questions;
 use polysketchformer::data::batcher::{split_stream, Batcher};
 use polysketchformer::data::bpe::Bpe;
 use polysketchformer::infer::{GenRequest, SamplePolicy};
+use polysketchformer::mem::{quant, QuantMatrix};
 use polysketchformer::prop::{check, close, ensure};
 use polysketchformer::shard::proto::{
     decode_generate, encode_generate, Frame, FrameKind, ProtoError, MAX_PAYLOAD, VERSION,
@@ -489,6 +490,173 @@ fn prop_micro_backends_bitwise_identical_under_edge_cases() {
                 scalar_bits.iter().zip(&simd_bits).position(|(x, y)| x != y),
             ),
         )
+    });
+}
+
+// ------------------------------------------------------ quantized storage
+
+/// Brute-force f16 nearest-even oracle: scan every non-NaN code and keep
+/// the closest decoded value (f64 distances are exact for f32 inputs and
+/// f16 candidates), breaking exact ties toward the even significand — an
+/// independent transcription of IEEE 754 roundTiesToEven that shares no
+/// bit tricks with `quant::f16_encode`.
+fn f16_oracle(x: f32) -> u16 {
+    if x == 0.0 {
+        return if x.is_sign_negative() { 0x8000 } else { 0x0000 };
+    }
+    let mut best_code = 0u16;
+    let mut best_dist = f64::INFINITY;
+    for code in 0..=u16::MAX {
+        let v = quant::f16_decode(code);
+        if v.is_nan() {
+            continue;
+        }
+        let dist = if x.is_infinite() {
+            if v == x {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            // The infinity codes stand in for ±2^16, the next value the
+            // exponent ladder would produce — that is exactly how RTNE
+            // overflow behaves (65520 ties to even = inf).
+            let vv = if v.is_infinite() { (v as f64).signum() * 65536.0 } else { v as f64 };
+            (vv - x as f64).abs()
+        };
+        if dist < best_dist || (dist == best_dist && code & 1 == 0 && best_code & 1 == 1) {
+            best_dist = dist;
+            best_code = code;
+        }
+    }
+    best_code
+}
+
+#[test]
+fn prop_f16_encode_is_round_to_nearest_even() {
+    check("f16 RTNE vs brute-force oracle", 10, |rng, _size| {
+        // Magnitudes spanning subnormal, normal, and near-overflow f16.
+        for _ in 0..8 {
+            let scale = [1e-7f32, 1e-4, 1.0, 100.0, 3.0e4][rng.usize_below(5)];
+            let x = rng.gaussian() * scale;
+            let got = quant::f16_encode(x);
+            let want = f16_oracle(x);
+            ensure(got == want, format!("encode({x:e}) = {got:#06x}, oracle {want:#06x}"))?;
+        }
+        // Exact halfway points between adjacent finite f16 values (the
+        // midpoint needs one extra significand bit, so it is exact in
+        // f32) must round to the even code.
+        for _ in 0..4 {
+            let c = rng.usize_below(0x7bff) as u16;
+            let v0 = quant::f16_decode(c) as f64;
+            let v1 = quant::f16_decode(c + 1) as f64;
+            let mid = ((v0 + v1) * 0.5) as f32;
+            let got = quant::f16_encode(mid);
+            ensure(
+                got == f16_oracle(mid),
+                format!("tie at {mid:e}: {got:#06x} vs oracle"),
+            )?;
+            ensure(got & 1 == 0, format!("tie at {mid:e} landed on odd code {got:#06x}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn f16_specials_and_code_roundtrip_are_exact() {
+    assert!(quant::f16_decode(quant::f16_encode(f32::NAN)).is_nan());
+    assert_eq!(quant::f16_decode(quant::f16_encode(f32::INFINITY)), f32::INFINITY);
+    assert_eq!(quant::f16_decode(quant::f16_encode(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    assert_eq!(quant::f16_encode(1.0e6), 0x7c00, "overflow rounds to +inf");
+    assert_eq!(quant::f16_encode(-1.0e6), 0xfc00, "overflow rounds to -inf");
+    assert_eq!(quant::f16_encode(0.0), 0x0000);
+    assert_eq!(quant::f16_encode(-0.0), 0x8000, "zero sign is preserved");
+    // The smallest f16 subnormal (2^-24) decodes exactly and encodes back.
+    let tiny = f32::from_bits(0x3380_0000);
+    assert_eq!(quant::f16_decode(0x0001), tiny);
+    assert_eq!(quant::f16_encode(tiny), 0x0001);
+    // f16 is a subset of f32, so decode -> encode is the identity on
+    // every non-NaN code, and NaN codes stay NaN.
+    for code in 0..=u16::MAX {
+        let v = quant::f16_decode(code);
+        if v.is_nan() {
+            assert!(quant::f16_decode(quant::f16_encode(v)).is_nan());
+        } else {
+            assert_eq!(quant::f16_encode(v), code, "code {code:#06x} decoded to {v:e}");
+        }
+    }
+}
+
+#[test]
+fn prop_int8_rows_reconstruct_within_half_scale() {
+    // Per-row absmax quantization: every reconstructed entry sits within
+    // half a quantization step of the original, and all-zero rows get a
+    // zero scale (the downstream zero-skip path).
+    check("int8 per-row error bound", 30, |rng, size| {
+        let cols = 1 + size % 40;
+        let rows = 1 + rng.usize_below(5);
+        let mut data: Vec<f32> = (0..rows * cols).map(|_| rng.gaussian() * 3.0).collect();
+        if rows > 1 {
+            data[(rows - 1) * cols..].iter_mut().for_each(|x| *x = 0.0);
+        }
+        let q = QuantMatrix::from_rows(&data, rows, cols);
+        for r in 0..rows {
+            let row = &data[r * cols..(r + 1) * cols];
+            let scale = q.scales[r];
+            let amax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            if amax == 0.0 {
+                ensure(scale == 0.0, "all-zero row must have zero scale")?;
+            }
+            let bound = scale as f64 * 0.5 * (1.0 + 1e-5) + 1e-12;
+            for (c, &x) in row.iter().enumerate() {
+                let back = q.qrow(r)[c] as f32 * scale;
+                ensure(
+                    ((back as f64) - (x as f64)).abs() <= bound,
+                    format!("row {r} col {c}: {x} -> {back} exceeds scale/2 = {bound}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_q8_micro_primitives_bitwise_identical_across_backends() {
+    // Same contract as the f32 battery above, for the int8 primitives:
+    // every ragged length through the 32/33 SIMD-tile boundary, scalar
+    // vs best backend, identical output bits.  Int-to-float conversion
+    // is exact in every backend, so parity is achievable and required.
+    let best = micro::best_available();
+    check("q8 micro scalar/simd parity", 20, |rng, _size| {
+        for n in 1..=33usize {
+            let a: Vec<f32> = rng.gaussians(n);
+            let q: Vec<i8> = (0..n).map(|_| rng.usize_below(256) as u8 as i8).collect();
+            let k = 3usize;
+            let qmat: Vec<i8> = (0..k * n).map(|_| rng.usize_below(256) as u8 as i8).collect();
+            let coeff: Vec<f32> = rng.gaussians(k);
+            let scales = [0.031_25f32, 0.0, 1.5]; // zero scale: skip path
+            let battery = |bits: &mut Vec<u32>| {
+                bits.push(micro::dot_q8(&a, &q, 0.062_5).to_bits());
+                let mut c = vec![0.0f32; n];
+                micro::gemm_row_q8(&mut c, &coeff, &qmat, &scales);
+                bits.extend(c.iter().map(|v| v.to_bits()));
+                let mut d = vec![0.0f32; n];
+                micro::dequant_row(&mut d, &q, 0.25);
+                bits.extend(d.iter().map(|v| v.to_bits()));
+            };
+            micro::force_backend(micro::Backend::Scalar)?;
+            let mut scalar_bits = Vec::new();
+            battery(&mut scalar_bits);
+            micro::force_backend(best)?;
+            let mut simd_bits = Vec::new();
+            battery(&mut simd_bits);
+            micro::reset_backend();
+            ensure(
+                scalar_bits == simd_bits,
+                format!("n={n}: scalar vs {} diverged", best.label()),
+            )?;
+        }
+        Ok(())
     });
 }
 
