@@ -391,6 +391,74 @@ fn main() -> anyhow::Result<()> {
         println!("  advisory: below the 50% floor (PSF_OBS_OVERHEAD_CHECK=1 enforces)");
     }
 
+    // ---- sentinel-overhead A/B ----------------------------------------
+    //
+    // Same A/B for the numeric-health sentinels: sampled absmax scans at
+    // kernel boundaries must not tax serving.  tests/sentinel.rs pins
+    // that outputs are byte-identical on/off; this pins the wall clock,
+    // under the same PSF_OBS_OVERHEAD_CHECK=1 gate.
+    let sentinel_load = |on: bool| -> anyhow::Result<f64> {
+        polysketchformer::obs::set_sentinels(on);
+        polysketchformer::obs::sentinel::reset();
+        let lm_cfg = LmConfig { d_model: 64, layers: 2, heads: 2, ..LmConfig::default() };
+        let gateway = Arc::new(Gateway::new(
+            NativeLm::new(lm_cfg, Mechanism::parse("psk4_r16_b32_local").unwrap()),
+            GatewayConfig {
+                workers: 2,
+                queue_cap: 64,
+                max_resident: 4,
+                cache_bytes: 64 << 20,
+                ..GatewayConfig::default()
+            },
+        )?);
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..2usize)
+            .map(|ci| {
+                let gw = Arc::clone(&gateway);
+                std::thread::spawn(move || {
+                    let mut tokens = 0usize;
+                    for j in 0..overhead_reqs {
+                        let req = GenRequest {
+                            prompt: prompt(60_000 + (ci * 100 + j) as u64, prompt_len),
+                            max_new_tokens: max_new,
+                            policy: SamplePolicy::Greedy,
+                            seed: (ci * 23 + j) as u64,
+                        };
+                        if let Ok(rx) = gw.submit(req) {
+                            let (toks, _) = collect_stream(rx);
+                            tokens += toks.len();
+                        }
+                    }
+                    tokens
+                })
+            })
+            .collect();
+        let total: usize =
+            handles.into_iter().map(|h| h.join().expect("sentinel client panicked")).sum();
+        let wall = t0.elapsed().as_secs_f64();
+        gateway.finish()?;
+        polysketchformer::obs::set_sentinels(false);
+        polysketchformer::obs::sentinel::reset();
+        Ok(if wall > 0.0 { total as f64 / wall } else { 0.0 })
+    };
+    let sent_off_tok_s = sentinel_load(false)?;
+    let sent_on_tok_s = sentinel_load(true)?;
+    let sent_retained = if sent_off_tok_s > 0.0 { sent_on_tok_s / sent_off_tok_s } else { 1.0 };
+    println!(
+        "sentinel overhead: off {sent_off_tok_s:.1} tok/s -> on {sent_on_tok_s:.1} tok/s \
+         ({:.0}% retained)",
+        sent_retained * 100.0
+    );
+    if std::env::var("PSF_OBS_OVERHEAD_CHECK").ok().as_deref() == Some("1") {
+        anyhow::ensure!(
+            sent_on_tok_s >= 0.5 * sent_off_tok_s,
+            "sentinel-on throughput {sent_on_tok_s:.1} tok/s fell below half of sentinel-off \
+             {sent_off_tok_s:.1} tok/s — the sampled scans are too hot"
+        );
+    } else if sent_retained < 0.5 {
+        println!("  advisory: below the 50% floor (PSF_OBS_OVERHEAD_CHECK=1 enforces)");
+    }
+
     // ---- memory sweep: frozen sessions per GB across storage tiers ----
     //
     // Freezes a prefilled prompt-prefix under the exact (f32) and compact
@@ -586,6 +654,11 @@ fn main() -> anyhow::Result<()> {
         json,
         "  \"obs_overhead\": {{\"off_tok_s\": {off_tok_s:.3}, \"on_tok_s\": {on_tok_s:.3}, \
          \"retained\": {retained:.4}}},"
+    );
+    let _ = writeln!(
+        json,
+        "  \"sentinel_overhead\": {{\"off_tok_s\": {sent_off_tok_s:.3}, \
+         \"on_tok_s\": {sent_on_tok_s:.3}, \"retained\": {sent_retained:.4}}},"
     );
     json.push_str("  \"mem_sweep\": [\n");
     for (i, r) in mem_records.iter().enumerate() {

@@ -170,6 +170,9 @@ impl LinearEngine {
                     vext[..h].copy_from_slice(v.row(base + bj));
                     micro::outer_accum(&mut z, &phi, &vext);
                 }
+                // Z grows monotonically across blocks — the first place a
+                // degree-p overflow becomes visible.  Write-only scan.
+                obs::sentinel::scan(obs::sentinel::Site::ZFold, &z);
             }
             obs::phase::add_since(Phase::LinFold, t_phase);
         }
@@ -277,6 +280,8 @@ impl CausalKernel for LinearEngine {
             None => (None, None),
         };
         obs::phase::add_since(Phase::LinMap, t_map);
+        obs::sentinel::scan(obs::sentinel::Site::FeatureMap, mq.data());
+        obs::sentinel::scan(obs::sentinel::Site::FeatureMap, mk.data());
         let mut st = state.map(|s| self.linear_state(s));
         self.forward_mapped(&mq, &mk, lq.as_ref(), lk.as_ref(), v, st.as_deref_mut(), None, out);
         if let Some(st) = st {

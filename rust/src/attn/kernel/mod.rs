@@ -34,6 +34,7 @@ use std::sync::Arc;
 use crate::attn::performer::PerformerFeatures;
 use crate::attn::sketch::PolySketch;
 use crate::exec::pool;
+use crate::obs;
 use crate::tensor::{Tensor, TensorView, TensorViewMut};
 use crate::util::rng::Pcg;
 
@@ -283,6 +284,7 @@ pub fn prefill_heads(
         None => ov.into_iter().map(|o| (o, None)).collect(),
     };
     pool::par_map_mut(&mut units, 1, |hi, (o, st)| {
+        obs::sentinel::set_head(hi); // fault attribution only; no compute effect
         kernels[hi].prefill_into(&qv[hi], &kv[hi], &vv[hi], st.as_deref_mut(), o);
     });
 }
@@ -334,6 +336,7 @@ pub fn prefill_head_range(
             .collect(),
     };
     pool::par_map_mut(&mut units, 1, |_, (hi, o, st)| {
+        obs::sentinel::set_head(*hi); // fault attribution only; no compute effect
         kernels[*hi].prefill_into(&qv[*hi], &kv[*hi], &vv[*hi], st.as_deref_mut(), o);
     });
 }

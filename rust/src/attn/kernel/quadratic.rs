@@ -82,6 +82,11 @@ impl CausalKernel for QuadraticEngine {
             }
         }
         let t_capture = obs::phase::add_since(Phase::QuadAttn, t_attn);
+        // Write-only numeric-health scan of the attention output block.
+        obs::sentinel::scan_rows(
+            obs::sentinel::Site::AttnOut,
+            (0..n).map(|i| out.row(i)),
+        );
         if let Some(st) = state {
             let st = self.kv_state(st);
             assert_eq!(st.len, 0, "prefill requires a fresh state");

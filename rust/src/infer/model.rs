@@ -35,6 +35,7 @@ use crate::attn::kernel::{self, CausalKernel, KernelState};
 use crate::attn::Mechanism;
 use crate::checkpoint::Checkpoint;
 use crate::mem::quant::{self, QuantMatrix};
+use crate::obs;
 use crate::obs::phase;
 use crate::tensor::{micro, layernorm_rows, ln_row, Tensor};
 use crate::util::rng::Pcg;
@@ -250,6 +251,11 @@ impl NativeLm {
         // After all RNG consumption: requantize reads no randomness, so
         // the fixture contract above is unaffected by PSF_QUANT.
         lm.requantize();
+        // Telemetry attribution only — which mechanism faults and
+        // incident dumps should name.
+        let label = lm.mech.label();
+        obs::sentinel::set_mechanism(&label);
+        obs::incident::set_mechanism(&label);
         lm
     }
 
@@ -355,6 +361,7 @@ impl NativeLm {
             add_sinusoidal(row, i);
         }
         for (li, layer) in self.params.layers.iter().enumerate() {
+            obs::sentinel::set_layer(li);
             let xn = layernorm_rows(&x);
             let mut q = xn.matmul(&layer.wq);
             let mut k = xn.matmul(&layer.wk);
@@ -383,7 +390,9 @@ impl NativeLm {
             let u = xn2.matmul(&layer.ffn_up);
             x = x.add(&g.hadamard(&u).matmul(&layer.ffn_down));
         }
-        layernorm_rows(&x).matmul(&self.params.readout)
+        let logits = layernorm_rows(&x).matmul(&self.params.readout);
+        obs::sentinel::scan(obs::sentinel::Site::Logits, logits.data());
+        logits
     }
 
     /// One decode step: fold `token` (at absolute position `pos`) into the
@@ -392,11 +401,13 @@ impl NativeLm {
         if let Some(qw) = &self.qweights {
             return self.step_q8(qw, token, pos, states);
         }
+        obs::sentinel::set_token(pos);
         let d = self.cfg.d_model;
         let hd = self.head_dim();
         let mut x = self.params.embed.row(token as usize).to_vec();
         add_sinusoidal(&mut x, pos);
         for (li, layer) in self.params.layers.iter().enumerate() {
+            obs::sentinel::set_layer(li);
             let xn = Tensor::from_vec(&[1, d], ln_row(&x));
             let q = xn.matmul(&layer.wq);
             let k = xn.matmul(&layer.wk);
@@ -424,7 +435,9 @@ impl NativeLm {
                 *xi += a;
             }
         }
-        Tensor::from_vec(&[1, d], ln_row(&x)).matmul(&self.params.readout).into_vec()
+        let logits = Tensor::from_vec(&[1, d], ln_row(&x)).matmul(&self.params.readout).into_vec();
+        obs::sentinel::scan(obs::sentinel::Site::Logits, &logits);
+        logits
     }
 
     /// Quantized twin of [`NativeLm::step`]: identical control flow, but
@@ -437,12 +450,14 @@ impl NativeLm {
     /// sharded paths stay f32: q8 targets the decode step, where weight
     /// bandwidth dominates.
     fn step_q8(&self, qw: &QuantWeights, token: u32, pos: usize, states: &mut [LayerState]) -> Vec<f32> {
+        obs::sentinel::set_token(pos);
         let d = self.cfg.d_model;
         let hd = self.head_dim();
         let mut x = vec![0.0f32; d];
         micro::dequant_row(&mut x, qw.embed.qrow(token as usize), qw.embed.scales[token as usize]);
         add_sinusoidal(&mut x, pos);
         for (li, qlayer) in qw.layers.iter().enumerate() {
+            obs::sentinel::set_layer(li);
             let xn = ln_row(&x);
             let q = q8_vecmat(&xn, &qlayer.wq);
             let k = q8_vecmat(&xn, &qlayer.wk);
@@ -473,7 +488,9 @@ impl NativeLm {
                 *xi += a;
             }
         }
-        q8_vecmat(&ln_row(&x), &qw.readout)
+        let logits = q8_vecmat(&ln_row(&x), &qw.readout);
+        obs::sentinel::scan(obs::sentinel::Site::Logits, &logits);
+        logits
     }
 
     // ---------------------------------------- head-sharded (TP) twins
@@ -524,6 +541,7 @@ impl NativeLm {
             add_sinusoidal(row, i);
         }
         for (li, layer) in self.params.layers.iter().enumerate() {
+            obs::sentinel::set_layer(li);
             let xn = layernorm_rows(&x);
             let mut q = xn.matmul(&layer.wq);
             let mut k = xn.matmul(&layer.wk);
@@ -557,7 +575,9 @@ impl NativeLm {
             let u = xn2.matmul(&layer.ffn_up);
             x = x.add(&g.hadamard(&u).matmul(&layer.ffn_down));
         }
-        Ok(layernorm_rows(&x).matmul(&self.params.readout))
+        let logits = layernorm_rows(&x).matmul(&self.params.readout);
+        obs::sentinel::scan(obs::sentinel::Site::Logits, logits.data());
+        Ok(logits)
     }
 
     /// Sharded decode step: like [`NativeLm::step`], but runs only heads
@@ -579,11 +599,13 @@ impl NativeLm {
             range.end,
             self.cfg.heads
         );
+        obs::sentinel::set_token(pos);
         let d = self.cfg.d_model;
         let hd = self.head_dim();
         let mut x = self.params.embed.row(token as usize).to_vec();
         add_sinusoidal(&mut x, pos);
         for (li, layer) in self.params.layers.iter().enumerate() {
+            obs::sentinel::set_layer(li);
             let xn = Tensor::from_vec(&[1, d], ln_row(&x));
             let q = xn.matmul(&layer.wq);
             let k = xn.matmul(&layer.wk);
@@ -617,7 +639,9 @@ impl NativeLm {
                 *xi += a;
             }
         }
-        Ok(Tensor::from_vec(&[1, d], ln_row(&x)).matmul(&self.params.readout).into_vec())
+        let logits = Tensor::from_vec(&[1, d], ln_row(&x)).matmul(&self.params.readout).into_vec();
+        obs::sentinel::scan(obs::sentinel::Site::Logits, &logits);
+        Ok(logits)
     }
 
     // ------------------------------------------------- checkpoint bridge

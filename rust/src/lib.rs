@@ -19,8 +19,10 @@
 //!     `psf serve --runners N`), and the std-only observability layer
 //!     (`obs` — span tracing to Chrome trace-event JSON with
 //!     cross-process trace-id propagation, fixed-bucket latency
-//!     histograms with Prometheus exposition, and per-phase kernel
-//!     profiling; near-zero overhead when off), and the memory
+//!     histograms with Prometheus exposition, per-phase kernel
+//!     profiling, numeric-health sentinels with fault attribution, a
+//!     flight-recorder gauge ring, and `incident.json` crash dumps;
+//!     near-zero overhead when off), and the memory
 //!     subsystem (`mem` — a paged slab arena with generation-tagged
 //!     handles for decode states, plus `PSF_QUANT`-gated f16/int8
 //!     quantized storage for cached states and weights).

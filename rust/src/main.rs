@@ -70,6 +70,7 @@ fn run(argv: &[String]) -> Result<()> {
         "generate" => cmd_generate(rest),
         "serve" => cmd_serve(rest),
         "trace-report" => cmd_trace_report(rest),
+        "incident-report" => cmd_incident_report(rest),
         // Hidden: the worker-process body `psf serve --runners N` spawns.
         // Deliberately absent from `top_usage` — never invoked by hand.
         "runner" => cmd_runner(rest),
@@ -110,6 +111,25 @@ fn cmd_trace_report(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+// ------------------------------------------------------- incident-report
+
+/// Render an `incident.json` written by `--incident`/`PSF_INCIDENT`
+/// (panic, sentinel trip, runner death, or shutdown signal) as a
+/// human-readable postmortem: fault attribution, build config, the
+/// flight-recorder window, and in-flight requests at dump time.
+fn cmd_incident_report(argv: &[String]) -> Result<()> {
+    let spec = Args::new("psf incident-report", "render an incident.json dump")
+        .req("incident", "path to the incident file");
+    let p = parse(spec, argv)?;
+    let path = p.str("incident");
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {path}: {e}"))?;
+    let report = polysketchformer::obs::incident::report(&text)
+        .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    print!("{report}");
+    Ok(())
+}
+
 fn top_usage() -> String {
     "psf — PolySketchFormer coordinator (ICML 2024 reproduction)\n\n\
      subcommands:\n\
@@ -123,7 +143,8 @@ fn top_usage() -> String {
        attn        run one attention micro-artifact\n\
        generate    autoregressive decoding on the native model path\n\
        serve       HTTP serving gateway (concurrent workers + prompt cache)\n\
-       trace-report  summarize a trace.json written by `serve --trace` / PSF_TRACE\n\n\
+       trace-report  summarize a trace.json written by `serve --trace` / PSF_TRACE\n\
+       incident-report  render an incident.json written by `--incident` / PSF_INCIDENT\n\n\
      run `psf <subcommand> --help` for flags."
         .to_string()
 }
@@ -867,6 +888,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("trace", "",
              "write a Chrome trace-event / Perfetto file here on drain \
               (sharded runs merge per-runner traces in; also via PSF_TRACE)")
+        .opt("incident", "",
+             "arm incident dumps: panic / sentinel trip / runner death / \
+              SIGTERM writes this file (also via PSF_INCIDENT)")
         .opt("max-requests", "0", "stop after N completed requests (0 = run forever)")
         .opt("seed", "0", "weight seed");
     let p = parse(spec, argv)?;
@@ -875,6 +899,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let trace_path = non_empty(p.str("trace")).map(PathBuf::from);
     if let Some(tp) = &trace_path {
         polysketchformer::obs::init_tracing(tp);
+    }
+    let incident_path = non_empty(p.str("incident")).map(PathBuf::from);
+    if let Some(ip) = &incident_path {
+        arm_incident(ip);
     }
 
     let model = load_native_model(&p)?;
@@ -902,7 +930,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         };
         let gateway = std::sync::Arc::new(Gateway::new(model, gw_cfg)?);
         spawn_signal_watcher(gateway.stop_handle());
-        polysketchformer::util::signal::on_shutdown(|| flush_serve_trace(Vec::new()));
+        polysketchformer::util::signal::on_shutdown(|| {
+            flush_serve_trace(Vec::new());
+            dump_incident_on_signal();
+        });
         let result = gateway.run_http();
         // The drain path (signal or max-requests) funnels through here;
         // hooks flush the trace exactly once.
@@ -952,9 +983,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         tp: p.flag("tp"),
         heads,
         trace_base: trace_path.clone(),
+        incident_base: incident_path.clone(),
         ..shard::SupervisorConfig::default()
     };
     let sup = shard::Supervisor::start(sup_cfg)?;
+    // The gateway's own incident dump embeds whatever per-runner incident
+    // files exist at dump time.
+    polysketchformer::obs::incident::set_runner_files(sup.runner_incident_paths());
     let shard_cfg = shard::ShardConfig {
         addr: p.str("addr").to_string(),
         default_max_tokens: p.usize("default-max-tokens")?,
@@ -970,12 +1005,33 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         // before `run_http` returns), so merging here sees them on disk.
         let sup = std::sync::Arc::clone(gateway.supervisor());
         polysketchformer::util::signal::on_shutdown(move || {
-            flush_serve_trace(sup.runner_trace_paths())
+            flush_serve_trace(sup.runner_trace_paths());
+            dump_incident_on_signal();
         });
     }
     let result = std::sync::Arc::clone(&gateway).run_http();
     polysketchformer::util::signal::run_shutdown_hooks();
     result
+}
+
+/// Arm the incident machinery for a serve/runner process: configure the
+/// dump path, install the panic hook, and start the flight recorder so a
+/// dump carries a time-series window (same as `PSF_INCIDENT=<path>`).
+fn arm_incident(path: &std::path::Path) {
+    use polysketchformer::obs::{incident, recorder};
+    incident::configure(path);
+    incident::install_panic_hook();
+    recorder::start(recorder::DEFAULT_INTERVAL_MS, recorder::DEFAULT_WINDOW_FRAMES);
+}
+
+/// On the signal drain path, snapshot an incident dump too — a SIGTERM'd
+/// deploy leaves the same postmortem artifact a crash would (first write
+/// wins, so an earlier panic/sentinel dump is never clobbered).
+fn dump_incident_on_signal() {
+    use polysketchformer::obs::incident;
+    if polysketchformer::util::signal::triggered() && incident::configured() {
+        let _ = incident::dump("shutdown signal");
+    }
 }
 
 /// Drain this process's spans to the configured trace file, then fold in
@@ -1024,11 +1080,15 @@ fn cmd_runner(argv: &[String]) -> Result<()> {
         .opt("head-start", "0", "first head of this shard (TP mode)")
         .opt("head-end", "0", "one-past-last head of this shard (0 = full replica)")
         .opt("trace", "", "write this runner's trace-event file here on drain")
+        .opt("incident", "", "write this runner's incident dump here on panic/trip")
         .opt("seed", "0", "weight seed");
     let p = parse(spec, argv)?;
     apply_threads(&p)?;
     if let Some(tp) = non_empty(p.str("trace")) {
         polysketchformer::obs::init_tracing(std::path::Path::new(tp));
+    }
+    if let Some(ip) = non_empty(p.str("incident")) {
+        arm_incident(std::path::Path::new(ip));
     }
 
     let model = load_native_model(&p)?;

@@ -10,6 +10,7 @@ use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::obs::Hist;
 use crate::util::stats::Ema;
@@ -88,6 +89,21 @@ impl Record {
         s.push('}');
         s
     }
+}
+
+/// Escape a Prometheus label *value* (text exposition format: backslash,
+/// double-quote, and newline must be escaped inside `label="..."`).
+pub fn prom_escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 pub fn json_escape(s: &str) -> String {
@@ -339,7 +355,70 @@ impl ServeCounters {
             "Prompt cache lookup duration",
             &mut out,
         );
+        // Build identity + uptime (the text-exposition `_info` idiom:
+        // constant 1, identity in the labels).
+        let _ = writeln!(out, "# TYPE psf_build_info gauge");
+        let _ = writeln!(
+            out,
+            "psf_build_info{{version=\"{}\",simd=\"{}\",quant=\"{}\"}} 1",
+            prom_escape_label(env!("CARGO_PKG_VERSION")),
+            prom_escape_label(crate::tensor::micro::backend_label()),
+            prom_escape_label(crate::mem::quant::mode().label()),
+        );
+        let _ = writeln!(out, "# TYPE psf_uptime_seconds gauge");
+        let _ = writeln!(out, "psf_uptime_seconds {:.3}", crate::obs::uptime_secs());
+        // Span-ring health: per-thread occupancy and cumulative drops.
+        // `dropped_total` never resets (unlike the per-flush counter the
+        // trace file carries), so this stays a valid monotone counter.
+        let rings = crate::obs::span::ring_stats();
+        if !rings.is_empty() {
+            let _ = writeln!(out, "# TYPE psf_span_ring_events gauge");
+            for (tid, occ, _) in &rings {
+                let _ = writeln!(out, "psf_span_ring_events{{tid=\"{tid}\"}} {occ}");
+            }
+            let _ = writeln!(out, "# TYPE psf_span_ring_dropped_total counter");
+            for (tid, _, dropped) in &rings {
+                let _ =
+                    writeln!(out, "psf_span_ring_dropped_total{{tid=\"{tid}\"}} {dropped}");
+            }
+        }
         out
+    }
+
+    /// Register this counter set's gauges with the flight recorder, so
+    /// incident dumps carry a time series of serve state.  Idempotent
+    /// (recorder registration replaces by name).
+    pub fn register_recorder_gauges(self: &Arc<Self>) {
+        use crate::obs::recorder;
+        let c = Arc::clone(self);
+        recorder::register("cache_bytes", move || {
+            c.cache_bytes.load(Ordering::Relaxed) as f64
+        });
+        let c = Arc::clone(self);
+        recorder::register("arena_bytes_committed", move || {
+            c.arena_bytes_committed.load(Ordering::Relaxed) as f64
+        });
+        let c = Arc::clone(self);
+        recorder::register("tokens_generated", move || {
+            c.tokens_generated.load(Ordering::Relaxed) as f64
+        });
+        let c = Arc::clone(self);
+        recorder::register("requests_completed", move || {
+            c.completed.load(Ordering::Relaxed) as f64
+        });
+        let c = Arc::clone(self);
+        recorder::register("cache_hit_rate", move || {
+            let hits = c.cache_hits.load(Ordering::Relaxed) as f64;
+            let misses = c.cache_misses.load(Ordering::Relaxed) as f64;
+            if hits + misses > 0.0 {
+                hits / (hits + misses)
+            } else {
+                0.0
+            }
+        });
+        recorder::register("inflight_requests", || {
+            crate::obs::incident::inflight_count() as f64
+        });
     }
 }
 
@@ -392,6 +471,12 @@ mod tests {
     #[test]
     fn json_escaping() {
         assert_eq!(json_escape("a\"b\\c\nd"), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn prom_label_escaping() {
+        assert_eq!(prom_escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(prom_escape_label("plain"), "plain");
     }
 
     #[test]
@@ -502,6 +587,10 @@ mod tests {
             "psf_cache_lookup_seconds_count 1",
             "psf_token_latency_seconds_count 1",
             "psf_ttft_seconds_bucket{le=\"+Inf\"} 1",
+            "# TYPE psf_build_info gauge",
+            "psf_build_info{version=\"",
+            "# TYPE psf_uptime_seconds gauge",
+            "psf_uptime_seconds ",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }

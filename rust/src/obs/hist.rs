@@ -75,9 +75,14 @@ impl Hist {
     }
 
     /// `q`-th percentile (`0.0..=100.0`) by linear interpolation inside
-    /// the owning bucket; 0.0 on an empty histogram.  Samples beyond the
-    /// last bound report the last bound (the histogram's resolution
-    /// limit — a documented property, not a bug).
+    /// the owning bucket; 0.0 on an empty histogram (any `q`, including
+    /// out-of-range values, which clamp).
+    ///
+    /// The unbounded `+Inf` bucket has no upper edge to interpolate
+    /// toward, so ranks landing there *clamp to the bucket's lower edge*
+    /// (the last finite bound, 60s for [`LATENCY_BOUNDS`]) — never
+    /// extrapolate past the histogram's resolution.  A reported p99 of
+    /// exactly the top bound therefore reads as "at least this much".
     pub fn percentile(&self, q: f64) -> f64 {
         let counts = self.bucket_counts();
         let total: u64 = counts.iter().sum();
@@ -92,6 +97,7 @@ impl Hist {
                 let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
                 let hi = match self.bounds.get(i) {
                     Some(b) => *b,
+                    // +Inf bucket: clamp, don't extrapolate.
                     None => return *self.bounds.last().expect("bounds nonempty"),
                 };
                 let frac = (rank - cum) as f64 / c as f64;
@@ -185,6 +191,35 @@ mod tests {
         assert_eq!(h.percentile(50.0), 0.0);
         assert_eq!(h.count(), 0);
         assert_eq!(h.sum_secs(), 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero_at_every_quantile() {
+        // Regression: no quantile — in range or clamped — may divide by
+        // the zero total or index past the bucket array on empty data.
+        let h = Hist::latency();
+        for q in [-10.0, 0.0, 0.1, 50.0, 99.999, 100.0, 250.0] {
+            assert_eq!(h.percentile(q), 0.0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn overflow_bucket_clamps_to_lower_edge() {
+        // Regression: samples in the unbounded top bucket (>60s for the
+        // latency ladder) must report the bucket's lower edge, never an
+        // extrapolated value past the last bound.
+        let h = Hist::latency();
+        h.observe(120.0);
+        h.observe(4000.0);
+        let top = *LATENCY_BOUNDS.last().unwrap();
+        for q in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(q), top, "q={q}");
+        }
+        // Mixed: ranks below the overflow bucket still interpolate,
+        // ranks inside it still clamp.
+        h.observe(0.001);
+        assert!(h.percentile(1.0) <= 0.001 + 1e-9);
+        assert_eq!(h.percentile(99.0), top);
     }
 
     #[test]

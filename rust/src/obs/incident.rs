@@ -1,0 +1,491 @@
+//! Incident dumps: when something dies, write what the process knew.
+//!
+//! An incident is a single JSON file (`incident.json`) assembled from
+//! state the other `obs` tiers already keep in memory: the flight
+//! recorder's time-series window, the first sentinel fault with full
+//! attribution, recent spans and ring drop counters, the kernel phase
+//! table, build configuration (SIMD backend, quant mode, mechanism),
+//! and the in-flight request registry.  Three paths trigger one:
+//! a panic (via [`install_panic_hook`]), the first sentinel fault
+//! ([`sentinel_trip`]), and the SIGTERM drain (the serve shutdown path
+//! calls [`dump`] when an incident path is configured).  The shard
+//! supervisor also dumps when it declares a runner dead, splicing any
+//! per-runner incident files (passed to children as `--incident
+//! <base>.runner<id>`) into the gateway's dump.
+//!
+//! First write wins: a runner-death incident is not overwritten by the
+//! SIGTERM that follows it.  Unconfigured (no `--incident` flag, no
+//! `PSF_INCIDENT`), every entry point is a no-op.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::json_escape;
+
+static PATH: Mutex<Option<PathBuf>> = Mutex::new(None);
+static WRITTEN: AtomicBool = AtomicBool::new(false);
+static MECH: Mutex<Option<String>> = Mutex::new(None);
+static RUNNER_FILES: Mutex<Vec<PathBuf>> = Mutex::new(Vec::new());
+static INFLIGHT: Mutex<Vec<Inflight>> = Mutex::new(Vec::new());
+
+/// Summary of one admitted-but-unfinished request, carried into dumps.
+#[derive(Clone, Debug)]
+struct Inflight {
+    id: u64,
+    prompt_tokens: usize,
+    max_new: usize,
+    ts_us: u64,
+}
+
+/// Survive lock poisoning: dumps run inside panic hooks, where refusing
+/// to report because some unrelated thread died defeats the point.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Set the incident file path.  Nothing is written until a trigger
+/// fires.
+pub fn configure(path: &Path) {
+    *lock(&PATH) = Some(path.to_path_buf());
+}
+
+pub fn configured() -> bool {
+    lock(&PATH).is_some()
+}
+
+pub fn path() -> Option<PathBuf> {
+    lock(&PATH).clone()
+}
+
+/// Record the mechanism label dumps will carry (ungated — one call at
+/// model build).
+pub fn set_mechanism(label: &str) {
+    *lock(&MECH) = Some(label.to_string());
+}
+
+/// Tell the gateway-side dump where runner children write their own
+/// incident files, so a gateway incident embeds them.
+pub fn set_runner_files(files: Vec<PathBuf>) {
+    *lock(&RUNNER_FILES) = files;
+}
+
+/// Register an admitted request.  `id` is the request trace id.
+pub fn track(id: u64, prompt_tokens: usize, max_new: usize) {
+    lock(&INFLIGHT).push(Inflight { id, prompt_tokens, max_new, ts_us: super::span::now_us() });
+}
+
+/// Remove a finished (or failed) request from the registry.
+pub fn untrack(id: u64) {
+    lock(&INFLIGHT).retain(|r| r.id != id);
+}
+
+/// Requests currently admitted and unfinished — doubles as the queue
+/// depth gauge for the flight recorder.
+pub fn inflight_count() -> usize {
+    lock(&INFLIGHT).len()
+}
+
+/// Install a panic hook that writes an incident before the default hook
+/// prints the backtrace.  Safe to call more than once per process;
+/// no-ops at panic time unless a path is configured.
+pub fn install_panic_hook() {
+    static INSTALLED: AtomicBool = AtomicBool::new(false);
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let prior = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let msg = match info.payload().downcast_ref::<&str>() {
+            Some(s) => (*s).to_string(),
+            None => info
+                .payload()
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_else(|| "non-string panic payload".into()),
+        };
+        let at = info.location().map(|l| format!(" at {}:{}", l.file(), l.line()));
+        let _ = dump(&format!("panic: {msg}{}", at.unwrap_or_default()));
+        prior(info);
+    }));
+}
+
+/// Called by the sentinel layer on the *first* recorded fault.
+pub(crate) fn sentinel_trip() {
+    let reason = match super::sentinel::fault() {
+        Some(f) => format!("sentinel trip: {} at {}", f.kind.name(), f.site.name()),
+        None => "sentinel trip".to_string(),
+    };
+    let _ = dump(&reason);
+}
+
+/// Write the incident file.  Returns the path on the first successful
+/// write; `None` when unconfigured or an incident was already written.
+pub fn dump(reason: &str) -> Option<PathBuf> {
+    let path = path()?;
+    if WRITTEN.swap(true, Ordering::SeqCst) {
+        return None;
+    }
+    // Capture one final flight-recorder frame so the dump's window ends
+    // at the incident, not at the last timer tick.
+    super::recorder::sample_once();
+    let body = render_json(reason);
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(&path, body) {
+        Ok(()) => {
+            eprintln!("psf incident: {} -> {}", reason, path.display());
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("psf incident: failed to write {}: {e}", path.display());
+            None
+        }
+    }
+}
+
+fn render_json(reason: &str) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(16 * 1024);
+    let _ = write!(
+        out,
+        "{{\"kind\":\"incident\",\"reason\":{},\"ts_us\":{},\"pid\":{},\
+         \"uptime_seconds\":{:.3}",
+        json_escape(reason),
+        super::span::now_us(),
+        std::process::id(),
+        super::uptime_secs(),
+    );
+    // Build configuration: what was *resolved*, plus the raw env knobs.
+    let _ = write!(
+        out,
+        ",\"build\":{{\"version\":{},\"mech\":{},\"simd\":{},\"quant\":{},\
+         \"env_simd\":{},\"env_quant\":{},\"env_threads\":{}}}",
+        json_escape(env!("CARGO_PKG_VERSION")),
+        match lock(&MECH).as_deref() {
+            Some(m) => json_escape(m),
+            None => "null".into(),
+        },
+        json_escape(crate::tensor::micro::backend_label()),
+        json_escape(crate::mem::quant::mode().label()),
+        env_or_null("PSF_SIMD"),
+        env_or_null("PSF_QUANT"),
+        env_or_null("PSF_THREADS"),
+    );
+    let _ = write!(
+        out,
+        ",\"sentinel\":{{\"enabled\":{},\"trips\":{},\"fault\":{}}}",
+        super::sentinels_on(),
+        super::sentinel::trip_count(),
+        super::sentinel::fault_json(),
+    );
+    out.push_str(",\"phases\":[");
+    for (i, (name, nanos, calls)) in super::phase::totals().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"name\":{},\"nanos\":{nanos},\"calls\":{calls}}}",
+            json_escape(name)
+        );
+    }
+    out.push(']');
+    let _ = write!(out, ",\"flight\":{}", super::recorder::snapshot_json());
+    out.push_str(",\"span_rings\":[");
+    for (i, (tid, occ, dropped)) in super::span::ring_stats().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{{\"tid\":{tid},\"events\":{occ},\"dropped_total\":{dropped}}}");
+    }
+    out.push_str("],\"spans\":[");
+    for (i, ev) in super::span::recent(RECENT_SPANS).iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"name\":{},\"cat\":{},\"ts_us\":{},\"dur_us\":{},\"tid\":{},\
+             \"trace_id\":{},\"depth\":{}}}",
+            json_escape(&ev.name),
+            json_escape(ev.cat),
+            ev.ts_us,
+            ev.dur_us,
+            ev.tid,
+            ev.trace_id,
+            ev.depth,
+        );
+    }
+    out.push_str("],\"inflight\":[");
+    let now = super::span::now_us();
+    for (i, r) in lock(&INFLIGHT).iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"id\":{},\"prompt_tokens\":{},\"max_new\":{},\"age_us\":{}}}",
+            r.id,
+            r.prompt_tokens,
+            r.max_new,
+            now.saturating_sub(r.ts_us),
+        );
+    }
+    out.push_str("],\"runners\":[");
+    let mut wrote = 0usize;
+    for file in lock(&RUNNER_FILES).iter() {
+        let Ok(text) = std::fs::read_to_string(file) else {
+            continue; // runner never wrote one (e.g. SIGKILL) — expected
+        };
+        // Embed only if it parses: a half-written runner file must not
+        // corrupt the gateway's dump.
+        if super::trace::parse_value(&text).is_err() {
+            continue;
+        }
+        if wrote > 0 {
+            out.push(',');
+        }
+        out.push_str(text.trim());
+        wrote += 1;
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Spans embedded in a dump — enough to see the last moments without
+/// ballooning the file.
+const RECENT_SPANS: usize = 256;
+
+fn env_or_null(key: &str) -> String {
+    match std::env::var(key) {
+        Ok(v) => json_escape(&v),
+        Err(_) => "null".into(),
+    }
+}
+
+// ---------------------------------------------------------------- report
+
+/// Render an incident file as a human-readable report
+/// (`psf incident-report`).
+pub fn report(text: &str) -> Result<String, String> {
+    use std::fmt::Write as _;
+    let root = super::trace::parse_value(text)?;
+    if root.get("kind").and_then(|v| v.as_str()) != Some("incident") {
+        return Err("not an incident file (missing kind=incident)".into());
+    }
+    let mut out = String::new();
+    let reason = root.get("reason").and_then(|v| v.as_str()).unwrap_or("?");
+    let _ = writeln!(out, "incident: {reason}");
+    let _ = writeln!(
+        out,
+        "  pid {}  uptime {:.1}s",
+        root.get("pid").and_then(|v| v.as_u64()).unwrap_or(0),
+        root.get("uptime_seconds").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    );
+    if let Some(build) = root.get("build") {
+        let _ = writeln!(
+            out,
+            "  build: v{}  mech={}  simd={}  quant={}",
+            build.get("version").and_then(|v| v.as_str()).unwrap_or("?"),
+            build.get("mech").and_then(|v| v.as_str()).unwrap_or("-"),
+            build.get("simd").and_then(|v| v.as_str()).unwrap_or("?"),
+            build.get("quant").and_then(|v| v.as_str()).unwrap_or("?"),
+        );
+    }
+    if let Some(sentinel) = root.get("sentinel") {
+        let trips = sentinel.get("trips").and_then(|v| v.as_u64()).unwrap_or(0);
+        match sentinel.get("fault") {
+            Some(f) if f.get("kind").is_some() => {
+                let _ = writeln!(
+                    out,
+                    "  fault: {} at {} (mechanism {}, layer {}, head {}, step {}, token {})",
+                    f.get("kind").and_then(|v| v.as_str()).unwrap_or("?"),
+                    f.get("site").and_then(|v| v.as_str()).unwrap_or("?"),
+                    f.get("mechanism").and_then(|v| v.as_str()).unwrap_or("-"),
+                    f.get("layer").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+                    f.get("head").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+                    f.get("step").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+                    f.get("token").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+                );
+                let _ = writeln!(
+                    out,
+                    "         value={}  absmax={}  detail={:?}  ({} trip(s) total)",
+                    f.get("value").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+                    f.get("absmax").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+                    f.get("detail").and_then(|v| v.as_str()).unwrap_or(""),
+                    trips,
+                );
+            }
+            _ => {
+                let _ = writeln!(out, "  fault: none recorded ({trips} trip(s))");
+            }
+        }
+    }
+    if let Some(phases) = root.get("phases").and_then(|v| v.as_arr()) {
+        if !phases.is_empty() {
+            let _ = writeln!(out, "  phases:");
+            for p in phases {
+                let _ = writeln!(
+                    out,
+                    "    {:<14} {:>10.3} ms  {:>8} calls",
+                    p.get("name").and_then(|v| v.as_str()).unwrap_or("?"),
+                    p.get("nanos").and_then(|v| v.as_f64()).unwrap_or(0.0) / 1e6,
+                    p.get("calls").and_then(|v| v.as_u64()).unwrap_or(0),
+                );
+            }
+        }
+    }
+    if let Some(flight) = root.get("flight") {
+        let frames = flight.get("frames").and_then(|v| v.as_arr()).map(|a| a.len()).unwrap_or(0);
+        let interval = flight.get("interval_ms").and_then(|v| v.as_u64()).unwrap_or(0);
+        let _ = writeln!(
+            out,
+            "  flight recorder: {frames} frame(s) @ {interval}ms (~{:.1}s window)",
+            frames as f64 * interval as f64 / 1e3,
+        );
+        if let Some(last) = flight.get("frames").and_then(|v| v.as_arr()).and_then(|a| a.last()) {
+            if let Some(super::trace::JVal::Obj(kv)) = last.get("gauges") {
+                let _ = writeln!(out, "  last frame:");
+                for (k, v) in kv {
+                    let _ = writeln!(
+                        out,
+                        "    {:<28} {}",
+                        k,
+                        v.as_f64().map(|x| format!("{x}")).unwrap_or_else(|| "null".into()),
+                    );
+                }
+            }
+        }
+        if let Some(notes) = flight.get("notes").and_then(|v| v.as_arr()) {
+            if !notes.is_empty() {
+                let tail = &notes[notes.len().saturating_sub(5)..];
+                let _ = writeln!(out, "  recent notes:");
+                for n in tail {
+                    let _ = writeln!(
+                        out,
+                        "    {} = {}",
+                        n.get("name").and_then(|v| v.as_str()).unwrap_or("?"),
+                        n.get("value").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+                    );
+                }
+            }
+        }
+    }
+    if let Some(inflight) = root.get("inflight").and_then(|v| v.as_arr()) {
+        let _ = writeln!(out, "  in-flight requests: {}", inflight.len());
+        for r in inflight.iter().take(10) {
+            let _ = writeln!(
+                out,
+                "    id={} prompt_tokens={} max_new={} age={:.1}s",
+                r.get("id").and_then(|v| v.as_u64()).unwrap_or(0),
+                r.get("prompt_tokens").and_then(|v| v.as_u64()).unwrap_or(0),
+                r.get("max_new").and_then(|v| v.as_u64()).unwrap_or(0),
+                r.get("age_us").and_then(|v| v.as_f64()).unwrap_or(0.0) / 1e6,
+            );
+        }
+    }
+    if let Some(rings) = root.get("span_rings").and_then(|v| v.as_arr()) {
+        let events: u64 = rings.iter().filter_map(|r| r.get("events")?.as_u64()).sum();
+        let dropped: u64 = rings.iter().filter_map(|r| r.get("dropped_total")?.as_u64()).sum();
+        let spans = root.get("spans").and_then(|v| v.as_arr()).map(|a| a.len()).unwrap_or(0);
+        let _ = writeln!(
+            out,
+            "  spans: {spans} embedded, {events} buffered across {} ring(s), {dropped} dropped",
+            rings.len(),
+        );
+    }
+    if let Some(runners) = root.get("runners").and_then(|v| v.as_arr()) {
+        if !runners.is_empty() {
+            let _ = writeln!(out, "  runner incidents: {}", runners.len());
+            for r in runners {
+                let _ = writeln!(
+                    out,
+                    "    pid {}: {}",
+                    r.get("pid").and_then(|v| v.as_u64()).unwrap_or(0),
+                    r.get("reason").and_then(|v| v.as_str()).unwrap_or("?"),
+                );
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Reset trigger state (tests).
+#[cfg(test)]
+pub(crate) fn reset_for_tests() {
+    *lock(&PATH) = None;
+    WRITTEN.store(false, Ordering::SeqCst);
+    *lock(&MECH) = None;
+    lock(&RUNNER_FILES).clear();
+    lock(&INFLIGHT).clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn unconfigured_dump_is_noop() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset_for_tests();
+        assert!(dump("test").is_none());
+        reset_for_tests();
+    }
+
+    #[test]
+    fn dump_writes_parseable_json_once() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset_for_tests();
+        let dir = std::env::temp_dir().join("psf_incident_test");
+        let path = dir.join("incident.json");
+        let _ = std::fs::remove_file(&path);
+        configure(&path);
+        set_mechanism("psk4_r8_b16");
+        track(7, 12, 32);
+        let wrote = dump("unit test incident").expect("first dump writes");
+        assert_eq!(wrote, path);
+        assert!(dump("second").is_none(), "first write wins");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let root = crate::obs::trace::parse_value(&text).expect("valid json");
+        assert_eq!(root.get("kind").and_then(|v| v.as_str()), Some("incident"));
+        assert_eq!(root.get("reason").and_then(|v| v.as_str()), Some("unit test incident"));
+        assert_eq!(
+            root.get("build").and_then(|b| b.get("mech")).and_then(|v| v.as_str()),
+            Some("psk4_r8_b16")
+        );
+        let inflight = root.get("inflight").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(inflight.len(), 1);
+        assert_eq!(inflight[0].get("prompt_tokens").and_then(|v| v.as_u64()), Some(12));
+        let rendered = report(&text).expect("report renders");
+        assert!(rendered.contains("incident: unit test incident"));
+        assert!(rendered.contains("mech=psk4_r8_b16"));
+        untrack(7);
+        let _ = std::fs::remove_file(&path);
+        reset_for_tests();
+    }
+
+    #[test]
+    fn track_untrack_balance() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset_for_tests();
+        track(1, 4, 8);
+        track(2, 4, 8);
+        assert_eq!(inflight_count(), 2);
+        untrack(1);
+        assert_eq!(inflight_count(), 1);
+        untrack(2);
+        assert_eq!(inflight_count(), 0);
+        reset_for_tests();
+    }
+
+    #[test]
+    fn report_rejects_non_incident_json() {
+        let _g = TEST_LOCK.lock().unwrap();
+        assert!(report("{\"kind\":\"other\"}").is_err());
+        assert!(report("not json").is_err());
+    }
+}

@@ -23,9 +23,18 @@
 //! or not, timing is write-only telemetry: no computed value ever feeds
 //! back into the math, so token streams, gradients, and golden fixtures
 //! are byte-identical with tracing on or off.
+//!
+//! A second tier rides on the same contract: numeric-health
+//! [`sentinel`]s (sampled absmax / non-finite scans at kernel and train
+//! boundaries), the [`recorder`] flight ring (a bounded time-series of
+//! registered gauges), and [`incident`] dumps (panic / sentinel-trip /
+//! SIGTERM paths writing `incident.json` from state already in memory).
 
 pub mod hist;
+pub mod incident;
 pub mod phase;
+pub mod recorder;
+pub mod sentinel;
 pub mod span;
 pub mod trace;
 
@@ -39,6 +48,7 @@ pub use span::{current_trace_id, set_trace_id, span, Span};
 
 const TRACE_BIT: u8 = 1;
 const PHASE_BIT: u8 = 2;
+const SENTINEL_BIT: u8 = 4;
 
 /// Enable bits; the off-path cost of every hook is this one load.
 static FLAGS: AtomicU8 = AtomicU8::new(0);
@@ -56,6 +66,11 @@ pub fn phases_on() -> bool {
     FLAGS.load(Ordering::Relaxed) & PHASE_BIT != 0
 }
 
+#[inline]
+pub fn sentinels_on() -> bool {
+    FLAGS.load(Ordering::Relaxed) & SENTINEL_BIT != 0
+}
+
 /// Turn span tracing on, exporting to `path` on [`flush`].  Also enables
 /// phase accounting so the exported trace carries the kernel breakdown.
 pub fn init_tracing(path: &Path) {
@@ -63,9 +78,23 @@ pub fn init_tracing(path: &Path) {
     FLAGS.fetch_or(TRACE_BIT | PHASE_BIT, Ordering::Relaxed);
 }
 
-/// Honor `PSF_TRACE=<path>` (the env-var twin of `--trace`).  Returns
-/// the path when tracing got enabled.
+/// Honor `PSF_TRACE=<path>` (the env-var twin of `--trace`).  Also
+/// honors the second-tier knobs: `PSF_SENTINEL=1` enables the numeric
+/// sentinels and `PSF_INCIDENT=<path>` arms incident dumps (env-var
+/// twin of `--incident`).  Returns the trace path when tracing got
+/// enabled.
 pub fn init_from_env() -> Option<PathBuf> {
+    uptime_anchor(); // pin uptime to first obs touch
+    if std::env::var_os("PSF_SENTINEL").filter(|v| !v.is_empty() && v != "0").is_some() {
+        set_sentinels(true);
+    }
+    if let Some(p) = std::env::var_os("PSF_INCIDENT").filter(|v| !v.is_empty()) {
+        incident::configure(Path::new(&p));
+        incident::install_panic_hook();
+        // Arm the flight recorder too: an incident dump's time-series
+        // window is whatever the ring holds when the dump fires.
+        recorder::start(recorder::DEFAULT_INTERVAL_MS, recorder::DEFAULT_WINDOW_FRAMES);
+    }
     let path = std::env::var_os("PSF_TRACE").filter(|v| !v.is_empty())?;
     let path = PathBuf::from(path);
     init_tracing(&path);
@@ -90,6 +119,30 @@ pub fn set_phases(on: bool) {
     } else {
         FLAGS.fetch_and(!PHASE_BIT, Ordering::Relaxed);
     }
+}
+
+/// Toggle the numeric-health sentinels (env twin: `PSF_SENTINEL=1`).
+/// Off, every scan hook is one relaxed load; on, scans stay write-only
+/// — outputs are byte-identical either way.
+pub fn set_sentinels(on: bool) {
+    if on {
+        FLAGS.fetch_or(SENTINEL_BIT, Ordering::Relaxed);
+    } else {
+        FLAGS.fetch_and(!SENTINEL_BIT, Ordering::Relaxed);
+    }
+}
+
+/// Monotonic process-uptime anchor, pinned on first use.
+fn uptime_anchor() -> std::time::Instant {
+    use std::sync::OnceLock;
+    static ANCHOR: OnceLock<std::time::Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(std::time::Instant::now)
+}
+
+/// Seconds since the process first touched the obs layer — `/healthz`
+/// uptime and the flight recorder's built-in gauge.
+pub fn uptime_secs() -> f64 {
+    uptime_anchor().elapsed().as_secs_f64()
 }
 
 /// Mint a request trace id: process id in the high 32 bits, a request

@@ -1,0 +1,317 @@
+//! Flight recorder: a bounded time-series ring of system gauges.
+//!
+//! Subsystems register named gauge closures ([`register`]); a sampler
+//! thread reads every gauge at a fixed interval into a frame, and a
+//! bounded ring keeps the most recent frames — so the last N seconds of
+//! system state (arena bytes, cache hit rate, queue depth, phase nanos,
+//! loss/grad norms) are always in memory when an incident dump fires.
+//! Event-shaped values that don't fit the sampled-gauge model (per-step
+//! loss, grad norm) go through [`note`] into a parallel bounded ring.
+//!
+//! Like the rest of `obs`, the recorder is write-only telemetry: gauge
+//! closures read shared counters, nothing reads the ring back into
+//! computation, and when never started the whole module is inert.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use std::collections::VecDeque;
+
+/// Default sampling cadence.
+pub const DEFAULT_INTERVAL_MS: u64 = 250;
+/// Frames kept: 240 x 250ms = the last minute of system state.
+pub const DEFAULT_WINDOW_FRAMES: usize = 240;
+/// Manual notes kept ([`note`] ring).
+const NOTE_CAP: usize = 1024;
+
+/// One sampled frame: timestamp + every registered gauge's value.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub ts_us: u64,
+    pub values: Vec<(String, f64)>,
+}
+
+/// One manual observation pushed by [`note`].
+#[derive(Clone, Debug)]
+pub struct Note {
+    pub ts_us: u64,
+    pub name: String,
+    pub value: f64,
+}
+
+type Gauge = Box<dyn Fn() -> f64 + Send + Sync>;
+
+struct Inner {
+    gauges: Mutex<Vec<(String, Gauge)>>,
+    frames: Mutex<VecDeque<Frame>>,
+    notes: Mutex<VecDeque<Note>>,
+    running: AtomicBool,
+    interval_ms: AtomicU64,
+    window: AtomicU64,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+fn inner() -> &'static Inner {
+    static INNER: OnceLock<Inner> = OnceLock::new();
+    INNER.get_or_init(|| Inner {
+        gauges: Mutex::new(Vec::new()),
+        frames: Mutex::new(VecDeque::new()),
+        notes: Mutex::new(VecDeque::new()),
+        running: AtomicBool::new(false),
+        interval_ms: AtomicU64::new(DEFAULT_INTERVAL_MS),
+        window: AtomicU64::new(DEFAULT_WINDOW_FRAMES as u64),
+        handle: Mutex::new(None),
+    })
+}
+
+/// Register a named gauge. Idempotent by name: re-registering replaces
+/// the closure (respawned components re-register safely).
+pub fn register(name: &str, gauge: impl Fn() -> f64 + Send + Sync + 'static) {
+    let mut gauges = inner().gauges.lock().expect("recorder gauges");
+    if let Some(slot) = gauges.iter_mut().find(|(n, _)| n == name) {
+        slot.1 = Box::new(gauge);
+    } else {
+        gauges.push((name.to_string(), Box::new(gauge)));
+    }
+}
+
+/// Push one manual observation (per-step loss, grad norm, update ratio).
+/// No-op unless the recorder has been started.
+pub fn note(name: &str, value: f64) {
+    let inn = inner();
+    if !inn.running.load(Ordering::Relaxed) {
+        return;
+    }
+    let mut notes = inn.notes.lock().expect("recorder notes");
+    if notes.len() >= NOTE_CAP {
+        notes.pop_front();
+    }
+    notes.push_back(Note { ts_us: super::span::now_us(), name: name.to_string(), value });
+}
+
+/// Take one sample now: registered gauges plus built-ins (uptime, phase
+/// totals, span-ring drops, sentinel watermarks).  Called by the sampler
+/// thread; public so tests and single-shot paths can tick manually.
+pub fn sample_once() {
+    let inn = inner();
+    let mut values: Vec<(String, f64)> = Vec::new();
+    values.push(("uptime_seconds".into(), super::uptime_secs()));
+    {
+        let gauges = inn.gauges.lock().expect("recorder gauges");
+        for (name, g) in gauges.iter() {
+            values.push((name.clone(), g()));
+        }
+    }
+    for (name, nanos, calls) in super::phase::totals() {
+        values.push((format!("phase_{name}_nanos"), nanos as f64));
+        values.push((format!("phase_{name}_calls"), calls as f64));
+    }
+    let mut occupancy = 0u64;
+    let mut dropped = 0u64;
+    for (_tid, occ, drops) in super::span::ring_stats() {
+        occupancy += occ as u64;
+        dropped += drops;
+    }
+    values.push(("span_ring_events".into(), occupancy as f64));
+    values.push(("span_ring_dropped_total".into(), dropped as f64));
+    for (site, absmax) in super::sentinel::watermarks() {
+        values.push((format!("sentinel_absmax_{site}"), absmax));
+    }
+    let frame = Frame { ts_us: super::span::now_us(), values };
+    let window = inn.window.load(Ordering::Relaxed) as usize;
+    let mut frames = inn.frames.lock().expect("recorder frames");
+    while frames.len() >= window.max(1) {
+        frames.pop_front();
+    }
+    frames.push_back(frame);
+}
+
+/// Start the sampler thread.  Idempotent; `interval_ms == 0` uses the
+/// default cadence.
+pub fn start(interval_ms: u64, window_frames: usize) {
+    let inn = inner();
+    let ms = if interval_ms == 0 { DEFAULT_INTERVAL_MS } else { interval_ms };
+    inn.interval_ms.store(ms, Ordering::Relaxed);
+    inn.window.store(window_frames.max(1) as u64, Ordering::Relaxed);
+    if inn.running.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let handle = std::thread::Builder::new()
+        .name("psf-recorder".into())
+        .spawn(move || {
+            let inn = inner();
+            while inn.running.load(Ordering::Relaxed) {
+                sample_once();
+                std::thread::sleep(Duration::from_millis(inn.interval_ms.load(Ordering::Relaxed)));
+            }
+        })
+        .expect("spawn psf-recorder");
+    *inn.handle.lock().expect("recorder handle") = Some(handle);
+}
+
+/// Stop the sampler thread and join it.  The ring is kept: incident
+/// dumps after shutdown still see the final window.
+pub fn stop() {
+    let inn = inner();
+    if !inn.running.swap(false, Ordering::SeqCst) {
+        return;
+    }
+    if let Some(h) = inn.handle.lock().expect("recorder handle").take() {
+        let _ = h.join();
+    }
+}
+
+/// Is the sampler thread live?
+pub fn running() -> bool {
+    inner().running.load(Ordering::Relaxed)
+}
+
+/// Copy of the current frame window (oldest first).
+pub fn frames() -> Vec<Frame> {
+    inner().frames.lock().expect("recorder frames").iter().cloned().collect()
+}
+
+/// Copy of the current note ring (oldest first).
+pub fn notes() -> Vec<Note> {
+    inner().notes.lock().expect("recorder notes").iter().cloned().collect()
+}
+
+/// The whole window as one JSON object — embedded in incident dumps.
+pub fn snapshot_json() -> String {
+    use std::fmt::Write as _;
+    let inn = inner();
+    let mut out = String::with_capacity(4096);
+    let _ = write!(
+        out,
+        "{{\"interval_ms\":{},\"frames\":[",
+        inn.interval_ms.load(Ordering::Relaxed)
+    );
+    for (i, f) in frames().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{{\"ts_us\":{},\"gauges\":{{", f.ts_us);
+        for (j, (name, v)) in f.values.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{}:", crate::metrics::json_escape(name));
+            if v.is_finite() {
+                let _ = write!(out, "{v}");
+            } else {
+                out.push_str("null");
+            }
+        }
+        out.push_str("}}");
+    }
+    out.push_str("],\"notes\":[");
+    for (i, n) in notes().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"ts_us\":{},\"name\":{},\"value\":",
+            n.ts_us,
+            crate::metrics::json_escape(&n.name)
+        );
+        if n.value.is_finite() {
+            let _ = write!(out, "{}", n.value);
+        } else {
+            out.push_str("null");
+        }
+        out.push('}');
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Clear frames and notes (tests).
+pub fn reset() {
+    let inn = inner();
+    inn.frames.lock().expect("recorder frames").clear();
+    inn.notes.lock().expect("recorder notes").clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn manual_samples_capture_registered_gauges() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset();
+        register("test_gauge_a", || 42.0);
+        sample_once();
+        let frames = frames();
+        let last = frames.last().expect("one frame");
+        let v = last.values.iter().find(|(n, _)| n == "test_gauge_a").expect("gauge sampled");
+        assert_eq!(v.1, 42.0);
+        assert!(last.values.iter().any(|(n, _)| n == "uptime_seconds"));
+        reset();
+    }
+
+    #[test]
+    fn window_is_bounded() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset();
+        let window = inner().window.load(Ordering::Relaxed) as usize;
+        for _ in 0..window + 10 {
+            sample_once();
+        }
+        assert_eq!(super::frames().len(), window);
+        reset();
+    }
+
+    #[test]
+    fn reregistering_replaces_not_duplicates() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset();
+        register("test_gauge_b", || 1.0);
+        register("test_gauge_b", || 2.0);
+        sample_once();
+        let frames = frames();
+        let last = frames.last().expect("one frame");
+        let hits: Vec<&(String, f64)> =
+            last.values.iter().filter(|(n, _)| n == "test_gauge_b").collect();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].1, 2.0);
+        reset();
+    }
+
+    #[test]
+    fn notes_require_running_and_stay_bounded() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset();
+        note("loss", 1.0);
+        assert!(notes().is_empty(), "notes are inert before start");
+        inner().running.store(true, Ordering::SeqCst);
+        for i in 0..NOTE_CAP + 5 {
+            note("loss", i as f64);
+        }
+        inner().running.store(false, Ordering::SeqCst);
+        let ns = notes();
+        assert_eq!(ns.len(), NOTE_CAP);
+        assert_eq!(ns.last().unwrap().value, (NOTE_CAP + 4) as f64);
+        reset();
+    }
+
+    #[test]
+    fn snapshot_json_is_well_formed() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset();
+        register("test_gauge_c", || 7.5);
+        sample_once();
+        let json = snapshot_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"interval_ms\""));
+        assert!(json.contains("\"test_gauge_c\":7.5"));
+        assert!(json.contains("\"frames\":["));
+        assert!(json.contains("\"notes\":["));
+        reset();
+    }
+}

@@ -1,0 +1,597 @@
+//! Numeric-health sentinels: cheap, sampled absmax / non-finite scans at
+//! the numerically risky boundaries of the stack.
+//!
+//! High-degree polynomial attention is the riskiest arithmetic we run —
+//! degree-p powers of q·k overflow f32 unless inputs stay normalized
+//! (the paper's Section 3 layernorm is exactly a stability fix), and the
+//! f16/q8 storage tiers add precision cliffs.  A sentinel is a scan over
+//! one tensor at one boundary (feature-map output, Z-fold accumulator,
+//! logits, per-section gradients) that records — never repairs — the
+//! *first* non-finite or overflowing value it sees, attributed to
+//! (mechanism, layer, head, site, step/token).
+//!
+//! **Contract (same as the rest of `obs`).**  Off, every hook is one
+//! relaxed atomic load and a branch.  On, sentinels are *write-only*:
+//! they read tensors, they never write them, and nothing they compute
+//! feeds back into the math — token streams, gradients, and golden
+//! fixtures are byte-identical with sentinels on or off.  The only
+//! sanctioned consequence of a trip is telemetry: the fault record, an
+//! incident dump, and (in the trainer) a graceful halt *between* steps.
+//! Kernel-boundary scans are sampled ([`KERNEL_SAMPLE_STRIDE`]) so the
+//! on-cost stays a small fraction of the math they watch.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// |x| beyond this counts as overflow-in-progress: far above anything a
+/// healthy layernormed degree-p kernel produces, far below f32::MAX so
+/// the fault names the site *before* the first Inf appears downstream.
+pub const OVERFLOW_ABS: f32 = 1e30;
+
+/// Kernel-boundary scans run on every N-th call per site (the first
+/// call always scans).  Grad/loss sites scan every observation.
+pub const KERNEL_SAMPLE_STRIDE: u64 = 16;
+
+/// Loss must exceed `LOSS_SPIKE_FACTOR` x its EMA (after a short warmup)
+/// to count as a spike.
+const LOSS_SPIKE_FACTOR: f64 = 8.0;
+const LOSS_WARMUP: u64 = 8;
+
+/// Where a scan ran.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// Linear engine: feature-map output (mapped q/k rows).
+    FeatureMap,
+    /// Linear engine: the Z prefix accumulator after a block fold.
+    ZFold,
+    /// Quadratic engine: the attention output block.
+    AttnOut,
+    /// Model head: final logits.
+    Logits,
+    /// Trainer: one named gradient section.
+    Grad,
+    /// Trainer: batch loss stream (spike/non-finite detector).
+    Loss,
+    /// Trainer: per-section update ratio |Δw|/|w|.
+    UpdateRatio,
+}
+
+impl Site {
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::FeatureMap => "feature_map",
+            Site::ZFold => "z_fold",
+            Site::AttnOut => "attn_out",
+            Site::Logits => "logits",
+            Site::Grad => "grad",
+            Site::Loss => "loss",
+            Site::UpdateRatio => "update_ratio",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Site::FeatureMap => 0,
+            Site::ZFold => 1,
+            Site::AttnOut => 2,
+            Site::Logits => 3,
+            Site::Grad => 4,
+            Site::Loss => 5,
+            Site::UpdateRatio => 6,
+        }
+    }
+
+    /// Kernel-phase sites are sampled; train-loop sites scan every call.
+    fn sampled(self) -> bool {
+        matches!(self, Site::FeatureMap | Site::ZFold | Site::AttnOut | Site::Logits)
+    }
+}
+
+const SITE_COUNT: usize = 7;
+
+/// What kind of bad number tripped the sentinel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// NaN or Inf — fatal: downstream math is already poisoned.
+    NonFinite,
+    /// |x| > [`OVERFLOW_ABS`] — advisory: overflow in progress.
+    Overflow,
+    /// Loss jumped far above its EMA — advisory: likely divergence.
+    LossSpike,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::NonFinite => "non_finite",
+            FaultKind::Overflow => "overflow",
+            FaultKind::LossSpike => "loss_spike",
+        }
+    }
+
+    /// Fatal faults justify halting a training run between steps;
+    /// advisory ones only report.
+    pub fn is_fatal(self) -> bool {
+        matches!(self, FaultKind::NonFinite)
+    }
+}
+
+/// The first fault the sentinels saw, with full attribution.
+#[derive(Clone, Debug)]
+pub struct Fault {
+    pub kind: FaultKind,
+    pub site: Site,
+    pub mechanism: String,
+    /// -1 when the dimension does not apply at the site.
+    pub layer: i64,
+    pub head: i64,
+    pub step: i64,
+    pub token: i64,
+    /// Flat index of the offending element within the scanned slice.
+    pub index: usize,
+    pub value: f64,
+    pub absmax: f64,
+    /// Free-form attribution (gradient section name, spike context).
+    pub detail: String,
+    pub ts_us: u64,
+}
+
+// ------------------------------------------------------------- context
+//
+// Attribution rides on cheap globals rather than plumbed arguments so
+// the kernel hooks stay one-liner scans.  Layer / step / token advance
+// sequentially on the driving thread while head fan-out happens inside
+// one layer, so: layer/step/token are process globals, head is a
+// thread-local (each pool worker owns one head at a time).
+
+static MECH: Mutex<Option<String>> = Mutex::new(None);
+static LAYER: AtomicI64 = AtomicI64::new(-1);
+static STEP: AtomicI64 = AtomicI64::new(-1);
+static TOKEN: AtomicI64 = AtomicI64::new(-1);
+
+thread_local! {
+    static HEAD: Cell<i64> = const { Cell::new(-1) };
+}
+
+/// Record the mechanism label faults will carry.  Call once per model
+/// build; cheap no-op when sentinels are off.
+pub fn set_mechanism(label: &str) {
+    if !super::sentinels_on() {
+        return;
+    }
+    *MECH.lock().expect("sentinel mech") = Some(label.to_string());
+}
+
+/// Current layer index (forward passes walk layers sequentially).
+#[inline]
+pub fn set_layer(layer: usize) {
+    if super::sentinels_on() {
+        LAYER.store(layer as i64, Ordering::Relaxed);
+    }
+}
+
+/// Current head index — thread-local: pool workers each own one head.
+#[inline]
+pub fn set_head(head: usize) {
+    if super::sentinels_on() {
+        HEAD.with(|h| h.set(head as i64));
+    }
+}
+
+/// Current train step.
+#[inline]
+pub fn set_step(step: u64) {
+    if super::sentinels_on() {
+        STEP.store(step as i64, Ordering::Relaxed);
+    }
+}
+
+/// Current decode token position.
+#[inline]
+pub fn set_token(pos: usize) {
+    if super::sentinels_on() {
+        TOKEN.store(pos as i64, Ordering::Relaxed);
+    }
+}
+
+// --------------------------------------------------------------- state
+
+static FAULT: Mutex<Option<Fault>> = Mutex::new(None);
+static TRIPS: AtomicU64 = AtomicU64::new(0);
+/// 1 once a fatal (non-finite) fault is recorded — the trainer's
+/// between-steps halt check is one relaxed load.
+static FATAL: AtomicU64 = AtomicU64::new(0);
+
+#[allow(clippy::declare_interior_mutable_const)] // const used only as array initializer
+const ZERO: AtomicU64 = AtomicU64::new(0);
+/// Per-site call counters (sampling stride) and absmax watermarks
+/// (f32 bits; absmax is non-negative so bit order == numeric order).
+static CALLS: [AtomicU64; SITE_COUNT] = [ZERO; SITE_COUNT];
+static WATERMARK: [AtomicU64; SITE_COUNT] = [ZERO; SITE_COUNT];
+
+/// Loss-spike EMA state: (ema, observations).
+static LOSS_EMA: Mutex<(f64, u64)> = Mutex::new((0.0, 0));
+
+fn record(kind: FaultKind, site: Site, index: usize, value: f64, absmax: f64, detail: &str) {
+    TRIPS.fetch_add(1, Ordering::Relaxed);
+    if kind.is_fatal() {
+        FATAL.store(1, Ordering::Relaxed);
+    }
+    let mut slot = FAULT.lock().expect("sentinel fault");
+    if slot.is_some() {
+        return; // first fault wins; later ones only count
+    }
+    *slot = Some(Fault {
+        kind,
+        site,
+        mechanism: MECH.lock().expect("sentinel mech").clone().unwrap_or_default(),
+        layer: LAYER.load(Ordering::Relaxed),
+        head: HEAD.with(|h| h.get()),
+        step: STEP.load(Ordering::Relaxed),
+        token: TOKEN.load(Ordering::Relaxed),
+        index,
+        value,
+        absmax,
+        detail: detail.to_string(),
+        ts_us: super::span::now_us(),
+    });
+    drop(slot);
+    eprintln!(
+        "psf sentinel: {} at {} (layer {}, head {}, step {}, token {}){}{}",
+        kind.name(),
+        site.name(),
+        LAYER.load(Ordering::Relaxed),
+        HEAD.with(|h| h.get()),
+        STEP.load(Ordering::Relaxed),
+        TOKEN.load(Ordering::Relaxed),
+        if detail.is_empty() { "" } else { " — " },
+        detail,
+    );
+    super::incident::sentinel_trip();
+}
+
+fn raise_watermark(site: Site, absmax: f32) {
+    let bits = absmax.to_bits() as u64;
+    let w = &WATERMARK[site.index()];
+    let mut cur = w.load(Ordering::Relaxed);
+    while bits > cur {
+        match w.compare_exchange_weak(cur, bits, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+fn scan_slice(site: Site, detail: &str, data: &[f32]) {
+    let mut absmax = 0.0f32;
+    let mut bad: Option<(usize, f32)> = None;
+    for (i, &x) in data.iter().enumerate() {
+        let a = x.abs();
+        if a > absmax {
+            absmax = a;
+        }
+        if bad.is_none() && !x.is_finite() {
+            bad = Some((i, x));
+        }
+    }
+    raise_watermark(site, if absmax.is_finite() { absmax } else { f32::MAX });
+    match bad {
+        Some((i, x)) => record(FaultKind::NonFinite, site, i, x as f64, absmax as f64, detail),
+        None if absmax > OVERFLOW_ABS => {
+            record(FaultKind::Overflow, site, 0, absmax as f64, absmax as f64, detail)
+        }
+        None => {}
+    }
+}
+
+#[inline]
+fn due(site: Site) -> bool {
+    if !site.sampled() {
+        return true;
+    }
+    CALLS[site.index()].fetch_add(1, Ordering::Relaxed) % KERNEL_SAMPLE_STRIDE == 0
+}
+
+/// Scan one tensor slice at a site.  Off: one relaxed load.  On: absmax
+/// + non-finite sweep on the site's sampling cadence.
+#[inline]
+pub fn scan(site: Site, data: &[f32]) {
+    if !super::sentinels_on() {
+        return;
+    }
+    if due(site) {
+        scan_slice(site, "", data);
+    }
+}
+
+/// [`scan`] with a free-form attribution tag (gradient section names).
+#[inline]
+pub fn scan_named(site: Site, detail: &str, data: &[f32]) {
+    if !super::sentinels_on() {
+        return;
+    }
+    if due(site) {
+        scan_slice(site, detail, data);
+    }
+}
+
+/// Scan a row-iterated tensor (strided views) as one logical slice:
+/// sampling is per call, absmax and the fault index span every row.
+#[inline]
+pub fn scan_rows<'a, I>(site: Site, rows: I)
+where
+    I: IntoIterator<Item = &'a [f32]>,
+{
+    if !super::sentinels_on() {
+        return;
+    }
+    if !due(site) {
+        return;
+    }
+    let mut absmax = 0.0f32;
+    let mut bad: Option<(usize, f32)> = None;
+    let mut base = 0usize;
+    for row in rows {
+        for (i, &x) in row.iter().enumerate() {
+            let a = x.abs();
+            if a > absmax {
+                absmax = a;
+            }
+            if bad.is_none() && !x.is_finite() {
+                bad = Some((base + i, x));
+            }
+        }
+        base += row.len();
+    }
+    raise_watermark(site, if absmax.is_finite() { absmax } else { f32::MAX });
+    match bad {
+        Some((i, x)) => record(FaultKind::NonFinite, site, i, x as f64, absmax as f64, ""),
+        None if absmax > OVERFLOW_ABS => {
+            record(FaultKind::Overflow, site, 0, absmax as f64, absmax as f64, "")
+        }
+        None => {}
+    }
+}
+
+/// Feed the loss-spike detector: trips on non-finite loss (fatal) or a
+/// loss far above its EMA after warmup (advisory).
+pub fn observe_loss(step: u64, loss: f64) {
+    if !super::sentinels_on() {
+        return;
+    }
+    set_step(step);
+    if !loss.is_finite() {
+        record(FaultKind::NonFinite, Site::Loss, 0, loss, loss.abs(), "batch loss");
+        return;
+    }
+    let mut ema = LOSS_EMA.lock().expect("sentinel loss ema");
+    let (mean, n) = *ema;
+    if n >= LOSS_WARMUP && mean > 0.0 && loss > mean * LOSS_SPIKE_FACTOR {
+        record(
+            FaultKind::LossSpike,
+            Site::Loss,
+            0,
+            loss,
+            loss,
+            &format!("loss {loss:.4} > {LOSS_SPIKE_FACTOR}x EMA {mean:.4}"),
+        );
+    }
+    *ema = if n == 0 { (loss, 1) } else { (0.9 * mean + 0.1 * loss, n + 1) };
+}
+
+/// Feed one section's update ratio |Δw|/|w|.  Non-finite trips (fatal);
+/// finite values only raise the watermark for the flight recorder.
+pub fn observe_update_ratio(step: u64, section: &str, ratio: f64) {
+    if !super::sentinels_on() {
+        return;
+    }
+    set_step(step);
+    if !ratio.is_finite() {
+        record(FaultKind::NonFinite, Site::UpdateRatio, 0, ratio, ratio.abs(), section);
+        return;
+    }
+    raise_watermark(Site::UpdateRatio, ratio as f32);
+}
+
+// ------------------------------------------------------------ readouts
+
+/// Has any fault been recorded?
+pub fn tripped() -> bool {
+    TRIPS.load(Ordering::Relaxed) > 0
+}
+
+/// Has a *fatal* (non-finite) fault been recorded?  One relaxed load —
+/// the trainer polls this between steps.
+#[inline]
+pub fn tripped_fatal() -> bool {
+    FATAL.load(Ordering::Relaxed) != 0
+}
+
+/// Total faults seen (first is kept, the rest only counted).
+pub fn trip_count() -> u64 {
+    TRIPS.load(Ordering::Relaxed)
+}
+
+/// Snapshot of the first recorded fault.
+pub fn fault() -> Option<Fault> {
+    FAULT.lock().expect("sentinel fault").clone()
+}
+
+/// Per-site absmax watermarks seen so far: `(site name, absmax)`,
+/// nonzero sites only.  Flight-recorder gauge feed.
+pub fn watermarks() -> Vec<(&'static str, f64)> {
+    const SITES: [Site; SITE_COUNT] = [
+        Site::FeatureMap,
+        Site::ZFold,
+        Site::AttnOut,
+        Site::Logits,
+        Site::Grad,
+        Site::Loss,
+        Site::UpdateRatio,
+    ];
+    SITES
+        .iter()
+        .filter_map(|s| {
+            let bits = WATERMARK[s.index()].load(Ordering::Relaxed);
+            (bits != 0).then(|| (s.name(), f32::from_bits(bits as u32) as f64))
+        })
+        .collect()
+}
+
+/// The first fault as a JSON object (`null` when no fault) — embedded
+/// verbatim in incident dumps.
+pub fn fault_json() -> String {
+    match fault() {
+        None => "null".into(),
+        Some(f) => crate::metrics::Record::new()
+            .str("kind", f.kind.name())
+            .str("site", f.site.name())
+            .str("mechanism", &f.mechanism)
+            .i64("layer", f.layer)
+            .i64("head", f.head)
+            .i64("step", f.step)
+            .i64("token", f.token)
+            .i64("index", f.index as i64)
+            .f64("value", f.value)
+            .f64("absmax", f.absmax)
+            .str("detail", &f.detail)
+            .i64("ts_us", f.ts_us as i64)
+            .to_json(),
+    }
+}
+
+/// Clear every sentinel accumulator (tests and bench A/B sweeps).
+pub fn reset() {
+    *FAULT.lock().expect("sentinel fault") = None;
+    TRIPS.store(0, Ordering::Relaxed);
+    FATAL.store(0, Ordering::Relaxed);
+    for c in &CALLS {
+        c.store(0, Ordering::Relaxed);
+    }
+    for w in &WATERMARK {
+        w.store(0, Ordering::Relaxed);
+    }
+    *LOSS_EMA.lock().expect("sentinel loss ema") = (0.0, 0);
+    LAYER.store(-1, Ordering::Relaxed);
+    STEP.store(-1, Ordering::Relaxed);
+    TOKEN.store(-1, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Sentinel state is process-global; these tests serialize on one
+    // lock so enable/reset cycles don't interleave.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn off_scan_is_inert() {
+        let _g = TEST_LOCK.lock().unwrap();
+        if super::super::sentinels_on() {
+            return; // another test enabled sentinels; skip rather than race
+        }
+        reset();
+        scan(Site::Logits, &[f32::NAN, 1.0]);
+        assert!(!tripped(), "disabled sentinel must not record");
+    }
+
+    #[test]
+    fn first_nonfinite_wins_with_attribution() {
+        let _g = TEST_LOCK.lock().unwrap();
+        super::super::set_sentinels(true);
+        reset();
+        set_mechanism("psk4_r8_b16");
+        set_layer(2);
+        set_head(1);
+        set_token(7);
+        scan(Site::Logits, &[0.5, f32::INFINITY, f32::NAN]);
+        scan(Site::Logits, &[f32::NAN]); // later fault: counted, not kept
+        let f = fault().expect("fault recorded");
+        assert_eq!(f.kind, FaultKind::NonFinite);
+        assert_eq!(f.site, Site::Logits);
+        assert_eq!(f.mechanism, "psk4_r8_b16");
+        assert_eq!((f.layer, f.head, f.token), (2, 1, 7));
+        assert_eq!(f.index, 1, "first bad element, not the later NaN");
+        assert!(tripped_fatal());
+        assert!(trip_count() >= 2);
+        assert!(fault_json().contains("\"site\":\"logits\""));
+        super::super::set_sentinels(false);
+        reset();
+    }
+
+    #[test]
+    fn overflow_is_advisory_not_fatal() {
+        let _g = TEST_LOCK.lock().unwrap();
+        super::super::set_sentinels(true);
+        reset();
+        scan(Site::Grad, &[1e31, 2.0]);
+        let f = fault().expect("overflow recorded");
+        assert_eq!(f.kind, FaultKind::Overflow);
+        assert!(!tripped_fatal(), "overflow must not halt training");
+        super::super::set_sentinels(false);
+        reset();
+    }
+
+    #[test]
+    fn kernel_sites_sample_train_sites_do_not() {
+        let _g = TEST_LOCK.lock().unwrap();
+        super::super::set_sentinels(true);
+        reset();
+        // Call 0 scans, calls 1..STRIDE-1 skip: a NaN on call 1 is missed
+        // by design (sampling), but the same NaN at a train site is not.
+        scan(Site::FeatureMap, &[1.0]);
+        scan(Site::FeatureMap, &[f32::NAN]);
+        assert!(!tripped(), "sampled site skipped the off-stride call");
+        scan(Site::Grad, &[f32::NAN]);
+        assert!(tripped(), "train sites scan every call");
+        super::super::set_sentinels(false);
+        reset();
+    }
+
+    #[test]
+    fn loss_spike_detector_needs_warmup_then_fires() {
+        let _g = TEST_LOCK.lock().unwrap();
+        super::super::set_sentinels(true);
+        reset();
+        for s in 0..LOSS_WARMUP {
+            observe_loss(s, 2.0);
+        }
+        assert!(!tripped(), "steady loss is healthy");
+        observe_loss(LOSS_WARMUP, 2.0 * LOSS_SPIKE_FACTOR * 1.5);
+        let f = fault().expect("spike recorded");
+        assert_eq!(f.kind, FaultKind::LossSpike);
+        assert!(!f.kind.is_fatal());
+        super::super::set_sentinels(false);
+        reset();
+    }
+
+    #[test]
+    fn scan_rows_spans_rows_with_flat_index() {
+        let _g = TEST_LOCK.lock().unwrap();
+        super::super::set_sentinels(true);
+        reset();
+        let r0 = [1.0f32, 2.0];
+        let r1 = [3.0f32, f32::NAN];
+        scan_rows(Site::AttnOut, [&r0[..], &r1[..]]);
+        let f = fault().expect("fault recorded");
+        assert_eq!(f.index, 3, "flat index across rows");
+        super::super::set_sentinels(false);
+        reset();
+    }
+
+    #[test]
+    fn watermarks_track_absmax() {
+        let _g = TEST_LOCK.lock().unwrap();
+        super::super::set_sentinels(true);
+        reset();
+        scan(Site::Grad, &[-4.0, 2.0]);
+        scan(Site::Grad, &[3.0]);
+        let w = watermarks();
+        let grad = w.iter().find(|(n, _)| *n == "grad").expect("grad watermark");
+        assert_eq!(grad.1, 4.0);
+        super::super::set_sentinels(false);
+        reset();
+    }
+}

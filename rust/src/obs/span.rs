@@ -46,7 +46,11 @@ pub struct Event {
 struct ThreadBuf {
     tid: u64,
     events: Mutex<VecDeque<Event>>,
+    /// Drops since the last [`drain_all`] (folded into the trace file).
     dropped: AtomicU64,
+    /// Drops since process start — never reset, so the Prometheus
+    /// exposition stays a monotone counter across trace flushes.
+    dropped_total: AtomicU64,
 }
 
 static REGISTRY: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
@@ -138,6 +142,7 @@ fn push_event(mut ev: Event) {
                 tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
                 events: Mutex::new(VecDeque::new()),
                 dropped: AtomicU64::new(0),
+                dropped_total: AtomicU64::new(0),
             });
             REGISTRY.lock().expect("obs span registry").push(Arc::clone(&buf));
             buf
@@ -147,6 +152,7 @@ fn push_event(mut ev: Event) {
         if q.len() >= RING_CAP {
             q.pop_front();
             buf.dropped.fetch_add(1, Ordering::Relaxed);
+            buf.dropped_total.fetch_add(1, Ordering::Relaxed);
         }
         q.push_back(ev);
     });
@@ -165,6 +171,39 @@ pub fn drain_all() -> (Vec<Event>, u64) {
     }
     out.sort_by_key(|e| e.ts_us);
     (out, dropped)
+}
+
+/// Non-destructive per-thread ring stats for scrapes and incident
+/// dumps: `(tid, ring occupancy, drops since process start)`.
+pub fn ring_stats() -> Vec<(u64, usize, u64)> {
+    let registry = REGISTRY.lock().expect("obs span registry");
+    registry
+        .iter()
+        .map(|buf| {
+            (
+                buf.tid,
+                buf.events.lock().expect("obs span ring").len(),
+                buf.dropped_total.load(Ordering::Relaxed),
+            )
+        })
+        .collect()
+}
+
+/// Non-destructive copy of the most recent `limit` events across all
+/// threads (by timestamp).  Incident dumps use this so a crash report
+/// carries the spans without consuming the pending trace flush.
+pub fn recent(limit: usize) -> Vec<Event> {
+    let registry = REGISTRY.lock().expect("obs span registry");
+    let mut out = Vec::new();
+    for buf in registry.iter() {
+        out.extend(buf.events.lock().expect("obs span ring").iter().cloned());
+    }
+    drop(registry);
+    out.sort_by_key(|e| e.ts_us);
+    if out.len() > limit {
+        out.drain(..out.len() - limit);
+    }
+    out
 }
 
 #[cfg(test)]

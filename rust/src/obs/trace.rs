@@ -252,8 +252,10 @@ pub fn merge_files(main: &Path, extras: &[PathBuf]) -> io::Result<usize> {
 
 // ----------------------------------------------------------------- parse
 
+/// Parsed JSON value — shared with `obs::incident` (the incident-report
+/// renderer reuses this parser instead of growing a second one).
 #[derive(Clone, Debug, PartialEq)]
-enum JVal {
+pub(crate) enum JVal {
     Null,
     Bool(bool),
     Num(f64),
@@ -263,26 +265,52 @@ enum JVal {
 }
 
 impl JVal {
-    fn get(&self, key: &str) -> Option<&JVal> {
+    pub(crate) fn get(&self, key: &str) -> Option<&JVal> {
         match self {
             JVal::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
             _ => None,
         }
     }
 
-    fn as_u64(&self) -> Option<u64> {
+    pub(crate) fn as_u64(&self) -> Option<u64> {
         match self {
             JVal::Num(n) if *n >= 0.0 => Some(*n as u64),
             _ => None,
         }
     }
 
-    fn as_str(&self) -> Option<&str> {
+    pub(crate) fn as_f64(&self) -> Option<f64> {
+        match self {
+            JVal::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub(crate) fn as_str(&self) -> Option<&str> {
         match self {
             JVal::Str(s) => Some(s),
             _ => None,
         }
     }
+
+    pub(crate) fn as_arr(&self) -> Option<&[JVal]> {
+        match self {
+            JVal::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Parse any standalone JSON document into a [`JVal`] (rejects trailing
+/// bytes).  Crate-internal: the incident reporter's entry point.
+pub(crate) fn parse_value(text: &str) -> Result<JVal, String> {
+    let mut p = Parser { b: text.as_bytes(), pos: 0 };
+    let root = p.value()?;
+    p.ws();
+    if p.pos != p.b.len() {
+        return Err(format!("trailing bytes after JSON value at {}", p.pos));
+    }
+    Ok(root)
 }
 
 struct Parser<'a> {

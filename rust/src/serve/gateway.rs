@@ -125,6 +125,9 @@ impl Gateway {
             Some(p) => Some(JsonlWriter::create(p)?),
             None => None,
         };
+        // Feed the flight recorder (inert unless started): serve gauges
+        // become time series in the incident window.
+        counters.register_recorder_gauges();
         Ok(Gateway {
             model,
             cfg,
@@ -297,12 +300,14 @@ impl Handler for Gateway {
                     "application/json",
                     &format!(
                         "{{\"ok\":true,\"mech\":{},\"linear\":{},\"simd\":{},\"quant\":{},\
+                         \"uptime_seconds\":{:.1},\
                          \"arena\":{{\"slots_live\":{},\"bytes_live\":{},\
                          \"bytes_committed\":{},\"pages\":{}}}}}",
                         json_escape(&self.model.mech.label()),
                         self.model.mech.is_linear(),
                         json_escape(crate::tensor::micro::backend_label()),
                         json_escape(crate::mem::quant::mode().label()),
+                        crate::obs::uptime_secs(),
                         a.slots_live,
                         a.bytes_live,
                         a.bytes_committed,

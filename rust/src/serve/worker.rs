@@ -290,6 +290,9 @@ fn worker_loop(shared: &Shared) {
 fn admit(shared: &Shared, job: ServeJob) -> Running {
     shared.counters.queue_wait.observe(job.queued.elapsed().as_secs_f64());
     let _span = obs::span("admit", "serve");
+    // In-flight registry for incident dumps: which requests were resident
+    // when a crash dump fired.  Write-only bookkeeping.
+    obs::incident::track(job.id, job.req.prompt.len(), job.req.max_new_tokens);
     let key = CacheKey { mech: shared.model.mech.label(), prompt: job.req.prompt.clone() };
     let t_lookup = Instant::now();
     let cached = shared.cache.get(&key);
@@ -353,6 +356,7 @@ fn step_slice(shared: &Shared, r: &mut Running) {
 
 /// Final accounting + the terminal event.
 fn retire(shared: &Shared, r: Running) {
+    obs::incident::untrack(r.session.id as u64);
     if r.cancelled {
         return;
     }

@@ -137,6 +137,9 @@ impl ShardGateway {
         let counters = Arc::new(ServeCounters::new());
         // The supervisor's heartbeat feeds the IPC round-trip histogram.
         sup.set_counters(Arc::clone(&counters));
+        // Serve gauges become flight-recorder time series (inert unless
+        // the recorder is started).
+        counters.register_recorder_gauges();
         Ok(ShardGateway {
             sup,
             cfg,
@@ -513,11 +516,13 @@ impl Handler for ShardGateway {
                     "application/json",
                     &format!(
                         "{{\"ok\":true,\"mech\":{},\"linear\":{},\"simd\":{},\"quant\":{},\
+                         \"uptime_seconds\":{:.1},\
                          \"runners\":{},\"healthy\":{},\"degraded\":{},\"respawns\":{}}}",
                         json_escape(&self.mech.label()),
                         self.mech.is_linear(),
                         json_escape(crate::tensor::micro::backend_label()),
                         json_escape(crate::mem::quant::mode().label()),
+                        crate::obs::uptime_secs(),
                         total,
                         healthy,
                         healthy < total,

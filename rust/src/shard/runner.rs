@@ -117,6 +117,9 @@ pub fn run_runner(model: NativeLm, cfg: RunnerConfig) -> anyhow::Result<()> {
     let model = Arc::new(model);
     let cache = Arc::new(PromptCache::new(cfg.cache_bytes));
     let counters = Arc::new(ServeCounters::new());
+    // Gauges for this runner's flight recorder (inert unless started via
+    // `--incident`); a crashing runner dumps its own incident file.
+    counters.register_recorder_gauges();
     // TP shards run requests lock-step on dedicated threads; only
     // replicas need the continuous-batching pool.
     let pool = if tp {

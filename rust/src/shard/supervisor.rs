@@ -70,6 +70,10 @@ pub struct SupervisorConfig {
     /// exports its own span trace; the gateway merges those files into
     /// the base trace at shutdown (one Perfetto timeline).
     pub trace_base: Option<PathBuf>,
+    /// When set, each runner gets `--incident <base>.runner<id>` (its own
+    /// incident-dump path), the gateway's own dump embeds those files,
+    /// and a runner death triggers a gateway-side incident dump.
+    pub incident_base: Option<PathBuf>,
 }
 
 impl Default for SupervisorConfig {
@@ -90,6 +94,7 @@ impl Default for SupervisorConfig {
             heads: 0,
             socket_dir: std::env::temp_dir(),
             trace_base: None,
+            incident_base: None,
         }
     }
 }
@@ -231,6 +236,9 @@ impl Supervisor {
         }
         if let Some(base) = &self.cfg.trace_base {
             cmd.arg("--trace").arg(format!("{}.runner{}", base.display(), slot.id));
+        }
+        if let Some(base) = &self.cfg.incident_base {
+            cmd.arg("--incident").arg(format!("{}.runner{}", base.display(), slot.id));
         }
         let mut child = cmd.spawn().context("spawning runner process")?;
 
@@ -382,6 +390,12 @@ impl Supervisor {
             let _ = child.kill();
             let _ = child.wait();
         }
+        // A SIGKILLed runner can't write its own incident file, so the
+        // gateway-side dump is the durable record of the death (it embeds
+        // whatever per-runner files do exist).
+        if crate::obs::incident::configured() {
+            let _ = crate::obs::incident::dump(&format!("runner {} died: {why}", slot.id));
+        }
     }
 
     // ------------------------------------------------------ gateway API
@@ -396,6 +410,17 @@ impl Supervisor {
     /// what the gateway merges into one timeline at shutdown.
     pub fn runner_trace_paths(&self) -> Vec<PathBuf> {
         match &self.cfg.trace_base {
+            Some(base) => (0..self.slots.len())
+                .map(|i| PathBuf::from(format!("{}.runner{i}", base.display())))
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Per-runner incident files this configuration makes runners write —
+    /// the gateway-side incident dump embeds them.
+    pub fn runner_incident_paths(&self) -> Vec<PathBuf> {
+        match &self.cfg.incident_base {
             Some(base) => (0..self.slots.len())
                 .map(|i| PathBuf::from(format!("{}.runner{i}", base.display())))
                 .collect(),

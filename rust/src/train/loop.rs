@@ -284,21 +284,90 @@ impl<'a> Trainer<'a> {
         let mut tokens_seen = 0u64;
         let mut steps_run = 0u64;
         let mut stopped_early = false;
+        // Test-only fault injection: PSF_TEST_POISON_STEP=N corrupts one
+        // gradient value with NaN at step N, so CI can exercise the
+        // sentinel-trip -> incident-dump path end to end.
+        let poison_step: Option<u64> =
+            std::env::var("PSF_TEST_POISON_STEP").ok().and_then(|s| s.parse().ok());
         for step in start..self.cfg.steps {
             let batch = self.source.next_batch(self.cfg.batch.max(1), &mut data_rng);
             // Per-step timing is telemetry only (JSONL + obs phase
             // accumulators); it never feeds the update itself.
             let t_grad = Instant::now();
-            let (grads, stats) = compute_grads(self.model, &batch);
+            let (mut grads, stats) = compute_grads(self.model, &batch);
             let fwd_bwd_secs = t_grad.elapsed().as_secs_f64();
             crate::obs::phase::add(
                 crate::obs::Phase::TrainGrad,
                 (fwd_bwd_secs * 1e9) as u64,
             );
+            if poison_step == Some(step) {
+                if let Some((name, t)) = grads.named_mut().into_iter().next() {
+                    eprintln!(
+                        "psf train: poisoning grad {name} at step {step} (PSF_TEST_POISON_STEP)"
+                    );
+                    t.data_mut()[0] = f32::NAN;
+                }
+            }
+            // Numeric-health sentinels: per-section grad scans + the
+            // loss-spike detector.  Write-only — a healthy run's updates
+            // are byte-identical with sentinels on or off; only a fatal
+            // (non-finite) fault halts, *before* the poisoned update is
+            // applied.
+            if crate::obs::sentinels_on() {
+                crate::obs::sentinel::set_step(step);
+                for (name, t) in grads.named() {
+                    crate::obs::sentinel::scan_named(
+                        crate::obs::sentinel::Site::Grad,
+                        &name,
+                        t.data(),
+                    );
+                }
+                crate::obs::sentinel::observe_loss(step, stats.loss);
+                if crate::obs::sentinel::tripped_fatal() {
+                    eprintln!(
+                        "psf train: halting before step {step} update after fatal sentinel trip"
+                    );
+                    stopped_early = true;
+                    break;
+                }
+            }
+            // Snapshot weights for the update-ratio sentinel (|Δw|/|w|
+            // per section).  Costs one params copy per step, so it only
+            // runs with sentinels enabled.
+            let snap: Option<Vec<(String, Vec<f32>)>> = if crate::obs::sentinels_on() {
+                Some(
+                    self.model
+                        .params()
+                        .named()
+                        .into_iter()
+                        .map(|(n, t)| (n, t.data().to_vec()))
+                        .collect(),
+                )
+            } else {
+                None
+            };
             let t_opt = Instant::now();
             let info = self.opt.step(self.model.params_mut(), &grads);
             let opt_secs = t_opt.elapsed().as_secs_f64();
             crate::obs::phase::add(crate::obs::Phase::TrainOptim, (opt_secs * 1e9) as u64);
+            if let Some(snap) = snap {
+                for ((name, old), (_, new)) in
+                    snap.iter().zip(self.model.params().named())
+                {
+                    let mut dn = 0.0f64;
+                    let mut wn = 0.0f64;
+                    for (a, b) in old.iter().zip(new.data()) {
+                        let d = (*b - *a) as f64;
+                        dn += d * d;
+                        wn += (*a as f64) * (*a as f64);
+                    }
+                    let ratio = dn.sqrt() / (wn.sqrt() + 1e-12);
+                    crate::obs::sentinel::observe_update_ratio(step, name, ratio);
+                }
+            }
+            // Flight-recorder notes (inert unless the recorder runs).
+            crate::obs::recorder::note("loss", stats.loss);
+            crate::obs::recorder::note("grad_norm", info.grad_norm);
             // Weights moved: rebuild the int8 decode twins (no-op unless
             // PSF_QUANT=q8) so mid-training eval never decodes stale scales.
             self.model.requantize();

@@ -1,0 +1,180 @@
+//! Prometheus text-exposition conformance for `/metrics?format=prometheus`.
+//!
+//! The scrape surface is hand-rolled (no client library in this
+//! environment), so these tests pin the parts of the text format a real
+//! Prometheus server is strict about: cumulative `le` buckets, the
+//! `+Inf` bucket equalling `_count`, a `_sum` per histogram, label-value
+//! escaping, and the `_info`-style build-identity gauge.
+//!
+//! The span-ring test toggles the process-global tracing flag, so the
+//! flag-touching tests serialize on one lock (same idiom as
+//! `tests/obs_trace.rs`).
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use polysketchformer::metrics::{prom_escape_label, ServeCounters};
+use polysketchformer::obs;
+
+static PROM_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    PROM_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Collect `(le, cumulative_count)` pairs for one histogram family, in
+/// exposition order.
+fn buckets(text: &str, family: &str) -> Vec<(String, u64)> {
+    let prefix = format!("{family}_bucket{{le=\"");
+    text.lines()
+        .filter_map(|l| {
+            let rest = l.strip_prefix(&prefix)?;
+            let (le, count) = rest.split_once("\"} ")?;
+            Some((le.to_string(), count.parse().ok()?))
+        })
+        .collect()
+}
+
+fn scalar(text: &str, name: &str) -> Option<f64> {
+    let prefix = format!("{name} ");
+    text.lines().find_map(|l| l.strip_prefix(&prefix)?.trim().parse().ok())
+}
+
+fn populated_counters() -> Arc<ServeCounters> {
+    let c = Arc::new(ServeCounters::new());
+    c.admitted.store(12, Ordering::Relaxed);
+    c.completed.store(9, Ordering::Relaxed);
+    c.cache_hits.store(5, Ordering::Relaxed);
+    c.cache_misses.store(4, Ordering::Relaxed);
+    // Spread samples across bucket bounds, including one past the last
+    // bound so the +Inf bucket is exercised.
+    for i in 0..200 {
+        c.ttft.observe(1e-4 * (i + 1) as f64);
+        c.token_latency.observe(5e-3);
+    }
+    c.ttft.observe(1e9);
+    c.queue_wait.observe(0.002);
+    c.ipc_rtt.observe(0.0004);
+    c.cache_lookup.observe(2e-5);
+    c
+}
+
+#[test]
+fn histogram_buckets_are_cumulative_and_inf_matches_count() {
+    let _g = lock();
+    let c = populated_counters();
+    let text = c.prometheus_text();
+    for family in [
+        "psf_ttft_seconds",
+        "psf_token_latency_seconds",
+        "psf_queue_wait_seconds",
+        "psf_ipc_rtt_seconds",
+        "psf_cache_lookup_seconds",
+    ] {
+        let bs = buckets(&text, family);
+        assert!(bs.len() >= 2, "{family}: no buckets in:\n{text}");
+        for w in bs.windows(2) {
+            assert!(
+                w[1].1 >= w[0].1,
+                "{family}: bucket le=\"{}\" ({}) < le=\"{}\" ({}) — not cumulative",
+                w[1].0,
+                w[1].1,
+                w[0].0,
+                w[0].1,
+            );
+        }
+        let (last_le, last_n) = bs.last().unwrap();
+        assert_eq!(last_le, "+Inf", "{family}: final bucket must be +Inf");
+        let count = scalar(&text, &format!("{family}_count"))
+            .unwrap_or_else(|| panic!("{family}_count missing"));
+        assert_eq!(*last_n, count as u64, "{family}: +Inf bucket != _count");
+        let sum = scalar(&text, &format!("{family}_sum"))
+            .unwrap_or_else(|| panic!("{family}_sum missing"));
+        assert!(sum >= 0.0, "{family}_sum negative: {sum}");
+        assert!(
+            text.contains(&format!("# TYPE {family} histogram")),
+            "{family}: TYPE line missing"
+        );
+    }
+    // The sample past the last bound lands only in +Inf: its cumulative
+    // count must exceed the last finite bound's.
+    let ttft = buckets(&text, "psf_ttft_seconds");
+    let finite_max = ttft[ttft.len() - 2].1;
+    assert_eq!(ttft.last().unwrap().1, finite_max + 1, "overflow sample not in +Inf");
+}
+
+#[test]
+fn counters_and_build_identity_present() {
+    let _g = lock();
+    let c = populated_counters();
+    let text = c.prometheus_text();
+    for needle in [
+        "# TYPE psf_requests_admitted_total counter",
+        "psf_requests_admitted_total 12",
+        "psf_requests_completed_total 9",
+        "psf_cache_hits_total 5",
+        "psf_cache_misses_total 4",
+        "# TYPE psf_build_info gauge",
+        "# TYPE psf_uptime_seconds gauge",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    // psf_build_info: constant 1, identity in the labels.
+    let info = text
+        .lines()
+        .find(|l| l.starts_with("psf_build_info{"))
+        .expect("psf_build_info sample line");
+    assert!(info.ends_with("} 1"), "build info must be the constant 1: {info}");
+    for label in ["version=\"", "simd=\"", "quant=\""] {
+        assert!(info.contains(label), "psf_build_info missing {label}: {info}");
+    }
+    let up = scalar(&text, "psf_uptime_seconds").expect("uptime sample");
+    assert!(up >= 0.0, "uptime negative: {up}");
+}
+
+#[test]
+fn label_values_escape_backslash_quote_newline() {
+    let _g = lock();
+    assert_eq!(prom_escape_label(r"a\b"), r"a\\b");
+    assert_eq!(prom_escape_label("say \"hi\""), "say \\\"hi\\\"");
+    assert_eq!(prom_escape_label("two\nlines"), "two\\nlines");
+    assert_eq!(prom_escape_label("plain-1.2_3"), "plain-1.2_3");
+    // Composed: every escaped label value stays on one exposition line.
+    let v = prom_escape_label("x\\\"\ny");
+    assert!(!v.contains('\n'), "escaped value leaked a raw newline: {v:?}");
+    assert_eq!(v, "x\\\\\\\"\\ny");
+}
+
+#[test]
+fn span_ring_series_appear_once_spans_flow() {
+    let _g = lock();
+    obs::set_tracing(true);
+    {
+        let _s = obs::span("prometheus-test-span", "serve");
+    }
+    obs::set_tracing(false);
+    // This thread's ring is registered now whether or not other tests
+    // ran first; the series must name it by tid.
+    let rings = obs::span::ring_stats();
+    assert!(!rings.is_empty(), "span emission must register a ring");
+    let c = populated_counters();
+    let text = c.prometheus_text();
+    assert!(
+        text.contains("# TYPE psf_span_ring_events gauge"),
+        "ring occupancy gauge missing:\n{text}"
+    );
+    assert!(
+        text.contains("# TYPE psf_span_ring_dropped_total counter"),
+        "ring drop counter missing:\n{text}"
+    );
+    for (tid, occ, dropped) in rings {
+        assert!(
+            text.contains(&format!("psf_span_ring_events{{tid=\"{tid}\"}} {occ}")),
+            "per-thread occupancy sample for tid {tid} missing:\n{text}"
+        );
+        assert!(
+            text.contains(&format!("psf_span_ring_dropped_total{{tid=\"{tid}\"}} {dropped}")),
+            "per-thread drop sample for tid {tid} missing:\n{text}"
+        );
+    }
+}

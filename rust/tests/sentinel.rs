@@ -1,0 +1,199 @@
+//! Numeric-health sentinel integration: the byte-identity contract and
+//! fault attribution on the real model paths.
+//!
+//! The sentinel invariant is that telemetry never feeds computation:
+//! with `PSF_SENTINEL=1` the kernel/train hooks scan activations and
+//! gradients, but every computed value — forward logits, sampled token
+//! streams, per-section gradients — must be **bitwise identical** to a
+//! sentinels-off run, for all six mechanisms.  A healthy run must also
+//! never trip.  The poisoned-model tests then check the other half of
+//! the bargain: a genuine NaN is caught and attributed (site, layer,
+//! step) rather than silently propagated.
+//!
+//! Every test toggles the process-global sentinel flag, so they all
+//! serialize on one lock.
+
+use std::sync::{Mutex, MutexGuard};
+
+use polysketchformer::attn::Mechanism;
+use polysketchformer::infer::{DecodeSession, GenRequest, LmConfig, NativeLm, SamplePolicy};
+use polysketchformer::obs::{self, sentinel};
+use polysketchformer::train::{compute_grads, TrainExample};
+
+static SENTINEL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    SENTINEL_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn mechanisms() -> Vec<Mechanism> {
+    vec![
+        Mechanism::Softmax,
+        Mechanism::Flash { block: 8 },
+        Mechanism::Poly { p: 4 },
+        Mechanism::Polysketch { r: 4, p: 4, block: 8, local: false },
+        Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true },
+        Mechanism::Performer { m: 16, block: 8 },
+    ]
+}
+
+fn lm(mech: Mechanism) -> NativeLm {
+    // 4 heads + a 77-token prompt engages the pooled head fan-out, the
+    // blocked fold (block 8 < 77), and the padded layer tail.
+    let cfg = LmConfig { vocab: 64, d_model: 64, layers: 2, heads: 4, ff_mult: 2, seed: 33 };
+    NativeLm::new(cfg, mech)
+}
+
+fn prompt(n: usize) -> Vec<u32> {
+    std::iter::once(0u32).chain((1..n as u32).map(|i| i.wrapping_mul(23) % 64)).collect()
+}
+
+fn generate(model: &NativeLm, seed: u64) -> Vec<u32> {
+    let req = GenRequest {
+        prompt: prompt(77),
+        max_new_tokens: 12,
+        policy: SamplePolicy::Temperature(0.9),
+        seed,
+    };
+    let mut s = DecodeSession::new(model, 0, req);
+    s.run_to_completion(model);
+    s.generated().to_vec()
+}
+
+/// f32 slices compared at the bit level — `==` on floats would already
+/// fail on a NaN, but the contract is *byte* identity.
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn token_streams_byte_identical_sentinels_on_vs_off() {
+    let _g = lock();
+    for mech in mechanisms() {
+        let label = mech.label();
+        let model = lm(mech);
+        obs::set_sentinels(false);
+        let off = generate(&model, 7);
+        obs::set_sentinels(true);
+        sentinel::reset();
+        let on = generate(&model, 7);
+        let tripped = sentinel::tripped();
+        obs::set_sentinels(false);
+        sentinel::reset();
+        assert_eq!(off, on, "{label}: token stream moved under sentinels");
+        assert!(!tripped, "{label}: healthy generation tripped a sentinel");
+    }
+}
+
+#[test]
+fn forward_logits_byte_identical_sentinels_on_vs_off() {
+    let _g = lock();
+    let tokens = prompt(77);
+    for mech in mechanisms() {
+        let label = mech.label();
+        let model = lm(mech);
+        obs::set_sentinels(false);
+        let off = model.forward(&tokens);
+        obs::set_sentinels(true);
+        sentinel::reset();
+        let on = model.forward(&tokens);
+        obs::set_sentinels(false);
+        sentinel::reset();
+        assert_eq!(bits(off.data()), bits(on.data()), "{label}: logits moved under sentinels");
+    }
+}
+
+#[test]
+fn gradients_byte_identical_sentinels_on_vs_off() {
+    let _g = lock();
+    let ex = || TrainExample {
+        tokens: (0..=32u32).map(|i| (i * 7) % 32).collect(),
+        mask: vec![true; 32],
+    };
+    for mech in mechanisms() {
+        let label = mech.label();
+        let model = lm(mech);
+        obs::set_sentinels(false);
+        let (g_off, s_off) = compute_grads(&model, &[ex(), ex()]);
+        obs::set_sentinels(true);
+        sentinel::reset();
+        let (g_on, s_on) = compute_grads(&model, &[ex(), ex()]);
+        // Mirror the train loop's hook order: per-section scans feed
+        // the watermarks, then the loss detector observes the batch.
+        for (name, t) in g_on.named() {
+            sentinel::scan_named(sentinel::Site::Grad, &name, t.data());
+        }
+        sentinel::observe_loss(0, s_on.loss);
+        let tripped = sentinel::tripped();
+        obs::set_sentinels(false);
+        sentinel::reset();
+        assert_eq!(g_off, g_on, "{label}: gradients moved under sentinels");
+        assert_eq!(
+            s_off.loss.to_bits(),
+            s_on.loss.to_bits(),
+            "{label}: loss moved under sentinels"
+        );
+        assert!(!tripped, "{label}: healthy gradients tripped a sentinel");
+    }
+}
+
+#[test]
+fn healthy_run_populates_watermarks_without_faults() {
+    let _g = lock();
+    obs::set_sentinels(true);
+    sentinel::reset();
+    let model = lm(Mechanism::Polysketch { r: 4, p: 4, block: 8, local: true });
+    let _ = generate(&model, 3);
+    let marks = sentinel::watermarks();
+    let tripped = sentinel::tripped();
+    obs::set_sentinels(false);
+    sentinel::reset();
+    assert!(!tripped, "healthy decode must not trip");
+    // The logits scan runs unsampled sites every stride; a 77-token
+    // prefill + 12 decode steps crosses every stride boundary, so at
+    // least the logits watermark must be live.
+    let logits_mark = marks
+        .iter()
+        .find(|(site, _)| *site == "logits")
+        .map(|(_, v)| *v)
+        .expect("logits watermark present");
+    assert!(logits_mark > 0.0, "logits watermark never rose: {marks:?}");
+}
+
+#[test]
+fn poisoned_gradient_trips_with_grad_site_attribution() {
+    let _g = lock();
+    obs::set_sentinels(true);
+    sentinel::reset();
+    sentinel::set_step(41);
+    let mut grad = vec![0.25f32; 64];
+    grad[17] = f32::NAN;
+    sentinel::scan_named(sentinel::Site::Grad, "layer0.wq", &grad);
+    let fault = sentinel::fault().expect("NaN gradient must trip");
+    let fatal = sentinel::tripped_fatal();
+    obs::set_sentinels(false);
+    sentinel::reset();
+    assert!(fatal, "NaN is a fatal fault");
+    assert_eq!(fault.site, sentinel::Site::Grad);
+    assert_eq!(fault.step, 41);
+    assert_eq!(fault.index, 17);
+    assert_eq!(fault.detail, "layer0.wq");
+}
+
+#[test]
+fn first_fault_wins_and_later_trips_only_count() {
+    let _g = lock();
+    obs::set_sentinels(true);
+    sentinel::reset();
+    sentinel::set_step(5);
+    sentinel::scan_named(sentinel::Site::Grad, "first", &[f32::NAN]);
+    sentinel::set_step(6);
+    sentinel::scan_named(sentinel::Site::Grad, "second", &[f32::INFINITY]);
+    let fault = sentinel::fault().expect("fault kept");
+    let trips = sentinel::trip_count();
+    obs::set_sentinels(false);
+    sentinel::reset();
+    assert_eq!(fault.detail, "first", "attribution must pin the FIRST fault");
+    assert_eq!(fault.step, 5);
+    assert_eq!(trips, 2, "later faults still counted");
+}
